@@ -1,0 +1,120 @@
+//! Reproduces **Fig. 3** of the paper: the heatmap of execution-time
+//! ratios (Renoir baseline / FlowUnits deployment) across 4 bandwidth
+//! limits × 3 added latencies on the §V evaluation cluster
+//! (4×1-core edge zones, 2×4-core site DC, 1×16-core cloud VM).
+//!
+//! Pipeline: O1 filters 67% at the edge, O2 partitions + windows + means
+//! at the site, O3 computes Collatz convergence steps in the cloud.
+//!
+//! The paper processes 10M events per cell on a 16-core Ryzen workstation;
+//! this driver defaults to 200k per cell (36 runs total on one core) —
+//! set `FIG3_EVENTS=10000000` to match the paper exactly.
+//!
+//! ```sh
+//! cargo run --release --example fig3_heatmap
+//! ```
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::config::eval_cluster;
+use flowunits::value::Value;
+use std::time::Duration;
+
+fn build_pipeline(ctx: &mut StreamContext, events: u64) {
+    ctx.stream(Source::synthetic(events, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 3 == 0) // O1: drop 67%
+        .to_layer("site")
+        .key_by(|v| Value::I64(v.as_i64().unwrap() % 16))
+        .window(100, WindowAgg::Mean) // O2
+        .to_layer("cloud")
+        .map(|v| {
+            // O3: Collatz convergence steps
+            let (_k, mean) = v.as_pair().unwrap();
+            let mut n = (mean.as_f64().unwrap().abs() as u64).max(1);
+            let mut steps = 0i64;
+            while n != 1 {
+                n = if n % 2 == 0 { n / 2 } else { 3 * n + 1 };
+                steps += 1;
+            }
+            Value::I64(steps)
+        })
+        .collect_count();
+}
+
+fn run_cell(planner: PlannerKind, bw: Option<u64>, lat: Duration, events: u64) -> f64 {
+    let cluster = eval_cluster(bw, lat);
+    let mut ctx = StreamContext::new(
+        cluster,
+        JobConfig {
+            planner,
+            ..Default::default()
+        },
+    );
+    build_pipeline(&mut ctx, events);
+    let report = ctx.execute().expect("cell run");
+    report.wall_time.as_secs_f64()
+}
+
+fn main() {
+    let events: u64 = std::env::var("FIG3_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let bandwidths: [(Option<u64>, &str); 4] = [
+        (None, "unlimited"),
+        (Some(1_000_000_000), "1Gbit"),
+        (Some(100_000_000), "100Mbit"),
+        (Some(10_000_000), "10Mbit"),
+    ];
+    let latencies = [
+        (Duration::ZERO, "0ms"),
+        (Duration::from_millis(10), "10ms"),
+        (Duration::from_millis(100), "100ms"),
+    ];
+
+    println!("Fig. 3 — execution-time ratio Renoir/FlowUnits ({events} events/cell)\n");
+    println!(
+        "{:<12} {:<8} {:>11} {:>13} {:>7}",
+        "bandwidth", "latency", "renoir(s)", "flowunits(s)", "ratio"
+    );
+    let mut heat: Vec<(String, String, f64)> = Vec::new();
+    for (bw, bwname) in bandwidths {
+        for (lat, latname) in latencies {
+            let r = run_cell(PlannerKind::Renoir, bw, lat, events);
+            let f = run_cell(PlannerKind::FlowUnits, bw, lat, events);
+            let ratio = r / f;
+            println!("{bwname:<12} {latname:<8} {r:>11.3} {f:>13.3} {ratio:>7.2}");
+            heat.push((bwname.to_string(), latname.to_string(), ratio));
+        }
+    }
+
+    // heatmap render (rows = bandwidth, cols = latency), like the figure
+    println!("\nheatmap (ratio > 1 ⇒ FlowUnits faster):\n");
+    print!("{:<12}", "");
+    for (_, l) in latencies.iter() {
+        print!("{l:>9}");
+    }
+    println!();
+    for (bw, _) in bandwidths.iter().rev() {
+        let name = match bw {
+            None => "unlimited",
+            Some(1_000_000_000) => "1Gbit",
+            Some(100_000_000) => "100Mbit",
+            _ => "10Mbit",
+        };
+        print!("{name:<12}");
+        for (_, l) in latencies.iter() {
+            let v = heat
+                .iter()
+                .find(|(b, lt, _)| b == name && lt == *l)
+                .map(|(_, _, r)| *r)
+                .unwrap_or(f64::NAN);
+            print!("{v:>9.2}");
+        }
+        println!();
+    }
+    println!(
+        "\nexpected shape (paper): ≈1 at unlimited/0ms, monotonically \
+         increasing toward 10Mbit/100ms."
+    );
+}

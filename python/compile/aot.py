@@ -1,0 +1,81 @@
+"""AOT lowering: JAX → HLO *text* artifacts for the rust PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+``HloModuleProto``s with 64-bit instruction ids that the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See ``/opt/xla-example/README.md``.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Artifacts produced:
+  * ``anomaly_v1.hlo.txt`` — f32[64,5] → f32[64,1] window anomaly scores
+  * ``anomaly_v2.hlo.txt`` — the 'retrained' variant (dynamic-update demo)
+  * ``double.hlo.txt``     — f32[2,3] → f32[2,3] runtime smoke artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import BATCH, FEATURE_DIM, anomaly_v1, anomaly_v2, double
+
+
+def to_hlo_text(lowered) -> str:
+    """Converts a jax lowering to XLA HLO text with a tuple root.
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big array constants as ``constant({...})``, which the HLO text
+    parser silently turns into **zeros** — the model's baked-in weights
+    would vanish. (Caught by rust/tests/xla_roundtrip.rs numerics checks.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "elided constants survived — artifact would be corrupt"
+    return text
+
+
+def lower_fn(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+ARTIFACTS = {
+    "anomaly_v1": (
+        anomaly_v1,
+        (jax.ShapeDtypeStruct((BATCH, FEATURE_DIM), jnp.float32),),
+    ),
+    "anomaly_v2": (
+        anomaly_v2,
+        (jax.ShapeDtypeStruct((BATCH, FEATURE_DIM), jnp.float32),),
+    ),
+    "double": (double, (jax.ShapeDtypeStruct((2, 3), jnp.float32),)),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", help="build a single artifact by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, (fn, specs) in ARTIFACTS.items():
+        if args.only and name != args.only:
+            continue
+        text = lower_fn(fn, *specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the Pallas kernel — the CORE correctness reference.
+
+Every behaviour of ``window_stats.window_scores`` must match this
+implementation to float tolerance; pytest sweeps shapes and inputs against
+it (``python/tests/test_kernel.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def window_scores_ref(x, params):
+    """Reference scorer: identical math, no Pallas, no tiling."""
+    z = (x - params["mu"]) / params["sigma"]
+    h = jnp.maximum(z @ params["w1"] + params["b1"], 0.0)
+    return h @ params["w2"] + params["b2"]
+
+
+def feature_stats_ref(window):
+    """Reference for the rust-side ``WindowAgg::FeatureStats`` aggregate:
+    ``[mean, std, min, max, last]`` of a 1-D window (population std)."""
+    w = jnp.asarray(window, jnp.float32)
+    return jnp.stack(
+        [w.mean(), w.std(), w.min(), w.max(), w[-1]]
+    )

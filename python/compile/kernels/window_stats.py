@@ -1,0 +1,97 @@
+"""L1 — Pallas kernel: fused window-feature normalisation + MLP anomaly
+scorer.
+
+This is the compute hot-spot of the paper's running example (Fig. 1): the
+cloud-layer ML step that scores windowed sensor features. The rust runtime
+feeds batches of ``[B, D]`` feature rows (``[mean, std, min, max, last]``
+per window, D = 5); the kernel normalises them and applies a two-layer MLP
+in a single fused pass:
+
+    y = relu((x - mu) / sigma @ W1 + b1) @ W2 + b2          # [B, 1]
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the batch dimension is
+tiled into VMEM-resident blocks of ``BLOCK_B`` rows via ``BlockSpec``; the
+(tiny) weight matrices are replicated into VMEM for every grid step; the
+two matmuls target the MXU. ``interpret=True`` everywhere — the CPU PJRT
+plugin cannot execute Mosaic custom-calls, and correctness is validated
+against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM block. At D=5, H<=64 this keeps the working set
+# (x block + both weights + activations) well under 1 MiB of VMEM:
+#   128*5*4 + 5*64*4 + 64*4 + 128*64*4 + 64*1*4 + 128*1*4 ≈ 37 KiB.
+BLOCK_B = 128
+
+
+def _kernel(x_ref, mu_ref, sigma_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One grid step: score a [BLOCK_B, D] tile of feature rows."""
+    x = x_ref[...]
+    # feature normalisation (vectorised on the VPU)
+    z = (x - mu_ref[...]) / sigma_ref[...]
+    # MXU matmul 1 + bias + relu
+    h = jnp.maximum(jnp.dot(z, w1_ref[...]) + b1_ref[...], 0.0)
+    # MXU matmul 2 + bias
+    o_ref[...] = jnp.dot(h, w2_ref[...]) + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def window_scores(x, params, block_b: int = BLOCK_B):
+    """Scores a batch of window-feature rows.
+
+    Args:
+      x: ``f32[B, D]`` feature rows; B must be a multiple of ``block_b``
+        (the AOT wrapper pads).
+      params: dict with ``mu``/``sigma`` (``f32[D]``), ``w1`` (``f32[D,H]``),
+        ``b1`` (``f32[H]``), ``w2`` (``f32[H,1]``), ``b2`` (``f32[1]``).
+      block_b: rows per VMEM block.
+
+    Returns:
+      ``f32[B, 1]`` anomaly scores.
+    """
+    b, d = x.shape
+    h = params["w1"].shape[1]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not a multiple of block_b {block_b}")
+    grid = (b // block_b,)
+    full = lambda *s: pl.BlockSpec(s, lambda i: tuple(0 for _ in s))  # noqa: E731
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),  # x: tiled over batch
+            full(d),  # mu: replicated
+            full(d),  # sigma
+            full(d, h),  # w1
+            full(h),  # b1
+            full(h, 1),  # w2
+            full(1),  # b2
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), x.dtype),
+        interpret=True,  # CPU path; real TPU would lower to Mosaic
+    )(x, params["mu"], params["sigma"], params["w1"], params["b1"], params["w2"], params["b2"])
+
+
+def make_params(hidden: int = 32, seed: int = 7, bias_shift: float = 0.0):
+    """Deterministic model parameters (the 'trained' weights baked into an
+    artifact version). ``bias_shift`` recalibrates the output bias — the v2
+    'retrained' model uses a wider hidden layer and a shifted threshold."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    d = 5
+    return {
+        "mu": jnp.array([50.0, 3.0, 40.0, 60.0, 50.0], jnp.float32),
+        "sigma": jnp.array([20.0, 2.0, 20.0, 20.0, 20.0], jnp.float32),
+        "w1": jax.random.normal(k1, (d, hidden), jnp.float32) / jnp.sqrt(d),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, 1), jnp.float32) / jnp.sqrt(hidden),
+        "b2": jnp.full((1,), bias_shift, jnp.float32),
+    }

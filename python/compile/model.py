@@ -1,0 +1,66 @@
+"""L2 — the JAX model: batched anomaly scoring over window features.
+
+The model wraps the L1 Pallas kernel (``kernels/window_stats.py``) with
+batch padding so the compiled artifact accepts exactly the fixed batch the
+rust runtime feeds it. Two 'trained' versions exist:
+
+* ``anomaly_v1`` — hidden width 32, neutral output bias (initial model);
+* ``anomaly_v2`` — hidden width 64, shifted bias (the 'retrained' model the
+  dynamic-update demo swaps in without stopping other FlowUnits).
+
+Both are lowered once at build time by ``aot.py``; Python never runs on
+the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.window_stats import BLOCK_B, make_params, window_scores
+
+#: feature dimension: [mean, std, min, max, last]
+FEATURE_DIM = 5
+#: compiled inference batch (rows per PJRT call from the rust hot path)
+BATCH = 64
+
+PARAMS_V1 = make_params(hidden=32, seed=7, bias_shift=0.0)
+PARAMS_V2 = make_params(hidden=64, seed=11, bias_shift=-0.25)
+
+
+def _pad_to_block(x):
+    """Pads the batch dimension up to a BLOCK_B multiple for the kernel."""
+    b = x.shape[0]
+    padded = ((b + BLOCK_B - 1) // BLOCK_B) * BLOCK_B
+    if padded != b:
+        x = jnp.pad(x, ((0, padded - b), (0, 0)))
+    return x, b
+
+
+def anomaly_model(params):
+    """Returns the jit-able scoring function for one parameter set."""
+
+    def fwd(x):
+        xp, b = _pad_to_block(x)
+        scores = window_scores(xp, params)
+        return (scores[:b],)  # 1-tuple: the AOT path lowers return_tuple=True
+
+    return fwd
+
+
+anomaly_v1 = anomaly_model(PARAMS_V1)
+anomaly_v2 = anomaly_model(PARAMS_V2)
+
+
+def double(x):
+    """Trivial artifact used by the rust runtime integration tests."""
+    return (x * 2.0,)
+
+
+def example_input(batch: int = BATCH, seed: int = 0):
+    """A plausible feature batch for lowering/testing."""
+    k = jax.random.PRNGKey(seed)
+    base = jax.random.normal(k, (batch, FEATURE_DIM), jnp.float32)
+    return base * jnp.array([20.0, 2.0, 20.0, 20.0, 20.0]) + jnp.array(
+        [50.0, 3.0, 40.0, 60.0, 50.0]
+    )

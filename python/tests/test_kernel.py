@@ -1,0 +1,111 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal of the stack.
+
+The Pallas kernel (interpret mode) must match the pure-jnp oracle across
+batch shapes, hidden widths, and input distributions; hypothesis drives the
+sweep when available, with a deterministic fallback grid otherwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import window_scores_ref
+from compile.kernels.window_stats import BLOCK_B, make_params, window_scores
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def random_batch(rng, b, d=5, scale=100.0):
+    return jnp.asarray(rng.standard_normal((b, d)) * scale, jnp.float32)
+
+
+@pytest.mark.parametrize("blocks", [1, 2, 4])
+@pytest.mark.parametrize("hidden", [8, 32, 64])
+def test_kernel_matches_ref_across_shapes(blocks, hidden):
+    rng = np.random.default_rng(blocks * 100 + hidden)
+    params = make_params(hidden=hidden, seed=3)
+    x = random_batch(rng, blocks * BLOCK_B)
+    got = window_scores(x, params)
+    want = window_scores_ref(x, params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_rejects_non_multiple_batch():
+    params = make_params()
+    with pytest.raises(ValueError, match="not a multiple"):
+        window_scores(jnp.zeros((BLOCK_B + 1, 5), jnp.float32), params)
+
+
+def test_kernel_deterministic():
+    params = make_params()
+    x = random_batch(np.random.default_rng(0), BLOCK_B)
+    a = window_scores(x, params)
+    b = window_scores(x, params)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_extreme_inputs_stay_finite():
+    params = make_params()
+    x = jnp.full((BLOCK_B, 5), 1e6, jnp.float32)
+    got = window_scores(x, params)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_zero_variance_features():
+    params = make_params()
+    x = jnp.broadcast_to(
+        jnp.array([50.0, 3.0, 40.0, 60.0, 50.0], jnp.float32), (BLOCK_B, 5)
+    )
+    got = window_scores(x, params)
+    want = window_scores_ref(x, params)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # perfectly nominal features normalise to zeros → score = b2 path only
+    np.testing.assert_allclose(got, np.full((BLOCK_B, 1), float(params["b2"][0])), atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        blocks=st.integers(min_value=1, max_value=3),
+        hidden=st.sampled_from([4, 16, 32, 64]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        scale=st.floats(min_value=0.01, max_value=1e4),
+    )
+    def test_kernel_matches_ref_hypothesis(blocks, hidden, seed, scale):
+        rng = np.random.default_rng(seed)
+        params = make_params(hidden=hidden, seed=seed % 1000)
+        x = random_batch(rng, blocks * BLOCK_B, scale=scale)
+        got = np.asarray(window_scores(x, params))
+        want = np.asarray(window_scores_ref(x, params))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+else:  # deterministic fallback sweep
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_kernel_matches_ref_sweep(seed):
+        rng = np.random.default_rng(seed)
+        blocks = int(rng.integers(1, 4))
+        hidden = int(rng.choice([4, 16, 32, 64]))
+        scale = float(rng.uniform(0.01, 1e4))
+        params = make_params(hidden=hidden, seed=seed)
+        x = random_batch(rng, blocks * BLOCK_B, scale=scale)
+        got = np.asarray(window_scores(x, params))
+        want = np.asarray(window_scores_ref(x, params))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_feature_stats_ref_matches_rust_convention():
+    # mirrors rust/src/runtime/exec.rs WindowAgg::FeatureStats semantics
+    from compile.kernels.ref import feature_stats_ref
+
+    w = [1.0, 3.0]
+    got = np.asarray(feature_stats_ref(w))
+    np.testing.assert_allclose(got, [2.0, 1.0, 1.0, 3.0, 3.0], atol=1e-7)

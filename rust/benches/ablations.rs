@@ -1,0 +1,177 @@
+//! `cargo bench --bench ablations` — ablation benchmarks for the design
+//! choices called out in DESIGN.md §4:
+//!
+//! * **A1** queue-decoupled vs direct-TCP FlowUnit boundaries (the
+//!   overhead the paper chose not to measure in Fig. 3);
+//! * **A2** cross-zone frame batch size vs throughput;
+//! * **A3** capability-filtered placement of the XLA operator vs letting
+//!   it run on every cloud host (requires `make artifacts`; skipped
+//!   otherwise);
+//! * **A4** intra-host hot-loop throughput (stateless fused chain) — the
+//!   baseline for the §Perf targets.
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::config::{eval_cluster, fig2_cluster};
+use flowunits::value::Value;
+use std::time::Duration;
+
+fn events() -> u64 {
+    std::env::var("ABL_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000)
+}
+
+fn eval_pipeline(ctx: &mut StreamContext, n: u64) {
+    ctx.stream(Source::synthetic(n, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 3 == 0)
+        .to_layer("site")
+        .key_by(|v| Value::I64(v.as_i64().unwrap() % 16))
+        .window(100, WindowAgg::Mean)
+        .to_layer("cloud")
+        .map(|v| v)
+        .collect_count();
+}
+
+fn a1_queue_vs_direct() {
+    println!("\n## A1 — queue-decoupled vs direct FlowUnit boundaries");
+    println!("{:<10} {:>10} {:>14} {:>12}", "transport", "wall(s)", "queue appends", "overhead");
+    let mut direct_wall = 0.0;
+    for decouple in [false, true] {
+        let config = JobConfig {
+            planner: PlannerKind::FlowUnits,
+            decouple_units: decouple,
+            poll_timeout: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let mut ctx = StreamContext::new(eval_cluster(Some(100_000_000), Duration::from_millis(10)), config);
+        eval_pipeline(&mut ctx, events());
+        let report = ctx.execute().expect("a1");
+        let wall = report.wall_time.as_secs_f64();
+        let appends = report
+            .metrics
+            .queue_appends
+            .load(std::sync::atomic::Ordering::Relaxed);
+        if !decouple {
+            direct_wall = wall;
+            println!("{:<10} {:>10.3} {:>14} {:>12}", "direct", wall, appends, "-");
+        } else {
+            println!(
+                "{:<10} {:>10.3} {:>14} {:>11.1}%",
+                "queue",
+                wall,
+                appends,
+                100.0 * (wall - direct_wall) / direct_wall
+            );
+        }
+    }
+}
+
+fn a2_batch_size() {
+    println!("\n## A2 — cross-zone frame batch size (FlowUnits, 100Mbit/10ms)");
+    println!("{:<10} {:>10} {:>12} {:>12}", "batch", "wall(s)", "frames", "bytes");
+    for batch in [64usize, 256, 512, 2048, 8192] {
+        let config = JobConfig {
+            planner: PlannerKind::FlowUnits,
+            batch_size: batch,
+            ..Default::default()
+        };
+        let mut ctx = StreamContext::new(
+            eval_cluster(Some(100_000_000), Duration::from_millis(10)),
+            config,
+        );
+        eval_pipeline(&mut ctx, events());
+        let report = ctx.execute().expect("a2");
+        println!(
+            "{:<10} {:>10.3} {:>12} {:>12}",
+            batch,
+            report.wall_time.as_secs_f64(),
+            report
+                .metrics
+                .net_frames
+                .load(std::sync::atomic::Ordering::Relaxed),
+            report.net_bytes
+        );
+    }
+}
+
+fn a3_capability_placement() {
+    if !std::path::Path::new("artifacts/anomaly_v1.hlo.txt").exists() {
+        println!("\n## A3 — skipped (run `make artifacts`)");
+        return;
+    }
+    println!("\n## A3 — XLA operator placement: capability-filtered vs everywhere");
+    println!("{:<14} {:>10} {:>12}", "placement", "wall(s)", "xla calls");
+    for constrained in [true, false] {
+        let mut ctx = StreamContext::new(fig2_cluster(), JobConfig::default());
+        let s = ctx
+            .stream(Source::synthetic(events() / 2, |m, i| {
+                let t = i as f64 * 0.01;
+                Value::pair(
+                    Value::I64(m as i64),
+                    Value::F64(50.0 + 2.0 * (t * 0.37).sin() + m as f64),
+                )
+            }))
+            .to_layer("edge")
+            .filter(|v| v.as_pair().unwrap().1.as_f64().unwrap().is_finite())
+            .to_layer("site")
+            .key_by(|v| v.as_pair().unwrap().0.clone())
+            .map(|keyed| {
+                let (k, mr) = keyed.into_pair().unwrap();
+                Value::pair(k, mr.into_pair().unwrap().1)
+            })
+            .window(32, WindowAgg::FeatureStats)
+            .to_layer("cloud")
+            .xla_map("anomaly_v1", 64, 5);
+        if constrained {
+            s.add_constraint("xla = yes").collect_count();
+        } else {
+            s.collect_count();
+        }
+        let report = ctx.execute().expect("a3");
+        println!(
+            "{:<14} {:>10.3} {:>12}",
+            if constrained { "xla = yes" } else { "everywhere" },
+            report.wall_time.as_secs_f64(),
+            report
+                .metrics
+                .xla_calls
+                .load(std::sync::atomic::Ordering::Relaxed),
+        );
+    }
+    println!("(note: 'everywhere' also runs the artifact on non-accelerator hosts —");
+    println!(" on real hardware that deployment is infeasible; here it shows the");
+    println!(" planner honouring the paper's red/yellow node distinction)");
+}
+
+fn a4_hot_loop() {
+    println!("\n## A4 — intra-host stateless hot loop (1 source core, transparent links)");
+    println!("{:<12} {:>10} {:>14}", "events", "wall(s)", "throughput");
+    let n = events() * 10;
+    let mut text = String::from("layers = cloud\n");
+    text.push_str("[zone C]\nlayer = cloud\nlocations = L\n[host c]\nzone = C\ncores = 2\n");
+    let cluster = flowunits::config::ClusterSpec::parse(&text).unwrap();
+    let mut ctx = StreamContext::new(cluster, JobConfig::default());
+    ctx.stream(Source::synthetic(n, |_, i| Value::I64(i as i64)))
+        .to_layer("cloud")
+        .map(|v| Value::I64(v.as_i64().unwrap().wrapping_mul(31).wrapping_add(7)))
+        .filter(|v| v.as_i64().unwrap() % 5 != 0)
+        .map(|v| v)
+        .discard();
+    let report = ctx.execute().expect("a4");
+    println!(
+        "{:<12} {:>10.3} {:>14}",
+        n,
+        report.wall_time.as_secs_f64(),
+        flowunits::util::fmt_rate(n, report.wall_time)
+    );
+}
+
+fn main() {
+    println!("# FlowUnits ablation benchmarks ({} events)", events());
+    a1_queue_vs_direct();
+    a2_batch_size();
+    a3_capability_placement();
+    a4_hot_loop();
+}

@@ -1,0 +1,107 @@
+//! `cargo bench --bench fig3_heatmap` — regenerates **Fig. 3** of the
+//! paper: execution-time ratio of the Renoir baseline deployment vs the
+//! FlowUnits locality-aware deployment over {unlimited, 1 Gbit, 100 Mbit,
+//! 10 Mbit} × {0, 10, 100 ms} inter-zone links, on the §V evaluation
+//! cluster (4×1-core edges, 2×4-core site, 1×16-core cloud).
+//!
+//! Events per cell default to 100k (`FIG3_EVENTS` overrides; the paper
+//! used 10M on a 16-core workstation). Each cell runs `FIG3_REPS` times
+//! (default 3) and reports the median.
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::config::eval_cluster;
+use flowunits::value::Value;
+use std::time::Duration;
+
+fn build_pipeline(ctx: &mut StreamContext, events: u64) {
+    ctx.stream(Source::synthetic(events, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 3 == 0) // O1
+        .to_layer("site")
+        .key_by(|v| Value::I64(v.as_i64().unwrap() % 16))
+        .window(100, WindowAgg::Mean) // O2
+        .to_layer("cloud")
+        .map(|v| {
+            let (_k, mean) = v.as_pair().unwrap();
+            let mut n = (mean.as_f64().unwrap().abs() as u64).max(1);
+            let mut steps = 0i64;
+            while n != 1 {
+                n = if n % 2 == 0 { n / 2 } else { 3 * n + 1 };
+                steps += 1;
+            }
+            Value::I64(steps) // O3: Collatz convergence steps
+        })
+        .collect_count();
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn run_cell(planner: PlannerKind, bw: Option<u64>, lat: Duration, events: u64, reps: usize) -> f64 {
+    let times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let mut ctx = StreamContext::new(
+                eval_cluster(bw, lat),
+                JobConfig {
+                    planner,
+                    ..Default::default()
+                },
+            );
+            build_pipeline(&mut ctx, events);
+            ctx.execute().expect("bench cell").wall_time.as_secs_f64()
+        })
+        .collect();
+    median(times)
+}
+
+fn main() {
+    let events: u64 = std::env::var("FIG3_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let reps: usize = std::env::var("FIG3_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let bandwidths: [(Option<u64>, &str); 4] = [
+        (None, "unlimited"),
+        (Some(1_000_000_000), "1Gbit"),
+        (Some(100_000_000), "100Mbit"),
+        (Some(10_000_000), "10Mbit"),
+    ];
+    let latencies = [
+        (Duration::ZERO, "0ms"),
+        (Duration::from_millis(10), "10ms"),
+        (Duration::from_millis(100), "100ms"),
+    ];
+    println!("# Fig. 3 heatmap — Renoir/FlowUnits wall-time ratio");
+    println!("# {events} events/cell, median of {reps} reps\n");
+    println!(
+        "{:<12} {:<8} {:>11} {:>13} {:>7}",
+        "bandwidth", "latency", "renoir(s)", "flowunits(s)", "ratio"
+    );
+    let mut last_unlimited = 1.0;
+    let mut monotone_ok = true;
+    for (bw, bwname) in bandwidths {
+        for (lat, latname) in latencies {
+            let r = run_cell(PlannerKind::Renoir, bw, lat, events, reps);
+            let f = run_cell(PlannerKind::FlowUnits, bw, lat, events, reps);
+            let ratio = r / f;
+            println!("{bwname:<12} {latname:<8} {r:>11.3} {f:>13.3} {ratio:>7.2}");
+            if bw.is_none() && lat.is_zero() {
+                last_unlimited = ratio;
+            }
+            if bw == Some(10_000_000) && lat == Duration::from_millis(100) && ratio < last_unlimited
+            {
+                monotone_ok = false;
+            }
+        }
+    }
+    println!(
+        "\nshape check: worst-network ratio {} the unlimited ratio (paper: grows \
+         as links degrade)",
+        if monotone_ok { "exceeds" } else { "DOES NOT exceed" }
+    );
+}

@@ -1,0 +1,509 @@
+//! The user-facing stream API — Renoir-style fluent builder extended with
+//! the paper's two annotations: [`Stream::to_layer`] and
+//! [`Stream::add_constraint`] (§IV).
+//!
+//! ```no_run
+//! use flowunits::prelude::*;
+//! use std::sync::Arc;
+//!
+//! let cluster = flowunits::config::fig2_cluster();
+//! let mut ctx = StreamContext::new(cluster, JobConfig::default());
+//! ctx.stream(Source::synthetic(1_000_000, |_, i| Value::F64((i % 100) as f64)))
+//!     .to_layer("edge")
+//!     .filter(|v| v.as_f64().unwrap() > 33.0)
+//!     .to_layer("site")
+//!     .key_by(|v| Value::I64(v.as_f64().unwrap() as i64 % 8))
+//!     .window(100, WindowAgg::Mean)
+//!     .to_layer("cloud")
+//!     .map(|v| v)
+//!     .collect_count();
+//! let report = ctx.execute().unwrap();
+//! ```
+
+pub use crate::coordinator::{JobConfig, JobReport};
+pub use crate::graph::WindowAgg;
+pub use crate::placement::PlannerKind;
+
+use crate::config::ClusterSpec;
+use crate::coordinator::{Coordinator, Deployment};
+use crate::error::{Error, Result};
+use crate::graph::{LogicalGraph, OpKind, SinkKind, SourceKind};
+use crate::topology::ConstraintExpr;
+use crate::value::Value;
+use std::sync::Arc;
+
+/// Source builder.
+pub struct Source(SourceKind);
+
+impl Source {
+    /// Synthetic generator: `total` events split across source instances,
+    /// each produced by `gen(instance_index, event_index)`.
+    pub fn synthetic(
+        total: u64,
+        gen: impl Fn(u64, u64) -> Value + Send + Sync + 'static,
+    ) -> Source {
+        Source(SourceKind::Synthetic {
+            total,
+            gen: Arc::new(gen),
+            rate: None,
+        })
+    }
+
+    /// Rate-limited synthetic generator (events/second per instance);
+    /// pair with [`Deployment::stop_sources`] for unbounded streams.
+    pub fn synthetic_rated(
+        total: u64,
+        rate: f64,
+        gen: impl Fn(u64, u64) -> Value + Send + Sync + 'static,
+    ) -> Source {
+        Source(SourceKind::Synthetic {
+            total,
+            gen: Arc::new(gen),
+            rate: Some(rate),
+        })
+    }
+
+    /// A pre-materialised vector.
+    pub fn vector(values: Vec<Value>) -> Source {
+        Source(SourceKind::Vector(Arc::new(values)))
+    }
+
+    /// Lines of a text file as `Value::Str`.
+    pub fn file_lines(path: impl Into<std::path::PathBuf>) -> Source {
+        Source(SourceKind::FileLines(path.into()))
+    }
+}
+
+/// Builder context owning the cluster description, job configuration, and
+/// the logical graph under construction.
+pub struct StreamContext {
+    cluster: ClusterSpec,
+    config: JobConfig,
+    graph: Option<LogicalGraph>,
+    current_layer: String,
+}
+
+impl StreamContext {
+    /// Creates a context. Until the first [`Stream::to_layer`], operators
+    /// are annotated with the innermost layer (the cloud).
+    pub fn new(cluster: ClusterSpec, config: JobConfig) -> Self {
+        let current_layer = cluster
+            .topology
+            .layers
+            .last()
+            .cloned()
+            .unwrap_or_else(|| "cloud".into());
+        StreamContext {
+            cluster,
+            config,
+            graph: None,
+            current_layer,
+        }
+    }
+
+    /// Starts a stream from `source`.
+    pub fn stream(&mut self, source: Source) -> Stream<'_> {
+        let mut g = LogicalGraph::default();
+        g.push(OpKind::Source(source.0), self.current_layer.clone(), None, "source");
+        self.graph = Some(g);
+        Stream { ctx: self }
+    }
+
+    /// Executes the built job to completion.
+    pub fn execute(&mut self) -> Result<JobReport> {
+        let graph = self
+            .graph
+            .take()
+            .ok_or_else(|| Error::Graph("no stream defined".into()))?;
+        Coordinator::new(self.cluster.clone(), self.config.clone()).run(&graph)
+    }
+
+    /// Deploys the built job and returns the live handle (for dynamic
+    /// updates / unbounded sources).
+    pub fn deploy(&mut self) -> Result<Deployment> {
+        let graph = self
+            .graph
+            .take()
+            .ok_or_else(|| Error::Graph("no stream defined".into()))?;
+        Coordinator::new(self.cluster.clone(), self.config.clone()).deploy(&graph)
+    }
+
+    /// Consumes the context, returning the logical graph (for planning
+    /// inspection or [`Coordinator`] reuse).
+    pub fn into_graph(mut self) -> Result<LogicalGraph> {
+        self.graph
+            .take()
+            .ok_or_else(|| Error::Graph("no stream defined".into()))
+    }
+
+    fn push(&mut self, kind: OpKind, name: &str) {
+        let layer = self.current_layer.clone();
+        self.graph
+            .as_mut()
+            .expect("stream() must be called first")
+            .push(kind, layer, None, name);
+    }
+}
+
+/// Fluent stream under construction. All methods annotate operators with
+/// the context's current layer; [`Stream::to_layer`] switches it.
+pub struct Stream<'a> {
+    ctx: &'a mut StreamContext,
+}
+
+impl<'a> Stream<'a> {
+    /// Moves the remainder of the pipeline to `layer` — the FlowUnits
+    /// locality annotation. Subsequent operators form (part of) a new
+    /// FlowUnit deployed on the zones of that layer.
+    pub fn to_layer(self, layer: &str) -> Self {
+        self.ctx.current_layer = layer.to_string();
+        // retroactively annotate the source if no operator followed it yet
+        let g = self.ctx.graph.as_mut().unwrap();
+        if g.ops.len() == 1 {
+            g.ops[0].layer = layer.to_string();
+        }
+        self
+    }
+
+    /// Declares a capability constraint for the *most recent* operator —
+    /// the FlowUnits resource annotation (e.g. `"n_cpu >= 4 && gpu = yes"`).
+    pub fn add_constraint(self, expr: &str) -> Self {
+        let parsed = ConstraintExpr::parse(expr).expect("invalid constraint expression");
+        let g = self.ctx.graph.as_mut().unwrap();
+        let last = g.ops.last_mut().expect("no operator to constrain");
+        last.constraint = Some(match last.constraint.take() {
+            None => parsed,
+            Some(prev) => prev.and(parsed),
+        });
+        self
+    }
+
+    /// Element-wise transform.
+    pub fn map(self, f: impl Fn(Value) -> Value + Send + Sync + 'static) -> Self {
+        self.ctx.push(OpKind::Map(Arc::new(f)), "map");
+        self
+    }
+
+    /// Predicate filter.
+    pub fn filter(self, f: impl Fn(&Value) -> bool + Send + Sync + 'static) -> Self {
+        self.ctx.push(OpKind::Filter(Arc::new(f)), "filter");
+        self
+    }
+
+    /// One-to-many transform.
+    pub fn flat_map(self, f: impl Fn(Value) -> Vec<Value> + Send + Sync + 'static) -> Self {
+        self.ctx.push(OpKind::FlatMap(Arc::new(f)), "flat_map");
+        self
+    }
+
+    /// Keys the stream; downstream stateful operators group by this key
+    /// and the repartitioning edge is hash-routed.
+    pub fn key_by(self, f: impl Fn(&Value) -> Value + Send + Sync + 'static) -> Self {
+        self.ctx.push(OpKind::KeyBy(Arc::new(f)), "key_by");
+        self
+    }
+
+    /// `group_by` is Renoir's name for [`Stream::key_by`].
+    pub fn group_by(self, f: impl Fn(&Value) -> Value + Send + Sync + 'static) -> Self {
+        self.key_by(f)
+    }
+
+    /// Keyed fold with initial accumulator `init`; emits `Pair(key, acc)`
+    /// per key at end-of-stream.
+    pub fn fold(
+        self,
+        init: Value,
+        step: impl Fn(&mut Value, Value) + Send + Sync + 'static,
+    ) -> Self {
+        self.ctx.push(
+            OpKind::Fold {
+                init,
+                step: Arc::new(step),
+            },
+            "fold",
+        );
+        self
+    }
+
+    /// Keyed reduction: combines pairs of payloads with `f`; emits
+    /// `Pair(key, reduced)` per key at end-of-stream. Sugar over
+    /// [`Stream::fold`] with a first-element initializer.
+    pub fn reduce(self, f: impl Fn(&Value, &Value) -> Value + Send + Sync + 'static) -> Self {
+        self.fold(Value::Null, move |acc, v| {
+            *acc = if matches!(acc, Value::Null) {
+                v
+            } else {
+                f(acc, &v)
+            };
+        })
+    }
+
+    /// Observes every element without changing it (debugging/metrics tap).
+    pub fn inspect(self, f: impl Fn(&Value) + Send + Sync + 'static) -> Self {
+        self.ctx.push(
+            OpKind::Map(Arc::new(move |v| {
+                f(&v);
+                v
+            })),
+            "inspect",
+        );
+        self
+    }
+
+    /// Tumbling count window of `size` events with aggregate `agg`.
+    pub fn window(self, size: usize, agg: WindowAgg) -> Self {
+        self.ctx.push(
+            OpKind::Window {
+                size,
+                slide: size,
+                agg,
+            },
+            "window",
+        );
+        self
+    }
+
+    /// Sliding count window.
+    pub fn sliding_window(self, size: usize, slide: usize, agg: WindowAgg) -> Self {
+        self.ctx.push(OpKind::Window { size, slide, agg }, "window");
+        self
+    }
+
+    /// Batched inference through the AOT-compiled XLA artifact `name`
+    /// (`artifacts/<name>.hlo.txt`); `batch` rows per PJRT call, `in_dim`
+    /// features per row.
+    pub fn xla_map(self, name: &str, batch: usize, in_dim: usize) -> Self {
+        self.ctx.push(
+            OpKind::XlaMap {
+                artifact: name.to_string(),
+                batch,
+                in_dim,
+            },
+            "xla_map",
+        );
+        self
+    }
+
+    /// Terminal: collect events into [`JobReport::collected`].
+    pub fn collect_vec(self) {
+        self.ctx.push(OpKind::Sink(SinkKind::Collect), "collect");
+    }
+
+    /// Terminal: count events only.
+    pub fn collect_count(self) {
+        self.ctx.push(OpKind::Sink(SinkKind::Count), "count");
+    }
+
+    /// Terminal: discard events (benchmark sink).
+    pub fn discard(self) {
+        self.ctx.push(OpKind::Sink(SinkKind::Discard), "discard");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::eval_cluster;
+    use std::time::Duration;
+
+    fn transparent_cluster() -> ClusterSpec {
+        eval_cluster(None, Duration::ZERO)
+    }
+
+    fn fast_config(planner: PlannerKind) -> JobConfig {
+        JobConfig {
+            planner,
+            batch_size: 128,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_filter_count_flowunits() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(3000, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .filter(|v| v.as_i64().unwrap() % 3 == 0)
+            .to_layer("cloud")
+            .map(|v| v)
+            .collect_count();
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.events_in, 3000);
+        assert_eq!(report.events_out, 1000);
+    }
+
+    #[test]
+    fn end_to_end_same_result_under_renoir_planner() {
+        for planner in [PlannerKind::FlowUnits, PlannerKind::Renoir] {
+            let mut ctx = StreamContext::new(transparent_cluster(), fast_config(planner));
+            ctx.stream(Source::synthetic(3000, |_, i| Value::I64(i as i64)))
+                .to_layer("edge")
+                .filter(|v| v.as_i64().unwrap() % 3 == 0)
+                .to_layer("cloud")
+                .collect_count();
+            let report = ctx.execute().unwrap();
+            assert_eq!(report.events_out, 1000, "{planner:?}");
+        }
+    }
+
+    #[test]
+    fn end_to_end_wordcount() {
+        let text = ["the cat", "the dog", "the cat sat"];
+        let values: Vec<Value> = text.iter().map(|l| Value::Str(l.to_string())).collect();
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::vector(values))
+            .to_layer("cloud")
+            .flat_map(|v| {
+                v.as_str()
+                    .unwrap()
+                    .split(' ')
+                    .map(|w| Value::Str(w.to_string()))
+                    .collect()
+            })
+            .group_by(|w| w.clone())
+            .fold(Value::I64(0), |acc, _| {
+                *acc = Value::I64(acc.as_i64().unwrap() + 1)
+            })
+            .collect_vec();
+        let report = ctx.execute().unwrap();
+        let mut counts: Vec<(String, i64)> = report
+            .collected
+            .iter()
+            .map(|v| {
+                let (k, c) = v.as_pair().unwrap();
+                (k.as_str().unwrap().to_string(), c.as_i64().unwrap())
+            })
+            .collect();
+        counts.sort();
+        assert_eq!(
+            counts,
+            vec![
+                ("cat".into(), 2),
+                ("dog".into(), 1),
+                ("sat".into(), 1),
+                ("the".into(), 3)
+            ]
+        );
+    }
+
+    #[test]
+    fn keyed_window_pipeline_produces_expected_window_count() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        // 4 edge sources × 2000 events each = 8000; keys 0..8; windows of 100
+        ctx.stream(Source::synthetic(8000, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .map(|v| v)
+            .to_layer("site")
+            .key_by(|v| Value::I64(v.as_i64().unwrap() % 8))
+            .window(100, WindowAgg::Count)
+            .to_layer("cloud")
+            .collect_vec();
+        let report = ctx.execute().unwrap();
+        // 8000 events / 8 keys = 1000 per key = 10 full windows per key.
+        // Keys are split across the site zone's instances; totals must add
+        // up to exactly 80 full windows (count=100 each), no partials.
+        let total: i64 = report
+            .collected
+            .iter()
+            .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
+            .sum();
+        assert_eq!(total, 8000);
+        assert_eq!(report.collected.len(), 80);
+    }
+
+    #[test]
+    fn decoupled_boundaries_preserve_results() {
+        let config = JobConfig {
+            planner: PlannerKind::FlowUnits,
+            decouple_units: true,
+            batch_size: 64,
+            poll_timeout: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let mut ctx = StreamContext::new(transparent_cluster(), config);
+        ctx.stream(Source::synthetic(2000, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .filter(|v| v.as_i64().unwrap() % 2 == 0)
+            .to_layer("cloud")
+            .collect_count();
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.events_out, 1000);
+        assert!(
+            report.metrics.queue_appends.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "queue substrate was used"
+        );
+    }
+
+    #[test]
+    fn constraint_annotation_composes() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
+            .to_layer("cloud")
+            .map(|v| v)
+            .add_constraint("gpu = yes")
+            .add_constraint("n_cpu >= 4")
+            .collect_count();
+        let graph = ctx.into_graph().unwrap();
+        let c = graph.ops[1].constraint.as_ref().unwrap();
+        assert_eq!(c.to_string(), "gpu = yes && n_cpu >= 4");
+    }
+
+    #[test]
+    fn execute_without_stream_errors() {
+        let mut ctx = StreamContext::new(transparent_cluster(), JobConfig::default());
+        assert!(ctx.execute().is_err());
+    }
+
+    #[test]
+    fn reduce_computes_keyed_max() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(1000, |_, i| Value::I64(i as i64)))
+            .to_layer("cloud")
+            .key_by(|v| Value::I64(v.as_i64().unwrap() % 3))
+            .reduce(|a, b| Value::I64(a.as_i64().unwrap().max(b.as_i64().unwrap())))
+            .collect_vec();
+        let report = ctx.execute().unwrap();
+        let mut maxes: Vec<(i64, i64)> = report
+            .collected
+            .iter()
+            .map(|v| {
+                let (k, m) = v.as_pair().unwrap();
+                (k.as_i64().unwrap(), m.as_i64().unwrap())
+            })
+            .collect();
+        maxes.sort();
+        assert_eq!(maxes, vec![(0, 999), (1, 997), (2, 998)]);
+    }
+
+    #[test]
+    fn inspect_observes_all_events() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let seen = Arc::new(AtomicU64::new(0));
+        let seen2 = seen.clone();
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(500, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .inspect(move |_| {
+                seen2.fetch_add(1, Ordering::Relaxed);
+            })
+            .to_layer("cloud")
+            .collect_count();
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.events_out, 500);
+        assert_eq!(seen.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    fn sliding_window_emits_overlapping_aggregates() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(1000, |_, i| Value::F64(i as f64)))
+            .to_layer("cloud")
+            .key_by(|_| Value::I64(0))
+            .sliding_window(100, 50, WindowAgg::Count)
+            .collect_vec();
+        let report = ctx.execute().unwrap();
+        // 1000 events, size 100 slide 50: full windows at 100, 150, ... 1000
+        // = 19 full windows, plus a 50-event partial at EOS
+        assert_eq!(report.collected.len(), 20);
+    }
+}

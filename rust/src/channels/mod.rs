@@ -1,0 +1,382 @@
+//! Channels between operator instances.
+//!
+//! Instances on the same host exchange `Vec<Value>` batches by pointer
+//! through bounded in-memory channels (Renoir's in-memory path). Instances
+//! on different hosts exchange *encoded frames*: the sender serialises the
+//! batch (paying the real encode cost and producing the real byte size),
+//! the frame traverses the emulated inter-zone [`Link`](crate::netsim::Link)
+//! when the hosts are in different zones, and the receiving worker decodes
+//! it (paying the real decode cost) — mirroring Renoir's TCP path.
+//!
+//! Output ports route with one of three policies:
+//! * `RoundRobin` — rebalance whole batches across allowed targets
+//!   (forward edges);
+//! * `Hash` — partition records by `stable_hash(key)` so every sender maps
+//!   a key to the same target instance (keyed edges, paper's `group_by`);
+//! * `Broadcast` — replicate to all targets (control/barrier use).
+
+use crate::metrics::{Metrics, MetricsRegistry};
+use crate::netsim::Link;
+use crate::value::{decode_batch, encode_batch, Value};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+
+/// Per-frame overhead in accounted bytes (length prefix + CRC + TCP/IP
+/// headers amortised per frame — matches a 1500-byte-MTU stream envelope).
+pub const FRAME_OVERHEAD: usize = 48;
+
+/// Default bound (in batches) of an instance inbox.
+pub const DEFAULT_CHANNEL_CAPACITY: usize = 64;
+
+/// A message travelling between operator instances.
+#[derive(Debug)]
+pub enum Msg {
+    /// Same-host batch, moved by pointer.
+    Batch(Vec<Value>),
+    /// Cross-host batch, encoded; decoded by the receiving worker.
+    Frame(Vec<u8>),
+    /// One upstream producer finished.
+    Eos,
+}
+
+/// Routing policy of an output port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Rebalance whole batches across targets.
+    RoundRobin,
+    /// Partition records by key hash (`Value::Pair` keys).
+    Hash,
+    /// Replicate every batch to every target.
+    Broadcast,
+}
+
+/// One reachable downstream instance.
+pub struct Target {
+    /// Destination inbox.
+    pub tx: SyncSender<Msg>,
+    /// Emulated link to traverse (None ⇒ same host: pointer move).
+    pub link: Option<Arc<Link<Msg>>>,
+    /// End-to-end route latency applied per frame on `link`.
+    pub latency: std::time::Duration,
+    /// Whether this edge crosses a zone boundary (metrics).
+    pub crossing: bool,
+}
+
+/// Output port of an operator instance.
+pub struct OutPort {
+    targets: Vec<Target>,
+    routing: Routing,
+    rr_next: usize,
+    /// Pending per-target buffers for `Hash` routing.
+    pending: Vec<Vec<Value>>,
+    /// Flush threshold for hash-routed buffers.
+    batch_capacity: usize,
+    metrics: Option<Metrics>,
+}
+
+impl OutPort {
+    /// Creates an output port over `targets`.
+    pub fn new(
+        targets: Vec<Target>,
+        routing: Routing,
+        batch_capacity: usize,
+        metrics: Option<Metrics>,
+    ) -> Self {
+        let pending = targets.iter().map(|_| Vec::new()).collect();
+        OutPort {
+            targets,
+            routing,
+            rr_next: 0,
+            pending,
+            batch_capacity,
+            metrics,
+        }
+    }
+
+    /// Number of downstream targets.
+    pub fn fan_out(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Sends one batch according to the routing policy. Consumes the batch.
+    pub fn send(&mut self, batch: Vec<Value>) {
+        if batch.is_empty() || self.targets.is_empty() {
+            return;
+        }
+        match self.routing {
+            Routing::RoundRobin => {
+                let t = self.rr_next % self.targets.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                self.deliver(t, batch);
+            }
+            Routing::Broadcast => {
+                for t in 0..self.targets.len() {
+                    if t + 1 == self.targets.len() {
+                        let last = std::mem::take(&mut self.rr_next); // silence unused warn pattern
+                        let _ = last;
+                        self.deliver(t, batch);
+                        return;
+                    }
+                    self.deliver(t, batch.clone());
+                }
+            }
+            Routing::Hash => {
+                let n = self.targets.len() as u64;
+                for v in batch {
+                    let key_hash = match &v {
+                        Value::Pair(kv) => kv.0.stable_hash(),
+                        other => other.stable_hash(),
+                    };
+                    let t = (key_hash % n) as usize;
+                    self.pending[t].push(v);
+                    if self.pending[t].len() >= self.batch_capacity {
+                        // swap in a pre-sized buffer: re-growing from zero
+                        // costs ~log2(batch) reallocs per delivered batch
+                        let full = std::mem::replace(
+                            &mut self.pending[t],
+                            Vec::with_capacity(self.batch_capacity),
+                        );
+                        self.deliver(t, full);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Flushes hash-routing buffers (call before EOS or on a timer).
+    pub fn flush(&mut self) {
+        for t in 0..self.targets.len() {
+            if !self.pending[t].is_empty() {
+                let b = std::mem::take(&mut self.pending[t]);
+                self.deliver(t, b);
+            }
+        }
+    }
+
+    /// Flushes then signals EOS to every target.
+    pub fn eos(&mut self) {
+        self.flush();
+        for t in 0..self.targets.len() {
+            let target = &self.targets[t];
+            match &target.link {
+                None => {
+                    let _ = target.tx.send(Msg::Eos);
+                }
+                Some(link) => {
+                    link.send(FRAME_OVERHEAD, target.latency, Msg::Eos, &target.tx);
+                }
+            }
+        }
+    }
+
+    fn deliver(&mut self, t: usize, batch: Vec<Value>) {
+        let target = &self.targets[t];
+        if target.crossing {
+            if let Some(m) = &self.metrics {
+                MetricsRegistry::add(&m.zone_crossings, batch.len() as u64);
+            }
+        }
+        match &target.link {
+            None => {
+                // Same host: pointer move. A disconnected receiver means the
+                // job is shutting down; drop silently.
+                let _ = target.tx.send(Msg::Batch(batch));
+            }
+            Some(link) => {
+                let bytes = encode_batch(&batch);
+                let size = bytes.len() + FRAME_OVERHEAD;
+                link.send(size, target.latency, Msg::Frame(bytes), &target.tx);
+            }
+        }
+    }
+}
+
+/// Input side of an operator instance: one receiver fed by N producers.
+pub struct Inbox {
+    rx: Receiver<Msg>,
+    producers: usize,
+    eos_seen: usize,
+}
+
+impl Inbox {
+    /// Wraps a receiver expecting `producers` EOS signals.
+    pub fn new(rx: Receiver<Msg>, producers: usize) -> Self {
+        Inbox {
+            rx,
+            producers,
+            eos_seen: 0,
+        }
+    }
+
+    /// Receives the next batch, decoding frames. Returns `None` once all
+    /// producers have signalled EOS (or every sender disconnected).
+    pub fn recv(&mut self) -> Option<Vec<Value>> {
+        loop {
+            if self.eos_seen >= self.producers {
+                return None;
+            }
+            match self.rx.recv() {
+                Ok(Msg::Batch(b)) => return Some(b),
+                Ok(Msg::Frame(bytes)) => {
+                    let b = decode_batch(&bytes).expect("corrupt frame on channel");
+                    return Some(b);
+                }
+                Ok(Msg::Eos) => {
+                    self.eos_seen += 1;
+                }
+                Err(_) => return None, // all senders dropped
+            }
+        }
+    }
+
+    /// Non-blocking variant used by instances that multiplex control
+    /// messages; returns `Ok(None)` when no message is ready.
+    pub fn try_recv(&mut self) -> Option<Option<Vec<Value>>> {
+        if self.eos_seen >= self.producers {
+            return Some(None);
+        }
+        match self.rx.try_recv() {
+            Ok(Msg::Batch(b)) => Some(Some(b)),
+            Ok(Msg::Frame(bytes)) => Some(Some(decode_batch(&bytes).expect("corrupt frame"))),
+            Ok(Msg::Eos) => {
+                self.eos_seen += 1;
+                if self.eos_seen >= self.producers {
+                    Some(None)
+                } else {
+                    None
+                }
+            }
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => Some(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn local_target(cap: usize) -> (Target, Receiver<Msg>) {
+        let (tx, rx) = sync_channel(cap);
+        (
+            Target {
+                tx,
+                link: None,
+                latency: std::time::Duration::ZERO,
+                crossing: false,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn round_robin_rotates_batches() {
+        let (t1, r1) = local_target(8);
+        let (t2, r2) = local_target(8);
+        let mut port = OutPort::new(vec![t1, t2], Routing::RoundRobin, 16, None);
+        port.send(vec![Value::I64(1)]);
+        port.send(vec![Value::I64(2)]);
+        port.send(vec![Value::I64(3)]);
+        let mut inbox1 = Inbox::new(r1, 1);
+        let mut inbox2 = Inbox::new(r2, 1);
+        assert_eq!(inbox1.recv().unwrap(), vec![Value::I64(1)]);
+        assert_eq!(inbox2.recv().unwrap(), vec![Value::I64(2)]);
+        assert_eq!(inbox1.recv().unwrap(), vec![Value::I64(3)]);
+    }
+
+    #[test]
+    fn hash_routing_is_key_consistent() {
+        let (t1, r1) = local_target(64);
+        let (t2, r2) = local_target(64);
+        let mut port = OutPort::new(vec![t1, t2], Routing::Hash, 4, None);
+        for i in 0..64 {
+            port.send(vec![Value::pair(Value::I64(i % 8), Value::I64(i))]);
+        }
+        port.eos();
+        let collect = |rx: Receiver<Msg>| {
+            let mut inbox = Inbox::new(rx, 1);
+            let mut keys = std::collections::BTreeSet::new();
+            while let Some(b) = inbox.recv() {
+                for v in b {
+                    keys.insert(v.as_pair().unwrap().0.as_i64().unwrap());
+                }
+            }
+            keys
+        };
+        let k1 = collect(r1);
+        let k2 = collect(r2);
+        assert!(k1.is_disjoint(&k2), "keys split across targets: {k1:?} / {k2:?}");
+        assert_eq!(k1.len() + k2.len(), 8);
+    }
+
+    #[test]
+    fn broadcast_replicates() {
+        let (t1, r1) = local_target(8);
+        let (t2, r2) = local_target(8);
+        let mut port = OutPort::new(vec![t1, t2], Routing::Broadcast, 16, None);
+        port.send(vec![Value::I64(9)]);
+        port.eos();
+        for rx in [r1, r2] {
+            let mut inbox = Inbox::new(rx, 1);
+            assert_eq!(inbox.recv().unwrap(), vec![Value::I64(9)]);
+            assert!(inbox.recv().is_none());
+        }
+    }
+
+    #[test]
+    fn inbox_waits_for_all_producers() {
+        let (tx, rx) = sync_channel(8);
+        let tx2 = tx.clone();
+        let mut inbox = Inbox::new(rx, 2);
+        tx.send(Msg::Eos).unwrap();
+        tx2.send(Msg::Batch(vec![Value::I64(5)])).unwrap();
+        tx2.send(Msg::Eos).unwrap();
+        assert_eq!(inbox.recv().unwrap(), vec![Value::I64(5)]);
+        assert!(inbox.recv().is_none());
+    }
+
+    #[test]
+    fn remote_target_encodes_and_decodes() {
+        let link = Link::new("test", None, false, None);
+        let (tx, rx) = sync_channel(8);
+        let target = Target {
+            tx,
+            link: Some(link.clone()),
+            latency: std::time::Duration::ZERO,
+            crossing: true,
+        };
+        let m = crate::metrics::MetricsRegistry::new();
+        let mut port = OutPort::new(vec![target], Routing::RoundRobin, 16, Some(m.clone()));
+        let batch = vec![
+            Value::pair(Value::Str("k".into()), Value::F64(1.5)),
+            Value::I64(-3),
+        ];
+        port.send(batch.clone());
+        port.eos();
+        let mut inbox = Inbox::new(rx, 1);
+        assert_eq!(inbox.recv().unwrap(), batch);
+        assert!(inbox.recv().is_none());
+        assert!(link.bytes_sent() > FRAME_OVERHEAD as u64);
+        assert_eq!(
+            m.zone_crossings.load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
+        link.shutdown();
+    }
+
+    #[test]
+    fn hash_flush_on_eos_emits_partials() {
+        let (t1, r1) = local_target(8);
+        let mut port = OutPort::new(vec![t1], Routing::Hash, 1000, None);
+        port.send(vec![Value::pair(Value::I64(1), Value::I64(10))]);
+        // below batch_capacity — nothing delivered yet
+        let mut inbox = Inbox::new(r1, 1);
+        port.eos();
+        assert_eq!(
+            inbox.recv().unwrap(),
+            vec![Value::pair(Value::I64(1), Value::I64(10))]
+        );
+        assert!(inbox.recv().is_none());
+    }
+}

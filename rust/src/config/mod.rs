@@ -1,0 +1,489 @@
+//! Cluster configuration file parsing — the paper's "configuration file"
+//! that names layers, zones, hosts (with capabilities), inter-zone link
+//! conditions, and the queue topics used between FlowUnits (paper §IV).
+//!
+//! Format: INI-like sections, one entity per section.
+//!
+//! ```text
+//! layers = edge, site, cloud
+//!
+//! [zone E1]
+//! layer = edge
+//! locations = L1
+//! parent = S1
+//!
+//! [host e1]
+//! zone = E1
+//! cores = 1
+//! cap.gpu = no
+//!
+//! [link E1 S1]          # ordered child/parent zone pair; applied both ways
+//! bandwidth = 100Mbit
+//! latency = 10ms
+//!
+//! [defaults]
+//! bandwidth = unlimited  # for tree edges without an explicit [link]
+//! latency = 0ms
+//! ```
+
+use crate::error::{Error, Result};
+use crate::netsim::LinkSpec;
+use crate::topology::{CapValue, Capabilities, Host, Topology, Zone, ZoneId};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Parsed cluster specification: the topology plus link conditions.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSpec {
+    /// Continuum topology (zones, hosts, layers).
+    pub topology: Topology,
+    /// Explicit link conditions keyed by `(child_zone, parent_zone)`.
+    pub links: BTreeMap<(ZoneId, ZoneId), LinkSpec>,
+    /// Default link conditions for unlisted tree edges.
+    pub default_link: LinkSpec,
+}
+
+impl ClusterSpec {
+    /// Parses a cluster spec from the configuration text.
+    pub fn parse(text: &str) -> Result<ClusterSpec> {
+        let mut spec = ClusterSpec::default();
+        let mut section: Option<SectionHead> = None;
+        let mut body: Vec<(usize, String, String)> = Vec::new();
+
+        let flush = |spec: &mut ClusterSpec,
+                         section: &Option<SectionHead>,
+                         body: &mut Vec<(usize, String, String)>|
+         -> Result<()> {
+            if let Some(head) = section {
+                apply_section(spec, head, body)?;
+            }
+            body.clear();
+            Ok(())
+        };
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let n = lineno + 1;
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config {
+                        line: n,
+                        msg: format!("unterminated section header '{line}'"),
+                    });
+                }
+                flush(&mut spec, &section, &mut body)?;
+                section = Some(SectionHead::parse(&line[1..line.len() - 1], n)?);
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim().to_string();
+                let val = line[eq + 1..].trim().to_string();
+                if section.is_none() {
+                    // top-level keys
+                    if key == "layers" {
+                        spec.topology.layers =
+                            val.split(',').map(|s| s.trim().to_string()).collect();
+                    } else {
+                        return Err(Error::Config {
+                            line: n,
+                            msg: format!("unknown top-level key '{key}'"),
+                        });
+                    }
+                } else {
+                    body.push((n, key, val));
+                }
+            } else {
+                return Err(Error::Config {
+                    line: n,
+                    msg: format!("expected 'key = value', got '{line}'"),
+                });
+            }
+        }
+        flush(&mut spec, &section, &mut body)?;
+        spec.topology.validate()?;
+        Ok(spec)
+    }
+
+    /// Loads and parses a config file from disk.
+    pub fn load(path: &str) -> Result<ClusterSpec> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Link conditions for the tree edge `(child, parent)`, falling back to
+    /// the defaults. Lookup is direction-insensitive (the paper shapes both
+    /// directions identically with `tc`).
+    pub fn link_between(&self, child: &str, parent: &str) -> LinkSpec {
+        self.links
+            .get(&(child.to_string(), parent.to_string()))
+            .or_else(|| self.links.get(&(parent.to_string(), child.to_string())))
+            .cloned()
+            .unwrap_or_else(|| self.default_link.clone())
+    }
+
+    /// Overrides every inter-zone link with the same conditions — used by
+    /// the Fig. 3 sweep, which shapes all cross-zone traffic identically.
+    pub fn set_uniform_links(&mut self, spec: LinkSpec) {
+        self.links.clear();
+        self.default_link = spec;
+    }
+}
+
+#[derive(Debug)]
+enum SectionHead {
+    Zone(String),
+    Host(String),
+    Link(String, String),
+    Defaults,
+}
+
+impl SectionHead {
+    fn parse(s: &str, line: usize) -> Result<SectionHead> {
+        let parts: Vec<&str> = s.split_whitespace().collect();
+        match parts.as_slice() {
+            ["zone", id] => Ok(SectionHead::Zone(id.to_string())),
+            ["host", id] => Ok(SectionHead::Host(id.to_string())),
+            ["link", a, b] => Ok(SectionHead::Link(a.to_string(), b.to_string())),
+            ["defaults"] => Ok(SectionHead::Defaults),
+            _ => Err(Error::Config {
+                line,
+                msg: format!("unknown section '[{s}]'"),
+            }),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn apply_section(
+    spec: &mut ClusterSpec,
+    head: &SectionHead,
+    body: &[(usize, String, String)],
+) -> Result<()> {
+    match head {
+        SectionHead::Zone(id) => {
+            let mut zone = Zone {
+                id: id.clone(),
+                layer: String::new(),
+                locations: Vec::new(),
+                parent: None,
+            };
+            for (n, k, v) in body {
+                match k.as_str() {
+                    "layer" => zone.layer = v.clone(),
+                    "locations" => {
+                        zone.locations = v.split(',').map(|s| s.trim().to_string()).collect()
+                    }
+                    "parent" => zone.parent = Some(v.clone()),
+                    _ => {
+                        return Err(Error::Config {
+                            line: *n,
+                            msg: format!("unknown zone key '{k}'"),
+                        })
+                    }
+                }
+            }
+            if zone.layer.is_empty() {
+                return Err(Error::Config {
+                    line: 0,
+                    msg: format!("zone '{id}' missing 'layer'"),
+                });
+            }
+            spec.topology.zones.insert(id.clone(), zone);
+        }
+        SectionHead::Host(id) => {
+            let mut zone = String::new();
+            let mut cores = 1usize;
+            let mut caps = Capabilities::default();
+            for (n, k, v) in body {
+                if let Some(cap) = k.strip_prefix("cap.") {
+                    caps.set(cap, CapValue::parse(v));
+                } else {
+                    match k.as_str() {
+                        "zone" => zone = v.clone(),
+                        "cores" => {
+                            cores = v.parse().map_err(|_| Error::Config {
+                                line: *n,
+                                msg: format!("bad core count '{v}'"),
+                            })?
+                        }
+                        _ => {
+                            return Err(Error::Config {
+                                line: *n,
+                                msg: format!("unknown host key '{k}'"),
+                            })
+                        }
+                    }
+                }
+            }
+            if zone.is_empty() {
+                return Err(Error::Config {
+                    line: 0,
+                    msg: format!("host '{id}' missing 'zone'"),
+                });
+            }
+            // n_cpu is always derivable from the core count unless given.
+            if caps.get("n_cpu").is_none() {
+                caps.set("n_cpu", CapValue::Int(cores as i64));
+            }
+            spec.topology.hosts.insert(
+                id.clone(),
+                Host {
+                    id: id.clone(),
+                    zone,
+                    cores,
+                    caps,
+                },
+            );
+        }
+        SectionHead::Link(a, b) => {
+            let mut link = LinkSpec::default();
+            parse_link_body(&mut link, body)?;
+            spec.links.insert((a.clone(), b.clone()), link);
+        }
+        SectionHead::Defaults => {
+            let mut link = spec.default_link.clone();
+            parse_link_body(&mut link, body)?;
+            spec.default_link = link;
+        }
+    }
+    Ok(())
+}
+
+fn parse_link_body(link: &mut LinkSpec, body: &[(usize, String, String)]) -> Result<()> {
+    for (n, k, v) in body {
+        match k.as_str() {
+            "bandwidth" => {
+                link.bandwidth_bps = crate::util::parse_bandwidth(v).ok_or(Error::Config {
+                    line: *n,
+                    msg: format!("bad bandwidth '{v}'"),
+                })?
+            }
+            "latency" => {
+                link.latency = crate::util::parse_duration(v).ok_or(Error::Config {
+                    line: *n,
+                    msg: format!("bad latency '{v}'"),
+                })?
+            }
+            _ => {
+                return Err(Error::Config {
+                    line: *n,
+                    msg: format!("unknown link key '{k}'"),
+                })
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Builds the paper's evaluation cluster (§V): 4 edge servers with 1 core
+/// each in 4 zones, one site data centre with 2×4-core machines, one cloud
+/// VM with 16 cores (annotated `gpu = yes` / `xla = yes` so the
+/// capability-constrained analytics operators land there).
+pub fn eval_cluster(bandwidth: Option<u64>, latency: Duration) -> ClusterSpec {
+    let mut text = String::from("layers = edge, site, cloud\n");
+    for i in 1..=4 {
+        text.push_str(&format!(
+            "[zone E{i}]\nlayer = edge\nlocations = L{i}\nparent = S1\n"
+        ));
+        text.push_str(&format!("[host e{i}]\nzone = E{i}\ncores = 1\n"));
+    }
+    text.push_str("[zone S1]\nlayer = site\nlocations = L1, L2, L3, L4\nparent = C1\n");
+    text.push_str("[host s1a]\nzone = S1\ncores = 4\n[host s1b]\nzone = S1\ncores = 4\n");
+    text.push_str("[zone C1]\nlayer = cloud\nlocations = L1, L2, L3, L4\n");
+    text.push_str("[host c1]\nzone = C1\ncores = 16\ncap.gpu = yes\ncap.xla = yes\ncap.memory = 64GB\n");
+    let mut spec = ClusterSpec::parse(&text).expect("eval cluster must parse");
+    spec.set_uniform_links(LinkSpec {
+        bandwidth_bps: bandwidth,
+        latency,
+    });
+    spec
+}
+
+/// The Fig. 2 topology from the paper's running example (5 edges, 2 sites,
+/// 1 cloud with mixed GPU/non-GPU hosts); locations L1..L5.
+pub fn fig2_cluster() -> ClusterSpec {
+    let text = r#"
+layers = edge, site, cloud
+
+[zone E1]
+layer = edge
+locations = L1
+parent = S1
+[zone E2]
+layer = edge
+locations = L2
+parent = S1
+[zone E3]
+layer = edge
+locations = L3
+parent = S1
+[zone E4]
+layer = edge
+locations = L4
+parent = S2
+[zone E5]
+layer = edge
+locations = L5
+parent = S2
+
+[zone S1]
+layer = site
+locations = L1, L2, L3
+parent = C1
+[zone S2]
+layer = site
+locations = L4, L5
+parent = C1
+
+[zone C1]
+layer = cloud
+locations = L1, L2, L3, L4, L5
+
+[host e1]
+zone = E1
+cores = 1
+[host e2]
+zone = E2
+cores = 1
+[host e3]
+zone = E3
+cores = 1
+[host e4]
+zone = E4
+cores = 1
+[host e5]
+zone = E5
+cores = 1
+
+[host s1a]
+zone = S1
+cores = 4
+[host s2a]
+zone = S2
+cores = 4
+
+[host c1gpu]
+zone = C1
+cores = 8
+cap.gpu = yes
+cap.xla = yes
+cap.memory = 64GB
+[host c1cpu]
+zone = C1
+cores = 8
+cap.gpu = no
+cap.memory = 32GB
+
+[defaults]
+bandwidth = 1Gbit
+latency = 5ms
+"#;
+    ClusterSpec::parse(text).expect("fig2 cluster must parse")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_eval_cluster() {
+        let spec = eval_cluster(Some(100_000_000), Duration::from_millis(10));
+        assert_eq!(spec.topology.layers, vec!["edge", "site", "cloud"]);
+        assert_eq!(spec.topology.zones_at_layer("edge").len(), 4);
+        assert_eq!(spec.topology.total_cores(), 4 + 8 + 16);
+        let l = spec.link_between("E1", "S1");
+        assert_eq!(l.bandwidth_bps, Some(100_000_000));
+        assert_eq!(l.latency, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn parses_fig2_cluster() {
+        let spec = fig2_cluster();
+        assert_eq!(spec.topology.zones.len(), 8);
+        // defaults apply to unlisted links
+        let l = spec.link_between("E5", "S2");
+        assert_eq!(l.bandwidth_bps, Some(1_000_000_000));
+        assert_eq!(l.latency, Duration::from_millis(5));
+        // gpu host carries the capability
+        let gpu = ConstraintTest::gpu_hosts(&spec);
+        assert_eq!(gpu, vec!["c1gpu"]);
+    }
+
+    struct ConstraintTest;
+    impl ConstraintTest {
+        fn gpu_hosts(spec: &ClusterSpec) -> Vec<String> {
+            let e = crate::topology::ConstraintExpr::parse("gpu = yes").unwrap();
+            spec.topology
+                .matching_hosts("C1", Some(&e))
+                .into_iter()
+                .map(|h| h.id.clone())
+                .collect()
+        }
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let spec = ClusterSpec::parse(
+            "layers = edge, cloud\n# comment\n\n[zone E]\nlayer = edge # trailing\nlocations = L1\nparent = C\n[zone C]\nlayer = cloud\nlocations = L1\n[host h]\nzone = C\ncores = 2\n[host e]\nzone = E\ncores = 1\n",
+        )
+        .unwrap();
+        assert_eq!(spec.topology.zones["E"].layer, "edge");
+        assert_eq!(spec.topology.hosts["h"].cores, 2);
+    }
+
+    #[test]
+    fn host_gets_default_ncpu_cap() {
+        let spec = eval_cluster(None, Duration::ZERO);
+        let h = &spec.topology.hosts["s1a"];
+        assert_eq!(h.caps.get("n_cpu"), Some(&CapValue::Int(4)));
+    }
+
+    #[test]
+    fn error_on_unknown_section() {
+        let err = ClusterSpec::parse("layers = a\n[frobnicate x]\nk = v\n").unwrap_err();
+        assert!(err.to_string().contains("unknown section"));
+    }
+
+    #[test]
+    fn error_on_missing_equals() {
+        let err = ClusterSpec::parse("layers = a\n[zone Z]\nlayer edge\n").unwrap_err();
+        assert!(err.to_string().contains("expected 'key = value'"));
+    }
+
+    #[test]
+    fn error_on_bad_bandwidth() {
+        let err = ClusterSpec::parse(
+            "layers = a\n[zone Z]\nlayer = a\nlocations = L\n[host h]\nzone = Z\n[link Z Z]\nbandwidth = warp9\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("bad bandwidth"));
+    }
+
+    #[test]
+    fn error_surfaces_topology_validation() {
+        // zone parent at same layer -> topology error
+        let err = ClusterSpec::parse(
+            "layers = edge, cloud\n[zone A]\nlayer = edge\nlocations = L1\nparent = B\n[zone B]\nlayer = edge\nlocations = L2\n[host h]\nzone = A\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Topology(_)));
+    }
+
+    #[test]
+    fn uniform_link_override() {
+        let mut spec = fig2_cluster();
+        spec.set_uniform_links(LinkSpec {
+            bandwidth_bps: Some(10_000_000),
+            latency: Duration::from_millis(100),
+        });
+        let l = spec.link_between("E1", "S1");
+        assert_eq!(l.bandwidth_bps, Some(10_000_000));
+        assert_eq!(l.latency, Duration::from_millis(100));
+    }
+}

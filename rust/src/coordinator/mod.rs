@@ -1,0 +1,915 @@
+//! The leader/coordinator: turns an execution plan into a running
+//! deployment — channels, emulated links, queue topics, and one worker
+//! thread per stage instance — then drives it to completion and collects
+//! the report. Also implements the paper's *dynamic update* operations:
+//! replacing a FlowUnit's logic and adding a geographical location while
+//! the rest of the deployment keeps running (§III "Dynamic updates").
+
+use crate::channels::{Inbox, Msg, OutPort, Target};
+use crate::config::ClusterSpec;
+use crate::error::{Error, Result};
+use crate::graph::{LogicalGraph, OpKind};
+use crate::metrics::{Metrics, MetricsRegistry};
+use crate::netsim::Link;
+use crate::placement::{ancestor_at_layer, plan as make_plan, ExecPlan, PlannerKind};
+use crate::queue::{Broker, QueueBroker, Topic};
+use crate::runtime::{
+    exec::{
+        Collector, FilterExec, FlatMapExec, FoldExec, KeyByExec, MapExec, SinkExec, WindowExec,
+        XlaExec,
+    },
+    run_instance, InputKind, InstanceRuntime, OpExec, SourceRuntime,
+};
+use crate::topology::LocationId;
+use crate::value::Value;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Job-level configuration.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Deployment strategy.
+    pub planner: PlannerKind,
+    /// Enabled locations (empty ⇒ all locations of the root zone).
+    pub locations: Vec<LocationId>,
+    /// Events per batch on the hot path.
+    pub batch_size: usize,
+    /// Bound (in batches) of instance inboxes.
+    pub channel_capacity: usize,
+    /// Route FlowUnit-boundary edges through the queue substrate
+    /// (required for dynamic updates; FlowUnits planner only).
+    pub decouple_units: bool,
+    /// Directory for durable queue segments (None ⇒ in-memory queues).
+    pub queue_dir: Option<std::path::PathBuf>,
+    /// Queue consumer poll timeout.
+    pub poll_timeout: Duration,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            planner: PlannerKind::FlowUnits,
+            locations: Vec::new(),
+            batch_size: 512,
+            channel_capacity: 64,
+            decouple_units: false,
+            queue_dir: None,
+            poll_timeout: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Final report of a completed job.
+#[derive(Debug)]
+pub struct JobReport {
+    /// Wall-clock execution time (sources started → all sinks flushed).
+    pub wall_time: Duration,
+    /// Events produced by sources.
+    pub events_in: u64,
+    /// Events delivered to sinks.
+    pub events_out: u64,
+    /// Values gathered by `Collect` sinks.
+    pub collected: Vec<Value>,
+    /// Bytes that traversed emulated links.
+    pub net_bytes: u64,
+    /// Events that crossed a zone boundary.
+    pub zone_crossings: u64,
+    /// Plan summary (stages → per-zone instance counts).
+    pub plan_description: String,
+    /// Full metrics registry snapshot.
+    pub metrics: Metrics,
+}
+
+impl JobReport {
+    /// Renders the report.
+    pub fn render(&self) -> String {
+        format!(
+            "{}\n{}",
+            self.plan_description,
+            self.metrics.render(self.wall_time)
+        )
+    }
+}
+
+/// Coordinator: plans and launches jobs on a cluster.
+pub struct Coordinator {
+    /// Cluster description.
+    pub cluster: ClusterSpec,
+    /// Job configuration.
+    pub config: JobConfig,
+}
+
+impl Coordinator {
+    /// Creates a coordinator.
+    pub fn new(cluster: ClusterSpec, config: JobConfig) -> Self {
+        Coordinator { cluster, config }
+    }
+
+    /// Plans, deploys, runs to completion, and reports.
+    pub fn run(&self, graph: &LogicalGraph) -> Result<JobReport> {
+        let dep = self.deploy(graph)?;
+        dep.wait()
+    }
+
+    /// Plans and launches a deployment, returning a handle that supports
+    /// dynamic updates before [`Deployment::wait`].
+    pub fn deploy(&self, graph: &LogicalGraph) -> Result<Deployment> {
+        let decouple = self.config.decouple_units && self.config.planner == PlannerKind::FlowUnits;
+        let plan = make_plan(
+            graph,
+            &self.cluster,
+            self.config.planner,
+            &self.config.locations,
+            decouple,
+        )?;
+        Deployment::launch(
+            graph.clone(),
+            self.cluster.clone(),
+            self.config.clone(),
+            plan,
+        )
+    }
+}
+
+/// Key of a decoupling topic: (downstream stage, downstream zone).
+type TopicKey = (usize, String);
+
+struct TopicRuntime {
+    topic: Arc<Topic>,
+    /// Ingest channel per partition (producers send frames here, through
+    /// the emulated link; an ingest thread appends them to the log).
+    ingest: Vec<SyncSender<Msg>>,
+    /// Number of producers expected to EOS each partition; dynamic
+    /// `add_location` increments this while the deployment runs.
+    expected_producers: Arc<AtomicUsize>,
+}
+
+/// A running deployment.
+pub struct Deployment {
+    graph: LogicalGraph,
+    cluster: ClusterSpec,
+    config: JobConfig,
+    plan: ExecPlan,
+    metrics: Metrics,
+    collector: Arc<Collector>,
+    links: HashMap<String, Arc<Link<Msg>>>,
+    broker: Option<Broker>,
+    topics: HashMap<TopicKey, TopicRuntime>,
+    /// Worker threads grouped by FlowUnit index.
+    unit_threads: BTreeMap<usize, Vec<std::thread::JoinHandle<u64>>>,
+    ingest_threads: Vec<std::thread::JoinHandle<()>>,
+    source_stop: Arc<AtomicBool>,
+    unit_stops: BTreeMap<usize, Arc<AtomicBool>>,
+    started: Instant,
+}
+
+impl Deployment {
+    fn launch(
+        graph: LogicalGraph,
+        cluster: ClusterSpec,
+        config: JobConfig,
+        plan: ExecPlan,
+    ) -> Result<Deployment> {
+        let metrics = MetricsRegistry::new();
+        let broker = if plan.edges.iter().any(|e| e.decoupled) {
+            Some(match &config.queue_dir {
+                Some(d) => QueueBroker::durable(d, Some(metrics.clone()))?,
+                None => QueueBroker::in_memory(Some(metrics.clone())),
+            })
+        } else {
+            None
+        };
+        let mut dep = Deployment {
+            graph,
+            cluster,
+            config,
+            plan,
+            metrics: metrics.clone(),
+            collector: Arc::new(Collector::default()),
+            links: HashMap::new(),
+            broker,
+            topics: HashMap::new(),
+            unit_threads: BTreeMap::new(),
+            ingest_threads: Vec::new(),
+            source_stop: Arc::new(AtomicBool::new(false)),
+            unit_stops: BTreeMap::new(),
+            started: Instant::now(),
+        };
+        dep.wire_and_spawn()?;
+        Ok(dep)
+    }
+
+    /// Returns (creating if needed) the shared uplink for the route
+    /// `za → zb` plus the route latency to stamp on each frame.
+    fn link_for_route(&mut self, za: &str, zb: &str) -> Result<(Arc<Link<Msg>>, Duration)> {
+        if za == zb {
+            let name = format!("intra-{za}");
+            let link = self
+                .links
+                .entry(name.clone())
+                .or_insert_with(|| Link::new(&name, None, false, Some(self.metrics.clone())))
+                .clone();
+            return Ok((link, Duration::ZERO));
+        }
+        let spec = crate::placement::route_spec(&self.cluster, za, zb)?;
+        // links are keyed by the route's egress hop so that all routes
+        // leaving a zone contend for the same uplink
+        let first_hop = first_hop_of_route(&self.cluster, za, zb)?;
+        let name = format!("up-{}->{}", first_hop.0, first_hop.1);
+        let needs_delay = !spec.latency.is_zero();
+        let metrics = self.metrics.clone();
+        let link = self
+            .links
+            .entry(name.clone())
+            .or_insert_with(|| Link::new(&name, spec.bandwidth_bps, needs_delay, Some(metrics)))
+            .clone();
+        Ok((link, spec.latency))
+    }
+
+    fn wire_and_spawn(&mut self) -> Result<()> {
+        let all = self.plan.instances.clone();
+        self.spawn_set(&all, true)
+    }
+
+    /// Wires and spawns a *set* of planned instances. At launch the set is
+    /// the whole plan; dynamic updates pass subsets (a FlowUnit's instances
+    /// for `update_unit`, a new zone's instances for `add_location`).
+    ///
+    /// Direct (non-queue) edges may only connect instances *inside* the
+    /// set — under the FlowUnits planner intra-unit edges are same-zone, so
+    /// any complete unit-zone subset satisfies this; violations are
+    /// reported as errors rather than producing dangling channels.
+    ///
+    /// `register_producers`: count the set's producers toward the
+    /// decoupling topics' expected-EOS totals. True for launch and
+    /// `add_location` (genuinely new producers); false for `update_unit`
+    /// (replacement instances inherit their predecessors' registration,
+    /// which never signalled EOS).
+    fn spawn_set(
+        &mut self,
+        set: &[crate::placement::InstancePlan],
+        register_producers: bool,
+    ) -> Result<()> {
+        let plan = self.plan.clone();
+        let topo = self.cluster.topology.clone();
+        let in_set: std::collections::BTreeSet<usize> = set.iter().map(|i| i.id).collect();
+
+        // --- pass 1: inboxes for direct-edge consumers in the set --------
+        let mut inst_tx: HashMap<usize, SyncSender<Msg>> = HashMap::new();
+        let mut inst_rx: HashMap<usize, Receiver<Msg>> = HashMap::new();
+        for edge in &plan.edges {
+            if edge.decoupled {
+                continue;
+            }
+            for inst in plan.instances_of(edge.to_stage) {
+                if !in_set.contains(&inst) {
+                    continue;
+                }
+                let (tx, rx) = sync_channel(self.config.channel_capacity);
+                inst_tx.insert(inst, tx);
+                inst_rx.insert(inst, rx);
+            }
+        }
+
+        // --- pass 2: topics (+ ingest threads) for decoupled edges -------
+        // created once; subset respawns reuse the existing topics
+        for edge in &plan.edges {
+            if !edge.decoupled {
+                continue;
+            }
+            let broker = self.broker.as_ref().expect("broker exists when decoupled");
+            let mut by_zone: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+            for inst in plan.instances_of(edge.to_stage) {
+                by_zone
+                    .entry(plan.instances[inst].zone.clone())
+                    .or_default()
+                    .push(inst);
+            }
+            for (zone, insts) in by_zone {
+                if self.topics.contains_key(&(edge.to_stage, zone.clone())) {
+                    continue;
+                }
+                let name = format!("fu-s{}-{zone}", edge.to_stage);
+                let topic = broker.topic(&name, insts.len())?;
+                let expected = Arc::new(AtomicUsize::new(0));
+                let mut ingest = Vec::new();
+                for p in 0..insts.len() {
+                    let (tx, rx) = sync_channel::<Msg>(self.config.channel_capacity);
+                    ingest.push(tx);
+                    let topic2 = topic.clone();
+                    let expected2 = expected.clone();
+                    let h = std::thread::Builder::new()
+                        .name(format!("ingest-{name}-{p}"))
+                        .spawn(move || ingest_loop(topic2, p, rx, expected2))
+                        .expect("spawn ingest thread");
+                    self.ingest_threads.push(h);
+                }
+                self.topics.insert(
+                    (edge.to_stage, zone),
+                    TopicRuntime {
+                        topic,
+                        ingest,
+                        expected_producers: expected,
+                    },
+                );
+            }
+        }
+
+        // --- pass 3: validation + producer accounting ---------------------
+        let mut producer_count: HashMap<usize, usize> = HashMap::new();
+        for edge in &plan.edges {
+            if edge.decoupled {
+                if register_producers {
+                    for from in plan.instances_of(edge.from_stage) {
+                        if !in_set.contains(&from) {
+                            continue;
+                        }
+                        let fz = &plan.instances[from].zone;
+                        let tz = ancestor_at_layer(&topo, fz, &plan.stages[edge.to_stage].layer)
+                            .ok_or_else(|| {
+                                Error::Placement(format!(
+                                    "no ancestor zone for {fz} on decoupled edge"
+                                ))
+                            })?;
+                        if let Some(tr) = self.topics.get(&(edge.to_stage, tz.clone())) {
+                            tr.topic.register_producer();
+                            tr.expected_producers.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
+                continue;
+            }
+            for from in plan.instances_of(edge.from_stage) {
+                for t in plan.allowed_targets(&topo, from, edge) {
+                    match (in_set.contains(&from), in_set.contains(&t)) {
+                        (true, true) => *producer_count.entry(t).or_default() += 1,
+                        (false, false) => {}
+                        _ => {
+                            return Err(Error::Runtime(format!(
+                                "direct edge {}->{} crosses the respawn boundary \
+                                 (instances {from} -> {t}); the affected FlowUnit \
+                                 boundary must be decoupled",
+                                edge.from_stage, edge.to_stage
+                            )))
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- pass 4: spawn instance threads -------------------------------
+        for inst in set.to_vec() {
+            let stage = plan.stages[inst.stage].clone();
+            // input
+            let incoming_decoupled = plan
+                .edges
+                .iter()
+                .find(|e| e.to_stage == inst.stage)
+                .map(|e| e.decoupled)
+                .unwrap_or(false);
+            let input = if stage.is_source() {
+                let OpKind::Source(kind) = &self.graph.ops[stage.ops[0]].kind else {
+                    return Err(Error::Runtime("stage 0 op is not a source".into()));
+                };
+                InputKind::Source(SourceRuntime {
+                    kind: kind.clone(),
+                    share: inst.source_share.unwrap_or((0, 1)),
+                    batch_size: self.config.batch_size,
+                    stop: self.source_stop.clone(),
+                })
+            } else if incoming_decoupled {
+                let key = (inst.stage, inst.zone.clone());
+                let tr = self
+                    .topics
+                    .get(&key)
+                    .ok_or_else(|| Error::Runtime(format!("no topic for {key:?}")))?;
+                // partition index = position among the zone's instances
+                let peers: Vec<usize> = plan
+                    .instances
+                    .iter()
+                    .filter(|i| i.stage == inst.stage && i.zone == inst.zone)
+                    .map(|i| i.id)
+                    .collect();
+                let partition = peers.iter().position(|&p| p == inst.id).unwrap();
+                let unit_stop = self
+                    .unit_stops
+                    .entry(stage.unit_index)
+                    .or_insert_with(|| Arc::new(AtomicBool::new(false)))
+                    .clone();
+                InputKind::Queue {
+                    topic: tr.topic.clone(),
+                    partition,
+                    group: format!("unit{}-{}", stage.unit_index, inst.zone),
+                    poll_timeout: self.config.poll_timeout,
+                    stop: unit_stop,
+                }
+            } else {
+                let rx = inst_rx.remove(&inst.id).ok_or_else(|| {
+                    Error::Runtime(format!("instance {} missing inbox", inst.id))
+                })?;
+                InputKind::Inbox(Inbox::new(rx, *producer_count.get(&inst.id).unwrap_or(&0)))
+            };
+
+            // output
+            let out_edge = plan.edges.iter().find(|e| e.from_stage == inst.stage);
+            let output = match out_edge {
+                None => None,
+                Some(edge) if edge.decoupled => {
+                    let tz = ancestor_at_layer(
+                        &topo,
+                        &inst.zone,
+                        &plan.stages[edge.to_stage].layer,
+                    )
+                    .ok_or_else(|| Error::Placement("no ancestor for decoupled edge".into()))?;
+                    let (link, latency) = self.link_for_route(&inst.zone, &tz)?;
+                    let tr = &self.topics[&(edge.to_stage, tz.clone())];
+                    let crossing = inst.zone != tz;
+                    let targets = tr
+                        .ingest
+                        .iter()
+                        .map(|tx| Target {
+                            tx: tx.clone(),
+                            link: Some(link.clone()),
+                            latency,
+                            crossing,
+                        })
+                        .collect();
+                    Some(OutPort::new(
+                        targets,
+                        edge.routing,
+                        self.config.batch_size,
+                        Some(self.metrics.clone()),
+                    ))
+                }
+                Some(edge) => {
+                    let mut targets = Vec::new();
+                    for t in plan.allowed_targets(&topo, inst.id, edge) {
+                        let tgt = &plan.instances[t];
+                        let (link, latency) = if tgt.host == inst.host {
+                            (None, Duration::ZERO)
+                        } else {
+                            let (l, lat) = self.link_for_route(&inst.zone, &tgt.zone)?;
+                            (Some(l), lat)
+                        };
+                        targets.push(Target {
+                            tx: inst_tx[&t].clone(),
+                            link,
+                            latency,
+                            crossing: tgt.zone != inst.zone,
+                        });
+                    }
+                    Some(OutPort::new(
+                        targets,
+                        edge.routing,
+                        self.config.batch_size,
+                        Some(self.metrics.clone()),
+                    ))
+                }
+            };
+
+            // fused operator chain (source op handled by InputKind)
+            let ops = self.build_ops(&stage)?;
+            let metrics = self.metrics.clone();
+            let rt = InstanceRuntime {
+                id: inst.id,
+                ops,
+                input,
+                output,
+                metrics,
+            };
+            let h = std::thread::Builder::new()
+                .name(format!("inst-{}-s{}-{}", inst.id, inst.stage, inst.host))
+                .spawn(move || run_instance(rt))
+                .expect("spawn instance thread");
+            self.unit_threads
+                .entry(stage.unit_index)
+                .or_default()
+                .push(h);
+        }
+        drop(inst_tx); // senders live only inside targets now
+        Ok(())
+    }
+
+    /// Builds the fused executor chain for a stage from the job graph.
+    fn build_ops(&self, stage: &crate::graph::Stage) -> Result<Vec<Box<dyn OpExec>>> {
+        let mut ops: Vec<Box<dyn OpExec>> = Vec::new();
+        for &oid in &stage.ops {
+            match &self.graph.ops[oid].kind {
+                OpKind::Source(_) => {} // driven by InputKind::Source
+                OpKind::Map(f) => ops.push(Box::new(MapExec(f.clone()))),
+                OpKind::Filter(f) => ops.push(Box::new(FilterExec(f.clone()))),
+                OpKind::FlatMap(f) => ops.push(Box::new(FlatMapExec(f.clone()))),
+                OpKind::KeyBy(f) => ops.push(Box::new(KeyByExec(f.clone()))),
+                OpKind::Fold { init, step } => {
+                    ops.push(Box::new(FoldExec::new(init.clone(), step.clone())))
+                }
+                OpKind::Window { size, slide, agg } => {
+                    ops.push(Box::new(WindowExec::new(*size, *slide, agg.clone())))
+                }
+                OpKind::XlaMap {
+                    artifact,
+                    batch,
+                    in_dim,
+                } => {
+                    let engine = crate::runtime::xla_exec::XlaEngine::global()?;
+                    let art = engine.load(artifact)?;
+                    ops.push(Box::new(XlaExec::new(
+                        art,
+                        *batch,
+                        *in_dim,
+                        self.metrics.clone(),
+                    )));
+                }
+                OpKind::Sink(kind) => ops.push(Box::new(SinkExec::new(
+                    *kind,
+                    self.collector.clone(),
+                    self.metrics.clone(),
+                ))),
+            }
+        }
+        Ok(ops)
+    }
+
+    /// Signals all sources to stop after their current batch (used with
+    /// unbounded/rate-limited sources before [`wait`](Self::wait)).
+    pub fn stop_sources(&self) {
+        self.source_stop.store(true, Ordering::SeqCst);
+    }
+
+    /// The execution plan.
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    /// The live metrics registry.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.clone()
+    }
+
+    /// **Dynamic update**: replaces the logic of FlowUnit `unit` with the
+    /// corresponding operators of `new_graph`, without stopping any other
+    /// unit. Requirements (checked): the unit's input boundary is
+    /// decoupled through the queue substrate, and `new_graph` produces the
+    /// same stage partitioning (so plans stay aligned).
+    ///
+    /// Consumers of the unit commit their queue offsets, drain held state
+    /// downstream, and exit; replacement instances resume from the
+    /// committed offsets with the new logic. Producers upstream keep
+    /// appending throughout — zero disruption outside the unit.
+    pub fn update_unit(&mut self, unit: usize, new_graph: LogicalGraph) -> Result<()> {
+        let old_stages = self.graph.stages();
+        let new_stages = new_graph.stages();
+        if old_stages.len() != new_stages.len() {
+            return Err(Error::Runtime(format!(
+                "update_unit: stage count changed ({} -> {})",
+                old_stages.len(),
+                new_stages.len()
+            )));
+        }
+        for (a, b) in old_stages.iter().zip(&new_stages) {
+            if a.layer != b.layer || a.unit_index != b.unit_index || a.ops != b.ops {
+                return Err(Error::Runtime(format!(
+                    "update_unit: stage {} shape changed; updates must preserve the graph structure",
+                    a.index
+                )));
+            }
+        }
+        let first_stage = self
+            .plan
+            .stages
+            .iter()
+            .find(|s| s.unit_index == unit)
+            .ok_or_else(|| Error::Runtime(format!("unknown unit {unit}")))?
+            .index;
+        let feeds_unit = self
+            .plan
+            .edges
+            .iter()
+            .find(|e| e.to_stage == first_stage)
+            .ok_or_else(|| Error::Runtime("cannot update the source unit".into()))?;
+        if !feeds_unit.decoupled {
+            return Err(Error::Runtime(
+                "update_unit requires the unit's input boundary to be decoupled (JobConfig::decouple_units)"
+                    .into(),
+            ));
+        }
+
+        // 1. stop the unit's consumers; they commit, drain, and exit
+        let stop = self
+            .unit_stops
+            .get(&unit)
+            .ok_or_else(|| Error::Runtime("unit has no queue consumers".into()))?
+            .clone();
+        stop.store(true, Ordering::SeqCst);
+        let handles = self.unit_threads.remove(&unit).unwrap_or_default();
+        for h in handles {
+            let _ = h.join();
+        }
+
+        // 2. swap the graph (same shape, new closures/artifacts)
+        self.graph = new_graph;
+
+        // 3. relaunch the unit's instances with fresh stop flag
+        let fresh = Arc::new(AtomicBool::new(false));
+        self.unit_stops.insert(unit, fresh);
+        let insts: Vec<_> = self
+            .plan
+            .instances
+            .iter()
+            .filter(|i| self.plan.stages[i.stage].unit_index == unit)
+            .cloned()
+            .collect();
+        self.spawn_set(&insts, false)?;
+        Ok(())
+    }
+
+    /// **Dynamic update**: enables a new location while the job runs.
+    /// Supported case (the paper's E5 example): the new location adds
+    /// instances only to the *source unit*, whose output boundary is
+    /// decoupled, and the downstream zones it feeds are already active.
+    pub fn add_location(&mut self, loc: &str) -> Result<()> {
+        if self.plan.locations.iter().any(|l| l == loc) {
+            return Err(Error::Runtime(format!("location '{loc}' already enabled")));
+        }
+        let mut locations = self.plan.locations.clone();
+        locations.push(loc.to_string());
+        let decouple = self.plan.edges.iter().any(|e| e.decoupled);
+        let new_plan = make_plan(
+            &self.graph,
+            &self.cluster,
+            self.plan.planner,
+            &locations,
+            decouple,
+        )?;
+        // diff: instances present in new plan but not in the old one
+        let old_keys: std::collections::BTreeSet<(usize, String, usize)> = self
+            .plan
+            .instances
+            .iter()
+            .map(|i| (i.stage, i.host.clone(), i.core))
+            .collect();
+        let added: Vec<_> = new_plan
+            .instances
+            .iter()
+            .filter(|i| !old_keys.contains(&(i.stage, i.host.clone(), i.core)))
+            .cloned()
+            .collect();
+        if added.is_empty() {
+            return Err(Error::Runtime(format!(
+                "location '{loc}' adds no new instances"
+            )));
+        }
+        for a in &added {
+            let unit = new_plan.stages[a.stage].unit_index;
+            if unit != 0 {
+                return Err(Error::Runtime(format!(
+                    "add_location currently supports new instances in the source unit only \
+                     (instance on stage {} is in unit {unit}); zone '{}' must already be active",
+                    a.stage, a.zone
+                )));
+            }
+            let out_edge = new_plan
+                .edges
+                .iter()
+                .find(|e| e.from_stage == a.stage && !new_plan.stages[e.to_stage].ops.is_empty());
+            if let Some(e) = out_edge {
+                if e.unit_boundary && !e.decoupled {
+                    return Err(Error::Runtime(
+                        "add_location requires decoupled unit boundaries".into(),
+                    ));
+                }
+                if e.decoupled {
+                    // the new producers must feed topics that already exist
+                    // (i.e. their downstream zone is already active)
+                    let tz = ancestor_at_layer(
+                        &self.cluster.topology,
+                        &a.zone,
+                        &new_plan.stages[e.to_stage].layer,
+                    )
+                    .ok_or_else(|| Error::Runtime("new zone has no ancestor".into()))?;
+                    if !self.topics.contains_key(&(e.to_stage, tz.clone())) {
+                        return Err(Error::Runtime(format!(
+                            "downstream zone '{tz}' is not active; adding whole new branches is unsupported"
+                        )));
+                    }
+                }
+            }
+        }
+        // adopt the new plan's locations and instance list (ids realign:
+        // we keep the old plan and append the new instances with fresh ids)
+        let mut adopted = Vec::new();
+        for mut a in added {
+            a.id = self.plan.instances.len();
+            self.plan.instances.push(a.clone());
+            adopted.push(a);
+        }
+        self.plan.locations = locations;
+        self.spawn_set(&adopted, true)?;
+        Ok(())
+    }
+
+    /// Waits for the job to finish, tears down links, and reports.
+    ///
+    /// Fail-fast semantics: if any instance thread panicked (a user
+    /// closure fault), the first failed join surfaces as
+    /// `Error::Runtime("instance thread panicked")` immediately;
+    /// downstream threads of the failed unit are abandoned to process
+    /// teardown rather than joined (they may be blocked on an EOS that
+    /// will never arrive).
+    pub fn wait(mut self) -> Result<JobReport> {
+        for (_, handles) in std::mem::take(&mut self.unit_threads) {
+            for h in handles {
+                h.join().map_err(|_| Error::Runtime("instance thread panicked".into()))?;
+            }
+        }
+        for h in std::mem::take(&mut self.ingest_threads) {
+            let _ = h.join();
+        }
+        for link in self.links.values() {
+            link.shutdown();
+        }
+        let wall_time = self.started.elapsed();
+        let m = &self.metrics;
+        Ok(JobReport {
+            wall_time,
+            events_in: m.events_in.load(Ordering::Relaxed),
+            events_out: m.events_out.load(Ordering::Relaxed),
+            collected: std::mem::take(&mut *self.collector.values.lock().unwrap()),
+            net_bytes: m.net_bytes.load(Ordering::Relaxed),
+            zone_crossings: m.zone_crossings.load(Ordering::Relaxed),
+            plan_description: self.plan.describe(&self.graph),
+            metrics: self.metrics.clone(),
+        })
+    }
+}
+
+/// Appends frames arriving from producers to a queue partition; closes the
+/// partition when every expected producer has signalled EOS. The expected
+/// count is shared (and may grow while the job runs — `add_location`
+/// registers new producers before they start).
+fn ingest_loop(topic: Arc<Topic>, partition: usize, rx: Receiver<Msg>, expected: Arc<AtomicUsize>) {
+    let part = topic.partition(partition);
+    let mut eos = 0usize;
+    loop {
+        match rx.recv() {
+            Ok(Msg::Frame(bytes)) => {
+                let _ = part.append(&bytes);
+            }
+            Ok(Msg::Batch(batch)) => {
+                let _ = part.append(&crate::value::encode_batch(&batch));
+            }
+            Ok(Msg::Eos) => {
+                eos += 1;
+                if eos >= expected.load(Ordering::SeqCst) {
+                    part.close();
+                    break;
+                }
+            }
+            Err(_) => {
+                // all senders gone (teardown without EOS): close so
+                // consumers do not hang
+                part.close();
+                break;
+            }
+        }
+    }
+}
+
+/// First hop of the tree route from `za` toward `zb` (used to key shared
+/// uplinks).
+fn first_hop_of_route(cluster: &ClusterSpec, za: &str, zb: &str) -> Result<(String, String)> {
+    let topo = &cluster.topology;
+    // ascend from za; if zb is not on that path, the first hop is still
+    // za -> parent(za) (all inter-zone routes leave through the uplink),
+    // except when za is an ancestor of zb — then descend toward zb.
+    if ancestor_at_layer(topo, zb, &topo.zones[za].layer).as_deref() == Some(za) {
+        // za is an ancestor of zb: first hop descends toward zb
+        let mut cur = zb.to_string();
+        loop {
+            let parent = topo.zones[&cur].parent.clone().ok_or_else(|| {
+                Error::Topology(format!("no path from {za} down to {zb}"))
+            })?;
+            if parent == za {
+                return Ok((za.to_string(), cur));
+            }
+            cur = parent;
+        }
+    }
+    let parent = topo.zones[za]
+        .parent
+        .clone()
+        .ok_or_else(|| Error::Topology(format!("root zone {za} has no uplink")))?;
+    Ok((za.to_string(), parent))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{eval_cluster, fig2_cluster};
+    use crate::graph::{SinkKind, SourceKind};
+    use std::time::Duration;
+
+    fn tiny_graph(layers: (&str, &str)) -> LogicalGraph {
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 100,
+                gen: Arc::new(|_, i| Value::I64(i as i64)),
+                rate: None,
+            }),
+            layers.0.into(),
+            None,
+            "src",
+        );
+        g.push(
+            OpKind::Sink(SinkKind::Count),
+            layers.1.into(),
+            None,
+            "sink",
+        );
+        g
+    }
+
+    #[test]
+    fn first_hop_keys_shared_uplinks() {
+        let cluster = fig2_cluster();
+        // upward routes leave through the child's uplink
+        assert_eq!(
+            first_hop_of_route(&cluster, "E1", "S1").unwrap(),
+            ("E1".into(), "S1".into())
+        );
+        assert_eq!(
+            first_hop_of_route(&cluster, "E1", "C1").unwrap(),
+            ("E1".into(), "S1".into()),
+            "E1->C1 and E1->S1 share the E1 uplink"
+        );
+        // sibling routes also leave through the uplink
+        assert_eq!(
+            first_hop_of_route(&cluster, "E1", "E4").unwrap(),
+            ("E1".into(), "S1".into())
+        );
+        // downward route from an ancestor descends toward the target
+        assert_eq!(
+            first_hop_of_route(&cluster, "C1", "E1").unwrap(),
+            ("C1".into(), "S1".into())
+        );
+    }
+
+    #[test]
+    fn link_cache_reuses_uplinks_across_routes() {
+        let cluster = fig2_cluster();
+        let coord = Coordinator::new(cluster, JobConfig::default());
+        let mut dep = coord.deploy(&tiny_graph(("edge", "cloud"))).unwrap();
+        let (a, _) = dep.link_for_route("E1", "S1").unwrap();
+        let (b, _) = dep.link_for_route("E1", "C1").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same egress hop -> same Link");
+        let (c, _) = dep.link_for_route("E2", "C1").unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "different egress hop -> different Link");
+        let report = dep.wait().unwrap();
+        assert_eq!(report.events_out, 100);
+    }
+
+    #[test]
+    fn route_latencies_accumulate_per_hop() {
+        let mut cluster = fig2_cluster();
+        cluster.set_uniform_links(crate::netsim::LinkSpec {
+            bandwidth_bps: None,
+            latency: Duration::from_millis(7),
+        });
+        let coord = Coordinator::new(cluster, JobConfig::default());
+        let mut dep = coord.deploy(&tiny_graph(("edge", "cloud"))).unwrap();
+        let (_, lat1) = dep.link_for_route("E1", "S1").unwrap();
+        let (_, lat2) = dep.link_for_route("E1", "C1").unwrap();
+        assert_eq!(lat1, Duration::from_millis(7));
+        assert_eq!(lat2, Duration::from_millis(14));
+        dep.stop_sources();
+        dep.wait().unwrap();
+    }
+
+    #[test]
+    fn run_reports_plan_and_counts() {
+        let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+        let report = coord.run(&tiny_graph(("edge", "cloud"))).unwrap();
+        assert_eq!(report.events_in, 100);
+        assert_eq!(report.events_out, 100);
+        assert!(report.plan_description.contains("planner: FlowUnits"));
+    }
+
+    #[test]
+    fn update_unit_unknown_unit_is_error() {
+        let coord = Coordinator::new(
+            eval_cluster(None, Duration::ZERO),
+            JobConfig {
+                decouple_units: true,
+                ..Default::default()
+            },
+        );
+        let g = tiny_graph(("edge", "cloud"));
+        let mut dep = coord.deploy(&g).unwrap();
+        assert!(dep.update_unit(99, g.clone()).is_err());
+        dep.wait().unwrap();
+    }
+}

@@ -1,0 +1,62 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified result type for the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors raised by the FlowUnits engine.
+#[derive(Debug)]
+pub enum Error {
+    /// Cluster / job configuration file could not be parsed.
+    Config { line: usize, msg: String },
+    /// Constraint expression could not be parsed.
+    Constraint(String),
+    /// The logical graph is invalid (e.g. layer ordering violates the zone tree).
+    Graph(String),
+    /// The planner could not produce a feasible deployment.
+    Placement(String),
+    /// Topology is inconsistent (unknown zone/layer/location, cycles, ...).
+    Topology(String),
+    /// Queue substrate failure (I/O, corrupt segment, unknown topic).
+    Queue(String),
+    /// Value codec failure (truncated frame, bad tag, ...).
+    Codec(String),
+    /// Runtime execution failure.
+    Runtime(String),
+    /// XLA / PJRT failure (artifact missing, compile or execute error).
+    Xla(String),
+    /// Underlying I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config { line, msg } => write!(f, "config error at line {line}: {msg}"),
+            Error::Constraint(m) => write!(f, "constraint parse error: {m}"),
+            Error::Graph(m) => write!(f, "logical graph error: {m}"),
+            Error::Placement(m) => write!(f, "placement error: {m}"),
+            Error::Topology(m) => write!(f, "topology error: {m}"),
+            Error::Queue(m) => write!(f, "queue error: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,590 @@
+//! Logical dataflow graph: operators, layer/constraint annotations, and the
+//! FlowUnit/stage partitioning algorithm (paper §III).
+//!
+//! A job is a linear chain of operators (the paper's evaluation pipeline
+//! and running example are linear; fan-in arises from repartitioning, not
+//! from graph branches). Each operator carries:
+//!
+//! * a **layer** annotation (`to_layer`) — contiguous same-layer operators
+//!   form a **FlowUnit**;
+//! * an optional **constraint** (`add_constraint`) — a conjunction of
+//!   capability predicates restricting which hosts may run it.
+//!
+//! Within a FlowUnit, operators are further grouped into **stages**:
+//! maximal runs of operators that share a layer *and* an effective
+//! constraint and contain no repartitioning point. Stages are the unit of
+//! operator fusion — one stage instance is one worker thread running the
+//! fused operator chain.
+
+use crate::error::{Error, Result};
+use crate::topology::{ConstraintExpr, LayerId};
+use crate::value::Value;
+use std::sync::Arc;
+
+/// Identifier of a logical operator (index into [`LogicalGraph::ops`]).
+pub type OpId = usize;
+
+/// Unary transform.
+pub type MapFn = Arc<dyn Fn(Value) -> Value + Send + Sync>;
+/// Predicate.
+pub type FilterFn = Arc<dyn Fn(&Value) -> bool + Send + Sync>;
+/// One-to-many transform.
+pub type FlatMapFn = Arc<dyn Fn(Value) -> Vec<Value> + Send + Sync>;
+/// Key extractor.
+pub type KeyFn = Arc<dyn Fn(&Value) -> Value + Send + Sync>;
+/// Fold step: accumulator ← step(accumulator, element payload).
+pub type FoldFn = Arc<dyn Fn(&mut Value, Value) + Send + Sync>;
+/// Synthetic event generator: `(instance_index, event_index) -> event`.
+pub type GenFn = Arc<dyn Fn(u64, u64) -> Value + Send + Sync>;
+/// Custom window aggregate over the buffered payloads.
+pub type WindowFn = Arc<dyn Fn(&[Value]) -> Value + Send + Sync>;
+
+/// Built-in window aggregations (applied to window payloads; keyed windows
+/// emit `Pair(key, aggregate)`).
+#[derive(Clone)]
+pub enum WindowAgg {
+    /// Arithmetic mean of numeric payloads.
+    Mean,
+    /// Sum of numeric payloads.
+    Sum,
+    /// Window length.
+    Count,
+    /// Maximum numeric payload.
+    Max,
+    /// Minimum numeric payload.
+    Min,
+    /// The raw window as a `Value::List`.
+    Collect,
+    /// Feature vector `[mean, std, min, max, last]` as `Value::F32s` —
+    /// the shape consumed by the AOT-compiled anomaly model.
+    FeatureStats,
+    /// Arbitrary aggregate.
+    Custom(WindowFn),
+}
+
+impl std::fmt::Debug for WindowAgg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            WindowAgg::Mean => "Mean",
+            WindowAgg::Sum => "Sum",
+            WindowAgg::Count => "Count",
+            WindowAgg::Max => "Max",
+            WindowAgg::Min => "Min",
+            WindowAgg::Collect => "Collect",
+            WindowAgg::FeatureStats => "FeatureStats",
+            WindowAgg::Custom(_) => "Custom(..)",
+        };
+        write!(f, "{name}")
+    }
+}
+
+/// Source definitions.
+#[derive(Clone)]
+pub enum SourceKind {
+    /// Synthetic generator producing `total` events split evenly across
+    /// source instances, optionally rate-limited (events/s per instance).
+    Synthetic {
+        /// Total events across all instances.
+        total: u64,
+        /// Generator closure.
+        gen: GenFn,
+        /// Optional per-instance rate limit (events/second).
+        rate: Option<f64>,
+    },
+    /// A materialised vector, split across instances by round robin.
+    Vector(Arc<Vec<Value>>),
+    /// Lines of a text file as `Value::Str`, split across instances by
+    /// line index modulo instance count.
+    FileLines(std::path::PathBuf),
+}
+
+impl std::fmt::Debug for SourceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SourceKind::Synthetic { total, rate, .. } => {
+                write!(f, "Synthetic(total={total}, rate={rate:?})")
+            }
+            SourceKind::Vector(v) => write!(f, "Vector(len={})", v.len()),
+            SourceKind::FileLines(p) => write!(f, "FileLines({})", p.display()),
+        }
+    }
+}
+
+/// Sink definitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SinkKind {
+    /// Collect events into the job report.
+    Collect,
+    /// Count events only.
+    Count,
+    /// Drop events (pure benchmark sink).
+    Discard,
+}
+
+/// Logical operator kinds.
+#[derive(Clone)]
+pub enum OpKind {
+    /// Stream source (first operator only).
+    Source(SourceKind),
+    /// Unary transform.
+    Map(MapFn),
+    /// Predicate filter.
+    Filter(FilterFn),
+    /// One-to-many transform.
+    FlatMap(FlatMapFn),
+    /// Key extraction; the outgoing edge is hash-partitioned.
+    KeyBy(KeyFn),
+    /// Keyed fold, emitting `Pair(key, acc)` per key at end-of-stream.
+    Fold {
+        /// Initial accumulator (cloned per key).
+        init: Value,
+        /// Folding step.
+        step: FoldFn,
+    },
+    /// Count-based window over the (keyed) stream.
+    Window {
+        /// Window length in events.
+        size: usize,
+        /// Slide in events (`slide == size` ⇒ tumbling).
+        slide: usize,
+        /// Aggregate emitted per full window.
+        agg: WindowAgg,
+    },
+    /// Batched inference through an AOT-compiled XLA artifact. Input events
+    /// are `F32s` feature rows (or `Pair(key, F32s)`); outputs preserve the
+    /// key and replace the payload with the model's output row.
+    XlaMap {
+        /// Artifact name (resolved under the artifacts directory).
+        artifact: String,
+        /// Inference batch size (rows per PJRT call).
+        batch: usize,
+        /// Input feature dimension.
+        in_dim: usize,
+    },
+    /// Terminal sink (last operator only).
+    Sink(SinkKind),
+}
+
+impl std::fmt::Debug for OpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OpKind::Source(s) => write!(f, "Source({s:?})"),
+            OpKind::Map(_) => write!(f, "Map"),
+            OpKind::Filter(_) => write!(f, "Filter"),
+            OpKind::FlatMap(_) => write!(f, "FlatMap"),
+            OpKind::KeyBy(_) => write!(f, "KeyBy"),
+            OpKind::Fold { .. } => write!(f, "Fold"),
+            OpKind::Window { size, slide, agg } => {
+                write!(f, "Window(size={size}, slide={slide}, agg={agg:?})")
+            }
+            OpKind::XlaMap {
+                artifact, batch, ..
+            } => write!(f, "XlaMap({artifact}, batch={batch})"),
+            OpKind::Sink(s) => write!(f, "Sink({s:?})"),
+        }
+    }
+}
+
+impl OpKind {
+    /// Whether this operator holds keyed/windowed state.
+    pub fn is_stateful(&self) -> bool {
+        matches!(self, OpKind::Fold { .. } | OpKind::Window { .. })
+    }
+}
+
+/// One logical operator with its annotations.
+#[derive(Clone, Debug)]
+pub struct LogicalOp {
+    /// Operator id (chain position).
+    pub id: OpId,
+    /// Kind and user logic.
+    pub kind: OpKind,
+    /// Layer annotation (from `to_layer`).
+    pub layer: LayerId,
+    /// Capability requirement (from `add_constraint`).
+    pub constraint: Option<ConstraintExpr>,
+    /// Human-readable operator name for metrics/reports.
+    pub name: String,
+}
+
+/// The logical job graph: a linear operator chain plus job-wide notes.
+#[derive(Clone, Debug, Default)]
+pub struct LogicalGraph {
+    /// Operators in chain order.
+    pub ops: Vec<LogicalOp>,
+}
+
+impl LogicalGraph {
+    /// Appends an operator, returning its id.
+    pub fn push(
+        &mut self,
+        kind: OpKind,
+        layer: LayerId,
+        constraint: Option<ConstraintExpr>,
+        name: impl Into<String>,
+    ) -> OpId {
+        let id = self.ops.len();
+        self.ops.push(LogicalOp {
+            id,
+            kind,
+            layer,
+            constraint,
+            name: name.into(),
+        });
+        id
+    }
+
+    /// Validates chain shape and layer monotonicity against `layers`
+    /// (periphery→centre order): data may only flow inward along the zone
+    /// tree, matching the paper's collection pattern.
+    pub fn validate(&self, layers: &[LayerId]) -> Result<()> {
+        if self.ops.is_empty() {
+            return Err(Error::Graph("empty graph".into()));
+        }
+        if !matches!(self.ops[0].kind, OpKind::Source(_)) {
+            return Err(Error::Graph("first operator must be a Source".into()));
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            if i > 0 && matches!(op.kind, OpKind::Source(_)) {
+                return Err(Error::Graph(format!("Source at position {i} (must be first)")));
+            }
+            if matches!(op.kind, OpKind::Sink(_)) && i + 1 != self.ops.len() {
+                return Err(Error::Graph(format!("Sink at position {i} (must be last)")));
+            }
+            if let OpKind::Window { size, slide, .. } = &op.kind {
+                if *size == 0 || *slide == 0 || *slide > *size {
+                    return Err(Error::Graph(format!(
+                        "window(size={size}, slide={slide}) invalid: need 0 < slide <= size"
+                    )));
+                }
+            }
+        }
+        if !matches!(self.ops.last().unwrap().kind, OpKind::Sink(_)) {
+            return Err(Error::Graph("last operator must be a Sink".into()));
+        }
+        let mut prev_idx = 0usize;
+        for op in &self.ops {
+            let idx = layers
+                .iter()
+                .position(|l| l == &op.layer)
+                .ok_or_else(|| Error::Graph(format!("operator '{}' on unknown layer '{}'", op.name, op.layer)))?;
+            if idx < prev_idx {
+                return Err(Error::Graph(format!(
+                    "operator '{}' moves outward ({} after {}); FlowUnits pipelines flow periphery → centre",
+                    op.name, op.layer, layers[prev_idx]
+                )));
+            }
+            prev_idx = idx;
+        }
+        Ok(())
+    }
+
+    /// Splits the chain into [`Stage`]s (fusion units) and labels each with
+    /// its FlowUnit index. Breaks occur:
+    /// * after the `Source` — data origin is physical (sensors live at the
+    ///   edge), so the source is its own stage, pinned to its data-origin
+    ///   zones under *every* planner; replicating it would move where data
+    ///   is *born*, not where it is processed;
+    /// * after a `KeyBy` (the outgoing edge is hash-partitioned);
+    /// * at a layer change (FlowUnit boundary);
+    /// * at an effective-constraint change (operators with different
+    ///   requirements run on different host subsets — paper's red/yellow
+    ///   cloud node example).
+    pub fn stages(&self) -> Vec<Stage> {
+        let mut stages: Vec<Stage> = Vec::new();
+        let mut unit_index = 0usize;
+        for op in &self.ops {
+            let break_before = match stages.last() {
+                None => true,
+                Some(prev) => {
+                    let prev_last = &self.ops[*prev.ops.last().unwrap()];
+                    let layer_change = prev_last.layer != op.layer;
+                    let constraint_change = prev_last.constraint != op.constraint;
+                    let after_keyby = matches!(prev_last.kind, OpKind::KeyBy(_));
+                    let after_source = matches!(prev_last.kind, OpKind::Source(_));
+                    layer_change || constraint_change || after_keyby || after_source
+                }
+            };
+            if break_before {
+                if let Some(prev) = stages.last() {
+                    let prev_last = &self.ops[*prev.ops.last().unwrap()];
+                    if prev_last.layer != op.layer {
+                        unit_index += 1;
+                    }
+                }
+                stages.push(Stage {
+                    index: stages.len(),
+                    unit_index,
+                    layer: op.layer.clone(),
+                    constraint: op.constraint.clone(),
+                    ops: vec![op.id],
+                });
+            } else {
+                stages.last_mut().unwrap().ops.push(op.id);
+            }
+        }
+        stages
+    }
+
+    /// Routing required on the edge *out of* `stage` (into the next stage):
+    /// hash-partitioned iff the stage ends with `KeyBy`.
+    pub fn edge_routing(&self, stage: &Stage) -> crate::channels::Routing {
+        let last = &self.ops[*stage.ops.last().unwrap()];
+        if matches!(last.kind, OpKind::KeyBy(_)) {
+            crate::channels::Routing::Hash
+        } else {
+            crate::channels::Routing::RoundRobin
+        }
+    }
+
+    /// Render a compact description of the chain.
+    pub fn describe(&self) -> String {
+        self.ops
+            .iter()
+            .map(|o| format!("{}@{}", o.name, o.layer))
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    }
+}
+
+/// A fusion unit: a maximal run of chained operators sharing layer and
+/// constraint with no internal repartitioning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stage {
+    /// Stage index in chain order.
+    pub index: usize,
+    /// FlowUnit this stage belongs to (contiguous same-layer stages share
+    /// a unit index).
+    pub unit_index: usize,
+    /// Layer annotation.
+    pub layer: LayerId,
+    /// Effective constraint.
+    pub constraint: Option<ConstraintExpr>,
+    /// Logical operators fused into this stage.
+    pub ops: Vec<OpId>,
+}
+
+impl Stage {
+    /// True if the stage's first operator is the job source.
+    pub fn is_source(&self) -> bool {
+        self.ops.first() == Some(&0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers() -> Vec<LayerId> {
+        vec!["edge".into(), "site".into(), "cloud".into()]
+    }
+
+    /// Builds the paper's evaluation pipeline shape:
+    /// source@edge -> filter@edge -> key_by@site -> window@site -> map@cloud -> sink@cloud
+    fn eval_graph() -> LogicalGraph {
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 100,
+                gen: Arc::new(|_, i| Value::I64(i as i64)),
+                rate: None,
+            }),
+            "edge".into(),
+            None,
+            "source",
+        );
+        g.push(
+            OpKind::Filter(Arc::new(|v| v.as_i64().unwrap() % 3 == 0)),
+            "edge".into(),
+            None,
+            "O1-filter",
+        );
+        g.push(
+            OpKind::KeyBy(Arc::new(|v| Value::I64(v.as_i64().unwrap() % 4))),
+            "site".into(),
+            None,
+            "key_by",
+        );
+        g.push(
+            OpKind::Window {
+                size: 10,
+                slide: 10,
+                agg: WindowAgg::Mean,
+            },
+            "site".into(),
+            None,
+            "O2-window",
+        );
+        g.push(
+            OpKind::Map(Arc::new(|v| v)),
+            "cloud".into(),
+            None,
+            "O3-map",
+        );
+        g.push(OpKind::Sink(SinkKind::Collect), "cloud".into(), None, "sink");
+        g
+    }
+
+    #[test]
+    fn eval_graph_validates() {
+        eval_graph().validate(&layers()).unwrap();
+    }
+
+    #[test]
+    fn stage_partitioning_breaks_at_source_layers_and_keyby() {
+        let g = eval_graph();
+        let stages = g.stages();
+        // [source]@edge | [filter]@edge | [key_by]@site | [window]@site | [map, sink]@cloud
+        assert_eq!(stages.len(), 5);
+        assert_eq!(stages[0].ops, vec![0]);
+        assert!(stages[0].is_source());
+        assert_eq!(stages[1].ops, vec![1]);
+        assert_eq!(stages[1].layer, "edge");
+        assert_eq!(stages[2].ops, vec![2]);
+        assert_eq!(stages[3].ops, vec![3]);
+        assert_eq!(stages[4].ops, vec![4, 5]);
+        // FlowUnit indices: edge=0, site=1, cloud=2
+        assert_eq!(stages[0].unit_index, 0);
+        assert_eq!(stages[1].unit_index, 0);
+        assert_eq!(stages[2].unit_index, 1);
+        assert_eq!(stages[3].unit_index, 1);
+        assert_eq!(stages[4].unit_index, 2);
+    }
+
+    #[test]
+    fn keyby_edge_is_hash_routed() {
+        let g = eval_graph();
+        let stages = g.stages();
+        assert_eq!(g.edge_routing(&stages[0]), crate::channels::Routing::RoundRobin);
+        assert_eq!(g.edge_routing(&stages[1]), crate::channels::Routing::RoundRobin);
+        assert_eq!(g.edge_routing(&stages[2]), crate::channels::Routing::Hash);
+        assert_eq!(g.edge_routing(&stages[3]), crate::channels::Routing::RoundRobin);
+    }
+
+    #[test]
+    fn constraint_change_breaks_stage() {
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 1,
+                gen: Arc::new(|_, _| Value::Null),
+                rate: None,
+            }),
+            "cloud".into(),
+            None,
+            "src",
+        );
+        g.push(OpKind::Map(Arc::new(|v| v)), "cloud".into(), None, "m1");
+        let c = ConstraintExpr::parse("gpu = yes").unwrap();
+        g.push(OpKind::Map(Arc::new(|v| v)), "cloud".into(), Some(c), "m2-gpu");
+        g.push(OpKind::Sink(SinkKind::Discard), "cloud".into(), None, "sink");
+        let stages = g.stages();
+        assert_eq!(stages.len(), 4); // [src] [m1] [m2-gpu] [sink]
+        assert_eq!(stages[2].constraint.as_ref().unwrap().to_string(), "gpu = yes");
+        // all same layer -> one FlowUnit
+        assert!(stages.iter().all(|s| s.unit_index == 0));
+    }
+
+    #[test]
+    fn rejects_outward_flow() {
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 1,
+                gen: Arc::new(|_, _| Value::Null),
+                rate: None,
+            }),
+            "cloud".into(),
+            None,
+            "src",
+        );
+        g.push(OpKind::Sink(SinkKind::Discard), "edge".into(), None, "sink");
+        assert!(g.validate(&layers()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_source_or_sink() {
+        let mut g = LogicalGraph::default();
+        g.push(OpKind::Map(Arc::new(|v| v)), "edge".into(), None, "m");
+        assert!(g.validate(&layers()).is_err());
+
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 1,
+                gen: Arc::new(|_, _| Value::Null),
+                rate: None,
+            }),
+            "edge".into(),
+            None,
+            "src",
+        );
+        g.push(OpKind::Map(Arc::new(|v| v)), "edge".into(), None, "m");
+        assert!(g.validate(&layers()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_window() {
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 1,
+                gen: Arc::new(|_, _| Value::Null),
+                rate: None,
+            }),
+            "edge".into(),
+            None,
+            "src",
+        );
+        g.push(
+            OpKind::Window {
+                size: 4,
+                slide: 8,
+                agg: WindowAgg::Mean,
+            },
+            "edge".into(),
+            None,
+            "w",
+        );
+        g.push(OpKind::Sink(SinkKind::Discard), "edge".into(), None, "sink");
+        assert!(g.validate(&layers()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_layer() {
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 1,
+                gen: Arc::new(|_, _| Value::Null),
+                rate: None,
+            }),
+            "fog".into(),
+            None,
+            "src",
+        );
+        g.push(OpKind::Sink(SinkKind::Discard), "fog".into(), None, "sink");
+        assert!(g.validate(&layers()).is_err());
+    }
+
+    #[test]
+    fn single_layer_graph_is_one_unit() {
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 1,
+                gen: Arc::new(|_, _| Value::Null),
+                rate: None,
+            }),
+            "cloud".into(),
+            None,
+            "src",
+        );
+        g.push(OpKind::Map(Arc::new(|v| v)), "cloud".into(), None, "m");
+        g.push(OpKind::Sink(SinkKind::Collect), "cloud".into(), None, "sink");
+        g.validate(&layers()).unwrap();
+        let stages = g.stages();
+        assert_eq!(stages.len(), 2); // [src] | [m, sink]
+        assert!(stages.iter().all(|s| s.unit_index == 0));
+    }
+}

@@ -1,0 +1,222 @@
+//! FlowUnits CLI — the leader entrypoint.
+//!
+//! ```text
+//! flowunits plan   --cluster cluster.fu [--planner flowunits|renoir] [--locations L1,L2]
+//! flowunits run    --pipeline eval|acme|wordcount [--planner ...] [--events N] [--bw 100Mbit] [--lat 10ms]
+//! flowunits fig3   [--events N]            # full Fig. 3 heatmap sweep
+//! ```
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::config::{eval_cluster, ClusterSpec};
+use flowunits::netsim::LinkSpec;
+use flowunits::value::Value;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "plan" => cmd_plan(&args[1..]),
+        "run" => cmd_run(&args[1..]),
+        "fig3" => cmd_fig3(&args[1..]),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "flowunits — dataflow for the edge-to-cloud continuum\n\n\
+         USAGE:\n  flowunits plan --cluster <file> [--planner flowunits|renoir] [--locations L1,L2]\n  \
+         flowunits run  --pipeline eval|acme|wordcount [--planner ...] [--events N] [--bw 100Mbit] [--lat 10ms]\n  \
+         flowunits fig3 [--events N]\n"
+    );
+}
+
+fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn parse_planner(args: &[String]) -> PlannerKind {
+    match flag(args, "--planner") {
+        Some("renoir") => PlannerKind::Renoir,
+        _ => PlannerKind::FlowUnits,
+    }
+}
+
+fn parse_link(args: &[String]) -> LinkSpec {
+    LinkSpec {
+        bandwidth_bps: flag(args, "--bw")
+            .and_then(flowunits::util::parse_bandwidth)
+            .unwrap_or(None),
+        latency: flag(args, "--lat")
+            .and_then(flowunits::util::parse_duration)
+            .unwrap_or(Duration::ZERO),
+    }
+}
+
+fn cmd_plan(args: &[String]) -> flowunits::error::Result<()> {
+    let cluster = match flag(args, "--cluster") {
+        Some(path) => ClusterSpec::load(path)?,
+        None => eval_cluster(None, Duration::ZERO),
+    };
+    let planner = parse_planner(args);
+    let locations: Vec<String> = flag(args, "--locations")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+        .unwrap_or_default();
+    let graph = eval_pipeline_graph(&cluster, 1_000_000)?;
+    let plan = flowunits::placement::plan(&graph, &cluster, planner, &locations, false)?;
+    println!("{}", plan.describe(&graph));
+    Ok(())
+}
+
+fn eval_pipeline_graph(
+    cluster: &ClusterSpec,
+    events: u64,
+) -> flowunits::error::Result<flowunits::graph::LogicalGraph> {
+    let mut ctx = StreamContext::new(cluster.clone(), JobConfig::default());
+    build_eval_pipeline(&mut ctx, events);
+    ctx.into_graph()
+}
+
+/// The paper's §V pipeline: O1 filters 67% at the edge, O2 windows+averages
+/// at the site, O3 computes Collatz convergence steps in the cloud.
+pub fn build_eval_pipeline(ctx: &mut StreamContext, events: u64) {
+    ctx.stream(Source::synthetic(events, |inst, i| {
+        Value::I64((inst as i64) << 32 | (i as i64 & 0xffff_ffff))
+    }))
+    .to_layer("edge")
+    .filter(|v| v.as_i64().unwrap() % 3 == 0) // O1: keep 33%
+    .to_layer("site")
+    .key_by(|v| Value::I64(v.as_i64().unwrap() % 16))
+    .window(100, WindowAgg::Mean) // O2
+    .to_layer("cloud")
+    .map(|v| {
+        // O3: Collatz convergence steps of the window average
+        let (_k, mean) = v.as_pair().expect("keyed window output");
+        let mut n = (mean.as_f64().unwrap().abs() as u64).max(1);
+        let mut steps = 0i64;
+        while n != 1 {
+            n = if n % 2 == 0 { n / 2 } else { 3 * n + 1 };
+            steps += 1;
+        }
+        Value::I64(steps)
+    })
+    .collect_count();
+}
+
+fn cmd_run(args: &[String]) -> flowunits::error::Result<()> {
+    let planner = parse_planner(args);
+    let events: u64 = flag(args, "--events")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let link = parse_link(args);
+    let pipeline = flag(args, "--pipeline").unwrap_or("eval");
+    let mut cluster = match flag(args, "--cluster") {
+        Some(path) => ClusterSpec::load(path)?,
+        None => eval_cluster(link.bandwidth_bps, link.latency),
+    };
+    cluster.set_uniform_links(link.clone());
+    let config = JobConfig {
+        planner,
+        ..Default::default()
+    };
+    let mut ctx = StreamContext::new(cluster.clone(), config);
+    match pipeline {
+        "eval" => build_eval_pipeline(&mut ctx, events),
+        "wordcount" => {
+            let words = ["stream", "edge", "cloud", "site", "data", "flow"];
+            ctx.stream(Source::synthetic(events, move |_, i| {
+                Value::Str(words[(i % words.len() as u64) as usize].to_string())
+            }))
+            .to_layer("cloud")
+            .group_by(|w| w.clone())
+            .fold(Value::I64(0), |acc, _| {
+                *acc = Value::I64(acc.as_i64().unwrap() + 1)
+            })
+            .collect_vec();
+        }
+        "acme" => {
+            // Fig. 1 pipeline with the XLA anomaly model at the cloud
+            ctx.stream(Source::synthetic(events, |inst, i| {
+                let t = i as f64 * 0.01;
+                let v = (t.sin() * 10.0 + 50.0) + ((i % 97) as f64) * 0.1 + inst as f64;
+                Value::F64(v)
+            }))
+            .to_layer("edge")
+            .filter(|v| v.as_f64().unwrap().is_finite())
+            .to_layer("site")
+            .key_by(|v| Value::I64((v.as_f64().unwrap() * 10.0) as i64 % 4))
+            .window(32, WindowAgg::FeatureStats)
+            .to_layer("cloud")
+            .xla_map("anomaly_v1", 64, 5)
+            .add_constraint("xla = yes")
+            .collect_count();
+        }
+        other => {
+            return Err(flowunits::error::Error::Runtime(format!(
+                "unknown pipeline '{other}'"
+            )))
+        }
+    }
+    let report = ctx.execute()?;
+    println!(
+        "pipeline={pipeline} planner={planner:?} link={} events={events}",
+        link.describe()
+    );
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_fig3(args: &[String]) -> flowunits::error::Result<()> {
+    let events: u64 = flag(args, "--events")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let bandwidths: [(Option<u64>, &str); 4] = [
+        (None, "unlimited"),
+        (Some(1_000_000_000), "1Gbit"),
+        (Some(100_000_000), "100Mbit"),
+        (Some(10_000_000), "10Mbit"),
+    ];
+    let latencies = [
+        (Duration::ZERO, "0ms"),
+        (Duration::from_millis(10), "10ms"),
+        (Duration::from_millis(100), "100ms"),
+    ];
+    println!("Fig. 3 — execution time ratio Renoir/FlowUnits, {events} events");
+    println!("{:<12} {:<8} {:>10} {:>12} {:>8}", "bandwidth", "latency", "renoir(s)", "flowunits(s)", "ratio");
+    for (bw, bwname) in bandwidths {
+        for (lat, latname) in latencies {
+            let mut times = [0.0f64; 2];
+            for (i, planner) in [PlannerKind::Renoir, PlannerKind::FlowUnits].iter().enumerate() {
+                let cluster = eval_cluster(bw, lat);
+                let config = JobConfig {
+                    planner: *planner,
+                    ..Default::default()
+                };
+                let mut ctx = StreamContext::new(cluster, config);
+                build_eval_pipeline(&mut ctx, events);
+                let report = ctx.execute()?;
+                times[i] = report.wall_time.as_secs_f64();
+            }
+            println!(
+                "{:<12} {:<8} {:>10.3} {:>12.3} {:>8.2}",
+                bwname,
+                latname,
+                times[0],
+                times[1],
+                times[0] / times[1]
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Runtime metrics: counters for events, bytes per link, zone crossings.
+//!
+//! One [`MetricsRegistry`] is created per job execution and shared (Arc)
+//! across all operator instances, link threads, and the coordinator. All
+//! counters are lock-free atomics so the hot path never blocks on metrics.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Shared handle to the per-job metrics registry.
+pub type Metrics = Arc<MetricsRegistry>;
+
+/// Per-job metrics registry.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    /// Events emitted by sources.
+    pub events_in: AtomicU64,
+    /// Events delivered to sinks.
+    pub events_out: AtomicU64,
+    /// Bytes serialized onto emulated network links.
+    pub net_bytes: AtomicU64,
+    /// Frames sent over emulated links.
+    pub net_frames: AtomicU64,
+    /// Events that crossed a zone boundary.
+    pub zone_crossings: AtomicU64,
+    /// Records appended to queue topics.
+    pub queue_appends: AtomicU64,
+    /// Records consumed from queue topics.
+    pub queue_reads: AtomicU64,
+    /// XLA executions performed on the hot path.
+    pub xla_calls: AtomicU64,
+    /// Rows (windows) scored through XLA.
+    pub xla_rows: AtomicU64,
+    /// Labelled counters (per-link bytes, per-operator events, ...).
+    labelled: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+}
+
+impl MetricsRegistry {
+    /// Creates a fresh registry wrapped for sharing.
+    pub fn new() -> Metrics {
+        Arc::new(MetricsRegistry::default())
+    }
+
+    /// Returns (creating if needed) a labelled counter, e.g.
+    /// `link.E1->S1.bytes` or `op.3.events`.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.labelled.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .clone()
+    }
+
+    /// Snapshot of all labelled counters.
+    pub fn labelled_snapshot(&self) -> BTreeMap<String, u64> {
+        self.labelled
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Adds to a builtin counter.
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Renders a human-readable report.
+    pub fn render(&self, wall: Duration) -> String {
+        use crate::util::{fmt_bytes, fmt_rate};
+        let ein = self.events_in.load(Ordering::Relaxed);
+        let eout = self.events_out.load(Ordering::Relaxed);
+        let nb = self.net_bytes.load(Ordering::Relaxed);
+        let mut s = String::new();
+        s.push_str(&format!("wall time        : {wall:?}\n"));
+        s.push_str(&format!(
+            "events in / out  : {ein} / {eout} ({})\n",
+            fmt_rate(ein, wall)
+        ));
+        s.push_str(&format!(
+            "net bytes/frames : {} / {}\n",
+            fmt_bytes(nb),
+            self.net_frames.load(Ordering::Relaxed)
+        ));
+        s.push_str(&format!(
+            "zone crossings   : {}\n",
+            self.zone_crossings.load(Ordering::Relaxed)
+        ));
+        let qa = self.queue_appends.load(Ordering::Relaxed);
+        let qr = self.queue_reads.load(Ordering::Relaxed);
+        if qa + qr > 0 {
+            s.push_str(&format!("queue app/read   : {qa} / {qr}\n"));
+        }
+        let xc = self.xla_calls.load(Ordering::Relaxed);
+        if xc > 0 {
+            s.push_str(&format!(
+                "xla calls/rows   : {xc} / {}\n",
+                self.xla_rows.load(Ordering::Relaxed)
+            ));
+        }
+        for (k, v) in self.labelled_snapshot() {
+            if k.contains("bytes") {
+                s.push_str(&format!("{k:<17}: {}\n", fmt_bytes(v)));
+            } else {
+                s.push_str(&format!("{k:<17}: {v}\n"));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labelled_counters_are_shared() {
+        let m = MetricsRegistry::new();
+        let a = m.counter("link.E1->S1.bytes");
+        let b = m.counter("link.E1->S1.bytes");
+        a.fetch_add(10, Ordering::Relaxed);
+        b.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(m.labelled_snapshot()["link.E1->S1.bytes"], 15);
+    }
+
+    #[test]
+    fn builtin_counters_accumulate() {
+        let m = MetricsRegistry::new();
+        MetricsRegistry::add(&m.events_in, 100);
+        MetricsRegistry::add(&m.events_in, 23);
+        assert_eq!(m.events_in.load(Ordering::Relaxed), 123);
+    }
+
+    #[test]
+    fn render_contains_key_lines() {
+        let m = MetricsRegistry::new();
+        MetricsRegistry::add(&m.events_in, 5);
+        let r = m.render(Duration::from_secs(1));
+        assert!(r.contains("events in / out"));
+        assert!(r.contains("net bytes/frames"));
+    }
+}

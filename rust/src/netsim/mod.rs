@@ -1,0 +1,477 @@
+//! Network emulation — the stand-in for the paper's Docker + `tc`
+//! (Traffic Control) testbed (§V).
+//!
+//! Every cross-zone route is shaped by a [`Link`] modelling the route's
+//! *egress hop* (the sender zone's uplink): frames transmit one at a time,
+//! occupying the wire for `8·bytes / bandwidth` seconds — exactly what a
+//! shaped veth pair does — then sit in a delay line for the route's
+//! *end-to-end* propagation latency (passed per frame, since routes that
+//! share an uplink may have different path lengths). All channels whose
+//! routes leave a zone through the same hop share that hop's [`Link`], so
+//! cross-zone traffic contends for uplink bandwidth like it would on a
+//! real network. Intra-zone traffic is unshaped (the paper assumes
+//! unlimited bandwidth / no added latency within a zone).
+//!
+//! Backpressure: the link queue is bounded; senders block when the wire is
+//! saturated, which propagates back to the sources — the behaviour a TCP
+//! connection under `tc` shaping exhibits.
+
+use crate::metrics::Metrics;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Link conditions for one inter-zone tree edge (configuration unit).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinkSpec {
+    /// Bandwidth cap in bits/second; `None` = unlimited.
+    pub bandwidth_bps: Option<u64>,
+    /// Added one-way propagation delay.
+    pub latency: Duration,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        LinkSpec {
+            bandwidth_bps: None,
+            latency: Duration::ZERO,
+        }
+    }
+}
+
+impl LinkSpec {
+    /// Human-readable description, e.g. `100Mbit/10ms`.
+    pub fn describe(&self) -> String {
+        let bw = match self.bandwidth_bps {
+            None => "unlimited".to_string(),
+            Some(b) if b >= 1_000_000_000 => format!("{}Gbit", b / 1_000_000_000),
+            Some(b) if b >= 1_000_000 => format!("{}Mbit", b / 1_000_000),
+            Some(b) => format!("{b}bit"),
+        };
+        format!("{bw}/{:?}", self.latency)
+    }
+
+    /// True when the link adds no shaping at all.
+    pub fn is_transparent(&self) -> bool {
+        self.bandwidth_bps.is_none() && self.latency.is_zero()
+    }
+}
+
+struct InFlight<T: Send> {
+    size_bytes: usize,
+    latency: Duration,
+    msg: T,
+    dest: SyncSender<T>,
+}
+
+struct Delayed<T: Send> {
+    deliver_at: Instant,
+    seq: u64,
+    msg: T,
+    dest: SyncSender<T>,
+}
+
+impl<T: Send> PartialEq for Delayed<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.deliver_at == other.deliver_at && self.seq == other.seq
+    }
+}
+impl<T: Send> Eq for Delayed<T> {}
+impl<T: Send> PartialOrd for Delayed<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T: Send> Ord for Delayed<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other
+            .deliver_at
+            .cmp(&self.deliver_at)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct WireState<T: Send> {
+    queue: std::collections::VecDeque<InFlight<T>>,
+    closed: bool,
+}
+
+struct DelayState<T: Send> {
+    heap: BinaryHeap<Delayed<T>>,
+    closed: bool,
+    seq: u64,
+}
+
+/// An emulated uplink shared by all routes leaving a zone through the same
+/// tree hop. Zero-shaping links deliver synchronously with no threads.
+pub struct Link<T: Send + 'static> {
+    name: String,
+    bandwidth_bps: Option<u64>,
+    has_delay_stage: bool,
+    bytes: AtomicU64,
+    frames: AtomicU64,
+    metrics: Option<Metrics>,
+    wire: Arc<(Mutex<WireState<T>>, Condvar)>,
+    delay: Arc<(Mutex<DelayState<T>>, Condvar)>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    capacity: usize,
+}
+
+impl<T: Send + 'static> Link<T> {
+    /// Creates a link. `bandwidth_bps = None` disables the wire stage;
+    /// `needs_delay = false` promises every frame will carry zero latency,
+    /// disabling the delay stage (no service threads at all when both are
+    /// off).
+    pub fn new(
+        name: &str,
+        bandwidth_bps: Option<u64>,
+        needs_delay: bool,
+        metrics: Option<Metrics>,
+    ) -> Arc<Self> {
+        let link = Arc::new(Link {
+            name: name.to_string(),
+            bandwidth_bps,
+            has_delay_stage: needs_delay || bandwidth_bps.is_some(),
+            bytes: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            metrics,
+            wire: Arc::new((
+                Mutex::new(WireState {
+                    queue: std::collections::VecDeque::new(),
+                    closed: false,
+                }),
+                Condvar::new(),
+            )),
+            delay: Arc::new((
+                Mutex::new(DelayState {
+                    heap: BinaryHeap::new(),
+                    closed: false,
+                    seq: 0,
+                }),
+                Condvar::new(),
+            )),
+            threads: Mutex::new(Vec::new()),
+            capacity: 256,
+        });
+        let mut handles = Vec::new();
+        if link.bandwidth_bps.is_some() {
+            let l = Arc::clone(&link);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("link-wire-{name}"))
+                    .spawn(move || l.wire_loop())
+                    .expect("spawn link wire thread"),
+            );
+        }
+        if link.has_delay_stage {
+            let l = Arc::clone(&link);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("link-delay-{name}"))
+                    .spawn(move || l.delay_loop())
+                    .expect("spawn link delay thread"),
+            );
+        }
+        link.threads.lock().unwrap().extend(handles);
+        link
+    }
+
+    /// Convenience constructor from a [`LinkSpec`] (tests / single-route
+    /// links): the spec's latency decides whether a delay stage exists.
+    pub fn from_spec(name: &str, spec: &LinkSpec, metrics: Option<Metrics>) -> Arc<Self> {
+        Self::new(name, spec.bandwidth_bps, !spec.latency.is_zero(), metrics)
+    }
+
+    /// Link name (`E1->S1`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Total payload bytes accepted.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Total frames accepted.
+    pub fn frames_sent(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    /// Sends a frame of `size_bytes` carrying `msg` toward `dest`, with
+    /// `latency` end-to-end propagation delay. Blocks while the uplink
+    /// queue is full (backpressure). Returns `false` if the link is closed
+    /// or the destination disconnected.
+    pub fn send(&self, size_bytes: usize, latency: Duration, msg: T, dest: &SyncSender<T>) -> bool {
+        self.bytes.fetch_add(size_bytes as u64, Ordering::Relaxed);
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            crate::metrics::MetricsRegistry::add(&m.net_bytes, size_bytes as u64);
+            crate::metrics::MetricsRegistry::add(&m.net_frames, 1);
+        }
+        if self.bandwidth_bps.is_none() {
+            if latency.is_zero() || !self.has_delay_stage {
+                return dest.send(msg).is_ok();
+            }
+            return self.enqueue_delay(latency, msg, dest.clone());
+        }
+        let (lock, cv) = &*self.wire;
+        let mut st = lock.lock().unwrap();
+        while st.queue.len() >= self.capacity && !st.closed {
+            st = cv.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.queue.push_back(InFlight {
+            size_bytes,
+            latency,
+            msg,
+            dest: dest.clone(),
+        });
+        cv.notify_all();
+        true
+    }
+
+    fn enqueue_delay(&self, latency: Duration, msg: T, dest: SyncSender<T>) -> bool {
+        let (dlock, dcv) = &*self.delay;
+        let mut dst = dlock.lock().unwrap();
+        if dst.closed {
+            return false;
+        }
+        let seq = dst.seq;
+        dst.seq += 1;
+        dst.heap.push(Delayed {
+            deliver_at: Instant::now() + latency,
+            seq,
+            msg,
+            dest,
+        });
+        dcv.notify_all();
+        true
+    }
+
+    fn wire_loop(&self) {
+        let (lock, cv) = &*self.wire;
+        loop {
+            let item = {
+                let mut st = lock.lock().unwrap();
+                loop {
+                    if let Some(it) = st.queue.pop_front() {
+                        cv.notify_all(); // wake blocked senders
+                        break Some(it);
+                    }
+                    if st.closed {
+                        break None;
+                    }
+                    st = cv.wait(st).unwrap();
+                }
+            };
+            let Some(item) = item else { break };
+            if let Some(bps) = self.bandwidth_bps {
+                let secs = (item.size_bytes as f64 * 8.0) / bps as f64;
+                if secs > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(secs));
+                }
+            }
+            self.enqueue_delay(item.latency, item.msg, item.dest);
+        }
+        // wire closed and drained: close the delay line
+        let (dlock, dcv) = &*self.delay;
+        dlock.lock().unwrap().closed = true;
+        dcv.notify_all();
+    }
+
+    fn delay_loop(&self) {
+        let (lock, cv) = &*self.delay;
+        loop {
+            let item = {
+                let mut st = lock.lock().unwrap();
+                loop {
+                    let now = Instant::now();
+                    match st.heap.peek() {
+                        Some(d) if d.deliver_at <= now => break Some(st.heap.pop().unwrap()),
+                        Some(d) => {
+                            let wait = d.deliver_at - now;
+                            let (g, _) = cv.wait_timeout(st, wait).unwrap();
+                            st = g;
+                        }
+                        None if st.closed => break None,
+                        None => st = cv.wait(st).unwrap(),
+                    }
+                }
+            };
+            let Some(item) = item else { break };
+            // Blocking send keeps end-to-end backpressure.
+            let _ = item.dest.send(item.msg);
+        }
+    }
+
+    /// Closes the link after in-flight frames are delivered; joins threads.
+    pub fn shutdown(&self) {
+        {
+            let (lock, cv) = &*self.wire;
+            lock.lock().unwrap().closed = true;
+            cv.notify_all();
+        }
+        if self.bandwidth_bps.is_none() {
+            // no wire stage to propagate the close — close the delay line
+            // directly (it still drains its heap first by construction).
+            let (dlock, dcv) = &*self.delay;
+            // wait for the heap to drain before flagging closed would race;
+            // the delay loop drains everything already queued regardless.
+            dlock.lock().unwrap().closed = true;
+            dcv.notify_all();
+        }
+        let handles: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn transparent_link_is_synchronous() {
+        let link: Arc<Link<u32>> = Link::new("t", None, false, None);
+        let (tx, rx) = sync_channel(4);
+        assert!(link.send(100, Duration::ZERO, 7, &tx));
+        assert_eq!(rx.try_recv().unwrap(), 7);
+        assert_eq!(link.bytes_sent(), 100);
+        link.shutdown();
+    }
+
+    #[test]
+    fn latency_delays_delivery() {
+        let link: Arc<Link<u32>> = Link::new("lat", None, true, None);
+        let (tx, rx) = sync_channel(4);
+        let t0 = Instant::now();
+        link.send(10, Duration::from_millis(50), 1, &tx);
+        let v = rx.recv().unwrap();
+        let dt = t0.elapsed();
+        assert_eq!(v, 1);
+        assert!(dt >= Duration::from_millis(45), "delivered after {dt:?}");
+        assert!(dt < Duration::from_millis(500), "delivered after {dt:?}");
+        link.shutdown();
+    }
+
+    #[test]
+    fn bandwidth_serialises_frames() {
+        // 8 Mbit/s -> a 100_000-byte frame occupies the wire for 100 ms.
+        let link: Arc<Link<u32>> = Link::new("bw", Some(8_000_000), false, None);
+        let (tx, rx) = sync_channel(16);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            link.send(100_000, Duration::ZERO, i, &tx);
+        }
+        for _ in 0..3 {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(280), "3 frames took {dt:?}");
+        link.shutdown();
+    }
+
+    #[test]
+    fn latency_pipelines_rather_than_serialises() {
+        // 10 frames with 100 ms latency and no bandwidth cap should take
+        // ~100 ms total (pipelined), not ~1 s (serialised).
+        let link: Arc<Link<u32>> = Link::new("pipe", None, true, None);
+        let (tx, rx) = sync_channel(64);
+        let t0 = Instant::now();
+        for i in 0..10 {
+            link.send(10, Duration::from_millis(100), i, &tx);
+        }
+        let mut got = Vec::new();
+        for _ in 0..10 {
+            got.push(rx.recv().unwrap());
+        }
+        let dt = t0.elapsed();
+        assert_eq!(got, (0..10).collect::<Vec<_>>(), "FIFO order preserved");
+        assert!(dt < Duration::from_millis(600), "took {dt:?}, not pipelined");
+        link.shutdown();
+    }
+
+    #[test]
+    fn mixed_latency_routes_share_one_uplink() {
+        // Two routes over the same uplink with different path latencies.
+        let link: Arc<Link<u32>> = Link::new("shared", Some(80_000_000), true, None);
+        let (tx_near, rx_near) = sync_channel(16);
+        let (tx_far, rx_far) = sync_channel(16);
+        let t0 = Instant::now();
+        link.send(1000, Duration::from_millis(5), 1, &tx_near);
+        link.send(1000, Duration::from_millis(60), 2, &tx_far);
+        rx_near.recv().unwrap();
+        let near_dt = t0.elapsed();
+        rx_far.recv().unwrap();
+        let far_dt = t0.elapsed();
+        assert!(near_dt < far_dt);
+        assert!(far_dt >= Duration::from_millis(55));
+        link.shutdown();
+    }
+
+    #[test]
+    fn frames_delivered_in_fifo_order_under_load() {
+        let link: Arc<Link<u64>> = Link::new("fifo", Some(80_000_000), true, None);
+        let (tx, rx) = sync_channel(512);
+        for i in 0..200u64 {
+            link.send(1000, Duration::from_millis(5), i, &tx);
+        }
+        let mut prev = None;
+        for _ in 0..200 {
+            let v = rx.recv().unwrap();
+            if let Some(p) = prev {
+                assert!(v > p, "out of order: {v} after {p}");
+            }
+            prev = Some(v);
+        }
+        link.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_inflight() {
+        let link: Arc<Link<u32>> = Link::new("drain", None, true, None);
+        let (tx, rx) = sync_channel(16);
+        for i in 0..5 {
+            link.send(10, Duration::from_millis(20), i, &tx);
+        }
+        link.shutdown(); // must wait for all 5 deliveries
+        let mut n = 0;
+        while rx.try_recv().is_ok() {
+            n += 1;
+        }
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn metrics_account_bytes() {
+        let m = crate::metrics::MetricsRegistry::new();
+        let link: Arc<Link<u32>> = Link::new("m", None, false, Some(m.clone()));
+        let (tx, _rx) = sync_channel(4);
+        link.send(123, Duration::ZERO, 0, &tx);
+        link.send(77, Duration::ZERO, 1, &tx);
+        assert_eq!(m.net_bytes.load(Ordering::Relaxed), 200);
+        assert_eq!(m.net_frames.load(Ordering::Relaxed), 2);
+        link.shutdown();
+    }
+
+    #[test]
+    fn from_spec_matches_spec() {
+        let spec = LinkSpec {
+            bandwidth_bps: Some(1_000_000),
+            latency: Duration::from_millis(1),
+        };
+        assert_eq!(spec.describe(), "1Mbit/1ms");
+        let link: Arc<Link<u8>> = Link::from_spec("s", &spec, None);
+        let (tx, rx) = sync_channel(4);
+        link.send(100, spec.latency, 9, &tx);
+        assert_eq!(rx.recv().unwrap(), 9);
+        link.shutdown();
+    }
+}

@@ -1,0 +1,754 @@
+//! Deployment planners: the FlowUnits locality/resource-aware planner and
+//! the Renoir baseline planner (paper §II/§V comparison).
+//!
+//! * **FlowUnits planner** — each stage is instantiated once per zone (at
+//!   the stage's layer) that covers an enabled location; within a zone,
+//!   one instance per core of every capability-satisfying host. Instances
+//!   may only talk to instances in the *same zone* (intra-unit exchange)
+//!   or in the *ancestor zone* at the downstream layer (cross-unit
+//!   collection along the zone tree).
+//! * **Renoir planner** — the classic strategy: one instance of every
+//!   operator per core of every host, all-to-all connectivity, layers
+//!   ignored. This maximises utilisation in a co-located cluster but sends
+//!   data across slow inter-zone links indiscriminately.
+
+use crate::channels::Routing;
+use crate::config::ClusterSpec;
+use crate::error::{Error, Result};
+use crate::graph::{LogicalGraph, Stage};
+use crate::netsim::LinkSpec;
+use crate::topology::{HostId, LocationId, Topology, ZoneId};
+use std::collections::BTreeSet;
+
+/// Which deployment strategy to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlannerKind {
+    /// Locality/resource-aware FlowUnits deployment (the paper's model).
+    #[default]
+    FlowUnits,
+    /// Classic Renoir/Flink deployment: every operator everywhere.
+    Renoir,
+}
+
+/// One planned operator-stage instance.
+#[derive(Debug, Clone)]
+pub struct InstancePlan {
+    /// Globally unique instance id.
+    pub id: usize,
+    /// Stage this instance executes.
+    pub stage: usize,
+    /// Host it is pinned to.
+    pub host: HostId,
+    /// Zone of that host.
+    pub zone: ZoneId,
+    /// Core slot within the host.
+    pub core: usize,
+    /// For source stages: `(instance_index, instance_count)` used to split
+    /// the input among source instances.
+    pub source_share: Option<(u64, u64)>,
+}
+
+/// One planned stage-to-stage edge.
+#[derive(Debug, Clone)]
+pub struct EdgePlan {
+    /// Upstream stage index.
+    pub from_stage: usize,
+    /// Downstream stage index.
+    pub to_stage: usize,
+    /// Record routing policy.
+    pub routing: Routing,
+    /// Whether this edge crosses a FlowUnit boundary.
+    pub unit_boundary: bool,
+    /// Whether the edge is decoupled through the queue substrate.
+    pub decoupled: bool,
+}
+
+/// A full execution plan.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    /// Strategy that produced the plan.
+    pub planner: PlannerKind,
+    /// Stages (fused operator runs) in chain order.
+    pub stages: Vec<Stage>,
+    /// All stage instances.
+    pub instances: Vec<InstancePlan>,
+    /// Edges between consecutive stages.
+    pub edges: Vec<EdgePlan>,
+    /// Locations enabled for this job.
+    pub locations: Vec<LocationId>,
+}
+
+impl ExecPlan {
+    /// Instance ids belonging to `stage`.
+    pub fn instances_of(&self, stage: usize) -> Vec<usize> {
+        self.instances
+            .iter()
+            .filter(|i| i.stage == stage)
+            .map(|i| i.id)
+            .collect()
+    }
+
+    /// Downstream instances that `from` may send to along `edge`.
+    ///
+    /// FlowUnits: same-zone for intra-unit edges; the covering ancestor
+    /// zone at the downstream layer for cross-unit edges. Renoir: all
+    /// downstream instances.
+    pub fn allowed_targets(&self, topo: &Topology, from: usize, edge: &EdgePlan) -> Vec<usize> {
+        let from_inst = &self.instances[from];
+        debug_assert_eq!(from_inst.stage, edge.from_stage);
+        let candidates: Vec<&InstancePlan> = self
+            .instances
+            .iter()
+            .filter(|i| i.stage == edge.to_stage)
+            .collect();
+        match self.planner {
+            PlannerKind::Renoir => candidates.iter().map(|i| i.id).collect(),
+            PlannerKind::FlowUnits => {
+                let from_stage = &self.stages[edge.from_stage];
+                let to_stage = &self.stages[edge.to_stage];
+                if from_stage.unit_index == to_stage.unit_index {
+                    // intra-unit: same zone only
+                    candidates
+                        .iter()
+                        .filter(|i| i.zone == from_inst.zone)
+                        .map(|i| i.id)
+                        .collect()
+                } else {
+                    // cross-unit: the unique ancestor zone at the target layer
+                    let target_zone = ancestor_at_layer(topo, &from_inst.zone, &to_stage.layer);
+                    match target_zone {
+                        None => Vec::new(),
+                        Some(z) => candidates
+                            .iter()
+                            .filter(|i| i.zone == z)
+                            .map(|i| i.id)
+                            .collect(),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Human-readable plan summary (stage → instances per zone).
+    pub fn describe(&self, graph: &LogicalGraph) -> String {
+        let mut s = format!("planner: {:?}\n", self.planner);
+        for st in &self.stages {
+            let ops: Vec<&str> = st.ops.iter().map(|&o| graph.ops[o].name.as_str()).collect();
+            let mut per_zone: std::collections::BTreeMap<&str, usize> = Default::default();
+            for i in self.instances.iter().filter(|i| i.stage == st.index) {
+                *per_zone.entry(i.zone.as_str()).or_default() += 1;
+            }
+            let zones: Vec<String> = per_zone
+                .iter()
+                .map(|(z, n)| format!("{z}×{n}"))
+                .collect();
+            s.push_str(&format!(
+                "  stage {} (unit {}, layer {}) [{}]: {}\n",
+                st.index,
+                st.unit_index,
+                st.layer,
+                ops.join(", "),
+                zones.join(" ")
+            ));
+        }
+        s
+    }
+}
+
+/// Finds the ancestor (or self) of `zone` at `layer`, walking the tree
+/// upward.
+pub fn ancestor_at_layer(topo: &Topology, zone: &str, layer: &str) -> Option<ZoneId> {
+    let mut cur = zone.to_string();
+    let mut hops = 0;
+    loop {
+        let z = topo.zones.get(&cur)?;
+        if z.layer == layer {
+            return Some(cur);
+        }
+        cur = z.parent.clone()?;
+        hops += 1;
+        if hops > topo.zones.len() {
+            return None;
+        }
+    }
+}
+
+/// Composite link conditions along the tree path between two zones
+/// (up to the lowest common ancestor, then down): latency adds per hop,
+/// bandwidth is the minimum hop bandwidth. Same-zone routes are
+/// transparent.
+pub fn route_spec(cluster: &ClusterSpec, za: &str, zb: &str) -> Result<LinkSpec> {
+    if za == zb {
+        return Ok(LinkSpec::default());
+    }
+    let topo = &cluster.topology;
+    let up_a = ancestry(topo, za)?;
+    let up_b = ancestry(topo, zb)?;
+    let set_a: BTreeSet<&str> = up_a.iter().map(|s| s.as_str()).collect();
+    let lca = up_b
+        .iter()
+        .find(|z| set_a.contains(z.as_str()))
+        .ok_or_else(|| Error::Topology(format!("no common ancestor of '{za}' and '{zb}'")))?
+        .clone();
+    let mut spec = LinkSpec::default();
+    let mut extend = |path: &[String]| {
+        for w in path.windows(2) {
+            let hop = cluster.link_between(&w[0], &w[1]);
+            spec.latency += hop.latency;
+            spec.bandwidth_bps = match (spec.bandwidth_bps, hop.bandwidth_bps) {
+                (None, b) => b,
+                (a, None) => a,
+                (Some(a), Some(b)) => Some(a.min(b)),
+            };
+        }
+    };
+    let a_path: Vec<String> = up_a.iter().take_while(|z| **z != lca).cloned().chain([lca.clone()]).collect();
+    let b_path: Vec<String> = up_b.iter().take_while(|z| **z != lca).cloned().chain([lca.clone()]).collect();
+    extend(&a_path);
+    extend(&b_path);
+    Ok(spec)
+}
+
+fn ancestry(topo: &Topology, zone: &str) -> Result<Vec<ZoneId>> {
+    let mut out = vec![zone.to_string()];
+    let mut cur = zone.to_string();
+    loop {
+        let z = topo
+            .zones
+            .get(&cur)
+            .ok_or_else(|| Error::Topology(format!("unknown zone '{cur}'")))?;
+        match &z.parent {
+            None => return Ok(out),
+            Some(p) => {
+                out.push(p.clone());
+                cur = p.clone();
+                if out.len() > topo.zones.len() + 1 {
+                    return Err(Error::Topology(format!("cycle above zone '{zone}'")));
+                }
+            }
+        }
+    }
+}
+
+/// Produces an execution plan for `graph` on `cluster`.
+///
+/// `locations`: enabled locations (empty ⇒ every location covered by the
+/// root zone). `decouple_units`: route FlowUnit-boundary edges through the
+/// queue substrate.
+pub fn plan(
+    graph: &LogicalGraph,
+    cluster: &ClusterSpec,
+    planner: PlannerKind,
+    locations: &[LocationId],
+    decouple_units: bool,
+) -> Result<ExecPlan> {
+    graph.validate(&cluster.topology.layers)?;
+    let topo = &cluster.topology;
+    let locations: Vec<LocationId> = if locations.is_empty() {
+        let root = topo
+            .zones
+            .values()
+            .find(|z| z.parent.is_none())
+            .ok_or_else(|| Error::Placement("no root zone".into()))?;
+        root.locations.clone()
+    } else {
+        for l in locations {
+            let covered = topo.zones.values().any(|z| z.locations.iter().any(|x| x == l));
+            if !covered {
+                return Err(Error::Placement(format!("location '{l}' not covered by any zone")));
+            }
+        }
+        locations.to_vec()
+    };
+
+    let stages = graph.stages();
+    let mut instances: Vec<InstancePlan> = Vec::new();
+    for stage in &stages {
+        let placed = place_stage(topo, stage, planner, &locations)?;
+        if placed.is_empty() {
+            return Err(Error::Placement(format!(
+                "stage {} (layer '{}', constraint {:?}) has no feasible host — unfeasible deployment",
+                stage.index,
+                stage.layer,
+                stage.constraint.as_ref().map(|c| c.to_string())
+            )));
+        }
+        let n = placed.len() as u64;
+        for (host, zone, core) in placed {
+            let id = instances.len();
+            let idx = instances.iter().filter(|i| i.stage == stage.index).count() as u64;
+            instances.push(InstancePlan {
+                id,
+                stage: stage.index,
+                host,
+                zone,
+                core,
+                source_share: if stage.is_source() { Some((idx, n)) } else { None },
+            });
+        }
+    }
+
+    let mut edges = Vec::new();
+    for i in 0..stages.len().saturating_sub(1) {
+        let unit_boundary = stages[i].unit_index != stages[i + 1].unit_index;
+        edges.push(EdgePlan {
+            from_stage: i,
+            to_stage: i + 1,
+            routing: graph.edge_routing(&stages[i]),
+            unit_boundary,
+            decoupled: decouple_units && unit_boundary,
+        });
+    }
+
+    let plan = ExecPlan {
+        planner,
+        stages,
+        instances,
+        edges,
+        locations,
+    };
+
+    // Feasibility: every upstream instance must reach at least one target.
+    for edge in &plan.edges {
+        for from in plan.instances_of(edge.from_stage) {
+            if plan.allowed_targets(topo, from, edge).is_empty() {
+                let inst = &plan.instances[from];
+                return Err(Error::Placement(format!(
+                    "instance {} (stage {}, zone {}) has no reachable downstream instance on edge {}->{}",
+                    from, edge.from_stage, inst.zone, edge.from_stage, edge.to_stage
+                )));
+            }
+        }
+    }
+    Ok(plan)
+}
+
+fn place_stage(
+    topo: &Topology,
+    stage: &Stage,
+    planner: PlannerKind,
+    locations: &[LocationId],
+) -> Result<Vec<(HostId, ZoneId, usize)>> {
+    let mut out = Vec::new();
+    // Data origin is physical: source stages are always pinned to the
+    // zones of their annotated layer (per enabled location), under both
+    // planners. The Renoir baseline replicates *operators* everywhere, not
+    // the sensors producing the data (paper §V).
+    let planner = if stage.is_source() {
+        PlannerKind::FlowUnits
+    } else {
+        planner
+    };
+    match planner {
+        PlannerKind::Renoir => {
+            // all capability-satisfying hosts anywhere, one instance per core
+            for host in topo.hosts.values() {
+                let ok = stage
+                    .constraint
+                    .as_ref()
+                    .map(|c| c.eval(&host.caps))
+                    .unwrap_or(true);
+                if ok {
+                    for core in 0..host.cores {
+                        out.push((host.id.clone(), host.zone.clone(), core));
+                    }
+                }
+            }
+        }
+        PlannerKind::FlowUnits => {
+            let mut zones: BTreeSet<ZoneId> = BTreeSet::new();
+            for loc in locations {
+                if let Some(z) = topo.covering_zone(&stage.layer, loc) {
+                    zones.insert(z.id.clone());
+                }
+            }
+            if zones.is_empty() {
+                return Err(Error::Placement(format!(
+                    "no zone at layer '{}' covers any enabled location {:?}",
+                    stage.layer, locations
+                )));
+            }
+            for zone in zones {
+                let hosts = topo.matching_hosts(&zone, stage.constraint.as_ref());
+                if hosts.is_empty() {
+                    return Err(Error::Placement(format!(
+                        "zone '{zone}' has no host satisfying constraint {:?} for stage {}",
+                        stage.constraint.as_ref().map(|c| c.to_string()),
+                        stage.index
+                    )));
+                }
+                let mut hosts: Vec<_> = hosts;
+                hosts.sort_by(|a, b| a.id.cmp(&b.id));
+                for host in hosts {
+                    for core in 0..host.cores {
+                        out.push((host.id.clone(), host.zone.clone(), core));
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{eval_cluster, fig2_cluster};
+    use crate::graph::{OpKind, SinkKind, SourceKind, WindowAgg};
+    use crate::topology::ConstraintExpr;
+    use crate::value::Value;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn eval_graph() -> LogicalGraph {
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 1000,
+                gen: Arc::new(|_, i| Value::I64(i as i64)),
+                rate: None,
+            }),
+            "edge".into(),
+            None,
+            "source",
+        );
+        g.push(
+            OpKind::Filter(Arc::new(|v| v.as_i64().unwrap() % 3 == 0)),
+            "edge".into(),
+            None,
+            "O1",
+        );
+        g.push(
+            OpKind::KeyBy(Arc::new(|v| Value::I64(v.as_i64().unwrap() % 4))),
+            "site".into(),
+            None,
+            "key",
+        );
+        g.push(
+            OpKind::Window {
+                size: 10,
+                slide: 10,
+                agg: WindowAgg::Mean,
+            },
+            "site".into(),
+            None,
+            "O2",
+        );
+        g.push(OpKind::Map(Arc::new(|v| v)), "cloud".into(), None, "O3");
+        g.push(OpKind::Sink(SinkKind::Count), "cloud".into(), None, "sink");
+        g
+    }
+
+    #[test]
+    fn flowunits_plan_matches_paper_counts() {
+        let cluster = eval_cluster(None, Duration::ZERO);
+        let plan = plan(&eval_graph(), &cluster, PlannerKind::FlowUnits, &[], false).unwrap();
+        // source stage + O1 stage: 4 edge zones × 1 host × 1 core = 4 each
+        assert_eq!(plan.instances_of(0).len(), 4);
+        assert_eq!(plan.instances_of(1).len(), 4);
+        // key stage + window stage at site: 2 hosts × 4 cores = 8 each
+        assert_eq!(plan.instances_of(2).len(), 8);
+        assert_eq!(plan.instances_of(3).len(), 8);
+        // cloud stage: 16
+        assert_eq!(plan.instances_of(4).len(), 16);
+    }
+
+    #[test]
+    fn renoir_plan_replicates_operators_but_not_sources() {
+        let cluster = eval_cluster(None, Duration::ZERO);
+        let plan = plan(&eval_graph(), &cluster, PlannerKind::Renoir, &[], false).unwrap();
+        let total = cluster.topology.total_cores(); // 28
+        // sources stay at the data origin (paper §V: data is born at the edge)
+        assert_eq!(plan.instances_of(0).len(), 4);
+        // every operator gets one instance per core of every host
+        for s in 1..5 {
+            assert_eq!(plan.instances_of(s).len(), total, "stage {s}");
+        }
+        // Renoir all-to-all: an edge source may send to any O1 instance
+        let e = &plan.edges[0];
+        let targets = plan.allowed_targets(&cluster.topology, 0, e);
+        assert_eq!(targets.len(), total);
+    }
+
+    #[test]
+    fn source_shares_split_total() {
+        let cluster = eval_cluster(None, Duration::ZERO);
+        let plan = plan(&eval_graph(), &cluster, PlannerKind::FlowUnits, &[], false).unwrap();
+        let shares: Vec<(u64, u64)> = plan
+            .instances
+            .iter()
+            .filter(|i| i.stage == 0)
+            .map(|i| i.source_share.unwrap())
+            .collect();
+        assert_eq!(shares.len(), 4);
+        for (k, n) in &shares {
+            assert_eq!(*n, 4);
+            assert!(*k < 4);
+        }
+        let idxs: BTreeSet<u64> = shares.iter().map(|(k, _)| *k).collect();
+        assert_eq!(idxs.len(), 4);
+    }
+
+    #[test]
+    fn flowunits_targets_follow_tree() {
+        let cluster = fig2_cluster();
+        // enable L1, L2, L4 like the paper's example
+        let p = plan(
+            &eval_graph(),
+            &cluster,
+            PlannerKind::FlowUnits,
+            &["L1".into(), "L2".into(), "L4".into()],
+            false,
+        )
+        .unwrap();
+        let topo = &cluster.topology;
+        // edge stage instances exist only in E1, E2, E4
+        let zones: BTreeSet<&str> = p
+            .instances
+            .iter()
+            .filter(|i| i.stage == 0)
+            .map(|i| i.zone.as_str())
+            .collect();
+        assert_eq!(zones, ["E1", "E2", "E4"].into_iter().collect());
+        // intra-unit edge 0->1 (source -> O1): same zone only
+        for from in p.instances_of(0) {
+            let fz = p.instances[from].zone.clone();
+            for t in p.allowed_targets(topo, from, &p.edges[0]) {
+                assert_eq!(p.instances[t].zone, fz);
+            }
+        }
+        // cross-unit edge 1->2: E1/E2 go to S1 instances, E4 to S2
+        let edge12 = &p.edges[1];
+        for from in p.instances_of(1) {
+            let from_zone = p.instances[from].zone.clone();
+            let targets = p.allowed_targets(topo, from, edge12);
+            assert!(!targets.is_empty());
+            let expected = if from_zone == "E4" { "S2" } else { "S1" };
+            for t in targets {
+                assert_eq!(p.instances[t].zone, expected);
+            }
+        }
+    }
+
+    #[test]
+    fn intra_unit_edges_stay_in_zone() {
+        let cluster = fig2_cluster();
+        let p = plan(
+            &eval_graph(),
+            &cluster,
+            PlannerKind::FlowUnits,
+            &["L1".into(), "L4".into()],
+            false,
+        )
+        .unwrap();
+        // edge 2->3 (key->window) is intra-unit at the site layer
+        let e = &p.edges[2];
+        assert!(!e.unit_boundary);
+        for from in p.instances_of(2) {
+            let fz = p.instances[from].zone.clone();
+            for t in p.allowed_targets(&cluster.topology, from, e) {
+                assert_eq!(p.instances[t].zone, fz);
+            }
+        }
+    }
+
+    #[test]
+    fn constrained_stage_lands_on_gpu_hosts_only() {
+        let cluster = fig2_cluster();
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 10,
+                gen: Arc::new(|_, i| Value::I64(i as i64)),
+                rate: None,
+            }),
+            "cloud".into(),
+            None,
+            "src",
+        );
+        g.push(
+            OpKind::Map(Arc::new(|v| v)),
+            "cloud".into(),
+            Some(ConstraintExpr::parse("n_cpu >= 4 && gpu = yes").unwrap()),
+            "ml",
+        );
+        g.push(OpKind::Sink(SinkKind::Count), "cloud".into(), None, "sink");
+        let p = plan(&g, &cluster, PlannerKind::FlowUnits, &[], false).unwrap();
+        // ml stage = stage 1 (after the source stage): only c1gpu (8 cores)
+        let ml = p
+            .instances
+            .iter()
+            .filter(|i| i.stage == 1)
+            .collect::<Vec<_>>();
+        assert_eq!(ml.len(), 8);
+        assert!(ml.iter().all(|i| i.host == "c1gpu"));
+        // unconstrained stages use both cloud hosts (16 instances)
+        assert_eq!(p.instances_of(0).len(), 16);
+        assert_eq!(p.instances_of(2).len(), 16);
+    }
+
+    #[test]
+    fn infeasible_constraint_is_an_error() {
+        let cluster = eval_cluster(None, Duration::ZERO);
+        let mut g = LogicalGraph::default();
+        g.push(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 10,
+                gen: Arc::new(|_, i| Value::I64(i as i64)),
+                rate: None,
+            }),
+            "edge".into(),
+            None,
+            "src",
+        );
+        g.push(
+            OpKind::Map(Arc::new(|v| v)),
+            "edge".into(),
+            Some(ConstraintExpr::parse("gpu = yes").unwrap()),
+            "needs-gpu-at-edge",
+        );
+        g.push(OpKind::Sink(SinkKind::Count), "edge".into(), None, "sink");
+        let err = plan(&g, &cluster, PlannerKind::FlowUnits, &[], false).unwrap_err();
+        assert!(err.to_string().contains("no host satisfying"));
+    }
+
+    #[test]
+    fn unknown_location_is_an_error() {
+        let cluster = eval_cluster(None, Duration::ZERO);
+        let err = plan(
+            &eval_graph(),
+            &cluster,
+            PlannerKind::FlowUnits,
+            &["L99".into()],
+            false,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("L99"));
+    }
+
+    #[test]
+    fn decoupling_marks_unit_boundaries_only() {
+        let cluster = eval_cluster(None, Duration::ZERO);
+        let p = plan(&eval_graph(), &cluster, PlannerKind::FlowUnits, &[], true).unwrap();
+        // edges: 0->1 (source->O1, intra edge unit), 1->2 (edge->site,
+        // boundary), 2->3 (intra site), 3->4 (site->cloud, boundary)
+        assert!(!p.edges[0].decoupled);
+        assert!(p.edges[1].decoupled);
+        assert!(!p.edges[2].decoupled);
+        assert!(p.edges[3].decoupled);
+    }
+
+    #[test]
+    fn route_spec_composes_hops() {
+        let mut cluster = fig2_cluster();
+        cluster.set_uniform_links(LinkSpec {
+            bandwidth_bps: Some(100_000_000),
+            latency: Duration::from_millis(10),
+        });
+        // E1 -> C1: two hops up
+        let r = route_spec(&cluster, "E1", "C1").unwrap();
+        assert_eq!(r.latency, Duration::from_millis(20));
+        assert_eq!(r.bandwidth_bps, Some(100_000_000));
+        // E1 -> E2: up to S1, down to E2 = 2 hops
+        let r = route_spec(&cluster, "E1", "E2").unwrap();
+        assert_eq!(r.latency, Duration::from_millis(20));
+        // E1 -> E4: E1-S1-C1-S2-E4 = 4 hops
+        let r = route_spec(&cluster, "E1", "E4").unwrap();
+        assert_eq!(r.latency, Duration::from_millis(40));
+        // same zone transparent
+        let r = route_spec(&cluster, "S1", "S1").unwrap();
+        assert!(r.is_transparent());
+    }
+
+    #[test]
+    fn ancestor_lookup() {
+        let cluster = fig2_cluster();
+        let t = &cluster.topology;
+        assert_eq!(ancestor_at_layer(t, "E1", "site").unwrap(), "S1");
+        assert_eq!(ancestor_at_layer(t, "E4", "cloud").unwrap(), "C1");
+        assert_eq!(ancestor_at_layer(t, "C1", "cloud").unwrap(), "C1");
+        assert!(ancestor_at_layer(t, "C1", "edge").is_none());
+    }
+
+    #[test]
+    fn property_flowunits_placement_invariants() {
+        use crate::proptest::forall;
+        forall("flowunits placement invariants", 60, |g| {
+            // random tree: E zones under S zones under one C
+            let n_sites = g.usize_in(1, 4);
+            let mut text = String::from("layers = edge, site, cloud\n");
+            let mut locs: Vec<String> = Vec::new();
+            let mut all_locs_by_site: Vec<Vec<String>> = Vec::new();
+            let mut li = 0;
+            for s in 0..n_sites {
+                let n_edges = g.usize_in(1, 4);
+                let mut site_locs = Vec::new();
+                for _ in 0..n_edges {
+                    li += 1;
+                    let l = format!("L{li}");
+                    text.push_str(&format!(
+                        "[zone E{li}]\nlayer = edge\nlocations = {l}\nparent = S{s}\n[host e{li}]\nzone = E{li}\ncores = {}\n",
+                        g.usize_in(1, 3)
+                    ));
+                    site_locs.push(l.clone());
+                    locs.push(l);
+                }
+                text.push_str(&format!(
+                    "[zone S{s}]\nlayer = site\nlocations = {}\nparent = C0\n[host s{s}]\nzone = S{s}\ncores = {}\n",
+                    site_locs.join(", "),
+                    g.usize_in(1, 5)
+                ));
+                all_locs_by_site.push(site_locs);
+            }
+            text.push_str(&format!(
+                "[zone C0]\nlayer = cloud\nlocations = {}\n[host c0]\nzone = C0\ncores = {}\ncap.gpu = yes\n",
+                locs.join(", "),
+                g.usize_in(1, 9)
+            ));
+            let cluster = ClusterSpec::parse(&text).expect("generated cluster parses");
+            // random subset of locations (non-empty)
+            let mut enabled: Vec<String> =
+                locs.iter().filter(|_| g.bool(0.6)).cloned().collect();
+            if enabled.is_empty() {
+                enabled.push(locs[0].clone());
+            }
+            let p = match plan(&eval_graph(), &cluster, PlannerKind::FlowUnits, &enabled, false) {
+                Ok(p) => p,
+                Err(_) => return, // infeasible random combos are fine
+            };
+            let topo = &cluster.topology;
+            for inst in &p.instances {
+                let st = &p.stages[inst.stage];
+                // host is in the claimed zone and satisfies the constraint
+                let host = &topo.hosts[&inst.host];
+                assert_eq!(host.zone, inst.zone);
+                if let Some(c) = &st.constraint {
+                    assert!(c.eval(&host.caps));
+                }
+                // zone is at the stage layer and covers an enabled location
+                let z = &topo.zones[&inst.zone];
+                assert_eq!(z.layer, st.layer);
+                assert!(z.locations.iter().any(|l| enabled.contains(l)));
+            }
+            // connectivity: targets are same-zone or the tree ancestor
+            for e in &p.edges {
+                for from in p.instances_of(e.from_stage) {
+                    let fz = p.instances[from].zone.clone();
+                    let ts = p.allowed_targets(topo, from, e);
+                    assert!(!ts.is_empty());
+                    for t in ts {
+                        let tz = &p.instances[t].zone;
+                        if p.stages[e.from_stage].unit_index == p.stages[e.to_stage].unit_index {
+                            assert_eq!(tz, &fz);
+                        } else {
+                            assert_eq!(
+                                Some(tz.clone()),
+                                ancestor_at_layer(topo, &fz, &p.stages[e.to_stage].layer)
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+}

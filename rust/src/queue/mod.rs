@@ -1,0 +1,525 @@
+//! Persistent queue substrate — the stand-in for the Kafka queues the paper
+//! places between FlowUnits to decouple them for dynamic updates (§III–IV).
+//!
+//! Semantics mirror the Kafka subset the paper relies on:
+//! * a **topic** is split into **partitions**, each an append-only record
+//!   log;
+//! * **producers** append records; appends are durable when the broker is
+//!   opened with a data directory (length- and CRC32-framed segment files,
+//!   recovered on open);
+//! * **consumer groups** track a committed offset per partition; consumers
+//!   poll from their offset and commit after processing, giving
+//!   at-least-once delivery across FlowUnit restarts — exactly what the
+//!   dynamic-update path needs;
+//! * producers register with a topic; when all registered producers have
+//!   called [`Topic::producer_done`], the partitions are *closed* and
+//!   drained consumers observe end-of-stream.
+
+use crate::error::{Error, Result};
+use crate::metrics::{Metrics, MetricsRegistry};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// A shared broker handle.
+pub type Broker = Arc<QueueBroker>;
+
+/// In-process queue broker managing all topics of a deployment.
+pub struct QueueBroker {
+    dir: Option<PathBuf>,
+    topics: Mutex<BTreeMap<String, Arc<Topic>>>,
+    metrics: Option<Metrics>,
+}
+
+impl QueueBroker {
+    /// Creates an in-memory broker (no durability).
+    pub fn in_memory(metrics: Option<Metrics>) -> Broker {
+        Arc::new(QueueBroker {
+            dir: None,
+            topics: Mutex::new(BTreeMap::new()),
+            metrics,
+        })
+    }
+
+    /// Creates (or reopens) a durable broker rooted at `dir`; existing
+    /// topic segments found under it are recovered.
+    pub fn durable(dir: impl Into<PathBuf>, metrics: Option<Metrics>) -> Result<Broker> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Arc::new(QueueBroker {
+            dir: Some(dir),
+            topics: Mutex::new(BTreeMap::new()),
+            metrics,
+        }))
+    }
+
+    /// Returns the topic, creating it with `partitions` partitions if new.
+    /// Reopening an existing topic ignores the partition hint.
+    pub fn topic(&self, name: &str, partitions: usize) -> Result<Arc<Topic>> {
+        let mut topics = self.topics.lock().unwrap();
+        if let Some(t) = topics.get(name) {
+            return Ok(t.clone());
+        }
+        let topic = Arc::new(Topic::open(
+            name,
+            partitions.max(1),
+            self.dir.as_deref(),
+            self.metrics.clone(),
+        )?);
+        topics.insert(name.to_string(), topic.clone());
+        Ok(topic)
+    }
+
+    /// Names of all open topics.
+    pub fn topic_names(&self) -> Vec<String> {
+        self.topics.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+/// A named topic: a set of partitions.
+pub struct Topic {
+    /// Topic name.
+    pub name: String,
+    partitions: Vec<Partition>,
+    producers: Mutex<ProducerCount>,
+}
+
+#[derive(Default)]
+struct ProducerCount {
+    registered: usize,
+    done: usize,
+}
+
+impl Topic {
+    fn open(
+        name: &str,
+        partitions: usize,
+        dir: Option<&std::path::Path>,
+        metrics: Option<Metrics>,
+    ) -> Result<Topic> {
+        let mut parts = Vec::with_capacity(partitions);
+        for p in 0..partitions {
+            let path = dir.map(|d| d.join(format!("{name}-{p}.log")));
+            parts.push(Partition::open(path, metrics.clone())?);
+        }
+        Ok(Topic {
+            name: name.to_string(),
+            partitions: parts,
+            producers: Mutex::new(ProducerCount::default()),
+        })
+    }
+
+    /// Number of partitions.
+    pub fn partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// Accessor for one partition.
+    pub fn partition(&self, p: usize) -> &Partition {
+        &self.partitions[p]
+    }
+
+    /// Registers a producer; must be paired with [`Self::producer_done`].
+    pub fn register_producer(&self) {
+        self.producers.lock().unwrap().registered += 1;
+    }
+
+    /// Appends a record to the partition chosen by `key_hash % partitions`.
+    pub fn append(&self, key_hash: u64, record: &[u8]) -> Result<()> {
+        let p = (key_hash % self.partitions.len() as u64) as usize;
+        self.partitions[p].append(record)
+    }
+
+    /// Marks one producer as finished; when the last registered producer
+    /// finishes, all partitions are closed (consumers see end-of-stream).
+    pub fn producer_done(&self) {
+        let close = {
+            let mut c = self.producers.lock().unwrap();
+            c.done += 1;
+            c.done >= c.registered
+        };
+        if close {
+            for p in &self.partitions {
+                p.close();
+            }
+        }
+    }
+
+    /// Force-reopens the topic for new producers after a close (used when a
+    /// new location joins a finished epoch — not needed on the normal path).
+    pub fn reopen(&self) {
+        let mut c = self.producers.lock().unwrap();
+        c.done = 0;
+        for p in &self.partitions {
+            p.reopen();
+        }
+    }
+}
+
+struct PartState {
+    records: Vec<Arc<[u8]>>,
+    committed: BTreeMap<String, usize>,
+    closed: bool,
+}
+
+/// One append-only partition log.
+pub struct Partition {
+    state: Mutex<PartState>,
+    cv: Condvar,
+    file: Mutex<Option<File>>,
+    metrics: Option<Metrics>,
+}
+
+impl Partition {
+    fn open(path: Option<PathBuf>, metrics: Option<Metrics>) -> Result<Partition> {
+        let mut records = Vec::new();
+        let file = match path {
+            None => None,
+            Some(p) => {
+                if p.exists() {
+                    records = Self::recover(&p)?;
+                }
+                Some(OpenOptions::new().create(true).append(true).open(&p)?)
+            }
+        };
+        Ok(Partition {
+            state: Mutex::new(PartState {
+                records,
+                committed: BTreeMap::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            file: Mutex::new(file),
+            metrics,
+        })
+    }
+
+    /// Replays a segment file, verifying length framing and CRC32. A
+    /// truncated tail (torn write) is tolerated and dropped; a corrupt CRC
+    /// mid-log is an error.
+    fn recover(path: &std::path::Path) -> Result<Vec<Arc<[u8]>>> {
+        let mut buf = Vec::new();
+        File::open(path)?.read_to_end(&mut buf)?;
+        let mut records = Vec::new();
+        let mut pos = 0usize;
+        while pos < buf.len() {
+            if pos + 8 > buf.len() {
+                break; // torn header
+            }
+            let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+            if pos + 8 + len > buf.len() {
+                break; // torn body
+            }
+            let body = &buf[pos + 8..pos + 8 + len];
+            if crc32(body) != crc {
+                return Err(Error::Queue(format!(
+                    "corrupt record at byte {pos} of {}",
+                    path.display()
+                )));
+            }
+            records.push(Arc::from(body));
+            pos += 8 + len;
+        }
+        Ok(records)
+    }
+
+    /// Appends one record (durable if the partition is file-backed).
+    pub fn append(&self, record: &[u8]) -> Result<()> {
+        if let Some(f) = self.file.lock().unwrap().as_mut() {
+            let mut framed = Vec::with_capacity(8 + record.len());
+            framed.extend_from_slice(&(record.len() as u32).to_le_bytes());
+            framed.extend_from_slice(&crc32(record).to_le_bytes());
+            framed.extend_from_slice(record);
+            f.write_all(&framed)?;
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(Error::Queue("append to closed partition".into()));
+        }
+        st.records.push(Arc::from(record));
+        if let Some(m) = &self.metrics {
+            MetricsRegistry::add(&m.queue_appends, 1);
+        }
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Polls up to `max` records starting at `offset`, blocking up to
+    /// `timeout` for new data. Returns the records and the next offset;
+    /// `None` means the partition is closed *and* fully consumed.
+    pub fn poll(
+        &self,
+        offset: usize,
+        max: usize,
+        timeout: Duration,
+    ) -> Option<(Vec<Arc<[u8]>>, usize)> {
+        let mut st = self.state.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if offset < st.records.len() {
+                let end = (offset + max).min(st.records.len());
+                let recs: Vec<Arc<[u8]>> = st.records[offset..end].to_vec();
+                if let Some(m) = &self.metrics {
+                    MetricsRegistry::add(&m.queue_reads, recs.len() as u64);
+                }
+                return Some((recs, end));
+            }
+            if st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Some((Vec::new(), offset)); // timed out, still open
+            }
+            let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+    }
+
+    /// Records a consumer group's committed offset.
+    pub fn commit(&self, group: &str, offset: usize) {
+        let mut st = self.state.lock().unwrap();
+        let e = st.committed.entry(group.to_string()).or_insert(0);
+        if offset > *e {
+            *e = offset;
+        }
+    }
+
+    /// Last committed offset for a group (0 if none).
+    pub fn committed(&self, group: &str) -> usize {
+        *self
+            .state
+            .lock()
+            .unwrap()
+            .committed
+            .get(group)
+            .unwrap_or(&0)
+    }
+
+    /// Number of records currently in the log.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().records.len()
+    }
+
+    /// True when no records are present.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Closes the partition: consumers that drain it observe
+    /// end-of-stream. Idempotent. Normally driven by
+    /// [`Topic::producer_done`], but exposed for ingest pipelines that
+    /// track per-partition producer EOS themselves.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Reopens a closed partition for further appends.
+    pub fn reopen(&self) {
+        self.state.lock().unwrap().closed = false;
+    }
+}
+
+/// CRC32 (IEEE, bitwise; cold path only — recovery and appends are
+/// per-record, and records are batched).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xffff_ffffu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC32 of "123456789" is 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+    }
+
+    #[test]
+    fn append_poll_roundtrip() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 2).unwrap();
+        t.register_producer();
+        for i in 0..10u64 {
+            t.append(i, &i.to_le_bytes()).unwrap();
+        }
+        t.producer_done();
+        let mut seen = Vec::new();
+        for p in 0..2 {
+            let mut off = 0;
+            while let Some((recs, next)) = t.partition(p).poll(off, 4, Duration::from_millis(10)) {
+                for r in &recs {
+                    seen.push(u64::from_le_bytes(r.as_ref().try_into().unwrap()));
+                }
+                off = next;
+                if recs.is_empty() {
+                    break;
+                }
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn key_hash_partitions_consistently() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 4).unwrap();
+        t.register_producer();
+        t.append(13, b"a").unwrap();
+        t.append(13, b"b").unwrap();
+        t.producer_done();
+        let p = (13 % 4) as usize;
+        assert_eq!(t.partition(p).len(), 2);
+    }
+
+    #[test]
+    fn poll_blocks_until_append() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 1).unwrap();
+        t.register_producer();
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            t2.append(0, b"late").unwrap();
+        });
+        let (recs, next) = t
+            .partition(0)
+            .poll(0, 10, Duration::from_secs(2))
+            .expect("open partition");
+        assert_eq!(recs.len(), 1);
+        assert_eq!(next, 1);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn close_signals_end_of_stream_after_drain() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 1).unwrap();
+        t.register_producer();
+        t.append(0, b"x").unwrap();
+        t.producer_done();
+        let (recs, next) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(t.partition(0).poll(next, 10, Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn multi_producer_close_requires_all() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 1).unwrap();
+        t.register_producer();
+        t.register_producer();
+        t.producer_done();
+        // still open: one producer remains
+        let r = t.partition(0).poll(0, 10, Duration::from_millis(10));
+        assert!(matches!(r, Some((v, 0)) if v.is_empty()));
+        t.producer_done();
+        assert!(t.partition(0).poll(0, 10, Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn commits_are_monotonic() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 1).unwrap();
+        let p = t.partition(0);
+        p.commit("g", 5);
+        p.commit("g", 3); // must not regress
+        assert_eq!(p.committed("g"), 5);
+        assert_eq!(p.committed("other"), 0);
+    }
+
+    #[test]
+    fn durable_topic_recovers_records_and_supports_resume() {
+        let dir = std::env::temp_dir().join(format!("fuq-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let broker = QueueBroker::durable(&dir, None).unwrap();
+            let t = broker.topic("sensor", 1).unwrap();
+            t.register_producer();
+            for i in 0..5u32 {
+                t.append(0, format!("rec{i}").as_bytes()).unwrap();
+            }
+            // no producer_done: simulate crash
+        }
+        {
+            let broker = QueueBroker::durable(&dir, None).unwrap();
+            let t = broker.topic("sensor", 1).unwrap();
+            assert_eq!(t.partition(0).len(), 5);
+            let (recs, _) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
+            assert_eq!(recs[4].as_ref(), b"rec4");
+            // appends continue after recovery
+            t.register_producer();
+            t.append(0, b"rec5").unwrap();
+            assert_eq!(t.partition(0).len(), 6);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recovery_tolerates_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("fuq-torn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t-0.log");
+        {
+            let mut f = File::create(&path).unwrap();
+            let body = b"good";
+            f.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(&crc32(body).to_le_bytes()).unwrap();
+            f.write_all(body).unwrap();
+            // torn record: header promises 100 bytes, body truncated
+            f.write_all(&100u32.to_le_bytes()).unwrap();
+            f.write_all(&0u32.to_le_bytes()).unwrap();
+            f.write_all(b"short").unwrap();
+        }
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("t", 1).unwrap();
+        assert_eq!(t.partition(0).len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recovery_rejects_corrupt_crc() {
+        let dir = std::env::temp_dir().join(format!("fuq-crc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t-0.log");
+        {
+            let mut f = File::create(&path).unwrap();
+            let body = b"evil";
+            f.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(&0xdeadbeefu32.to_le_bytes()).unwrap();
+            f.write_all(body).unwrap();
+        }
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        assert!(broker.topic("t", 1).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn append_to_closed_partition_fails() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 1).unwrap();
+        t.register_producer();
+        t.producer_done();
+        assert!(t.append(0, b"x").is_err());
+        t.reopen();
+        t.register_producer();
+        assert!(t.append(0, b"x").is_ok());
+    }
+}

@@ -1,0 +1,595 @@
+//! Operator executors: the runtime counterparts of
+//! [`OpKind`](crate::graph::OpKind), fused into per-stage chains.
+
+use crate::graph::{FoldFn, WindowAgg};
+use crate::metrics::{Metrics, MetricsRegistry};
+use crate::value::Value;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a as a std `Hasher` — keyed-state maps hash short encoded keys;
+/// SipHash's per-call setup cost dominates at that size.
+#[derive(Default)]
+pub struct FnvHasher(u64);
+
+impl Hasher for FnvHasher {
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { 0xcbf2_9ce4_8422_2325 } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1_0000_01b3);
+        }
+        self.0 = h;
+    }
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+type FnvMap<V> = HashMap<Vec<u8>, V, BuildHasherDefault<FnvHasher>>;
+
+/// Looks up keyed state without allocating on the hit path: the key is
+/// encoded into a reusable scratch buffer and only cloned on first sight.
+fn keyed_entry<'m, V>(
+    map: &'m mut FnvMap<V>,
+    scratch: &mut Vec<u8>,
+    key: &Value,
+    init: impl FnOnce(&Value) -> V,
+) -> &'m mut V {
+    scratch.clear();
+    key.encode_into(scratch);
+    // Single-lookup fast path requires the raw-entry API (unstable); two
+    // cheap FNV probes beat one SipHash probe + alloc regardless.
+    if !map.contains_key(scratch.as_slice()) {
+        map.insert(scratch.clone(), init(key));
+    }
+    map.get_mut(scratch.as_slice()).unwrap()
+}
+
+/// A runtime operator: consumes batches, emits batches; `flush` runs at
+/// end-of-stream to drain any held state.
+pub trait OpExec: Send {
+    /// Processes one input batch, appending outputs to `out`.
+    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>);
+    /// Drains state at end-of-stream.
+    fn flush(&mut self, _out: &mut Vec<Value>) {}
+}
+
+/// Feeds `batch` through a fused chain of executors.
+pub fn run_chain(ops: &mut [Box<dyn OpExec>], batch: Vec<Value>) -> Vec<Value> {
+    let mut cur = batch;
+    for op in ops.iter_mut() {
+        if cur.is_empty() {
+            return cur;
+        }
+        let mut next = Vec::with_capacity(cur.len());
+        op.process(cur, &mut next);
+        cur = next;
+    }
+    cur
+}
+
+/// Flushes a fused chain: each operator's drained state flows through the
+/// remainder of the chain.
+pub fn flush_chain(ops: &mut [Box<dyn OpExec>]) -> Vec<Value> {
+    let mut pending: Vec<Value> = Vec::new();
+    for i in 0..ops.len() {
+        let mut out = Vec::new();
+        if !pending.is_empty() {
+            ops[i].process(std::mem::take(&mut pending), &mut out);
+        }
+        ops[i].flush(&mut out);
+        pending = out;
+    }
+    pending
+}
+
+/// `map`.
+pub struct MapExec(pub crate::graph::MapFn);
+impl OpExec for MapExec {
+    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
+        out.extend(batch.into_iter().map(|v| (self.0)(v)));
+    }
+}
+
+/// `filter`.
+pub struct FilterExec(pub crate::graph::FilterFn);
+impl OpExec for FilterExec {
+    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
+        out.extend(batch.into_iter().filter(|v| (self.0)(v)));
+    }
+}
+
+/// `flat_map`.
+pub struct FlatMapExec(pub crate::graph::FlatMapFn);
+impl OpExec for FlatMapExec {
+    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
+        for v in batch {
+            out.extend((self.0)(v));
+        }
+    }
+}
+
+/// `key_by`: wraps each record in `Pair(key, record)`; the planner routes
+/// the outgoing edge by key hash.
+pub struct KeyByExec(pub crate::graph::KeyFn);
+impl OpExec for KeyByExec {
+    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
+        out.extend(batch.into_iter().map(|v| {
+            let k = (self.0)(&v);
+            Value::pair(k, v)
+        }));
+    }
+}
+
+/// Keyed `fold`: per-key accumulator, emitted as `Pair(key, acc)` at EOS.
+/// Unkeyed input (non-`Pair`) folds into a single global accumulator.
+pub struct FoldExec {
+    init: Value,
+    step: FoldFn,
+    /// encoded key → (key, accumulator).
+    state: FnvMap<(Value, Value)>,
+    scratch: Vec<u8>,
+}
+
+impl FoldExec {
+    /// Creates a fold executor.
+    pub fn new(init: Value, step: FoldFn) -> Self {
+        FoldExec {
+            init,
+            step,
+            state: FnvMap::default(),
+            scratch: Vec::with_capacity(32),
+        }
+    }
+}
+
+impl OpExec for FoldExec {
+    fn process(&mut self, batch: Vec<Value>, _out: &mut Vec<Value>) {
+        for v in batch {
+            let (key, payload) = match v {
+                Value::Pair(kp) => (kp.0, kp.1),
+                other => (Value::Null, other),
+            };
+            let init = &self.init;
+            let entry = keyed_entry(&mut self.state, &mut self.scratch, &key, |k| {
+                (k.clone(), init.clone())
+            });
+            (self.step)(&mut entry.1, payload);
+        }
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        // deterministic emission order despite the hash map
+        let mut entries: Vec<(Vec<u8>, (Value, Value))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, (key, acc)) in entries {
+            out.push(Value::pair(key, acc));
+        }
+    }
+}
+
+/// Count-based (sliding) window over a keyed stream. Emits
+/// `Pair(key, aggregate)` per full window; at EOS, a final partial window
+/// (if any) is emitted so no data is silently dropped.
+pub struct WindowExec {
+    size: usize,
+    slide: usize,
+    agg: WindowAgg,
+    state: FnvMap<(Value, Vec<Value>)>,
+    scratch: Vec<u8>,
+}
+
+impl WindowExec {
+    /// Creates a window executor.
+    pub fn new(size: usize, slide: usize, agg: WindowAgg) -> Self {
+        WindowExec {
+            size,
+            slide,
+            agg,
+            state: FnvMap::default(),
+            scratch: Vec::with_capacity(32),
+        }
+    }
+
+    fn aggregate(agg: &WindowAgg, window: &[Value]) -> Value {
+        match agg {
+            WindowAgg::Mean => {
+                let n = window.len().max(1) as f64;
+                Value::F64(window.iter().filter_map(|v| v.as_f64()).sum::<f64>() / n)
+            }
+            WindowAgg::Sum => Value::F64(window.iter().filter_map(|v| v.as_f64()).sum()),
+            WindowAgg::Count => Value::I64(window.len() as i64),
+            WindowAgg::Max => Value::F64(
+                window
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .fold(f64::NEG_INFINITY, f64::max),
+            ),
+            WindowAgg::Min => Value::F64(
+                window
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .fold(f64::INFINITY, f64::min),
+            ),
+            WindowAgg::Collect => Value::List(window.to_vec()),
+            WindowAgg::FeatureStats => {
+                let xs: Vec<f32> = window
+                    .iter()
+                    .filter_map(|v| v.as_f64())
+                    .map(|f| f as f32)
+                    .collect();
+                let n = xs.len().max(1) as f32;
+                let mean = xs.iter().sum::<f32>() / n;
+                let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+                let min = xs.iter().copied().fold(f32::INFINITY, f32::min);
+                let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let last = *xs.last().unwrap_or(&0.0);
+                Value::F32s(vec![mean, var.sqrt(), min, max, last])
+            }
+            WindowAgg::Custom(f) => f(window),
+        }
+    }
+}
+
+impl OpExec for WindowExec {
+    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
+        for v in batch {
+            let (key, payload) = match v {
+                Value::Pair(kp) => (kp.0, kp.1),
+                other => (Value::Null, other),
+            };
+            let size = self.size;
+            let entry = keyed_entry(&mut self.state, &mut self.scratch, &key, |k| {
+                (k.clone(), Vec::with_capacity(size))
+            });
+            entry.1.push(payload);
+            if entry.1.len() >= self.size {
+                let agg = Self::aggregate(&self.agg, &entry.1);
+                out.push(Value::pair(entry.0.clone(), agg));
+                entry.1.drain(..self.slide);
+            }
+        }
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        // deterministic emission order despite the hash map
+        let mut entries: Vec<(Vec<u8>, (Value, Vec<Value>))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, (key, buf)) in entries {
+            if !buf.is_empty() {
+                out.push(Value::pair(key, Self::aggregate(&self.agg, &buf)));
+            }
+        }
+    }
+}
+
+/// Shared sink collector: `collect` sinks append here, `count` sinks only
+/// bump the counter.
+#[derive(Debug, Default)]
+pub struct Collector {
+    /// Collected values (for `SinkKind::Collect`).
+    pub values: Mutex<Vec<Value>>,
+    /// Count of all events that reached any sink.
+    pub count: AtomicU64,
+}
+
+/// Terminal sink executor.
+pub struct SinkExec {
+    kind: crate::graph::SinkKind,
+    collector: Arc<Collector>,
+    metrics: Metrics,
+}
+
+impl SinkExec {
+    /// Creates a sink executor.
+    pub fn new(kind: crate::graph::SinkKind, collector: Arc<Collector>, metrics: Metrics) -> Self {
+        SinkExec {
+            kind,
+            collector,
+            metrics,
+        }
+    }
+}
+
+impl OpExec for SinkExec {
+    fn process(&mut self, batch: Vec<Value>, _out: &mut Vec<Value>) {
+        let n = batch.len() as u64;
+        MetricsRegistry::add(&self.metrics.events_out, n);
+        self.collector
+            .count
+            .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+        if matches!(self.kind, crate::graph::SinkKind::Collect) {
+            self.collector.values.lock().unwrap().extend(batch);
+        }
+    }
+}
+
+/// Batched inference through a loaded XLA artifact. Buffers feature rows
+/// (`F32s` or `Pair(key, F32s)`), executes one PJRT call per full batch,
+/// and re-emits rows with the model output as payload. The final partial
+/// batch is zero-padded, executed, and un-padded at flush.
+pub struct XlaExec {
+    artifact: Arc<super::xla_exec::Artifact>,
+    batch: usize,
+    in_dim: usize,
+    keys: Vec<Option<Value>>,
+    rows: Vec<f32>,
+    metrics: Metrics,
+}
+
+impl XlaExec {
+    /// Creates an executor bound to a loaded artifact.
+    pub fn new(
+        artifact: Arc<super::xla_exec::Artifact>,
+        batch: usize,
+        in_dim: usize,
+        metrics: Metrics,
+    ) -> Self {
+        XlaExec {
+            artifact,
+            batch,
+            in_dim,
+            keys: Vec::new(),
+            rows: Vec::new(),
+            metrics,
+        }
+    }
+
+    fn run_buffer(&mut self, out: &mut Vec<Value>) {
+        if self.keys.is_empty() {
+            return;
+        }
+        let n = self.keys.len();
+        // zero-pad to the compiled batch size
+        self.rows.resize(self.batch * self.in_dim, 0.0);
+        let outputs = self
+            .artifact
+            .execute_f32(&self.rows, self.batch, self.in_dim)
+            .expect("xla execution failed on hot path");
+        MetricsRegistry::add(&self.metrics.xla_calls, 1);
+        MetricsRegistry::add(&self.metrics.xla_rows, n as u64);
+        let out_dim = outputs.len() / self.batch;
+        for (i, key) in std::mem::take(&mut self.keys).into_iter().enumerate() {
+            let row = outputs[i * out_dim..(i + 1) * out_dim].to_vec();
+            let payload = Value::F32s(row);
+            out.push(match key {
+                Some(k) => Value::pair(k, payload),
+                None => payload,
+            });
+        }
+        self.rows.clear();
+    }
+}
+
+impl OpExec for XlaExec {
+    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
+        for v in batch {
+            let (key, payload) = match v {
+                Value::Pair(kp) => (Some(kp.0), kp.1),
+                other => (None, other),
+            };
+            let feats = match &payload {
+                Value::F32s(f) => f.as_slice(),
+                other => panic!("XlaMap expects F32s feature rows, got {other:?}"),
+            };
+            assert_eq!(
+                feats.len(),
+                self.in_dim,
+                "feature row dim {} != compiled in_dim {}",
+                feats.len(),
+                self.in_dim
+            );
+            self.rows.extend_from_slice(feats);
+            self.keys.push(key);
+            if self.keys.len() >= self.batch {
+                self.run_buffer(out);
+            }
+        }
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        self.run_buffer(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn chain_of(ops: Vec<Box<dyn OpExec>>) -> Vec<Box<dyn OpExec>> {
+        ops
+    }
+
+    #[test]
+    fn map_filter_flatmap_chain() {
+        let mut ops = chain_of(vec![
+            Box::new(FlatMapExec(Arc::new(|v: Value| {
+                let n = v.as_i64().unwrap();
+                vec![Value::I64(n), Value::I64(n + 100)]
+            }))),
+            Box::new(FilterExec(Arc::new(|v: &Value| v.as_i64().unwrap() % 2 == 0))),
+            Box::new(MapExec(Arc::new(|v: Value| {
+                Value::I64(v.as_i64().unwrap() * 10)
+            }))),
+        ]);
+        let out = run_chain(&mut ops, vec![Value::I64(1), Value::I64(2)]);
+        // 1 -> [1, 101] filtered out; 2 -> [2, 102] -> [20, 1020]
+        assert_eq!(out, vec![Value::I64(20), Value::I64(1020)]);
+        assert!(flush_chain(&mut ops).is_empty());
+    }
+
+    #[test]
+    fn keyed_fold_counts_words() {
+        let mut ops = chain_of(vec![
+            Box::new(KeyByExec(Arc::new(|v: &Value| v.clone()))),
+            Box::new(FoldExec::new(
+                Value::I64(0),
+                Arc::new(|acc: &mut Value, _| {
+                    *acc = Value::I64(acc.as_i64().unwrap() + 1);
+                }),
+            )),
+        ]);
+        let words: Vec<Value> = ["a", "b", "a", "c", "a", "b"]
+            .iter()
+            .map(|w| Value::Str(w.to_string()))
+            .collect();
+        let mid = run_chain(&mut ops, words);
+        assert!(mid.is_empty(), "fold holds state until flush");
+        let mut out = flush_chain(&mut ops);
+        out.sort_by_key(|v| v.as_pair().unwrap().0.as_str().unwrap().to_string());
+        let counts: Vec<(String, i64)> = out
+            .iter()
+            .map(|v| {
+                let (k, c) = v.as_pair().unwrap();
+                (k.as_str().unwrap().to_string(), c.as_i64().unwrap())
+            })
+            .collect();
+        assert_eq!(
+            counts,
+            vec![("a".into(), 3), ("b".into(), 2), ("c".into(), 1)]
+        );
+    }
+
+    #[test]
+    fn unkeyed_fold_uses_global_key() {
+        let mut f = FoldExec::new(
+            Value::F64(0.0),
+            Arc::new(|acc: &mut Value, v| {
+                *acc = Value::F64(acc.as_f64().unwrap() + v.as_f64().unwrap());
+            }),
+        );
+        let mut out = Vec::new();
+        f.process(vec![Value::F64(1.5), Value::F64(2.5)], &mut out);
+        f.flush(&mut out);
+        assert_eq!(out, vec![Value::pair(Value::Null, Value::F64(4.0))]);
+    }
+
+    #[test]
+    fn tumbling_window_mean() {
+        let mut w = WindowExec::new(4, 4, WindowAgg::Mean);
+        let mut out = Vec::new();
+        let keyed: Vec<Value> = (0..8)
+            .map(|i| Value::pair(Value::I64(i % 2), Value::F64(i as f64)))
+            .collect();
+        w.process(keyed, &mut out);
+        // key 0: [0,2,4,6] mean 3; key 1: [1,3,5,7] mean 4
+        assert_eq!(out.len(), 2);
+        let find = |k: i64| {
+            out.iter()
+                .find(|v| v.as_pair().unwrap().0.as_i64() == Some(k))
+                .unwrap()
+                .as_pair()
+                .unwrap()
+                .1
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(find(0), 3.0);
+        assert_eq!(find(1), 4.0);
+        let mut rest = Vec::new();
+        w.flush(&mut rest);
+        assert!(rest.is_empty(), "no partials after exact tumble");
+    }
+
+    #[test]
+    fn sliding_window_overlaps() {
+        let mut w = WindowExec::new(3, 1, WindowAgg::Sum);
+        let mut out = Vec::new();
+        let vals: Vec<Value> = (1..=5).map(|i| Value::F64(i as f64)).collect();
+        w.process(vals, &mut out);
+        // windows [1,2,3]=6, [2,3,4]=9, [3,4,5]=12
+        let sums: Vec<f64> = out
+            .iter()
+            .map(|v| v.as_pair().unwrap().1.as_f64().unwrap())
+            .collect();
+        assert_eq!(sums, vec![6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn window_flush_emits_partial() {
+        let mut w = WindowExec::new(10, 10, WindowAgg::Count);
+        let mut out = Vec::new();
+        w.process(vec![Value::F64(1.0); 3], &mut out);
+        assert!(out.is_empty());
+        w.flush(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_pair().unwrap().1.as_i64(), Some(3));
+    }
+
+    #[test]
+    fn feature_stats_shape_and_values() {
+        let v = WindowExec::aggregate(
+            &WindowAgg::FeatureStats,
+            &[Value::F64(1.0), Value::F64(3.0)],
+        );
+        let f = v.as_f32s().unwrap();
+        assert_eq!(f.len(), 5);
+        assert_eq!(f[0], 2.0); // mean
+        assert_eq!(f[1], 1.0); // std
+        assert_eq!(f[2], 1.0); // min
+        assert_eq!(f[3], 3.0); // max
+        assert_eq!(f[4], 3.0); // last
+    }
+
+    #[test]
+    fn window_min_max_aggregates() {
+        let vals = [Value::F64(4.0), Value::F64(-1.0), Value::F64(2.0)];
+        assert_eq!(
+            WindowExec::aggregate(&WindowAgg::Max, &vals),
+            Value::F64(4.0)
+        );
+        assert_eq!(
+            WindowExec::aggregate(&WindowAgg::Min, &vals),
+            Value::F64(-1.0)
+        );
+    }
+
+    #[test]
+    fn custom_window_aggregate() {
+        let agg = WindowAgg::Custom(Arc::new(|w: &[Value]| Value::I64(w.len() as i64 * 100)));
+        assert_eq!(
+            WindowExec::aggregate(&agg, &[Value::Null, Value::Null]),
+            Value::I64(200)
+        );
+    }
+
+    #[test]
+    fn sink_collects_and_counts() {
+        let collector = Arc::new(Collector::default());
+        let m = crate::metrics::MetricsRegistry::new();
+        let mut sink = SinkExec::new(crate::graph::SinkKind::Collect, collector.clone(), m.clone());
+        let mut out = Vec::new();
+        sink.process(vec![Value::I64(1), Value::I64(2)], &mut out);
+        assert!(out.is_empty());
+        assert_eq!(collector.values.lock().unwrap().len(), 2);
+        assert_eq!(
+            collector.count.load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
+        assert_eq!(m.events_out.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn flush_chain_cascades_through_downstream_ops() {
+        // fold -> map: the fold's flushed pairs must pass through the map
+        let mut ops = chain_of(vec![
+            Box::new(FoldExec::new(
+                Value::I64(0),
+                Arc::new(|acc: &mut Value, _| {
+                    *acc = Value::I64(acc.as_i64().unwrap() + 1);
+                }),
+            )),
+            Box::new(MapExec(Arc::new(|v: Value| {
+                let (_, c) = v.into_pair().unwrap();
+                c
+            }))),
+        ]);
+        run_chain(&mut ops, vec![Value::I64(7), Value::I64(7)]);
+        let out = flush_chain(&mut ops);
+        assert_eq!(out, vec![Value::I64(2)]);
+    }
+}

@@ -1,0 +1,523 @@
+//! Host runtime: stage-instance worker threads.
+//!
+//! Each planned stage instance runs [`run_instance`] on its own OS thread
+//! (one per simulated core, mirroring Renoir's thread-per-instance
+//! execution). An instance pulls from its input (a source generator, an
+//! in-memory/remote channel inbox, or a queue partition), feeds batches
+//! through the fused operator chain, and routes outputs through its
+//! [`OutPort`]. End-of-stream flushes stateful operators and cascades EOS
+//! downstream.
+
+pub mod exec;
+pub mod xla_exec;
+
+pub use exec::{flush_chain, run_chain, Collector, OpExec};
+
+use crate::channels::{Inbox, OutPort};
+use crate::graph::SourceKind;
+use crate::metrics::{Metrics, MetricsRegistry};
+use crate::queue::Topic;
+use crate::value::{decode_batch, Value};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Source generator state for a source-stage instance.
+pub struct SourceRuntime {
+    /// Source definition.
+    pub kind: SourceKind,
+    /// `(instance_index, instance_count)` split of the input.
+    pub share: (u64, u64),
+    /// Events per emitted batch.
+    pub batch_size: usize,
+    /// Cooperative stop flag (dynamic updates / unbounded sources).
+    pub stop: Arc<AtomicBool>,
+}
+
+/// Where an instance's input comes from.
+pub enum InputKind {
+    /// This instance *is* a source.
+    Source(SourceRuntime),
+    /// Direct channel fed by upstream instances.
+    Inbox(Inbox),
+    /// One partition of a decoupling queue topic (consumer-group member).
+    Queue {
+        /// Topic shared by the FlowUnit boundary.
+        topic: Arc<Topic>,
+        /// Partition index owned by this instance.
+        partition: usize,
+        /// Consumer group (one per downstream FlowUnit instance set).
+        group: String,
+        /// Poll timeout per iteration.
+        poll_timeout: Duration,
+        /// Cooperative stop flag — set during a dynamic update to make the
+        /// instance commit and exit *without* treating it as end-of-stream.
+        stop: Arc<AtomicBool>,
+    },
+}
+
+/// Everything a stage-instance thread needs.
+pub struct InstanceRuntime {
+    /// Instance id (diagnostics).
+    pub id: usize,
+    /// Fused operator chain.
+    pub ops: Vec<Box<dyn OpExec>>,
+    /// Input side.
+    pub input: InputKind,
+    /// Output port (None for terminal sink stages).
+    pub output: Option<OutPort>,
+    /// Job metrics.
+    pub metrics: Metrics,
+}
+
+/// Runs one stage instance to completion. Returns the number of input
+/// batches processed (diagnostics).
+pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
+    let mut batches = 0u64;
+    match rt.input {
+        InputKind::Source(src) => {
+            run_source(src, &mut rt.ops, &mut rt.output, &rt.metrics);
+        }
+        InputKind::Inbox(mut inbox) => {
+            while let Some(batch) = inbox.recv() {
+                batches += 1;
+                let out = run_chain(&mut rt.ops, batch);
+                route(&mut rt.output, out);
+            }
+        }
+        InputKind::Queue {
+            topic,
+            partition,
+            group,
+            poll_timeout,
+            stop,
+        } => {
+            let part = topic.partition(partition);
+            let mut offset = part.committed(&group);
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    // Dynamic update: leave without flushing state — the
+                    // replacement instance resumes from the committed offset.
+                    return batches;
+                }
+                match part.poll(offset, 64, poll_timeout) {
+                    None => break, // closed + drained: end of stream
+                    Some((recs, next)) => {
+                        if recs.is_empty() {
+                            continue; // poll timeout, still open
+                        }
+                        let mut batch = Vec::new();
+                        for r in &recs {
+                            batch.extend(decode_batch(r).expect("corrupt queue record"));
+                        }
+                        batches += 1;
+                        let out = run_chain(&mut rt.ops, batch);
+                        route(&mut rt.output, out);
+                        offset = next;
+                        part.commit(&group, offset);
+                    }
+                }
+            }
+        }
+    }
+    // end of stream: flush stateful operators, cascade EOS
+    let tail = flush_chain(&mut rt.ops);
+    route(&mut rt.output, tail);
+    if let Some(port) = &mut rt.output {
+        port.eos();
+    }
+    batches
+}
+
+fn route(output: &mut Option<OutPort>, batch: Vec<Value>) {
+    if batch.is_empty() {
+        return;
+    }
+    if let Some(port) = output {
+        port.send(batch);
+    }
+}
+
+fn run_source(
+    src: SourceRuntime,
+    ops: &mut [Box<dyn OpExec>],
+    output: &mut Option<OutPort>,
+    metrics: &Metrics,
+) {
+    let (idx, n) = src.share;
+    match &src.kind {
+        SourceKind::Synthetic { total, gen, rate } => {
+            // split `total` across instances: instance idx gets the slice
+            // [lo, hi) of the global event index space.
+            let base = total / n;
+            let rem = total % n;
+            let count = base + if idx < rem { 1 } else { 0 };
+            let lo = idx * base + idx.min(rem);
+            let mut emitted = 0u64;
+            let t0 = std::time::Instant::now();
+            while emitted < count {
+                if src.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let this_batch = (src.batch_size as u64).min(count - emitted);
+                let mut batch = Vec::with_capacity(this_batch as usize);
+                for i in 0..this_batch {
+                    batch.push(gen(idx, lo + emitted + i));
+                }
+                emitted += this_batch;
+                MetricsRegistry::add(&metrics.events_in, this_batch);
+                let out = run_chain(ops, batch);
+                route(output, out);
+                if let Some(r) = rate {
+                    // pace to `r` events/second for this instance
+                    let target = Duration::from_secs_f64(emitted as f64 / r);
+                    let elapsed = t0.elapsed();
+                    if target > elapsed {
+                        std::thread::sleep(target - elapsed);
+                    }
+                }
+            }
+        }
+        SourceKind::Vector(values) => {
+            let mut batch = Vec::with_capacity(src.batch_size);
+            for (i, v) in values.iter().enumerate() {
+                if (i as u64) % n != idx {
+                    continue;
+                }
+                batch.push(v.clone());
+                if batch.len() >= src.batch_size {
+                    MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
+                    let out = run_chain(ops, std::mem::take(&mut batch));
+                    route(output, out);
+                }
+            }
+            if !batch.is_empty() {
+                MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
+                let out = run_chain(ops, batch);
+                route(output, out);
+            }
+        }
+        SourceKind::FileLines(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("source file {}: {e}", path.display()));
+            let mut batch = Vec::with_capacity(src.batch_size);
+            for (i, line) in text.lines().enumerate() {
+                if (i as u64) % n != idx {
+                    continue;
+                }
+                batch.push(Value::Str(line.to_string()));
+                if batch.len() >= src.batch_size {
+                    MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
+                    let out = run_chain(ops, std::mem::take(&mut batch));
+                    route(output, out);
+                }
+            }
+            if !batch.is_empty() {
+                MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
+                let out = run_chain(ops, batch);
+                route(output, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::{Msg, Routing, Target};
+    use crate::graph::SinkKind;
+    use std::sync::mpsc::sync_channel;
+
+    fn collector_sink(
+        metrics: &Metrics,
+    ) -> (Arc<Collector>, Vec<Box<dyn OpExec>>) {
+        let c = Arc::new(Collector::default());
+        let sink: Vec<Box<dyn OpExec>> = vec![Box::new(exec::SinkExec::new(
+            SinkKind::Collect,
+            c.clone(),
+            metrics.clone(),
+        ))];
+        (c, sink)
+    }
+
+    #[test]
+    fn source_instance_generates_share_and_eos() {
+        let metrics = MetricsRegistry::new();
+        let (tx, rx) = sync_channel(64);
+        let port = OutPort::new(
+            vec![Target {
+                tx,
+                link: None,
+                latency: Duration::ZERO,
+                crossing: false,
+            }],
+            Routing::RoundRobin,
+            16,
+            None,
+        );
+        let rt = InstanceRuntime {
+            id: 0,
+            ops: vec![],
+            input: InputKind::Source(SourceRuntime {
+                kind: SourceKind::Synthetic {
+                    total: 10,
+                    gen: Arc::new(|_, i| Value::I64(i as i64)),
+                    rate: None,
+                },
+                share: (1, 3), // instance 1 of 3: 10 = 4+3+3 → count 3, lo 4
+                batch_size: 2,
+                stop: Arc::new(AtomicBool::new(false)),
+            }),
+            output: Some(port),
+            metrics: metrics.clone(),
+        };
+        run_instance(rt);
+        let mut inbox = Inbox::new(rx, 1);
+        let mut got = Vec::new();
+        while let Some(b) = inbox.recv() {
+            got.extend(b.into_iter().map(|v| v.as_i64().unwrap()));
+        }
+        assert_eq!(got, vec![4, 5, 6]);
+        assert_eq!(metrics.events_in.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn synthetic_shares_partition_index_space_exactly() {
+        // all instances together must produce exactly [0, total)
+        let total = 23u64;
+        let n = 5u64;
+        let metrics = MetricsRegistry::new();
+        let mut all = Vec::new();
+        for idx in 0..n {
+            let (tx, rx) = sync_channel(1024);
+            let port = OutPort::new(
+                vec![Target {
+                    tx,
+                    link: None,
+                    latency: Duration::ZERO,
+                    crossing: false,
+                }],
+                Routing::RoundRobin,
+                16,
+                None,
+            );
+            run_instance(InstanceRuntime {
+                id: idx as usize,
+                ops: vec![],
+                input: InputKind::Source(SourceRuntime {
+                    kind: SourceKind::Synthetic {
+                        total,
+                        gen: Arc::new(|_, i| Value::I64(i as i64)),
+                        rate: None,
+                    },
+                    share: (idx, n),
+                    batch_size: 4,
+                    stop: Arc::new(AtomicBool::new(false)),
+                }),
+                output: Some(port),
+                metrics: metrics.clone(),
+            });
+            let mut inbox = Inbox::new(rx, 1);
+            while let Some(b) = inbox.recv() {
+                all.extend(b.into_iter().map(|v| v.as_i64().unwrap()));
+            }
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..total as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn inbox_instance_processes_and_sinks() {
+        let metrics = MetricsRegistry::new();
+        let (tx, rx) = sync_channel(8);
+        let (collector, ops) = collector_sink(&metrics);
+        tx.send(Msg::Batch(vec![Value::I64(1), Value::I64(2)])).unwrap();
+        tx.send(Msg::Eos).unwrap();
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops,
+            input: InputKind::Inbox(Inbox::new(rx, 1)),
+            output: None,
+            metrics: metrics.clone(),
+        });
+        assert_eq!(collector.values.lock().unwrap().len(), 2);
+        assert_eq!(metrics.events_out.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn queue_instance_consumes_commits_and_ends() {
+        let metrics = MetricsRegistry::new();
+        let broker = crate::queue::QueueBroker::in_memory(None);
+        let topic = broker.topic("t", 1).unwrap();
+        topic.register_producer();
+        topic
+            .append(0, &crate::value::encode_batch(&[Value::I64(7)]))
+            .unwrap();
+        topic
+            .append(0, &crate::value::encode_batch(&[Value::I64(8)]))
+            .unwrap();
+        topic.producer_done();
+        let (collector, ops) = collector_sink(&metrics);
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops,
+            input: InputKind::Queue {
+                topic: topic.clone(),
+                partition: 0,
+                group: "g".into(),
+                poll_timeout: Duration::from_millis(20),
+                stop: Arc::new(AtomicBool::new(false)),
+            },
+            output: None,
+            metrics,
+        });
+        assert_eq!(collector.values.lock().unwrap().len(), 2);
+        assert_eq!(topic.partition(0).committed("g"), 2);
+    }
+
+    #[test]
+    fn queue_instance_resumes_from_committed_offset() {
+        let metrics = MetricsRegistry::new();
+        let broker = crate::queue::QueueBroker::in_memory(None);
+        let topic = broker.topic("t", 1).unwrap();
+        topic.register_producer();
+        for i in 0..4 {
+            topic
+                .append(0, &crate::value::encode_batch(&[Value::I64(i)]))
+                .unwrap();
+        }
+        topic.producer_done();
+        topic.partition(0).commit("g", 2); // pretend records 0,1 were handled
+        let (collector, ops) = collector_sink(&metrics);
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops,
+            input: InputKind::Queue {
+                topic: topic.clone(),
+                partition: 0,
+                group: "g".into(),
+                poll_timeout: Duration::from_millis(20),
+                stop: Arc::new(AtomicBool::new(false)),
+            },
+            output: None,
+            metrics,
+        });
+        let got: Vec<i64> = collector
+            .values
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, vec![2, 3]);
+    }
+
+    #[test]
+    fn stop_flag_halts_source_early() {
+        let metrics = MetricsRegistry::new();
+        let stop = Arc::new(AtomicBool::new(true)); // pre-stopped
+        let (tx, rx) = sync_channel(8);
+        let port = OutPort::new(
+            vec![Target {
+                tx,
+                link: None,
+                latency: Duration::ZERO,
+                crossing: false,
+            }],
+            Routing::RoundRobin,
+            16,
+            None,
+        );
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops: vec![],
+            input: InputKind::Source(SourceRuntime {
+                kind: SourceKind::Synthetic {
+                    total: 1_000_000,
+                    gen: Arc::new(|_, i| Value::I64(i as i64)),
+                    rate: None,
+                },
+                share: (0, 1),
+                batch_size: 64,
+                stop,
+            }),
+            output: Some(port),
+            metrics,
+        });
+        let mut inbox = Inbox::new(rx, 1);
+        assert!(inbox.recv().is_none(), "no data, just EOS");
+    }
+
+    #[test]
+    fn vector_source_round_robins_and_flushes_tail() {
+        let metrics = MetricsRegistry::new();
+        let vals: Vec<Value> = (0..7).map(Value::I64).collect();
+        let (tx, rx) = sync_channel(64);
+        let port = OutPort::new(
+            vec![Target {
+                tx,
+                link: None,
+                latency: Duration::ZERO,
+                crossing: false,
+            }],
+            Routing::RoundRobin,
+            16,
+            None,
+        );
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops: vec![],
+            input: InputKind::Source(SourceRuntime {
+                kind: SourceKind::Vector(Arc::new(vals)),
+                share: (0, 2),
+                batch_size: 2,
+                stop: Arc::new(AtomicBool::new(false)),
+            }),
+            output: Some(port),
+            metrics,
+        });
+        let mut inbox = Inbox::new(rx, 1);
+        let mut got = Vec::new();
+        while let Some(b) = inbox.recv() {
+            got.extend(b.into_iter().map(|v| v.as_i64().unwrap()));
+        }
+        assert_eq!(got, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn rate_limited_source_paces_output() {
+        let metrics = MetricsRegistry::new();
+        let (tx, rx) = sync_channel(1024);
+        let port = OutPort::new(
+            vec![Target {
+                tx,
+                link: None,
+                latency: Duration::ZERO,
+                crossing: false,
+            }],
+            Routing::RoundRobin,
+            16,
+            None,
+        );
+        let t0 = std::time::Instant::now();
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops: vec![],
+            input: InputKind::Source(SourceRuntime {
+                kind: SourceKind::Synthetic {
+                    total: 100,
+                    gen: Arc::new(|_, i| Value::I64(i as i64)),
+                    rate: Some(1000.0), // 100 events at 1000 ev/s ≈ 100 ms
+                },
+                share: (0, 1),
+                batch_size: 10,
+                stop: Arc::new(AtomicBool::new(false)),
+            }),
+            output: Some(port),
+            metrics,
+        });
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(80), "ran in {dt:?}");
+        drop(rx);
+    }
+}

@@ -1,0 +1,390 @@
+//! Host capabilities and operator requirement constraints (paper §III).
+//!
+//! Capabilities are attribute-value pairs (`n_cpu = 8`, `gpu = yes`,
+//! `memory = 16GB`). Requirements are conjunctions of Boolean predicates
+//! over those attributes (`n_cpu >= 4 && gpu = yes`). A host satisfies a
+//! requirement iff *all* predicates evaluate to true on its capabilities.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A capability value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CapValue {
+    /// Integer attribute (`n_cpu = 8`).
+    Int(i64),
+    /// Float attribute.
+    Float(f64),
+    /// Boolean attribute (`gpu = yes`).
+    Bool(bool),
+    /// String attribute (`arch = arm64`). `16GB`-style quantities are
+    /// normalised to bytes at parse time when the suffix is recognised.
+    Str(String),
+}
+
+impl CapValue {
+    /// Parses a capability value literal: `yes/no/true/false`, integers,
+    /// floats, size suffixes (`16GB` → bytes), otherwise a string.
+    pub fn parse(s: &str) -> CapValue {
+        let t = s.trim();
+        match t.to_ascii_lowercase().as_str() {
+            "yes" | "true" => return CapValue::Bool(true),
+            "no" | "false" => return CapValue::Bool(false),
+            _ => {}
+        }
+        // size suffixes
+        for (suffix, mult) in [
+            ("tb", 1u64 << 40),
+            ("gb", 1 << 30),
+            ("mb", 1 << 20),
+            ("kb", 1 << 10),
+        ] {
+            let lower = t.to_ascii_lowercase();
+            if let Some(num) = lower.strip_suffix(suffix) {
+                if let Ok(n) = num.trim().parse::<f64>() {
+                    return CapValue::Int((n * mult as f64) as i64);
+                }
+            }
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return CapValue::Int(i);
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return CapValue::Float(f);
+        }
+        CapValue::Str(t.to_string())
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            CapValue::Int(i) => Some(*i as f64),
+            CapValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for CapValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CapValue::Int(i) => write!(f, "{i}"),
+            CapValue::Float(x) => write!(f, "{x}"),
+            CapValue::Bool(b) => write!(f, "{}", if *b { "yes" } else { "no" }),
+            CapValue::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// A host's capability profile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Capabilities {
+    attrs: BTreeMap<String, CapValue>,
+}
+
+impl Capabilities {
+    /// Builds a profile from `(name, value)` pairs.
+    pub fn of(pairs: &[(&str, CapValue)]) -> Self {
+        Capabilities {
+            attrs: pairs
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        }
+    }
+
+    /// Inserts/overwrites an attribute.
+    pub fn set(&mut self, name: &str, value: CapValue) {
+        self.attrs.insert(name.to_string(), value);
+    }
+
+    /// Looks up an attribute.
+    pub fn get(&self, name: &str) -> Option<&CapValue> {
+        self.attrs.get(name)
+    }
+
+    /// Iterates over attributes.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &CapValue)> {
+        self.attrs.iter()
+    }
+}
+
+/// Comparison operator in a predicate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RelOp {
+    /// `=`
+    Eq,
+    /// `!=`
+    Ne,
+    /// `>=`
+    Ge,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `<`
+    Lt,
+}
+
+impl fmt::Display for RelOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            RelOp::Eq => "=",
+            RelOp::Ne => "!=",
+            RelOp::Ge => ">=",
+            RelOp::Le => "<=",
+            RelOp::Gt => ">",
+            RelOp::Lt => "<",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One predicate: `attr op value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Predicate {
+    /// Capability attribute name.
+    pub attr: String,
+    /// Comparison operator.
+    pub op: RelOp,
+    /// Right-hand literal.
+    pub value: CapValue,
+}
+
+impl Predicate {
+    /// Evaluates the predicate against a capability profile. A missing
+    /// attribute fails every predicate except `!=` (absence is "not that
+    /// value") — conservative, mirroring the paper's "must satisfy all".
+    pub fn eval(&self, caps: &Capabilities) -> bool {
+        let Some(have) = caps.get(&self.attr) else {
+            return self.op == RelOp::Ne;
+        };
+        match self.op {
+            RelOp::Eq => cap_eq(have, &self.value),
+            RelOp::Ne => !cap_eq(have, &self.value),
+            RelOp::Ge | RelOp::Le | RelOp::Gt | RelOp::Lt => {
+                let (Some(a), Some(b)) = (have.as_f64(), self.value.as_f64()) else {
+                    return false;
+                };
+                match self.op {
+                    RelOp::Ge => a >= b,
+                    RelOp::Le => a <= b,
+                    RelOp::Gt => a > b,
+                    RelOp::Lt => a < b,
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+fn cap_eq(a: &CapValue, b: &CapValue) -> bool {
+    match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => x == y,
+        _ => a == b,
+    }
+}
+
+impl fmt::Display for Predicate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {} {}", self.attr, self.op, self.value)
+    }
+}
+
+/// A conjunction of predicates — the paper's operator requirement language.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ConstraintExpr {
+    /// All predicates; a host must satisfy every one.
+    pub predicates: Vec<Predicate>,
+}
+
+impl ConstraintExpr {
+    /// Parses a requirement like `n_cpu >= 4 && gpu = yes`.
+    ///
+    /// Grammar: `expr := pred (('&&' | 'AND' | '∧') pred)*`,
+    /// `pred := ident op literal`, `op ∈ {=, !=, >=, <=, >, <}`.
+    pub fn parse(s: &str) -> Result<ConstraintExpr> {
+        let mut predicates = Vec::new();
+        let normalized = s.replace('∧', "&&").replace(" AND ", " && ").replace(" and ", " && ");
+        for part in normalized.split("&&") {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(Error::Constraint(format!("empty predicate in '{s}'")));
+            }
+            predicates.push(Self::parse_pred(part)?);
+        }
+        if predicates.is_empty() {
+            return Err(Error::Constraint("empty constraint".into()));
+        }
+        Ok(ConstraintExpr { predicates })
+    }
+
+    fn parse_pred(p: &str) -> Result<Predicate> {
+        // order matters: two-char ops first
+        for (tok, op) in [
+            (">=", RelOp::Ge),
+            ("<=", RelOp::Le),
+            ("!=", RelOp::Ne),
+            (">", RelOp::Gt),
+            ("<", RelOp::Lt),
+            ("=", RelOp::Eq),
+        ] {
+            if let Some(idx) = p.find(tok) {
+                let attr = p[..idx].trim();
+                let val = p[idx + tok.len()..].trim();
+                if attr.is_empty() || val.is_empty() {
+                    return Err(Error::Constraint(format!("malformed predicate '{p}'")));
+                }
+                if !attr
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+                {
+                    return Err(Error::Constraint(format!("bad attribute name '{attr}'")));
+                }
+                return Ok(Predicate {
+                    attr: attr.to_string(),
+                    op,
+                    value: CapValue::parse(val),
+                });
+            }
+        }
+        Err(Error::Constraint(format!("no operator in predicate '{p}'")))
+    }
+
+    /// True iff all predicates hold on `caps`.
+    pub fn eval(&self, caps: &Capabilities) -> bool {
+        self.predicates.iter().all(|p| p.eval(caps))
+    }
+
+    /// Conjunction of two constraints.
+    pub fn and(mut self, other: ConstraintExpr) -> ConstraintExpr {
+        self.predicates.extend(other.predicates);
+        self
+    }
+}
+
+impl fmt::Display for ConstraintExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self.predicates.iter().map(|p| p.to_string()).collect();
+        write!(f, "{}", parts.join(" && "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu_host() -> Capabilities {
+        Capabilities::of(&[
+            ("n_cpu", CapValue::Int(16)),
+            ("gpu", CapValue::Bool(true)),
+            ("memory", CapValue::parse("16GB")),
+            ("arch", CapValue::Str("x86_64".into())),
+        ])
+    }
+
+    fn edge_host() -> Capabilities {
+        Capabilities::of(&[("n_cpu", CapValue::Int(1)), ("gpu", CapValue::Bool(false))])
+    }
+
+    #[test]
+    fn paper_example_constraint() {
+        // the paper's ML operator: n_cpu >= 4 ∧ gpu = yes
+        let e = ConstraintExpr::parse("n_cpu >= 4 && gpu = yes").unwrap();
+        assert!(e.eval(&gpu_host()));
+        assert!(!e.eval(&edge_host()));
+        // unicode conjunction also accepted
+        let e2 = ConstraintExpr::parse("n_cpu >= 4 ∧ gpu = yes").unwrap();
+        assert_eq!(e, e2);
+    }
+
+    #[test]
+    fn numeric_comparisons() {
+        let caps = gpu_host();
+        for (expr, expect) in [
+            ("n_cpu > 15", true),
+            ("n_cpu > 16", false),
+            ("n_cpu >= 16", true),
+            ("n_cpu < 17", true),
+            ("n_cpu <= 15", false),
+            ("n_cpu != 4", true),
+            ("n_cpu = 16", true),
+        ] {
+            assert_eq!(
+                ConstraintExpr::parse(expr).unwrap().eval(&caps),
+                expect,
+                "{expr}"
+            );
+        }
+    }
+
+    #[test]
+    fn memory_size_suffix_normalises_to_bytes() {
+        let e = ConstraintExpr::parse("memory >= 8GB").unwrap();
+        assert!(e.eval(&gpu_host()));
+        let e = ConstraintExpr::parse("memory >= 32GB").unwrap();
+        assert!(!e.eval(&gpu_host()));
+    }
+
+    #[test]
+    fn string_equality() {
+        let e = ConstraintExpr::parse("arch = x86_64").unwrap();
+        assert!(e.eval(&gpu_host()));
+        let e = ConstraintExpr::parse("arch = arm64").unwrap();
+        assert!(!e.eval(&gpu_host()));
+    }
+
+    #[test]
+    fn missing_attribute_fails_except_ne() {
+        let caps = edge_host();
+        assert!(!ConstraintExpr::parse("tpu = yes").unwrap().eval(&caps));
+        assert!(!ConstraintExpr::parse("tpu >= 1").unwrap().eval(&caps));
+        assert!(ConstraintExpr::parse("tpu != yes").unwrap().eval(&caps));
+    }
+
+    #[test]
+    fn bool_aliases() {
+        let caps = gpu_host();
+        assert!(ConstraintExpr::parse("gpu = true").unwrap().eval(&caps));
+        assert!(ConstraintExpr::parse("gpu != no").unwrap().eval(&caps));
+    }
+
+    #[test]
+    fn int_float_cross_comparison() {
+        let caps = Capabilities::of(&[("clock", CapValue::Float(3.5))]);
+        assert!(ConstraintExpr::parse("clock >= 3").unwrap().eval(&caps));
+        assert!(ConstraintExpr::parse("clock = 3.5").unwrap().eval(&caps));
+    }
+
+    #[test]
+    fn ordering_on_string_fails_closed() {
+        let caps = gpu_host();
+        assert!(!ConstraintExpr::parse("arch >= 4").unwrap().eval(&caps));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(ConstraintExpr::parse("").is_err());
+        assert!(ConstraintExpr::parse("gpu").is_err());
+        assert!(ConstraintExpr::parse("gpu = yes && ").is_err());
+        assert!(ConstraintExpr::parse("bad attr! = 3").is_err());
+        assert!(ConstraintExpr::parse(" = 3").is_err());
+    }
+
+    #[test]
+    fn and_composes() {
+        let a = ConstraintExpr::parse("gpu = yes").unwrap();
+        let b = ConstraintExpr::parse("n_cpu >= 4").unwrap();
+        let c = a.and(b);
+        assert!(c.eval(&gpu_host()));
+        assert!(!c.eval(&edge_host()));
+        assert_eq!(c.to_string(), "gpu = yes && n_cpu >= 4");
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let e = ConstraintExpr::parse("n_cpu >= 4 && gpu = yes && arch = x86_64").unwrap();
+        let e2 = ConstraintExpr::parse(&e.to_string()).unwrap();
+        assert_eq!(e, e2);
+    }
+}

@@ -1,0 +1,393 @@
+//! The continuum topology model: layers, locations, zones, hosts,
+//! capabilities, and operator requirement constraints (paper §III).
+//!
+//! Zones live in a two-dimensional space — a *layer* (edge → site → cloud,
+//! increasing computational capability toward the centre) and a set of
+//! geographical *locations* the zone covers — and are organised in a tree
+//! whose edges are the only paths data may follow across zones.
+
+mod constraint;
+
+pub use constraint::{CapValue, Capabilities, ConstraintExpr, Predicate, RelOp};
+
+use crate::error::{Error, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Layer name, e.g. `edge`, `site`, `cloud` (ordered: index 0 is the
+/// outermost periphery).
+pub type LayerId = String;
+/// Geographical location label, e.g. `L1`.
+pub type LocationId = String;
+/// Zone name, e.g. `E1`, `S1`, `C1`.
+pub type ZoneId = String;
+/// Host name.
+pub type HostId = String;
+
+/// A geographical zone: a set of well-connected hosts at one layer,
+/// covering one or more locations.
+#[derive(Debug, Clone)]
+pub struct Zone {
+    /// Zone name.
+    pub id: ZoneId,
+    /// The layer this zone belongs to.
+    pub layer: LayerId,
+    /// Locations covered by this zone.
+    pub locations: Vec<LocationId>,
+    /// Parent zone in the tree (`None` for the root, i.e. the cloud).
+    pub parent: Option<ZoneId>,
+}
+
+/// A compute host inside a zone.
+#[derive(Debug, Clone)]
+pub struct Host {
+    /// Host name.
+    pub id: HostId,
+    /// Zone this host belongs to.
+    pub zone: ZoneId,
+    /// Number of CPU cores (bounds operator replication, Renoir-style).
+    pub cores: usize,
+    /// Advertised capabilities (always includes `n_cpu`).
+    pub caps: Capabilities,
+}
+
+/// The full continuum topology.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    /// Layer names ordered from periphery (index 0) to centre.
+    pub layers: Vec<LayerId>,
+    /// Zones by id.
+    pub zones: BTreeMap<ZoneId, Zone>,
+    /// Hosts by id.
+    pub hosts: BTreeMap<HostId, Host>,
+}
+
+impl Topology {
+    /// Index of a layer in the periphery→centre order.
+    pub fn layer_index(&self, layer: &str) -> Result<usize> {
+        self.layers
+            .iter()
+            .position(|l| l == layer)
+            .ok_or_else(|| Error::Topology(format!("unknown layer '{layer}'")))
+    }
+
+    /// All zones at a given layer.
+    pub fn zones_at_layer(&self, layer: &str) -> Vec<&Zone> {
+        self.zones.values().filter(|z| z.layer == layer).collect()
+    }
+
+    /// All hosts in a given zone.
+    pub fn hosts_in_zone(&self, zone: &str) -> Vec<&Host> {
+        self.hosts.values().filter(|h| h.zone == zone).collect()
+    }
+
+    /// The zone at `layer` that covers `location`, if any.
+    ///
+    /// Per the paper, a location is covered by exactly one zone per layer
+    /// (e.g. L1 is covered by E1 at the edge, S1 at the site layer, C1 in
+    /// the cloud); [`validate`](Self::validate) enforces uniqueness.
+    pub fn covering_zone(&self, layer: &str, location: &str) -> Option<&Zone> {
+        self.zones
+            .values()
+            .find(|z| z.layer == layer && z.locations.iter().any(|l| l == location))
+    }
+
+    /// Whether `child` is directly connected to `parent` in the zone tree.
+    pub fn is_tree_edge(&self, child: &str, parent: &str) -> bool {
+        self.zones
+            .get(child)
+            .and_then(|z| z.parent.as_deref())
+            .map(|p| p == parent)
+            .unwrap_or(false)
+    }
+
+    /// Walks the unique tree path from `from` upward and returns it
+    /// (inclusive of both ends) if `to` is an ancestor of `from`.
+    pub fn path_up(&self, from: &str, to: &str) -> Option<Vec<ZoneId>> {
+        let mut path = vec![from.to_string()];
+        let mut cur = from.to_string();
+        let mut hops = 0;
+        while cur != to {
+            let z = self.zones.get(&cur)?;
+            let p = z.parent.clone()?;
+            path.push(p.clone());
+            cur = p;
+            hops += 1;
+            if hops > self.zones.len() {
+                return None; // cycle guard (validate() rejects cycles anyway)
+            }
+        }
+        Some(path)
+    }
+
+    /// All hosts at a zone whose capabilities satisfy `expr` (or all hosts
+    /// when `expr` is `None`).
+    pub fn matching_hosts<'a>(
+        &'a self,
+        zone: &str,
+        expr: Option<&ConstraintExpr>,
+    ) -> Vec<&'a Host> {
+        self.hosts_in_zone(zone)
+            .into_iter()
+            .filter(|h| expr.map(|e| e.eval(&h.caps)).unwrap_or(true))
+            .collect()
+    }
+
+    /// Validates the topology:
+    /// * every zone's layer exists and parents are at the next layer inward;
+    /// * the zone graph is a tree (single root, no cycles);
+    /// * every location is covered by at most one zone per layer;
+    /// * hosts reference existing zones and have ≥ 1 core.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            return Err(Error::Topology("no layers defined".into()));
+        }
+        let mut roots = 0;
+        for z in self.zones.values() {
+            let li = self.layer_index(&z.layer)?;
+            match &z.parent {
+                None => {
+                    roots += 1;
+                    if li != self.layers.len() - 1 {
+                        return Err(Error::Topology(format!(
+                            "zone '{}' has no parent but is not at the innermost layer",
+                            z.id
+                        )));
+                    }
+                }
+                Some(p) => {
+                    let pz = self
+                        .zones
+                        .get(p)
+                        .ok_or_else(|| Error::Topology(format!("zone '{}' has unknown parent '{p}'", z.id)))?;
+                    let pi = self.layer_index(&pz.layer)?;
+                    if pi != li + 1 {
+                        return Err(Error::Topology(format!(
+                            "zone '{}' (layer {}) has parent '{}' at layer {} — parents must be exactly one layer inward",
+                            z.id, z.layer, pz.id, pz.layer
+                        )));
+                    }
+                }
+            }
+        }
+        if self.zones.is_empty() {
+            return Err(Error::Topology("no zones defined".into()));
+        }
+        if roots != 1 {
+            return Err(Error::Topology(format!(
+                "zone tree must have exactly one root, found {roots}"
+            )));
+        }
+        // acyclicity + reachability: walk up from every zone.
+        for z in self.zones.values() {
+            let mut cur = z.id.clone();
+            let mut hops = 0;
+            while let Some(p) = self.zones.get(&cur).and_then(|zz| zz.parent.clone()) {
+                cur = p;
+                hops += 1;
+                if hops > self.zones.len() {
+                    return Err(Error::Topology(format!("cycle through zone '{}'", z.id)));
+                }
+            }
+        }
+        // location uniqueness per layer
+        for layer in &self.layers {
+            let mut seen: BTreeSet<&str> = BTreeSet::new();
+            for z in self.zones.values().filter(|z| &z.layer == layer) {
+                for loc in &z.locations {
+                    if !seen.insert(loc) {
+                        return Err(Error::Topology(format!(
+                            "location '{loc}' covered by multiple zones at layer '{layer}'"
+                        )));
+                    }
+                }
+            }
+        }
+        // parent zones must cover their children's locations so that a
+        // location's per-layer covering zones form a tree path.
+        for z in self.zones.values() {
+            if let Some(p) = &z.parent {
+                let pz = &self.zones[p];
+                for loc in &z.locations {
+                    if !pz.locations.iter().any(|l| l == loc) {
+                        return Err(Error::Topology(format!(
+                            "zone '{}' covers location '{loc}' but its parent '{}' does not",
+                            z.id, pz.id
+                        )));
+                    }
+                }
+            }
+        }
+        for h in self.hosts.values() {
+            if !self.zones.contains_key(&h.zone) {
+                return Err(Error::Topology(format!(
+                    "host '{}' references unknown zone '{}'",
+                    h.id, h.zone
+                )));
+            }
+            if h.cores == 0 {
+                return Err(Error::Topology(format!("host '{}' has 0 cores", h.id)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total core count across all hosts (Renoir's default replication
+    /// factor for each operator).
+    pub fn total_cores(&self) -> usize {
+        self.hosts.values().map(|h| h.cores).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 2 topology: 5 edge zones, 2 sites, 1 cloud.
+    pub fn fig2() -> Topology {
+        let mut t = Topology {
+            layers: vec!["edge".into(), "site".into(), "cloud".into()],
+            ..Default::default()
+        };
+        let zone = |id: &str, layer: &str, locs: &[&str], parent: Option<&str>| Zone {
+            id: id.into(),
+            layer: layer.into(),
+            locations: locs.iter().map(|s| s.to_string()).collect(),
+            parent: parent.map(|s| s.to_string()),
+        };
+        for (id, locs, parent) in [
+            ("E1", vec!["L1"], Some("S1")),
+            ("E2", vec!["L2"], Some("S1")),
+            ("E3", vec!["L3"], Some("S1")),
+            ("E4", vec!["L4"], Some("S2")),
+            ("E5", vec!["L5"], Some("S2")),
+        ] {
+            let locs: Vec<&str> = locs;
+            t.zones.insert(id.into(), zone(id, "edge", &locs, parent));
+        }
+        t.zones.insert(
+            "S1".into(),
+            zone("S1", "site", &["L1", "L2", "L3"], Some("C1")),
+        );
+        t.zones
+            .insert("S2".into(), zone("S2", "site", &["L4", "L5"], Some("C1")));
+        t.zones.insert(
+            "C1".into(),
+            zone("C1", "cloud", &["L1", "L2", "L3", "L4", "L5"], None),
+        );
+        for (i, z) in ["E1", "E2", "E3", "E4", "E5"].iter().enumerate() {
+            t.hosts.insert(
+                format!("e{}", i + 1),
+                Host {
+                    id: format!("e{}", i + 1),
+                    zone: z.to_string(),
+                    cores: 1,
+                    caps: Capabilities::of(&[("n_cpu", CapValue::Int(1))]),
+                },
+            );
+        }
+        t.hosts.insert(
+            "s1a".into(),
+            Host {
+                id: "s1a".into(),
+                zone: "S1".into(),
+                cores: 4,
+                caps: Capabilities::of(&[("n_cpu", CapValue::Int(4))]),
+            },
+        );
+        t.hosts.insert(
+            "c1a".into(),
+            Host {
+                id: "c1a".into(),
+                zone: "C1".into(),
+                cores: 16,
+                caps: Capabilities::of(&[
+                    ("n_cpu", CapValue::Int(16)),
+                    ("gpu", CapValue::Bool(true)),
+                ]),
+            },
+        );
+        t
+    }
+
+    #[test]
+    fn fig2_validates() {
+        fig2().validate().unwrap();
+    }
+
+    #[test]
+    fn covering_zone_resolution() {
+        let t = fig2();
+        assert_eq!(t.covering_zone("edge", "L1").unwrap().id, "E1");
+        assert_eq!(t.covering_zone("site", "L1").unwrap().id, "S1");
+        assert_eq!(t.covering_zone("site", "L4").unwrap().id, "S2");
+        assert_eq!(t.covering_zone("cloud", "L5").unwrap().id, "C1");
+        assert!(t.covering_zone("edge", "L99").is_none());
+    }
+
+    #[test]
+    fn tree_paths() {
+        let t = fig2();
+        assert_eq!(
+            t.path_up("E1", "C1").unwrap(),
+            vec!["E1".to_string(), "S1".into(), "C1".into()]
+        );
+        assert!(t.is_tree_edge("E1", "S1"));
+        assert!(!t.is_tree_edge("E1", "S2"));
+        assert!(!t.is_tree_edge("E1", "C1")); // not direct
+        assert!(t.path_up("E4", "S1").is_none()); // wrong branch
+    }
+
+    #[test]
+    fn rejects_two_roots() {
+        let mut t = fig2();
+        t.zones.get_mut("S2").unwrap().parent = None;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_layer_skip() {
+        let mut t = fig2();
+        t.zones.get_mut("E1").unwrap().parent = Some("C1".into());
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_location_coverage() {
+        let mut t = fig2();
+        t.zones.get_mut("E2").unwrap().locations = vec!["L1".into()];
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_parent_not_covering_child_location() {
+        let mut t = fig2();
+        t.zones.get_mut("E1").unwrap().locations = vec!["L1".into(), "L4".into()];
+        // also breaks uniqueness with E4 -> use a fresh location instead
+        t.zones.get_mut("E1").unwrap().locations = vec!["L1".into(), "L9".into()];
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_core_host() {
+        let mut t = fig2();
+        t.hosts.get_mut("e1").unwrap().cores = 0;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn matching_hosts_filters_by_constraint() {
+        let t = fig2();
+        let expr = ConstraintExpr::parse("gpu = yes").unwrap();
+        let hosts = t.matching_hosts("C1", Some(&expr));
+        assert_eq!(hosts.len(), 1);
+        assert_eq!(hosts[0].id, "c1a");
+        let none = t.matching_hosts("S1", Some(&expr));
+        assert!(none.is_empty());
+        assert_eq!(t.matching_hosts("S1", None).len(), 1);
+    }
+
+    #[test]
+    fn total_cores_sums() {
+        assert_eq!(fig2().total_cores(), 5 + 4 + 16);
+    }
+}

@@ -1,0 +1,210 @@
+//! Small shared utilities: deterministic PRNG, unit parsing, formatting.
+
+use std::time::Duration;
+
+/// xorshift64* PRNG — deterministic, dependency-free. Used by synthetic
+/// sources, the property-test harness, and shuffling decisions that must be
+/// reproducible across runs.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Creates a generator from a non-zero seed (zero is mapped away).
+    pub fn new(seed: u64) -> Self {
+        XorShift64 {
+            state: seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1,
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift bound mapping; bias negligible for our n.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn gen_f32(&mut self) -> f32 {
+        self.gen_f64() as f32
+    }
+
+    /// Bernoulli draw.
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Approximately normal draw (Irwin–Hall, 12 uniforms).
+    pub fn gen_normal(&mut self, mean: f64, std: f64) -> f64 {
+        let s: f64 = (0..12).map(|_| self.gen_f64()).sum();
+        mean + (s - 6.0) * std
+    }
+
+    /// Picks a random element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len() as u64) as usize]
+    }
+}
+
+/// Parses a bandwidth string: `unlimited`, `10Mbit`, `1Gbit`, `100kbit`,
+/// `1000bit`, case-insensitive, optional `/s` suffix. Returns bits/second,
+/// `None` meaning unlimited.
+pub fn parse_bandwidth(s: &str) -> Option<Option<u64>> {
+    let s = s.trim().to_ascii_lowercase();
+    let s = s.strip_suffix("/s").unwrap_or(&s);
+    if s == "unlimited" || s == "inf" || s == "none" {
+        return Some(None);
+    }
+    let (mult, rest) = if let Some(r) = s.strip_suffix("gbit") {
+        (1_000_000_000u64, r)
+    } else if let Some(r) = s.strip_suffix("mbit") {
+        (1_000_000, r)
+    } else if let Some(r) = s.strip_suffix("kbit") {
+        (1_000, r)
+    } else if let Some(r) = s.strip_suffix("bit") {
+        (1, r)
+    } else {
+        return None;
+    };
+    let num: f64 = rest.trim().parse().ok()?;
+    if num <= 0.0 {
+        return None;
+    }
+    Some(Some((num * mult as f64) as u64))
+}
+
+/// Parses a duration string: `0ms`, `10ms`, `1s`, `100us`, `2m`.
+pub fn parse_duration(s: &str) -> Option<Duration> {
+    let s = s.trim().to_ascii_lowercase();
+    let (mult_ns, rest) = if let Some(r) = s.strip_suffix("ms") {
+        (1_000_000u64, r)
+    } else if let Some(r) = s.strip_suffix("us") {
+        (1_000, r)
+    } else if let Some(r) = s.strip_suffix("ns") {
+        (1, r)
+    } else if let Some(r) = s.strip_suffix('m') {
+        (60_000_000_000, r)
+    } else if let Some(r) = s.strip_suffix('s') {
+        (1_000_000_000, r)
+    } else {
+        return None;
+    };
+    let num: f64 = rest.trim().parse().ok()?;
+    if num < 0.0 {
+        return None;
+    }
+    Some(Duration::from_nanos((num * mult_ns as f64) as u64))
+}
+
+/// Formats a byte count with binary units.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Formats events/second.
+pub fn fmt_rate(events: u64, wall: Duration) -> String {
+    let secs = wall.as_secs_f64();
+    if secs <= 0.0 {
+        return "inf ev/s".into();
+    }
+    let r = events as f64 / secs;
+    if r >= 1e6 {
+        format!("{:.2} Mev/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} kev/s", r / 1e3)
+    } else {
+        format!("{r:.0} ev/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_range_bounds() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..10_000 {
+            let v = r.gen_range(13);
+            assert!(v < 13);
+        }
+    }
+
+    #[test]
+    fn rng_f64_bounds_and_spread() {
+        let mut r = XorShift64::new(99);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn bandwidth_parsing() {
+        assert_eq!(parse_bandwidth("unlimited"), Some(None));
+        assert_eq!(parse_bandwidth("10Mbit"), Some(Some(10_000_000)));
+        assert_eq!(parse_bandwidth("1Gbit"), Some(Some(1_000_000_000)));
+        assert_eq!(parse_bandwidth("100Mbit/s"), Some(Some(100_000_000)));
+        assert_eq!(parse_bandwidth("2.5gbit"), Some(Some(2_500_000_000)));
+        assert_eq!(parse_bandwidth("100kbit"), Some(Some(100_000)));
+        assert_eq!(parse_bandwidth("garbage"), None);
+        assert_eq!(parse_bandwidth("-5Mbit"), None);
+    }
+
+    #[test]
+    fn duration_parsing() {
+        assert_eq!(parse_duration("0ms"), Some(Duration::ZERO));
+        assert_eq!(parse_duration("10ms"), Some(Duration::from_millis(10)));
+        assert_eq!(parse_duration("1s"), Some(Duration::from_secs(1)));
+        assert_eq!(parse_duration("100us"), Some(Duration::from_micros(100)));
+        assert_eq!(parse_duration("1.5s"), Some(Duration::from_millis(1500)));
+        assert_eq!(parse_duration("oops"), None);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+}

@@ -1,0 +1,540 @@
+//! Dynamic event values flowing through the dataflow graph.
+//!
+//! The engine is dynamically typed: every event is a [`Value`]. This keeps
+//! operator plumbing, cross-host serialization, and the queue substrate
+//! simple while still covering every workload in the paper (sensor readings,
+//! words, windowed feature vectors, anomaly scores).
+//!
+//! Values that cross a host boundary are encoded with the compact binary
+//! codec in this module (tag byte + payload, varint lengths); values that
+//! stay on the same host move by pointer.
+
+use crate::error::{Error, Result};
+
+/// A dynamically-typed event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Absence of a value.
+    Null,
+    /// Boolean.
+    Bool(bool),
+    /// 64-bit signed integer.
+    I64(i64),
+    /// 64-bit float.
+    F64(f64),
+    /// UTF-8 string.
+    Str(String),
+    /// Pair (used for keyed records: `(key, payload)`). Single-boxed:
+    /// one allocation per keyed event instead of two (hot-path relevant,
+    /// see EXPERIMENTS.md §Perf).
+    Pair(Box<(Value, Value)>),
+    /// Heterogeneous list.
+    List(Vec<Value>),
+    /// Dense f32 vector (feature vectors fed to the XLA operator).
+    F32s(Vec<f32>),
+}
+
+impl Value {
+    /// Convenience constructor for a keyed record.
+    pub fn pair(k: Value, v: Value) -> Value {
+        Value::Pair(Box::new((k, v)))
+    }
+
+    /// Returns the integer payload, if this is an `I64`.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::I64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Returns the float payload for `F64` (or converting `I64`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(v) => Some(*v),
+            Value::I64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// Returns the string payload, if this is a `Str`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Returns `(key, value)` references, if this is a `Pair`.
+    pub fn as_pair(&self) -> Option<(&Value, &Value)> {
+        match self {
+            Value::Pair(kv) => Some((&kv.0, &kv.1)),
+            _ => None,
+        }
+    }
+
+    /// Consumes a `Pair`, returning its parts.
+    pub fn into_pair(self) -> Option<(Value, Value)> {
+        match self {
+            Value::Pair(kv) => Some((kv.0, kv.1)),
+            _ => None,
+        }
+    }
+
+    /// Returns the f32 vector, if this is `F32s`.
+    pub fn as_f32s(&self) -> Option<&[f32]> {
+        match self {
+            Value::F32s(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Returns the list elements, if this is a `List`.
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Stable 64-bit hash of the value, used for key partitioning.
+    ///
+    /// Every sender must agree on `hash(key) % n_instances`, so this must be
+    /// deterministic across hosts — we use FNV-1a over the canonical
+    /// encoding of the value.
+    pub fn stable_hash(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        self.hash_into(&mut h);
+        h.finish()
+    }
+
+    fn hash_into(&self, h: &mut Fnv1a) {
+        match self {
+            Value::Null => h.write_u8(0),
+            Value::Bool(b) => {
+                h.write_u8(1);
+                h.write_u8(*b as u8);
+            }
+            Value::I64(v) => {
+                h.write_u8(2);
+                h.write(&v.to_le_bytes());
+            }
+            Value::F64(v) => {
+                h.write_u8(3);
+                h.write(&v.to_bits().to_le_bytes());
+            }
+            Value::Str(s) => {
+                h.write_u8(4);
+                h.write(s.as_bytes());
+            }
+            Value::Pair(kv) => {
+                h.write_u8(5);
+                kv.0.hash_into(h);
+                kv.1.hash_into(h);
+            }
+            Value::List(vs) => {
+                h.write_u8(6);
+                for v in vs {
+                    v.hash_into(h);
+                }
+            }
+            Value::F32s(vs) => {
+                h.write_u8(7);
+                for v in vs {
+                    h.write(&v.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Approximate in-memory footprint when serialized, in bytes. Used by
+    /// the network emulation layer for bandwidth accounting without paying
+    /// for a full encode when channels stay in-process.
+    pub fn encoded_size(&self) -> usize {
+        match self {
+            Value::Null => 1,
+            Value::Bool(_) => 2,
+            Value::I64(_) => 9,
+            Value::F64(_) => 9,
+            Value::Str(s) => 1 + varint_len(s.len() as u64) + s.len(),
+            Value::Pair(kv) => 1 + kv.0.encoded_size() + kv.1.encoded_size(),
+            Value::List(vs) => {
+                1 + varint_len(vs.len() as u64) + vs.iter().map(|v| v.encoded_size()).sum::<usize>()
+            }
+            Value::F32s(vs) => 1 + varint_len(vs.len() as u64) + 4 * vs.len(),
+        }
+    }
+
+    /// Appends the canonical binary encoding of `self` to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Value::Null => out.push(TAG_NULL),
+            Value::Bool(b) => {
+                out.push(TAG_BOOL);
+                out.push(*b as u8);
+            }
+            Value::I64(v) => {
+                out.push(TAG_I64);
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            Value::F64(v) => {
+                out.push(TAG_F64);
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            Value::Str(s) => {
+                out.push(TAG_STR);
+                write_varint(out, s.len() as u64);
+                out.extend_from_slice(s.as_bytes());
+            }
+            Value::Pair(kv) => {
+                out.push(TAG_PAIR);
+                kv.0.encode_into(out);
+                kv.1.encode_into(out);
+            }
+            Value::List(vs) => {
+                out.push(TAG_LIST);
+                write_varint(out, vs.len() as u64);
+                for v in vs {
+                    v.encode_into(out);
+                }
+            }
+            Value::F32s(vs) => {
+                out.push(TAG_F32S);
+                write_varint(out, vs.len() as u64);
+                for v in vs {
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Encodes `self` into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_size());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Decodes one value from the front of `cur`.
+    pub fn decode(cur: &mut Cursor<'_>) -> Result<Value> {
+        let tag = cur.u8()?;
+        Ok(match tag {
+            TAG_NULL => Value::Null,
+            TAG_BOOL => Value::Bool(cur.u8()? != 0),
+            TAG_I64 => Value::I64(i64::from_le_bytes(cur.array()?)),
+            TAG_F64 => Value::F64(f64::from_bits(u64::from_le_bytes(cur.array()?))),
+            TAG_STR => {
+                let n = cur.varint()? as usize;
+                let bytes = cur.take(n)?;
+                Value::Str(
+                    String::from_utf8(bytes.to_vec())
+                        .map_err(|_| Error::Codec("invalid utf-8 in Str".into()))?,
+                )
+            }
+            TAG_PAIR => {
+                let k = Value::decode(cur)?;
+                let v = Value::decode(cur)?;
+                Value::pair(k, v)
+            }
+            TAG_LIST => {
+                let n = cur.varint()? as usize;
+                if n > cur.remaining() {
+                    return Err(Error::Codec(format!("list length {n} exceeds frame")));
+                }
+                let mut vs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    vs.push(Value::decode(cur)?);
+                }
+                Value::List(vs)
+            }
+            TAG_F32S => {
+                let n = cur.varint()? as usize;
+                if n * 4 > cur.remaining() {
+                    return Err(Error::Codec(format!("f32s length {n} exceeds frame")));
+                }
+                let mut vs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    vs.push(f32::from_bits(u32::from_le_bytes(cur.array()?)));
+                }
+                Value::F32s(vs)
+            }
+            t => return Err(Error::Codec(format!("unknown value tag {t}"))),
+        })
+    }
+
+    /// Decodes a value from a standalone buffer, requiring full consumption.
+    pub fn decode_exact(buf: &[u8]) -> Result<Value> {
+        let mut cur = Cursor::new(buf);
+        let v = Value::decode(&mut cur)?;
+        if cur.remaining() != 0 {
+            return Err(Error::Codec(format!(
+                "{} trailing bytes after value",
+                cur.remaining()
+            )));
+        }
+        Ok(v)
+    }
+}
+
+const TAG_NULL: u8 = 0;
+const TAG_BOOL: u8 = 1;
+const TAG_I64: u8 = 2;
+const TAG_F64: u8 = 3;
+const TAG_STR: u8 = 4;
+const TAG_PAIR: u8 = 5;
+const TAG_LIST: u8 = 6;
+const TAG_F32S: u8 = 7;
+
+/// Encodes a batch of values as one frame body (count-prefixed).
+pub fn encode_batch(batch: &[Value]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + batch.iter().map(|v| v.encoded_size()).sum::<usize>());
+    write_varint(&mut out, batch.len() as u64);
+    for v in batch {
+        v.encode_into(&mut out);
+    }
+    out
+}
+
+/// Decodes a frame body produced by [`encode_batch`].
+pub fn decode_batch(buf: &[u8]) -> Result<Vec<Value>> {
+    let mut cur = Cursor::new(buf);
+    let n = cur.varint()? as usize;
+    if n > buf.len() {
+        return Err(Error::Codec(format!("batch count {n} exceeds frame")));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(Value::decode(&mut cur)?);
+    }
+    if cur.remaining() != 0 {
+        return Err(Error::Codec("trailing bytes after batch".into()));
+    }
+    Ok(out)
+}
+
+/// Byte cursor for decoding.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    /// Creates a cursor over `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        if self.pos >= self.buf.len() {
+            return Err(Error::Codec("unexpected end of frame".into()));
+        }
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Codec("unexpected end of frame".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        let mut a = [0u8; N];
+        a.copy_from_slice(s);
+        Ok(a)
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0;
+        loop {
+            let b = self.u8()?;
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift >= 64 {
+                return Err(Error::Codec("varint overflow".into()));
+            }
+        }
+    }
+}
+
+/// LEB128 varint encoding.
+pub fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn varint_len(v: u64) -> usize {
+    let bits = 64 - v.leading_zeros().max(0) as usize;
+    std::cmp::max(1, bits.div_ceil(7))
+}
+
+/// FNV-1a 64-bit hasher (deterministic across hosts/platforms).
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    /// Creates a hasher with the standard offset basis.
+    pub fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Absorbs one byte.
+    pub fn write_u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x1_0000_01b3);
+    }
+
+    /// Absorbs a byte slice.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    /// Finalizes the hash.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: Value) {
+        let enc = v.encode();
+        assert_eq!(enc.len(), v.encoded_size(), "encoded_size mismatch for {v:?}");
+        let dec = Value::decode_exact(&enc).unwrap();
+        assert_eq!(v, dec);
+    }
+
+    #[test]
+    fn roundtrip_scalars() {
+        roundtrip(Value::Null);
+        roundtrip(Value::Bool(true));
+        roundtrip(Value::Bool(false));
+        roundtrip(Value::I64(0));
+        roundtrip(Value::I64(-1));
+        roundtrip(Value::I64(i64::MAX));
+        roundtrip(Value::I64(i64::MIN));
+        roundtrip(Value::F64(3.25));
+        // NaN compares unequal to itself; bit preservation is covered by
+        // `nan_roundtrip_preserves_bits` below.
+    }
+
+    #[test]
+    fn roundtrip_composites() {
+        roundtrip(Value::Str(String::new()));
+        roundtrip(Value::Str("héllo wörld".into()));
+        roundtrip(Value::pair(Value::Str("k".into()), Value::I64(7)));
+        roundtrip(Value::List(vec![
+            Value::I64(1),
+            Value::Str("x".into()),
+            Value::pair(Value::Null, Value::F64(2.0)),
+        ]));
+        roundtrip(Value::F32s(vec![]));
+        roundtrip(Value::F32s(vec![1.0, -2.5, f32::INFINITY]));
+    }
+
+    #[test]
+    fn nan_roundtrip_preserves_bits() {
+        let v = Value::F64(f64::from_bits(0x7ff8_dead_beef_0001));
+        let dec = Value::decode_exact(&v.encode()).unwrap();
+        match dec {
+            Value::F64(f) => assert_eq!(f.to_bits(), 0x7ff8_dead_beef_0001),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let batch: Vec<Value> = (0..100)
+            .map(|i| Value::pair(Value::I64(i), Value::Str(format!("v{i}"))))
+            .collect();
+        let enc = encode_batch(&batch);
+        let dec = decode_batch(&enc).unwrap();
+        assert_eq!(batch, dec);
+    }
+
+    #[test]
+    fn empty_batch_roundtrip() {
+        let enc = encode_batch(&[]);
+        assert_eq!(decode_batch(&enc).unwrap(), Vec::<Value>::new());
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let enc = Value::Str("hello".into()).encode();
+        for cut in 0..enc.len() {
+            assert!(Value::decode_exact(&enc[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_trailing_garbage() {
+        let mut enc = Value::I64(1).encode();
+        enc.push(0);
+        assert!(Value::decode_exact(&enc).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_bad_tag() {
+        assert!(Value::decode_exact(&[200]).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_huge_list_len() {
+        // tag LIST + varint claiming 2^40 entries
+        let mut buf = vec![TAG_LIST];
+        write_varint(&mut buf, 1 << 40);
+        assert!(Value::decode_exact(&buf).is_err());
+    }
+
+    #[test]
+    fn stable_hash_is_deterministic_and_discriminates() {
+        let a = Value::Str("alpha".into()).stable_hash();
+        let b = Value::Str("alpha".into()).stable_hash();
+        let c = Value::Str("beta".into()).stable_hash();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // I64(1) and Bool(true) must not collide via tag bytes
+        assert_ne!(Value::I64(1).stable_hash(), Value::Bool(true).stable_hash());
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let mut cur = Cursor::new(&buf);
+            assert_eq!(cur.varint().unwrap(), v);
+            assert_eq!(cur.remaining(), 0);
+        }
+    }
+}

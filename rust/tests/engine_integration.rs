@@ -1,0 +1,367 @@
+//! Integration tests over the whole engine: multi-unit pipelines on the
+//! paper's evaluation cluster, both planners, direct and queue-decoupled
+//! boundaries, shaped links, and result equivalence between deployments.
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::config::{eval_cluster, fig2_cluster};
+use flowunits::netsim::LinkSpec;
+use flowunits::value::Value;
+use std::time::Duration;
+
+fn eval_pipeline(ctx: &mut StreamContext, events: u64) {
+    ctx.stream(Source::synthetic(events, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 3 == 0)
+        .to_layer("site")
+        .key_by(|v| Value::I64(v.as_i64().unwrap() % 16))
+        .window(100, WindowAgg::Mean)
+        .to_layer("cloud")
+        .map(|v| {
+            let (_k, mean) = v.as_pair().unwrap();
+            let mut n = (mean.as_f64().unwrap().abs() as u64).max(1);
+            let mut steps = 0i64;
+            while n != 1 {
+                n = if n % 2 == 0 { n / 2 } else { 3 * n + 1 };
+                steps += 1;
+            }
+            Value::I64(steps)
+        })
+        .collect_count();
+}
+
+#[test]
+fn planners_agree_on_results() {
+    let mut outs = Vec::new();
+    for planner in [PlannerKind::FlowUnits, PlannerKind::Renoir] {
+        let mut ctx = StreamContext::new(
+            eval_cluster(None, Duration::ZERO),
+            JobConfig {
+                planner,
+                ..Default::default()
+            },
+        );
+        eval_pipeline(&mut ctx, 48_000);
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.events_in, 48_000, "{planner:?}");
+        outs.push(report.events_out);
+    }
+    // 48000/3 = 16000 filtered events; 16 keys × 1000 events = 10 full
+    // windows per key + no partials ⇒ identical window counts
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[0], 160);
+}
+
+#[test]
+fn shaped_links_slow_renoir_more_than_flowunits() {
+    let spec = LinkSpec {
+        bandwidth_bps: Some(20_000_000),
+        latency: Duration::from_millis(5),
+    };
+    let mut walls = Vec::new();
+    for planner in [PlannerKind::Renoir, PlannerKind::FlowUnits] {
+        let mut ctx = StreamContext::new(
+            eval_cluster(spec.bandwidth_bps, spec.latency),
+            JobConfig {
+                planner,
+                ..Default::default()
+            },
+        );
+        eval_pipeline(&mut ctx, 60_000);
+        let report = ctx.execute().unwrap();
+        walls.push(report.wall_time.as_secs_f64());
+    }
+    assert!(
+        walls[0] > walls[1],
+        "renoir {}s should be slower than flowunits {}s on degraded links",
+        walls[0],
+        walls[1]
+    );
+}
+
+#[test]
+fn flowunits_crosses_fewer_zone_boundaries() {
+    let mut crossings = Vec::new();
+    for planner in [PlannerKind::Renoir, PlannerKind::FlowUnits] {
+        let mut ctx = StreamContext::new(
+            eval_cluster(None, Duration::ZERO),
+            JobConfig {
+                planner,
+                ..Default::default()
+            },
+        );
+        eval_pipeline(&mut ctx, 30_000);
+        let report = ctx.execute().unwrap();
+        crossings.push(report.zone_crossings);
+    }
+    assert!(
+        crossings[0] > 2 * crossings[1],
+        "renoir crossings {} should dwarf flowunits {}",
+        crossings[0],
+        crossings[1]
+    );
+}
+
+#[test]
+fn partial_locations_restrict_sources() {
+    let mut ctx = StreamContext::new(
+        fig2_cluster(),
+        JobConfig {
+            planner: PlannerKind::FlowUnits,
+            locations: vec!["L1".into(), "L4".into()],
+            ..Default::default()
+        },
+    );
+    eval_pipeline(&mut ctx, 10_000);
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_in, 10_000);
+    // plan lists only E1 and E4 at the edge
+    assert!(report.plan_description.contains("E1×1"));
+    assert!(report.plan_description.contains("E4×1"));
+    assert!(!report.plan_description.contains("E2"));
+}
+
+#[test]
+fn durable_queue_boundaries_survive_and_count() {
+    let dir = std::env::temp_dir().join(format!("fu-int-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let config = JobConfig {
+        planner: PlannerKind::FlowUnits,
+        decouple_units: true,
+        queue_dir: Some(dir.clone()),
+        poll_timeout: Duration::from_millis(10),
+        ..Default::default()
+    };
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config);
+    ctx.stream(Source::synthetic(5_000, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 2 == 0)
+        .to_layer("cloud")
+        .collect_count();
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_out, 2_500);
+    // segments exist on disk
+    let segments: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert!(!segments.is_empty(), "durable queue wrote segment files");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn collected_values_complete_under_shuffle() {
+    // keyed fold across a multi-zone deployment must count every event
+    // exactly once despite hash repartitioning across hosts
+    let mut ctx = StreamContext::new(
+        eval_cluster(None, Duration::ZERO),
+        JobConfig::default(),
+    );
+    ctx.stream(Source::synthetic(9_000, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .map(|v| v)
+        .to_layer("cloud")
+        .key_by(|v| Value::I64(v.as_i64().unwrap() % 7))
+        .fold(Value::I64(0), |acc, _| {
+            *acc = Value::I64(acc.as_i64().unwrap() + 1)
+        })
+        .collect_vec();
+    let report = ctx.execute().unwrap();
+    let total: i64 = report
+        .collected
+        .iter()
+        .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
+        .sum();
+    assert_eq!(total, 9_000);
+    // 7 keys, each folded on exactly one instance ⇒ exactly 7 outputs
+    assert_eq!(report.collected.len(), 7);
+}
+
+#[test]
+fn renoir_planner_with_constraint_still_respects_capabilities() {
+    // even the baseline planner may not place a constrained operator on an
+    // incapable host (matches Renoir semantics extended with constraints)
+    let mut ctx = StreamContext::new(
+        fig2_cluster(),
+        JobConfig {
+            planner: PlannerKind::Renoir,
+            ..Default::default()
+        },
+    );
+    ctx.stream(Source::synthetic(100, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .map(|v| v)
+        .add_constraint("gpu = yes")
+        .to_layer("cloud")
+        .collect_count();
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_out, 100);
+    // the constrained stage must appear only on C1 (the gpu host's zone)
+    let line = report
+        .plan_description
+        .lines()
+        .find(|l| l.contains("[map]"))
+        .unwrap()
+        .to_string();
+    assert!(line.contains("C1×8"), "constrained map on gpu cores only: {line}");
+    assert!(!line.contains("E1"), "no edge placement for gpu op: {line}");
+}
+
+#[test]
+fn backpressure_bounds_total_memory() {
+    // a slow sink (10 Mbit bottleneck into the cloud) must not let sources
+    // run unboundedly ahead; we can't measure memory portably, but we can
+    // verify the job completes with bounded channels and tiny batches.
+    let mut ctx = StreamContext::new(
+        eval_cluster(Some(10_000_000), Duration::ZERO),
+        JobConfig {
+            channel_capacity: 4,
+            batch_size: 64,
+            ..Default::default()
+        },
+    );
+    eval_pipeline(&mut ctx, 20_000);
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_in, 20_000);
+}
+
+#[test]
+fn missing_artifact_fails_deploy_cleanly() {
+    let mut ctx = StreamContext::new(
+        eval_cluster(None, Duration::ZERO),
+        JobConfig::default(),
+    );
+    ctx.stream(Source::synthetic(100, |_, _| Value::F32s(vec![0.0; 5])))
+        .to_layer("cloud")
+        .xla_map("no-such-artifact", 8, 5)
+        .collect_count();
+    let err = ctx.execute();
+    assert!(err.is_err(), "deploy must fail before any thread spawns");
+    let msg = err.err().unwrap().to_string();
+    assert!(msg.contains("make artifacts"), "actionable error: {msg}");
+}
+
+#[test]
+fn example_cluster_file_parses_and_plans() {
+    let spec = flowunits::config::ClusterSpec::load("examples/cluster.fu").unwrap();
+    assert_eq!(spec.topology.layers, vec!["edge", "site", "cloud"]);
+    assert_eq!(spec.topology.zones.len(), 8);
+    let mut ctx = StreamContext::new(
+        spec,
+        JobConfig {
+            locations: vec!["L1".into(), "L5".into()],
+            ..Default::default()
+        },
+    );
+    ctx.stream(Source::synthetic(1000, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 2 == 0)
+        .to_layer("cloud")
+        .collect_count();
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_out, 500);
+}
+
+#[test]
+fn empty_source_completes_with_zero_output() {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+    ctx.stream(Source::synthetic(0, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .map(|v| v)
+        .to_layer("cloud")
+        .key_by(|v| v.clone())
+        .fold(Value::I64(0), |_, _| {})
+        .collect_vec();
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_in, 0);
+    assert!(report.collected.is_empty());
+}
+
+#[test]
+fn single_event_survives_all_stages() {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+    ctx.stream(Source::synthetic(1, |_, _| Value::F64(42.0)))
+        .to_layer("edge")
+        .filter(|_| true)
+        .to_layer("site")
+        .key_by(|_| Value::I64(0))
+        .window(100, WindowAgg::Mean) // partial window flushes at EOS
+        .to_layer("cloud")
+        .collect_vec();
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.collected.len(), 1);
+    assert_eq!(
+        report.collected[0].as_pair().unwrap().1.as_f64().unwrap(),
+        42.0
+    );
+}
+
+#[test]
+fn stop_sources_terminates_unbounded_job() {
+    let coord = flowunits::coordinator::Coordinator::new(
+        eval_cluster(None, Duration::ZERO),
+        JobConfig::default(),
+    );
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+    ctx.stream(Source::synthetic_rated(u64::MAX / 2, 50_000.0, |_, i| {
+        Value::I64(i as i64)
+    }))
+    .to_layer("edge")
+    .map(|v| v)
+    .to_layer("cloud")
+    .collect_count();
+    let g = ctx.into_graph().unwrap();
+    let dep = coord.deploy(&g).unwrap();
+    std::thread::sleep(Duration::from_millis(150));
+    dep.stop_sources();
+    let report = dep.wait().unwrap();
+    assert!(report.events_in > 0);
+    assert_eq!(report.events_in, report.events_out);
+}
+
+#[test]
+fn user_closure_panic_is_surfaced_not_hung() {
+    // a panicking operator must fail the job with an error, not deadlock
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+    ctx.stream(Source::synthetic(1_000, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .map(|v| {
+            if v.as_i64().unwrap() == 500 {
+                panic!("injected operator fault");
+            }
+            v
+        })
+        .to_layer("cloud")
+        .collect_count();
+    let result = ctx.execute();
+    assert!(result.is_err(), "panicked instance must surface as an error");
+    assert!(result
+        .err()
+        .unwrap()
+        .to_string()
+        .contains("instance thread panicked"));
+}
+
+#[test]
+fn zero_producer_inbox_terminates() {
+    // a location subset can leave some site-zone instances with zero
+    // producers; they must still terminate and propagate EOS
+    let mut ctx = StreamContext::new(
+        fig2_cluster(),
+        JobConfig {
+            locations: vec!["L1".into()], // only S1's branch is fed
+            ..Default::default()
+        },
+    );
+    ctx.stream(Source::synthetic(1_000, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .map(|v| v)
+        .to_layer("site")
+        .key_by(|v| Value::I64(v.as_i64().unwrap() % 4))
+        .window(10, WindowAgg::Count)
+        .to_layer("cloud")
+        .collect_vec();
+    let report = ctx.execute().unwrap();
+    let covered: i64 = report
+        .collected
+        .iter()
+        .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
+        .sum();
+    assert_eq!(covered, 1_000);
+}

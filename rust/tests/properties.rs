@@ -1,0 +1,239 @@
+//! Cross-module property tests (in-repo harness, see `flowunits::proptest`):
+//! codec round-trips, routing invariants, queue at-least-once semantics,
+//! window/fold algebra, and end-to-end conservation laws.
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::config::eval_cluster;
+use flowunits::proptest::{forall, Gen};
+use flowunits::value::{decode_batch, encode_batch, Value};
+use std::time::Duration;
+
+fn arb_value(g: &mut Gen, depth: usize) -> Value {
+    let pick = if depth == 0 {
+        g.usize_in(0, 6)
+    } else {
+        g.usize_in(0, 8)
+    };
+    match pick {
+        0 => Value::Null,
+        1 => Value::Bool(g.bool(0.5)),
+        2 => Value::I64(g.i64_in(i64::MIN / 2, i64::MAX / 2)),
+        3 => Value::F64(g.f64_in(-1e12, 1e12)),
+        4 => Value::Str(g.ident(24)),
+        5 => {
+            let n = g.usize_in(0, 8);
+            Value::F32s(g.vec_of(n, |g| g.f64_in(-1e6, 1e6) as f32))
+        }
+        6 => Value::pair(arb_value(g, depth - 1), arb_value(g, depth - 1)),
+        _ => {
+            let n = g.usize_in(0, 5);
+            Value::List(g.vec_of(n, |g| arb_value(g, depth - 1)))
+        }
+    }
+}
+
+#[test]
+fn prop_codec_roundtrip() {
+    forall("value codec round-trips", 500, |g| {
+        let v = arb_value(g, 3);
+        let enc = v.encode();
+        assert_eq!(enc.len(), v.encoded_size(), "size accounting for {v:?}");
+        let dec = Value::decode_exact(&enc).unwrap();
+        assert_eq!(v, dec);
+    });
+}
+
+#[test]
+fn prop_batch_codec_roundtrip() {
+    forall("batch codec round-trips", 200, |g| {
+        let n = g.usize_in(0, 64);
+        let batch = g.vec_of(n, |g| arb_value(g, 2));
+        assert_eq!(decode_batch(&encode_batch(&batch)).unwrap(), batch);
+    });
+}
+
+#[test]
+fn prop_stable_hash_equals_encoding_equality() {
+    forall("equal values hash equal; unequal mostly differ", 300, |g| {
+        let a = arb_value(g, 2);
+        let b = arb_value(g, 2);
+        if a == b {
+            assert_eq!(a.stable_hash(), b.stable_hash());
+        }
+        // same value always self-consistent
+        assert_eq!(a.stable_hash(), a.clone().stable_hash());
+    });
+}
+
+#[test]
+fn prop_truncated_encodings_never_decode() {
+    forall("truncations rejected", 150, |g| {
+        let v = arb_value(g, 2);
+        let enc = v.encode();
+        if enc.len() > 1 {
+            let cut = g.usize_in(0, enc.len() - 1);
+            assert!(
+                Value::decode_exact(&enc[..cut]).is_err(),
+                "truncated {v:?} at {cut} decoded"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pipeline_conserves_events_across_planners_and_batches() {
+    // event conservation: filter keeps exactly the matching events, no
+    // matter the planner, batch size, or channel capacity
+    forall("pipeline conserves events", 12, |g| {
+        let planner = *g.choose(&[PlannerKind::FlowUnits, PlannerKind::Renoir]);
+        let batch = *g.choose(&[7usize, 64, 513]);
+        let cap = *g.choose(&[2usize, 16, 64]);
+        let total = g.usize_in(1_000, 8_000) as u64;
+        let modulo = g.i64_in(2, 7);
+        let config = JobConfig {
+            planner,
+            batch_size: batch,
+            channel_capacity: cap,
+            ..Default::default()
+        };
+        let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config);
+        ctx.stream(Source::synthetic(total, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .filter(move |v| v.as_i64().unwrap() % modulo == 0)
+            .to_layer("cloud")
+            .collect_count();
+        let report = ctx.execute().unwrap();
+        let expected = (0..total as i64).filter(|i| i % modulo == 0).count() as u64;
+        assert_eq!(report.events_out, expected, "planner={planner:?} batch={batch} cap={cap}");
+    });
+}
+
+#[test]
+fn prop_keyed_fold_counts_partition_correctly() {
+    // the keyed fold must count every event exactly once per key, across
+    // random key cardinalities and shuffle fan-outs
+    forall("keyed fold counts", 8, |g| {
+        let keys = g.i64_in(1, 40);
+        let total = g.usize_in(2_000, 10_000) as u64;
+        let mut ctx = StreamContext::new(
+            eval_cluster(None, Duration::ZERO),
+            JobConfig {
+                batch_size: *g.choose(&[32usize, 256]),
+                ..Default::default()
+            },
+        );
+        ctx.stream(Source::synthetic(total, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .map(|v| v)
+            .to_layer("cloud")
+            .key_by(move |v| Value::I64(v.as_i64().unwrap() % keys))
+            .fold(Value::I64(0), |acc, _| {
+                *acc = Value::I64(acc.as_i64().unwrap() + 1)
+            })
+            .collect_vec();
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.collected.len() as i64, keys.min(total as i64));
+        let sum: i64 = report
+            .collected
+            .iter()
+            .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
+            .sum();
+        assert_eq!(sum as u64, total);
+    });
+}
+
+#[test]
+fn prop_window_emission_counts() {
+    // tumbling windows: emitted full windows + flush partials must cover
+    // every event exactly once (verified via Count aggregate sums)
+    forall("window coverage", 8, |g| {
+        let size = g.usize_in(2, 200);
+        let keys = g.i64_in(1, 9);
+        let total = g.usize_in(500, 6_000) as u64;
+        let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+        ctx.stream(Source::synthetic(total, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .map(|v| v)
+            .to_layer("site")
+            .key_by(move |v| Value::I64(v.as_i64().unwrap() % keys))
+            .window(size, WindowAgg::Count)
+            .to_layer("cloud")
+            .collect_vec();
+        let report = ctx.execute().unwrap();
+        let covered: i64 = report
+            .collected
+            .iter()
+            .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
+            .sum();
+        assert_eq!(covered as u64, total, "size={size} keys={keys}");
+    });
+}
+
+#[test]
+fn prop_queue_decoupling_preserves_results() {
+    // queue transport must be observationally equivalent to direct links
+    forall("queue equivalence", 6, |g| {
+        let total = g.usize_in(1_000, 5_000) as u64;
+        let modulo = g.i64_in(2, 5);
+        let mut outs = Vec::new();
+        for decouple in [false, true] {
+            let config = JobConfig {
+                decouple_units: decouple,
+                poll_timeout: Duration::from_millis(5),
+                batch_size: 64,
+                ..Default::default()
+            };
+            let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config);
+            ctx.stream(Source::synthetic(total, |_, i| Value::I64(i as i64)))
+                .to_layer("edge")
+                .filter(move |v| v.as_i64().unwrap() % modulo == 0)
+                .to_layer("cloud")
+                .collect_vec();
+            let report = ctx.execute().unwrap();
+            let mut vals: Vec<i64> =
+                report.collected.iter().map(|v| v.as_i64().unwrap()).collect();
+            vals.sort_unstable();
+            outs.push(vals);
+        }
+        assert_eq!(outs[0], outs[1]);
+    });
+}
+
+#[test]
+fn prop_constraint_eval_agrees_with_display_parse() {
+    use flowunits::topology::{CapValue, Capabilities, ConstraintExpr};
+    forall("constraint display/parse/eval agreement", 200, |g| {
+        // random capability profile
+        let mut caps = Capabilities::default();
+        let names = ["n_cpu", "gpu", "memory", "arch"];
+        for name in names {
+            if g.bool(0.8) {
+                let v = match g.usize_in(0, 3) {
+                    0 => CapValue::Int(g.i64_in(0, 128)),
+                    1 => CapValue::Bool(g.bool(0.5)),
+                    _ => CapValue::Str(g.ident(6)),
+                };
+                caps.set(name, v);
+            }
+        }
+        // random conjunction
+        let n = g.usize_in(1, 4);
+        let preds: Vec<String> = (0..n)
+            .map(|_| {
+                let attr = *g.choose(&names);
+                let op = *g.choose(&["=", "!=", ">=", "<", ">"]);
+                let val = match g.usize_in(0, 3) {
+                    0 => g.i64_in(0, 128).to_string(),
+                    1 => (*g.choose(&["yes", "no"])).to_string(),
+                    _ => g.ident(6),
+                };
+                format!("{attr} {op} {val}")
+            })
+            .collect();
+        let text = preds.join(" && ");
+        let e1 = ConstraintExpr::parse(&text).unwrap();
+        let e2 = ConstraintExpr::parse(&e1.to_string()).unwrap();
+        assert_eq!(e1, e2, "display/parse round-trip of '{text}'");
+        assert_eq!(e1.eval(&caps), e2.eval(&caps));
+    });
+}

@@ -1,0 +1,106 @@
+//! Integration: the AOT artifacts built by `make artifacts` load, compile,
+//! and produce numerics matching the python model (within float tolerance).
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use flowunits::runtime::xla_exec::XlaEngine;
+
+fn engine_or_skip() -> Option<&'static XlaEngine> {
+    if !std::path::Path::new("artifacts/double.hlo.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(XlaEngine::global().expect("PJRT CPU client"))
+}
+
+#[test]
+fn double_artifact_roundtrip() {
+    let Some(engine) = engine_or_skip() else { return };
+    let art = engine.load("double").unwrap();
+    let input: Vec<f32> = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+    let out = art.execute_f32(&input, 2, 3).unwrap();
+    assert_eq!(out, vec![0.0, 2.0, 4.0, 6.0, 8.0, 10.0]);
+}
+
+#[test]
+fn anomaly_artifact_shapes_and_determinism() {
+    let Some(engine) = engine_or_skip() else { return };
+    let art = engine.load("anomaly_v1").unwrap();
+    // 64 windows × 5 features, nominal values
+    let mut rows = Vec::with_capacity(64 * 5);
+    for i in 0..64 {
+        let base = 50.0 + i as f32;
+        rows.extend_from_slice(&[base, 3.0, base - 10.0, base + 10.0, base]);
+    }
+    let a = art.execute_f32(&rows, 64, 5).unwrap();
+    let b = art.execute_f32(&rows, 64, 5).unwrap();
+    assert_eq!(a.len(), 64); // out_dim 1
+    assert_eq!(a, b, "deterministic inference");
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn v1_and_v2_artifacts_disagree() {
+    let Some(engine) = engine_or_skip() else { return };
+    let v1 = engine.load("anomaly_v1").unwrap();
+    let v2 = engine.load("anomaly_v2").unwrap();
+    let rows: Vec<f32> = (0..64 * 5).map(|i| (i % 97) as f32).collect();
+    let a = v1.execute_f32(&rows, 64, 5).unwrap();
+    let b = v2.execute_f32(&rows, 64, 5).unwrap();
+    assert_ne!(a, b, "v2 is a different trained model");
+}
+
+#[test]
+fn nominal_features_score_at_output_bias() {
+    // mirrors python/tests/test_kernel.py::test_zero_variance_features:
+    // perfectly nominal features normalise to zero, so the score collapses
+    // to the output bias (0.0 for v1).
+    let Some(engine) = engine_or_skip() else { return };
+    let art = engine.load("anomaly_v1").unwrap();
+    let row = [50.0f32, 3.0, 40.0, 60.0, 50.0];
+    let rows: Vec<f32> = row.iter().cycle().take(64 * 5).copied().collect();
+    let out = art.execute_f32(&rows, 64, 5).unwrap();
+    for v in out {
+        assert!(v.abs() < 1e-4, "nominal score should be ~0, got {v}");
+    }
+}
+
+#[test]
+fn wrong_input_length_is_an_error() {
+    let Some(engine) = engine_or_skip() else { return };
+    let art = engine.load("double").unwrap();
+    assert!(art.execute_f32(&[1.0, 2.0], 2, 3).is_err());
+}
+
+#[test]
+fn artifact_cache_hits() {
+    let Some(engine) = engine_or_skip() else { return };
+    let a = engine.load("double").unwrap();
+    let b = engine.load("double").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    engine.evict("double");
+    let c = engine.load("double").unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&a, &c));
+}
+
+#[test]
+fn weights_survive_hlo_text_interchange() {
+    // Regression: `as_hlo_text()` without `print_large_constants=True`
+    // elides array constants as `constant({...})`, which the text parser
+    // silently zeroes — every score collapses to the output bias. Distinct
+    // non-nominal inputs must therefore yield distinct nonzero scores.
+    let Some(engine) = engine_or_skip() else { return };
+    let art = engine.load("anomaly_v1").unwrap();
+    let mut rows = vec![
+        50.3, 0.15, 50.0, 50.6, 50.4, // mildly off-nominal window
+        93.0, 12.0, 50.0, 93.0, 93.0, // spiking window
+    ];
+    rows.resize(64 * 5, 0.0);
+    let out = art.execute_f32(&rows, 64, 5).unwrap();
+    assert!(
+        (out[0] - 0.7783).abs() < 1e-3,
+        "score[0] = {} — expected 0.7783 (python oracle); weights likely elided",
+        out[0]
+    );
+    assert_ne!(out[0], out[1], "distinct windows must score differently");
+}
