@@ -58,15 +58,17 @@ fn main() -> flowunits::error::Result<()> {
         };
         Value::pair(Value::I64(machine as i64), Value::F64(base + spike))
     }))
-    .to_layer("edge")
     // FP: drop sensor glitches before anything crosses the uplink
+    .unit("FP")
+    .to_layer("edge")
     .filter(|v| {
         let (_m, x) = v.as_pair().unwrap();
         let x = x.as_f64().unwrap();
         x.is_finite() && (-20.0..200.0).contains(&x)
     })
-    .to_layer("site")
     // AD: per-machine windows -> [mean, std, min, max, last]
+    .unit("AD")
+    .to_layer("site")
     .key_by(|v| v.as_pair().unwrap().0.clone())
     .map(|keyed| {
         // Pair(machine, Pair(machine, reading)) -> Pair(machine, reading)
@@ -74,10 +76,12 @@ fn main() -> flowunits::error::Result<()> {
         Value::pair(k, mr.into_pair().unwrap().1)
     })
     .window(WINDOW, WindowAgg::FeatureStats)
+    // ML: AOT-compiled JAX/Pallas anomaly scorer, gated on capability —
+    // the constraint scopes to the whole ML FlowUnit
+    .unit("ML")
     .to_layer("cloud")
-    // ML: AOT-compiled JAX/Pallas anomaly scorer, gated on capability
-    .xla_map("anomaly_v1", XLA_BATCH, FEATURES)
     .add_constraint("xla = yes && n_cpu >= 4")
+    .xla_map("anomaly_v1", XLA_BATCH, FEATURES)
     .map(|scored| {
         // Pair(key, F32s[score]) -> Pair(key, F64(score))
         let (k, s) = scored.into_pair().unwrap();

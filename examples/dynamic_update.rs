@@ -30,14 +30,17 @@ fn pipeline_graph(artifact: &'static str) -> flowunits::error::Result<flowunits:
         let t = i as f64 * 0.01;
         Value::F64(50.0 + 8.0 * (t * 0.37).sin() + m as f64)
     }))
+    .unit("FP")
     .to_layer("edge")
     .filter(|v| v.as_f64().unwrap().is_finite())
+    .unit("AD")
     .to_layer("site")
     .key_by(|v| Value::I64((v.as_f64().unwrap() * 7.0) as i64 % 4))
     .window(32, WindowAgg::FeatureStats)
+    .unit("ML")
     .to_layer("cloud")
-    .xla_map(artifact, XLA_BATCH, FEATURES)
     .add_constraint("xla = yes")
+    .xla_map(artifact, XLA_BATCH, FEATURES)
     .collect_count();
     ctx.into_graph()
 }
@@ -84,7 +87,7 @@ fn main() -> flowunits::error::Result<()> {
 
     // --- update 2: swap the ML FlowUnit to the retrained model ----------
     let scored_before_swap = m.xla_rows.load(Ordering::Relaxed);
-    dep.update_unit(2, pipeline_graph("anomaly_v2")?)?;
+    dep.update_unit("ML", pipeline_graph("anomaly_v2")?)?;
     println!("update 2 : ML FlowUnit swapped to anomaly_v2 (units FP/AD untouched)");
     std::thread::sleep(phase);
     let in_phase3 = m.events_in.load(Ordering::Relaxed);

@@ -10,6 +10,10 @@
 //! this driver defaults to 200k per cell (36 runs total on one core) —
 //! set `FIG3_EVENTS=10000000` to match the paper exactly.
 //!
+//! The pipeline is built with the bare `to_layer` sugar (each layer
+//! switch opens an anonymous, layer-named FlowUnit) — see
+//! `examples/multi_stream.rs` for the explicit named-unit DAG surface.
+//!
 //! ```sh
 //! cargo run --release --example fig3_heatmap
 //! ```

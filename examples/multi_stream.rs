@@ -1,0 +1,105 @@
+//! Multi-stream DAG with first-class FlowUnits: two edge sources are
+//! `union`ed into a named "detector" unit in the cloud, whose output is
+//! `split` into an alerts sink and an archive sink. While the job runs,
+//! the detector FlowUnit is hot-swapped *by name* — sources and sinks
+//! keep flowing throughout (queue-decoupled unit boundaries).
+//!
+//! Needs no artifacts; runs out of the box:
+//!
+//! ```sh
+//! cargo run --release --example multi_stream
+//! ```
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext};
+use flowunits::config::eval_cluster;
+use flowunits::coordinator::Coordinator;
+use flowunits::value::Value;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn config() -> JobConfig {
+    JobConfig {
+        planner: PlannerKind::FlowUnits,
+        decouple_units: true, // queue substrate between FlowUnits
+        poll_timeout: Duration::from_millis(10),
+        batch_size: 128,
+        ..Default::default()
+    }
+}
+
+/// Two sensor fleets -> union -> detector(tag) -> split -> two sinks.
+/// `tag` marks which detector version scored each event.
+fn dag(tag: i64) -> flowunits::error::Result<flowunits::graph::LogicalGraph> {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config());
+    let north = ctx
+        .stream(Source::synthetic_rated(u64::MAX / 2, 4_000.0, |_, i| {
+            Value::I64(i as i64)
+        }))
+        .unit("fleet-north")
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 2 == 0); // pre-filter at the edge
+    let south = ctx
+        .stream(Source::synthetic_rated(u64::MAX / 2, 4_000.0, |_, i| {
+            Value::I64(i as i64)
+        }))
+        .unit("fleet-south")
+        .to_layer("edge");
+    let scored = north
+        .union(south)
+        .unit("detector")
+        .to_layer("cloud")
+        .map(move |v| Value::I64(v.as_i64().unwrap() * 10 + tag));
+    let (alerts, archive) = scored.split();
+    alerts
+        .unit("alerts")
+        .filter(|v| v.as_i64().unwrap() % 100 < 10) // "anomalies" only
+        .collect_vec();
+    archive.unit("archive").collect_count();
+    ctx.into_graph()
+}
+
+fn main() -> flowunits::error::Result<()> {
+    let phase = Duration::from_millis(
+        std::env::var("PHASE_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(600),
+    );
+
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), config());
+    let mut dep = coord.deploy(&dag(1)?)?;
+    let m = dep.metrics();
+    println!("deployed units: {}", dep.unit_names().join(", "));
+
+    std::thread::sleep(phase);
+    let in_v1 = m.events_in.load(Ordering::Relaxed);
+    println!("phase 1 : {in_v1} events in, detector v1 scoring");
+
+    // hot-swap the detector by name; fleets and sinks never stop
+    dep.update_unit("detector", dag(2)?)?;
+    println!("update  : detector FlowUnit swapped to v2 (4 other units untouched)");
+
+    std::thread::sleep(phase);
+    let in_v2 = m.events_in.load(Ordering::Relaxed);
+    assert!(in_v2 > in_v1, "sources kept producing through the swap");
+
+    dep.stop_sources();
+    let report = dep.wait()?;
+
+    let (mut v1, mut v2) = (0u64, 0u64);
+    for v in &report.collected {
+        match v.as_i64().unwrap() % 10 {
+            1 => v1 += 1,
+            2 => v2 += 1,
+            _ => unreachable!("unscored value leaked past the detector"),
+        }
+    }
+    println!("\n{}", report.render());
+    println!(
+        "alerts collected: {} ({v1} scored by v1, {v2} by v2) | total archived+alerted: {}",
+        report.collected.len(),
+        report.events_out
+    );
+    println!("hot swap completed with zero producer downtime ✔");
+    Ok(())
+}

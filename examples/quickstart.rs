@@ -1,5 +1,7 @@
 //! Quickstart: the classic word count, written once and deployed across
-//! the continuum with a single `to_layer` annotation per segment.
+//! the continuum with one named FlowUnit per segment. `unit(name)` opens
+//! a FlowUnit — the unit of placement, replication, and dynamic update —
+//! and `to_layer` pins it to a continuum layer.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -26,6 +28,7 @@ fn main() -> flowunits::error::Result<()> {
     ctx.stream(Source::synthetic(300_000, move |_, i| {
         Value::Str(phrases[(i % phrases.len() as u64) as usize].to_string())
     }))
+    .unit("tokenize")
     .to_layer("edge")
     .flat_map(|line| {
         line.as_str()
@@ -35,6 +38,7 @@ fn main() -> flowunits::error::Result<()> {
             .collect()
     })
     .filter(|w| w.as_str().unwrap().len() > 3) // drop stop-words at the edge
+    .unit("count")
     .to_layer("cloud")
     .group_by(|w| w.clone())
     .fold(Value::I64(0), |acc, _| {

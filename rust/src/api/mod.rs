@@ -1,35 +1,76 @@
-//! The user-facing stream API — Renoir-style fluent builder extended with
-//! the paper's two annotations: [`Stream::to_layer`] and
-//! [`Stream::add_constraint`] (§IV).
+//! The user-facing stream API — an owned, DAG-capable builder with
+//! first-class **FlowUnits** (paper §III/§IV).
+//!
+//! A [`StreamContext`] owns the cluster description, the job
+//! configuration, and the logical graph under construction. Each
+//! [`StreamContext::stream`] call opens a new source; streams are *owned*
+//! handles (no borrow ties the builder down), so several streams can be
+//! built side by side, merged with [`Stream::union`], and forked with
+//! [`Stream::split`] into multiple sinks — one job, one DAG.
+//!
+//! Every operator belongs to a **FlowUnit**, the unit of placement,
+//! replication, and dynamic update. [`Stream::unit`] opens (or names) a
+//! unit; [`Stream::to_layer`], [`Stream::add_constraint`], and
+//! [`Stream::replicate`] configure the *current unit's* scope — layer,
+//! capability requirements, and in-zone replication — rather than
+//! annotating individual operators. Bare `to_layer` remains as sugar: it
+//! opens an anonymous, layer-named unit exactly like earlier versions of
+//! this API.
+//!
+//! Construction is **fallible but never panics**: malformed constraint
+//! expressions, duplicate unit names, cross-context unions, and invalid
+//! graph shapes are recorded in the builder and surfaced as
+//! [`Error::Graph`](crate::error::Error::Graph) from
+//! [`StreamContext::execute`] / [`StreamContext::deploy`].
 //!
 //! ```no_run
 //! use flowunits::prelude::*;
-//! use std::sync::Arc;
 //!
 //! let cluster = flowunits::config::fig2_cluster();
 //! let mut ctx = StreamContext::new(cluster, JobConfig::default());
-//! ctx.stream(Source::synthetic(1_000_000, |_, i| Value::F64((i % 100) as f64)))
+//!
+//! // two independent edge sources, each its own named FlowUnit
+//! let north = ctx
+//!     .stream(Source::synthetic(500_000, |_, i| Value::F64((i % 100) as f64)))
+//!     .unit("ingest-north")
 //!     .to_layer("edge")
-//!     .filter(|v| v.as_f64().unwrap() > 33.0)
-//!     .to_layer("site")
-//!     .key_by(|v| Value::I64(v.as_f64().unwrap() as i64 % 8))
-//!     .window(100, WindowAgg::Mean)
+//!     .filter(|v| v.as_f64().unwrap() > 33.0);
+//! let south = ctx
+//!     .stream(Source::synthetic(500_000, |_, i| Value::F64((i % 90) as f64)))
+//!     .unit("ingest-south")
+//!     .to_layer("edge");
+//!
+//! // merge, process in a constrained cloud unit, then fork to two sinks
+//! let scored = north
+//!     .union(south)
+//!     .unit("detector")
 //!     .to_layer("cloud")
-//!     .map(|v| v)
-//!     .collect_count();
+//!     .add_constraint("n_cpu >= 4")
+//!     .key_by(|v| Value::I64(v.as_f64().unwrap() as i64 % 8))
+//!     .window(100, WindowAgg::Mean);
+//! let (alerts, archive) = scored.split();
+//! alerts
+//!     .unit("alerts")
+//!     .filter(|v| v.as_pair().unwrap().1.as_f64().unwrap() > 60.0)
+//!     .collect_vec();
+//! archive.unit("archive").collect_count();
+//!
 //! let report = ctx.execute().unwrap();
+//! println!("{} events out", report.events_out);
 //! ```
 
 pub use crate::coordinator::{JobConfig, JobReport};
-pub use crate::graph::WindowAgg;
+pub use crate::graph::{Replication, WindowAgg};
 pub use crate::placement::PlannerKind;
 
 use crate::config::ClusterSpec;
 use crate::coordinator::{Coordinator, Deployment};
 use crate::error::{Error, Result};
-use crate::graph::{LogicalGraph, OpKind, SinkKind, SourceKind};
+use crate::graph::{LogicalGraph, OpKind, SinkKind, SourceKind, UnitId};
 use crate::topology::ConstraintExpr;
 use crate::value::Value;
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::sync::Arc;
 
 /// Source builder.
@@ -74,133 +115,337 @@ impl Source {
     }
 }
 
+/// Shared builder state behind every [`Stream`] handle of one context.
+struct BuilderState {
+    graph: LogicalGraph,
+    /// Deferred construction errors, surfaced from `execute`/`deploy`.
+    errors: Vec<String>,
+    /// Cluster layer order (periphery → centre), for layer defaults.
+    layers: Vec<String>,
+}
+
+impl BuilderState {
+    fn innermost_layer(&self) -> String {
+        self.layers.last().cloned().unwrap_or_else(|| "cloud".into())
+    }
+
+    fn layer_pos(&self, layer: &str) -> usize {
+        self.layers.iter().position(|l| l == layer).unwrap_or(0)
+    }
+}
+
 /// Builder context owning the cluster description, job configuration, and
-/// the logical graph under construction.
+/// the logical DAG under construction.
 pub struct StreamContext {
     cluster: ClusterSpec,
     config: JobConfig,
-    graph: Option<LogicalGraph>,
-    current_layer: String,
+    state: Rc<RefCell<BuilderState>>,
 }
 
 impl StreamContext {
-    /// Creates a context. Until the first [`Stream::to_layer`], operators
-    /// are annotated with the innermost layer (the cloud).
+    /// Creates a context. Until re-scoped with [`Stream::to_layer`] or
+    /// [`Stream::unit`], new streams start in an anonymous unit on the
+    /// innermost layer (the cloud).
     pub fn new(cluster: ClusterSpec, config: JobConfig) -> Self {
-        let current_layer = cluster
-            .topology
-            .layers
-            .last()
-            .cloned()
-            .unwrap_or_else(|| "cloud".into());
+        let layers = cluster.topology.layers.clone();
         StreamContext {
             cluster,
             config,
-            graph: None,
-            current_layer,
+            state: Rc::new(RefCell::new(BuilderState {
+                graph: LogicalGraph::default(),
+                errors: Vec::new(),
+                layers,
+            })),
         }
     }
 
-    /// Starts a stream from `source`.
-    pub fn stream(&mut self, source: Source) -> Stream<'_> {
-        let mut g = LogicalGraph::default();
-        g.push(OpKind::Source(source.0), self.current_layer.clone(), None, "source");
-        self.graph = Some(g);
-        Stream { ctx: self }
+    /// Opens a stream from `source` in a fresh FlowUnit. May be called
+    /// multiple times: all streams belong to the same job DAG.
+    pub fn stream(&mut self, source: Source) -> Stream {
+        let (head, unit) = {
+            let mut st = self.state.borrow_mut();
+            let layer = st.innermost_layer();
+            let unit = st
+                .graph
+                .add_unit(None, layer, None, Replication::PerCore);
+            let head = st
+                .graph
+                .add_op(OpKind::Source(source.0), unit, Vec::new(), "source");
+            (head, unit)
+        };
+        Stream {
+            state: self.state.clone(),
+            head,
+            unit,
+            forked: false,
+        }
+    }
+
+    /// Returns the built graph, surfacing any deferred builder errors.
+    fn build_graph(&self) -> Result<LogicalGraph> {
+        let st = self.state.borrow();
+        if !st.errors.is_empty() {
+            return Err(Error::Graph(st.errors.join("; ")));
+        }
+        if st.graph.ops.is_empty() {
+            return Err(Error::Graph("no stream defined".into()));
+        }
+        Ok(st.graph.clone())
     }
 
     /// Executes the built job to completion.
     pub fn execute(&mut self) -> Result<JobReport> {
-        let graph = self
-            .graph
-            .take()
-            .ok_or_else(|| Error::Graph("no stream defined".into()))?;
+        let graph = self.build_graph()?;
         Coordinator::new(self.cluster.clone(), self.config.clone()).run(&graph)
     }
 
     /// Deploys the built job and returns the live handle (for dynamic
     /// updates / unbounded sources).
     pub fn deploy(&mut self) -> Result<Deployment> {
-        let graph = self
-            .graph
-            .take()
-            .ok_or_else(|| Error::Graph("no stream defined".into()))?;
+        let graph = self.build_graph()?;
         Coordinator::new(self.cluster.clone(), self.config.clone()).deploy(&graph)
     }
 
     /// Consumes the context, returning the logical graph (for planning
     /// inspection or [`Coordinator`] reuse).
-    pub fn into_graph(mut self) -> Result<LogicalGraph> {
-        self.graph
-            .take()
-            .ok_or_else(|| Error::Graph("no stream defined".into()))
-    }
-
-    fn push(&mut self, kind: OpKind, name: &str) {
-        let layer = self.current_layer.clone();
-        self.graph
-            .as_mut()
-            .expect("stream() must be called first")
-            .push(kind, layer, None, name);
+    pub fn into_graph(self) -> Result<LogicalGraph> {
+        self.build_graph()
     }
 }
 
-/// Fluent stream under construction. All methods annotate operators with
-/// the context's current layer; [`Stream::to_layer`] switches it.
-pub struct Stream<'a> {
-    ctx: &'a mut StreamContext,
+/// An owned handle onto one path through the DAG under construction.
+/// Operator methods append to the handle's current FlowUnit;
+/// [`Stream::unit`]/[`Stream::to_layer`] re-scope it. Handles from the
+/// same context can be merged ([`Stream::union`]) and forked
+/// ([`Stream::split`]).
+pub struct Stream {
+    state: Rc<RefCell<BuilderState>>,
+    head: crate::graph::OpId,
+    unit: UnitId,
+    /// True for handles produced by [`Stream::split`]: their current unit
+    /// is shared with the sibling branch, so `unit`/`to_layer` must open a
+    /// new unit instead of renaming/re-layering the shared one in place.
+    forked: bool,
 }
 
-impl<'a> Stream<'a> {
-    /// Moves the remainder of the pipeline to `layer` — the FlowUnits
-    /// locality annotation. Subsequent operators form (part of) a new
-    /// FlowUnit deployed on the zones of that layer.
+impl Stream {
+    fn push(self, kind: OpKind, name: &str) -> Self {
+        let head = {
+            let mut st = self.state.borrow_mut();
+            let (unit, input) = (self.unit, self.head);
+            st.graph.add_op(kind, unit, vec![input], name)
+        };
+        Stream { head, ..self }
+    }
+
+    fn terminal(self, kind: SinkKind, name: &str) {
+        let mut st = self.state.borrow_mut();
+        let (unit, input) = (self.unit, self.head);
+        st.graph.add_op(OpKind::Sink(kind), unit, vec![input], name);
+    }
+
+    /// Opens (or names) a FlowUnit. If the current unit holds no
+    /// processing operator yet (it is "fresh": just a source or a union),
+    /// it is renamed in place — so `stream(..).unit("ingest")` names the
+    /// source's unit. Otherwise a new unit is opened at the current layer
+    /// and subsequent operators belong to it. Duplicate names are
+    /// recorded as builder errors.
+    pub fn unit(self, name: &str) -> Self {
+        let unit = {
+            let mut st = self.state.borrow_mut();
+            let fresh = !self.forked && st.graph.unit_is_fresh(self.unit);
+            let clash = st
+                .graph
+                .units
+                .iter()
+                .any(|u| u.name == name && (!fresh || u.index != self.unit));
+            if clash {
+                st.errors.push(format!("duplicate FlowUnit name '{name}'"));
+            }
+            if fresh {
+                let u = &mut st.graph.units[self.unit];
+                u.name = name.to_string();
+                u.auto = false;
+                self.unit
+            } else {
+                let layer = st.graph.units[self.unit].layer.clone();
+                st.graph
+                    .add_unit(Some(name), layer, None, Replication::PerCore)
+            }
+        };
+        Stream {
+            unit,
+            forked: false,
+            ..self
+        }
+    }
+
+    /// Moves the remainder of this stream to `layer` — the FlowUnits
+    /// locality annotation. A fresh unit (one holding only its source or
+    /// union so far) is re-layered in place, which is how the source
+    /// itself is placed on its layer; otherwise this is sugar for opening
+    /// a new anonymous unit on `layer`.
     pub fn to_layer(self, layer: &str) -> Self {
-        self.ctx.current_layer = layer.to_string();
-        // retroactively annotate the source if no operator followed it yet
-        let g = self.ctx.graph.as_mut().unwrap();
-        if g.ops.len() == 1 {
-            g.ops[0].layer = layer.to_string();
+        let (unit, forked) = {
+            let mut st = self.state.borrow_mut();
+            if st.graph.units[self.unit].layer == layer {
+                (self.unit, self.forked)
+            } else if !self.forked && st.graph.unit_is_fresh(self.unit) {
+                let fresh_name = if st.graph.units[self.unit].auto {
+                    Some(st.graph.auto_unit_name(layer, Some(self.unit)))
+                } else {
+                    None
+                };
+                let u = &mut st.graph.units[self.unit];
+                u.layer = layer.to_string();
+                if let Some(n) = fresh_name {
+                    u.name = n;
+                }
+                (self.unit, false)
+            } else {
+                (
+                    st.graph
+                        .add_unit(None, layer.into(), None, Replication::PerCore),
+                    false,
+                )
+            }
+        };
+        Stream {
+            unit,
+            forked,
+            ..self
+        }
+    }
+
+    /// Declares a capability constraint for the *current FlowUnit* — the
+    /// FlowUnits resource annotation (e.g. `"n_cpu >= 4 && gpu = yes"`).
+    /// Repeated calls AND-compose. A malformed expression is recorded as
+    /// a builder error and surfaced from `execute()`/`deploy()`.
+    pub fn add_constraint(self, expr: &str) -> Self {
+        {
+            let mut st = self.state.borrow_mut();
+            if self.forked {
+                st.errors.push(format!(
+                    "add_constraint({expr:?}) on a split() branch would constrain the unit \
+                     shared with the sibling branch; open a unit first (`.unit(name)`)"
+                ));
+            } else {
+                match ConstraintExpr::parse(expr) {
+                    Ok(parsed) => {
+                        let u = &mut st.graph.units[self.unit];
+                        u.constraint = Some(match u.constraint.take() {
+                            None => parsed,
+                            Some(prev) => prev.and(parsed),
+                        });
+                    }
+                    Err(e) => st.errors.push(format!("add_constraint({expr:?}): {e}")),
+                }
+            }
         }
         self
     }
 
-    /// Declares a capability constraint for the *most recent* operator —
-    /// the FlowUnits resource annotation (e.g. `"n_cpu >= 4 && gpu = yes"`).
-    pub fn add_constraint(self, expr: &str) -> Self {
-        let parsed = ConstraintExpr::parse(expr).expect("invalid constraint expression");
-        let g = self.ctx.graph.as_mut().unwrap();
-        let last = g.ops.last_mut().expect("no operator to constrain");
-        last.constraint = Some(match last.constraint.take() {
-            None => parsed,
-            Some(prev) => prev.and(parsed),
-        });
+    /// Sets the current FlowUnit's in-zone replication policy.
+    pub fn replicate(self, policy: Replication) -> Self {
+        {
+            let mut st = self.state.borrow_mut();
+            if self.forked {
+                st.errors.push(
+                    "replicate() on a split() branch would re-scope the unit shared with \
+                     the sibling branch; open a unit first (`.unit(name)`)"
+                        .into(),
+                );
+            } else {
+                st.graph.units[self.unit].replication = policy;
+            }
+        }
         self
+    }
+
+    /// Merges this stream with `other` (from the same context) into one.
+    /// The merge point lands in a fresh unit on the innermost of the two
+    /// input layers; name it with [`Stream::unit`]. Unioning streams from
+    /// different contexts is recorded as a builder error.
+    pub fn union(self, other: Stream) -> Stream {
+        if !Rc::ptr_eq(&self.state, &other.state) {
+            self.state
+                .borrow_mut()
+                .errors
+                .push("union: streams were built by different StreamContexts".into());
+            return self;
+        }
+        if self.head == other.head {
+            self.state.borrow_mut().errors.push(
+                "union: both streams are the same branch (unioning a stream with itself \
+                 delivers each event once, not twice — transform a branch first)"
+                    .into(),
+            );
+            return self;
+        }
+        let (head, unit) = {
+            let mut st = self.state.borrow_mut();
+            let la = st.graph.units[self.unit].layer.clone();
+            let lb = st.graph.units[other.unit].layer.clone();
+            let layer = if st.layer_pos(&lb) > st.layer_pos(&la) {
+                lb
+            } else {
+                la
+            };
+            let unit = st
+                .graph
+                .add_unit(None, layer, None, Replication::PerCore);
+            let head = st
+                .graph
+                .add_op(OpKind::Union, unit, vec![self.head, other.head], "union");
+            (head, unit)
+        };
+        Stream {
+            head,
+            unit,
+            forked: false,
+            ..self
+        }
+    }
+
+    /// Forks the stream: both returned handles continue from the same
+    /// point, and every downstream branch receives every event. Because
+    /// the branches share the current unit, `unit`/`to_layer` on either
+    /// handle always opens a *new* unit (never renames the shared one).
+    pub fn split(self) -> (Stream, Stream) {
+        let twin = Stream {
+            state: self.state.clone(),
+            head: self.head,
+            unit: self.unit,
+            forked: true,
+        };
+        (
+            Stream {
+                forked: true,
+                ..self
+            },
+            twin,
+        )
     }
 
     /// Element-wise transform.
     pub fn map(self, f: impl Fn(Value) -> Value + Send + Sync + 'static) -> Self {
-        self.ctx.push(OpKind::Map(Arc::new(f)), "map");
-        self
+        self.push(OpKind::Map(Arc::new(f)), "map")
     }
 
     /// Predicate filter.
     pub fn filter(self, f: impl Fn(&Value) -> bool + Send + Sync + 'static) -> Self {
-        self.ctx.push(OpKind::Filter(Arc::new(f)), "filter");
-        self
+        self.push(OpKind::Filter(Arc::new(f)), "filter")
     }
 
     /// One-to-many transform.
     pub fn flat_map(self, f: impl Fn(Value) -> Vec<Value> + Send + Sync + 'static) -> Self {
-        self.ctx.push(OpKind::FlatMap(Arc::new(f)), "flat_map");
-        self
+        self.push(OpKind::FlatMap(Arc::new(f)), "flat_map")
     }
 
     /// Keys the stream; downstream stateful operators group by this key
     /// and the repartitioning edge is hash-routed.
     pub fn key_by(self, f: impl Fn(&Value) -> Value + Send + Sync + 'static) -> Self {
-        self.ctx.push(OpKind::KeyBy(Arc::new(f)), "key_by");
-        self
+        self.push(OpKind::KeyBy(Arc::new(f)), "key_by")
     }
 
     /// `group_by` is Renoir's name for [`Stream::key_by`].
@@ -215,88 +460,78 @@ impl<'a> Stream<'a> {
         init: Value,
         step: impl Fn(&mut Value, Value) + Send + Sync + 'static,
     ) -> Self {
-        self.ctx.push(
+        self.push(
             OpKind::Fold {
                 init,
                 step: Arc::new(step),
             },
             "fold",
-        );
-        self
+        )
     }
 
     /// Keyed reduction: combines pairs of payloads with `f`; emits
-    /// `Pair(key, reduced)` per key at end-of-stream. Sugar over
-    /// [`Stream::fold`] with a first-element initializer.
+    /// `Pair(key, reduced)` per key at end-of-stream. Uses an explicit
+    /// empty-accumulator representation, so streams that legitimately
+    /// contain `Value::Null` reduce correctly.
     pub fn reduce(self, f: impl Fn(&Value, &Value) -> Value + Send + Sync + 'static) -> Self {
-        self.fold(Value::Null, move |acc, v| {
-            *acc = if matches!(acc, Value::Null) {
-                v
-            } else {
-                f(acc, &v)
-            };
-        })
+        self.push(OpKind::Reduce { f: Arc::new(f) }, "reduce")
     }
 
     /// Observes every element without changing it (debugging/metrics tap).
     pub fn inspect(self, f: impl Fn(&Value) + Send + Sync + 'static) -> Self {
-        self.ctx.push(
+        self.push(
             OpKind::Map(Arc::new(move |v| {
                 f(&v);
                 v
             })),
             "inspect",
-        );
-        self
+        )
     }
 
     /// Tumbling count window of `size` events with aggregate `agg`.
     pub fn window(self, size: usize, agg: WindowAgg) -> Self {
-        self.ctx.push(
+        self.push(
             OpKind::Window {
                 size,
                 slide: size,
                 agg,
             },
             "window",
-        );
-        self
+        )
     }
 
     /// Sliding count window.
     pub fn sliding_window(self, size: usize, slide: usize, agg: WindowAgg) -> Self {
-        self.ctx.push(OpKind::Window { size, slide, agg }, "window");
-        self
+        self.push(OpKind::Window { size, slide, agg }, "window")
     }
 
     /// Batched inference through the AOT-compiled XLA artifact `name`
     /// (`artifacts/<name>.hlo.txt`); `batch` rows per PJRT call, `in_dim`
     /// features per row.
     pub fn xla_map(self, name: &str, batch: usize, in_dim: usize) -> Self {
-        self.ctx.push(
+        self.push(
             OpKind::XlaMap {
                 artifact: name.to_string(),
                 batch,
                 in_dim,
             },
             "xla_map",
-        );
-        self
+        )
     }
 
     /// Terminal: collect events into [`JobReport::collected`].
     pub fn collect_vec(self) {
-        self.ctx.push(OpKind::Sink(SinkKind::Collect), "collect");
+        self.terminal(SinkKind::Collect, "collect");
     }
 
     /// Terminal: count events only.
     pub fn collect_count(self) {
-        self.ctx.push(OpKind::Sink(SinkKind::Count), "count");
+        self.terminal(SinkKind::Count, "count");
     }
 
     /// Terminal: discard events (benchmark sink).
     pub fn discard(self) {
-        self.ctx.push(OpKind::Sink(SinkKind::Discard), "discard");
+        self.terminal(SinkKind::Discard, "discard");
     }
 }
 
@@ -435,7 +670,7 @@ mod tests {
     }
 
     #[test]
-    fn constraint_annotation_composes() {
+    fn constraints_scope_to_the_unit_and_compose() {
         let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
         ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
             .to_layer("cloud")
@@ -444,14 +679,141 @@ mod tests {
             .add_constraint("n_cpu >= 4")
             .collect_count();
         let graph = ctx.into_graph().unwrap();
-        let c = graph.ops[1].constraint.as_ref().unwrap();
+        let unit = graph.unit_named("cloud").expect("layer-named unit");
+        let c = graph.units[unit].constraint.as_ref().unwrap();
         assert_eq!(c.to_string(), "gpu = yes && n_cpu >= 4");
+    }
+
+    #[test]
+    fn bad_constraint_surfaces_at_execute_not_panic() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
+            .to_layer("cloud")
+            .add_constraint("n_cpu >=") // malformed on purpose
+            .collect_count();
+        let err = ctx.execute().unwrap_err();
+        assert!(matches!(err, Error::Graph(_)), "got {err}");
+        assert!(err.to_string().contains("add_constraint"));
+    }
+
+    #[test]
+    fn to_layer_relayers_the_source_unit_in_place() {
+        // the old API special-cased `ops.len() == 1` to retroactively move
+        // the source; unit scoping makes this structural
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .map(|v| v)
+            .to_layer("cloud")
+            .collect_count();
+        let graph = ctx.into_graph().unwrap();
+        // source sits in the (re-layered, auto-named) edge unit
+        assert_eq!(graph.unit_of(0).layer, "edge");
+        assert_eq!(graph.unit_of(0).name, "edge");
+        assert_eq!(graph.unit_names(), vec!["edge", "cloud"]);
+    }
+
+    #[test]
+    fn named_units_carry_layer_constraint_and_replication() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
+            .unit("ingest")
+            .to_layer("edge")
+            .map(|v| v)
+            .unit("scorer")
+            .to_layer("cloud")
+            .add_constraint("gpu = yes")
+            .replicate(Replication::PerHost)
+            .map(|v| v)
+            .collect_count();
+        let graph = ctx.into_graph().unwrap();
+        assert_eq!(graph.unit_names(), vec!["ingest", "scorer"]);
+        let scorer = &graph.units[graph.unit_named("scorer").unwrap()];
+        assert_eq!(scorer.layer, "cloud");
+        assert_eq!(scorer.constraint.as_ref().unwrap().to_string(), "gpu = yes");
+        assert_eq!(scorer.replication, Replication::PerHost);
+        assert!(!scorer.auto);
+    }
+
+    #[test]
+    fn duplicate_unit_names_surface_at_execute() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
+            .unit("dup")
+            .to_layer("edge")
+            .map(|v| v)
+            .unit("dup")
+            .collect_count();
+        let err = ctx.execute().unwrap_err();
+        assert!(err.to_string().contains("duplicate FlowUnit name"));
+    }
+
+    #[test]
+    fn union_of_two_sources_merges_all_events() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        let a = ctx
+            .stream(Source::synthetic(600, |_, i| Value::I64(i as i64)))
+            .unit("north")
+            .to_layer("edge");
+        let b = ctx
+            .stream(Source::synthetic(400, |_, i| Value::I64(i as i64)))
+            .unit("south")
+            .to_layer("edge");
+        a.union(b)
+            .unit("merge")
+            .to_layer("cloud")
+            .map(|v| v)
+            .collect_count();
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.events_in, 1000);
+        assert_eq!(report.events_out, 1000);
+    }
+
+    #[test]
+    fn split_duplicates_stream_into_two_sinks() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        let s = ctx
+            .stream(Source::synthetic(500, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .map(|v| v)
+            .to_layer("cloud");
+        let (left, right) = s.split();
+        left.unit("keep").filter(|v| v.as_i64().unwrap() % 2 == 0).collect_vec();
+        right.unit("count-all").collect_count();
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.events_in, 500);
+        // both branches saw every event: 250 collected + 500 counted
+        assert_eq!(report.collected.len(), 250);
+        assert_eq!(report.events_out, 750);
+    }
+
+    #[test]
+    fn union_across_contexts_is_a_builder_error() {
+        let mut ctx1 = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        let mut ctx2 = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        let a = ctx1.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)));
+        let b = ctx2.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)));
+        a.union(b).collect_count();
+        let err = ctx1.execute().unwrap_err();
+        assert!(err.to_string().contains("different StreamContexts"));
     }
 
     #[test]
     fn execute_without_stream_errors() {
         let mut ctx = StreamContext::new(transparent_cluster(), JobConfig::default());
         assert!(ctx.execute().is_err());
+    }
+
+    #[test]
+    fn dangling_stream_surfaces_at_execute() {
+        let mut ctx = StreamContext::new(transparent_cluster(), JobConfig::default());
+        // no sink attached
+        let _ = ctx
+            .stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
+            .to_layer("edge")
+            .map(|v| v);
+        let err = ctx.execute().unwrap_err();
+        assert!(err.to_string().contains("dangling"), "got {err}");
     }
 
     #[test]
@@ -473,6 +835,29 @@ mod tests {
             .collect();
         maxes.sort();
         assert_eq!(maxes, vec![(0, 999), (1, 997), (2, 998)]);
+    }
+
+    #[test]
+    fn reduce_preserves_legitimate_null_values() {
+        // a stream of Value::Null must be reduced like any other value —
+        // the old fold-based sugar treated Null as "empty accumulator"
+        let count = |v: &Value| match v {
+            Value::Null => 1,
+            other => other.as_i64().unwrap_or(0),
+        };
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        ctx.stream(Source::vector(vec![Value::Null; 5]))
+            .to_layer("cloud")
+            .key_by(|_| Value::I64(0))
+            .reduce(move |a, b| Value::I64(count(a) + count(b)))
+            .collect_vec();
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.collected.len(), 1);
+        assert_eq!(
+            report.collected[0].as_pair().unwrap().1.as_i64(),
+            Some(5),
+            "all five Null events were reduced"
+        );
     }
 
     #[test]

@@ -191,6 +191,64 @@ impl OutPort {
     }
 }
 
+/// Output side of an operator instance: one [`OutPort`] per outgoing
+/// stage edge. A `split` stream has several edges, each of which receives
+/// every batch (duplication happens here); linear stages have one port and
+/// terminal sinks none.
+#[derive(Default)]
+pub struct FanOut {
+    ports: Vec<OutPort>,
+}
+
+impl FanOut {
+    /// Wraps one port per outgoing edge.
+    pub fn new(ports: Vec<OutPort>) -> Self {
+        FanOut { ports }
+    }
+
+    /// No outgoing edges (terminal sink stages).
+    pub fn none() -> Self {
+        FanOut { ports: Vec::new() }
+    }
+
+    /// A single outgoing edge.
+    pub fn single(port: OutPort) -> Self {
+        FanOut { ports: vec![port] }
+    }
+
+    /// True if there is no outgoing edge.
+    pub fn is_empty(&self) -> bool {
+        self.ports.is_empty()
+    }
+
+    /// Sends `batch` down every outgoing edge (cloning for all but the
+    /// last), each edge applying its own routing policy.
+    pub fn send(&mut self, batch: Vec<Value>) {
+        if batch.is_empty() || self.ports.is_empty() {
+            return;
+        }
+        let last = self.ports.len() - 1;
+        for p in &mut self.ports[..last] {
+            p.send(batch.clone());
+        }
+        self.ports[last].send(batch);
+    }
+
+    /// Flushes pending hash-routing buffers on every edge.
+    pub fn flush(&mut self) {
+        for p in &mut self.ports {
+            p.flush();
+        }
+    }
+
+    /// Flushes then signals EOS down every edge.
+    pub fn eos(&mut self) {
+        for p in &mut self.ports {
+            p.eos();
+        }
+    }
+}
+
 /// Input side of an operator instance: one receiver fed by N producers.
 pub struct Inbox {
     rx: Receiver<Msg>,
@@ -363,6 +421,22 @@ mod tests {
             2
         );
         link.shutdown();
+    }
+
+    #[test]
+    fn fanout_duplicates_batches_across_edges() {
+        let (t1, r1) = local_target(8);
+        let (t2, r2) = local_target(8);
+        let p1 = OutPort::new(vec![t1], Routing::RoundRobin, 16, None);
+        let p2 = OutPort::new(vec![t2], Routing::RoundRobin, 16, None);
+        let mut fan = FanOut::new(vec![p1, p2]);
+        fan.send(vec![Value::I64(3), Value::I64(4)]);
+        fan.eos();
+        for rx in [r1, r2] {
+            let mut inbox = Inbox::new(rx, 1);
+            assert_eq!(inbox.recv().unwrap(), vec![Value::I64(3), Value::I64(4)]);
+            assert!(inbox.recv().is_none());
+        }
     }
 
     #[test]

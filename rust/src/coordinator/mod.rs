@@ -5,7 +5,7 @@
 //! replacing a FlowUnit's logic and adding a geographical location while
 //! the rest of the deployment keeps running (§III "Dynamic updates").
 
-use crate::channels::{Inbox, Msg, OutPort, Target};
+use crate::channels::{FanOut, Inbox, Msg, OutPort, Target};
 use crate::config::ClusterSpec;
 use crate::error::{Error, Result};
 use crate::graph::{LogicalGraph, OpKind};
@@ -15,8 +15,8 @@ use crate::placement::{ancestor_at_layer, plan as make_plan, ExecPlan, PlannerKi
 use crate::queue::{Broker, QueueBroker, Topic};
 use crate::runtime::{
     exec::{
-        Collector, FilterExec, FlatMapExec, FoldExec, KeyByExec, MapExec, SinkExec, WindowExec,
-        XlaExec,
+        Collector, FilterExec, FlatMapExec, FoldExec, KeyByExec, MapExec, ReduceExec, SinkExec,
+        WindowExec, XlaExec,
     },
     run_instance, InputKind, InstanceRuntime, OpExec, SourceRuntime,
 };
@@ -265,7 +265,7 @@ impl Deployment {
                 continue;
             }
             for inst in plan.instances_of(edge.to_stage) {
-                if !in_set.contains(&inst) {
+                if !in_set.contains(&inst) || inst_tx.contains_key(&inst) {
                     continue;
                 }
                 let (tx, rx) = sync_channel(self.config.channel_capacity);
@@ -363,13 +363,12 @@ impl Deployment {
         // --- pass 4: spawn instance threads -------------------------------
         for inst in set.to_vec() {
             let stage = plan.stages[inst.stage].clone();
-            // input
+            // input — the planner guarantees a fan-in stage's incoming
+            // edges are either all direct or all queue-decoupled
             let incoming_decoupled = plan
                 .edges
                 .iter()
-                .find(|e| e.to_stage == inst.stage)
-                .map(|e| e.decoupled)
-                .unwrap_or(false);
+                .any(|e| e.to_stage == inst.stage && e.decoupled);
             let input = if stage.is_source() {
                 let OpKind::Source(kind) = &self.graph.ops[stage.ops[0]].kind else {
                     return Err(Error::Runtime("stage 0 op is not a source".into()));
@@ -413,11 +412,11 @@ impl Deployment {
                 InputKind::Inbox(Inbox::new(rx, *producer_count.get(&inst.id).unwrap_or(&0)))
             };
 
-            // output
-            let out_edge = plan.edges.iter().find(|e| e.from_stage == inst.stage);
-            let output = match out_edge {
-                None => None,
-                Some(edge) if edge.decoupled => {
+            // output: one port per outgoing stage edge (a `split` stream
+            // has several; every edge receives every batch)
+            let mut ports = Vec::new();
+            for edge in plan.edges.iter().filter(|e| e.from_stage == inst.stage) {
+                let port = if edge.decoupled {
                     let tz = ancestor_at_layer(
                         &topo,
                         &inst.zone,
@@ -425,7 +424,13 @@ impl Deployment {
                     )
                     .ok_or_else(|| Error::Placement("no ancestor for decoupled edge".into()))?;
                     let (link, latency) = self.link_for_route(&inst.zone, &tz)?;
-                    let tr = &self.topics[&(edge.to_stage, tz.clone())];
+                    let tr = self.topics.get(&(edge.to_stage, tz.clone())).ok_or_else(|| {
+                        Error::Placement(format!(
+                            "no queue topic for stage {} in zone {tz} (no consumer \
+                             instance was planned there)",
+                            edge.to_stage
+                        ))
+                    })?;
                     let crossing = inst.zone != tz;
                     let targets = tr
                         .ingest
@@ -437,14 +442,13 @@ impl Deployment {
                             crossing,
                         })
                         .collect();
-                    Some(OutPort::new(
+                    OutPort::new(
                         targets,
                         edge.routing,
                         self.config.batch_size,
                         Some(self.metrics.clone()),
-                    ))
-                }
-                Some(edge) => {
+                    )
+                } else {
                     let mut targets = Vec::new();
                     for t in plan.allowed_targets(&topo, inst.id, edge) {
                         let tgt = &plan.instances[t];
@@ -461,14 +465,16 @@ impl Deployment {
                             crossing: tgt.zone != inst.zone,
                         });
                     }
-                    Some(OutPort::new(
+                    OutPort::new(
                         targets,
                         edge.routing,
                         self.config.batch_size,
                         Some(self.metrics.clone()),
-                    ))
-                }
-            };
+                    )
+                };
+                ports.push(port);
+            }
+            let outputs = FanOut::new(ports);
 
             // fused operator chain (source op handled by InputKind)
             let ops = self.build_ops(&stage)?;
@@ -477,7 +483,7 @@ impl Deployment {
                 id: inst.id,
                 ops,
                 input,
-                output,
+                outputs,
                 metrics,
             };
             let h = std::thread::Builder::new()
@@ -506,6 +512,9 @@ impl Deployment {
                 OpKind::Fold { init, step } => {
                     ops.push(Box::new(FoldExec::new(init.clone(), step.clone())))
                 }
+                OpKind::Reduce { f } => ops.push(Box::new(ReduceExec::new(f.clone()))),
+                // merge happens in the channel wiring feeding this stage
+                OpKind::Union => {}
                 OpKind::Window { size, slide, agg } => {
                     ops.push(Box::new(WindowExec::new(*size, *slide, agg.clone())))
                 }
@@ -549,17 +558,36 @@ impl Deployment {
         self.metrics.clone()
     }
 
-    /// **Dynamic update**: replaces the logic of FlowUnit `unit` with the
-    /// corresponding operators of `new_graph`, without stopping any other
-    /// unit. Requirements (checked): the unit's input boundary is
-    /// decoupled through the queue substrate, and `new_graph` produces the
-    /// same stage partitioning (so plans stay aligned).
+    /// The deployed FlowUnit names, in unit-id order.
+    pub fn unit_names(&self) -> Vec<String> {
+        self.graph.unit_names()
+    }
+
+    /// **Dynamic update**: replaces the logic of the FlowUnit named
+    /// `unit` with the corresponding operators of `new_graph`, without
+    /// stopping any other unit. See [`Deployment::update_unit_at`].
+    pub fn update_unit(&mut self, unit: &str, new_graph: LogicalGraph) -> Result<()> {
+        let idx = self.graph.unit_named(unit).ok_or_else(|| {
+            Error::Runtime(format!(
+                "unknown FlowUnit '{unit}' (deployed units: {})",
+                self.unit_names().join(", ")
+            ))
+        })?;
+        self.update_unit_at(idx, new_graph)
+    }
+
+    /// **Dynamic update** (index form): replaces the logic of FlowUnit
+    /// `unit` with the corresponding operators of `new_graph`, without
+    /// stopping any other unit. Requirements (checked): every edge into
+    /// the unit is decoupled through the queue substrate, and `new_graph`
+    /// produces the same unit table and stage partitioning (so plans stay
+    /// aligned).
     ///
     /// Consumers of the unit commit their queue offsets, drain held state
     /// downstream, and exit; replacement instances resume from the
     /// committed offsets with the new logic. Producers upstream keep
     /// appending throughout — zero disruption outside the unit.
-    pub fn update_unit(&mut self, unit: usize, new_graph: LogicalGraph) -> Result<()> {
+    pub fn update_unit_at(&mut self, unit: usize, new_graph: LogicalGraph) -> Result<()> {
         let old_stages = self.graph.stages();
         let new_stages = new_graph.stages();
         if old_stages.len() != new_stages.len() {
@@ -577,22 +605,56 @@ impl Deployment {
                 )));
             }
         }
-        let first_stage = self
+        if self.graph.units.len() != new_graph.units.len()
+            || self.graph.units.iter().zip(&new_graph.units).any(|(a, b)| {
+                a.name != b.name
+                    || a.layer != b.layer
+                    || a.constraint != b.constraint
+                    || a.replication != b.replication
+            })
+        {
+            return Err(Error::Runtime(
+                "update_unit: FlowUnit table changed (name/layer/constraint/replication); \
+                 updates replace logic only — placement-affecting changes need a redeploy"
+                    .into(),
+            ));
+        }
+        let unit_stages: std::collections::BTreeSet<usize> = self
             .plan
             .stages
             .iter()
-            .find(|s| s.unit_index == unit)
-            .ok_or_else(|| Error::Runtime(format!("unknown unit {unit}")))?
-            .index;
-        let feeds_unit = self
+            .filter(|s| s.unit_index == unit)
+            .map(|s| s.index)
+            .collect();
+        if unit_stages.is_empty() {
+            return Err(Error::Runtime(format!("unknown unit {unit}")));
+        }
+        if self
+            .plan
+            .stages
+            .iter()
+            .any(|s| unit_stages.contains(&s.index) && s.is_source())
+        {
+            return Err(Error::Runtime("cannot update the source unit".into()));
+        }
+        let incoming: Vec<&crate::placement::EdgePlan> = self
             .plan
             .edges
             .iter()
-            .find(|e| e.to_stage == first_stage)
-            .ok_or_else(|| Error::Runtime("cannot update the source unit".into()))?;
-        if !feeds_unit.decoupled {
+            .filter(|e| unit_stages.contains(&e.to_stage))
+            .collect();
+        if !incoming.iter().any(|e| !unit_stages.contains(&e.from_stage)) {
+            return Err(Error::Runtime("cannot update the source unit".into()));
+        }
+        // Every edge into the unit — boundary AND internal — must be
+        // queue-decoupled: an inbox-fed stage inside the unit would exit
+        // through the normal sender-drop path during the swap and leak a
+        // premature EOS into downstream topics.
+        if incoming.iter().any(|e| !e.decoupled) {
             return Err(Error::Runtime(
-                "update_unit requires the unit's input boundary to be decoupled (JobConfig::decouple_units)"
+                "update_unit requires every edge into the unit (including intra-unit stage \
+                 edges) to be decoupled (JobConfig::decouple_units); multi-stage units with \
+                 direct internal channels cannot be hot-swapped"
                     .into(),
             ));
         }
@@ -662,20 +724,24 @@ impl Deployment {
                 "location '{loc}' adds no new instances"
             )));
         }
+        // units that contain a source stage may grow at a new location;
+        // everything downstream must already be active
+        let source_units: std::collections::BTreeSet<usize> = new_plan
+            .stages
+            .iter()
+            .filter(|s| s.is_source())
+            .map(|s| s.unit_index)
+            .collect();
         for a in &added {
             let unit = new_plan.stages[a.stage].unit_index;
-            if unit != 0 {
+            if !source_units.contains(&unit) {
                 return Err(Error::Runtime(format!(
-                    "add_location currently supports new instances in the source unit only \
+                    "add_location currently supports new instances in source units only \
                      (instance on stage {} is in unit {unit}); zone '{}' must already be active",
                     a.stage, a.zone
                 )));
             }
-            let out_edge = new_plan
-                .edges
-                .iter()
-                .find(|e| e.from_stage == a.stage && !new_plan.stages[e.to_stage].ops.is_empty());
-            if let Some(e) = out_edge {
+            for e in new_plan.edges.iter().filter(|e| e.from_stage == a.stage) {
                 if e.unit_boundary && !e.decoupled {
                     return Err(Error::Runtime(
                         "add_location requires decoupled unit boundaries".into(),
@@ -909,7 +975,17 @@ mod tests {
         );
         let g = tiny_graph(("edge", "cloud"));
         let mut dep = coord.deploy(&g).unwrap();
-        assert!(dep.update_unit(99, g.clone()).is_err());
+        assert!(dep.update_unit_at(99, g.clone()).is_err());
+        let err = dep.update_unit("no-such-unit", g.clone()).unwrap_err();
+        assert!(err.to_string().contains("unknown FlowUnit"));
+        dep.wait().unwrap();
+    }
+
+    #[test]
+    fn deployment_exposes_unit_names() {
+        let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+        let dep = coord.deploy(&tiny_graph(("edge", "cloud"))).unwrap();
+        assert_eq!(dep.unit_names(), vec!["edge", "cloud"]);
         dep.wait().unwrap();
     }
 }

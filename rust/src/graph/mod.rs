@@ -1,28 +1,36 @@
-//! Logical dataflow graph: operators, layer/constraint annotations, and the
-//! FlowUnit/stage partitioning algorithm (paper §III).
+//! Logical dataflow graph: operators, first-class FlowUnits, and the
+//! stage partitioning algorithm (paper §III).
 //!
-//! A job is a linear chain of operators (the paper's evaluation pipeline
-//! and running example are linear; fan-in arises from repartitioning, not
-//! from graph branches). Each operator carries:
+//! A job is a **DAG** of operators. Multiple sources, `union` merge
+//! points, `split` fan-outs, and multiple sinks are all first-class; the
+//! classic linear chain is just the degenerate case. Every operator
+//! belongs to exactly one **FlowUnit** — a named group of operators that
+//! is independently placed, replicated, and dynamically updated. The unit
+//! (not the operator) carries:
 //!
-//! * a **layer** annotation (`to_layer`) — contiguous same-layer operators
-//!   form a **FlowUnit**;
-//! * an optional **constraint** (`add_constraint`) — a conjunction of
-//!   capability predicates restricting which hosts may run it.
+//! * a **layer** annotation — the continuum layer whose zones host the
+//!   unit's instances;
+//! * an optional **constraint** — a conjunction of capability predicates
+//!   restricting which hosts may run the unit;
+//! * a **replication policy** — how densely the unit is instantiated
+//!   inside each zone.
 //!
 //! Within a FlowUnit, operators are further grouped into **stages**:
-//! maximal runs of operators that share a layer *and* an effective
-//! constraint and contain no repartitioning point. Stages are the unit of
-//! operator fusion — one stage instance is one worker thread running the
-//! fused operator chain.
+//! maximal linear runs of operators that contain no repartitioning point,
+//! no branching, and no source. Stages are the unit of operator fusion —
+//! one stage instance is one worker thread running the fused chain.
 
 use crate::error::{Error, Result};
 use crate::topology::{ConstraintExpr, LayerId};
 use crate::value::Value;
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 /// Identifier of a logical operator (index into [`LogicalGraph::ops`]).
 pub type OpId = usize;
+
+/// Identifier of a FlowUnit (index into [`LogicalGraph::units`]).
+pub type UnitId = usize;
 
 /// Unary transform.
 pub type MapFn = Arc<dyn Fn(Value) -> Value + Send + Sync>;
@@ -34,10 +42,45 @@ pub type FlatMapFn = Arc<dyn Fn(Value) -> Vec<Value> + Send + Sync>;
 pub type KeyFn = Arc<dyn Fn(&Value) -> Value + Send + Sync>;
 /// Fold step: accumulator ← step(accumulator, element payload).
 pub type FoldFn = Arc<dyn Fn(&mut Value, Value) + Send + Sync>;
+/// Reduction combiner: `(accumulated, next) -> accumulated`.
+pub type ReduceFn = Arc<dyn Fn(&Value, &Value) -> Value + Send + Sync>;
 /// Synthetic event generator: `(instance_index, event_index) -> event`.
 pub type GenFn = Arc<dyn Fn(u64, u64) -> Value + Send + Sync>;
 /// Custom window aggregate over the buffered payloads.
 pub type WindowFn = Arc<dyn Fn(&[Value]) -> Value + Send + Sync>;
+
+/// How densely a FlowUnit is instantiated inside each zone it is
+/// deployed to (the FlowUnits planner only; the Renoir baseline always
+/// replicates per core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Replication {
+    /// One instance per core of every capability-satisfying host.
+    #[default]
+    PerCore,
+    /// One instance per capability-satisfying host.
+    PerHost,
+    /// A single instance per zone (on the first satisfying host).
+    PerZone,
+}
+
+/// A first-class FlowUnit: the unit of placement, replication, and
+/// dynamic update. Operators reference their unit by [`UnitId`].
+#[derive(Debug, Clone)]
+pub struct UnitDef {
+    /// Unit id (index into [`LogicalGraph::units`]).
+    pub index: UnitId,
+    /// Unique unit name (auto-derived from the layer unless set through
+    /// the builder's `unit(name)`).
+    pub name: String,
+    /// Layer annotation: the unit's instances run in zones of this layer.
+    pub layer: LayerId,
+    /// Capability requirement for every host running this unit.
+    pub constraint: Option<ConstraintExpr>,
+    /// In-zone replication policy.
+    pub replication: Replication,
+    /// Whether the name was auto-derived (true) or user-chosen (false).
+    pub auto: bool,
+}
 
 /// Built-in window aggregations (applied to window payloads; keyed windows
 /// emit `Pair(key, aggregate)`).
@@ -124,7 +167,7 @@ pub enum SinkKind {
 /// Logical operator kinds.
 #[derive(Clone)]
 pub enum OpKind {
-    /// Stream source (first operator only).
+    /// Stream source (a DAG root; has no inputs).
     Source(SourceKind),
     /// Unary transform.
     Map(MapFn),
@@ -140,6 +183,12 @@ pub enum OpKind {
         init: Value,
         /// Folding step.
         step: FoldFn,
+    },
+    /// Keyed reduction with a first-element initializer (explicit empty
+    /// accumulator — a stream containing `Value::Null` reduces correctly).
+    Reduce {
+        /// Combiner.
+        f: ReduceFn,
     },
     /// Count-based window over the (keyed) stream.
     Window {
@@ -161,7 +210,10 @@ pub enum OpKind {
         /// Input feature dimension.
         in_dim: usize,
     },
-    /// Terminal sink (last operator only).
+    /// Merge point of two or more streams (pass-through; the merge itself
+    /// happens in the channel wiring feeding this operator's stage).
+    Union,
+    /// Terminal sink (a DAG leaf; has no consumers).
     Sink(SinkKind),
 }
 
@@ -174,12 +226,14 @@ impl std::fmt::Debug for OpKind {
             OpKind::FlatMap(_) => write!(f, "FlatMap"),
             OpKind::KeyBy(_) => write!(f, "KeyBy"),
             OpKind::Fold { .. } => write!(f, "Fold"),
+            OpKind::Reduce { .. } => write!(f, "Reduce"),
             OpKind::Window { size, slide, agg } => {
                 write!(f, "Window(size={size}, slide={slide}, agg={agg:?})")
             }
             OpKind::XlaMap {
                 artifact, batch, ..
             } => write!(f, "XlaMap({artifact}, batch={batch})"),
+            OpKind::Union => write!(f, "Union"),
             OpKind::Sink(s) => write!(f, "Sink({s:?})"),
         }
     }
@@ -188,34 +242,108 @@ impl std::fmt::Debug for OpKind {
 impl OpKind {
     /// Whether this operator holds keyed/windowed state.
     pub fn is_stateful(&self) -> bool {
-        matches!(self, OpKind::Fold { .. } | OpKind::Window { .. })
+        matches!(
+            self,
+            OpKind::Fold { .. } | OpKind::Reduce { .. } | OpKind::Window { .. }
+        )
     }
 }
 
-/// One logical operator with its annotations.
+/// One logical operator in the DAG.
 #[derive(Clone, Debug)]
 pub struct LogicalOp {
-    /// Operator id (chain position).
+    /// Operator id (topological position; inputs always have smaller ids).
     pub id: OpId,
     /// Kind and user logic.
     pub kind: OpKind,
-    /// Layer annotation (from `to_layer`).
-    pub layer: LayerId,
-    /// Capability requirement (from `add_constraint`).
-    pub constraint: Option<ConstraintExpr>,
+    /// FlowUnit this operator belongs to.
+    pub unit: UnitId,
+    /// Upstream operators feeding this one (empty for sources).
+    pub inputs: Vec<OpId>,
     /// Human-readable operator name for metrics/reports.
     pub name: String,
 }
 
-/// The logical job graph: a linear operator chain plus job-wide notes.
+/// The logical job graph: an operator DAG plus the FlowUnit table.
 #[derive(Clone, Debug, Default)]
 pub struct LogicalGraph {
-    /// Operators in chain order.
+    /// Operators in topological (insertion) order.
     pub ops: Vec<LogicalOp>,
+    /// FlowUnits referenced by the operators.
+    pub units: Vec<UnitDef>,
 }
 
 impl LogicalGraph {
-    /// Appends an operator, returning its id.
+    /// Adds a FlowUnit, returning its id. `name: None` auto-derives a
+    /// unique name from the layer.
+    pub fn add_unit(
+        &mut self,
+        name: Option<&str>,
+        layer: LayerId,
+        constraint: Option<ConstraintExpr>,
+        replication: Replication,
+    ) -> UnitId {
+        let index = self.units.len();
+        let (name, auto) = match name {
+            Some(n) => (n.to_string(), false),
+            None => (self.auto_unit_name(&layer, None), true),
+        };
+        self.units.push(UnitDef {
+            index,
+            name,
+            layer,
+            constraint,
+            replication,
+            auto,
+        });
+        index
+    }
+
+    /// Derives a unique auto-name for a unit on `layer`, ignoring the unit
+    /// at `exclude` (used when re-scoping a unit in place).
+    pub fn auto_unit_name(&self, layer: &str, exclude: Option<UnitId>) -> String {
+        let taken = |n: &str| {
+            self.units
+                .iter()
+                .any(|u| Some(u.index) != exclude && u.name == n)
+        };
+        if !taken(layer) {
+            return layer.to_string();
+        }
+        let mut i = self.units.len();
+        loop {
+            let candidate = format!("{layer}:{i}");
+            if !taken(&candidate) {
+                return candidate;
+            }
+            i += 1;
+        }
+    }
+
+    /// Appends an operator to `unit` with the given inputs, returning its
+    /// id. Inputs must already exist (ids are topological by construction).
+    pub fn add_op(
+        &mut self,
+        kind: OpKind,
+        unit: UnitId,
+        inputs: Vec<OpId>,
+        name: impl Into<String>,
+    ) -> OpId {
+        let id = self.ops.len();
+        self.ops.push(LogicalOp {
+            id,
+            kind,
+            unit,
+            inputs,
+            name: name.into(),
+        });
+        id
+    }
+
+    /// Legacy linear append: chains the operator after the previously
+    /// pushed one, reusing the last unit when layer and constraint match
+    /// and opening a new unit otherwise. Kept so linear pipelines (and the
+    /// bulk of the test suite) can build graphs without the fluent API.
     pub fn push(
         &mut self,
         kind: OpKind,
@@ -223,33 +351,140 @@ impl LogicalGraph {
         constraint: Option<ConstraintExpr>,
         name: impl Into<String>,
     ) -> OpId {
-        let id = self.ops.len();
-        self.ops.push(LogicalOp {
-            id,
-            kind,
-            layer,
-            constraint,
-            name: name.into(),
-        });
-        id
+        let reuse_last = self
+            .units
+            .last()
+            .map_or(false, |u| u.layer == layer && u.constraint == constraint);
+        let unit = if reuse_last {
+            self.units.len() - 1
+        } else {
+            self.add_unit(None, layer, constraint, Replication::PerCore)
+        };
+        let inputs = if matches!(kind, OpKind::Source(_)) || self.ops.is_empty() {
+            Vec::new()
+        } else {
+            vec![self.ops.len() - 1]
+        };
+        self.add_op(kind, unit, inputs, name)
     }
 
-    /// Validates chain shape and layer monotonicity against `layers`
+    /// The unit a given operator belongs to.
+    pub fn unit_of(&self, op: OpId) -> &UnitDef {
+        &self.units[self.ops[op].unit]
+    }
+
+    /// True when `unit` holds no processing operators yet (only sources
+    /// or unions) — such a unit can still be renamed or re-layered in
+    /// place by the builder sugar instead of opening a new unit.
+    pub fn unit_is_fresh(&self, unit: UnitId) -> bool {
+        self.ops
+            .iter()
+            .filter(|o| o.unit == unit)
+            .all(|o| matches!(o.kind, OpKind::Source(_) | OpKind::Union))
+    }
+
+    /// Resolves a FlowUnit by name.
+    pub fn unit_named(&self, name: &str) -> Option<UnitId> {
+        self.units.iter().position(|u| u.name == name)
+    }
+
+    /// All FlowUnit names, in unit-id order.
+    pub fn unit_names(&self) -> Vec<String> {
+        self.units.iter().map(|u| u.name.clone()).collect()
+    }
+
+    /// Number of consumers of each operator.
+    fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.ops.len()];
+        for op in &self.ops {
+            for &i in &op.inputs {
+                if i < counts.len() {
+                    counts[i] += 1;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Validates DAG shape and layer monotonicity against `layers`
     /// (periphery→centre order): data may only flow inward along the zone
     /// tree, matching the paper's collection pattern.
     pub fn validate(&self, layers: &[LayerId]) -> Result<()> {
         if self.ops.is_empty() {
             return Err(Error::Graph("empty graph".into()));
         }
-        if !matches!(self.ops[0].kind, OpKind::Source(_)) {
-            return Err(Error::Graph("first operator must be a Source".into()));
-        }
-        for (i, op) in self.ops.iter().enumerate() {
-            if i > 0 && matches!(op.kind, OpKind::Source(_)) {
-                return Err(Error::Graph(format!("Source at position {i} (must be first)")));
+        for op in &self.ops {
+            for &i in &op.inputs {
+                if i >= op.id {
+                    return Err(Error::Graph(format!(
+                        "operator '{}' input {i} is not upstream of it (graph must be topologically ordered)",
+                        op.name
+                    )));
+                }
             }
-            if matches!(op.kind, OpKind::Sink(_)) && i + 1 != self.ops.len() {
-                return Err(Error::Graph(format!("Sink at position {i} (must be last)")));
+        }
+        let mut names = BTreeSet::new();
+        for u in &self.units {
+            if !names.insert(u.name.as_str()) {
+                return Err(Error::Graph(format!(
+                    "duplicate FlowUnit name '{}'",
+                    u.name
+                )));
+            }
+        }
+        let consumers = self.consumer_counts();
+        for op in &self.ops {
+            match &op.kind {
+                OpKind::Source(_) => {
+                    if !op.inputs.is_empty() {
+                        return Err(Error::Graph(format!(
+                            "source '{}' cannot have inputs",
+                            op.name
+                        )));
+                    }
+                }
+                OpKind::Sink(_) => {
+                    if op.inputs.is_empty() {
+                        return Err(Error::Graph(format!("sink '{}' has no input", op.name)));
+                    }
+                    if consumers[op.id] > 0 {
+                        return Err(Error::Graph(format!(
+                            "sink '{}' cannot feed downstream operators",
+                            op.name
+                        )));
+                    }
+                }
+                OpKind::Union => {
+                    if op.inputs.len() < 2 {
+                        return Err(Error::Graph(format!(
+                            "union '{}' needs at least two inputs",
+                            op.name
+                        )));
+                    }
+                    let distinct: BTreeSet<OpId> = op.inputs.iter().copied().collect();
+                    if distinct.len() != op.inputs.len() {
+                        return Err(Error::Graph(format!(
+                            "union '{}' has duplicate inputs (each event would be \
+                             delivered once, not per-input)",
+                            op.name
+                        )));
+                    }
+                }
+                _ => {
+                    if op.inputs.len() != 1 {
+                        return Err(Error::Graph(format!(
+                            "operator '{}' has {} inputs (expected exactly 1)",
+                            op.name,
+                            op.inputs.len()
+                        )));
+                    }
+                }
+            }
+            if !matches!(op.kind, OpKind::Sink(_)) && consumers[op.id] == 0 {
+                return Err(Error::Graph(format!(
+                    "operator '{}' is not terminated by a sink (dangling stream)",
+                    op.name
+                )));
             }
             if let OpKind::Window { size, slide, .. } = &op.kind {
                 if *size == 0 || *slide == 0 || *slide > *size {
@@ -258,76 +493,106 @@ impl LogicalGraph {
                     )));
                 }
             }
-        }
-        if !matches!(self.ops.last().unwrap().kind, OpKind::Sink(_)) {
-            return Err(Error::Graph("last operator must be a Sink".into()));
-        }
-        let mut prev_idx = 0usize;
-        for op in &self.ops {
-            let idx = layers
-                .iter()
-                .position(|l| l == &op.layer)
-                .ok_or_else(|| Error::Graph(format!("operator '{}' on unknown layer '{}'", op.name, op.layer)))?;
-            if idx < prev_idx {
+            if op.unit >= self.units.len() {
                 return Err(Error::Graph(format!(
-                    "operator '{}' moves outward ({} after {}); FlowUnits pipelines flow periphery → centre",
-                    op.name, op.layer, layers[prev_idx]
+                    "operator '{}' references unknown unit {}",
+                    op.name, op.unit
                 )));
             }
-            prev_idx = idx;
+        }
+        // layer monotonicity along every edge, periphery → centre
+        let pos_of = |unit: UnitId, op_name: &str| -> Result<usize> {
+            let layer = &self.units[unit].layer;
+            layers.iter().position(|l| l == layer).ok_or_else(|| {
+                Error::Graph(format!(
+                    "operator '{op_name}' on unknown layer '{layer}'"
+                ))
+            })
+        };
+        for op in &self.ops {
+            let here = pos_of(op.unit, &op.name)?;
+            for &i in &op.inputs {
+                let upstream = pos_of(self.ops[i].unit, &self.ops[i].name)?;
+                if here < upstream {
+                    return Err(Error::Graph(format!(
+                        "operator '{}' moves outward ({} after {}); FlowUnits pipelines flow periphery → centre",
+                        op.name,
+                        self.units[op.unit].layer,
+                        self.units[self.ops[i].unit].layer
+                    )));
+                }
+            }
         }
         Ok(())
     }
 
-    /// Splits the chain into [`Stage`]s (fusion units) and labels each with
-    /// its FlowUnit index. Breaks occur:
+    /// Splits the DAG into [`Stage`]s (fusion units). An operator fuses
+    /// into its (single) input's stage unless a break is required:
     /// * after the `Source` — data origin is physical (sensors live at the
     ///   edge), so the source is its own stage, pinned to its data-origin
     ///   zones under *every* planner; replicating it would move where data
     ///   is *born*, not where it is processed;
     /// * after a `KeyBy` (the outgoing edge is hash-partitioned);
-    /// * at a layer change (FlowUnit boundary);
-    /// * at an effective-constraint change (operators with different
-    ///   requirements run on different host subsets — paper's red/yellow
-    ///   cloud node example).
+    /// * at a FlowUnit boundary;
+    /// * at a fan-in (`union` inputs) or fan-out (`split` consumers).
     pub fn stages(&self) -> Vec<Stage> {
+        let consumers = self.consumer_counts();
+        let mut stage_of = vec![usize::MAX; self.ops.len()];
         let mut stages: Vec<Stage> = Vec::new();
-        let mut unit_index = 0usize;
         for op in &self.ops {
-            let break_before = match stages.last() {
-                None => true,
-                Some(prev) => {
-                    let prev_last = &self.ops[*prev.ops.last().unwrap()];
-                    let layer_change = prev_last.layer != op.layer;
-                    let constraint_change = prev_last.constraint != op.constraint;
-                    let after_keyby = matches!(prev_last.kind, OpKind::KeyBy(_));
-                    let after_source = matches!(prev_last.kind, OpKind::Source(_));
-                    layer_change || constraint_change || after_keyby || after_source
-                }
+            let fused = if op.inputs.len() == 1 {
+                let p = op.inputs[0];
+                let prev = &self.ops[p];
+                prev.unit == op.unit
+                    && consumers[p] == 1
+                    && !matches!(prev.kind, OpKind::Source(_) | OpKind::KeyBy(_))
+            } else {
+                false
             };
-            if break_before {
-                if let Some(prev) = stages.last() {
-                    let prev_last = &self.ops[*prev.ops.last().unwrap()];
-                    if prev_last.layer != op.layer {
-                        unit_index += 1;
-                    }
-                }
+            if fused {
+                let s = stage_of[op.inputs[0]];
+                stages[s].ops.push(op.id);
+                stage_of[op.id] = s;
+            } else {
+                let u = &self.units[op.unit];
+                stage_of[op.id] = stages.len();
                 stages.push(Stage {
                     index: stages.len(),
-                    unit_index,
-                    layer: op.layer.clone(),
-                    constraint: op.constraint.clone(),
+                    unit_index: op.unit,
+                    layer: u.layer.clone(),
+                    constraint: u.constraint.clone(),
+                    replication: u.replication,
+                    source: matches!(op.kind, OpKind::Source(_)),
                     ops: vec![op.id],
                 });
-            } else {
-                stages.last_mut().unwrap().ops.push(op.id);
             }
         }
         stages
     }
 
-    /// Routing required on the edge *out of* `stage` (into the next stage):
-    /// hash-partitioned iff the stage ends with `KeyBy`.
+    /// Stage-to-stage edges of the DAG, derived from operator inputs.
+    /// Sorted and deduplicated for deterministic plans.
+    pub fn stage_edges(&self, stages: &[Stage]) -> Vec<(usize, usize)> {
+        let mut stage_of = vec![0usize; self.ops.len()];
+        for s in stages {
+            for &o in &s.ops {
+                stage_of[o] = s.index;
+            }
+        }
+        let mut edges = BTreeSet::new();
+        for op in &self.ops {
+            for &i in &op.inputs {
+                let (a, b) = (stage_of[i], stage_of[op.id]);
+                if a != b {
+                    edges.insert((a, b));
+                }
+            }
+        }
+        edges.into_iter().collect()
+    }
+
+    /// Routing required on edges *out of* `stage`: hash-partitioned iff
+    /// the stage ends with `KeyBy`.
     pub fn edge_routing(&self, stage: &Stage) -> crate::channels::Routing {
         let last = &self.ops[*stage.ops.last().unwrap()];
         if matches!(last.kind, OpKind::KeyBy(_)) {
@@ -337,37 +602,52 @@ impl LogicalGraph {
         }
     }
 
-    /// Render a compact description of the chain.
+    /// Render a compact description of the DAG, grouped by FlowUnit.
     pub fn describe(&self) -> String {
-        self.ops
+        self.units
             .iter()
-            .map(|o| format!("{}@{}", o.name, o.layer))
+            .filter_map(|u| {
+                let ops: Vec<&str> = self
+                    .ops
+                    .iter()
+                    .filter(|o| o.unit == u.index)
+                    .map(|o| o.name.as_str())
+                    .collect();
+                if ops.is_empty() {
+                    None
+                } else {
+                    Some(format!("[{} @ {}] {}", u.name, u.layer, ops.join(" -> ")))
+                }
+            })
             .collect::<Vec<_>>()
-            .join(" -> ")
+            .join(" | ")
     }
 }
 
-/// A fusion unit: a maximal run of chained operators sharing layer and
-/// constraint with no internal repartitioning.
+/// A fusion unit: a maximal linear run of operators inside one FlowUnit
+/// with no internal repartitioning or branching.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Stage {
-    /// Stage index in chain order.
+    /// Stage index in topological order.
     pub index: usize,
-    /// FlowUnit this stage belongs to (contiguous same-layer stages share
-    /// a unit index).
-    pub unit_index: usize,
-    /// Layer annotation.
+    /// FlowUnit this stage belongs to.
+    pub unit_index: UnitId,
+    /// Layer annotation (from the unit).
     pub layer: LayerId,
-    /// Effective constraint.
+    /// Effective constraint (from the unit).
     pub constraint: Option<ConstraintExpr>,
+    /// In-zone replication policy (from the unit).
+    pub replication: Replication,
+    /// Whether this stage's (single) operator is a stream source.
+    pub source: bool,
     /// Logical operators fused into this stage.
     pub ops: Vec<OpId>,
 }
 
 impl Stage {
-    /// True if the stage's first operator is the job source.
+    /// True if the stage's operator is a job source.
     pub fn is_source(&self) -> bool {
-        self.ops.first() == Some(&0)
+        self.source
     }
 }
 
@@ -431,6 +711,14 @@ mod tests {
     }
 
     #[test]
+    fn push_assigns_layer_named_units() {
+        let g = eval_graph();
+        assert_eq!(g.unit_names(), vec!["edge", "site", "cloud"]);
+        assert_eq!(g.unit_named("site"), Some(1));
+        assert_eq!(g.unit_named("fog"), None);
+    }
+
+    #[test]
     fn stage_partitioning_breaks_at_source_layers_and_keyby() {
         let g = eval_graph();
         let stages = g.stages();
@@ -452,6 +740,16 @@ mod tests {
     }
 
     #[test]
+    fn stage_edges_of_linear_chain_are_consecutive() {
+        let g = eval_graph();
+        let stages = g.stages();
+        assert_eq!(
+            g.stage_edges(&stages),
+            vec![(0, 1), (1, 2), (2, 3), (3, 4)]
+        );
+    }
+
+    #[test]
     fn keyby_edge_is_hash_routed() {
         let g = eval_graph();
         let stages = g.stages();
@@ -462,7 +760,9 @@ mod tests {
     }
 
     #[test]
-    fn constraint_change_breaks_stage() {
+    fn constraint_opens_a_new_unit() {
+        // constraints are unit-scoped: a constrained operator run lives in
+        // its own FlowUnit even inside one layer
         let mut g = LogicalGraph::default();
         g.push(
             OpKind::Source(SourceKind::Synthetic {
@@ -481,8 +781,45 @@ mod tests {
         let stages = g.stages();
         assert_eq!(stages.len(), 4); // [src] [m1] [m2-gpu] [sink]
         assert_eq!(stages[2].constraint.as_ref().unwrap().to_string(), "gpu = yes");
-        // all same layer -> one FlowUnit
-        assert!(stages.iter().all(|s| s.unit_index == 0));
+        assert_eq!(
+            stages.iter().map(|s| s.unit_index).collect::<Vec<_>>(),
+            vec![0, 0, 1, 2]
+        );
+        g.validate(&layers()).unwrap();
+    }
+
+    #[test]
+    fn union_and_split_partition_into_stages() {
+        // two sources union into one unit, then split into two sinks
+        let mut g = LogicalGraph::default();
+        let ua = g.add_unit(Some("north"), "edge".into(), None, Replication::PerCore);
+        let ub = g.add_unit(Some("south"), "edge".into(), None, Replication::PerCore);
+        let uc = g.add_unit(Some("detect"), "cloud".into(), None, Replication::PerCore);
+        let sa = g.add_op(
+            OpKind::Source(SourceKind::Vector(Arc::new(vec![Value::I64(1)]))),
+            ua,
+            vec![],
+            "srcA",
+        );
+        let sb = g.add_op(
+            OpKind::Source(SourceKind::Vector(Arc::new(vec![Value::I64(2)]))),
+            ub,
+            vec![],
+            "srcB",
+        );
+        let un = g.add_op(OpKind::Union, uc, vec![sa, sb], "union");
+        let m = g.add_op(OpKind::Map(Arc::new(|v| v)), uc, vec![un], "map");
+        g.add_op(OpKind::Sink(SinkKind::Collect), uc, vec![m], "sinkA");
+        g.add_op(OpKind::Sink(SinkKind::Count), uc, vec![m], "sinkB");
+        g.validate(&layers()).unwrap();
+        let stages = g.stages();
+        // [srcA] [srcB] [union, map] [sinkA] [sinkB]
+        assert_eq!(stages.len(), 5);
+        assert_eq!(stages[2].ops, vec![un, m]);
+        assert_eq!(
+            g.stage_edges(&stages),
+            vec![(0, 2), (1, 2), (2, 3), (2, 4)]
+        );
     }
 
     #[test]
@@ -521,6 +858,22 @@ mod tests {
         );
         g.push(OpKind::Map(Arc::new(|v| v)), "edge".into(), None, "m");
         assert!(g.validate(&layers()).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_unit_names() {
+        let mut g = LogicalGraph::default();
+        let ua = g.add_unit(Some("dup"), "edge".into(), None, Replication::PerCore);
+        let ub = g.add_unit(Some("dup"), "cloud".into(), None, Replication::PerCore);
+        let s = g.add_op(
+            OpKind::Source(SourceKind::Vector(Arc::new(vec![]))),
+            ua,
+            vec![],
+            "src",
+        );
+        g.add_op(OpKind::Sink(SinkKind::Count), ub, vec![s], "sink");
+        let err = g.validate(&layers()).unwrap_err();
+        assert!(err.to_string().contains("duplicate FlowUnit name"));
     }
 
     #[test]

@@ -32,20 +32,30 @@
 //!
 //! ## Quick start
 //!
+//! Jobs are DAGs of named FlowUnits: multiple sources, `union` merges,
+//! `split` fan-outs, and multiple sinks are all first-class. `to_layer`
+//! remains as sugar for opening an anonymous layer-named unit.
+//!
 //! ```no_run
 //! use flowunits::prelude::*;
 //!
 //! let cluster = ClusterSpec::parse(&std::fs::read_to_string("cluster.fu").unwrap()).unwrap();
 //! let mut ctx = StreamContext::new(cluster, JobConfig::default());
 //! ctx.stream(Source::synthetic(1_000_000, |_, i| Value::I64(i as i64)))
+//!     .unit("ingest")
 //!     .to_layer("edge")
 //!     .filter(|v| v.as_i64().unwrap() % 3 == 0)
+//!     .unit("report")
 //!     .to_layer("cloud")
 //!     .map(|v| v)
 //!     .collect_count();
 //! let report = ctx.execute().unwrap();
 //! println!("{} events, {:?}", report.events_out, report.wall_time);
 //! ```
+//!
+//! A deployed job exposes its units by name for zero-downtime updates:
+//! `Deployment::update_unit("report", new_graph)` swaps one unit's logic
+//! while the rest keep running (see `examples/dynamic_update.rs`).
 
 pub mod api;
 pub mod channels;
@@ -65,11 +75,13 @@ pub mod value;
 
 /// Convenience re-exports for typical users of the library.
 pub mod prelude {
-    pub use crate::api::{JobConfig, PlannerKind, Source, Stream, StreamContext, WindowAgg};
+    pub use crate::api::{
+        JobConfig, PlannerKind, Replication, Source, Stream, StreamContext, WindowAgg,
+    };
     pub use crate::config::ClusterSpec;
     pub use crate::coordinator::{Coordinator, Deployment, JobReport};
     pub use crate::error::{Error, Result};
-    pub use crate::graph::LogicalGraph;
+    pub use crate::graph::{LogicalGraph, UnitDef};
     pub use crate::netsim::LinkSpec;
     pub use crate::topology::{Capabilities, ConstraintExpr, LayerId, LocationId, ZoneId};
     pub use crate::value::Value;

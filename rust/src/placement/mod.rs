@@ -289,15 +289,28 @@ pub fn plan(
     }
 
     let mut edges = Vec::new();
-    for i in 0..stages.len().saturating_sub(1) {
-        let unit_boundary = stages[i].unit_index != stages[i + 1].unit_index;
+    for (from, to) in graph.stage_edges(&stages) {
+        let unit_boundary = stages[from].unit_index != stages[to].unit_index;
         edges.push(EdgePlan {
-            from_stage: i,
-            to_stage: i + 1,
-            routing: graph.edge_routing(&stages[i]),
+            from_stage: from,
+            to_stage: to,
+            routing: graph.edge_routing(&stages[from]),
             unit_boundary,
             decoupled: decouple_units && unit_boundary,
         });
+    }
+    // A fan-in stage (union) must consume all its inputs the same way: if
+    // any incoming edge is queue-decoupled, decouple them all so the stage
+    // reads from one queue topic instead of mixing inbox and queue inputs.
+    let decoupled_heads: BTreeSet<usize> = edges
+        .iter()
+        .filter(|e| e.decoupled)
+        .map(|e| e.to_stage)
+        .collect();
+    for e in &mut edges {
+        if decoupled_heads.contains(&e.to_stage) {
+            e.decoupled = true;
+        }
     }
 
     let plan = ExecPlan {
@@ -380,8 +393,19 @@ fn place_stage(
                 let mut hosts: Vec<_> = hosts;
                 hosts.sort_by(|a, b| a.id.cmp(&b.id));
                 for host in hosts {
-                    for core in 0..host.cores {
-                        out.push((host.id.clone(), host.zone.clone(), core));
+                    match stage.replication {
+                        crate::graph::Replication::PerCore => {
+                            for core in 0..host.cores {
+                                out.push((host.id.clone(), host.zone.clone(), core));
+                            }
+                        }
+                        crate::graph::Replication::PerHost => {
+                            out.push((host.id.clone(), host.zone.clone(), 0));
+                        }
+                        crate::graph::Replication::PerZone => {
+                            out.push((host.id.clone(), host.zone.clone(), 0));
+                            break;
+                        }
                     }
                 }
             }
@@ -636,6 +660,77 @@ mod tests {
         assert!(p.edges[1].decoupled);
         assert!(!p.edges[2].decoupled);
         assert!(p.edges[3].decoupled);
+    }
+
+    #[test]
+    fn replication_policies_scale_instances() {
+        use crate::graph::Replication;
+        let cluster = eval_cluster(None, Duration::ZERO);
+        for (repl, expected_site_instances) in [
+            (Replication::PerCore, 8), // 2 hosts × 4 cores
+            (Replication::PerHost, 2),
+            (Replication::PerZone, 1),
+        ] {
+            let mut g = LogicalGraph::default();
+            let u_edge = g.add_unit(Some("ingest"), "edge".into(), None, Replication::PerCore);
+            let u_site = g.add_unit(Some("agg"), "site".into(), None, repl);
+            let s = g.add_op(
+                OpKind::Source(SourceKind::Synthetic {
+                    total: 10,
+                    gen: Arc::new(|_, i| Value::I64(i as i64)),
+                    rate: None,
+                }),
+                u_edge,
+                vec![],
+                "src",
+            );
+            let m = g.add_op(OpKind::Map(Arc::new(|v| v)), u_site, vec![s], "m");
+            g.add_op(OpKind::Sink(SinkKind::Count), u_site, vec![m], "sink");
+            let p = plan(&g, &cluster, PlannerKind::FlowUnits, &[], false).unwrap();
+            // stage 1 = [m, sink] at the site layer
+            assert_eq!(p.instances_of(1).len(), expected_site_instances, "{repl:?}");
+        }
+    }
+
+    #[test]
+    fn union_fanin_edges_decouple_together() {
+        use crate::graph::Replication;
+        let cluster = eval_cluster(None, Duration::ZERO);
+        let mut g = LogicalGraph::default();
+        let u_edge = g.add_unit(Some("north"), "edge".into(), None, Replication::PerCore);
+        let u_cloud = g.add_unit(Some("merge"), "cloud".into(), None, Replication::PerCore);
+        let sa = g.add_op(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 10,
+                gen: Arc::new(|_, i| Value::I64(i as i64)),
+                rate: None,
+            }),
+            u_edge,
+            vec![],
+            "srcA",
+        );
+        // srcB lives in the *same* unit as the union, so its edge into the
+        // union is intra-unit; srcA's edge crosses a unit boundary
+        let sb = g.add_op(
+            OpKind::Source(SourceKind::Synthetic {
+                total: 10,
+                gen: Arc::new(|_, i| Value::I64(i as i64)),
+                rate: None,
+            }),
+            u_cloud,
+            vec![],
+            "srcB",
+        );
+        let un = g.add_op(OpKind::Union, u_cloud, vec![sa, sb], "union");
+        g.add_op(OpKind::Sink(SinkKind::Count), u_cloud, vec![un], "sink");
+        let p = plan(&g, &cluster, PlannerKind::FlowUnits, &[], true).unwrap();
+        // stages: [srcA] [srcB] [union, sink] — the union stage has two
+        // incoming edges; because the unit-boundary edge from srcA is
+        // decoupled, srcB's intra-unit edge must be decoupled too
+        let incoming: Vec<_> = p.edges.iter().filter(|e| e.to_stage == 2).collect();
+        assert_eq!(incoming.len(), 2);
+        assert!(incoming.iter().all(|e| e.decoupled));
+        assert_eq!(p.edges.len(), 2);
     }
 
     #[test]

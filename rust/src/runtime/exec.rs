@@ -1,7 +1,7 @@
 //! Operator executors: the runtime counterparts of
 //! [`OpKind`](crate::graph::OpKind), fused into per-stage chains.
 
-use crate::graph::{FoldFn, WindowAgg};
+use crate::graph::{FoldFn, ReduceFn, WindowAgg};
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::value::Value;
 use std::collections::HashMap;
@@ -167,6 +167,56 @@ impl OpExec for FoldExec {
         entries.sort_by(|a, b| a.0.cmp(&b.0));
         for (_, (key, acc)) in entries {
             out.push(Value::pair(key, acc));
+        }
+    }
+}
+
+/// Keyed `reduce`: first-element initializer with an explicit empty
+/// accumulator (`Option<Value>`), so a stream that legitimately contains
+/// `Value::Null` reduces correctly — no in-band sentinel.
+pub struct ReduceExec {
+    f: ReduceFn,
+    /// encoded key → (key, accumulator-if-any).
+    state: FnvMap<(Value, Option<Value>)>,
+    scratch: Vec<u8>,
+}
+
+impl ReduceExec {
+    /// Creates a reduce executor.
+    pub fn new(f: ReduceFn) -> Self {
+        ReduceExec {
+            f,
+            state: FnvMap::default(),
+            scratch: Vec::with_capacity(32),
+        }
+    }
+}
+
+impl OpExec for ReduceExec {
+    fn process(&mut self, batch: Vec<Value>, _out: &mut Vec<Value>) {
+        for v in batch {
+            let (key, payload) = match v {
+                Value::Pair(kp) => (kp.0, kp.1),
+                other => (Value::Null, other),
+            };
+            let entry = keyed_entry(&mut self.state, &mut self.scratch, &key, |k| {
+                (k.clone(), None)
+            });
+            entry.1 = Some(match entry.1.take() {
+                None => payload,
+                Some(acc) => (self.f)(&acc, &payload),
+            });
+        }
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        // deterministic emission order despite the hash map
+        let mut entries: Vec<(Vec<u8>, (Value, Option<Value>))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, (key, acc)) in entries {
+            if let Some(acc) = acc {
+                out.push(Value::pair(key, acc));
+            }
         }
     }
 }
@@ -466,6 +516,39 @@ mod tests {
         f.process(vec![Value::F64(1.5), Value::F64(2.5)], &mut out);
         f.flush(&mut out);
         assert_eq!(out, vec![Value::pair(Value::Null, Value::F64(4.0))]);
+    }
+
+    #[test]
+    fn reduce_handles_null_values_without_sentinel_corruption() {
+        // a stream that genuinely contains Value::Null must reduce it like
+        // any other value (the old fold-based sugar used Null as an
+        // in-band "empty" sentinel and silently dropped it)
+        let mut r = ReduceExec::new(Arc::new(|a: &Value, b: &Value| {
+            let count = |v: &Value| if matches!(v, Value::Null) { 1 } else { v.as_i64().unwrap_or(0) };
+            Value::I64(count(a) + count(b))
+        }));
+        let mut out = Vec::new();
+        r.process(
+            vec![
+                Value::pair(Value::I64(0), Value::Null),
+                Value::pair(Value::I64(0), Value::Null),
+                Value::pair(Value::I64(0), Value::Null),
+            ],
+            &mut out,
+        );
+        r.flush(&mut out);
+        assert_eq!(out.len(), 1);
+        // 3 nulls: first initializes the accumulator (Null), the two
+        // combining steps each count both sides: (1+1)=2, then (2+1)=3
+        assert_eq!(out[0].as_pair().unwrap().1.as_i64(), Some(3));
+    }
+
+    #[test]
+    fn reduce_emits_nothing_for_empty_stream() {
+        let mut r = ReduceExec::new(Arc::new(|a: &Value, _b: &Value| a.clone()));
+        let mut out = Vec::new();
+        r.flush(&mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! execution). An instance pulls from its input (a source generator, an
 //! in-memory/remote channel inbox, or a queue partition), feeds batches
 //! through the fused operator chain, and routes outputs through its
-//! [`OutPort`]. End-of-stream flushes stateful operators and cascades EOS
+//! [`FanOut`] (one [`OutPort`](crate::channels::OutPort) per outgoing
+//! stage edge). End-of-stream flushes stateful operators and cascades EOS
 //! downstream.
 
 pub mod exec;
@@ -13,7 +14,7 @@ pub mod xla_exec;
 
 pub use exec::{flush_chain, run_chain, Collector, OpExec};
 
-use crate::channels::{Inbox, OutPort};
+use crate::channels::{FanOut, Inbox};
 use crate::graph::SourceKind;
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::queue::Topic;
@@ -64,8 +65,9 @@ pub struct InstanceRuntime {
     pub ops: Vec<Box<dyn OpExec>>,
     /// Input side.
     pub input: InputKind,
-    /// Output port (None for terminal sink stages).
-    pub output: Option<OutPort>,
+    /// Output side: one port per outgoing stage edge (empty for terminal
+    /// sink stages; several for `split` fan-outs).
+    pub outputs: FanOut,
     /// Job metrics.
     pub metrics: Metrics,
 }
@@ -76,13 +78,13 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
     let mut batches = 0u64;
     match rt.input {
         InputKind::Source(src) => {
-            run_source(src, &mut rt.ops, &mut rt.output, &rt.metrics);
+            run_source(src, &mut rt.ops, &mut rt.outputs, &rt.metrics);
         }
         InputKind::Inbox(mut inbox) => {
             while let Some(batch) = inbox.recv() {
                 batches += 1;
                 let out = run_chain(&mut rt.ops, batch);
-                route(&mut rt.output, out);
+                route(&mut rt.outputs, out);
             }
         }
         InputKind::Queue {
@@ -112,7 +114,7 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
                         }
                         batches += 1;
                         let out = run_chain(&mut rt.ops, batch);
-                        route(&mut rt.output, out);
+                        route(&mut rt.outputs, out);
                         offset = next;
                         part.commit(&group, offset);
                     }
@@ -122,26 +124,22 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
     }
     // end of stream: flush stateful operators, cascade EOS
     let tail = flush_chain(&mut rt.ops);
-    route(&mut rt.output, tail);
-    if let Some(port) = &mut rt.output {
-        port.eos();
-    }
+    route(&mut rt.outputs, tail);
+    rt.outputs.eos();
     batches
 }
 
-fn route(output: &mut Option<OutPort>, batch: Vec<Value>) {
+fn route(outputs: &mut FanOut, batch: Vec<Value>) {
     if batch.is_empty() {
         return;
     }
-    if let Some(port) = output {
-        port.send(batch);
-    }
+    outputs.send(batch);
 }
 
 fn run_source(
     src: SourceRuntime,
     ops: &mut [Box<dyn OpExec>],
-    output: &mut Option<OutPort>,
+    outputs: &mut FanOut,
     metrics: &Metrics,
 ) {
     let (idx, n) = src.share;
@@ -167,7 +165,7 @@ fn run_source(
                 emitted += this_batch;
                 MetricsRegistry::add(&metrics.events_in, this_batch);
                 let out = run_chain(ops, batch);
-                route(output, out);
+                route(outputs, out);
                 if let Some(r) = rate {
                     // pace to `r` events/second for this instance
                     let target = Duration::from_secs_f64(emitted as f64 / r);
@@ -188,13 +186,13 @@ fn run_source(
                 if batch.len() >= src.batch_size {
                     MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
                     let out = run_chain(ops, std::mem::take(&mut batch));
-                    route(output, out);
+                    route(outputs, out);
                 }
             }
             if !batch.is_empty() {
                 MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
                 let out = run_chain(ops, batch);
-                route(output, out);
+                route(outputs, out);
             }
         }
         SourceKind::FileLines(path) => {
@@ -209,13 +207,13 @@ fn run_source(
                 if batch.len() >= src.batch_size {
                     MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
                     let out = run_chain(ops, std::mem::take(&mut batch));
-                    route(output, out);
+                    route(outputs, out);
                 }
             }
             if !batch.is_empty() {
                 MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
                 let out = run_chain(ops, batch);
-                route(output, out);
+                route(outputs, out);
             }
         }
     }
@@ -224,7 +222,7 @@ fn run_source(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::channels::{Msg, Routing, Target};
+    use crate::channels::{Msg, OutPort, Routing, Target};
     use crate::graph::SinkKind;
     use std::sync::mpsc::sync_channel;
 
@@ -268,7 +266,7 @@ mod tests {
                 batch_size: 2,
                 stop: Arc::new(AtomicBool::new(false)),
             }),
-            output: Some(port),
+            outputs: FanOut::single(port),
             metrics: metrics.clone(),
         };
         run_instance(rt);
@@ -314,7 +312,7 @@ mod tests {
                     batch_size: 4,
                     stop: Arc::new(AtomicBool::new(false)),
                 }),
-                output: Some(port),
+                outputs: FanOut::single(port),
                 metrics: metrics.clone(),
             });
             let mut inbox = Inbox::new(rx, 1);
@@ -337,7 +335,7 @@ mod tests {
             id: 0,
             ops,
             input: InputKind::Inbox(Inbox::new(rx, 1)),
-            output: None,
+            outputs: FanOut::none(),
             metrics: metrics.clone(),
         });
         assert_eq!(collector.values.lock().unwrap().len(), 2);
@@ -368,7 +366,7 @@ mod tests {
                 poll_timeout: Duration::from_millis(20),
                 stop: Arc::new(AtomicBool::new(false)),
             },
-            output: None,
+            outputs: FanOut::none(),
             metrics,
         });
         assert_eq!(collector.values.lock().unwrap().len(), 2);
@@ -399,7 +397,7 @@ mod tests {
                 poll_timeout: Duration::from_millis(20),
                 stop: Arc::new(AtomicBool::new(false)),
             },
-            output: None,
+            outputs: FanOut::none(),
             metrics,
         });
         let got: Vec<i64> = collector
@@ -441,7 +439,7 @@ mod tests {
                 batch_size: 64,
                 stop,
             }),
-            output: Some(port),
+            outputs: FanOut::single(port),
             metrics,
         });
         let mut inbox = Inbox::new(rx, 1);
@@ -473,7 +471,7 @@ mod tests {
                 batch_size: 2,
                 stop: Arc::new(AtomicBool::new(false)),
             }),
-            output: Some(port),
+            outputs: FanOut::single(port),
             metrics,
         });
         let mut inbox = Inbox::new(rx, 1);
@@ -513,7 +511,7 @@ mod tests {
                 batch_size: 10,
                 stop: Arc::new(AtomicBool::new(false)),
             }),
-            output: Some(port),
+            outputs: FanOut::single(port),
             metrics,
         });
         let dt = t0.elapsed();

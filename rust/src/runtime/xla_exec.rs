@@ -6,126 +6,198 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the pinned
 //! xla_extension (0.5.1) rejects; the text parser reassigns ids and
 //! round-trips cleanly (see `/opt/xla-example/README.md`).
+//!
+//! The engine is gated behind the off-by-default `xla` cargo feature so
+//! the crate builds as pure std on machines without the PJRT toolchain.
+//! Without the feature, [`XlaEngine::global`] returns a clean error at
+//! deploy time, before any worker thread spawns; the rest of the engine
+//! is unaffected.
 
-use crate::error::{Error, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex, OnceLock};
+pub use engine::{Artifact, XlaEngine};
 
-/// `PjRtLoadedExecutable` holds raw pointers and is not `Send`; PJRT
-/// executables are internally thread-safe for execution, so we wrap it and
-/// serialise calls through the [`Artifact`] mutex anyway.
-struct SendExec(xla::PjRtLoadedExecutable);
-// SAFETY: execution is guarded by `Artifact::exec`'s Mutex; the underlying
-// PJRT CPU client supports invocation from any thread.
-unsafe impl Send for SendExec {}
+#[cfg(feature = "xla")]
+mod engine {
+    use crate::error::{Error, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex, OnceLock};
 
-/// A compiled artifact ready for execution.
-pub struct Artifact {
-    /// Artifact name (file stem).
-    pub name: String,
-    exec: Mutex<SendExec>,
-}
+    /// `PjRtLoadedExecutable` holds raw pointers and is not `Send`; PJRT
+    /// executables are internally thread-safe for execution, so we wrap it
+    /// and serialise calls through the [`Artifact`] mutex anyway.
+    struct SendExec(xla::PjRtLoadedExecutable);
+    // SAFETY: execution is guarded by `Artifact::exec`'s Mutex; the
+    // underlying PJRT CPU client supports invocation from any thread.
+    unsafe impl Send for SendExec {}
 
-impl Artifact {
-    /// Executes the artifact on a row-major `f32[batch, in_dim]` buffer and
-    /// returns the flattened `f32` output (row-major `[batch, out_dim]`).
-    pub fn execute_f32(&self, rows: &[f32], batch: usize, in_dim: usize) -> Result<Vec<f32>> {
-        if rows.len() != batch * in_dim {
-            return Err(Error::Xla(format!(
-                "input length {} != batch {batch} × in_dim {in_dim}",
-                rows.len()
-            )));
-        }
-        let input = xla::Literal::vec1(rows).reshape(&[batch as i64, in_dim as i64])?;
-        let guard = self.exec.lock().unwrap();
-        let result = guard.0.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
-        drop(guard);
-        // aot.py lowers with return_tuple=True → 1-tuple
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+    /// A compiled artifact ready for execution.
+    pub struct Artifact {
+        /// Artifact name (file stem).
+        pub name: String,
+        exec: Mutex<SendExec>,
     }
-}
 
-/// Process-wide PJRT engine: one CPU client plus a cache of compiled
-/// artifacts keyed by name.
-pub struct XlaEngine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: Mutex<HashMap<String, Arc<Artifact>>>,
-}
-
-// SAFETY: all uses of the client go through `compile` behind the cache
-// mutex; the PJRT CPU client is thread-safe.
-unsafe impl Send for XlaEngine {}
-unsafe impl Sync for XlaEngine {}
-
-static ENGINE: OnceLock<std::result::Result<XlaEngine, String>> = OnceLock::new();
-
-impl XlaEngine {
-    /// Returns the process-wide engine, creating the PJRT CPU client on
-    /// first use. The artifacts directory is `$FLOWUNITS_ARTIFACTS` or
-    /// `./artifacts`.
-    pub fn global() -> Result<&'static XlaEngine> {
-        let r = ENGINE.get_or_init(|| {
-            let dir = std::env::var("FLOWUNITS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-            match xla::PjRtClient::cpu() {
-                Ok(client) => Ok(XlaEngine {
-                    client,
-                    dir: PathBuf::from(dir),
-                    cache: Mutex::new(HashMap::new()),
-                }),
-                Err(e) => Err(format!("PJRT CPU client init failed: {e}")),
+    impl Artifact {
+        /// Executes the artifact on a row-major `f32[batch, in_dim]` buffer
+        /// and returns the flattened `f32` output (row-major
+        /// `[batch, out_dim]`).
+        pub fn execute_f32(&self, rows: &[f32], batch: usize, in_dim: usize) -> Result<Vec<f32>> {
+            if rows.len() != batch * in_dim {
+                return Err(Error::Xla(format!(
+                    "input length {} != batch {batch} × in_dim {in_dim}",
+                    rows.len()
+                )));
             }
-        });
-        r.as_ref().map_err(|e| Error::Xla(e.clone()))
+            let input = xla::Literal::vec1(rows).reshape(&[batch as i64, in_dim as i64])?;
+            let guard = self.exec.lock().unwrap();
+            let result = guard.0.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+            drop(guard);
+            // aot.py lowers with return_tuple=True → 1-tuple
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
     }
 
-    /// Loads (or returns the cached) artifact `name`, resolved as
-    /// `<artifacts_dir>/<name>.hlo.txt`.
-    pub fn load(&self, name: &str) -> Result<Arc<Artifact>> {
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(a) = cache.get(name) {
-                return Ok(a.clone());
+    /// Process-wide PJRT engine: one CPU client plus a cache of compiled
+    /// artifacts keyed by name.
+    pub struct XlaEngine {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: Mutex<HashMap<String, Arc<Artifact>>>,
+    }
+
+    // SAFETY: all uses of the client go through `compile` behind the cache
+    // mutex; the PJRT CPU client is thread-safe.
+    unsafe impl Send for XlaEngine {}
+    unsafe impl Sync for XlaEngine {}
+
+    static ENGINE: OnceLock<std::result::Result<XlaEngine, String>> = OnceLock::new();
+
+    impl XlaEngine {
+        /// Returns the process-wide engine, creating the PJRT CPU client on
+        /// first use. The artifacts directory is `$FLOWUNITS_ARTIFACTS` or
+        /// `./artifacts`.
+        pub fn global() -> Result<&'static XlaEngine> {
+            let r = ENGINE.get_or_init(|| {
+                let dir =
+                    std::env::var("FLOWUNITS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+                match xla::PjRtClient::cpu() {
+                    Ok(client) => Ok(XlaEngine {
+                        client,
+                        dir: PathBuf::from(dir),
+                        cache: Mutex::new(HashMap::new()),
+                    }),
+                    Err(e) => Err(format!("PJRT CPU client init failed: {e}")),
+                }
+            });
+            r.as_ref().map_err(|e| Error::Xla(e.clone()))
+        }
+
+        /// Loads (or returns the cached) artifact `name`, resolved as
+        /// `<artifacts_dir>/<name>.hlo.txt`.
+        pub fn load(&self, name: &str) -> Result<Arc<Artifact>> {
+            {
+                let cache = self.cache.lock().unwrap();
+                if let Some(a) = cache.get(name) {
+                    return Ok(a.clone());
+                }
             }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let artifact = Arc::new(self.compile_file(name, &path)?);
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), artifact.clone());
+            Ok(artifact)
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let artifact = Arc::new(self.compile_file(name, &path)?);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), artifact.clone());
-        Ok(artifact)
-    }
 
-    /// Compiles an HLO text file into an executable artifact.
-    pub fn compile_file(&self, name: &str, path: &Path) -> Result<Artifact> {
-        if !path.exists() {
-            return Err(Error::Xla(format!(
-                "artifact '{}' not found at {} — run `make artifacts` first",
-                name,
-                path.display()
-            )));
+        /// Compiles an HLO text file into an executable artifact.
+        pub fn compile_file(&self, name: &str, path: &Path) -> Result<Artifact> {
+            if !path.exists() {
+                return Err(Error::Xla(format!(
+                    "artifact '{}' not found at {} — run `make artifacts` first",
+                    name,
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(Artifact {
+                name: name.to_string(),
+                exec: Mutex::new(SendExec(exe)),
+            })
         }
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Artifact {
-            name: name.to_string(),
-            exec: Mutex::new(SendExec(exe)),
-        })
+
+        /// Number of artifacts currently cached.
+        pub fn cached(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
+
+        /// Drops a cached artifact (used by dynamic updates to force a
+        /// reload after the artifact file changed).
+        pub fn evict(&self, name: &str) {
+            self.cache.lock().unwrap().remove(name);
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod engine {
+    use crate::error::{Error, Result};
+    use std::path::Path;
+    use std::sync::Arc;
+
+    const DISABLED: &str = "xla runtime disabled: this build omits the `xla` feature — \
+         add the `xla` crate under [dependencies] in rust/Cargo.toml, rebuild with \
+         `--features xla`, and run `make artifacts` to enable AOT-compiled \
+         inference operators";
+
+    /// Stub artifact (the `xla` feature is disabled; never constructed).
+    pub struct Artifact {
+        /// Artifact name (file stem).
+        pub name: String,
     }
 
-    /// Number of artifacts currently cached.
-    pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+    impl Artifact {
+        /// Always errors: the `xla` feature is disabled.
+        pub fn execute_f32(
+            &self,
+            _rows: &[f32],
+            _batch: usize,
+            _in_dim: usize,
+        ) -> Result<Vec<f32>> {
+            Err(Error::Xla(DISABLED.into()))
+        }
     }
 
-    /// Drops a cached artifact (used by dynamic updates to force a reload
-    /// after the artifact file changed).
-    pub fn evict(&self, name: &str) {
-        self.cache.lock().unwrap().remove(name);
+    /// Stub engine: every entry point reports that the `xla` feature is
+    /// disabled, so `xla_map` pipelines fail cleanly at deploy time.
+    pub struct XlaEngine {}
+
+    impl XlaEngine {
+        /// Always errors: the `xla` feature is disabled.
+        pub fn global() -> Result<&'static XlaEngine> {
+            Err(Error::Xla(DISABLED.into()))
+        }
+
+        /// Always errors: the `xla` feature is disabled.
+        pub fn load(&self, _name: &str) -> Result<Arc<Artifact>> {
+            Err(Error::Xla(DISABLED.into()))
+        }
+
+        /// Always errors: the `xla` feature is disabled.
+        pub fn compile_file(&self, _name: &str, _path: &Path) -> Result<Artifact> {
+            Err(Error::Xla(DISABLED.into()))
+        }
+
+        /// Always zero: nothing can be cached without the `xla` feature.
+        pub fn cached(&self) -> usize {
+            0
+        }
+
+        /// No-op without the `xla` feature.
+        pub fn evict(&self, _name: &str) {}
     }
 }
 
@@ -140,7 +212,7 @@ mod tests {
     fn missing_artifact_is_a_clean_error() {
         let engine = match XlaEngine::global() {
             Ok(e) => e,
-            Err(_) => return, // PJRT unavailable in this environment: skip
+            Err(_) => return, // PJRT or the xla feature unavailable: skip
         };
         let err = match engine.load("definitely-not-an-artifact") {
             Ok(_) => panic!("expected missing-artifact error"),

@@ -1,6 +1,6 @@
 //! Integration tests of the paper's §III "Dynamic updates": replacing a
-//! FlowUnit's logic and adding a geographical location while the rest of
-//! the deployment keeps running, with queue-decoupled boundaries.
+//! FlowUnit's logic *by name* and adding a geographical location while the
+//! rest of the deployment keeps running, with queue-decoupled boundaries.
 
 use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext};
 use flowunits::config::{eval_cluster, fig2_cluster};
@@ -21,7 +21,7 @@ fn update_config() -> JobConfig {
 /// Builds `source@edge → filter@edge ∥ map(×10 + tag)@cloud → collect`
 /// with a rate-limited source so the deployment stays alive for updates.
 /// The `tag` (last decimal digit) identifies which model version scored
-/// each event.
+/// each event. Units are auto-named after their layers: "edge", "cloud".
 fn updatable_graph(tag: i64, rate: f64, total: u64) -> flowunits::graph::LogicalGraph {
     let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), update_config());
     ctx.stream(Source::synthetic_rated(total, rate, |_, i| {
@@ -36,19 +36,20 @@ fn updatable_graph(tag: i64, rate: f64, total: u64) -> flowunits::graph::Logical
 }
 
 #[test]
-fn update_unit_swaps_logic_without_stopping_producers() {
+fn update_unit_by_name_swaps_logic_without_stopping_producers() {
     let cluster = eval_cluster(None, Duration::ZERO);
     let coord = Coordinator::new(cluster, update_config());
     let g1 = updatable_graph(1, 2_000.0, 1_000_000);
     let mut dep = coord.deploy(&g1).unwrap();
+    assert_eq!(dep.unit_names(), vec!["edge", "cloud"]);
 
     std::thread::sleep(Duration::from_millis(300));
     let before_update = dep.metrics().events_in.load(std::sync::atomic::Ordering::Relaxed);
     assert!(before_update > 0, "sources are producing");
 
-    // swap the cloud unit (unit 1) to tag 2 while edges keep producing
+    // swap the cloud unit (by name) to tag 2 while edges keep producing
     let g2 = updatable_graph(2, 2_000.0, 1_000_000);
-    dep.update_unit(1, g2).unwrap();
+    dep.update_unit("cloud", g2).unwrap();
 
     std::thread::sleep(Duration::from_millis(300));
     let after_update = dep.metrics().events_in.load(std::sync::atomic::Ordering::Relaxed);
@@ -79,6 +80,76 @@ fn update_unit_swaps_logic_without_stopping_producers() {
     );
 }
 
+/// The acceptance scenario for the first-class FlowUnit API: a job with
+/// two sources, a `union`, a `split` into two sinks, and five named
+/// FlowUnits; `update_unit("detector", …)` hot-swaps the middle unit
+/// mid-run while sources and sinks keep going.
+fn dag_graph(tag: i64) -> flowunits::graph::LogicalGraph {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), update_config());
+    let north = ctx
+        .stream(Source::synthetic_rated(1_000_000, 2_000.0, |_, i| {
+            Value::I64(i as i64)
+        }))
+        .unit("north")
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 2 == 0);
+    let south = ctx
+        .stream(Source::synthetic_rated(1_000_000, 2_000.0, |_, i| {
+            Value::I64(i as i64)
+        }))
+        .unit("south")
+        .to_layer("edge");
+    let scored = north
+        .union(south)
+        .unit("detector")
+        .to_layer("cloud")
+        .map(move |v| Value::I64(v.as_i64().unwrap() * 10 + tag));
+    let (alerts, archive) = scored.split();
+    alerts.unit("alerts").collect_vec();
+    archive.unit("archive").collect_count();
+    ctx.into_graph().unwrap()
+}
+
+#[test]
+fn named_unit_hot_swap_in_multi_stream_dag() {
+    let cluster = eval_cluster(None, Duration::ZERO);
+    let coord = Coordinator::new(cluster, update_config());
+    let mut dep = coord.deploy(&dag_graph(1)).unwrap();
+    assert_eq!(
+        dep.unit_names(),
+        vec!["north", "south", "detector", "alerts", "archive"]
+    );
+
+    std::thread::sleep(Duration::from_millis(300));
+    let before = dep.metrics().events_in.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(before > 0, "both sources are producing");
+
+    // hot-swap the detector FlowUnit by name; everything else keeps running
+    dep.update_unit("detector", dag_graph(2)).unwrap();
+
+    std::thread::sleep(Duration::from_millis(300));
+    let after = dep.metrics().events_in.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(
+        after > before,
+        "sources kept producing through the update ({before} -> {after})"
+    );
+
+    dep.stop_sources();
+    let report = dep.wait().unwrap();
+    let (mut v1, mut v2, mut other) = (0u64, 0u64, 0u64);
+    for v in &report.collected {
+        match v.as_i64().unwrap() % 10 {
+            1 => v1 += 1,
+            2 => v2 += 1,
+            _ => other += 1,
+        }
+    }
+    assert_eq!(other, 0, "no unscored values leaked to the alerts sink");
+    assert!(v1 > 0, "detector v1 scored some events");
+    assert!(v2 > 0, "detector v2 scored some events");
+    assert!(!report.collected.is_empty());
+}
+
 #[test]
 fn update_rejects_non_decoupled_unit() {
     let cluster = eval_cluster(None, Duration::ZERO);
@@ -87,7 +158,7 @@ fn update_rejects_non_decoupled_unit() {
     let coord = Coordinator::new(cluster, config);
     let g1 = updatable_graph(10, 10_000.0, 50_000);
     let mut dep = coord.deploy(&g1).unwrap();
-    let err = dep.update_unit(1, updatable_graph(100, 10_000.0, 50_000));
+    let err = dep.update_unit("cloud", updatable_graph(100, 10_000.0, 50_000));
     assert!(err.is_err());
     dep.stop_sources();
     dep.wait().unwrap();
@@ -111,7 +182,25 @@ fn update_rejects_changed_structure() {
     .map(|v| v)
     .collect_vec();
     let g2 = ctx.into_graph().unwrap();
-    assert!(dep.update_unit(1, g2).is_err());
+    assert!(dep.update_unit("cloud", g2).is_err());
+    dep.stop_sources();
+    dep.wait().unwrap();
+}
+
+#[test]
+fn update_rejects_unknown_unit_name() {
+    let cluster = eval_cluster(None, Duration::ZERO);
+    let coord = Coordinator::new(cluster, update_config());
+    let g1 = updatable_graph(10, 10_000.0, 50_000);
+    let mut dep = coord.deploy(&g1).unwrap();
+    let err = dep
+        .update_unit("no-such-unit", updatable_graph(11, 10_000.0, 50_000))
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown FlowUnit"));
+    // the index form remains available as a thin wrapper
+    assert!(dep
+        .update_unit_at(1, updatable_graph(12, 10_000.0, 50_000))
+        .is_ok());
     dep.stop_sources();
     dep.wait().unwrap();
 }

@@ -175,8 +175,9 @@ fn collected_values_complete_under_shuffle() {
 
 #[test]
 fn renoir_planner_with_constraint_still_respects_capabilities() {
-    // even the baseline planner may not place a constrained operator on an
-    // incapable host (matches Renoir semantics extended with constraints)
+    // even the baseline planner may not place a constrained FlowUnit on an
+    // incapable host (matches Renoir semantics extended with constraints);
+    // the constraint scopes to the dedicated "ml" unit, not the whole edge
     let mut ctx = StreamContext::new(
         fig2_cluster(),
         JobConfig {
@@ -186,8 +187,10 @@ fn renoir_planner_with_constraint_still_respects_capabilities() {
     );
     ctx.stream(Source::synthetic(100, |_, i| Value::I64(i as i64)))
         .to_layer("edge")
-        .map(|v| v)
+        .inspect(|_| {})
+        .unit("ml")
         .add_constraint("gpu = yes")
+        .map(|v| v)
         .to_layer("cloud")
         .collect_count();
     let report = ctx.execute().unwrap();
@@ -201,6 +204,76 @@ fn renoir_planner_with_constraint_still_respects_capabilities() {
         .to_string();
     assert!(line.contains("C1×8"), "constrained map on gpu cores only: {line}");
     assert!(!line.contains("E1"), "no edge placement for gpu op: {line}");
+}
+
+#[test]
+fn union_and_split_dag_end_to_end() {
+    // two edge sources -> union at the cloud -> split into two sinks
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+    let north = ctx
+        .stream(Source::synthetic(1200, |_, i| Value::I64(i as i64)))
+        .unit("north")
+        .to_layer("edge");
+    let south = ctx
+        .stream(Source::synthetic(800, |_, i| Value::I64(1_000_000 + i as i64)))
+        .unit("south")
+        .to_layer("edge");
+    let merged = north
+        .union(south)
+        .unit("merge")
+        .to_layer("cloud")
+        .map(|v| v);
+    let (evens, all) = merged.split();
+    evens
+        .unit("evens")
+        .filter(|v| v.as_i64().unwrap() % 2 == 0)
+        .collect_vec();
+    all.unit("tally").collect_count();
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_in, 2000, "both sources produced");
+    // both split branches saw all 2000 events: 1000 evens + 2000 counted
+    assert_eq!(report.collected.len(), 1000);
+    assert_eq!(report.events_out, 3000);
+}
+
+#[test]
+fn union_split_results_survive_queue_decoupling() {
+    let config = JobConfig {
+        decouple_units: true,
+        poll_timeout: Duration::from_millis(10),
+        batch_size: 64,
+        ..Default::default()
+    };
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config);
+    let a = ctx
+        .stream(Source::synthetic(600, |_, i| Value::I64(i as i64)))
+        .unit("a")
+        .to_layer("edge");
+    let b = ctx
+        .stream(Source::synthetic(400, |_, i| Value::I64(i as i64)))
+        .unit("b")
+        .to_layer("edge");
+    let m = a.union(b).unit("m").to_layer("cloud").map(|v| v);
+    let (x, y) = m.split();
+    x.unit("x").collect_count();
+    y.unit("y").collect_count();
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_in, 1000);
+    assert_eq!(report.events_out, 2000, "each branch counted every event");
+}
+
+#[test]
+fn builder_errors_propagate_to_execute_instead_of_panicking() {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+    ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .add_constraint("gpu >") // malformed: recorded, not panicked
+        .collect_count();
+    let err = ctx.execute().unwrap_err();
+    assert!(
+        matches!(err, flowunits::error::Error::Graph(_)),
+        "builder error surfaces as Error::Graph, got: {err}"
+    );
 }
 
 #[test]
