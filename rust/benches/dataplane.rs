@@ -1,0 +1,170 @@
+//! `cargo bench --bench dataplane` — data-plane benchmarks for the
+//! zero-copy shared-`Batch` path: throughput and bytes-on-wire for the
+//! three shapes that exercise it differently.
+//!
+//! * **linear** — edge → cloud chain, one crossing edge per batch: the
+//!   encode-once baseline;
+//! * **fanout** — a `split` into three sinks across two layers: batch
+//!   duplication is refcount-only and the wire encode is shared across
+//!   edges;
+//! * **crossing** — edge → site → cloud keyed pipeline over shaped links:
+//!   the paper's zone-crossing pressure case (bytes-on-wire is the metric
+//!   the FlowUnits placement is meant to shrink).
+//!
+//! Results are written to `BENCH_dataplane.json` (throughput, bytes on
+//! wire, frames, wire encodes per scenario) so perf drift is diffable
+//! across PRs. `DATAPLANE_EVENTS` scales the workload; CI runs a small
+//! smoke value so regressions in the bench itself fail fast.
+
+use flowunits::api::{JobConfig, JobReport, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::config::eval_cluster;
+use flowunits::value::Value;
+use std::io::Write;
+use std::time::Duration;
+
+fn events() -> u64 {
+    std::env::var("DATAPLANE_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000)
+}
+
+struct Row {
+    name: &'static str,
+    report: JobReport,
+}
+
+fn run_linear(n: u64) -> JobReport {
+    let mut ctx = StreamContext::new(
+        eval_cluster(None, Duration::ZERO),
+        JobConfig {
+            planner: PlannerKind::FlowUnits,
+            ..Default::default()
+        },
+    );
+    ctx.stream(Source::synthetic(n, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .map(|v| Value::I64(v.as_i64().unwrap().wrapping_mul(31)))
+        .filter(|v| v.as_i64().unwrap() % 7 != 0)
+        .to_layer("cloud")
+        .collect_count();
+    ctx.execute().expect("linear pipeline")
+}
+
+fn run_fanout(n: u64) -> JobReport {
+    let mut ctx = StreamContext::new(
+        eval_cluster(None, Duration::ZERO),
+        JobConfig {
+            planner: PlannerKind::FlowUnits,
+            ..Default::default()
+        },
+    );
+    let s = ctx
+        .stream(Source::synthetic(n, |_, i| Value::I64(i as i64)))
+        .to_layer("edge");
+    let (left, rest) = s.split();
+    let (mid, right) = rest.split();
+    left.unit("fan-site").to_layer("site").collect_count();
+    mid.unit("fan-cloud-a").to_layer("cloud").collect_count();
+    right.unit("fan-cloud-b").to_layer("cloud").collect_count();
+    ctx.execute().expect("fanout pipeline")
+}
+
+fn run_crossing(n: u64) -> JobReport {
+    let mut ctx = StreamContext::new(
+        eval_cluster(Some(1_000_000_000), Duration::from_micros(200)),
+        JobConfig {
+            planner: PlannerKind::FlowUnits,
+            ..Default::default()
+        },
+    );
+    ctx.stream(Source::synthetic(n, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 3 != 0)
+        .to_layer("site")
+        .key_by(|v| Value::I64(v.as_i64().unwrap() % 16))
+        .window(100, WindowAgg::Mean)
+        .to_layer("cloud")
+        .collect_count();
+    ctx.execute().expect("crossing pipeline")
+}
+
+fn json_row(row: &Row, n: u64) -> String {
+    let r = &row.report;
+    let wall = r.wall_time.as_secs_f64();
+    let frames = r
+        .metrics
+        .net_frames
+        .load(std::sync::atomic::Ordering::Relaxed);
+    format!(
+        "    {{\"name\": \"{}\", \"events\": {}, \"events_out\": {}, \
+         \"wall_s\": {:.6}, \"throughput_ev_s\": {:.1}, \"net_bytes\": {}, \
+         \"net_frames\": {}, \"wire_encodes\": {}, \"zone_crossings\": {}}}",
+        row.name,
+        n,
+        r.events_out,
+        wall,
+        if wall > 0.0 { n as f64 / wall } else { 0.0 },
+        r.net_bytes,
+        frames,
+        r.wire_encodes,
+        r.zone_crossings,
+    )
+}
+
+fn main() {
+    let n = events();
+    println!("# FlowUnits dataplane benchmarks ({n} events per scenario)");
+    let rows = vec![
+        Row { name: "linear", report: run_linear(n) },
+        Row { name: "fanout", report: run_fanout(n) },
+        Row { name: "crossing", report: run_crossing(n) },
+    ];
+    println!(
+        "{:<10} {:>10} {:>14} {:>12} {:>10} {:>12}",
+        "scenario", "wall(s)", "throughput", "net bytes", "frames", "encodes"
+    );
+    for row in &rows {
+        let r = &row.report;
+        let wall = r.wall_time.as_secs_f64();
+        println!(
+            "{:<10} {:>10.3} {:>14} {:>12} {:>10} {:>12}",
+            row.name,
+            wall,
+            flowunits::util::fmt_rate(n, r.wall_time),
+            r.net_bytes,
+            r.metrics
+                .net_frames
+                .load(std::sync::atomic::Ordering::Relaxed),
+            r.wire_encodes,
+        );
+        // the fan-out scenario is the zero-copy/encode-once proof: more
+        // crossing frames than encodes means the cache did its job
+        if row.name == "fanout" {
+            let frames = r
+                .metrics
+                .net_frames
+                .load(std::sync::atomic::Ordering::Relaxed);
+            assert!(
+                r.wire_encodes < frames,
+                "encode-once violated: {} encodes for {} frames",
+                r.wire_encodes,
+                frames
+            );
+        }
+    }
+    let body = rows
+        .iter()
+        .map(|row| json_row(row, n))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let json = format!(
+        "{{\n  \"bench\": \"dataplane\",\n  \"events\": {n},\n  \"scenarios\": [\n{body}\n  ]\n}}\n"
+    );
+    // cargo runs bench binaries with CWD = the package root (rust/);
+    // DATAPLANE_OUT overrides the destination
+    let path = std::env::var("DATAPLANE_OUT").unwrap_or_else(|_| "BENCH_dataplane.json".into());
+    let mut f = std::fs::File::create(&path).expect("create BENCH_dataplane.json");
+    f.write_all(json.as_bytes()).expect("write bench results");
+    println!("\nwrote {path}");
+}

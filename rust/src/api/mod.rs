@@ -23,6 +23,13 @@
 //! [`Error::Graph`](crate::error::Error::Graph) from
 //! [`StreamContext::execute`] / [`StreamContext::deploy`].
 //!
+//! The data plane underneath is zero-copy: batches travel as
+//! refcounted [`Batch`](crate::value::Batch) handles, `split` fan-out
+//! and broadcast duplication share one payload allocation per batch,
+//! and a batch crossing several host/zone boundaries is wire-encoded at
+//! most once ([`JobReport::wire_encodes`] reports how many encodes a job
+//! actually paid; see README *Architecture: the data plane*).
+//!
 //! ```no_run
 //! use flowunits::prelude::*;
 //!
@@ -785,6 +792,27 @@ mod tests {
         // both branches saw every event: 250 collected + 500 counted
         assert_eq!(report.collected.len(), 250);
         assert_eq!(report.events_out, 750);
+    }
+
+    #[test]
+    fn split_fanout_encodes_each_batch_at_most_once() {
+        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
+        let s = ctx
+            .stream(Source::synthetic(1000, |_, i| Value::I64(i as i64)))
+            .to_layer("edge");
+        let (site, cloud) = s.split();
+        site.unit("site-count").to_layer("site").collect_count();
+        cloud.unit("cloud-count").to_layer("cloud").collect_count();
+        let report = ctx.execute().unwrap();
+        assert_eq!(report.events_out, 2000, "both branches saw every event");
+        // 4 edge source instances × ceil(250/128) = 8 batches, each
+        // delivered over TWO crossing edges (site + cloud) — but encoded
+        // exactly once thanks to the shared wire cache
+        assert_eq!(report.wire_encodes, 8);
+        assert!(
+            report.metrics.net_frames.load(std::sync::atomic::Ordering::Relaxed) >= 16,
+            "each batch still produced one frame per edge"
+        );
     }
 
     #[test]

@@ -1,12 +1,18 @@
 //! Channels between operator instances.
 //!
-//! Instances on the same host exchange `Vec<Value>` batches by pointer
-//! through bounded in-memory channels (Renoir's in-memory path). Instances
-//! on different hosts exchange *encoded frames*: the sender serialises the
-//! batch (paying the real encode cost and producing the real byte size),
-//! the frame traverses the emulated inter-zone [`Link`](crate::netsim::Link)
-//! when the hosts are in different zones, and the receiving worker decodes
-//! it (paying the real decode cost) — mirroring Renoir's TCP path.
+//! Instances on the same host exchange [`Batch`] handles by refcount bump
+//! through bounded in-memory channels (Renoir's in-memory path) — fan-out
+//! duplication (`split` edges, `Broadcast` routing) shares one payload
+//! allocation across every edge, never deep-cloning. Instances on
+//! different hosts exchange *encoded frames*: the sender serialises the
+//! batch **once** (the encoding is cached on the batch, so further
+//! crossing edges re-use the same bytes) while still paying the real
+//! encode cost and producing the real byte size; the frame traverses the
+//! emulated inter-zone [`Link`](crate::netsim::Link) when the hosts are in
+//! different zones, and the receiving worker decodes it (paying the real
+//! decode cost) — mirroring Renoir's TCP path. Frame bytes themselves are
+//! refcounted, so a broadcast over N crossing edges queues N references to
+//! one buffer.
 //!
 //! Output ports route with one of three policies:
 //! * `RoundRobin` — rebalance whole batches across allowed targets
@@ -17,7 +23,7 @@
 
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::netsim::Link;
-use crate::value::{decode_batch, encode_batch, Value};
+use crate::value::{Batch, Value};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 
@@ -31,10 +37,11 @@ pub const DEFAULT_CHANNEL_CAPACITY: usize = 64;
 /// A message travelling between operator instances.
 #[derive(Debug)]
 pub enum Msg {
-    /// Same-host batch, moved by pointer.
-    Batch(Vec<Value>),
-    /// Cross-host batch, encoded; decoded by the receiving worker.
-    Frame(Vec<u8>),
+    /// Same-host batch, shared by refcount.
+    Batch(Batch),
+    /// Cross-host batch, encoded; decoded by the receiving worker. The
+    /// bytes are refcounted so broadcast frames share one buffer.
+    Frame(Arc<[u8]>),
     /// One upstream producer finished.
     Eos,
 }
@@ -98,8 +105,10 @@ impl OutPort {
         self.targets.len()
     }
 
-    /// Sends one batch according to the routing policy. Consumes the batch.
-    pub fn send(&mut self, batch: Vec<Value>) {
+    /// Sends one batch according to the routing policy. Consumes the
+    /// handle; `Broadcast` replication is a refcount bump per target, not
+    /// a payload copy.
+    pub fn send(&mut self, batch: Batch) {
         if batch.is_empty() || self.targets.is_empty() {
             return;
         }
@@ -110,19 +119,17 @@ impl OutPort {
                 self.deliver(t, batch);
             }
             Routing::Broadcast => {
-                for t in 0..self.targets.len() {
-                    if t + 1 == self.targets.len() {
-                        let last = std::mem::take(&mut self.rr_next); // silence unused warn pattern
-                        let _ = last;
-                        self.deliver(t, batch);
-                        return;
-                    }
+                let last = self.targets.len() - 1;
+                for t in 0..last {
                     self.deliver(t, batch.clone());
                 }
+                self.deliver(last, batch);
             }
             Routing::Hash => {
                 let n = self.targets.len() as u64;
-                for v in batch {
+                // per-record partitioning needs the payload; copy-on-write
+                // takes it in place unless a sibling edge shares the batch
+                for v in batch.into_values() {
                     let key_hash = match &v {
                         Value::Pair(kv) => kv.0.stable_hash(),
                         other => other.stable_hash(),
@@ -136,7 +143,7 @@ impl OutPort {
                             &mut self.pending[t],
                             Vec::with_capacity(self.batch_capacity),
                         );
-                        self.deliver(t, full);
+                        self.deliver(t, full.into());
                     }
                 }
             }
@@ -144,12 +151,20 @@ impl OutPort {
     }
 
     /// Flushes hash-routing buffers (call before EOS or on a timer).
+    /// Idempotent: an empty buffer is skipped, so repeated flushes (or a
+    /// flush racing a timer flush) never re-deliver records, and a drained
+    /// buffer is replaced with a pre-sized one so `send` calls after a
+    /// flush keep the no-realloc fast path.
     pub fn flush(&mut self) {
         for t in 0..self.targets.len() {
-            if !self.pending[t].is_empty() {
-                let b = std::mem::take(&mut self.pending[t]);
-                self.deliver(t, b);
+            if self.pending[t].is_empty() {
+                continue;
             }
+            let full = std::mem::replace(
+                &mut self.pending[t],
+                Vec::with_capacity(self.batch_capacity),
+            );
+            self.deliver(t, full.into());
         }
     }
 
@@ -169,7 +184,7 @@ impl OutPort {
         }
     }
 
-    fn deliver(&mut self, t: usize, batch: Vec<Value>) {
+    fn deliver(&mut self, t: usize, batch: Batch) {
         let target = &self.targets[t];
         if target.crossing {
             if let Some(m) = &self.metrics {
@@ -178,12 +193,21 @@ impl OutPort {
         }
         match &target.link {
             None => {
-                // Same host: pointer move. A disconnected receiver means the
-                // job is shutting down; drop silently.
+                // Same host: refcount bump. A disconnected receiver means
+                // the job is shutting down; drop silently.
                 let _ = target.tx.send(Msg::Batch(batch));
             }
             Some(link) => {
-                let bytes = encode_batch(&batch);
+                // Encode-once: the first crossing edge pays the encode and
+                // caches it on the batch; every further edge (this port or
+                // a sibling) re-uses the bytes by refcount. The metrics
+                // hook runs inside the one-time initialiser, so racing
+                // senders on a shared batch still count a single encode.
+                let bytes = batch.wire_with(|| {
+                    if let Some(m) = &self.metrics {
+                        MetricsRegistry::add(&m.batch_encodes, 1);
+                    }
+                });
                 let size = bytes.len() + FRAME_OVERHEAD;
                 link.send(size, target.latency, Msg::Frame(bytes), &target.tx);
             }
@@ -193,8 +217,8 @@ impl OutPort {
 
 /// Output side of an operator instance: one [`OutPort`] per outgoing
 /// stage edge. A `split` stream has several edges, each of which receives
-/// every batch (duplication happens here); linear stages have one port and
-/// terminal sinks none.
+/// every batch *by shared reference* (a refcount bump per edge, zero
+/// payload copies); linear stages have one port and terminal sinks none.
 #[derive(Default)]
 pub struct FanOut {
     ports: Vec<OutPort>,
@@ -221,9 +245,9 @@ impl FanOut {
         self.ports.is_empty()
     }
 
-    /// Sends `batch` down every outgoing edge (cloning for all but the
-    /// last), each edge applying its own routing policy.
-    pub fn send(&mut self, batch: Vec<Value>) {
+    /// Sends `batch` down every outgoing edge (a refcount bump for all but
+    /// the last), each edge applying its own routing policy.
+    pub fn send(&mut self, batch: Batch) {
         if batch.is_empty() || self.ports.is_empty() {
             return;
         }
@@ -266,9 +290,11 @@ impl Inbox {
         }
     }
 
-    /// Receives the next batch, decoding frames. Returns `None` once all
+    /// Receives the next batch, decoding frames (the decoded batch keeps
+    /// the frame bytes as its cached encoding, so forwarding it across
+    /// another boundary costs no re-encode). Returns `None` once all
     /// producers have signalled EOS (or every sender disconnected).
-    pub fn recv(&mut self) -> Option<Vec<Value>> {
+    pub fn recv(&mut self) -> Option<Batch> {
         loop {
             if self.eos_seen >= self.producers {
                 return None;
@@ -276,7 +302,7 @@ impl Inbox {
             match self.rx.recv() {
                 Ok(Msg::Batch(b)) => return Some(b),
                 Ok(Msg::Frame(bytes)) => {
-                    let b = decode_batch(&bytes).expect("corrupt frame on channel");
+                    let b = Batch::from_wire(bytes).expect("corrupt frame on channel");
                     return Some(b);
                 }
                 Ok(Msg::Eos) => {
@@ -289,13 +315,15 @@ impl Inbox {
 
     /// Non-blocking variant used by instances that multiplex control
     /// messages; returns `Ok(None)` when no message is ready.
-    pub fn try_recv(&mut self) -> Option<Option<Vec<Value>>> {
+    pub fn try_recv(&mut self) -> Option<Option<Batch>> {
         if self.eos_seen >= self.producers {
             return Some(None);
         }
         match self.rx.try_recv() {
             Ok(Msg::Batch(b)) => Some(Some(b)),
-            Ok(Msg::Frame(bytes)) => Some(Some(decode_batch(&bytes).expect("corrupt frame"))),
+            Ok(Msg::Frame(bytes)) => {
+                Some(Some(Batch::from_wire(bytes).expect("corrupt frame")))
+            }
             Ok(Msg::Eos) => {
                 self.eos_seen += 1;
                 if self.eos_seen >= self.producers {
@@ -333,9 +361,9 @@ mod tests {
         let (t1, r1) = local_target(8);
         let (t2, r2) = local_target(8);
         let mut port = OutPort::new(vec![t1, t2], Routing::RoundRobin, 16, None);
-        port.send(vec![Value::I64(1)]);
-        port.send(vec![Value::I64(2)]);
-        port.send(vec![Value::I64(3)]);
+        port.send(vec![Value::I64(1)].into());
+        port.send(vec![Value::I64(2)].into());
+        port.send(vec![Value::I64(3)].into());
         let mut inbox1 = Inbox::new(r1, 1);
         let mut inbox2 = Inbox::new(r2, 1);
         assert_eq!(inbox1.recv().unwrap(), vec![Value::I64(1)]);
@@ -349,7 +377,7 @@ mod tests {
         let (t2, r2) = local_target(64);
         let mut port = OutPort::new(vec![t1, t2], Routing::Hash, 4, None);
         for i in 0..64 {
-            port.send(vec![Value::pair(Value::I64(i % 8), Value::I64(i))]);
+            port.send(vec![Value::pair(Value::I64(i % 8), Value::I64(i))].into());
         }
         port.eos();
         let collect = |rx: Receiver<Msg>| {
@@ -373,7 +401,7 @@ mod tests {
         let (t1, r1) = local_target(8);
         let (t2, r2) = local_target(8);
         let mut port = OutPort::new(vec![t1, t2], Routing::Broadcast, 16, None);
-        port.send(vec![Value::I64(9)]);
+        port.send(vec![Value::I64(9)].into());
         port.eos();
         for rx in [r1, r2] {
             let mut inbox = Inbox::new(rx, 1);
@@ -388,7 +416,7 @@ mod tests {
         let tx2 = tx.clone();
         let mut inbox = Inbox::new(rx, 2);
         tx.send(Msg::Eos).unwrap();
-        tx2.send(Msg::Batch(vec![Value::I64(5)])).unwrap();
+        tx2.send(Msg::Batch(vec![Value::I64(5)].into())).unwrap();
         tx2.send(Msg::Eos).unwrap();
         assert_eq!(inbox.recv().unwrap(), vec![Value::I64(5)]);
         assert!(inbox.recv().is_none());
@@ -410,7 +438,7 @@ mod tests {
             Value::pair(Value::Str("k".into()), Value::F64(1.5)),
             Value::I64(-3),
         ];
-        port.send(batch.clone());
+        port.send(batch.clone().into());
         port.eos();
         let mut inbox = Inbox::new(rx, 1);
         assert_eq!(inbox.recv().unwrap(), batch);
@@ -430,7 +458,7 @@ mod tests {
         let p1 = OutPort::new(vec![t1], Routing::RoundRobin, 16, None);
         let p2 = OutPort::new(vec![t2], Routing::RoundRobin, 16, None);
         let mut fan = FanOut::new(vec![p1, p2]);
-        fan.send(vec![Value::I64(3), Value::I64(4)]);
+        fan.send(vec![Value::I64(3), Value::I64(4)].into());
         fan.eos();
         for rx in [r1, r2] {
             let mut inbox = Inbox::new(rx, 1);
@@ -443,7 +471,7 @@ mod tests {
     fn hash_flush_on_eos_emits_partials() {
         let (t1, r1) = local_target(8);
         let mut port = OutPort::new(vec![t1], Routing::Hash, 1000, None);
-        port.send(vec![Value::pair(Value::I64(1), Value::I64(10))]);
+        port.send(vec![Value::pair(Value::I64(1), Value::I64(10))].into());
         // below batch_capacity — nothing delivered yet
         let mut inbox = Inbox::new(r1, 1);
         port.eos();
@@ -452,5 +480,112 @@ mod tests {
             vec![Value::pair(Value::I64(1), Value::I64(10))]
         );
         assert!(inbox.recv().is_none());
+    }
+
+    #[test]
+    fn broadcast_shares_one_payload_across_targets() {
+        let (t1, r1) = local_target(8);
+        let (t2, r2) = local_target(8);
+        let (t3, r3) = local_target(8);
+        let mut port = OutPort::new(vec![t1, t2, t3], Routing::Broadcast, 16, None);
+        port.send(vec![Value::I64(1), Value::I64(2)].into());
+        port.eos();
+        let mut received = Vec::new();
+        for rx in [r1, r2, r3] {
+            let mut inbox = Inbox::new(rx, 1);
+            received.push(inbox.recv().unwrap());
+            assert!(inbox.recv().is_none());
+        }
+        assert!(Batch::ptr_eq(&received[0], &received[1]));
+        assert!(Batch::ptr_eq(&received[1], &received[2]));
+    }
+
+    #[test]
+    fn fanout_shares_one_payload_across_edges() {
+        let (t1, r1) = local_target(8);
+        let (t2, r2) = local_target(8);
+        let p1 = OutPort::new(vec![t1], Routing::RoundRobin, 16, None);
+        let p2 = OutPort::new(vec![t2], Routing::RoundRobin, 16, None);
+        let mut fan = FanOut::new(vec![p1, p2]);
+        fan.send(vec![Value::I64(3)].into());
+        fan.eos();
+        let a = Inbox::new(r1, 1).recv().unwrap();
+        let b = Inbox::new(r2, 1).recv().unwrap();
+        assert!(Batch::ptr_eq(&a, &b), "split edges share one allocation");
+    }
+
+    #[test]
+    fn crossing_edges_encode_once_and_share_frame_bytes() {
+        let link = Link::new("shared", None, false, None);
+        let (tx1, rx1) = sync_channel(8);
+        let (tx2, rx2) = sync_channel(8);
+        let mk = |tx| Target {
+            tx,
+            link: Some(link.clone()),
+            latency: std::time::Duration::ZERO,
+            crossing: true,
+        };
+        let m = crate::metrics::MetricsRegistry::new();
+        let mut port = OutPort::new(
+            vec![mk(tx1), mk(tx2)],
+            Routing::Broadcast,
+            16,
+            Some(m.clone()),
+        );
+        port.send(vec![Value::I64(1), Value::Str("payload".into())].into());
+        // both targets must hold references to the SAME frame buffer
+        let grab = |rx: &Receiver<Msg>| match rx.recv().unwrap() {
+            Msg::Frame(bytes) => bytes,
+            other => panic!("expected frame, got {other:?}"),
+        };
+        let f1 = grab(&rx1);
+        let f2 = grab(&rx2);
+        assert!(Arc::ptr_eq(&f1, &f2), "one encode serves both edges");
+        assert_eq!(
+            m.batch_encodes.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "exactly one wire encode for the whole broadcast"
+        );
+        // both frames decode to the original batch
+        let b = Batch::from_wire(f1).unwrap();
+        assert_eq!(b, vec![Value::I64(1), Value::Str("payload".into())]);
+        link.shutdown();
+    }
+
+    #[test]
+    fn flush_is_idempotent_and_delivers_exactly_once() {
+        let (t1, r1) = local_target(64);
+        let mut port = OutPort::new(vec![t1], Routing::Hash, 1000, None);
+        port.send(vec![Value::pair(Value::I64(1), Value::I64(10))].into());
+        port.flush();
+        port.flush(); // second flush must not re-deliver
+        // buffers stay usable after a flush
+        port.send(vec![Value::pair(Value::I64(1), Value::I64(11))].into());
+        port.eos();
+        let mut inbox = Inbox::new(r1, 1);
+        let mut got = Vec::new();
+        while let Some(b) = inbox.recv() {
+            got.extend(b);
+        }
+        assert_eq!(
+            got,
+            vec![
+                Value::pair(Value::I64(1), Value::I64(10)),
+                Value::pair(Value::I64(1), Value::I64(11)),
+            ],
+            "each record delivered exactly once, in order"
+        );
+    }
+
+    #[test]
+    fn flush_restores_pending_capacity() {
+        let (t1, _r1) = local_target(64);
+        let mut port = OutPort::new(vec![t1], Routing::Hash, 32, None);
+        port.send(vec![Value::pair(Value::I64(0), Value::I64(1))].into());
+        port.flush();
+        assert!(
+            port.pending.iter().all(|p| p.capacity() >= 32),
+            "flushed buffers are re-primed to batch capacity"
+        );
     }
 }

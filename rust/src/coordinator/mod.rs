@@ -77,6 +77,9 @@ pub struct JobReport {
     pub net_bytes: u64,
     /// Events that crossed a zone boundary.
     pub zone_crossings: u64,
+    /// Wire encodes actually performed (encode-once: at most one per
+    /// batch, no matter how many edges it crossed).
+    pub wire_encodes: u64,
     /// Plan summary (stages → per-zone instance counts).
     pub plan_description: String,
     /// Full metrics registry snapshot.
@@ -806,6 +809,7 @@ impl Deployment {
             collected: std::mem::take(&mut *self.collector.values.lock().unwrap()),
             net_bytes: m.net_bytes.load(Ordering::Relaxed),
             zone_crossings: m.zone_crossings.load(Ordering::Relaxed),
+            wire_encodes: m.batch_encodes.load(Ordering::Relaxed),
             plan_description: self.plan.describe(&self.graph),
             metrics: self.metrics.clone(),
         })
@@ -816,16 +820,21 @@ impl Deployment {
 /// partition when every expected producer has signalled EOS. The expected
 /// count is shared (and may grow while the job runs — `add_location`
 /// registers new producers before they start).
+///
+/// Appends are batch-granular and zero-copy: a frame's refcounted bytes
+/// (already the producer's cached encoding) become the log record
+/// directly, and a same-host batch re-uses its cached wire encoding —
+/// one encode per batch across the whole boundary.
 fn ingest_loop(topic: Arc<Topic>, partition: usize, rx: Receiver<Msg>, expected: Arc<AtomicUsize>) {
     let part = topic.partition(partition);
     let mut eos = 0usize;
     loop {
         match rx.recv() {
             Ok(Msg::Frame(bytes)) => {
-                let _ = part.append(&bytes);
+                let _ = part.append_shared(bytes);
             }
             Ok(Msg::Batch(batch)) => {
-                let _ = part.append(&crate::value::encode_batch(&batch));
+                let _ = part.append_batch(&batch);
             }
             Ok(Msg::Eos) => {
                 eos += 1;

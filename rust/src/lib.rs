@@ -84,5 +84,5 @@ pub mod prelude {
     pub use crate::graph::{LogicalGraph, UnitDef};
     pub use crate::netsim::LinkSpec;
     pub use crate::topology::{Capabilities, ConstraintExpr, LayerId, LocationId, ZoneId};
-    pub use crate::value::Value;
+    pub use crate::value::{Batch, Value};
 }

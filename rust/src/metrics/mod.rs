@@ -25,6 +25,10 @@ pub struct MetricsRegistry {
     pub net_frames: AtomicU64,
     /// Events that crossed a zone boundary.
     pub zone_crossings: AtomicU64,
+    /// Batch wire encodes actually performed by the channel layer
+    /// (encode-once accounting: shared batches hitting several crossing
+    /// edges count a single encode).
+    pub batch_encodes: AtomicU64,
     /// Records appended to queue topics.
     pub queue_appends: AtomicU64,
     /// Records consumed from queue topics.
@@ -88,6 +92,10 @@ impl MetricsRegistry {
             "zone crossings   : {}\n",
             self.zone_crossings.load(Ordering::Relaxed)
         ));
+        let be = self.batch_encodes.load(Ordering::Relaxed);
+        if be > 0 {
+            s.push_str(&format!("wire encodes     : {be}\n"));
+        }
         let qa = self.queue_appends.load(Ordering::Relaxed);
         let qr = self.queue_reads.load(Ordering::Relaxed);
         if qa + qr > 0 {

@@ -15,6 +15,13 @@
 //! Backpressure: the link queue is bounded; senders block when the wire is
 //! saturated, which propagates back to the sources — the behaviour a TCP
 //! connection under `tc` shaping exhibits.
+//!
+//! Frame sizing comes from the sender's **cached** batch encoding
+//! ([`Batch::wire`](crate::value::Batch::wire) length + per-frame
+//! overhead): the bytes accounted on the wire are the real serialised
+//! bytes, but a batch fanned out over several routes is sized — and
+//! encoded — exactly once, with every in-flight frame holding a refcount
+//! on the same buffer rather than a private copy.
 
 use crate::metrics::Metrics;
 use std::collections::BinaryHeap;

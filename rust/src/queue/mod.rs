@@ -6,7 +6,11 @@
 //!   log;
 //! * **producers** append records; appends are durable when the broker is
 //!   opened with a data directory (length- and CRC32-framed segment files,
-//!   recovered on open);
+//!   recovered on open). A record is one encoded *batch*: producers append
+//!   at batch granularity ([`Topic::append_batch`] /
+//!   [`Partition::append_shared`]) re-using the batch's cached wire
+//!   encoding, and the in-memory log holds the same refcounted buffer the
+//!   sender encoded — one encode, zero copies, per batch;
 //! * **consumer groups** track a committed offset per partition; consumers
 //!   poll from their offset and commit after processing, giving
 //!   at-least-once delivery across FlowUnit restarts — exactly what the
@@ -17,6 +21,7 @@
 
 use crate::error::{Error, Result};
 use crate::metrics::{Metrics, MetricsRegistry};
+use crate::value::Batch;
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Write};
@@ -133,6 +138,15 @@ impl Topic {
         self.partitions[p].append(record)
     }
 
+    /// Appends a whole batch as one record on the partition chosen by
+    /// `key_hash % partitions`, re-using the batch's cached wire encoding:
+    /// one encode per batch (or zero, if a crossing edge already paid it),
+    /// and the in-memory log shares the encoded buffer by refcount.
+    pub fn append_batch(&self, key_hash: u64, batch: &Batch) -> Result<()> {
+        let p = (key_hash % self.partitions.len() as u64) as usize;
+        self.partitions[p].append_batch(batch)
+    }
+
     /// Marks one producer as finished; when the last registered producer
     /// finishes, all partitions are closed (consumers see end-of-stream).
     pub fn producer_done(&self) {
@@ -229,22 +243,55 @@ impl Partition {
 
     /// Appends one record (durable if the partition is file-backed).
     pub fn append(&self, record: &[u8]) -> Result<()> {
-        if let Some(f) = self.file.lock().unwrap().as_mut() {
+        self.append_shared(Arc::from(record))
+    }
+
+    /// Appends a whole batch as one record, re-using its cached wire
+    /// encoding; an encode actually paid here (same-host producer whose
+    /// batch never crossed a link) is counted in `batch_encodes`.
+    pub fn append_batch(&self, batch: &Batch) -> Result<()> {
+        let record = batch.wire_with(|| {
+            if let Some(m) = &self.metrics {
+                MetricsRegistry::add(&m.batch_encodes, 1);
+            }
+        });
+        self.append_shared(record)
+    }
+
+    /// Appends an already-refcounted record: the in-memory log stores the
+    /// same buffer (no copy); only the durable file write, if any, pays a
+    /// memcpy. This is the hot path for batch frames arriving from the
+    /// channel layer, whose bytes are shared with the sender's encode
+    /// cache.
+    ///
+    /// The closed check and the in-memory append are atomic with respect
+    /// to [`Partition::close`], so a rejected append is never persisted
+    /// (it would silently reappear after recovery otherwise) — but the
+    /// durable write itself happens *outside* the state lock, so pollers
+    /// and committers never block behind disk I/O. The file guard is
+    /// acquired before the state lock is released, keeping segment order
+    /// aligned with log order.
+    pub fn append_shared(&self, record: Arc<[u8]>) -> Result<()> {
+        let mut file = {
+            let mut st = self.state.lock().unwrap();
+            if st.closed {
+                return Err(Error::Queue("append to closed partition".into()));
+            }
+            let file = self.file.lock().unwrap();
+            st.records.push(record.clone());
+            if let Some(m) = &self.metrics {
+                MetricsRegistry::add(&m.queue_appends, 1);
+            }
+            self.cv.notify_all();
+            file
+        };
+        if let Some(f) = file.as_mut() {
             let mut framed = Vec::with_capacity(8 + record.len());
             framed.extend_from_slice(&(record.len() as u32).to_le_bytes());
-            framed.extend_from_slice(&crc32(record).to_le_bytes());
-            framed.extend_from_slice(record);
+            framed.extend_from_slice(&crc32(&record).to_le_bytes());
+            framed.extend_from_slice(&record);
             f.write_all(&framed)?;
         }
-        let mut st = self.state.lock().unwrap();
-        if st.closed {
-            return Err(Error::Queue("append to closed partition".into()));
-        }
-        st.records.push(Arc::from(record));
-        if let Some(m) = &self.metrics {
-            MetricsRegistry::add(&m.queue_appends, 1);
-        }
-        self.cv.notify_all();
         Ok(())
     }
 
@@ -373,6 +420,24 @@ mod tests {
         }
         seen.sort_unstable();
         assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn append_batch_shares_the_encoded_buffer() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 1).unwrap();
+        t.register_producer();
+        let batch = Batch::new(vec![crate::value::Value::I64(42)]);
+        t.append_batch(0, &batch).unwrap();
+        t.producer_done();
+        let (recs, _) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
+        assert_eq!(recs.len(), 1);
+        let wire = batch.wire_cached().expect("append populated the cache");
+        assert!(
+            Arc::ptr_eq(&recs[0], &wire),
+            "the log holds the producer's buffer, not a copy"
+        );
+        assert_eq!(Batch::from_wire(recs[0].clone()).unwrap(), batch);
     }
 
     #[test]
@@ -508,6 +573,28 @@ mod tests {
         }
         let broker = QueueBroker::durable(&dir, None).unwrap();
         assert!(broker.topic("t", 1).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejected_append_is_never_persisted() {
+        let dir = std::env::temp_dir().join(format!("fuq-closed-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let broker = QueueBroker::durable(&dir, None).unwrap();
+            let t = broker.topic("t", 1).unwrap();
+            t.register_producer();
+            t.append(0, b"kept").unwrap();
+            t.producer_done(); // closes the partition
+            assert!(t.append(0, b"rejected").is_err());
+        }
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("t", 1).unwrap();
+        assert_eq!(
+            t.partition(0).len(),
+            1,
+            "a rejected append must not reappear after recovery"
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

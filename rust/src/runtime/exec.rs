@@ -3,7 +3,7 @@
 
 use crate::graph::{FoldFn, ReduceFn, WindowAgg};
 use crate::metrics::{Metrics, MetricsRegistry};
-use crate::value::Value;
+use crate::value::{Batch, Value};
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 use std::sync::atomic::AtomicU64;
@@ -50,15 +50,23 @@ fn keyed_entry<'m, V>(
 
 /// A runtime operator: consumes batches, emits batches; `flush` runs at
 /// end-of-stream to drain any held state.
+///
+/// `process` consumes a shared [`Batch`] handle. Executors that need the
+/// payload take it with [`Batch::into_values`] — copy-on-write, so a
+/// single-owner chain mutates the allocation in place while a batch still
+/// shared with a sibling `split` edge is copied privately. Executors that
+/// only *count* (the non-collecting sinks) never materialise a copy at
+/// all, which makes pure fan-out pipelines fully zero-copy end to end.
 pub trait OpExec: Send {
     /// Processes one input batch, appending outputs to `out`.
-    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>);
+    fn process(&mut self, batch: Batch, out: &mut Vec<Value>);
     /// Drains state at end-of-stream.
     fn flush(&mut self, _out: &mut Vec<Value>) {}
 }
 
-/// Feeds `batch` through a fused chain of executors.
-pub fn run_chain(ops: &mut [Box<dyn OpExec>], batch: Vec<Value>) -> Vec<Value> {
+/// Feeds `batch` through a fused chain of executors. An empty chain
+/// passes the handle through untouched (refcount move, no copy).
+pub fn run_chain(ops: &mut [Box<dyn OpExec>], batch: Batch) -> Batch {
     let mut cur = batch;
     for op in ops.iter_mut() {
         if cur.is_empty() {
@@ -66,7 +74,7 @@ pub fn run_chain(ops: &mut [Box<dyn OpExec>], batch: Vec<Value>) -> Vec<Value> {
         }
         let mut next = Vec::with_capacity(cur.len());
         op.process(cur, &mut next);
-        cur = next;
+        cur = next.into();
     }
     cur
 }
@@ -78,7 +86,7 @@ pub fn flush_chain(ops: &mut [Box<dyn OpExec>]) -> Vec<Value> {
     for i in 0..ops.len() {
         let mut out = Vec::new();
         if !pending.is_empty() {
-            ops[i].process(std::mem::take(&mut pending), &mut out);
+            ops[i].process(std::mem::take(&mut pending).into(), &mut out);
         }
         ops[i].flush(&mut out);
         pending = out;
@@ -89,24 +97,24 @@ pub fn flush_chain(ops: &mut [Box<dyn OpExec>]) -> Vec<Value> {
 /// `map`.
 pub struct MapExec(pub crate::graph::MapFn);
 impl OpExec for MapExec {
-    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
-        out.extend(batch.into_iter().map(|v| (self.0)(v)));
+    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
+        out.extend(batch.into_values().into_iter().map(|v| (self.0)(v)));
     }
 }
 
 /// `filter`.
 pub struct FilterExec(pub crate::graph::FilterFn);
 impl OpExec for FilterExec {
-    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
-        out.extend(batch.into_iter().filter(|v| (self.0)(v)));
+    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
+        out.extend(batch.into_values().into_iter().filter(|v| (self.0)(v)));
     }
 }
 
 /// `flat_map`.
 pub struct FlatMapExec(pub crate::graph::FlatMapFn);
 impl OpExec for FlatMapExec {
-    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
-        for v in batch {
+    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
+        for v in batch.into_values() {
             out.extend((self.0)(v));
         }
     }
@@ -116,8 +124,8 @@ impl OpExec for FlatMapExec {
 /// the outgoing edge by key hash.
 pub struct KeyByExec(pub crate::graph::KeyFn);
 impl OpExec for KeyByExec {
-    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
-        out.extend(batch.into_iter().map(|v| {
+    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
+        out.extend(batch.into_values().into_iter().map(|v| {
             let k = (self.0)(&v);
             Value::pair(k, v)
         }));
@@ -147,8 +155,8 @@ impl FoldExec {
 }
 
 impl OpExec for FoldExec {
-    fn process(&mut self, batch: Vec<Value>, _out: &mut Vec<Value>) {
-        for v in batch {
+    fn process(&mut self, batch: Batch, _out: &mut Vec<Value>) {
+        for v in batch.into_values() {
             let (key, payload) = match v {
                 Value::Pair(kp) => (kp.0, kp.1),
                 other => (Value::Null, other),
@@ -193,8 +201,8 @@ impl ReduceExec {
 }
 
 impl OpExec for ReduceExec {
-    fn process(&mut self, batch: Vec<Value>, _out: &mut Vec<Value>) {
-        for v in batch {
+    fn process(&mut self, batch: Batch, _out: &mut Vec<Value>) {
+        for v in batch.into_values() {
             let (key, payload) = match v {
                 Value::Pair(kp) => (kp.0, kp.1),
                 other => (Value::Null, other),
@@ -285,8 +293,8 @@ impl WindowExec {
 }
 
 impl OpExec for WindowExec {
-    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
-        for v in batch {
+    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
+        for v in batch.into_values() {
             let (key, payload) = match v {
                 Value::Pair(kp) => (kp.0, kp.1),
                 other => (Value::Null, other),
@@ -345,14 +353,20 @@ impl SinkExec {
 }
 
 impl OpExec for SinkExec {
-    fn process(&mut self, batch: Vec<Value>, _out: &mut Vec<Value>) {
+    fn process(&mut self, batch: Batch, _out: &mut Vec<Value>) {
         let n = batch.len() as u64;
         MetricsRegistry::add(&self.metrics.events_out, n);
         self.collector
             .count
             .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+        // only Collect materialises the payload; Count/Discard sinks stay
+        // zero-copy even when the batch is shared with sibling edges
         if matches!(self.kind, crate::graph::SinkKind::Collect) {
-            self.collector.values.lock().unwrap().extend(batch);
+            self.collector
+                .values
+                .lock()
+                .unwrap()
+                .extend(batch.into_values());
         }
     }
 }
@@ -415,8 +429,8 @@ impl XlaExec {
 }
 
 impl OpExec for XlaExec {
-    fn process(&mut self, batch: Vec<Value>, out: &mut Vec<Value>) {
-        for v in batch {
+    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
+        for v in batch.into_values() {
             let (key, payload) = match v {
                 Value::Pair(kp) => (Some(kp.0), kp.1),
                 other => (None, other),
@@ -466,10 +480,22 @@ mod tests {
                 Value::I64(v.as_i64().unwrap() * 10)
             }))),
         ]);
-        let out = run_chain(&mut ops, vec![Value::I64(1), Value::I64(2)]);
+        let out = run_chain(&mut ops, vec![Value::I64(1), Value::I64(2)].into());
         // 1 -> [1, 101] filtered out; 2 -> [2, 102] -> [20, 1020]
         assert_eq!(out, vec![Value::I64(20), Value::I64(1020)]);
         assert!(flush_chain(&mut ops).is_empty());
+    }
+
+    #[test]
+    fn empty_chain_passes_batch_through_by_identity() {
+        let mut ops: Vec<Box<dyn OpExec>> = vec![];
+        let b = Batch::new(vec![Value::I64(1), Value::I64(2)]);
+        let twin = b.clone();
+        let out = run_chain(&mut ops, b);
+        assert!(
+            Batch::ptr_eq(&out, &twin),
+            "a forwarding stage moves the handle, it does not copy the payload"
+        );
     }
 
     #[test]
@@ -487,7 +513,7 @@ mod tests {
             .iter()
             .map(|w| Value::Str(w.to_string()))
             .collect();
-        let mid = run_chain(&mut ops, words);
+        let mid = run_chain(&mut ops, words.into());
         assert!(mid.is_empty(), "fold holds state until flush");
         let mut out = flush_chain(&mut ops);
         out.sort_by_key(|v| v.as_pair().unwrap().0.as_str().unwrap().to_string());
@@ -513,7 +539,7 @@ mod tests {
             }),
         );
         let mut out = Vec::new();
-        f.process(vec![Value::F64(1.5), Value::F64(2.5)], &mut out);
+        f.process(vec![Value::F64(1.5), Value::F64(2.5)].into(), &mut out);
         f.flush(&mut out);
         assert_eq!(out, vec![Value::pair(Value::Null, Value::F64(4.0))]);
     }
@@ -533,7 +559,8 @@ mod tests {
                 Value::pair(Value::I64(0), Value::Null),
                 Value::pair(Value::I64(0), Value::Null),
                 Value::pair(Value::I64(0), Value::Null),
-            ],
+            ]
+            .into(),
             &mut out,
         );
         r.flush(&mut out);
@@ -558,7 +585,7 @@ mod tests {
         let keyed: Vec<Value> = (0..8)
             .map(|i| Value::pair(Value::I64(i % 2), Value::F64(i as f64)))
             .collect();
-        w.process(keyed, &mut out);
+        w.process(keyed.into(), &mut out);
         // key 0: [0,2,4,6] mean 3; key 1: [1,3,5,7] mean 4
         assert_eq!(out.len(), 2);
         let find = |k: i64| {
@@ -583,7 +610,7 @@ mod tests {
         let mut w = WindowExec::new(3, 1, WindowAgg::Sum);
         let mut out = Vec::new();
         let vals: Vec<Value> = (1..=5).map(|i| Value::F64(i as f64)).collect();
-        w.process(vals, &mut out);
+        w.process(vals.into(), &mut out);
         // windows [1,2,3]=6, [2,3,4]=9, [3,4,5]=12
         let sums: Vec<f64> = out
             .iter()
@@ -596,7 +623,7 @@ mod tests {
     fn window_flush_emits_partial() {
         let mut w = WindowExec::new(10, 10, WindowAgg::Count);
         let mut out = Vec::new();
-        w.process(vec![Value::F64(1.0); 3], &mut out);
+        w.process(vec![Value::F64(1.0); 3].into(), &mut out);
         assert!(out.is_empty());
         w.flush(&mut out);
         assert_eq!(out.len(), 1);
@@ -646,7 +673,7 @@ mod tests {
         let m = crate::metrics::MetricsRegistry::new();
         let mut sink = SinkExec::new(crate::graph::SinkKind::Collect, collector.clone(), m.clone());
         let mut out = Vec::new();
-        sink.process(vec![Value::I64(1), Value::I64(2)], &mut out);
+        sink.process(vec![Value::I64(1), Value::I64(2)].into(), &mut out);
         assert!(out.is_empty());
         assert_eq!(collector.values.lock().unwrap().len(), 2);
         assert_eq!(
@@ -671,7 +698,7 @@ mod tests {
                 c
             }))),
         ]);
-        run_chain(&mut ops, vec![Value::I64(7), Value::I64(7)]);
+        run_chain(&mut ops, vec![Value::I64(7), Value::I64(7)].into());
         let out = flush_chain(&mut ops);
         assert_eq!(out, vec![Value::I64(2)]);
     }

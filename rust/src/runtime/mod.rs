@@ -18,7 +18,7 @@ use crate::channels::{FanOut, Inbox};
 use crate::graph::SourceKind;
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::queue::Topic;
-use crate::value::{decode_batch, Value};
+use crate::value::{Batch, Value};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -108,13 +108,15 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
                         if recs.is_empty() {
                             continue; // poll timeout, still open
                         }
-                        let mut batch = Vec::new();
-                        for r in &recs {
-                            batch.extend(decode_batch(r).expect("corrupt queue record"));
+                        // each queue record *is* one encoded batch; decode
+                        // it once, keeping the record bytes as the wire
+                        // cache (re-appending downstream costs no encode)
+                        for r in recs {
+                            let b = Batch::from_wire(r).expect("corrupt queue record");
+                            batches += 1;
+                            let out = run_chain(&mut rt.ops, b);
+                            route(&mut rt.outputs, out);
                         }
-                        batches += 1;
-                        let out = run_chain(&mut rt.ops, batch);
-                        route(&mut rt.outputs, out);
                         offset = next;
                         part.commit(&group, offset);
                     }
@@ -124,12 +126,12 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
     }
     // end of stream: flush stateful operators, cascade EOS
     let tail = flush_chain(&mut rt.ops);
-    route(&mut rt.outputs, tail);
+    route(&mut rt.outputs, tail.into());
     rt.outputs.eos();
     batches
 }
 
-fn route(outputs: &mut FanOut, batch: Vec<Value>) {
+fn route(outputs: &mut FanOut, batch: Batch) {
     if batch.is_empty() {
         return;
     }
@@ -164,7 +166,7 @@ fn run_source(
                 }
                 emitted += this_batch;
                 MetricsRegistry::add(&metrics.events_in, this_batch);
-                let out = run_chain(ops, batch);
+                let out = run_chain(ops, batch.into());
                 route(outputs, out);
                 if let Some(r) = rate {
                     // pace to `r` events/second for this instance
@@ -185,13 +187,13 @@ fn run_source(
                 batch.push(v.clone());
                 if batch.len() >= src.batch_size {
                     MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
-                    let out = run_chain(ops, std::mem::take(&mut batch));
+                    let out = run_chain(ops, std::mem::take(&mut batch).into());
                     route(outputs, out);
                 }
             }
             if !batch.is_empty() {
                 MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
-                let out = run_chain(ops, batch);
+                let out = run_chain(ops, batch.into());
                 route(outputs, out);
             }
         }
@@ -206,13 +208,13 @@ fn run_source(
                 batch.push(Value::Str(line.to_string()));
                 if batch.len() >= src.batch_size {
                     MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
-                    let out = run_chain(ops, std::mem::take(&mut batch));
+                    let out = run_chain(ops, std::mem::take(&mut batch).into());
                     route(outputs, out);
                 }
             }
             if !batch.is_empty() {
                 MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
-                let out = run_chain(ops, batch);
+                let out = run_chain(ops, batch.into());
                 route(outputs, out);
             }
         }
@@ -329,7 +331,8 @@ mod tests {
         let metrics = MetricsRegistry::new();
         let (tx, rx) = sync_channel(8);
         let (collector, ops) = collector_sink(&metrics);
-        tx.send(Msg::Batch(vec![Value::I64(1), Value::I64(2)])).unwrap();
+        tx.send(Msg::Batch(vec![Value::I64(1), Value::I64(2)].into()))
+            .unwrap();
         tx.send(Msg::Eos).unwrap();
         run_instance(InstanceRuntime {
             id: 0,

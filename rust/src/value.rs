@@ -10,6 +10,7 @@
 //! stay on the same host move by pointer.
 
 use crate::error::{Error, Result};
+use std::sync::{Arc, OnceLock};
 
 /// A dynamically-typed event.
 #[derive(Debug, Clone, PartialEq)]
@@ -312,6 +313,158 @@ pub fn decode_batch(buf: &[u8]) -> Result<Vec<Value>> {
     Ok(out)
 }
 
+/// A reference-counted batch of values — the unit of exchange on the data
+/// plane.
+///
+/// Cloning a `Batch` bumps a refcount; the `Vec<Value>` payload is never
+/// deep-copied by the transport layers (`split` fan-out and `Broadcast`
+/// routing share one allocation across all edges). The wire encoding is
+/// computed lazily on the first cross-host delivery and cached, so a batch
+/// that traverses several zone-crossing edges is encoded exactly once —
+/// every clone sees the same cache. A batch decoded from a frame keeps the
+/// frame bytes as its cache (the codec is canonical), so re-forwarding a
+/// received batch across another boundary re-uses the original bytes.
+///
+/// Mutation is copy-on-write via [`Batch::into_values`]: the sole owner of
+/// a batch takes the payload allocation back intact (pointer identity —
+/// single-owner operator chains mutate in place), while a shared batch
+/// yields a private clone, so downstream mutation is never observable on a
+/// sibling edge. The cache cannot go stale: values behind the `Arc` are
+/// immutable, and `into_values` detaches from the shared cell entirely.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    inner: Arc<BatchInner>,
+}
+
+#[derive(Debug)]
+struct BatchInner {
+    values: Vec<Value>,
+    /// Lazily computed, cached wire encoding ([`encode_batch`] framing).
+    wire: OnceLock<Arc<[u8]>>,
+}
+
+impl Batch {
+    /// Wraps `values` as a batch (no encoding is performed).
+    pub fn new(values: Vec<Value>) -> Batch {
+        Batch {
+            inner: Arc::new(BatchInner {
+                values,
+                wire: OnceLock::new(),
+            }),
+        }
+    }
+
+    /// Decodes a batch from its wire encoding, retaining `wire` as the
+    /// cached encoding (valid because the codec is canonical: encoding the
+    /// decoded values reproduces `wire` byte-for-byte).
+    pub fn from_wire(wire: Arc<[u8]>) -> Result<Batch> {
+        let values = decode_batch(&wire)?;
+        let cell = OnceLock::new();
+        let _ = cell.set(wire);
+        Ok(Batch {
+            inner: Arc::new(BatchInner {
+                values,
+                wire: cell,
+            }),
+        })
+    }
+
+    /// The batch payload.
+    pub fn values(&self) -> &[Value] {
+        &self.inner.values
+    }
+
+    /// Number of records in the batch.
+    pub fn len(&self) -> usize {
+        self.inner.values.len()
+    }
+
+    /// True when the batch holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.inner.values.is_empty()
+    }
+
+    /// The wire encoding, computed on first use and cached for every clone
+    /// of this batch (at most one encode per batch, ever — `OnceLock`
+    /// serialises racing encoders down to a single run).
+    pub fn wire(&self) -> Arc<[u8]> {
+        self.wire_with(|| {})
+    }
+
+    /// [`Batch::wire`] with an `on_encode` hook that runs *inside* the
+    /// one-time initialiser — exact encode accounting even when several
+    /// threads race on a shared batch (the hook fires exactly once per
+    /// batch, on the thread that actually pays the encode).
+    pub fn wire_with(&self, on_encode: impl FnOnce()) -> Arc<[u8]> {
+        self.inner
+            .wire
+            .get_or_init(|| {
+                on_encode();
+                Arc::from(encode_batch(&self.inner.values))
+            })
+            .clone()
+    }
+
+    /// The cached wire encoding, if one has been computed — encode-count
+    /// instrumentation for tests and the delivery layer.
+    pub fn wire_cached(&self) -> Option<Arc<[u8]>> {
+        self.inner.wire.get().cloned()
+    }
+
+    /// True when this handle is the sole owner of the payload.
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.inner) == 1
+    }
+
+    /// True when `a` and `b` share one payload allocation (zero-copy
+    /// fan-out instrumentation).
+    pub fn ptr_eq(a: &Batch, b: &Batch) -> bool {
+        Arc::ptr_eq(&a.inner, &b.inner)
+    }
+
+    /// Takes the payload, copy-on-write: the sole owner recovers the
+    /// original allocation (in-place mutation downstream); a shared batch
+    /// gets a private clone, leaving every sibling untouched.
+    pub fn into_values(self) -> Vec<Value> {
+        match Arc::try_unwrap(self.inner) {
+            Ok(inner) => inner.values,
+            Err(shared) => shared.values.clone(),
+        }
+    }
+}
+
+impl From<Vec<Value>> for Batch {
+    fn from(values: Vec<Value>) -> Batch {
+        Batch::new(values)
+    }
+}
+
+impl IntoIterator for Batch {
+    type Item = Value;
+    type IntoIter = std::vec::IntoIter<Value>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.into_values().into_iter()
+    }
+}
+
+impl PartialEq for Batch {
+    fn eq(&self, other: &Batch) -> bool {
+        self.values() == other.values()
+    }
+}
+
+impl PartialEq<Vec<Value>> for Batch {
+    fn eq(&self, other: &Vec<Value>) -> bool {
+        self.values() == other.as_slice()
+    }
+}
+
+impl PartialEq<&[Value]> for Batch {
+    fn eq(&self, other: &&[Value]) -> bool {
+        self.values() == *other
+    }
+}
+
 /// Byte cursor for decoding.
 pub struct Cursor<'a> {
     buf: &'a [u8],
@@ -525,6 +678,58 @@ mod tests {
         assert_ne!(a, c);
         // I64(1) and Bool(true) must not collide via tag bytes
         assert_ne!(Value::I64(1).stable_hash(), Value::Bool(true).stable_hash());
+    }
+
+    #[test]
+    fn batch_clone_shares_payload_without_copy() {
+        let b = Batch::new(vec![Value::I64(1), Value::Str("x".into())]);
+        let c = b.clone();
+        assert!(Batch::ptr_eq(&b, &c));
+        assert!(!b.is_unique());
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn batch_wire_encodes_once_and_is_shared_across_clones() {
+        let b = Batch::new(vec![Value::I64(7); 32]);
+        assert!(b.wire_cached().is_none());
+        let c = b.clone();
+        let w1 = b.wire();
+        let w2 = c.wire(); // cache hit through the sibling handle
+        assert!(Arc::ptr_eq(&w1, &w2), "one encode serves every clone");
+        assert_eq!(w1.as_ref(), encode_batch(b.values()).as_slice());
+    }
+
+    #[test]
+    fn batch_from_wire_keeps_frame_bytes_as_cache() {
+        let original = Batch::new(vec![Value::pair(Value::I64(1), Value::F64(0.5))]);
+        let wire = original.wire();
+        let decoded = Batch::from_wire(wire.clone()).unwrap();
+        assert_eq!(decoded, original);
+        let cached = decoded.wire_cached().expect("frame bytes retained");
+        assert!(Arc::ptr_eq(&cached, &wire), "no re-encode after decode");
+    }
+
+    #[test]
+    fn batch_from_wire_rejects_corrupt_frames() {
+        assert!(Batch::from_wire(Arc::from(vec![200u8, 1, 2])).is_err());
+    }
+
+    #[test]
+    fn unique_batch_recovers_payload_allocation() {
+        let values = vec![Value::I64(1), Value::I64(2)];
+        let ptr = values.as_ptr();
+        let out = Batch::new(values).into_values();
+        assert_eq!(out.as_ptr(), ptr, "sole owner takes the Vec back in place");
+    }
+
+    #[test]
+    fn shared_batch_into_values_copies_and_preserves_siblings() {
+        let b = Batch::new(vec![Value::I64(1)]);
+        let sibling = b.clone();
+        let mut mine = b.into_values();
+        mine[0] = Value::I64(999);
+        assert_eq!(sibling.values(), &[Value::I64(1)]);
     }
 
     #[test]
