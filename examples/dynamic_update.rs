@@ -4,9 +4,16 @@
 //!    edge server E5, which starts feeding the (already running) S2 site
 //!    queue, with zero disruption elsewhere;
 //! 2. the cloud **ML FlowUnit is swapped** from `anomaly_v1` to the
-//!    retrained `anomaly_v2` artifact — only that unit restarts; edge and
-//!    site units keep producing into the decoupling queues throughout, and
-//!    the replacement consumers resume from committed offsets.
+//!    retrained `anomaly_v2` artifact. ML is the shape that used to be
+//!    rejected: it holds keyed *window state* and a **direct internal
+//!    channel** (its `key_by` stage feeds its window/inference stage
+//!    in-process). The epoch drain-and-handoff protocol quiesces it:
+//!    entry instances commit their queue offsets and forward an epoch
+//!    marker through the internal channel, the window stage snapshots its
+//!    partial windows into the unit's state topic, and the replacement
+//!    instances restore them and resume from the committed offsets — no
+//!    batch is lost or duplicated, no partial window is dropped, and
+//!    units FP/AD never stop producing.
 //!
 //! Requires `make artifacts`.
 //!
@@ -35,11 +42,14 @@ fn pipeline_graph(artifact: &'static str) -> flowunits::error::Result<flowunits:
     .filter(|v| v.as_f64().unwrap().is_finite())
     .unit("AD")
     .to_layer("site")
-    .key_by(|v| Value::I64((v.as_f64().unwrap() * 7.0) as i64 % 4))
-    .window(32, WindowAgg::FeatureStats)
+    .map(|v| Value::F64(v.as_f64().unwrap().clamp(0.0, 100.0)))
+    // ML: stateful (keyed windows) with a direct internal channel between
+    // its key_by stage and its window/inference stage — hot-swapped below
     .unit("ML")
     .to_layer("cloud")
     .add_constraint("xla = yes")
+    .key_by(|v| Value::I64((v.as_f64().unwrap() * 7.0) as i64 % 4))
+    .window(32, WindowAgg::FeatureStats)
     .xla_map(artifact, XLA_BATCH, FEATURES)
     .collect_count();
     ctx.into_graph()
@@ -71,7 +81,7 @@ fn main() -> flowunits::error::Result<()> {
     let coord = Coordinator::new(fig2_cluster(), config());
     let mut dep = coord.deploy(&pipeline_graph("anomaly_v1")?)?;
     let m = dep.metrics();
-    println!("deployed: locations L1, L2, L4; ML = anomaly_v1");
+    println!("deployed: locations L1, L2, L4; ML = anomaly_v1 (stateful, internal channels)");
 
     std::thread::sleep(phase);
     let in_phase1 = m.events_in.load(Ordering::Relaxed);
@@ -85,10 +95,16 @@ fn main() -> flowunits::error::Result<()> {
     let in_phase2 = m.events_in.load(Ordering::Relaxed);
     assert!(in_phase2 > in_phase1, "pipeline kept flowing through add_location");
 
-    // --- update 2: swap the ML FlowUnit to the retrained model ----------
+    // --- update 2: hot-swap the stateful ML FlowUnit to the retrained
+    // model via the epoch drain-and-handoff protocol -----------------------
     let scored_before_swap = m.xla_rows.load(Ordering::Relaxed);
     dep.update_unit("ML", pipeline_graph("anomaly_v2")?)?;
-    println!("update 2 : ML FlowUnit swapped to anomaly_v2 (units FP/AD untouched)");
+    let pause = m.update_pause_ms.load(Ordering::Relaxed);
+    let epochs = m.epochs_forwarded.load(Ordering::Relaxed);
+    println!(
+        "update 2 : ML swapped to anomaly_v2 — pause {pause} ms, {epochs} epoch markers; \
+         partial windows handed off, FP/AD untouched"
+    );
     std::thread::sleep(phase);
     let in_phase3 = m.events_in.load(Ordering::Relaxed);
     let scored_after_swap = m.xla_rows.load(Ordering::Relaxed);

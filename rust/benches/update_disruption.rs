@@ -1,0 +1,214 @@
+//! `cargo bench --bench update_disruption` — measures what a dynamic
+//! update actually costs while the pipeline is under load.
+//!
+//! The workload is the hot-swap stress shape: rate-limited edge sources
+//! feed a stateful cloud FlowUnit (`key_by → window`, so the unit holds
+//! keyed state *and* a direct internal hash channel between its stages),
+//! and mid-run the unit is hot-swapped through the epoch drain-and-handoff
+//! protocol. The bench reports:
+//!
+//! * source-side events/sec **before / during / after** the swap — the
+//!   paper's claim is that producers are never disrupted;
+//! * the **pause window**: the coordinator's measured quiesce+respawn time
+//!   (`update_pause_ms`) and the longest observed sink-output stall
+//!   overlapping the swap;
+//! * conservation: the sum of emitted window counts must equal the events
+//!   produced — zero loss, zero duplication, asserted on every run.
+//!
+//! Results land in `BENCH_update.json` (override with `UPDATE_OUT`).
+//! `UPDATE_EVENTS`, `UPDATE_RATE`, and `UPDATE_SWAP_MS` scale the workload;
+//! CI runs a small smoke configuration.
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::config::eval_cluster;
+use flowunits::value::Value;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const KEYS: i64 = 16;
+const WINDOW: usize = 100;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn config() -> JobConfig {
+    JobConfig {
+        planner: PlannerKind::FlowUnits,
+        decouple_units: true,
+        batch_size: 128,
+        poll_timeout: Duration::from_millis(10),
+        ..Default::default()
+    }
+}
+
+/// source@edge → filter@edge ∥ "agg"@cloud: key_by → window(Count) →
+/// collect. The window stage is fed by a direct internal hash channel.
+fn graph(total: u64, rate: f64) -> flowunits::graph::LogicalGraph {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config());
+    ctx.stream(Source::synthetic_rated(total, rate, |_, i| {
+        Value::I64(i as i64)
+    }))
+    .to_layer("edge")
+    .filter(|v| v.as_i64().unwrap() >= 0)
+    .unit("agg")
+    .to_layer("cloud")
+    .key_by(|v| Value::I64(v.as_i64().unwrap() % KEYS))
+    .window(WINDOW, WindowAgg::Count)
+    .collect_vec();
+    ctx.into_graph().expect("bench graph")
+}
+
+/// Mean source-side event rate over the sample window `[a, b]` seconds.
+fn rate_in(samples: &[(f64, u64, u64)], a: f64, b: f64) -> f64 {
+    // the first sample lands shortly after t=0, so a window starting at 0
+    // anchors on it rather than finding no sample at all
+    let lo = samples
+        .iter()
+        .filter(|s| s.0 <= a)
+        .next_back()
+        .or_else(|| samples.first());
+    let hi = samples.iter().filter(|s| s.0 <= b).next_back();
+    match (lo, hi) {
+        (Some(&(t0, e0, _)), Some(&(t1, e1, _))) if t1 > t0 => {
+            (e1 - e0) as f64 / (t1 - t0)
+        }
+        _ => 0.0,
+    }
+}
+
+fn main() {
+    let total = env_u64("UPDATE_EVENTS", 400_000);
+    let rate = env_u64("UPDATE_RATE", 40_000) as f64;
+    let swap_ms = env_u64("UPDATE_SWAP_MS", 400);
+    println!(
+        "# FlowUnits update-disruption bench ({total} events, {rate} ev/s per source, \
+         swap at {swap_ms} ms)"
+    );
+
+    let coord = flowunits::coordinator::Coordinator::new(eval_cluster(None, Duration::ZERO), config());
+    let mut dep = coord.deploy(&graph(total, rate)).expect("deploy");
+    let metrics = dep.metrics();
+
+    // sampler: (seconds since start, events_in, events_out) every ~5 ms
+    let sampling = Arc::new(AtomicBool::new(true));
+    let sampler = {
+        let metrics = metrics.clone();
+        let sampling = sampling.clone();
+        let t0 = Instant::now();
+        std::thread::spawn(move || {
+            let mut samples: Vec<(f64, u64, u64)> = Vec::new();
+            while sampling.load(Ordering::Relaxed) {
+                samples.push((
+                    t0.elapsed().as_secs_f64(),
+                    metrics.events_in.load(Ordering::Relaxed),
+                    metrics.events_out.load(Ordering::Relaxed),
+                ));
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            samples
+        })
+    };
+
+    let t0 = Instant::now();
+    std::thread::sleep(Duration::from_millis(swap_ms));
+    let swap_start = t0.elapsed().as_secs_f64();
+    dep.update_unit("agg", graph(total, rate)).expect("hot swap");
+    let swap_end = t0.elapsed().as_secs_f64();
+    // observe the post-swap regime for as long as the pre-swap one
+    std::thread::sleep(Duration::from_millis(swap_ms));
+
+    sampling.store(false, Ordering::Relaxed);
+    let samples = sampler.join().expect("sampler");
+    let report = dep.wait().expect("job completes");
+
+    // conservation: every produced event is counted in exactly one window
+    let counted: i64 = report
+        .collected
+        .iter()
+        .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
+        .sum();
+    assert_eq!(
+        counted as u64, report.events_in,
+        "zero-loss/zero-duplication violated across the swap"
+    );
+    assert_eq!(report.corrupt_records, 0);
+
+    let before = rate_in(&samples, 0.0, swap_start);
+    let during = rate_in(&samples, swap_start, swap_end.max(swap_start + 0.01));
+    let after = rate_in(&samples, swap_end, swap_end + swap_ms as f64 / 1000.0);
+    let pause_ms = report
+        .metrics
+        .update_pause_ms
+        .load(Ordering::Relaxed);
+    let epochs = report
+        .metrics
+        .epochs_forwarded
+        .load(Ordering::Relaxed);
+
+    // longest sink-output stall overlapping the swap window
+    let mut stall = 0.0f64;
+    if let Some(&(first_t, _, first_out)) = samples.first() {
+        let mut run_start = first_t;
+        let mut prev_out = first_out;
+        for &(t, _, out) in &samples[1..] {
+            if out > prev_out {
+                if t >= swap_start && run_start <= swap_end {
+                    stall = stall.max(t - run_start);
+                }
+                run_start = t;
+                prev_out = out;
+            }
+        }
+        // a stall still open when sampling stopped counts up to the last
+        // sample — otherwise the worst run under-reports as ~0
+        if let Some(&(last_t, _, _)) = samples.last() {
+            if last_t >= swap_start && run_start <= swap_end {
+                stall = stall.max(last_t - run_start);
+            }
+        }
+    }
+
+    println!(
+        "{:<22} {:>12} {:>12} {:>12}",
+        "", "before", "during", "after"
+    );
+    println!(
+        "{:<22} {:>12.0} {:>12.0} {:>12.0}",
+        "source events/s", before, during, after
+    );
+    println!("update call           : {:.1} ms", (swap_end - swap_start) * 1000.0);
+    println!("pause (coordinator)   : {pause_ms} ms");
+    println!("output stall observed : {:.1} ms", stall * 1000.0);
+    println!("epoch markers         : {epochs}");
+    println!(
+        "events in/out         : {} / {} ({} windows)",
+        report.events_in,
+        report.events_out,
+        report.collected.len()
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"update\",\n  \"events\": {total},\n  \"rate_per_source\": {rate},\n  \
+         \"swap_at_ms\": {swap_ms},\n  \"before_ev_s\": {before:.1},\n  \"during_ev_s\": {during:.1},\n  \
+         \"after_ev_s\": {after:.1},\n  \"update_call_ms\": {:.1},\n  \"pause_ms\": {pause_ms},\n  \
+         \"output_stall_ms\": {:.1},\n  \"epochs_forwarded\": {epochs},\n  \"events_in\": {},\n  \
+         \"windows_emitted\": {},\n  \"corrupt_records\": {}\n}}\n",
+        (swap_end - swap_start) * 1000.0,
+        stall * 1000.0,
+        report.events_in,
+        report.collected.len(),
+        report.corrupt_records,
+    );
+    // cargo runs bench binaries with CWD = the package root (rust/);
+    // UPDATE_OUT overrides the destination
+    let path = std::env::var("UPDATE_OUT").unwrap_or_else(|_| "BENCH_update.json".into());
+    let mut f = std::fs::File::create(&path).expect("create BENCH_update.json");
+    f.write_all(json.as_bytes()).expect("write bench results");
+    println!("\nwrote {path}");
+}

@@ -30,6 +30,13 @@
 //! most once ([`JobReport::wire_encodes`] reports how many encodes a job
 //! actually paid; see README *Architecture: the data plane*).
 //!
+//! A deployed job is dynamically updatable by unit name:
+//! [`Deployment::update_unit`](crate::coordinator::Deployment::update_unit)
+//! hot-swaps one FlowUnit — stateful, multi-stage, or re-scoped
+//! (constraint/replication) — through an epoch-based drain-and-handoff
+//! protocol that loses and duplicates zero events (see README *Dynamic
+//! updates*).
+//!
 //! ```no_run
 //! use flowunits::prelude::*;
 //!

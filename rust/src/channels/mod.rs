@@ -44,6 +44,23 @@ pub enum Msg {
     Frame(Arc<[u8]>),
     /// One upstream producer finished.
     Eos,
+    /// Drain-and-handoff epoch marker (dynamic updates): one upstream
+    /// producer has quiesced for the given update epoch. Unlike [`Msg::Eos`]
+    /// this does **not** end the stream — a consumer that has received the
+    /// marker from every producer quiesces itself (snapshotting state and
+    /// forwarding the marker) instead of flushing and cascading EOS.
+    Epoch(u64),
+}
+
+/// Hash used to route one record on a [`Routing::Hash`] edge: the pair
+/// key for keyed records, the whole value otherwise. The coordinator's
+/// restore re-partitioning (dynamic updates) must mirror live routing
+/// exactly, so both sides share this helper.
+pub fn route_hash(v: &Value) -> u64 {
+    match v {
+        Value::Pair(kv) => kv.0.stable_hash(),
+        other => other.stable_hash(),
+    }
 }
 
 /// Routing policy of an output port.
@@ -130,11 +147,7 @@ impl OutPort {
                 // per-record partitioning needs the payload; copy-on-write
                 // takes it in place unless a sibling edge shares the batch
                 for v in batch.into_values() {
-                    let key_hash = match &v {
-                        Value::Pair(kv) => kv.0.stable_hash(),
-                        other => other.stable_hash(),
-                    };
-                    let t = (key_hash % n) as usize;
+                    let t = (route_hash(&v) % n) as usize;
                     self.pending[t].push(v);
                     if self.pending[t].len() >= self.batch_capacity {
                         // swap in a pre-sized buffer: re-growing from zero
@@ -180,6 +193,29 @@ impl OutPort {
                 Some(link) => {
                     link.send(FRAME_OVERHEAD, target.latency, Msg::Eos, &target.tx);
                 }
+            }
+        }
+    }
+
+    /// Flushes pending buffers, then forwards a drain-and-handoff epoch
+    /// marker to every target. Direct inboxes count markers like EOS
+    /// (quiescing once every producer delivered one); queue ingest
+    /// swallows them, so downstream FlowUnits observe a pause, never a
+    /// premature end-of-stream.
+    pub fn epoch(&mut self, epoch: u64) {
+        self.flush();
+        for t in 0..self.targets.len() {
+            let target = &self.targets[t];
+            match &target.link {
+                None => {
+                    let _ = target.tx.send(Msg::Epoch(epoch));
+                }
+                Some(link) => {
+                    link.send(FRAME_OVERHEAD, target.latency, Msg::Epoch(epoch), &target.tx);
+                }
+            }
+            if let Some(m) = &self.metrics {
+                MetricsRegistry::add(&m.epochs_forwarded, 1);
             }
         }
     }
@@ -271,6 +307,26 @@ impl FanOut {
             p.eos();
         }
     }
+
+    /// Flushes then forwards an epoch marker down every edge.
+    pub fn epoch(&mut self, epoch: u64) {
+        for p in &mut self.ports {
+            p.epoch(epoch);
+        }
+    }
+}
+
+/// What an [`Inbox`] yielded: a data batch, or one of the two terminal
+/// conditions of the input stream.
+#[derive(Debug)]
+pub enum InboxEvent {
+    /// A data batch (frames are decoded transparently).
+    Batch(Batch),
+    /// Every still-live producer has delivered the drain-and-handoff
+    /// marker for this epoch (dynamic update): quiesce without EOS.
+    Epoch(u64),
+    /// Every producer signalled EOS (or disconnected): end of stream.
+    Eos,
 }
 
 /// Input side of an operator instance: one receiver fed by N producers.
@@ -278,6 +334,8 @@ pub struct Inbox {
     rx: Receiver<Msg>,
     producers: usize,
     eos_seen: usize,
+    epoch_seen: usize,
+    epoch: u64,
 }
 
 impl Inbox {
@@ -287,36 +345,80 @@ impl Inbox {
             rx,
             producers,
             eos_seen: 0,
+            epoch_seen: 0,
+            epoch: 0,
         }
     }
 
-    /// Receives the next batch, decoding frames (the decoded batch keeps
+    /// True once every producer has delivered its terminal signal. An
+    /// epoch completes when each producer has sent either the marker or
+    /// EOS (a producer that genuinely finished before the update counts
+    /// through its EOS) and at least one marker arrived.
+    fn terminal(&self) -> Option<InboxEvent> {
+        if self.epoch_seen > 0 && self.epoch_seen + self.eos_seen >= self.producers {
+            return Some(InboxEvent::Epoch(self.epoch));
+        }
+        if self.eos_seen >= self.producers {
+            return Some(InboxEvent::Eos);
+        }
+        None
+    }
+
+    /// Receives the next event, decoding frames (the decoded batch keeps
     /// the frame bytes as its cached encoding, so forwarding it across
-    /// another boundary costs no re-encode). Returns `None` once all
-    /// producers have signalled EOS (or every sender disconnected).
-    pub fn recv(&mut self) -> Option<Batch> {
+    /// another boundary costs no re-encode). Terminal events are reported
+    /// once all producers have delivered them — see [`InboxEvent`].
+    pub fn next(&mut self) -> InboxEvent {
         loop {
-            if self.eos_seen >= self.producers {
-                return None;
+            if let Some(ev) = self.terminal() {
+                if matches!(ev, InboxEvent::Epoch(_)) {
+                    // reset so a later epoch (after a respawn reusing this
+                    // inbox, which does not happen today) starts clean
+                    self.epoch_seen = 0;
+                }
+                return ev;
             }
             match self.rx.recv() {
-                Ok(Msg::Batch(b)) => return Some(b),
+                Ok(Msg::Batch(b)) => return InboxEvent::Batch(b),
                 Ok(Msg::Frame(bytes)) => {
                     let b = Batch::from_wire(bytes).expect("corrupt frame on channel");
-                    return Some(b);
+                    return InboxEvent::Batch(b);
                 }
                 Ok(Msg::Eos) => {
                     self.eos_seen += 1;
                 }
-                Err(_) => return None, // all senders dropped
+                Ok(Msg::Epoch(e)) => {
+                    self.epoch_seen += 1;
+                    self.epoch = e;
+                }
+                Err(_) => {
+                    // All senders dropped with neither marker nor EOS from
+                    // some producer — an abnormal teardown (producer
+                    // crash), not a quiesce (a quiescing producer's marker
+                    // is buffered before its sender drops, so it was
+                    // already counted). Fall back to the EOS path so the
+                    // stream terminates instead of quiescing half-drained.
+                    self.eos_seen = self.producers;
+                    self.epoch_seen = 0;
+                }
             }
+        }
+    }
+
+    /// Receives the next batch. Returns `None` once the stream terminated
+    /// — either every producer signalled EOS / disconnected, or an epoch
+    /// completed (callers that distinguish the two use [`Inbox::next`]).
+    pub fn recv(&mut self) -> Option<Batch> {
+        match self.next() {
+            InboxEvent::Batch(b) => Some(b),
+            InboxEvent::Epoch(_) | InboxEvent::Eos => None,
         }
     }
 
     /// Non-blocking variant used by instances that multiplex control
     /// messages; returns `Ok(None)` when no message is ready.
     pub fn try_recv(&mut self) -> Option<Option<Batch>> {
-        if self.eos_seen >= self.producers {
+        if self.terminal().is_some() {
             return Some(None);
         }
         match self.rx.try_recv() {
@@ -326,7 +428,16 @@ impl Inbox {
             }
             Ok(Msg::Eos) => {
                 self.eos_seen += 1;
-                if self.eos_seen >= self.producers {
+                if self.terminal().is_some() {
+                    Some(None)
+                } else {
+                    None
+                }
+            }
+            Ok(Msg::Epoch(e)) => {
+                self.epoch_seen += 1;
+                self.epoch = e;
+                if self.terminal().is_some() {
                     Some(None)
                 } else {
                     None
@@ -575,6 +686,45 @@ mod tests {
             ],
             "each record delivered exactly once, in order"
         );
+    }
+
+    #[test]
+    fn epoch_completes_only_after_all_producers_marked() {
+        let (tx, rx) = sync_channel(8);
+        let tx2 = tx.clone();
+        let mut inbox = Inbox::new(rx, 2);
+        tx.send(Msg::Epoch(3)).unwrap();
+        // a laggard producer's data arriving after the first marker is
+        // still delivered before the epoch completes
+        tx2.send(Msg::Batch(vec![Value::I64(5)].into())).unwrap();
+        tx2.send(Msg::Epoch(3)).unwrap();
+        assert!(matches!(inbox.next(), InboxEvent::Batch(b) if b == vec![Value::I64(5)]));
+        assert!(matches!(inbox.next(), InboxEvent::Epoch(3)));
+    }
+
+    #[test]
+    fn epoch_counts_finished_producers_through_their_eos() {
+        // one producer genuinely ended before the update; the other sends
+        // the marker — the consumer must still quiesce, not hang
+        let (tx, rx) = sync_channel(8);
+        let tx2 = tx.clone();
+        let mut inbox = Inbox::new(rx, 2);
+        tx.send(Msg::Eos).unwrap();
+        tx2.send(Msg::Epoch(7)).unwrap();
+        assert!(matches!(inbox.next(), InboxEvent::Epoch(7)));
+    }
+
+    #[test]
+    fn outport_epoch_flushes_pending_records_first() {
+        let (t1, r1) = local_target(8);
+        let mut port = OutPort::new(vec![t1], Routing::Hash, 1000, None);
+        port.send(vec![Value::pair(Value::I64(1), Value::I64(10))].into());
+        port.epoch(5);
+        // buffered record arrives before the marker (channel FIFO)
+        let mut inbox = Inbox::new(r1, 1);
+        assert!(matches!(inbox.next(), InboxEvent::Batch(b)
+            if b == vec![Value::pair(Value::I64(1), Value::I64(10))]));
+        assert!(matches!(inbox.next(), InboxEvent::Epoch(5)));
     }
 
     #[test]

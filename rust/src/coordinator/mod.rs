@@ -18,12 +18,12 @@ use crate::runtime::{
         Collector, FilterExec, FlatMapExec, FoldExec, KeyByExec, MapExec, ReduceExec, SinkExec,
         WindowExec, XlaExec,
     },
-    run_instance, InputKind, InstanceRuntime, OpExec, SourceRuntime,
+    run_instance, Handoff, InputKind, InstanceRuntime, OpExec, SourceRuntime,
 };
 use crate::topology::LocationId;
 use crate::value::Value;
-use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -80,6 +80,9 @@ pub struct JobReport {
     /// Wire encodes actually performed (encode-once: at most one per
     /// batch, no matter how many edges it crossed).
     pub wire_encodes: u64,
+    /// Corrupt queue records consumers skipped (0 in a healthy run — the
+    /// job completes and reports the count instead of aborting).
+    pub corrupt_records: u64,
     /// Plan summary (stages → per-zone instance counts).
     pub plan_description: String,
     /// Full metrics registry snapshot.
@@ -161,11 +164,16 @@ pub struct Deployment {
     links: HashMap<String, Arc<Link<Msg>>>,
     broker: Option<Broker>,
     topics: HashMap<TopicKey, TopicRuntime>,
-    /// Worker threads grouped by FlowUnit index.
-    unit_threads: BTreeMap<usize, Vec<std::thread::JoinHandle<u64>>>,
+    /// Worker threads grouped by (FlowUnit index, zone) — dynamic updates
+    /// roll a unit's replicas zone by zone.
+    unit_threads: BTreeMap<(usize, String), Vec<std::thread::JoinHandle<u64>>>,
     ingest_threads: Vec<std::thread::JoinHandle<()>>,
     source_stop: Arc<AtomicBool>,
-    unit_stops: BTreeMap<usize, Arc<AtomicBool>>,
+    unit_stops: BTreeMap<(usize, String), Arc<AtomicBool>>,
+    /// Deployment-wide drain-and-handoff epoch, bumped once per
+    /// `update_unit` before any stop flag is raised; quiescing instances
+    /// stamp their state snapshots (and markers) with it.
+    update_epoch: Arc<AtomicU64>,
     started: Instant,
 }
 
@@ -199,6 +207,7 @@ impl Deployment {
             ingest_threads: Vec::new(),
             source_stop: Arc::new(AtomicBool::new(false)),
             unit_stops: BTreeMap::new(),
+            update_epoch: Arc::new(AtomicU64::new(0)),
             started: Instant::now(),
         };
         dep.wire_and_spawn()?;
@@ -234,7 +243,7 @@ impl Deployment {
 
     fn wire_and_spawn(&mut self) -> Result<()> {
         let all = self.plan.instances.clone();
-        self.spawn_set(&all, true)
+        self.spawn_set(&all, true, &HashMap::new())
     }
 
     /// Wires and spawns a *set* of planned instances. At launch the set is
@@ -250,11 +259,17 @@ impl Deployment {
     /// decoupling topics' expected-EOS totals. True for launch and
     /// `add_location` (genuinely new producers); false for `update_unit`
     /// (replacement instances inherit their predecessors' registration,
-    /// which never signalled EOS).
+    /// which never signalled EOS — quiescing instances exit through the
+    /// epoch protocol instead).
+    ///
+    /// `restores`: per-instance handed-off operator state (one entry per
+    /// executor in the instance's fused chain), produced by
+    /// [`Deployment::collect_restores`] during a dynamic update.
     fn spawn_set(
         &mut self,
         set: &[crate::placement::InstancePlan],
         register_producers: bool,
+        restores: &HashMap<usize, Vec<Value>>,
     ) -> Result<()> {
         let plan = self.plan.clone();
         let topo = self.cluster.topology.clone();
@@ -388,22 +403,33 @@ impl Deployment {
                     .topics
                     .get(&key)
                     .ok_or_else(|| Error::Runtime(format!("no topic for {key:?}")))?;
-                // partition index = position among the zone's instances
+                // round-robin partition ownership by position among the
+                // zone's instances — placement-affecting updates may leave
+                // more (or fewer) instances than partitions
                 let peers: Vec<usize> = plan
                     .instances
                     .iter()
                     .filter(|i| i.stage == inst.stage && i.zone == inst.zone)
                     .map(|i| i.id)
                     .collect();
-                let partition = peers.iter().position(|&p| p == inst.id).unwrap();
+                let pos = peers.iter().position(|&p| p == inst.id).ok_or_else(|| {
+                    Error::Placement(format!(
+                        "instance {} (stage {}, zone {}) is missing from its own peer \
+                         list — malformed placement plan",
+                        inst.id, inst.stage, inst.zone
+                    ))
+                })?;
+                let partitions: Vec<usize> = (0..tr.topic.partitions())
+                    .filter(|p| p % peers.len() == pos)
+                    .collect();
                 let unit_stop = self
                     .unit_stops
-                    .entry(stage.unit_index)
+                    .entry((stage.unit_index, inst.zone.clone()))
                     .or_insert_with(|| Arc::new(AtomicBool::new(false)))
                     .clone();
                 InputKind::Queue {
                     topic: tr.topic.clone(),
-                    partition,
+                    partitions,
                     group: format!("unit{}-{}", stage.unit_index, inst.zone),
                     poll_timeout: self.config.poll_timeout,
                     stop: unit_stop,
@@ -479,6 +505,20 @@ impl Deployment {
             }
             let outputs = FanOut::new(ports);
 
+            // drain-and-handoff context: where this instance snapshots its
+            // state if a dynamic update quiesces it (source units are not
+            // hot-swappable, and without a queue substrate neither is
+            // anything else)
+            let handoff = match (&self.broker, stage.is_source()) {
+                (Some(broker), false) => Some(Handoff {
+                    state_topic: broker.topic(&unit_state_topic(stage.unit_index), 1)?,
+                    stage: inst.stage,
+                    zone: inst.zone.clone(),
+                    epoch: self.update_epoch.clone(),
+                }),
+                _ => None,
+            };
+
             // fused operator chain (source op handled by InputKind)
             let ops = self.build_ops(&stage)?;
             let metrics = self.metrics.clone();
@@ -488,13 +528,15 @@ impl Deployment {
                 input,
                 outputs,
                 metrics,
+                handoff,
+                restore: restores.get(&inst.id).cloned().unwrap_or_default(),
             };
             let h = std::thread::Builder::new()
                 .name(format!("inst-{}-s{}-{}", inst.id, inst.stage, inst.host))
                 .spawn(move || run_instance(rt))
                 .expect("spawn instance thread");
             self.unit_threads
-                .entry(stage.unit_index)
+                .entry((stage.unit_index, inst.zone.clone()))
                 .or_default()
                 .push(h);
         }
@@ -579,17 +621,32 @@ impl Deployment {
         self.update_unit_at(idx, new_graph)
     }
 
-    /// **Dynamic update** (index form): replaces the logic of FlowUnit
-    /// `unit` with the corresponding operators of `new_graph`, without
-    /// stopping any other unit. Requirements (checked): every edge into
-    /// the unit is decoupled through the queue substrate, and `new_graph`
-    /// produces the same unit table and stage partitioning (so plans stay
-    /// aligned).
+    /// **Dynamic update** (index form): replaces FlowUnit `unit` with the
+    /// corresponding definition of `new_graph`, without stopping any other
+    /// unit, via the **epoch-based drain-and-handoff protocol**:
     ///
-    /// Consumers of the unit commit their queue offsets, drain held state
-    /// downstream, and exit; replacement instances resume from the
-    /// committed offsets with the new logic. Producers upstream keep
-    /// appending throughout — zero disruption outside the unit.
+    /// 1. the update epoch is bumped and the unit's per-zone stop flags
+    ///    are raised; queue-fed (entry) instances commit their offsets,
+    ///    snapshot stateful-operator state into the unit's state topic,
+    ///    forward an epoch marker down their direct internal channels, and
+    ///    exit **without** emitting EOS;
+    /// 2. instances fed by direct internal channels drain until every
+    ///    producer has delivered the marker, then snapshot, forward, and
+    ///    exit the same way — so multi-stage units with direct internal
+    ///    channels hot-swap without leaking a premature end-of-stream;
+    /// 3. replacement instances restore the snapshots (re-partitioned by
+    ///    key hash to mirror the input routing) and resume from the
+    ///    committed queue offsets.
+    ///
+    /// Downstream units observe a pause, never a lost or duplicated batch.
+    /// Producers upstream keep appending to the decoupling queues
+    /// throughout — zero disruption outside the unit.
+    ///
+    /// Requirements (checked): every FlowUnit-*boundary* edge touching the
+    /// unit is decoupled through the queue substrate, and `new_graph`
+    /// keeps the stage partitioning and unit names/layers. Changing the
+    /// unit's **constraint or replication** is allowed: placement is
+    /// re-run for the unit and its replicas are rolled zone by zone.
     pub fn update_unit_at(&mut self, unit: usize, new_graph: LogicalGraph) -> Result<()> {
         let old_stages = self.graph.stages();
         let new_stages = new_graph.stages();
@@ -608,21 +665,30 @@ impl Deployment {
                 )));
             }
         }
-        if self.graph.units.len() != new_graph.units.len()
-            || self.graph.units.iter().zip(&new_graph.units).any(|(a, b)| {
-                a.name != b.name
-                    || a.layer != b.layer
-                    || a.constraint != b.constraint
-                    || a.replication != b.replication
-            })
-        {
+        if self.graph.units.len() != new_graph.units.len() {
             return Err(Error::Runtime(
-                "update_unit: FlowUnit table changed (name/layer/constraint/replication); \
-                 updates replace logic only — placement-affecting changes need a redeploy"
+                "update_unit: FlowUnit table changed (unit count); structural changes \
+                 need a redeploy"
                     .into(),
             ));
         }
-        let unit_stages: std::collections::BTreeSet<usize> = self
+        for (i, (a, b)) in self.graph.units.iter().zip(&new_graph.units).enumerate() {
+            if a.name != b.name || a.layer != b.layer {
+                return Err(Error::Runtime(
+                    "update_unit: FlowUnit names/layers changed; renames and re-layering \
+                     need a redeploy"
+                        .into(),
+                ));
+            }
+            if i != unit && (a.constraint != b.constraint || a.replication != b.replication) {
+                return Err(Error::Runtime(format!(
+                    "update_unit: constraint/replication of unit '{}' changed, but only \
+                     unit {unit} is being updated — update one unit at a time",
+                    a.name
+                )));
+            }
+        }
+        let unit_stages: BTreeSet<usize> = self
             .plan
             .stages
             .iter()
@@ -649,46 +715,326 @@ impl Deployment {
         if !incoming.iter().any(|e| !unit_stages.contains(&e.from_stage)) {
             return Err(Error::Runtime("cannot update the source unit".into()));
         }
-        // Every edge into the unit — boundary AND internal — must be
-        // queue-decoupled: an inbox-fed stage inside the unit would exit
-        // through the normal sender-drop path during the swap and leak a
-        // premature EOS into downstream topics.
-        if incoming.iter().any(|e| !e.decoupled) {
+        // Boundary edges (in and out) must be queue-decoupled so the rest
+        // of the deployment is insulated from the swap. *Internal* direct
+        // channels are fine: the epoch marker protocol drains them.
+        if self.plan.edges.iter().any(|e| {
+            !e.decoupled
+                && (unit_stages.contains(&e.to_stage) != unit_stages.contains(&e.from_stage))
+        }) {
             return Err(Error::Runtime(
-                "update_unit requires every edge into the unit (including intra-unit stage \
-                 edges) to be decoupled (JobConfig::decouple_units); multi-stage units with \
-                 direct internal channels cannot be hot-swapped"
+                "update_unit requires every FlowUnit-boundary edge touching the unit to \
+                 be decoupled (JobConfig::decouple_units)"
                     .into(),
             ));
         }
-
-        // 1. stop the unit's consumers; they commit, drain, and exit
-        let stop = self
-            .unit_stops
-            .get(&unit)
-            .ok_or_else(|| Error::Runtime("unit has no queue consumers".into()))?
-            .clone();
-        stop.store(true, Ordering::SeqCst);
-        let handles = self.unit_threads.remove(&unit).unwrap_or_default();
-        for h in handles {
-            let _ = h.join();
+        if self.broker.is_none() {
+            return Err(Error::Runtime(
+                "update_unit requires the queue substrate (no decoupled edges exist)".into(),
+            ));
+        }
+        // Unreachable through Coordinator::deploy (the Renoir baseline
+        // never decouples, so the boundary check above already fired), but
+        // fail explicitly before any teardown: Renoir's all-to-all internal
+        // edges span zones, which the per-zone roll cannot respawn.
+        if self.plan.planner != PlannerKind::FlowUnits {
+            return Err(Error::Runtime(
+                "dynamic updates require the FlowUnits planner".into(),
+            ));
         }
 
-        // 2. swap the graph (same shape, new closures/artifacts)
+        // placement-affecting change (constraint/replication): re-run
+        // placement for the unit's stages and splice the new instances in
+        let placement_changed = {
+            let a = &self.graph.units[unit];
+            let b = &new_graph.units[unit];
+            a.constraint != b.constraint || a.replication != b.replication
+        };
+        if placement_changed {
+            self.replace_unit_placement(unit, &unit_stages, &new_graph)?;
+        }
+
+        // the epoch is bumped *before* any stop flag so quiescing
+        // instances stamp their snapshots and markers consistently
+        let epoch = self.update_epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        // this epoch's snapshots land at or after the current end of the
+        // state topic — remember it so restore scans skip older epochs'
+        // records instead of re-decoding the whole history every update
+        let scan_from = match &self.broker {
+            Some(broker) => broker.topic(&unit_state_topic(unit), 1)?.partition(0).len(),
+            None => 0,
+        };
+        let t0 = Instant::now();
+
+        // swap the graph (same shape; new closures/artifacts, possibly a
+        // re-scoped target unit)
         self.graph = new_graph;
 
-        // 3. relaunch the unit's instances with fresh stop flag
-        let fresh = Arc::new(AtomicBool::new(false));
-        self.unit_stops.insert(unit, fresh);
-        let insts: Vec<_> = self
+        // roll the unit zone by zone: quiesce, collect handed-off state,
+        // respawn with restores — replicas in other zones keep running
+        // until their turn
+        let mut zones: BTreeSet<String> = self
             .plan
             .instances
             .iter()
             .filter(|i| self.plan.stages[i.stage].unit_index == unit)
-            .cloned()
+            .map(|i| i.zone.clone())
             .collect();
-        self.spawn_set(&insts, false)?;
+        for key in self.unit_threads.keys() {
+            if key.0 == unit {
+                zones.insert(key.1.clone());
+            }
+        }
+        for zone in zones {
+            if let Some(stop) = self.unit_stops.get(&(unit, zone.clone())) {
+                stop.store(true, Ordering::SeqCst);
+            }
+            for h in self
+                .unit_threads
+                .remove(&(unit, zone.clone()))
+                .unwrap_or_default()
+            {
+                let _ = h.join();
+            }
+            let restores = self.collect_restores(unit, &zone, epoch, scan_from)?;
+            self.unit_stops
+                .insert((unit, zone.clone()), Arc::new(AtomicBool::new(false)));
+            let insts: Vec<_> = self
+                .plan
+                .instances
+                .iter()
+                .filter(|i| self.plan.stages[i.stage].unit_index == unit && i.zone == zone)
+                .cloned()
+                .collect();
+            self.spawn_set(&insts, false, &restores)?;
+        }
+        MetricsRegistry::add(
+            &self.metrics.update_pause_ms,
+            t0.elapsed().as_millis() as u64,
+        );
         Ok(())
+    }
+
+    /// Re-runs placement for one unit (constraint/replication changed) and
+    /// splices the new instances into the running plan, renumbering ids.
+    /// Decoupling-topic partition counts are fixed at creation, so entry
+    /// instances own partitions round-robin; downstream topics' expected
+    /// producer counts are adjusted by the instance-count delta.
+    fn replace_unit_placement(
+        &mut self,
+        unit: usize,
+        unit_stages: &BTreeSet<usize>,
+        new_graph: &LogicalGraph,
+    ) -> Result<()> {
+        let decouple = self.plan.edges.iter().any(|e| e.decoupled);
+        let new_plan = make_plan(
+            new_graph,
+            &self.cluster,
+            self.plan.planner,
+            &self.plan.locations,
+            decouple,
+        )?;
+        // Fail fast, before anything is stopped or mutated: every queue-fed
+        // stage of the unit must keep its zones within the topics created
+        // at launch, and within their fixed partition counts. (Constraint/
+        // replication changes cannot add zones — zones come from layer +
+        // locations — but an instance count above the partition count would
+        // leave partition-less instances that EOS immediately, and their
+        // EOS would double-count against the downstream expected totals on
+        // a later update.)
+        for stage in self.plan.stages.iter().filter(|s| {
+            unit_stages.contains(&s.index)
+                && self
+                    .plan
+                    .edges
+                    .iter()
+                    .any(|e| e.to_stage == s.index && e.decoupled)
+        }) {
+            let mut per_zone: BTreeMap<&str, usize> = BTreeMap::new();
+            for inst in new_plan.instances.iter().filter(|i| i.stage == stage.index) {
+                *per_zone.entry(inst.zone.as_str()).or_default() += 1;
+            }
+            for (zone, count) in per_zone {
+                let Some(tr) = self.topics.get(&(stage.index, zone.to_string())) else {
+                    return Err(Error::Placement(format!(
+                        "update_unit: new placement puts stage {} in zone {zone}, which \
+                         has no decoupling topic from launch — redeploy instead",
+                        stage.index
+                    )));
+                };
+                if count > tr.topic.partitions() {
+                    return Err(Error::Placement(format!(
+                        "update_unit: new placement needs {count} instances of stage {} \
+                         in zone {zone}, but its topic has only {} partitions (fixed at \
+                         launch) — scale-out beyond the launch partition count needs a \
+                         redeploy",
+                        stage.index,
+                        tr.topic.partitions()
+                    )));
+                }
+            }
+        }
+        let topo = self.cluster.topology.clone();
+        // producer-count deltas for topics the unit appends into
+        for edge in self
+            .plan
+            .edges
+            .iter()
+            .filter(|e| e.decoupled && unit_stages.contains(&e.from_stage))
+        {
+            let mut delta: BTreeMap<String, i64> = BTreeMap::new();
+            let to_layer = &self.plan.stages[edge.to_stage].layer;
+            for inst in self.plan.instances.iter().filter(|i| i.stage == edge.from_stage) {
+                if let Some(tz) = ancestor_at_layer(&topo, &inst.zone, to_layer) {
+                    *delta.entry(tz).or_default() -= 1;
+                }
+            }
+            for inst in new_plan.instances.iter().filter(|i| i.stage == edge.from_stage) {
+                if let Some(tz) = ancestor_at_layer(&topo, &inst.zone, to_layer) {
+                    *delta.entry(tz).or_default() += 1;
+                }
+            }
+            for (tz, d) in delta {
+                if d == 0 {
+                    continue;
+                }
+                if let Some(tr) = self.topics.get(&(edge.to_stage, tz)) {
+                    if d > 0 {
+                        for _ in 0..d {
+                            tr.topic.register_producer();
+                        }
+                        tr.expected_producers.fetch_add(d as usize, Ordering::SeqCst);
+                    } else {
+                        tr.expected_producers
+                            .fetch_sub((-d) as usize, Ordering::SeqCst);
+                    }
+                }
+            }
+        }
+        // splice: other units keep their instances (and relative order);
+        // the updated unit adopts the new placement
+        let mut instances = Vec::with_capacity(new_plan.instances.len());
+        for s in 0..self.plan.stages.len() {
+            if unit_stages.contains(&s) {
+                instances.extend(new_plan.instances.iter().filter(|i| i.stage == s).cloned());
+            } else {
+                instances.extend(self.plan.instances.iter().filter(|i| i.stage == s).cloned());
+            }
+        }
+        for (id, inst) in instances.iter_mut().enumerate() {
+            inst.id = id;
+        }
+        self.plan.instances = instances;
+        // adopt the re-scoped stage metadata (constraint/replication)
+        self.plan.stages = new_plan.stages;
+        Ok(())
+    }
+
+    /// Reads the unit's state topic and partitions the snapshot entries of
+    /// `zone` at `epoch` across the unit's (new) instances, mirroring the
+    /// key routing each stage's input applies: keys of a queue-fed stage
+    /// land on partition `hash % P` owned by instance `(hash % P) % n`;
+    /// keys of an inbox-fed stage come from a hash-routed port at
+    /// `hash % n`. Corrupt state records are skipped and counted.
+    ///
+    /// `scan_from`: state-topic offset recorded when the update began —
+    /// records before it belong to earlier epochs and are skipped without
+    /// decoding.
+    fn collect_restores(
+        &self,
+        unit: usize,
+        zone: &str,
+        epoch: u64,
+        scan_from: usize,
+    ) -> Result<HashMap<usize, Vec<Value>>> {
+        let broker = self
+            .broker
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("update without queue substrate".into()))?;
+        let topic = broker.topic(&unit_state_topic(unit), 1)?;
+        let part = topic.partition(0);
+        let mut out: HashMap<usize, Vec<Value>> = HashMap::new();
+        let n_records = part.len();
+        if n_records <= scan_from {
+            return Ok(out);
+        }
+        let records = match part.poll(scan_from, n_records - scan_from, Duration::ZERO) {
+            Some((recs, _)) => recs,
+            None => return Ok(out),
+        };
+        // stage → per-executor entry lists, merged across the zone's
+        // quiesced instances
+        let mut per_stage: BTreeMap<usize, Vec<Vec<Value>>> = BTreeMap::new();
+        for rec in records {
+            let v = match Value::decode_exact(&rec) {
+                Ok(v) => v,
+                Err(_) => {
+                    MetricsRegistry::add(&self.metrics.corrupt_records, 1);
+                    continue;
+                }
+            };
+            let Some((head, body)) = v.into_pair() else { continue };
+            let Some((stage_v, zone_v)) = head.into_pair() else { continue };
+            let Some((epoch_v, snaps_v)) = body.into_pair() else { continue };
+            let (Some(stage), Some(rec_zone), Some(rec_epoch)) =
+                (stage_v.as_i64(), zone_v.as_str(), epoch_v.as_i64())
+            else {
+                continue;
+            };
+            if rec_zone != zone || rec_epoch != epoch as i64 {
+                continue;
+            }
+            let Value::List(snaps) = snaps_v else { continue };
+            let slot = per_stage
+                .entry(stage as usize)
+                .or_insert_with(|| vec![Vec::new(); snaps.len()]);
+            if slot.len() < snaps.len() {
+                slot.resize(snaps.len(), Vec::new());
+            }
+            for (oi, snap) in snaps.into_iter().enumerate() {
+                if let Value::List(entries) = snap {
+                    slot[oi].extend(entries);
+                }
+            }
+        }
+        for (stage, op_entries) in per_stage {
+            let peers: Vec<usize> = self
+                .plan
+                .instances
+                .iter()
+                .filter(|i| i.stage == stage && i.zone == zone)
+                .map(|i| i.id)
+                .collect();
+            if peers.is_empty() {
+                // Defensive only: zones come from layer + locations, so a
+                // placement-affecting update cannot drop one (a constraint
+                // that empties a zone fails make_plan before any teardown).
+                continue;
+            }
+            let n = peers.len() as u64;
+            let qparts = self
+                .topics
+                .get(&(stage, zone.to_string()))
+                .map(|tr| tr.topic.partitions() as u64);
+            let n_ops = op_entries.len();
+            for (oi, entries) in op_entries.into_iter().enumerate() {
+                for e in entries {
+                    let h = crate::channels::route_hash(&e);
+                    let pos = match qparts {
+                        Some(p) if p > 0 => ((h % p) % n) as usize,
+                        _ => (h % n) as usize,
+                    };
+                    let slot = out
+                        .entry(peers[pos])
+                        .or_insert_with(|| vec![Value::Null; n_ops]);
+                    match &mut slot[oi] {
+                        Value::List(l) => l.push(e),
+                        s => *s = Value::List(vec![e]),
+                    }
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// **Dynamic update**: enables a new location while the job runs.
@@ -776,7 +1122,7 @@ impl Deployment {
             adopted.push(a);
         }
         self.plan.locations = locations;
-        self.spawn_set(&adopted, true)?;
+        self.spawn_set(&adopted, true, &HashMap::new())?;
         Ok(())
     }
 
@@ -810,6 +1156,7 @@ impl Deployment {
             net_bytes: m.net_bytes.load(Ordering::Relaxed),
             zone_crossings: m.zone_crossings.load(Ordering::Relaxed),
             wire_encodes: m.batch_encodes.load(Ordering::Relaxed),
+            corrupt_records: m.corrupt_records.load(Ordering::Relaxed),
             plan_description: self.plan.describe(&self.graph),
             metrics: self.metrics.clone(),
         })
@@ -836,6 +1183,11 @@ fn ingest_loop(topic: Arc<Topic>, partition: usize, rx: Receiver<Msg>, expected:
             Ok(Msg::Batch(batch)) => {
                 let _ = part.append_batch(&batch);
             }
+            Ok(Msg::Epoch(_)) => {
+                // a producer quiesced for a dynamic update; its replacement
+                // inherits the registration — downstream units observe a
+                // pause, not a marker and never a premature EOS
+            }
             Ok(Msg::Eos) => {
                 eos += 1;
                 if eos >= expected.load(Ordering::SeqCst) {
@@ -851,6 +1203,12 @@ fn ingest_loop(topic: Arc<Topic>, partition: usize, rx: Receiver<Msg>, expected:
             }
         }
     }
+}
+
+/// Name of the per-unit state topic that drain-and-handoff snapshots are
+/// exchanged through.
+fn unit_state_topic(unit: usize) -> String {
+    format!("fu-state-u{unit}")
 }
 
 /// First hop of the tree route from `za` toward `zb` (used to key shared

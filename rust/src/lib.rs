@@ -54,8 +54,11 @@
 //! ```
 //!
 //! A deployed job exposes its units by name for zero-downtime updates:
-//! `Deployment::update_unit("report", new_graph)` swaps one unit's logic
-//! while the rest keep running (see `examples/dynamic_update.rs`).
+//! `Deployment::update_unit("report", new_graph)` swaps one unit — even a
+//! stateful, multi-stage one with direct internal channels — while the
+//! rest keep running, using an epoch-based drain-and-handoff protocol
+//! that hands operator state to the replacement instances and loses and
+//! duplicates zero events (see `examples/dynamic_update.rs`).
 
 pub mod api;
 pub mod channels;

@@ -37,6 +37,15 @@ pub struct MetricsRegistry {
     pub xla_calls: AtomicU64,
     /// Rows (windows) scored through XLA.
     pub xla_rows: AtomicU64,
+    /// Corrupt queue records skipped by consumers (each one is a record
+    /// that failed to decode; the job keeps running instead of aborting).
+    pub corrupt_records: AtomicU64,
+    /// Epoch markers forwarded between instances during drain-and-handoff
+    /// dynamic updates.
+    pub epochs_forwarded: AtomicU64,
+    /// Milliseconds spent quiescing + respawning units across all dynamic
+    /// updates (the total update pause window).
+    pub update_pause_ms: AtomicU64,
     /// Labelled counters (per-link bytes, per-operator events, ...).
     labelled: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
 }
@@ -100,6 +109,15 @@ impl MetricsRegistry {
         let qr = self.queue_reads.load(Ordering::Relaxed);
         if qa + qr > 0 {
             s.push_str(&format!("queue app/read   : {qa} / {qr}\n"));
+        }
+        let cr = self.corrupt_records.load(Ordering::Relaxed);
+        if cr > 0 {
+            s.push_str(&format!("corrupt records  : {cr} (skipped)\n"));
+        }
+        let ef = self.epochs_forwarded.load(Ordering::Relaxed);
+        let up = self.update_pause_ms.load(Ordering::Relaxed);
+        if ef + up > 0 {
+            s.push_str(&format!("update epochs/ms : {ef} / {up}\n"));
         }
         let xc = self.xla_calls.load(Ordering::Relaxed);
         if xc > 0 {

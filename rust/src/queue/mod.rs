@@ -319,10 +319,14 @@ impl Partition {
                 return None;
             }
             let now = std::time::Instant::now();
-            if now >= deadline {
+            // saturating: a condvar wake-up (or a zero timeout) can land
+            // after the deadline, and `deadline - now` would panic on the
+            // Duration underflow
+            let remaining = deadline.saturating_duration_since(now);
+            if remaining.is_zero() {
                 return Some((Vec::new(), offset)); // timed out, still open
             }
-            let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            let (g, _) = self.cv.wait_timeout(st, remaining).unwrap();
             st = g;
         }
     }
@@ -469,6 +473,23 @@ mod tests {
         assert_eq!(recs.len(), 1);
         assert_eq!(next, 1);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn poll_with_zero_or_elapsed_timeout_never_panics() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 1).unwrap();
+        t.register_producer();
+        // zero timeout on an open, empty partition: immediate timed-out
+        // return (regression: the deadline math used to underflow)
+        let r = t.partition(0).poll(0, 10, Duration::ZERO);
+        assert!(matches!(r, Some((v, 0)) if v.is_empty()));
+        let r = t.partition(0).poll(0, 10, Duration::from_nanos(1));
+        assert!(matches!(r, Some((v, 0)) if v.is_empty()));
+        // with data present, a zero timeout still returns the records
+        t.append(0, b"x").unwrap();
+        let r = t.partition(0).poll(0, 10, Duration::ZERO).unwrap();
+        assert_eq!(r.0.len(), 1);
     }
 
     #[test]

@@ -62,6 +62,19 @@ pub trait OpExec: Send {
     fn process(&mut self, batch: Batch, out: &mut Vec<Value>);
     /// Drains state at end-of-stream.
     fn flush(&mut self, _out: &mut Vec<Value>) {}
+    /// Serialises held state for a drain-and-handoff dynamic update,
+    /// draining it from this (exiting) incarnation. The returned value is
+    /// a `Value::List` of `Pair(key, state)` entries — the coordinator
+    /// re-partitions entries by key hash across the replacement instances
+    /// before handing them to [`OpExec::restore`]. `None` ⇒ stateless (or
+    /// currently empty), nothing to hand off.
+    fn snapshot(&mut self) -> Option<Value> {
+        None
+    }
+    /// Restores state captured by [`OpExec::snapshot`] on a prior
+    /// incarnation; `state` is the `Value::List` of entries assigned to
+    /// this instance. Called before the first batch is processed.
+    fn restore(&mut self, _state: Value) {}
 }
 
 /// Feeds `batch` through a fused chain of executors. An empty chain
@@ -177,6 +190,33 @@ impl OpExec for FoldExec {
             out.push(Value::pair(key, acc));
         }
     }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.state.is_empty() {
+            return None;
+        }
+        let mut entries: Vec<(Vec<u8>, (Value, Value))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        Some(Value::List(
+            entries
+                .into_iter()
+                .map(|(_, (key, acc))| Value::pair(key, acc))
+                .collect(),
+        ))
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((key, acc)) = e.into_pair() else { continue };
+            // a key restored twice (two pre-swap partials merged onto one
+            // replacement) keeps the first accumulator: fold steps consume
+            // elements, so partial accumulators cannot be combined
+            keyed_entry(&mut self.state, &mut self.scratch, &key, |k| {
+                (k.clone(), acc.clone())
+            });
+        }
+    }
 }
 
 /// Keyed `reduce`: first-element initializer with an explicit empty
@@ -225,6 +265,39 @@ impl OpExec for ReduceExec {
             if let Some(acc) = acc {
                 out.push(Value::pair(key, acc));
             }
+        }
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.state.is_empty() {
+            return None;
+        }
+        let mut entries: Vec<(Vec<u8>, (Value, Option<Value>))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let list: Vec<Value> = entries
+            .into_iter()
+            .filter_map(|(_, (key, acc))| acc.map(|a| Value::pair(key, a)))
+            .collect();
+        if list.is_empty() {
+            None
+        } else {
+            Some(Value::List(list))
+        }
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((key, acc)) = e.into_pair() else { continue };
+            let entry = keyed_entry(&mut self.state, &mut self.scratch, &key, |k| {
+                (k.clone(), None)
+            });
+            // a key restored twice combines through the reduction itself —
+            // reduce partials are mergeable by definition
+            entry.1 = Some(match entry.1.take() {
+                None => acc,
+                Some(prev) => (self.f)(&prev, &acc),
+            });
         }
     }
 }
@@ -322,6 +395,38 @@ impl OpExec for WindowExec {
             }
         }
     }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.state.is_empty() {
+            return None;
+        }
+        let mut entries: Vec<(Vec<u8>, (Value, Vec<Value>))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let list: Vec<Value> = entries
+            .into_iter()
+            .filter(|(_, (_, buf))| !buf.is_empty())
+            .map(|(_, (key, buf))| Value::pair(key, Value::List(buf)))
+            .collect();
+        if list.is_empty() {
+            None
+        } else {
+            Some(Value::List(list))
+        }
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((key, buf)) = e.into_pair() else { continue };
+            let Value::List(buf) = buf else { continue };
+            let size = self.size;
+            let entry = keyed_entry(&mut self.state, &mut self.scratch, &key, |k| {
+                (k.clone(), Vec::with_capacity(size))
+            });
+            // a key restored twice concatenates its partial windows
+            entry.1.extend(buf);
+        }
+    }
 }
 
 /// Shared sink collector: `collect` sinks append here, `count` sinks only
@@ -403,28 +508,30 @@ impl XlaExec {
     }
 
     fn run_buffer(&mut self, out: &mut Vec<Value>) {
-        if self.keys.is_empty() {
-            return;
+        // chunked: a buffer restored from a dynamic-update handoff may
+        // hold more than one compiled batch worth of rows
+        while !self.keys.is_empty() {
+            let n = self.keys.len().min(self.batch);
+            let keys: Vec<Option<Value>> = self.keys.drain(..n).collect();
+            let mut rows: Vec<f32> = self.rows.drain(..n * self.in_dim).collect();
+            // zero-pad to the compiled batch size
+            rows.resize(self.batch * self.in_dim, 0.0);
+            let outputs = self
+                .artifact
+                .execute_f32(&rows, self.batch, self.in_dim)
+                .expect("xla execution failed on hot path");
+            MetricsRegistry::add(&self.metrics.xla_calls, 1);
+            MetricsRegistry::add(&self.metrics.xla_rows, n as u64);
+            let out_dim = outputs.len() / self.batch;
+            for (i, key) in keys.into_iter().enumerate() {
+                let row = outputs[i * out_dim..(i + 1) * out_dim].to_vec();
+                let payload = Value::F32s(row);
+                out.push(match key {
+                    Some(k) => Value::pair(k, payload),
+                    None => payload,
+                });
+            }
         }
-        let n = self.keys.len();
-        // zero-pad to the compiled batch size
-        self.rows.resize(self.batch * self.in_dim, 0.0);
-        let outputs = self
-            .artifact
-            .execute_f32(&self.rows, self.batch, self.in_dim)
-            .expect("xla execution failed on hot path");
-        MetricsRegistry::add(&self.metrics.xla_calls, 1);
-        MetricsRegistry::add(&self.metrics.xla_rows, n as u64);
-        let out_dim = outputs.len() / self.batch;
-        for (i, key) in std::mem::take(&mut self.keys).into_iter().enumerate() {
-            let row = outputs[i * out_dim..(i + 1) * out_dim].to_vec();
-            let payload = Value::F32s(row);
-            out.push(match key {
-                Some(k) => Value::pair(k, payload),
-                None => payload,
-            });
-        }
-        self.rows.clear();
     }
 }
 
@@ -456,6 +563,42 @@ impl OpExec for XlaExec {
 
     fn flush(&mut self, out: &mut Vec<Value>) {
         self.run_buffer(out);
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.keys.is_empty() {
+            return None;
+        }
+        let rows = std::mem::take(&mut self.rows);
+        let keys = std::mem::take(&mut self.keys);
+        let entries: Vec<Value> = keys
+            .into_iter()
+            .enumerate()
+            .map(|(i, key)| {
+                let row = rows[i * self.in_dim..(i + 1) * self.in_dim].to_vec();
+                // the optional key is wrapped in a list so a genuine
+                // Value::Null key stays distinguishable from "no key"
+                let key = Value::List(key.into_iter().collect());
+                Value::pair(key, Value::F32s(row))
+            })
+            .collect();
+        Some(Value::List(entries))
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((key, row)) = e.into_pair() else { continue };
+            let Value::F32s(row) = row else { continue };
+            if row.len() != self.in_dim {
+                continue;
+            }
+            self.rows.extend_from_slice(&row);
+            self.keys.push(match key {
+                Value::List(mut l) if !l.is_empty() => Some(l.remove(0)),
+                _ => None,
+            });
+        }
     }
 }
 
@@ -681,6 +824,110 @@ mod tests {
             2
         );
         assert_eq!(m.events_out.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn reduce_snapshot_restore_roundtrips_state() {
+        let sum = |a: &Value, b: &Value| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap());
+        let mut r1 = ReduceExec::new(Arc::new(sum));
+        let mut out = Vec::new();
+        r1.process(
+            vec![
+                Value::pair(Value::I64(1), Value::I64(10)),
+                Value::pair(Value::I64(2), Value::I64(20)),
+                Value::pair(Value::I64(1), Value::I64(5)),
+            ]
+            .into(),
+            &mut out,
+        );
+        let snap = r1.snapshot().expect("held state");
+        assert!(r1.snapshot().is_none(), "snapshot drains the incarnation");
+        let mut r2 = ReduceExec::new(Arc::new(sum));
+        r2.restore(snap);
+        let mut restored = Vec::new();
+        r2.flush(&mut restored);
+        restored.sort_by_key(|v| v.as_pair().unwrap().0.as_i64().unwrap());
+        assert_eq!(
+            restored,
+            vec![
+                Value::pair(Value::I64(1), Value::I64(15)),
+                Value::pair(Value::I64(2), Value::I64(20)),
+            ]
+        );
+    }
+
+    #[test]
+    fn reduce_restore_merges_duplicate_keys_through_the_reduction() {
+        let sum = |a: &Value, b: &Value| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap());
+        let mut r = ReduceExec::new(Arc::new(sum));
+        r.restore(Value::List(vec![
+            Value::pair(Value::I64(0), Value::I64(3)),
+            Value::pair(Value::I64(0), Value::I64(4)),
+        ]));
+        let mut out = Vec::new();
+        r.flush(&mut out);
+        assert_eq!(out, vec![Value::pair(Value::I64(0), Value::I64(7))]);
+    }
+
+    #[test]
+    fn window_snapshot_restore_preserves_partial_buffers() {
+        let mut w1 = WindowExec::new(4, 4, WindowAgg::Sum);
+        let mut out = Vec::new();
+        w1.process(
+            vec![
+                Value::pair(Value::I64(0), Value::F64(1.0)),
+                Value::pair(Value::I64(0), Value::F64(2.0)),
+            ]
+            .into(),
+            &mut out,
+        );
+        assert!(out.is_empty(), "window not full yet");
+        let snap = w1.snapshot().expect("partial buffer held");
+        let mut w2 = WindowExec::new(4, 4, WindowAgg::Sum);
+        w2.restore(snap);
+        // two more events complete the window across the handoff
+        w2.process(
+            vec![
+                Value::pair(Value::I64(0), Value::F64(3.0)),
+                Value::pair(Value::I64(0), Value::F64(4.0)),
+            ]
+            .into(),
+            &mut out,
+        );
+        assert_eq!(out, vec![Value::pair(Value::I64(0), Value::F64(10.0))]);
+    }
+
+    #[test]
+    fn fold_snapshot_restore_roundtrips_counts() {
+        let step = |acc: &mut Value, _v: Value| {
+            *acc = Value::I64(acc.as_i64().unwrap() + 1);
+        };
+        let mut f1 = FoldExec::new(Value::I64(0), Arc::new(step));
+        let mut out = Vec::new();
+        f1.process(
+            vec![Value::pair(Value::Str("a".into()), Value::Null); 3].into(),
+            &mut out,
+        );
+        let snap = f1.snapshot().expect("held state");
+        let mut f2 = FoldExec::new(Value::I64(0), Arc::new(step));
+        f2.restore(snap);
+        f2.process(
+            vec![Value::pair(Value::Str("a".into()), Value::Null); 2].into(),
+            &mut out,
+        );
+        f2.flush(&mut out);
+        assert_eq!(
+            out,
+            vec![Value::pair(Value::Str("a".into()), Value::I64(5))]
+        );
+    }
+
+    #[test]
+    fn stateless_ops_snapshot_nothing() {
+        let mut m = MapExec(Arc::new(|v| v));
+        assert!(m.snapshot().is_none());
+        let mut r = ReduceExec::new(Arc::new(|a: &Value, _: &Value| a.clone()));
+        assert!(r.snapshot().is_none(), "empty state snapshots as None");
     }
 
     #[test]

@@ -14,12 +14,12 @@ pub mod xla_exec;
 
 pub use exec::{flush_chain, run_chain, Collector, OpExec};
 
-use crate::channels::{FanOut, Inbox};
+use crate::channels::{FanOut, Inbox, InboxEvent};
 use crate::graph::SourceKind;
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::queue::Topic;
 use crate::value::{Batch, Value};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -41,20 +41,55 @@ pub enum InputKind {
     Source(SourceRuntime),
     /// Direct channel fed by upstream instances.
     Inbox(Inbox),
-    /// One partition of a decoupling queue topic (consumer-group member).
+    /// A share of a decoupling queue topic's partitions (consumer-group
+    /// member). Normally one partition per instance; after a
+    /// placement-affecting dynamic update the instance count may differ
+    /// from the partition count, so ownership is a round-robin assignment
+    /// (an instance may own several partitions, or none).
     Queue {
         /// Topic shared by the FlowUnit boundary.
         topic: Arc<Topic>,
-        /// Partition index owned by this instance.
-        partition: usize,
+        /// Partition indices owned by this instance.
+        partitions: Vec<usize>,
         /// Consumer group (one per downstream FlowUnit instance set).
         group: String,
         /// Poll timeout per iteration.
         poll_timeout: Duration,
         /// Cooperative stop flag — set during a dynamic update to make the
-        /// instance commit and exit *without* treating it as end-of-stream.
+        /// instance commit, quiesce, and exit *without* treating it as
+        /// end-of-stream.
         stop: Arc<AtomicBool>,
     },
+}
+
+/// Drain-and-handoff context of one instance: where to snapshot held state
+/// when quiescing for a dynamic update, and which epoch is in progress.
+pub struct Handoff {
+    /// Per-unit state topic (snapshots are appended as records keyed by
+    /// stage + zone + epoch; the coordinator reads them back to seed the
+    /// replacement instances).
+    pub state_topic: Arc<Topic>,
+    /// Stage this instance executes (snapshot record key).
+    pub stage: usize,
+    /// Zone this instance runs in (snapshot record key).
+    pub zone: String,
+    /// Deployment-wide update epoch, bumped by the coordinator *before*
+    /// stop flags are set / markers begin to flow.
+    pub epoch: Arc<AtomicU64>,
+}
+
+impl Handoff {
+    /// Appends this instance's per-operator snapshots to the state topic.
+    /// Record layout: `Pair(Pair(stage, zone), Pair(epoch, List(snaps)))`
+    /// with one entry (or `Null` for stateless operators) per executor in
+    /// the fused chain.
+    pub fn save(&self, epoch: u64, snaps: Vec<Value>) {
+        let rec = Value::pair(
+            Value::pair(Value::I64(self.stage as i64), Value::Str(self.zone.clone())),
+            Value::pair(Value::I64(epoch as i64), Value::List(snaps)),
+        );
+        let _ = self.state_topic.partition(0).append(&rec.encode());
+    }
 }
 
 /// Everything a stage-instance thread needs.
@@ -70,55 +105,116 @@ pub struct InstanceRuntime {
     pub outputs: FanOut,
     /// Job metrics.
     pub metrics: Metrics,
+    /// Drain-and-handoff context (`None` when the deployment has no queue
+    /// substrate, or for source instances — source units are not
+    /// hot-swappable).
+    pub handoff: Option<Handoff>,
+    /// Per-operator state to restore before the first batch (one entry per
+    /// executor, `Value::Null` = nothing; empty = fresh start).
+    pub restore: Vec<Value>,
 }
 
 /// Runs one stage instance to completion. Returns the number of input
 /// batches processed (diagnostics).
 pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
+    // restore handed-off state before the first batch
+    if !rt.restore.is_empty() {
+        let restore = std::mem::take(&mut rt.restore);
+        for (op, state) in rt.ops.iter_mut().zip(restore) {
+            if !matches!(state, Value::Null) {
+                op.restore(state);
+            }
+        }
+    }
     let mut batches = 0u64;
     match rt.input {
         InputKind::Source(src) => {
             run_source(src, &mut rt.ops, &mut rt.outputs, &rt.metrics);
         }
-        InputKind::Inbox(mut inbox) => {
-            while let Some(batch) = inbox.recv() {
-                batches += 1;
-                let out = run_chain(&mut rt.ops, batch);
-                route(&mut rt.outputs, out);
+        InputKind::Inbox(mut inbox) => loop {
+            match inbox.next() {
+                InboxEvent::Batch(batch) => {
+                    batches += 1;
+                    let out = run_chain(&mut rt.ops, batch);
+                    route(&mut rt.outputs, out);
+                }
+                InboxEvent::Eos => break,
+                InboxEvent::Epoch(epoch) => {
+                    // Dynamic update: every producer quiesced — snapshot
+                    // held state, forward the marker, exit without EOS.
+                    quiesce(&mut rt.ops, &mut rt.outputs, &rt.handoff, epoch);
+                    return batches;
+                }
             }
-        }
+        },
         InputKind::Queue {
             topic,
-            partition,
+            partitions,
             group,
             poll_timeout,
             stop,
         } => {
-            let part = topic.partition(partition);
-            let mut offset = part.committed(&group);
-            loop {
-                if stop.load(Ordering::Relaxed) {
-                    // Dynamic update: leave without flushing state — the
-                    // replacement instance resumes from the committed offset.
+            let mut offsets: Vec<usize> = partitions
+                .iter()
+                .map(|&p| topic.partition(p).committed(&group))
+                .collect();
+            let mut done = vec![false; partitions.len()];
+            // fair share of the poll budget across owned partitions (with
+            // a floor so many-partition consumers never busy-spin)
+            let per_poll =
+                (poll_timeout / partitions.len().max(1) as u32).max(Duration::from_millis(1));
+            while !done.iter().all(|&d| d) {
+                // Acquire pairs with the coordinator's store: the update
+                // epoch is bumped before the stop flag is raised, and the
+                // acquire edge makes that bump visible to the epoch load
+                // below (a relaxed load could legally stamp the snapshot
+                // with the previous epoch on weak-memory hardware).
+                if stop.load(Ordering::Acquire) {
+                    // Dynamic update: everything processed so far is
+                    // committed; snapshot state and quiesce — the
+                    // replacement resumes from the committed offsets.
+                    let epoch = rt
+                        .handoff
+                        .as_ref()
+                        .map(|h| h.epoch.load(Ordering::SeqCst))
+                        .unwrap_or(0);
+                    quiesce(&mut rt.ops, &mut rt.outputs, &rt.handoff, epoch);
                     return batches;
                 }
-                match part.poll(offset, 64, poll_timeout) {
-                    None => break, // closed + drained: end of stream
-                    Some((recs, next)) => {
-                        if recs.is_empty() {
-                            continue; // poll timeout, still open
+                for (k, &p) in partitions.iter().enumerate() {
+                    if done[k] {
+                        continue;
+                    }
+                    let part = topic.partition(p);
+                    match part.poll(offsets[k], 64, per_poll) {
+                        None => done[k] = true, // closed + drained
+                        Some((recs, next)) => {
+                            if recs.is_empty() {
+                                continue; // poll timeout, still open
+                            }
+                            // each queue record *is* one encoded batch;
+                            // decode it once, keeping the record bytes as
+                            // the wire cache (re-appending downstream
+                            // costs no encode). A corrupt record is
+                            // skipped and reported, never fatal.
+                            for r in recs {
+                                match Batch::from_wire(r) {
+                                    Ok(b) => {
+                                        batches += 1;
+                                        let out = run_chain(&mut rt.ops, b);
+                                        route(&mut rt.outputs, out);
+                                    }
+                                    Err(_) => {
+                                        MetricsRegistry::add(
+                                            &rt.metrics.corrupt_records,
+                                            1,
+                                        );
+                                    }
+                                }
+                            }
+                            offsets[k] = next;
+                            part.commit(&group, next);
                         }
-                        // each queue record *is* one encoded batch; decode
-                        // it once, keeping the record bytes as the wire
-                        // cache (re-appending downstream costs no encode)
-                        for r in recs {
-                            let b = Batch::from_wire(r).expect("corrupt queue record");
-                            batches += 1;
-                            let out = run_chain(&mut rt.ops, b);
-                            route(&mut rt.outputs, out);
-                        }
-                        offset = next;
-                        part.commit(&group, offset);
                     }
                 }
             }
@@ -129,6 +225,28 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
     route(&mut rt.outputs, tail.into());
     rt.outputs.eos();
     batches
+}
+
+/// Drain-and-handoff quiesce: snapshot each operator's held state into the
+/// unit's state topic, then forward the epoch marker downstream (after
+/// flushing any pending routed records). No EOS is emitted — downstream
+/// consumers observe a pause, never an end-of-stream.
+fn quiesce(
+    ops: &mut [Box<dyn OpExec>],
+    outputs: &mut FanOut,
+    handoff: &Option<Handoff>,
+    epoch: u64,
+) {
+    if let Some(h) = handoff {
+        let snaps: Vec<Value> = ops
+            .iter_mut()
+            .map(|op| op.snapshot().unwrap_or(Value::Null))
+            .collect();
+        if snaps.iter().any(|s| !matches!(s, Value::Null)) {
+            h.save(epoch, snaps);
+        }
+    }
+    outputs.epoch(epoch);
 }
 
 fn route(outputs: &mut FanOut, batch: Batch) {
@@ -270,6 +388,8 @@ mod tests {
             }),
             outputs: FanOut::single(port),
             metrics: metrics.clone(),
+            handoff: None,
+            restore: Vec::new(),
         };
         run_instance(rt);
         let mut inbox = Inbox::new(rx, 1);
@@ -316,6 +436,8 @@ mod tests {
                 }),
                 outputs: FanOut::single(port),
                 metrics: metrics.clone(),
+                handoff: None,
+                restore: Vec::new(),
             });
             let mut inbox = Inbox::new(rx, 1);
             while let Some(b) = inbox.recv() {
@@ -340,6 +462,8 @@ mod tests {
             input: InputKind::Inbox(Inbox::new(rx, 1)),
             outputs: FanOut::none(),
             metrics: metrics.clone(),
+            handoff: None,
+            restore: Vec::new(),
         });
         assert_eq!(collector.values.lock().unwrap().len(), 2);
         assert_eq!(metrics.events_out.load(Ordering::Relaxed), 2);
@@ -364,13 +488,15 @@ mod tests {
             ops,
             input: InputKind::Queue {
                 topic: topic.clone(),
-                partition: 0,
+                partitions: vec![0],
                 group: "g".into(),
                 poll_timeout: Duration::from_millis(20),
                 stop: Arc::new(AtomicBool::new(false)),
             },
             outputs: FanOut::none(),
             metrics,
+            handoff: None,
+            restore: Vec::new(),
         });
         assert_eq!(collector.values.lock().unwrap().len(), 2);
         assert_eq!(topic.partition(0).committed("g"), 2);
@@ -395,13 +521,15 @@ mod tests {
             ops,
             input: InputKind::Queue {
                 topic: topic.clone(),
-                partition: 0,
+                partitions: vec![0],
                 group: "g".into(),
                 poll_timeout: Duration::from_millis(20),
                 stop: Arc::new(AtomicBool::new(false)),
             },
             outputs: FanOut::none(),
             metrics,
+            handoff: None,
+            restore: Vec::new(),
         });
         let got: Vec<i64> = collector
             .values
@@ -411,6 +539,271 @@ mod tests {
             .map(|v| v.as_i64().unwrap())
             .collect();
         assert_eq!(got, vec![2, 3]);
+    }
+
+    #[test]
+    fn corrupt_queue_record_is_skipped_and_reported() {
+        let metrics = MetricsRegistry::new();
+        let broker = crate::queue::QueueBroker::in_memory(None);
+        let topic = broker.topic("t", 1).unwrap();
+        topic.register_producer();
+        topic
+            .append(0, &crate::value::encode_batch(&[Value::I64(1)]))
+            .unwrap();
+        topic.append(0, b"\xC8garbage-not-a-batch").unwrap();
+        topic
+            .append(0, &crate::value::encode_batch(&[Value::I64(2)]))
+            .unwrap();
+        topic.producer_done();
+        let (collector, ops) = collector_sink(&metrics);
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops,
+            input: InputKind::Queue {
+                topic: topic.clone(),
+                partitions: vec![0],
+                group: "g".into(),
+                poll_timeout: Duration::from_millis(20),
+                stop: Arc::new(AtomicBool::new(false)),
+            },
+            outputs: FanOut::none(),
+            metrics: metrics.clone(),
+            handoff: None,
+            restore: Vec::new(),
+        });
+        // both good records survive; the corrupt one is skipped, counted,
+        // and the offset still advances past it
+        let got: Vec<i64> = collector
+            .values
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, vec![1, 2]);
+        assert_eq!(metrics.corrupt_records.load(Ordering::Relaxed), 1);
+        assert_eq!(topic.partition(0).committed("g"), 3);
+    }
+
+    #[test]
+    fn queue_instance_quiesces_with_snapshot_on_stop() {
+        let metrics = MetricsRegistry::new();
+        let broker = crate::queue::QueueBroker::in_memory(None);
+        let topic = broker.topic("t", 1).unwrap();
+        let state = broker.topic("state", 1).unwrap();
+        topic.register_producer();
+        topic
+            .append(
+                0,
+                &crate::value::encode_batch(&[Value::pair(Value::I64(1), Value::I64(5))]),
+            )
+            .unwrap();
+        let sum: crate::graph::ReduceFn =
+            Arc::new(|a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()));
+        let ops: Vec<Box<dyn OpExec>> = vec![Box::new(exec::ReduceExec::new(sum))];
+        let stop = Arc::new(AtomicBool::new(false));
+        let epoch = Arc::new(AtomicU64::new(9));
+        let (tx, rx) = sync_channel(8);
+        let port = OutPort::new(
+            vec![Target {
+                tx,
+                link: None,
+                latency: Duration::ZERO,
+                crossing: false,
+            }],
+            Routing::RoundRobin,
+            16,
+            None,
+        );
+        let stop2 = stop.clone();
+        let h = std::thread::spawn({
+            let topic = topic.clone();
+            let state = state.clone();
+            let epoch = epoch.clone();
+            move || {
+                run_instance(InstanceRuntime {
+                    id: 3,
+                    ops,
+                    input: InputKind::Queue {
+                        topic,
+                        partitions: vec![0],
+                        group: "g".into(),
+                        poll_timeout: Duration::from_millis(5),
+                        stop: stop2,
+                    },
+                    outputs: FanOut::single(port),
+                    metrics: MetricsRegistry::new(),
+                    handoff: Some(Handoff {
+                        state_topic: state,
+                        stage: 2,
+                        zone: "C0".into(),
+                        epoch,
+                    }),
+                    restore: Vec::new(),
+                })
+            }
+        });
+        // give it time to consume the record, then signal the update
+        std::thread::sleep(Duration::from_millis(100));
+        stop.store(true, Ordering::SeqCst);
+        h.join().unwrap();
+        // downstream saw the epoch marker, not EOS, and no flushed state
+        let mut inbox = Inbox::new(rx, 1);
+        assert!(matches!(inbox.next(), InboxEvent::Epoch(9)));
+        // the reduce state landed in the state topic
+        assert_eq!(state.partition(0).len(), 1);
+        let (recs, _) = state
+            .partition(0)
+            .poll(0, 10, Duration::from_millis(10))
+            .unwrap();
+        let rec = Value::decode_exact(&recs[0]).unwrap();
+        let (head, body) = rec.as_pair().unwrap();
+        assert_eq!(head, &Value::pair(Value::I64(2), Value::Str("C0".into())));
+        let (ep, snaps) = body.as_pair().unwrap();
+        assert_eq!(ep.as_i64(), Some(9));
+        assert_eq!(
+            snaps.as_list().unwrap()[0],
+            Value::List(vec![Value::pair(Value::I64(1), Value::I64(5))])
+        );
+    }
+
+    #[test]
+    fn inbox_instance_quiesces_on_epoch_and_forwards_marker() {
+        let metrics = MetricsRegistry::new();
+        let (up_tx, up_rx) = sync_channel(8);
+        let (down_tx, down_rx) = sync_channel(8);
+        let port = OutPort::new(
+            vec![Target {
+                tx: down_tx,
+                link: None,
+                latency: Duration::ZERO,
+                crossing: false,
+            }],
+            Routing::RoundRobin,
+            16,
+            None,
+        );
+        up_tx
+            .send(Msg::Batch(vec![Value::I64(1)].into()))
+            .unwrap();
+        up_tx.send(Msg::Epoch(4)).unwrap();
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops: vec![],
+            input: InputKind::Inbox(Inbox::new(up_rx, 1)),
+            outputs: FanOut::single(port),
+            metrics,
+            handoff: None,
+            restore: Vec::new(),
+        });
+        let mut inbox = Inbox::new(down_rx, 1);
+        assert!(matches!(inbox.next(), InboxEvent::Batch(b) if b == vec![Value::I64(1)]));
+        assert!(
+            matches!(inbox.next(), InboxEvent::Epoch(4)),
+            "marker forwarded, no EOS emitted"
+        );
+    }
+
+    #[test]
+    fn queue_instance_with_no_partitions_ends_immediately() {
+        // placement updates can leave an instance with zero partitions —
+        // it must EOS cleanly, not hang
+        let metrics = MetricsRegistry::new();
+        let broker = crate::queue::QueueBroker::in_memory(None);
+        let topic = broker.topic("t", 1).unwrap();
+        let (collector, ops) = collector_sink(&metrics);
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops,
+            input: InputKind::Queue {
+                topic,
+                partitions: Vec::new(),
+                group: "g".into(),
+                poll_timeout: Duration::from_millis(5),
+                stop: Arc::new(AtomicBool::new(false)),
+            },
+            outputs: FanOut::none(),
+            metrics,
+            handoff: None,
+            restore: Vec::new(),
+        });
+        assert!(collector.values.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn queue_instance_consumes_multiple_owned_partitions() {
+        let metrics = MetricsRegistry::new();
+        let broker = crate::queue::QueueBroker::in_memory(None);
+        let topic = broker.topic("t", 3).unwrap();
+        topic.register_producer();
+        for p in 0..3u64 {
+            topic
+                .append(p, &crate::value::encode_batch(&[Value::I64(p as i64)]))
+                .unwrap();
+        }
+        topic.producer_done();
+        let (collector, ops) = collector_sink(&metrics);
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops,
+            input: InputKind::Queue {
+                topic: topic.clone(),
+                partitions: vec![0, 1, 2],
+                group: "g".into(),
+                poll_timeout: Duration::from_millis(20),
+                stop: Arc::new(AtomicBool::new(false)),
+            },
+            outputs: FanOut::none(),
+            metrics,
+            handoff: None,
+            restore: Vec::new(),
+        });
+        let mut got: Vec<i64> = collector
+            .values
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+        for p in 0..3 {
+            assert_eq!(topic.partition(p).committed("g"), 1, "partition {p}");
+        }
+    }
+
+    #[test]
+    fn restored_state_feeds_the_next_incarnation() {
+        let metrics = MetricsRegistry::new();
+        let (collector, mut ops) = collector_sink(&metrics);
+        let sum: crate::graph::ReduceFn =
+            Arc::new(|a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()));
+        let mut chain: Vec<Box<dyn OpExec>> = vec![Box::new(exec::ReduceExec::new(sum))];
+        chain.append(&mut ops);
+        let (tx, rx) = sync_channel(8);
+        tx.send(Msg::Batch(
+            vec![Value::pair(Value::I64(0), Value::I64(2))].into(),
+        ))
+        .unwrap();
+        tx.send(Msg::Eos).unwrap();
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops: chain,
+            input: InputKind::Inbox(Inbox::new(rx, 1)),
+            outputs: FanOut::none(),
+            metrics,
+            handoff: None,
+            restore: vec![
+                Value::List(vec![Value::pair(Value::I64(0), Value::I64(40))]),
+                Value::Null,
+            ],
+        });
+        let got = collector.values.lock().unwrap();
+        assert_eq!(
+            got.as_slice(),
+            &[Value::pair(Value::I64(0), Value::I64(42))],
+            "pre-handoff accumulator merged with post-handoff input"
+        );
     }
 
     #[test]
@@ -444,6 +837,8 @@ mod tests {
             }),
             outputs: FanOut::single(port),
             metrics,
+            handoff: None,
+            restore: Vec::new(),
         });
         let mut inbox = Inbox::new(rx, 1);
         assert!(inbox.recv().is_none(), "no data, just EOS");
@@ -476,6 +871,8 @@ mod tests {
             }),
             outputs: FanOut::single(port),
             metrics,
+            handoff: None,
+            restore: Vec::new(),
         });
         let mut inbox = Inbox::new(rx, 1);
         let mut got = Vec::new();
@@ -516,6 +913,8 @@ mod tests {
             }),
             outputs: FanOut::single(port),
             metrics,
+            handoff: None,
+            restore: Vec::new(),
         });
         let dt = t0.elapsed();
         assert!(dt >= Duration::from_millis(80), "ran in {dt:?}");

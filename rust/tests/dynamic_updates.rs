@@ -2,7 +2,7 @@
 //! FlowUnit's logic *by name* and adding a geographical location while the
 //! rest of the deployment keeps running, with queue-decoupled boundaries.
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext};
+use flowunits::api::{JobConfig, PlannerKind, Replication, Source, StreamContext, WindowAgg};
 use flowunits::config::{eval_cluster, fig2_cluster};
 use flowunits::coordinator::Coordinator;
 use flowunits::value::Value;
@@ -148,6 +148,218 @@ fn named_unit_hot_swap_in_multi_stream_dag() {
     assert!(v1 > 0, "detector v1 scored some events");
     assert!(v2 > 0, "detector v2 scored some events");
     assert!(!report.collected.is_empty());
+}
+
+/// Which stateful operator the hot-swapped unit holds.
+#[derive(Clone, Copy)]
+enum StatefulOp {
+    ReduceSum,
+    WindowCount(usize),
+}
+
+/// `source@edge → filter@edge ∥ "agg"@cloud: key_by → reduce/window →
+/// collect`. The stateful stage is fed by a **direct internal hash
+/// channel** from the key_by stage — exactly the shape `update_unit`
+/// rejected before the epoch drain-and-handoff protocol.
+fn stateful_graph(
+    total: u64,
+    rate: f64,
+    keys: i64,
+    op: StatefulOp,
+    batch_size: usize,
+    replication: Replication,
+) -> flowunits::graph::LogicalGraph {
+    let mut config = update_config();
+    config.batch_size = batch_size;
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config);
+    let keyed = ctx
+        .stream(Source::synthetic_rated(total, rate, |_, i| {
+            Value::I64(i as i64)
+        }))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() >= 0)
+        .unit("agg")
+        .to_layer("cloud")
+        .replicate(replication)
+        .key_by(move |v| Value::I64(v.as_i64().unwrap() % keys));
+    match op {
+        StatefulOp::ReduceSum => keyed
+            .reduce(|a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+            .collect_vec(),
+        StatefulOp::WindowCount(size) => keyed.window(size, WindowAgg::Count).collect_vec(),
+    }
+    ctx.into_graph().unwrap()
+}
+
+/// Runs `stateful_graph` to completion, optionally hot-swapping the
+/// stateful unit after `swap_after`; returns the sorted collected output
+/// and the final report.
+fn run_stateful(
+    total: u64,
+    rate: f64,
+    keys: i64,
+    op: StatefulOp,
+    batch_size: usize,
+    swap_after: Option<Duration>,
+    new_replication: Replication,
+) -> (Vec<(i64, i64)>, flowunits::coordinator::JobReport) {
+    let mut config = update_config();
+    config.batch_size = batch_size;
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), config);
+    let g = stateful_graph(total, rate, keys, op, batch_size, Replication::PerCore);
+    let mut dep = coord.deploy(&g).unwrap();
+    if let Some(delay) = swap_after {
+        std::thread::sleep(delay);
+        dep.update_unit(
+            "agg",
+            stateful_graph(total, rate, keys, op, batch_size, new_replication),
+        )
+        .unwrap();
+    }
+    let report = dep.wait().unwrap();
+    let mut got: Vec<(i64, i64)> = report
+        .collected
+        .iter()
+        .map(|v| {
+            let (k, x) = v.as_pair().unwrap();
+            (k.as_i64().unwrap(), x.as_i64().unwrap())
+        })
+        .collect();
+    got.sort_unstable();
+    (got, report)
+}
+
+#[test]
+fn stateful_unit_with_internal_channels_hot_swaps_exactly_once() {
+    // previously rejected: "agg" holds a direct internal hash channel
+    // (key_by stage → reduce stage) and keyed reduce state
+    let total = 40_000;
+    let (baseline, _) = run_stateful(
+        total,
+        10_000.0,
+        16,
+        StatefulOp::ReduceSum,
+        64,
+        None,
+        Replication::PerCore,
+    );
+    let (swapped, report) = run_stateful(
+        total,
+        10_000.0,
+        16,
+        StatefulOp::ReduceSum,
+        64,
+        Some(Duration::from_millis(300)),
+        Replication::PerCore,
+    );
+    assert_eq!(report.events_in, total, "every event was produced");
+    assert_eq!(
+        swapped, baseline,
+        "zero lost, zero duplicated: per-key sums match the no-swap run exactly"
+    );
+    assert!(
+        report
+            .metrics
+            .epochs_forwarded
+            .load(std::sync::atomic::Ordering::Relaxed)
+            > 0,
+        "the swap drained the internal channels through epoch markers"
+    );
+    assert_eq!(report.corrupt_records, 0);
+}
+
+#[test]
+fn placement_affecting_update_rolls_the_unit_and_keeps_results_exact() {
+    // the swap changes the unit's replication (PerCore → PerHost): the
+    // coordinator re-runs placement for the unit and rolls it, with the
+    // handed-off state re-partitioned across the smaller instance set
+    let total = 30_000;
+    let (baseline, _) = run_stateful(
+        total,
+        10_000.0,
+        8,
+        StatefulOp::ReduceSum,
+        64,
+        None,
+        Replication::PerCore,
+    );
+    let (swapped, report) = run_stateful(
+        total,
+        10_000.0,
+        8,
+        StatefulOp::ReduceSum,
+        64,
+        Some(Duration::from_millis(250)),
+        Replication::PerHost,
+    );
+    assert_eq!(
+        swapped, baseline,
+        "per-key sums survive the placement change exactly"
+    );
+    assert_eq!(report.events_in, total);
+}
+
+#[test]
+fn update_rejects_replication_change_on_other_units() {
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), update_config());
+    let g = stateful_graph(
+        50_000,
+        10_000.0,
+        4,
+        StatefulOp::ReduceSum,
+        64,
+        Replication::PerCore,
+    );
+    let mut dep = coord.deploy(&g).unwrap();
+    // re-scope the *edge* unit while updating "agg": must be rejected
+    let mut bad = stateful_graph(
+        50_000,
+        10_000.0,
+        4,
+        StatefulOp::ReduceSum,
+        64,
+        Replication::PerCore,
+    );
+    let edge_unit = bad.unit_named("edge").unwrap();
+    bad.units[edge_unit].replication = Replication::PerZone;
+    let err = dep.update_unit("agg", bad).unwrap_err();
+    assert!(err.to_string().contains("only"), "got {err}");
+    dep.stop_sources();
+    dep.wait().unwrap();
+}
+
+#[test]
+fn prop_hot_swap_under_load_loses_and_duplicates_nothing() {
+    // property: for random key counts, batch sizes, swap timings, and
+    // stateful operators, a hot swap under concurrent load produces
+    // *exactly* the output of a no-swap run — zero loss, zero duplication
+    flowunits::proptest::forall("hot swap is exactly-once", 3, |g| {
+        let keys = g.i64_in(1, 24);
+        let batch = [16, 64, 200][g.usize_in(0, 3)];
+        let swap_ms = g.usize_in(50, 400) as u64;
+        let op = if g.bool(0.5) {
+            StatefulOp::ReduceSum
+        } else {
+            StatefulOp::WindowCount(g.usize_in(2, 50))
+        };
+        let total = 24_000;
+        let (baseline, _) =
+            run_stateful(total, 8_000.0, keys, op, batch, None, Replication::PerCore);
+        let (swapped, report) = run_stateful(
+            total,
+            8_000.0,
+            keys,
+            op,
+            batch,
+            Some(Duration::from_millis(swap_ms)),
+            Replication::PerCore,
+        );
+        assert_eq!(report.events_in, total);
+        assert_eq!(
+            swapped, baseline,
+            "keys={keys} batch={batch} swap={swap_ms}ms: outputs diverged"
+        );
+    });
 }
 
 #[test]
