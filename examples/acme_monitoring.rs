@@ -1,5 +1,5 @@
 //! The paper's running example (Fig. 1/2): Acme's production-machine
-//! monitoring across the continuum.
+//! monitoring across the continuum, in the **typed API**.
 //!
 //! * **FP** — filtering/preprocessing at the **edge** server of each
 //!   machine;
@@ -10,6 +10,13 @@
 //!   JAX/Pallas artifact `anomaly_v1` executed through PJRT from the
 //!   streaming hot path (no Python at runtime).
 //!
+//! The pipeline carries native types end to end: readings are
+//! `(machine, reading)` tuples, `key_by(|r| r.0)` keys by machine,
+//! `map_values` strips to the raw reading, the window emits a typed
+//! [`Features`] row, and `xla_map` is only callable on feature-row
+//! streams — feeding the model anything else would not compile. No
+//! closure unwraps a `Value`.
+//!
 //! Requires `make artifacts`. This is the end-to-end driver recorded in
 //! EXPERIMENTS.md: it runs the full three-layer stack on a synthetic
 //! multi-site sensor workload and reports the anomaly rate + throughput.
@@ -18,15 +25,14 @@
 //! make artifacts && cargo run --release --example acme_monitoring
 //! ```
 
-use flowunits::api::{JobConfig, Source, StreamContext, WindowAgg};
 use flowunits::config::fig2_cluster;
-use flowunits::value::Value;
+use flowunits::prelude::*;
 
 const WINDOW: usize = 32;
 const FEATURES: usize = 5; // [mean, std, min, max, last]
 const XLA_BATCH: usize = 64; // compiled batch of anomaly_v1
 
-fn main() -> flowunits::error::Result<()> {
+fn main() -> Result<()> {
     if !std::path::Path::new("artifacts/anomaly_v1.hlo.txt").exists() {
         eprintln!("artifacts missing — run `make artifacts` first");
         std::process::exit(2);
@@ -48,61 +54,49 @@ fn main() -> flowunits::error::Result<()> {
 
     // Temperature-like readings tagged with their machine id: a slow
     // sinusoid + machine offset + rare spikes (the anomalies ML must catch).
-    ctx.stream(Source::synthetic(events, |machine, i| {
-        let t = i as f64 * 0.01;
-        let base = 50.0 + 2.0 * (t * 0.37).sin() + machine as f64;
-        let spike = if i.wrapping_mul(2_654_435_761) % 997 == 0 {
-            60.0
-        } else {
-            0.0
-        };
-        Value::pair(Value::I64(machine as i64), Value::F64(base + spike))
-    }))
-    // FP: drop sensor glitches before anything crosses the uplink
-    .unit("FP")
-    .to_layer("edge")
-    .filter(|v| {
-        let (_m, x) = v.as_pair().unwrap();
-        let x = x.as_f64().unwrap();
-        x.is_finite() && (-20.0..200.0).contains(&x)
-    })
-    // AD: per-machine windows -> [mean, std, min, max, last]
-    .unit("AD")
-    .to_layer("site")
-    .key_by(|v| v.as_pair().unwrap().0.clone())
-    .map(|keyed| {
-        // Pair(machine, Pair(machine, reading)) -> Pair(machine, reading)
-        let (k, mr) = keyed.into_pair().unwrap();
-        Value::pair(k, mr.into_pair().unwrap().1)
-    })
-    .window(WINDOW, WindowAgg::FeatureStats)
-    // ML: AOT-compiled JAX/Pallas anomaly scorer, gated on capability —
-    // the constraint scopes to the whole ML FlowUnit
-    .unit("ML")
-    .to_layer("cloud")
-    .add_constraint("xla = yes && n_cpu >= 4")
-    .xla_map("anomaly_v1", XLA_BATCH, FEATURES)
-    .map(|scored| {
-        // Pair(key, F32s[score]) -> Pair(key, F64(score))
-        let (k, s) = scored.into_pair().unwrap();
-        Value::pair(k, Value::F64(s.as_f32s().unwrap()[0] as f64))
-    })
-    .collect_vec();
+    let scores = ctx
+        .stream(Source::synthetic(events, |machine, i| {
+            let t = i as f64 * 0.01;
+            let base = 50.0 + 2.0 * (t * 0.37).sin() + machine as f64;
+            let spike = if i.wrapping_mul(2_654_435_761) % 997 == 0 {
+                60.0
+            } else {
+                0.0
+            };
+            (machine as i64, base + spike)
+        }))
+        // FP: drop sensor glitches before anything crosses the uplink
+        .unit("FP")
+        .to_layer("edge")
+        .filter(|r| r.1.is_finite() && (-20.0..200.0).contains(&r.1))
+        // AD: per-machine windows -> [mean, std, min, max, last]
+        .unit("AD")
+        .to_layer("site")
+        .key_by(|r| r.0)
+        .map_values(|r| r.1) // (machine, reading) value -> raw reading
+        .window::<Features>(WINDOW, WindowAgg::FeatureStats)
+        // ML: AOT-compiled JAX/Pallas anomaly scorer, gated on capability —
+        // the constraint scopes to the whole ML FlowUnit
+        .unit("ML")
+        .to_layer("cloud")
+        .add_constraint("xla = yes && n_cpu >= 4")
+        .xla_map("anomaly_v1", XLA_BATCH, FEATURES)
+        .map_values(|Features(row)| row[0] as f64)
+        .collect();
 
-    let report = ctx.execute()?;
+    let mut report = ctx.execute()?;
     println!("{}", report.render());
+
+    // redeem the typed handle: Vec<(machine, score)>, no unwraps
+    let collected: Vec<(i64, f64)> = report.take(scores)?;
 
     // self-calibrating detection: a window is anomalous when its score
     // deviates > 3σ from its *own machine group's* baseline
     let mut by_key: std::collections::BTreeMap<i64, Vec<f64>> = Default::default();
-    for v in &report.collected {
-        let (k, s) = v.as_pair().unwrap();
-        by_key
-            .entry(k.as_i64().unwrap())
-            .or_default()
-            .push(s.as_f64().unwrap());
+    for (k, s) in &collected {
+        by_key.entry(*k).or_default().push(*s);
     }
-    let windows = report.collected.len();
+    let windows = collected.len();
     let mut anomalies = 0usize;
     for (key, scores) in &by_key {
         let n = scores.len().max(1) as f64;

@@ -21,7 +21,7 @@
 //! make artifacts && cargo run --release --example dynamic_update
 //! ```
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::config::fig2_cluster;
 use flowunits::coordinator::Coordinator;
 use flowunits::value::Value;

@@ -18,7 +18,7 @@
 //! cargo run --release --example fig3_heatmap
 //! ```
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::config::eval_cluster;
 use flowunits::value::Value;
 use std::time::Duration;

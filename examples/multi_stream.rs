@@ -1,8 +1,14 @@
-//! Multi-stream DAG with first-class FlowUnits: two edge sources are
-//! `union`ed into a named "detector" unit in the cloud, whose output is
-//! `split` into an alerts sink and an archive sink. While the job runs,
-//! the detector FlowUnit is hot-swapped *by name* — sources and sinks
-//! keep flowing throughout (queue-decoupled unit boundaries).
+//! Multi-stream DAG with first-class FlowUnits, in the **typed API**:
+//! two edge sources of `i64` readings are `union`ed into a named
+//! "detector" unit in the cloud, whose output is `split` into an alerts
+//! sink and an archive sink. While the job runs, the detector FlowUnit
+//! is hot-swapped *by name* — sources and sinks keep flowing throughout
+//! (queue-decoupled unit boundaries).
+//!
+//! The typed layer carries through the whole DAG: `union` requires both
+//! fleets to produce the same element type, the alerts sink returns a
+//! `CollectHandle<i64>` redeemed with `report.take(..)`, and no closure
+//! touches `Value`.
 //!
 //! Needs no artifacts; runs out of the box:
 //!
@@ -10,10 +16,9 @@
 //! cargo run --release --example multi_stream
 //! ```
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext};
 use flowunits::config::eval_cluster;
 use flowunits::coordinator::Coordinator;
-use flowunits::value::Value;
+use flowunits::prelude::*;
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
@@ -28,19 +33,22 @@ fn config() -> JobConfig {
 }
 
 /// Two sensor fleets -> union -> detector(tag) -> split -> two sinks.
-/// `tag` marks which detector version scored each event.
-fn dag(tag: i64) -> flowunits::error::Result<flowunits::graph::LogicalGraph> {
+/// `tag` marks which detector version scored each event. Returns the
+/// lowered graph plus the alerts sink's typed collect handle — the
+/// final report accepts handles from the launch graph and from every
+/// `update_unit` replacement graph alike.
+fn dag(tag: i64) -> Result<(LogicalGraph, CollectHandle<i64>)> {
     let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config());
     let north = ctx
         .stream(Source::synthetic_rated(u64::MAX / 2, 4_000.0, |_, i| {
-            Value::I64(i as i64)
+            i as i64
         }))
         .unit("fleet-north")
         .to_layer("edge")
-        .filter(|v| v.as_i64().unwrap() % 2 == 0); // pre-filter at the edge
+        .filter(|v| v % 2 == 0); // pre-filter at the edge
     let south = ctx
         .stream(Source::synthetic_rated(u64::MAX / 2, 4_000.0, |_, i| {
-            Value::I64(i as i64)
+            i as i64
         }))
         .unit("fleet-south")
         .to_layer("edge");
@@ -48,17 +56,17 @@ fn dag(tag: i64) -> flowunits::error::Result<flowunits::graph::LogicalGraph> {
         .union(south)
         .unit("detector")
         .to_layer("cloud")
-        .map(move |v| Value::I64(v.as_i64().unwrap() * 10 + tag));
+        .map(move |v| v * 10 + tag);
     let (alerts, archive) = scored.split();
-    alerts
+    let alerts = alerts
         .unit("alerts")
-        .filter(|v| v.as_i64().unwrap() % 100 < 10) // "anomalies" only
-        .collect_vec();
+        .filter(|v| v % 100 < 10) // "anomalies" only
+        .collect();
     archive.unit("archive").collect_count();
-    ctx.into_graph()
+    Ok((ctx.into_graph()?, alerts))
 }
 
-fn main() -> flowunits::error::Result<()> {
+fn main() -> Result<()> {
     let phase = Duration::from_millis(
         std::env::var("PHASE_MS")
             .ok()
@@ -67,7 +75,8 @@ fn main() -> flowunits::error::Result<()> {
     );
 
     let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), config());
-    let mut dep = coord.deploy(&dag(1)?)?;
+    let (graph_v1, alerts) = dag(1)?;
+    let mut dep = coord.deploy(&graph_v1)?;
     let m = dep.metrics();
     println!("deployed units: {}", dep.unit_names().join(", "));
 
@@ -76,7 +85,8 @@ fn main() -> flowunits::error::Result<()> {
     println!("phase 1 : {in_v1} events in, detector v1 scoring");
 
     // hot-swap the detector by name; fleets and sinks never stop
-    dep.update_unit("detector", dag(2)?)?;
+    let (graph_v2, _alerts_v2) = dag(2)?;
+    dep.update_unit("detector", graph_v2)?;
     println!("update  : detector FlowUnit swapped to v2 (4 other units untouched)");
 
     std::thread::sleep(phase);
@@ -84,11 +94,12 @@ fn main() -> flowunits::error::Result<()> {
     assert!(in_v2 > in_v1, "sources kept producing through the swap");
 
     dep.stop_sources();
-    let report = dep.wait()?;
+    let mut report = dep.wait()?;
 
+    let collected: Vec<i64> = report.take(alerts)?;
     let (mut v1, mut v2) = (0u64, 0u64);
-    for v in &report.collected {
-        match v.as_i64().unwrap() % 10 {
+    for v in &collected {
+        match v % 10 {
             1 => v1 += 1,
             2 => v2 += 1,
             _ => unreachable!("unscored value leaked past the detector"),
@@ -97,7 +108,7 @@ fn main() -> flowunits::error::Result<()> {
     println!("\n{}", report.render());
     println!(
         "alerts collected: {} ({v1} scored by v1, {v2} by v2) | total archived+alerted: {}",
-        report.collected.len(),
+        collected.len(),
         report.events_out
     );
     println!("hot swap completed with zero producer downtime ✔");

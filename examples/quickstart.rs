@@ -1,18 +1,22 @@
-//! Quickstart: the classic word count, written once and deployed across
-//! the continuum with one named FlowUnit per segment. `unit(name)` opens
-//! a FlowUnit — the unit of placement, replication, and dynamic update —
-//! and `to_layer` pins it to a continuum layer.
+//! Quickstart: the classic word count, written against the **typed API**
+//! and deployed across the continuum with one named FlowUnit per segment.
+//! `unit(name)` opens a FlowUnit — the unit of placement, replication,
+//! and dynamic update — and `to_layer` pins it to a continuum layer.
+//!
+//! Every closure below works in native Rust types (`String`, `i64`); the
+//! engine's dynamic `Value` representation never appears, and the keyed
+//! fold is only reachable after `group_by` — `fold` before keying would
+//! not compile.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use flowunits::api::{JobConfig, Source, StreamContext};
 use flowunits::config::eval_cluster;
-use flowunits::value::Value;
+use flowunits::prelude::*;
 use std::time::Duration;
 
-fn main() -> flowunits::error::Result<()> {
+fn main() -> Result<()> {
     // The paper's evaluation cluster: 4 edge zones, one site DC, one cloud
     // VM — links here are healthy (1 Gbit / 5 ms).
     let cluster = eval_cluster(Some(1_000_000_000), Duration::from_millis(5));
@@ -25,39 +29,30 @@ fn main() -> flowunits::error::Result<()> {
         "dataflow moves data through compute",
         "flowunits moves dataflow to the continuum",
     ];
-    ctx.stream(Source::synthetic(300_000, move |_, i| {
-        Value::Str(phrases[(i % phrases.len() as u64) as usize].to_string())
-    }))
-    .unit("tokenize")
-    .to_layer("edge")
-    .flat_map(|line| {
-        line.as_str()
-            .unwrap()
-            .split(' ')
-            .map(|w| Value::Str(w.to_string()))
-            .collect()
-    })
-    .filter(|w| w.as_str().unwrap().len() > 3) // drop stop-words at the edge
-    .unit("count")
-    .to_layer("cloud")
-    .group_by(|w| w.clone())
-    .fold(Value::I64(0), |acc, _| {
-        *acc = Value::I64(acc.as_i64().unwrap() + 1)
-    })
-    .collect_vec();
+    let counts = ctx
+        .stream(Source::synthetic(300_000, move |_, i| {
+            phrases[(i % phrases.len() as u64) as usize].to_string()
+        }))
+        .unit("tokenize")
+        .to_layer("edge")
+        .flat_map(|line| {
+            line.split(' ')
+                .map(str::to_string)
+                .collect::<Vec<String>>()
+        })
+        .filter(|w| w.len() > 3) // drop stop-words at the edge
+        .unit("count")
+        .to_layer("cloud")
+        .group_by(|w| w.clone())
+        .fold(0i64, |acc, _| *acc += 1)
+        .collect();
 
-    let report = ctx.execute()?;
+    let mut report = ctx.execute()?;
     println!("{}", report.render());
 
-    let mut counts: Vec<(String, i64)> = report
-        .collected
-        .iter()
-        .map(|v| {
-            let (w, c) = v.as_pair().unwrap();
-            (w.as_str().unwrap().to_string(), c.as_i64().unwrap())
-        })
-        .collect();
-    counts.sort_by_key(|(_, c)| -c);
+    // redeem the typed collect handle: Vec<(word, count)>, no unwraps
+    let mut counts: Vec<(String, i64)> = report.take(counts)?;
+    counts.sort_by_key(|&(_, c)| -c);
     println!("top words:");
     for (w, c) in counts.iter().take(8) {
         println!("  {w:<12} {c}");

@@ -10,7 +10,7 @@
 //! * **A4** intra-host hot-loop throughput (stateless fused chain) — the
 //!   baseline for the §Perf targets.
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::config::{eval_cluster, fig2_cluster};
 use flowunits::value::Value;
 use std::time::Duration;

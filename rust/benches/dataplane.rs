@@ -16,7 +16,7 @@
 //! across PRs. `DATAPLANE_EVENTS` scales the workload; CI runs a small
 //! smoke value so regressions in the bench itself fail fast.
 
-use flowunits::api::{JobConfig, JobReport, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, JobReport, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::config::eval_cluster;
 use flowunits::value::Value;
 use std::io::Write;

@@ -8,7 +8,7 @@
 //! used 10M on a 16-core workstation). Each cell runs `FIG3_REPS` times
 //! (default 3) and reports the median.
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::config::eval_cluster;
 use flowunits::value::Value;
 use std::time::Duration;

@@ -19,7 +19,7 @@
 //! `UPDATE_EVENTS`, `UPDATE_RATE`, and `UPDATE_SWAP_MS` scale the workload;
 //! CI runs a small smoke configuration.
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::config::eval_cluster;
 use flowunits::value::Value;
 use std::io::Write;

@@ -1,0 +1,107 @@
+//! Typed data-plane support: the [`StreamData`] bridge re-export, the
+//! [`Features`] feature-row newtype, and the runtime decode-failure
+//! accumulator behind the typed layer's no-panic guarantee.
+
+pub use crate::value::{decode_mismatch, StreamData};
+
+use crate::error::{Error, Result};
+use crate::value::Value;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A dense `f32` feature row, mapped onto [`Value::F32s`] — the shape
+/// produced by `WindowAgg::FeatureStats` and consumed (and re-emitted) by
+/// the XLA inference operator.
+///
+/// `Vec<f32>` itself cannot implement [`StreamData`] (it would overlap
+/// with the generic `Vec<T>` → `List` mapping), so feature rows travel
+/// under this newtype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Features(pub Vec<f32>);
+
+impl StreamData for Features {
+    fn into_value(self) -> Value {
+        Value::F32s(self.0)
+    }
+    fn try_from_value(v: Value) -> Result<Features> {
+        match v {
+            Value::F32s(x) => Ok(Features(x)),
+            other => Err(decode_mismatch::<Features>(&other)),
+        }
+    }
+}
+
+/// Shared accumulator for typed-layer decode failures at runtime.
+///
+/// Typed operator shims never panic on a value that fails to decode as
+/// the expected native type (possible when `api::raw` escape hatches are
+/// mixed in): the event is suppressed, the failure is recorded here, and
+/// [`StreamContext::execute`](crate::api::raw::StreamContext::execute)
+/// surfaces the first failure as
+/// [`Error::Decode`](crate::error::Error::Decode) once the run completes.
+/// For deployed jobs, poll
+/// [`StreamContext::decode_failures`](crate::api::raw::StreamContext::decode_failures).
+#[derive(Debug, Default)]
+pub struct DecodeErrors {
+    first: Mutex<Option<String>>,
+    count: AtomicU64,
+}
+
+impl DecodeErrors {
+    /// Records one failed decode (`op` names the operator shim).
+    pub fn record(&self, op: &str, err: &Error) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut slot = self.first.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(format!("{op}: {err}"));
+        }
+    }
+
+    /// Number of events that failed to decode so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// `Err(Error::Decode)` if any event failed to decode.
+    pub fn check(&self) -> Result<()> {
+        let n = self.count();
+        if n == 0 {
+            return Ok(());
+        }
+        let first = self
+            .first
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(|| "unknown".into());
+        Err(Error::Decode(format!(
+            "{n} event(s) failed a typed decode; first failure at {first}"
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn features_roundtrip_and_mismatch() {
+        let f = Features(vec![1.0, -2.5]);
+        let v = f.clone().into_value();
+        assert_eq!(Features::try_from_value(v).unwrap(), f);
+        assert!(Features::try_from_value(Value::I64(1)).is_err());
+    }
+
+    #[test]
+    fn decode_errors_keep_first_and_count_all() {
+        let d = DecodeErrors::default();
+        assert!(d.check().is_ok());
+        d.record("map", &Error::Decode("expected i64, got Value::Bool".into()));
+        d.record("filter", &Error::Decode("expected i64, got Value::Str".into()));
+        assert_eq!(d.count(), 2);
+        let err = d.check().unwrap_err();
+        assert!(matches!(err, Error::Decode(_)));
+        assert!(err.to_string().contains("2 event(s)"), "got {err}");
+        assert!(err.to_string().contains("map"), "first failure kept: {err}");
+    }
+}

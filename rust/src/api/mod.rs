@@ -1,41 +1,25 @@
-//! The user-facing stream API — an owned, DAG-capable builder with
-//! first-class **FlowUnits** (paper §III/§IV).
+//! The user-facing stream API, in two layers sharing one builder:
 //!
-//! A [`StreamContext`] owns the cluster description, the job
-//! configuration, and the logical graph under construction. Each
-//! [`StreamContext::stream`] call opens a new source; streams are *owned*
-//! handles (no borrow ties the builder down), so several streams can be
-//! built side by side, merged with [`Stream::union`], and forked with
-//! [`Stream::split`] into multiple sinks — one job, one DAG.
+//! * [`typed`] — the **typed front-end**: [`Stream<T>`] and
+//!   [`KeyedStream<K, V>`] carry native Rust element types
+//!   ([`StreamData`]), operator closures never see the engine's dynamic
+//!   [`Value`](crate::value::Value), and keyed-only operators
+//!   (`fold`/`reduce`/`window`) are *unreachable* on unkeyed streams —
+//!   illegal operator orderings are compile errors, not runtime
+//!   surprises. Typed sinks return a [`CollectHandle<T>`] redeemed
+//!   against the [`JobReport`].
+//! * [`raw`] — the **stable untyped substrate** the typed layer compiles
+//!   down to: closures over `Value`, `collect_vec` into
+//!   `JobReport::collected`, and the graph-construction surface used by
+//!   [`Deployment::update_unit`](crate::coordinator::Deployment::update_unit).
 //!
-//! Every operator belongs to a **FlowUnit**, the unit of placement,
-//! replication, and dynamic update. [`Stream::unit`] opens (or names) a
-//! unit; [`Stream::to_layer`], [`Stream::add_constraint`], and
-//! [`Stream::replicate`] configure the *current unit's* scope — layer,
-//! capability requirements, and in-zone replication — rather than
-//! annotating individual operators. Bare `to_layer` remains as sugar: it
-//! opens an anonymous, layer-named unit exactly like earlier versions of
-//! this API.
-//!
-//! Construction is **fallible but never panics**: malformed constraint
-//! expressions, duplicate unit names, cross-context unions, and invalid
-//! graph shapes are recorded in the builder and surfaced as
-//! [`Error::Graph`](crate::error::Error::Graph) from
-//! [`StreamContext::execute`] / [`StreamContext::deploy`].
-//!
-//! The data plane underneath is zero-copy: batches travel as
-//! refcounted [`Batch`](crate::value::Batch) handles, `split` fan-out
-//! and broadcast duplication share one payload allocation per batch,
-//! and a batch crossing several host/zone boundaries is wire-encoded at
-//! most once ([`JobReport::wire_encodes`] reports how many encodes a job
-//! actually paid; see README *Architecture: the data plane*).
-//!
-//! A deployed job is dynamically updatable by unit name:
-//! [`Deployment::update_unit`](crate::coordinator::Deployment::update_unit)
-//! hot-swaps one FlowUnit — stateful, multi-stage, or re-scoped
-//! (constraint/replication) — through an epoch-based drain-and-handoff
-//! protocol that loses and duplicates zero events (see README *Dynamic
-//! updates*).
+//! Both layers drive the same [`StreamContext`]: it owns the cluster
+//! description, the job configuration, and the logical DAG under
+//! construction, and [`StreamContext::stream`](raw::StreamContext::stream)
+//! opens a raw or typed stream depending on the [`Source`] handed to it
+//! (the [`OpenStream`] dispatch trait). Everything downstream —
+//! channels, planners, the zero-copy batch data plane, dynamic updates —
+//! is shared and untouched by the choice of layer.
 //!
 //! ```no_run
 //! use flowunits::prelude::*;
@@ -43,887 +27,43 @@
 //! let cluster = flowunits::config::fig2_cluster();
 //! let mut ctx = StreamContext::new(cluster, JobConfig::default());
 //!
-//! // two independent edge sources, each its own named FlowUnit
-//! let north = ctx
-//!     .stream(Source::synthetic(500_000, |_, i| Value::F64((i % 100) as f64)))
-//!     .unit("ingest-north")
+//! // typed pipeline: closures take i64, not Value
+//! let windows = ctx
+//!     .stream(Source::synthetic(500_000, |_, i| i as i64))
+//!     .unit("ingest")
 //!     .to_layer("edge")
-//!     .filter(|v| v.as_f64().unwrap() > 33.0);
-//! let south = ctx
-//!     .stream(Source::synthetic(500_000, |_, i| Value::F64((i % 90) as f64)))
-//!     .unit("ingest-south")
-//!     .to_layer("edge");
-//!
-//! // merge, process in a constrained cloud unit, then fork to two sinks
-//! let scored = north
-//!     .union(south)
-//!     .unit("detector")
+//!     .filter(|v| v % 3 == 0)
+//!     .unit("detect")
 //!     .to_layer("cloud")
-//!     .add_constraint("n_cpu >= 4")
-//!     .key_by(|v| Value::I64(v.as_f64().unwrap() as i64 % 8))
-//!     .window(100, WindowAgg::Mean);
-//! let (alerts, archive) = scored.split();
-//! alerts
-//!     .unit("alerts")
-//!     .filter(|v| v.as_pair().unwrap().1.as_f64().unwrap() > 60.0)
-//!     .collect_vec();
-//! archive.unit("archive").collect_count();
+//!     .key_by(|v| v % 8)
+//!     .window::<i64>(100, WindowAgg::Count)
+//!     .collect();
 //!
-//! let report = ctx.execute().unwrap();
-//! println!("{} events out", report.events_out);
+//! let mut report = ctx.execute().unwrap();
+//! let counts: Vec<(i64, i64)> = report.take(windows).unwrap();
+//! println!("{} windows", counts.len());
 //! ```
 
-pub use crate::coordinator::{JobConfig, JobReport};
+pub mod data;
+pub mod raw;
+pub mod typed;
+
+pub use crate::coordinator::{CollectHandle, JobConfig, JobReport};
 pub use crate::graph::{Replication, WindowAgg};
 pub use crate::placement::PlannerKind;
+pub use data::{DecodeErrors, Features};
+pub use raw::StreamContext;
+pub use typed::{KeyedStream, Source, Stream};
 
-use crate::config::ClusterSpec;
-use crate::coordinator::{Coordinator, Deployment};
-use crate::error::{Error, Result};
-use crate::graph::{LogicalGraph, OpKind, SinkKind, SourceKind, UnitId};
-use crate::topology::ConstraintExpr;
-use crate::value::Value;
-use std::cell::RefCell;
-use std::rc::Rc;
-use std::sync::Arc;
+/// Re-export of the native-type bridge behind the typed layer.
+pub use crate::value::StreamData;
 
-/// Source builder.
-pub struct Source(SourceKind);
-
-impl Source {
-    /// Synthetic generator: `total` events split across source instances,
-    /// each produced by `gen(instance_index, event_index)`.
-    pub fn synthetic(
-        total: u64,
-        gen: impl Fn(u64, u64) -> Value + Send + Sync + 'static,
-    ) -> Source {
-        Source(SourceKind::Synthetic {
-            total,
-            gen: Arc::new(gen),
-            rate: None,
-        })
-    }
-
-    /// Rate-limited synthetic generator (events/second per instance);
-    /// pair with [`Deployment::stop_sources`] for unbounded streams.
-    pub fn synthetic_rated(
-        total: u64,
-        rate: f64,
-        gen: impl Fn(u64, u64) -> Value + Send + Sync + 'static,
-    ) -> Source {
-        Source(SourceKind::Synthetic {
-            total,
-            gen: Arc::new(gen),
-            rate: Some(rate),
-        })
-    }
-
-    /// A pre-materialised vector.
-    pub fn vector(values: Vec<Value>) -> Source {
-        Source(SourceKind::Vector(Arc::new(values)))
-    }
-
-    /// Lines of a text file as `Value::Str`.
-    pub fn file_lines(path: impl Into<std::path::PathBuf>) -> Source {
-        Source(SourceKind::FileLines(path.into()))
-    }
-}
-
-/// Shared builder state behind every [`Stream`] handle of one context.
-struct BuilderState {
-    graph: LogicalGraph,
-    /// Deferred construction errors, surfaced from `execute`/`deploy`.
-    errors: Vec<String>,
-    /// Cluster layer order (periphery → centre), for layer defaults.
-    layers: Vec<String>,
-}
-
-impl BuilderState {
-    fn innermost_layer(&self) -> String {
-        self.layers.last().cloned().unwrap_or_else(|| "cloud".into())
-    }
-
-    fn layer_pos(&self, layer: &str) -> usize {
-        self.layers.iter().position(|l| l == layer).unwrap_or(0)
-    }
-}
-
-/// Builder context owning the cluster description, job configuration, and
-/// the logical DAG under construction.
-pub struct StreamContext {
-    cluster: ClusterSpec,
-    config: JobConfig,
-    state: Rc<RefCell<BuilderState>>,
-}
-
-impl StreamContext {
-    /// Creates a context. Until re-scoped with [`Stream::to_layer`] or
-    /// [`Stream::unit`], new streams start in an anonymous unit on the
-    /// innermost layer (the cloud).
-    pub fn new(cluster: ClusterSpec, config: JobConfig) -> Self {
-        let layers = cluster.topology.layers.clone();
-        StreamContext {
-            cluster,
-            config,
-            state: Rc::new(RefCell::new(BuilderState {
-                graph: LogicalGraph::default(),
-                errors: Vec::new(),
-                layers,
-            })),
-        }
-    }
-
-    /// Opens a stream from `source` in a fresh FlowUnit. May be called
-    /// multiple times: all streams belong to the same job DAG.
-    pub fn stream(&mut self, source: Source) -> Stream {
-        let (head, unit) = {
-            let mut st = self.state.borrow_mut();
-            let layer = st.innermost_layer();
-            let unit = st
-                .graph
-                .add_unit(None, layer, None, Replication::PerCore);
-            let head = st
-                .graph
-                .add_op(OpKind::Source(source.0), unit, Vec::new(), "source");
-            (head, unit)
-        };
-        Stream {
-            state: self.state.clone(),
-            head,
-            unit,
-            forked: false,
-        }
-    }
-
-    /// Returns the built graph, surfacing any deferred builder errors.
-    fn build_graph(&self) -> Result<LogicalGraph> {
-        let st = self.state.borrow();
-        if !st.errors.is_empty() {
-            return Err(Error::Graph(st.errors.join("; ")));
-        }
-        if st.graph.ops.is_empty() {
-            return Err(Error::Graph("no stream defined".into()));
-        }
-        Ok(st.graph.clone())
-    }
-
-    /// Executes the built job to completion.
-    pub fn execute(&mut self) -> Result<JobReport> {
-        let graph = self.build_graph()?;
-        Coordinator::new(self.cluster.clone(), self.config.clone()).run(&graph)
-    }
-
-    /// Deploys the built job and returns the live handle (for dynamic
-    /// updates / unbounded sources).
-    pub fn deploy(&mut self) -> Result<Deployment> {
-        let graph = self.build_graph()?;
-        Coordinator::new(self.cluster.clone(), self.config.clone()).deploy(&graph)
-    }
-
-    /// Consumes the context, returning the logical graph (for planning
-    /// inspection or [`Coordinator`] reuse).
-    pub fn into_graph(self) -> Result<LogicalGraph> {
-        self.build_graph()
-    }
-}
-
-/// An owned handle onto one path through the DAG under construction.
-/// Operator methods append to the handle's current FlowUnit;
-/// [`Stream::unit`]/[`Stream::to_layer`] re-scope it. Handles from the
-/// same context can be merged ([`Stream::union`]) and forked
-/// ([`Stream::split`]).
-pub struct Stream {
-    state: Rc<RefCell<BuilderState>>,
-    head: crate::graph::OpId,
-    unit: UnitId,
-    /// True for handles produced by [`Stream::split`]: their current unit
-    /// is shared with the sibling branch, so `unit`/`to_layer` must open a
-    /// new unit instead of renaming/re-layering the shared one in place.
-    forked: bool,
-}
-
-impl Stream {
-    fn push(self, kind: OpKind, name: &str) -> Self {
-        let head = {
-            let mut st = self.state.borrow_mut();
-            let (unit, input) = (self.unit, self.head);
-            st.graph.add_op(kind, unit, vec![input], name)
-        };
-        Stream { head, ..self }
-    }
-
-    fn terminal(self, kind: SinkKind, name: &str) {
-        let mut st = self.state.borrow_mut();
-        let (unit, input) = (self.unit, self.head);
-        st.graph.add_op(OpKind::Sink(kind), unit, vec![input], name);
-    }
-
-    /// Opens (or names) a FlowUnit. If the current unit holds no
-    /// processing operator yet (it is "fresh": just a source or a union),
-    /// it is renamed in place — so `stream(..).unit("ingest")` names the
-    /// source's unit. Otherwise a new unit is opened at the current layer
-    /// and subsequent operators belong to it. Duplicate names are
-    /// recorded as builder errors.
-    pub fn unit(self, name: &str) -> Self {
-        let unit = {
-            let mut st = self.state.borrow_mut();
-            let fresh = !self.forked && st.graph.unit_is_fresh(self.unit);
-            let clash = st
-                .graph
-                .units
-                .iter()
-                .any(|u| u.name == name && (!fresh || u.index != self.unit));
-            if clash {
-                st.errors.push(format!("duplicate FlowUnit name '{name}'"));
-            }
-            if fresh {
-                let u = &mut st.graph.units[self.unit];
-                u.name = name.to_string();
-                u.auto = false;
-                self.unit
-            } else {
-                let layer = st.graph.units[self.unit].layer.clone();
-                st.graph
-                    .add_unit(Some(name), layer, None, Replication::PerCore)
-            }
-        };
-        Stream {
-            unit,
-            forked: false,
-            ..self
-        }
-    }
-
-    /// Moves the remainder of this stream to `layer` — the FlowUnits
-    /// locality annotation. A fresh unit (one holding only its source or
-    /// union so far) is re-layered in place, which is how the source
-    /// itself is placed on its layer; otherwise this is sugar for opening
-    /// a new anonymous unit on `layer`.
-    pub fn to_layer(self, layer: &str) -> Self {
-        let (unit, forked) = {
-            let mut st = self.state.borrow_mut();
-            if st.graph.units[self.unit].layer == layer {
-                (self.unit, self.forked)
-            } else if !self.forked && st.graph.unit_is_fresh(self.unit) {
-                let fresh_name = if st.graph.units[self.unit].auto {
-                    Some(st.graph.auto_unit_name(layer, Some(self.unit)))
-                } else {
-                    None
-                };
-                let u = &mut st.graph.units[self.unit];
-                u.layer = layer.to_string();
-                if let Some(n) = fresh_name {
-                    u.name = n;
-                }
-                (self.unit, false)
-            } else {
-                (
-                    st.graph
-                        .add_unit(None, layer.into(), None, Replication::PerCore),
-                    false,
-                )
-            }
-        };
-        Stream {
-            unit,
-            forked,
-            ..self
-        }
-    }
-
-    /// Declares a capability constraint for the *current FlowUnit* — the
-    /// FlowUnits resource annotation (e.g. `"n_cpu >= 4 && gpu = yes"`).
-    /// Repeated calls AND-compose. A malformed expression is recorded as
-    /// a builder error and surfaced from `execute()`/`deploy()`.
-    pub fn add_constraint(self, expr: &str) -> Self {
-        {
-            let mut st = self.state.borrow_mut();
-            if self.forked {
-                st.errors.push(format!(
-                    "add_constraint({expr:?}) on a split() branch would constrain the unit \
-                     shared with the sibling branch; open a unit first (`.unit(name)`)"
-                ));
-            } else {
-                match ConstraintExpr::parse(expr) {
-                    Ok(parsed) => {
-                        let u = &mut st.graph.units[self.unit];
-                        u.constraint = Some(match u.constraint.take() {
-                            None => parsed,
-                            Some(prev) => prev.and(parsed),
-                        });
-                    }
-                    Err(e) => st.errors.push(format!("add_constraint({expr:?}): {e}")),
-                }
-            }
-        }
-        self
-    }
-
-    /// Sets the current FlowUnit's in-zone replication policy.
-    pub fn replicate(self, policy: Replication) -> Self {
-        {
-            let mut st = self.state.borrow_mut();
-            if self.forked {
-                st.errors.push(
-                    "replicate() on a split() branch would re-scope the unit shared with \
-                     the sibling branch; open a unit first (`.unit(name)`)"
-                        .into(),
-                );
-            } else {
-                st.graph.units[self.unit].replication = policy;
-            }
-        }
-        self
-    }
-
-    /// Merges this stream with `other` (from the same context) into one.
-    /// The merge point lands in a fresh unit on the innermost of the two
-    /// input layers; name it with [`Stream::unit`]. Unioning streams from
-    /// different contexts is recorded as a builder error.
-    pub fn union(self, other: Stream) -> Stream {
-        if !Rc::ptr_eq(&self.state, &other.state) {
-            self.state
-                .borrow_mut()
-                .errors
-                .push("union: streams were built by different StreamContexts".into());
-            return self;
-        }
-        if self.head == other.head {
-            self.state.borrow_mut().errors.push(
-                "union: both streams are the same branch (unioning a stream with itself \
-                 delivers each event once, not twice — transform a branch first)"
-                    .into(),
-            );
-            return self;
-        }
-        let (head, unit) = {
-            let mut st = self.state.borrow_mut();
-            let la = st.graph.units[self.unit].layer.clone();
-            let lb = st.graph.units[other.unit].layer.clone();
-            let layer = if st.layer_pos(&lb) > st.layer_pos(&la) {
-                lb
-            } else {
-                la
-            };
-            let unit = st
-                .graph
-                .add_unit(None, layer, None, Replication::PerCore);
-            let head = st
-                .graph
-                .add_op(OpKind::Union, unit, vec![self.head, other.head], "union");
-            (head, unit)
-        };
-        Stream {
-            head,
-            unit,
-            forked: false,
-            ..self
-        }
-    }
-
-    /// Forks the stream: both returned handles continue from the same
-    /// point, and every downstream branch receives every event. Because
-    /// the branches share the current unit, `unit`/`to_layer` on either
-    /// handle always opens a *new* unit (never renames the shared one).
-    pub fn split(self) -> (Stream, Stream) {
-        let twin = Stream {
-            state: self.state.clone(),
-            head: self.head,
-            unit: self.unit,
-            forked: true,
-        };
-        (
-            Stream {
-                forked: true,
-                ..self
-            },
-            twin,
-        )
-    }
-
-    /// Element-wise transform.
-    pub fn map(self, f: impl Fn(Value) -> Value + Send + Sync + 'static) -> Self {
-        self.push(OpKind::Map(Arc::new(f)), "map")
-    }
-
-    /// Predicate filter.
-    pub fn filter(self, f: impl Fn(&Value) -> bool + Send + Sync + 'static) -> Self {
-        self.push(OpKind::Filter(Arc::new(f)), "filter")
-    }
-
-    /// One-to-many transform.
-    pub fn flat_map(self, f: impl Fn(Value) -> Vec<Value> + Send + Sync + 'static) -> Self {
-        self.push(OpKind::FlatMap(Arc::new(f)), "flat_map")
-    }
-
-    /// Keys the stream; downstream stateful operators group by this key
-    /// and the repartitioning edge is hash-routed.
-    pub fn key_by(self, f: impl Fn(&Value) -> Value + Send + Sync + 'static) -> Self {
-        self.push(OpKind::KeyBy(Arc::new(f)), "key_by")
-    }
-
-    /// `group_by` is Renoir's name for [`Stream::key_by`].
-    pub fn group_by(self, f: impl Fn(&Value) -> Value + Send + Sync + 'static) -> Self {
-        self.key_by(f)
-    }
-
-    /// Keyed fold with initial accumulator `init`; emits `Pair(key, acc)`
-    /// per key at end-of-stream.
-    pub fn fold(
-        self,
-        init: Value,
-        step: impl Fn(&mut Value, Value) + Send + Sync + 'static,
-    ) -> Self {
-        self.push(
-            OpKind::Fold {
-                init,
-                step: Arc::new(step),
-            },
-            "fold",
-        )
-    }
-
-    /// Keyed reduction: combines pairs of payloads with `f`; emits
-    /// `Pair(key, reduced)` per key at end-of-stream. Uses an explicit
-    /// empty-accumulator representation, so streams that legitimately
-    /// contain `Value::Null` reduce correctly.
-    pub fn reduce(self, f: impl Fn(&Value, &Value) -> Value + Send + Sync + 'static) -> Self {
-        self.push(OpKind::Reduce { f: Arc::new(f) }, "reduce")
-    }
-
-    /// Observes every element without changing it (debugging/metrics tap).
-    pub fn inspect(self, f: impl Fn(&Value) + Send + Sync + 'static) -> Self {
-        self.push(
-            OpKind::Map(Arc::new(move |v| {
-                f(&v);
-                v
-            })),
-            "inspect",
-        )
-    }
-
-    /// Tumbling count window of `size` events with aggregate `agg`.
-    pub fn window(self, size: usize, agg: WindowAgg) -> Self {
-        self.push(
-            OpKind::Window {
-                size,
-                slide: size,
-                agg,
-            },
-            "window",
-        )
-    }
-
-    /// Sliding count window.
-    pub fn sliding_window(self, size: usize, slide: usize, agg: WindowAgg) -> Self {
-        self.push(OpKind::Window { size, slide, agg }, "window")
-    }
-
-    /// Batched inference through the AOT-compiled XLA artifact `name`
-    /// (`artifacts/<name>.hlo.txt`); `batch` rows per PJRT call, `in_dim`
-    /// features per row.
-    pub fn xla_map(self, name: &str, batch: usize, in_dim: usize) -> Self {
-        self.push(
-            OpKind::XlaMap {
-                artifact: name.to_string(),
-                batch,
-                in_dim,
-            },
-            "xla_map",
-        )
-    }
-
-    /// Terminal: collect events into [`JobReport::collected`].
-    pub fn collect_vec(self) {
-        self.terminal(SinkKind::Collect, "collect");
-    }
-
-    /// Terminal: count events only.
-    pub fn collect_count(self) {
-        self.terminal(SinkKind::Count, "count");
-    }
-
-    /// Terminal: discard events (benchmark sink).
-    pub fn discard(self) {
-        self.terminal(SinkKind::Discard, "discard");
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::eval_cluster;
-    use std::time::Duration;
-
-    fn transparent_cluster() -> ClusterSpec {
-        eval_cluster(None, Duration::ZERO)
-    }
-
-    fn fast_config(planner: PlannerKind) -> JobConfig {
-        JobConfig {
-            planner,
-            batch_size: 128,
-            ..Default::default()
-        }
-    }
-
-    #[test]
-    fn end_to_end_filter_count_flowunits() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(3000, |_, i| Value::I64(i as i64)))
-            .to_layer("edge")
-            .filter(|v| v.as_i64().unwrap() % 3 == 0)
-            .to_layer("cloud")
-            .map(|v| v)
-            .collect_count();
-        let report = ctx.execute().unwrap();
-        assert_eq!(report.events_in, 3000);
-        assert_eq!(report.events_out, 1000);
-    }
-
-    #[test]
-    fn end_to_end_same_result_under_renoir_planner() {
-        for planner in [PlannerKind::FlowUnits, PlannerKind::Renoir] {
-            let mut ctx = StreamContext::new(transparent_cluster(), fast_config(planner));
-            ctx.stream(Source::synthetic(3000, |_, i| Value::I64(i as i64)))
-                .to_layer("edge")
-                .filter(|v| v.as_i64().unwrap() % 3 == 0)
-                .to_layer("cloud")
-                .collect_count();
-            let report = ctx.execute().unwrap();
-            assert_eq!(report.events_out, 1000, "{planner:?}");
-        }
-    }
-
-    #[test]
-    fn end_to_end_wordcount() {
-        let text = ["the cat", "the dog", "the cat sat"];
-        let values: Vec<Value> = text.iter().map(|l| Value::Str(l.to_string())).collect();
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::vector(values))
-            .to_layer("cloud")
-            .flat_map(|v| {
-                v.as_str()
-                    .unwrap()
-                    .split(' ')
-                    .map(|w| Value::Str(w.to_string()))
-                    .collect()
-            })
-            .group_by(|w| w.clone())
-            .fold(Value::I64(0), |acc, _| {
-                *acc = Value::I64(acc.as_i64().unwrap() + 1)
-            })
-            .collect_vec();
-        let report = ctx.execute().unwrap();
-        let mut counts: Vec<(String, i64)> = report
-            .collected
-            .iter()
-            .map(|v| {
-                let (k, c) = v.as_pair().unwrap();
-                (k.as_str().unwrap().to_string(), c.as_i64().unwrap())
-            })
-            .collect();
-        counts.sort();
-        assert_eq!(
-            counts,
-            vec![
-                ("cat".into(), 2),
-                ("dog".into(), 1),
-                ("sat".into(), 1),
-                ("the".into(), 3)
-            ]
-        );
-    }
-
-    #[test]
-    fn keyed_window_pipeline_produces_expected_window_count() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        // 4 edge sources × 2000 events each = 8000; keys 0..8; windows of 100
-        ctx.stream(Source::synthetic(8000, |_, i| Value::I64(i as i64)))
-            .to_layer("edge")
-            .map(|v| v)
-            .to_layer("site")
-            .key_by(|v| Value::I64(v.as_i64().unwrap() % 8))
-            .window(100, WindowAgg::Count)
-            .to_layer("cloud")
-            .collect_vec();
-        let report = ctx.execute().unwrap();
-        // 8000 events / 8 keys = 1000 per key = 10 full windows per key.
-        // Keys are split across the site zone's instances; totals must add
-        // up to exactly 80 full windows (count=100 each), no partials.
-        let total: i64 = report
-            .collected
-            .iter()
-            .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
-            .sum();
-        assert_eq!(total, 8000);
-        assert_eq!(report.collected.len(), 80);
-    }
-
-    #[test]
-    fn decoupled_boundaries_preserve_results() {
-        let config = JobConfig {
-            planner: PlannerKind::FlowUnits,
-            decouple_units: true,
-            batch_size: 64,
-            poll_timeout: Duration::from_millis(10),
-            ..Default::default()
-        };
-        let mut ctx = StreamContext::new(transparent_cluster(), config);
-        ctx.stream(Source::synthetic(2000, |_, i| Value::I64(i as i64)))
-            .to_layer("edge")
-            .filter(|v| v.as_i64().unwrap() % 2 == 0)
-            .to_layer("cloud")
-            .collect_count();
-        let report = ctx.execute().unwrap();
-        assert_eq!(report.events_out, 1000);
-        assert!(
-            report.metrics.queue_appends.load(std::sync::atomic::Ordering::Relaxed) > 0,
-            "queue substrate was used"
-        );
-    }
-
-    #[test]
-    fn constraints_scope_to_the_unit_and_compose() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
-            .to_layer("cloud")
-            .map(|v| v)
-            .add_constraint("gpu = yes")
-            .add_constraint("n_cpu >= 4")
-            .collect_count();
-        let graph = ctx.into_graph().unwrap();
-        let unit = graph.unit_named("cloud").expect("layer-named unit");
-        let c = graph.units[unit].constraint.as_ref().unwrap();
-        assert_eq!(c.to_string(), "gpu = yes && n_cpu >= 4");
-    }
-
-    #[test]
-    fn bad_constraint_surfaces_at_execute_not_panic() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
-            .to_layer("cloud")
-            .add_constraint("n_cpu >=") // malformed on purpose
-            .collect_count();
-        let err = ctx.execute().unwrap_err();
-        assert!(matches!(err, Error::Graph(_)), "got {err}");
-        assert!(err.to_string().contains("add_constraint"));
-    }
-
-    #[test]
-    fn to_layer_relayers_the_source_unit_in_place() {
-        // the old API special-cased `ops.len() == 1` to retroactively move
-        // the source; unit scoping makes this structural
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
-            .to_layer("edge")
-            .map(|v| v)
-            .to_layer("cloud")
-            .collect_count();
-        let graph = ctx.into_graph().unwrap();
-        // source sits in the (re-layered, auto-named) edge unit
-        assert_eq!(graph.unit_of(0).layer, "edge");
-        assert_eq!(graph.unit_of(0).name, "edge");
-        assert_eq!(graph.unit_names(), vec!["edge", "cloud"]);
-    }
-
-    #[test]
-    fn named_units_carry_layer_constraint_and_replication() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
-            .unit("ingest")
-            .to_layer("edge")
-            .map(|v| v)
-            .unit("scorer")
-            .to_layer("cloud")
-            .add_constraint("gpu = yes")
-            .replicate(Replication::PerHost)
-            .map(|v| v)
-            .collect_count();
-        let graph = ctx.into_graph().unwrap();
-        assert_eq!(graph.unit_names(), vec!["ingest", "scorer"]);
-        let scorer = &graph.units[graph.unit_named("scorer").unwrap()];
-        assert_eq!(scorer.layer, "cloud");
-        assert_eq!(scorer.constraint.as_ref().unwrap().to_string(), "gpu = yes");
-        assert_eq!(scorer.replication, Replication::PerHost);
-        assert!(!scorer.auto);
-    }
-
-    #[test]
-    fn duplicate_unit_names_surface_at_execute() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
-            .unit("dup")
-            .to_layer("edge")
-            .map(|v| v)
-            .unit("dup")
-            .collect_count();
-        let err = ctx.execute().unwrap_err();
-        assert!(err.to_string().contains("duplicate FlowUnit name"));
-    }
-
-    #[test]
-    fn union_of_two_sources_merges_all_events() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        let a = ctx
-            .stream(Source::synthetic(600, |_, i| Value::I64(i as i64)))
-            .unit("north")
-            .to_layer("edge");
-        let b = ctx
-            .stream(Source::synthetic(400, |_, i| Value::I64(i as i64)))
-            .unit("south")
-            .to_layer("edge");
-        a.union(b)
-            .unit("merge")
-            .to_layer("cloud")
-            .map(|v| v)
-            .collect_count();
-        let report = ctx.execute().unwrap();
-        assert_eq!(report.events_in, 1000);
-        assert_eq!(report.events_out, 1000);
-    }
-
-    #[test]
-    fn split_duplicates_stream_into_two_sinks() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        let s = ctx
-            .stream(Source::synthetic(500, |_, i| Value::I64(i as i64)))
-            .to_layer("edge")
-            .map(|v| v)
-            .to_layer("cloud");
-        let (left, right) = s.split();
-        left.unit("keep").filter(|v| v.as_i64().unwrap() % 2 == 0).collect_vec();
-        right.unit("count-all").collect_count();
-        let report = ctx.execute().unwrap();
-        assert_eq!(report.events_in, 500);
-        // both branches saw every event: 250 collected + 500 counted
-        assert_eq!(report.collected.len(), 250);
-        assert_eq!(report.events_out, 750);
-    }
-
-    #[test]
-    fn split_fanout_encodes_each_batch_at_most_once() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        let s = ctx
-            .stream(Source::synthetic(1000, |_, i| Value::I64(i as i64)))
-            .to_layer("edge");
-        let (site, cloud) = s.split();
-        site.unit("site-count").to_layer("site").collect_count();
-        cloud.unit("cloud-count").to_layer("cloud").collect_count();
-        let report = ctx.execute().unwrap();
-        assert_eq!(report.events_out, 2000, "both branches saw every event");
-        // 4 edge source instances × ceil(250/128) = 8 batches, each
-        // delivered over TWO crossing edges (site + cloud) — but encoded
-        // exactly once thanks to the shared wire cache
-        assert_eq!(report.wire_encodes, 8);
-        assert!(
-            report.metrics.net_frames.load(std::sync::atomic::Ordering::Relaxed) >= 16,
-            "each batch still produced one frame per edge"
-        );
-    }
-
-    #[test]
-    fn union_across_contexts_is_a_builder_error() {
-        let mut ctx1 = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        let mut ctx2 = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        let a = ctx1.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)));
-        let b = ctx2.stream(Source::synthetic(10, |_, i| Value::I64(i as i64)));
-        a.union(b).collect_count();
-        let err = ctx1.execute().unwrap_err();
-        assert!(err.to_string().contains("different StreamContexts"));
-    }
-
-    #[test]
-    fn execute_without_stream_errors() {
-        let mut ctx = StreamContext::new(transparent_cluster(), JobConfig::default());
-        assert!(ctx.execute().is_err());
-    }
-
-    #[test]
-    fn dangling_stream_surfaces_at_execute() {
-        let mut ctx = StreamContext::new(transparent_cluster(), JobConfig::default());
-        // no sink attached
-        let _ = ctx
-            .stream(Source::synthetic(10, |_, i| Value::I64(i as i64)))
-            .to_layer("edge")
-            .map(|v| v);
-        let err = ctx.execute().unwrap_err();
-        assert!(err.to_string().contains("dangling"), "got {err}");
-    }
-
-    #[test]
-    fn reduce_computes_keyed_max() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(1000, |_, i| Value::I64(i as i64)))
-            .to_layer("cloud")
-            .key_by(|v| Value::I64(v.as_i64().unwrap() % 3))
-            .reduce(|a, b| Value::I64(a.as_i64().unwrap().max(b.as_i64().unwrap())))
-            .collect_vec();
-        let report = ctx.execute().unwrap();
-        let mut maxes: Vec<(i64, i64)> = report
-            .collected
-            .iter()
-            .map(|v| {
-                let (k, m) = v.as_pair().unwrap();
-                (k.as_i64().unwrap(), m.as_i64().unwrap())
-            })
-            .collect();
-        maxes.sort();
-        assert_eq!(maxes, vec![(0, 999), (1, 997), (2, 998)]);
-    }
-
-    #[test]
-    fn reduce_preserves_legitimate_null_values() {
-        // a stream of Value::Null must be reduced like any other value —
-        // the old fold-based sugar treated Null as "empty accumulator"
-        let count = |v: &Value| match v {
-            Value::Null => 1,
-            other => other.as_i64().unwrap_or(0),
-        };
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::vector(vec![Value::Null; 5]))
-            .to_layer("cloud")
-            .key_by(|_| Value::I64(0))
-            .reduce(move |a, b| Value::I64(count(a) + count(b)))
-            .collect_vec();
-        let report = ctx.execute().unwrap();
-        assert_eq!(report.collected.len(), 1);
-        assert_eq!(
-            report.collected[0].as_pair().unwrap().1.as_i64(),
-            Some(5),
-            "all five Null events were reduced"
-        );
-    }
-
-    #[test]
-    fn inspect_observes_all_events() {
-        use std::sync::atomic::{AtomicU64, Ordering};
-        let seen = Arc::new(AtomicU64::new(0));
-        let seen2 = seen.clone();
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(500, |_, i| Value::I64(i as i64)))
-            .to_layer("edge")
-            .inspect(move |_| {
-                seen2.fetch_add(1, Ordering::Relaxed);
-            })
-            .to_layer("cloud")
-            .collect_count();
-        let report = ctx.execute().unwrap();
-        assert_eq!(report.events_out, 500);
-        assert_eq!(seen.load(Ordering::Relaxed), 500);
-    }
-
-    #[test]
-    fn sliding_window_emits_overlapping_aggregates() {
-        let mut ctx = StreamContext::new(transparent_cluster(), fast_config(PlannerKind::FlowUnits));
-        ctx.stream(Source::synthetic(1000, |_, i| Value::F64(i as f64)))
-            .to_layer("cloud")
-            .key_by(|_| Value::I64(0))
-            .sliding_window(100, 50, WindowAgg::Count)
-            .collect_vec();
-        let report = ctx.execute().unwrap();
-        // 1000 events, size 100 slide 50: full windows at 100, 150, ... 1000
-        // = 19 full windows, plus a 50-event partial at EOS
-        assert_eq!(report.collected.len(), 20);
-    }
+/// Dispatch trait behind [`StreamContext::stream`]: implemented by the
+/// untyped [`raw::Source`] (opening a raw [`raw::Stream`]) and the typed
+/// [`typed::Source<T>`] (opening a [`typed::Stream<T>`]).
+pub trait OpenStream {
+    /// The stream handle this source opens.
+    type Handle;
+    /// Adds the source to the context's DAG and returns its handle.
+    fn open(self, ctx: &mut raw::StreamContext) -> Self::Handle;
 }

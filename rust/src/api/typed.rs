@@ -1,0 +1,589 @@
+//! The typed stream front-end: phantom-typed [`Stream<T>`] and
+//! type-state [`KeyedStream<K, V>`] over the dynamic `Value` engine.
+//!
+//! Operator closures take and return **native Rust types** — `i64`,
+//! `f64`, `bool`, `String`, tuples, `Vec<T>`, [`Features`] — and the
+//! conversion to the engine's dynamic `Value` representation happens in
+//! thin adapter shims at the graph boundary (the [`StreamData`] trait).
+//! Channels, planners, placement, the zero-copy batch data plane, and
+//! dynamic updates are untouched: a typed pipeline lowers to exactly the
+//! same [`LogicalGraph`](crate::graph::LogicalGraph) as its
+//! [`api::raw`](crate::api::raw) equivalent.
+//!
+//! **Type-state keying.** [`Stream::key_by`] is the only way to obtain a
+//! [`KeyedStream`], and the keyed stateful operators (`fold`, `reduce`,
+//! `window`, `sliding_window`) exist *only* on [`KeyedStream`] — calling
+//! them on an unkeyed stream is a compile error, not a runtime surprise
+//! (see the `compile_fail` examples below). Likewise
+//! [`Stream::union`] requires both sides to carry the same element type.
+//!
+//! **No panics.** A value that fails to decode as the expected native
+//! type (possible only when `api::raw` escape hatches are mixed in) is
+//! suppressed and counted; `execute()` then surfaces
+//! [`Error::Decode`](crate::error::Error::Decode). Typed collect sinks
+//! return a [`CollectHandle<T>`] redeemed with
+//! [`JobReport::take`](crate::coordinator::JobReport::take), which
+//! decodes into `Vec<T>` — again `Error::Decode`, never a panic.
+//!
+//! ```no_run
+//! use flowunits::prelude::*;
+//!
+//! let cluster = flowunits::config::fig2_cluster();
+//! let mut ctx = StreamContext::new(cluster, JobConfig::default());
+//! let counts = ctx
+//!     .stream(Source::synthetic(100_000, |_, i| i as i64))
+//!     .to_layer("edge")
+//!     .filter(|v| v % 3 == 0)
+//!     .to_layer("cloud")
+//!     .key_by(|v| v % 8)
+//!     .window::<i64>(100, WindowAgg::Count)
+//!     .collect();
+//! let mut report = ctx.execute().unwrap();
+//! let windows: Vec<(i64, i64)> = report.take(counts).unwrap();
+//! ```
+//!
+//! Stateful keyed operators do not exist on unkeyed streams — `window`
+//! before `key_by` does not compile:
+//!
+//! ```compile_fail
+//! use flowunits::prelude::*;
+//!
+//! let cluster = flowunits::config::fig2_cluster();
+//! let mut ctx = StreamContext::new(cluster, JobConfig::default());
+//! ctx.stream(Source::synthetic(100, |_, i| i as i64))
+//!     .window::<i64>(10, WindowAgg::Count) // error: no `window` on Stream<i64>
+//!     .collect();
+//! ```
+//!
+//! ... and neither does `fold`:
+//!
+//! ```compile_fail
+//! use flowunits::prelude::*;
+//!
+//! let cluster = flowunits::config::fig2_cluster();
+//! let mut ctx = StreamContext::new(cluster, JobConfig::default());
+//! ctx.stream(Source::synthetic(100, |_, i| i as i64))
+//!     .fold(0i64, |acc, v| *acc += v) // error: no `fold` on Stream<i64>
+//!     .collect();
+//! ```
+//!
+//! Unioning streams of different element types does not compile:
+//!
+//! ```compile_fail
+//! use flowunits::prelude::*;
+//!
+//! let cluster = flowunits::config::fig2_cluster();
+//! let mut ctx = StreamContext::new(cluster, JobConfig::default());
+//! let ints = ctx.stream(Source::synthetic(100, |_, i| i as i64));
+//! let floats = ctx.stream(Source::synthetic(100, |_, i| i as f64));
+//! ints.union(floats).collect(); // error: Stream<i64> ∪ Stream<f64>
+//! ```
+
+use super::data::{DecodeErrors, Features};
+use super::raw;
+use super::OpenStream;
+use crate::coordinator::CollectHandle;
+use crate::error::Error;
+use crate::graph::{Replication, SinkKind, SourceKind, WindowAgg};
+use crate::value::{StreamData, Value};
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+/// A typed source: like [`raw::Source`], but its generator/vector works
+/// in the native element type `T`.
+pub struct Source<T: StreamData> {
+    kind: SourceKind,
+    _t: PhantomData<T>,
+}
+
+impl<T: StreamData> Source<T> {
+    fn new(kind: SourceKind) -> Source<T> {
+        Source {
+            kind,
+            _t: PhantomData,
+        }
+    }
+
+    /// Synthetic generator: `total` events split across source instances,
+    /// each produced by `gen(instance_index, event_index)`.
+    pub fn synthetic(
+        total: u64,
+        gen: impl Fn(u64, u64) -> T + Send + Sync + 'static,
+    ) -> Source<T> {
+        Source::new(SourceKind::Synthetic {
+            total,
+            gen: Arc::new(move |inst, i| gen(inst, i).into_value()),
+            rate: None,
+        })
+    }
+
+    /// Rate-limited synthetic generator (events/second per instance);
+    /// pair with `Deployment::stop_sources` for unbounded streams.
+    pub fn synthetic_rated(
+        total: u64,
+        rate: f64,
+        gen: impl Fn(u64, u64) -> T + Send + Sync + 'static,
+    ) -> Source<T> {
+        Source::new(SourceKind::Synthetic {
+            total,
+            gen: Arc::new(move |inst, i| gen(inst, i).into_value()),
+            rate: Some(rate),
+        })
+    }
+
+    /// A pre-materialised vector.
+    pub fn vector(values: Vec<T>) -> Source<T> {
+        Source::new(SourceKind::Vector(Arc::new(
+            values.into_iter().map(StreamData::into_value).collect(),
+        )))
+    }
+}
+
+impl Source<String> {
+    /// Lines of a text file as `String` events. An unreadable file is a
+    /// job-level error from `execute()`/`deploy()`, not a panic.
+    pub fn file_lines(path: impl Into<std::path::PathBuf>) -> Source<String> {
+        Source::new(SourceKind::FileLines(path.into()))
+    }
+}
+
+impl<T: StreamData> OpenStream for Source<T> {
+    type Handle = Stream<T>;
+    fn open(self, ctx: &mut raw::StreamContext) -> Stream<T> {
+        let errs = ctx.decode_errors();
+        wrap(ctx.open_source(self.kind), errs)
+    }
+}
+
+/// An owned, phantom-typed handle onto one path of the DAG under
+/// construction: every event on this stream is a `T`. Obtained from
+/// [`StreamContext::stream`](raw::StreamContext::stream) with a typed
+/// [`Source<T>`]; compiles down to a [`raw::Stream`].
+pub struct Stream<T: StreamData> {
+    raw: raw::Stream,
+    errs: Arc<DecodeErrors>,
+    _t: PhantomData<T>,
+}
+
+fn wrap<T: StreamData>(raw: raw::Stream, errs: Arc<DecodeErrors>) -> Stream<T> {
+    Stream {
+        raw,
+        errs,
+        _t: PhantomData,
+    }
+}
+
+fn wrap_keyed<K: StreamData, V: StreamData>(
+    raw: raw::Stream,
+    errs: Arc<DecodeErrors>,
+) -> KeyedStream<K, V> {
+    KeyedStream {
+        raw,
+        errs,
+        _p: PhantomData,
+    }
+}
+
+/// Decodes `v` as `T`, recording a failure against `op` instead of
+/// panicking.
+fn decode_or_record<T: StreamData>(errs: &DecodeErrors, op: &str, v: Value) -> Option<T> {
+    match T::try_from_value(v) {
+        Ok(t) => Some(t),
+        Err(e) => {
+            errs.record(op, &e);
+            None
+        }
+    }
+}
+
+fn record_unkeyed(errs: &DecodeErrors, op: &str) {
+    errs.record(
+        op,
+        &Error::Decode("expected a keyed Pair(key, value) record".into()),
+    );
+}
+
+impl<T: StreamData> Stream<T> {
+    /// Escape hatch: adopts an untyped [`raw::Stream`] as carrying `T`.
+    /// The claim is checked at runtime — events that fail to decode as
+    /// `T` in downstream typed closures (or at
+    /// [`JobReport::take`](crate::coordinator::JobReport::take)) are
+    /// counted and surfaced as
+    /// [`Error::Decode`](crate::error::Error::Decode), never panics.
+    pub fn from_raw(raw: raw::Stream) -> Stream<T> {
+        let errs = raw.decode_errors();
+        wrap(raw, errs)
+    }
+
+    /// Escape hatch: drops down to the untyped builder (closures over
+    /// `Value`). Re-adopt with [`Stream::from_raw`].
+    pub fn into_raw(self) -> raw::Stream {
+        self.raw
+    }
+
+    /// Opens (or names) a FlowUnit — the unit of placement, replication,
+    /// and dynamic update. See [`raw::Stream::unit`].
+    pub fn unit(self, name: &str) -> Self {
+        wrap(self.raw.unit(name), self.errs)
+    }
+
+    /// Moves the remainder of this stream to `layer`. Unknown layer names
+    /// are builder errors surfaced from `execute()`/`deploy()`. See
+    /// [`raw::Stream::to_layer`].
+    pub fn to_layer(self, layer: &str) -> Self {
+        wrap(self.raw.to_layer(layer), self.errs)
+    }
+
+    /// Declares a capability constraint for the current FlowUnit. See
+    /// [`raw::Stream::add_constraint`].
+    pub fn add_constraint(self, expr: &str) -> Self {
+        wrap(self.raw.add_constraint(expr), self.errs)
+    }
+
+    /// Sets the current FlowUnit's in-zone replication policy.
+    pub fn replicate(self, policy: Replication) -> Self {
+        wrap(self.raw.replicate(policy), self.errs)
+    }
+
+    /// Merges this stream with `other` (from the same context). Both
+    /// sides must carry the same element type — unioning differently
+    /// typed streams is a compile error.
+    pub fn union(self, other: Stream<T>) -> Stream<T> {
+        wrap(self.raw.union(other.raw), self.errs)
+    }
+
+    /// Forks the stream: both handles continue from the same point and
+    /// every downstream branch receives every event.
+    pub fn split(self) -> (Stream<T>, Stream<T>) {
+        let (a, b) = self.raw.split();
+        (wrap(a, self.errs.clone()), wrap(b, self.errs))
+    }
+
+    /// Element-wise transform with a native-typed closure. An event that
+    /// fails to decode as `T` is suppressed (and recorded), never
+    /// forwarded as poison.
+    pub fn map<U: StreamData>(
+        self,
+        f: impl Fn(T) -> U + Send + Sync + 'static,
+    ) -> Stream<U> {
+        let errs = self.errs.clone();
+        let raw = self.raw.filter_map(move |v| {
+            decode_or_record::<T>(&errs, "map", v).map(|t| f(t).into_value())
+        });
+        wrap(raw, self.errs)
+    }
+
+    /// Predicate filter with a native-typed closure. Events that fail to
+    /// decode are dropped (and recorded). The decode consumes the event
+    /// and re-encodes it on keep — payloads move, they are never
+    /// deep-copied.
+    pub fn filter(self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Self {
+        let errs = self.errs.clone();
+        let raw = self.raw.filter_map(move |v| {
+            decode_or_record::<T>(&errs, "filter", v)
+                .and_then(|t| if f(&t) { Some(t.into_value()) } else { None })
+        });
+        wrap(raw, self.errs)
+    }
+
+    /// One-to-many transform; the closure may return any iterable of the
+    /// output type (`Vec`, arrays, iterators collected, ...).
+    pub fn flat_map<U: StreamData, I: IntoIterator<Item = U>>(
+        self,
+        f: impl Fn(T) -> I + Send + Sync + 'static,
+    ) -> Stream<U> {
+        let errs = self.errs.clone();
+        let raw = self
+            .raw
+            .flat_map(move |v| match decode_or_record::<T>(&errs, "flat_map", v) {
+                Some(t) => f(t).into_iter().map(StreamData::into_value).collect(),
+                None => Vec::new(),
+            });
+        wrap(raw, self.errs)
+    }
+
+    /// Observes every element without changing it (debugging/metrics
+    /// tap): the original event passes through untouched — even one that
+    /// fails to decode (which is recorded and skipped by the observer).
+    /// The observed `T` is decoded from a clone of the event.
+    pub fn inspect(self, f: impl Fn(&T) + Send + Sync + 'static) -> Self {
+        let errs = self.errs.clone();
+        let raw = self.raw.inspect(move |v| {
+            if let Some(t) = decode_or_record::<T>(&errs, "inspect", v.clone()) {
+                f(&t);
+            }
+        });
+        wrap(raw, self.errs)
+    }
+
+    /// Keys the stream: downstream stateful operators group by the
+    /// extracted key and the repartitioning edge is hash-routed. This is
+    /// the *only* way to reach the keyed operators
+    /// (`fold`/`reduce`/`window`) — the type system enforces the
+    /// ordering. An event that fails to decode as `T` (a `from_raw`
+    /// lie) is suppressed (and recorded); the job then fails with
+    /// `Error::Decode` from `execute()`. Clone-free: the record is
+    /// consumed, keyed, and re-emitted as `(key, value)` in one pass.
+    pub fn key_by<K: StreamData>(
+        self,
+        f: impl Fn(&T) -> K + Send + Sync + 'static,
+    ) -> KeyedStream<K, T> {
+        let errs = self.errs.clone();
+        let raw = self.raw.key_by_fused(move |v| {
+            decode_or_record::<T>(&errs, "key_by", v).map(|t| {
+                let key = f(&t).into_value();
+                Value::pair(key, t.into_value())
+            })
+        });
+        wrap_keyed(raw, self.errs)
+    }
+
+    /// `group_by` is Renoir's name for [`Stream::key_by`].
+    pub fn group_by<K: StreamData>(
+        self,
+        f: impl Fn(&T) -> K + Send + Sync + 'static,
+    ) -> KeyedStream<K, T> {
+        self.key_by(f)
+    }
+
+    /// Terminal: collect events, returning a receipt redeemed with
+    /// [`JobReport::take`](crate::coordinator::JobReport::take) for a
+    /// `Vec<T>`. The receipt is bound to this builder context — redeeming
+    /// it against another job's report is an error, not silent data
+    /// mix-up.
+    pub fn collect(self) -> CollectHandle<T> {
+        let origin = self.raw.graph_origin();
+        let op = self.raw.terminal(SinkKind::CollectTagged, "collect");
+        CollectHandle {
+            op,
+            origin,
+            _t: PhantomData,
+        }
+    }
+
+    /// Terminal: count events only (`JobReport::events_out`).
+    pub fn collect_count(self) {
+        self.raw.collect_count();
+    }
+
+    /// Terminal: discard events (benchmark sink).
+    pub fn discard(self) {
+        self.raw.discard();
+    }
+}
+
+impl Stream<Features> {
+    /// Batched inference through the AOT-compiled XLA artifact `name`;
+    /// available only on feature-row streams — feeding the model
+    /// anything but [`Features`] is a compile error.
+    pub fn xla_map(self, name: &str, batch: usize, in_dim: usize) -> Stream<Features> {
+        wrap(self.raw.xla_map(name, batch, in_dim), self.errs)
+    }
+}
+
+/// A typed stream that has been keyed by [`Stream::key_by`]: every event
+/// is a `(K, V)` record, the stateful keyed operators are available, and
+/// repartitioning edges hash on `K`. Compiles down to the engine's
+/// `Pair(key, value)` representation.
+pub struct KeyedStream<K: StreamData, V: StreamData> {
+    raw: raw::Stream,
+    errs: Arc<DecodeErrors>,
+    _p: PhantomData<(K, V)>,
+}
+
+impl<K: StreamData, V: StreamData> KeyedStream<K, V> {
+    /// Opens (or names) a FlowUnit. See [`raw::Stream::unit`].
+    pub fn unit(self, name: &str) -> Self {
+        wrap_keyed(self.raw.unit(name), self.errs)
+    }
+
+    /// Moves the remainder of this stream to `layer`. See
+    /// [`raw::Stream::to_layer`].
+    pub fn to_layer(self, layer: &str) -> Self {
+        wrap_keyed(self.raw.to_layer(layer), self.errs)
+    }
+
+    /// Declares a capability constraint for the current FlowUnit.
+    pub fn add_constraint(self, expr: &str) -> Self {
+        wrap_keyed(self.raw.add_constraint(expr), self.errs)
+    }
+
+    /// Sets the current FlowUnit's in-zone replication policy.
+    pub fn replicate(self, policy: Replication) -> Self {
+        wrap_keyed(self.raw.replicate(policy), self.errs)
+    }
+
+    /// Merges two keyed streams of identical key/value types.
+    pub fn union(self, other: KeyedStream<K, V>) -> KeyedStream<K, V> {
+        wrap_keyed(self.raw.union(other.raw), self.errs)
+    }
+
+    /// Forks the keyed stream.
+    pub fn split(self) -> (KeyedStream<K, V>, KeyedStream<K, V>) {
+        let (a, b) = self.raw.split();
+        (
+            wrap_keyed(a, self.errs.clone()),
+            wrap_keyed(b, self.errs),
+        )
+    }
+
+    /// Transforms the value of each record, keeping the key (and the
+    /// hash routing on it) untouched. Records whose value fails to
+    /// decode as `V` are suppressed (and recorded).
+    pub fn map_values<U: StreamData>(
+        self,
+        f: impl Fn(V) -> U + Send + Sync + 'static,
+    ) -> KeyedStream<K, U> {
+        let errs = self.errs.clone();
+        let raw = self.raw.filter_map(move |v| match v.into_pair() {
+            Some((k, payload)) => decode_or_record::<V>(&errs, "map_values", payload)
+                .map(|t| Value::pair(k, f(t).into_value())),
+            None => {
+                record_unkeyed(&errs, "map_values");
+                None
+            }
+        });
+        wrap_keyed(raw, self.errs)
+    }
+
+    /// Observes every `(key, value)` record without changing it.
+    pub fn inspect(self, f: impl Fn(&K, &V) + Send + Sync + 'static) -> Self {
+        let errs = self.errs.clone();
+        let raw = self.raw.inspect(move |v| match v.as_pair() {
+            Some((k, payload)) => {
+                if let (Some(k), Some(p)) = (
+                    decode_or_record::<K>(&errs, "inspect", k.clone()),
+                    decode_or_record::<V>(&errs, "inspect", payload.clone()),
+                ) {
+                    f(&k, &p);
+                }
+            }
+            None => record_unkeyed(&errs, "inspect"),
+        });
+        wrap_keyed(raw, self.errs)
+    }
+
+    /// Reinterprets the keyed stream as a plain stream of `(K, V)`
+    /// records (a zero-cost relabelling — no operator is added).
+    pub fn entries(self) -> Stream<(K, V)> {
+        wrap(self.raw, self.errs)
+    }
+
+    /// Keyed fold with a native-typed accumulator; emits one `(K, A)`
+    /// record per key at end-of-stream. A payload that fails to decode
+    /// as `V` is skipped (the accumulator is untouched); an accumulator
+    /// that fails to decode (possible only with a `StreamData` impl
+    /// whose encode/decode are not inverses) is reset to `init` —
+    /// recorded either way, so `execute()` reports `Error::Decode`.
+    ///
+    /// The accumulator crosses the `Value` boundary once per event; for
+    /// large composite accumulators (`Vec<T>`, long `String`s) that
+    /// conversion is O(|accumulator|) per event — prefer a scalar/tuple
+    /// accumulator, or drop to [`raw::Stream::fold`] via
+    /// [`Stream::into_raw`] for heavyweight fold state.
+    pub fn fold<A: StreamData>(
+        self,
+        init: A,
+        step: impl Fn(&mut A, V) + Send + Sync + 'static,
+    ) -> KeyedStream<K, A> {
+        let errs = self.errs.clone();
+        let init_value = init.into_value();
+        let reset = init_value.clone();
+        let raw = self.raw.fold(init_value, move |acc, payload| {
+            let cur = std::mem::replace(acc, Value::Null);
+            let a = match decode_or_record::<A>(&errs, "fold", cur) {
+                Some(a) => a,
+                None => {
+                    *acc = reset.clone();
+                    return;
+                }
+            };
+            match decode_or_record::<V>(&errs, "fold", payload) {
+                Some(p) => {
+                    let mut a = a;
+                    step(&mut a, p);
+                    *acc = a.into_value();
+                }
+                // keep the accumulator on a bad payload
+                None => *acc = a.into_value(),
+            }
+        });
+        wrap_keyed(raw, self.errs)
+    }
+
+    /// Keyed reduction with a native-typed combiner; emits one `(K, V)`
+    /// record per key at end-of-stream. Both operands are decoded from
+    /// clones per combine step (the combiner borrows them) — keep reduce
+    /// payloads small, or drop to [`raw::Stream::reduce`] for
+    /// heavyweight values.
+    pub fn reduce(
+        self,
+        f: impl Fn(&V, &V) -> V + Send + Sync + 'static,
+    ) -> KeyedStream<K, V> {
+        let errs = self.errs.clone();
+        let raw = self.raw.reduce(move |a, b| {
+            match (
+                decode_or_record::<V>(&errs, "reduce", a.clone()),
+                decode_or_record::<V>(&errs, "reduce", b.clone()),
+            ) {
+                (Some(x), Some(y)) => f(&x, &y).into_value(),
+                // keep the accumulated side on a bad payload
+                _ => a.clone(),
+            }
+        });
+        wrap_keyed(raw, self.errs)
+    }
+
+    /// Tumbling count window of `size` events with aggregate `agg`. `R`
+    /// names the aggregate's native type: `i64` for `Count`, `f64` for
+    /// `Mean`/`Sum`/`Max`/`Min`, `Vec<V>` for `Collect`, [`Features`]
+    /// for `FeatureStats` (an `R` that does not match what `agg`
+    /// produces surfaces as `Error::Decode` downstream, never a panic).
+    pub fn window<R: StreamData>(self, size: usize, agg: WindowAgg) -> KeyedStream<K, R> {
+        wrap_keyed(self.raw.window(size, agg), self.errs)
+    }
+
+    /// Sliding count window; see [`KeyedStream::window`] for `R`.
+    pub fn sliding_window<R: StreamData>(
+        self,
+        size: usize,
+        slide: usize,
+        agg: WindowAgg,
+    ) -> KeyedStream<K, R> {
+        wrap_keyed(self.raw.sliding_window(size, slide, agg), self.errs)
+    }
+
+    /// Terminal: collect `(key, value)` records, returning a receipt
+    /// redeemed with
+    /// [`JobReport::take`](crate::coordinator::JobReport::take) for a
+    /// `Vec<(K, V)>`. Bound to this builder context like
+    /// [`Stream::collect`].
+    pub fn collect(self) -> CollectHandle<(K, V)> {
+        let origin = self.raw.graph_origin();
+        let op = self.raw.terminal(SinkKind::CollectTagged, "collect");
+        CollectHandle {
+            op,
+            origin,
+            _t: PhantomData,
+        }
+    }
+
+    /// Terminal: count events only (`JobReport::events_out`).
+    pub fn collect_count(self) {
+        self.raw.collect_count();
+    }
+
+    /// Terminal: discard events (benchmark sink).
+    pub fn discard(self) {
+        self.raw.discard();
+    }
+}
+
+impl<K: StreamData> KeyedStream<K, Features> {
+    /// Batched inference through the AOT-compiled XLA artifact `name`;
+    /// the key rides along unchanged, the feature row is replaced by the
+    /// model's output row.
+    pub fn xla_map(self, name: &str, batch: usize, in_dim: usize) -> KeyedStream<K, Features> {
+        wrap_keyed(self.raw.xla_map(name, batch, in_dim), self.errs)
+    }
+}

@@ -8,21 +8,22 @@
 use crate::channels::{FanOut, Inbox, Msg, OutPort, Target};
 use crate::config::ClusterSpec;
 use crate::error::{Error, Result};
-use crate::graph::{LogicalGraph, OpKind};
+use crate::graph::{LogicalGraph, OpKind, SourceKind};
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::netsim::Link;
 use crate::placement::{ancestor_at_layer, plan as make_plan, ExecPlan, PlannerKind};
 use crate::queue::{Broker, QueueBroker, Topic};
 use crate::runtime::{
     exec::{
-        Collector, FilterExec, FlatMapExec, FoldExec, KeyByExec, MapExec, ReduceExec, SinkExec,
-        WindowExec, XlaExec,
+        Collector, FilterExec, FilterMapExec, FlatMapExec, FoldExec, KeyByExec, MapExec,
+        ReduceExec, SinkExec, WindowExec, XlaExec,
     },
     run_instance, Handoff, InputKind, InstanceRuntime, OpExec, SourceRuntime,
 };
 use crate::topology::LocationId;
-use crate::value::Value;
+use crate::value::{StreamData, Value};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -87,6 +88,34 @@ pub struct JobReport {
     pub plan_description: String,
     /// Full metrics registry snapshot.
     pub metrics: Metrics,
+    /// Values gathered by typed (tagged) collect sinks, keyed by sink
+    /// operator id; redeemed per handle through [`JobReport::take`].
+    pub(crate) collected_tagged: BTreeMap<usize, Vec<Value>>,
+    /// Builder-context identities this deployment executed
+    /// (`LogicalGraph::origin` of the launch graph and of every
+    /// `update_unit` replacement graph); [`JobReport::take`] rejects
+    /// handles minted by any other context.
+    pub(crate) origins: BTreeSet<u64>,
+}
+
+/// Receipt for one typed collect sink: returned by the typed layer's
+/// `Stream::collect`/`KeyedStream::collect` and redeemed against the
+/// finished job's [`JobReport`] with [`JobReport::take`], which decodes
+/// the sink's events into native `T` values. Bound to the builder
+/// context that minted it — redeeming it against another job's report is
+/// an error, never a silent mix-up.
+pub struct CollectHandle<T: StreamData> {
+    /// Logical operator id of the tagged sink.
+    pub(crate) op: usize,
+    /// Builder-context identity the handle was minted by.
+    pub(crate) origin: u64,
+    pub(crate) _t: PhantomData<T>,
+}
+
+impl<T: StreamData> std::fmt::Debug for CollectHandle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CollectHandle(sink op {})", self.op)
+    }
 }
 
 impl JobReport {
@@ -97,6 +126,27 @@ impl JobReport {
             self.plan_description,
             self.metrics.render(self.wall_time)
         )
+    }
+
+    /// Redeems a typed collect handle: removes the sink's events from the
+    /// report and decodes them into native values. A sink that received
+    /// no events yields an empty vector; a value that does not match `T`
+    /// surfaces as [`Error::Decode`](crate::error::Error::Decode), as
+    /// does a handle minted by a different builder context than the job
+    /// behind this report.
+    pub fn take<T: StreamData>(&mut self, handle: CollectHandle<T>) -> Result<Vec<T>> {
+        if !self.origins.contains(&handle.origin) {
+            return Err(Error::Decode(format!(
+                "{handle:?} was minted by a different builder context than the job \
+                 behind this report — redeem it against its own job's report"
+            )));
+        }
+        self.collected_tagged
+            .remove(&handle.op)
+            .unwrap_or_default()
+            .into_iter()
+            .map(T::try_from_value)
+            .collect()
     }
 }
 
@@ -123,6 +173,25 @@ impl Coordinator {
     /// Plans and launches a deployment, returning a handle that supports
     /// dynamic updates before [`Deployment::wait`].
     pub fn deploy(&self, graph: &LogicalGraph) -> Result<Deployment> {
+        // File-backed sources are validated up front so an unreadable
+        // file is a job-level error here, not a panic (or silently empty
+        // stream) on the instance thread that first opens it.
+        for op in &graph.ops {
+            if let OpKind::Source(SourceKind::FileLines(path)) = &op.kind {
+                let cannot = |detail: String| {
+                    Error::Runtime(format!(
+                        "source '{}': cannot read file {}: {detail}",
+                        op.name,
+                        path.display()
+                    ))
+                };
+                let meta = std::fs::metadata(path).map_err(|e| cannot(e.to_string()))?;
+                if !meta.is_file() {
+                    return Err(cannot("not a regular file".into()));
+                }
+                std::fs::File::open(path).map_err(|e| cannot(e.to_string()))?;
+            }
+        }
         let decouple = self.config.decouple_units && self.config.planner == PlannerKind::FlowUnits;
         let plan = make_plan(
             graph,
@@ -170,6 +239,10 @@ pub struct Deployment {
     ingest_threads: Vec<std::thread::JoinHandle<()>>,
     source_stop: Arc<AtomicBool>,
     unit_stops: BTreeMap<(usize, String), Arc<AtomicBool>>,
+    /// Builder-context identities executed by this deployment (launch
+    /// graph + every update_unit replacement), for CollectHandle
+    /// validation in the final report.
+    origins: BTreeSet<u64>,
     /// Deployment-wide drain-and-handoff epoch, bumped once per
     /// `update_unit` before any stop flag is raised; quiescing instances
     /// stamp their state snapshots (and markers) with it.
@@ -193,6 +266,7 @@ impl Deployment {
         } else {
             None
         };
+        let origins = BTreeSet::from([graph.origin]);
         let mut dep = Deployment {
             graph,
             cluster,
@@ -207,6 +281,7 @@ impl Deployment {
             ingest_threads: Vec::new(),
             source_stop: Arc::new(AtomicBool::new(false)),
             unit_stops: BTreeMap::new(),
+            origins,
             update_epoch: Arc::new(AtomicU64::new(0)),
             started: Instant::now(),
         };
@@ -552,8 +627,12 @@ impl Deployment {
                 OpKind::Source(_) => {} // driven by InputKind::Source
                 OpKind::Map(f) => ops.push(Box::new(MapExec(f.clone()))),
                 OpKind::Filter(f) => ops.push(Box::new(FilterExec(f.clone()))),
+                OpKind::FilterMap(f) => ops.push(Box::new(FilterMapExec(f.clone()))),
                 OpKind::FlatMap(f) => ops.push(Box::new(FlatMapExec(f.clone()))),
                 OpKind::KeyBy(f) => ops.push(Box::new(KeyByExec(f.clone()))),
+                // same executor as FilterMap: the closure already emits
+                // the finished Pair(key, value); only routing differs
+                OpKind::KeyByFused(f) => ops.push(Box::new(FilterMapExec(f.clone()))),
                 OpKind::Fold { init, step } => {
                     ops.push(Box::new(FoldExec::new(init.clone(), step.clone())))
                 }
@@ -579,6 +658,7 @@ impl Deployment {
                 }
                 OpKind::Sink(kind) => ops.push(Box::new(SinkExec::new(
                     *kind,
+                    oid,
                     self.collector.clone(),
                     self.metrics.clone(),
                 ))),
@@ -767,7 +847,9 @@ impl Deployment {
         let t0 = Instant::now();
 
         // swap the graph (same shape; new closures/artifacts, possibly a
-        // re-scoped target unit)
+        // re-scoped target unit); both the original graph's CollectHandles
+        // and the replacement's stay redeemable against the final report
+        self.origins.insert(new_graph.origin);
         self.graph = new_graph;
 
         // roll the unit zone by zone: quiesce, collect handed-off state,
@@ -1159,6 +1241,8 @@ impl Deployment {
             corrupt_records: m.corrupt_records.load(Ordering::Relaxed),
             plan_description: self.plan.describe(&self.graph),
             metrics: self.metrics.clone(),
+            collected_tagged: std::mem::take(&mut *self.collector.tagged.lock().unwrap()),
+            origins: std::mem::take(&mut self.origins),
         })
     }
 }

@@ -22,6 +22,10 @@ pub enum Error {
     Queue(String),
     /// Value codec failure (truncated frame, bad tag, ...).
     Codec(String),
+    /// A typed-layer decode failure: a `Value` did not match the native
+    /// type a `StreamData` conversion expected (typed closures and
+    /// `JobReport::take` surface this instead of panicking).
+    Decode(String),
     /// Runtime execution failure.
     Runtime(String),
     /// XLA / PJRT failure (artifact missing, compile or execute error).
@@ -40,6 +44,7 @@ impl fmt::Display for Error {
             Error::Topology(m) => write!(f, "topology error: {m}"),
             Error::Queue(m) => write!(f, "queue error: {m}"),
             Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Decode(m) => write!(f, "decode error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),

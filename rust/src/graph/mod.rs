@@ -36,6 +36,8 @@ pub type UnitId = usize;
 pub type MapFn = Arc<dyn Fn(Value) -> Value + Send + Sync>;
 /// Predicate.
 pub type FilterFn = Arc<dyn Fn(&Value) -> bool + Send + Sync>;
+/// Filtering transform: `None` drops the record.
+pub type FilterMapFn = Arc<dyn Fn(Value) -> Option<Value> + Send + Sync>;
 /// One-to-many transform.
 pub type FlatMapFn = Arc<dyn Fn(Value) -> Vec<Value> + Send + Sync>;
 /// Key extractor.
@@ -156,8 +158,11 @@ impl std::fmt::Debug for SourceKind {
 /// Sink definitions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SinkKind {
-    /// Collect events into the job report.
+    /// Collect events into the job report (`JobReport::collected`).
     Collect,
+    /// Collect events tagged by sink operator id — the typed layer's
+    /// collect sink, redeemed per-handle through `JobReport::take`.
+    CollectTagged,
     /// Count events only.
     Count,
     /// Drop events (pure benchmark sink).
@@ -173,10 +178,19 @@ pub enum OpKind {
     Map(MapFn),
     /// Predicate filter.
     Filter(FilterFn),
+    /// Filtering transform (`map` + `filter` in one pass; `None` drops
+    /// the record — also the typed layer's suppress-on-decode-failure
+    /// lowering).
+    FilterMap(FilterMapFn),
     /// One-to-many transform.
     FlatMap(FlatMapFn),
     /// Key extraction; the outgoing edge is hash-partitioned.
     KeyBy(KeyFn),
+    /// Fused key extraction over the owned record: the closure emits the
+    /// complete `Pair(key, value)` (or `None` to drop the record) in one
+    /// pass — the typed layer's clone-free `key_by` lowering. Routes and
+    /// breaks stages exactly like [`OpKind::KeyBy`].
+    KeyByFused(FilterMapFn),
     /// Keyed fold, emitting `Pair(key, acc)` per key at end-of-stream.
     Fold {
         /// Initial accumulator (cloned per key).
@@ -223,8 +237,10 @@ impl std::fmt::Debug for OpKind {
             OpKind::Source(s) => write!(f, "Source({s:?})"),
             OpKind::Map(_) => write!(f, "Map"),
             OpKind::Filter(_) => write!(f, "Filter"),
+            OpKind::FilterMap(_) => write!(f, "FilterMap"),
             OpKind::FlatMap(_) => write!(f, "FlatMap"),
             OpKind::KeyBy(_) => write!(f, "KeyBy"),
+            OpKind::KeyByFused(_) => write!(f, "KeyByFused"),
             OpKind::Fold { .. } => write!(f, "Fold"),
             OpKind::Reduce { .. } => write!(f, "Reduce"),
             OpKind::Window { size, slide, agg } => {
@@ -271,6 +287,11 @@ pub struct LogicalGraph {
     pub ops: Vec<LogicalOp>,
     /// FlowUnits referenced by the operators.
     pub units: Vec<UnitDef>,
+    /// Identity of the builder context that produced this graph (0 when
+    /// the graph was constructed directly). Stamped onto typed
+    /// `CollectHandle`s so a handle cannot silently redeem against
+    /// another job's report.
+    pub origin: u64,
 }
 
 impl LogicalGraph {
@@ -545,7 +566,10 @@ impl LogicalGraph {
                 let prev = &self.ops[p];
                 prev.unit == op.unit
                     && consumers[p] == 1
-                    && !matches!(prev.kind, OpKind::Source(_) | OpKind::KeyBy(_))
+                    && !matches!(
+                        prev.kind,
+                        OpKind::Source(_) | OpKind::KeyBy(_) | OpKind::KeyByFused(_)
+                    )
             } else {
                 false
             };
@@ -595,7 +619,7 @@ impl LogicalGraph {
     /// the stage ends with `KeyBy`.
     pub fn edge_routing(&self, stage: &Stage) -> crate::channels::Routing {
         let last = &self.ops[*stage.ops.last().unwrap()];
-        if matches!(last.kind, OpKind::KeyBy(_)) {
+        if matches!(last.kind, OpKind::KeyBy(_) | OpKind::KeyByFused(_)) {
             crate::channels::Routing::Hash
         } else {
             crate::channels::Routing::RoundRobin

@@ -33,24 +33,30 @@
 //! ## Quick start
 //!
 //! Jobs are DAGs of named FlowUnits: multiple sources, `union` merges,
-//! `split` fan-outs, and multiple sinks are all first-class. `to_layer`
-//! remains as sugar for opening an anonymous layer-named unit.
+//! `split` fan-outs, and multiple sinks are all first-class. The
+//! front-end is **typed** — streams are `Stream<T>`/`KeyedStream<K, V>`,
+//! closures take native Rust types, and keyed-only operators are
+//! unreachable before `key_by` (illegal orderings are compile errors).
+//! The untyped builder survives as `api::raw` for dynamic-update graph
+//! construction and `Value`-level escape hatches.
 //!
 //! ```no_run
 //! use flowunits::prelude::*;
 //!
 //! let cluster = ClusterSpec::parse(&std::fs::read_to_string("cluster.fu").unwrap()).unwrap();
 //! let mut ctx = StreamContext::new(cluster, JobConfig::default());
-//! ctx.stream(Source::synthetic(1_000_000, |_, i| Value::I64(i as i64)))
+//! let survivors = ctx
+//!     .stream(Source::synthetic(1_000_000, |_, i| i as i64))
 //!     .unit("ingest")
 //!     .to_layer("edge")
-//!     .filter(|v| v.as_i64().unwrap() % 3 == 0)
+//!     .filter(|v| v % 3 == 0)
 //!     .unit("report")
 //!     .to_layer("cloud")
-//!     .map(|v| v)
-//!     .collect_count();
-//! let report = ctx.execute().unwrap();
-//! println!("{} events, {:?}", report.events_out, report.wall_time);
+//!     .map(|v| v * 2)
+//!     .collect();
+//! let mut report = ctx.execute().unwrap();
+//! let values: Vec<i64> = report.take(survivors).unwrap();
+//! println!("{} events, {:?}", values.len(), report.wall_time);
 //! ```
 //!
 //! A deployed job exposes its units by name for zero-downtime updates:
@@ -76,10 +82,13 @@ pub mod topology;
 pub mod util;
 pub mod value;
 
-/// Convenience re-exports for typical users of the library.
+/// Convenience re-exports for typical users of the library. `Source`,
+/// `Stream`, and `KeyedStream` are the **typed** front-end; the untyped
+/// builder remains available under [`api::raw`].
 pub mod prelude {
     pub use crate::api::{
-        JobConfig, PlannerKind, Replication, Source, Stream, StreamContext, WindowAgg,
+        CollectHandle, Features, JobConfig, KeyedStream, PlannerKind, Replication, Source,
+        Stream, StreamContext, StreamData, WindowAgg,
     };
     pub use crate::config::ClusterSpec;
     pub use crate::coordinator::{Coordinator, Deployment, JobReport};

@@ -6,7 +6,7 @@
 //! flowunits fig3   [--events N]            # full Fig. 3 heatmap sweep
 //! ```
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::config::{eval_cluster, ClusterSpec};
 use flowunits::netsim::LinkSpec;
 use flowunits::value::Value;

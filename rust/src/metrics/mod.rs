@@ -40,6 +40,10 @@ pub struct MetricsRegistry {
     /// Corrupt queue records skipped by consumers (each one is a record
     /// that failed to decode; the job keeps running instead of aborting).
     pub corrupt_records: AtomicU64,
+    /// Source inputs that became unreadable after deploy-time validation
+    /// (e.g. a source file deleted mid-run); the affected instance
+    /// produces nothing instead of panicking.
+    pub source_errors: AtomicU64,
     /// Epoch markers forwarded between instances during drain-and-handoff
     /// dynamic updates.
     pub epochs_forwarded: AtomicU64,
@@ -113,6 +117,10 @@ impl MetricsRegistry {
         let cr = self.corrupt_records.load(Ordering::Relaxed);
         if cr > 0 {
             s.push_str(&format!("corrupt records  : {cr} (skipped)\n"));
+        }
+        let se = self.source_errors.load(Ordering::Relaxed);
+        if se > 0 {
+            s.push_str(&format!("source errors    : {se} (inputs skipped)\n"));
         }
         let ef = self.epochs_forwarded.load(Ordering::Relaxed);
         let up = self.update_pause_ms.load(Ordering::Relaxed);

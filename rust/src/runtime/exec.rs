@@ -1,10 +1,10 @@
 //! Operator executors: the runtime counterparts of
 //! [`OpKind`](crate::graph::OpKind), fused into per-stage chains.
 
-use crate::graph::{FoldFn, ReduceFn, WindowAgg};
+use crate::graph::{FoldFn, ReduceFn, SinkKind, WindowAgg};
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::value::{Batch, Value};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::hash::{BuildHasherDefault, Hasher};
 use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Mutex};
@@ -120,6 +120,14 @@ pub struct FilterExec(pub crate::graph::FilterFn);
 impl OpExec for FilterExec {
     fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
         out.extend(batch.into_values().into_iter().filter(|v| (self.0)(v)));
+    }
+}
+
+/// `filter_map`: one pass, `None` drops the record.
+pub struct FilterMapExec(pub crate::graph::FilterMapFn);
+impl OpExec for FilterMapExec {
+    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
+        out.extend(batch.into_values().into_iter().filter_map(|v| (self.0)(v)));
     }
 }
 
@@ -435,22 +443,28 @@ impl OpExec for WindowExec {
 pub struct Collector {
     /// Collected values (for `SinkKind::Collect`).
     pub values: Mutex<Vec<Value>>,
+    /// Values collected by tagged (typed) sinks, keyed by sink operator
+    /// id; redeemed per `CollectHandle` through `JobReport::take`.
+    pub tagged: Mutex<BTreeMap<usize, Vec<Value>>>,
     /// Count of all events that reached any sink.
     pub count: AtomicU64,
 }
 
 /// Terminal sink executor.
 pub struct SinkExec {
-    kind: crate::graph::SinkKind,
+    kind: SinkKind,
+    /// Logical operator id of this sink (tags typed collects).
+    op: usize,
     collector: Arc<Collector>,
     metrics: Metrics,
 }
 
 impl SinkExec {
-    /// Creates a sink executor.
-    pub fn new(kind: crate::graph::SinkKind, collector: Arc<Collector>, metrics: Metrics) -> Self {
+    /// Creates a sink executor for the sink at logical operator id `op`.
+    pub fn new(kind: SinkKind, op: usize, collector: Arc<Collector>, metrics: Metrics) -> Self {
         SinkExec {
             kind,
+            op,
             collector,
             metrics,
         }
@@ -464,14 +478,25 @@ impl OpExec for SinkExec {
         self.collector
             .count
             .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
-        // only Collect materialises the payload; Count/Discard sinks stay
-        // zero-copy even when the batch is shared with sibling edges
-        if matches!(self.kind, crate::graph::SinkKind::Collect) {
-            self.collector
+        // only the collecting kinds materialise the payload; Count/Discard
+        // sinks stay zero-copy even when the batch is shared with sibling
+        // edges
+        match self.kind {
+            SinkKind::Collect => self
+                .collector
                 .values
                 .lock()
                 .unwrap()
-                .extend(batch.into_values());
+                .extend(batch.into_values()),
+            SinkKind::CollectTagged => self
+                .collector
+                .tagged
+                .lock()
+                .unwrap()
+                .entry(self.op)
+                .or_default()
+                .extend(batch.into_values()),
+            SinkKind::Count | SinkKind::Discard => {}
         }
     }
 }
@@ -814,7 +839,7 @@ mod tests {
     fn sink_collects_and_counts() {
         let collector = Arc::new(Collector::default());
         let m = crate::metrics::MetricsRegistry::new();
-        let mut sink = SinkExec::new(crate::graph::SinkKind::Collect, collector.clone(), m.clone());
+        let mut sink = SinkExec::new(SinkKind::Collect, 0, collector.clone(), m.clone());
         let mut out = Vec::new();
         sink.process(vec![Value::I64(1), Value::I64(2)].into(), &mut out);
         assert!(out.is_empty());
@@ -824,6 +849,25 @@ mod tests {
             2
         );
         assert_eq!(m.events_out.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn tagged_sinks_segregate_by_op_id() {
+        let collector = Arc::new(Collector::default());
+        let m = crate::metrics::MetricsRegistry::new();
+        let mut a = SinkExec::new(SinkKind::CollectTagged, 7, collector.clone(), m.clone());
+        let mut b = SinkExec::new(SinkKind::CollectTagged, 9, collector.clone(), m.clone());
+        let mut out = Vec::new();
+        a.process(vec![Value::I64(1), Value::I64(2)].into(), &mut out);
+        b.process(vec![Value::Str("x".into())].into(), &mut out);
+        let tagged = collector.tagged.lock().unwrap();
+        assert_eq!(tagged[&7], vec![Value::I64(1), Value::I64(2)]);
+        assert_eq!(tagged[&9], vec![Value::Str("x".into())]);
+        assert!(
+            collector.values.lock().unwrap().is_empty(),
+            "tagged values never leak into the flat collection"
+        );
+        assert_eq!(m.events_out.load(std::sync::atomic::Ordering::Relaxed), 3);
     }
 
     #[test]

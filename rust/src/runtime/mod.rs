@@ -316,8 +316,18 @@ fn run_source(
             }
         }
         SourceKind::FileLines(path) => {
-            let text = std::fs::read_to_string(path)
-                .unwrap_or_else(|e| panic!("source file {}: {e}", path.display()));
+            // Unreadable files are rejected by `Coordinator::deploy` before
+            // any thread spawns; this guards the race where the file
+            // disappears between validation and the read — the instance
+            // produces nothing (and counts the failure) instead of
+            // panicking the whole job.
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(_) => {
+                    MetricsRegistry::add(&metrics.source_errors, 1);
+                    String::new()
+                }
+            };
             let mut batch = Vec::with_capacity(src.batch_size);
             for (i, line) in text.lines().enumerate() {
                 if (i as u64) % n != idx {
@@ -352,6 +362,7 @@ mod tests {
         let c = Arc::new(Collector::default());
         let sink: Vec<Box<dyn OpExec>> = vec![Box::new(exec::SinkExec::new(
             SinkKind::Collect,
+            0,
             c.clone(),
             metrics.clone(),
         ))];

@@ -8,6 +8,11 @@
 //! Values that cross a host boundary are encoded with the compact binary
 //! codec in this module (tag byte + payload, varint lengths); values that
 //! stay on the same host move by pointer.
+//!
+//! The [`StreamData`] trait maps native Rust types onto this dynamic
+//! representation; it is the contract behind the typed front-end
+//! (`api::typed`), which lets user closures work with `i64`/`String`/tuple
+//! values while the engine underneath keeps exchanging [`Value`] batches.
 
 use crate::error::{Error, Result};
 use std::sync::{Arc, OnceLock};
@@ -95,6 +100,20 @@ impl Value {
         match self {
             Value::List(v) => Some(v),
             _ => None,
+        }
+    }
+
+    /// Name of this value's variant (diagnostics; decode-error messages).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Value::Null => "Null",
+            Value::Bool(_) => "Bool",
+            Value::I64(_) => "I64",
+            Value::F64(_) => "F64",
+            Value::Str(_) => "Str",
+            Value::Pair(_) => "Pair",
+            Value::List(_) => "List",
+            Value::F32s(_) => "F32s",
         }
     }
 
@@ -285,6 +304,165 @@ const TAG_STR: u8 = 4;
 const TAG_PAIR: u8 = 5;
 const TAG_LIST: u8 = 6;
 const TAG_F32S: u8 = 7;
+
+/// Native Rust types that can travel through the dataflow engine.
+///
+/// The engine's data plane is dynamically typed — every event is a
+/// [`Value`] — but the typed front-end (`api::typed`) lets user closures
+/// work with native types. `StreamData` is the bridge: [`into_value`]
+/// encodes a native value at the graph boundary, [`try_from_value`]
+/// decodes it back on the way into a typed closure or out of a typed
+/// collect sink. A shape mismatch is a recoverable
+/// [`Error::Decode`](crate::error::Error::Decode), never a panic.
+///
+/// Provided implementations:
+///
+/// | Rust type | `Value` representation |
+/// | --- | --- |
+/// | `i64` | `I64` |
+/// | `f64` | `F64` (decodes `I64` too, mirroring [`Value::as_f64`]) |
+/// | `bool` | `Bool` |
+/// | `String` | `Str` |
+/// | `(A, B)` | `Pair` — the engine's keyed-record shape |
+/// | `(A, B, C)` | `List` of three elements |
+/// | `Vec<T>` | `List` |
+/// | `Value` | itself (the escape hatch; never fails to decode) |
+///
+/// `api::data::Features` additionally maps a dense `f32` feature row onto
+/// `F32s` for windowed feature extraction and the XLA operator.
+///
+/// [`into_value`]: StreamData::into_value
+/// [`try_from_value`]: StreamData::try_from_value
+pub trait StreamData: Sized + Send + Sync + 'static {
+    /// Encodes `self` as the engine's dynamic [`Value`].
+    fn into_value(self) -> Value;
+    /// Decodes an engine [`Value`] back into the native type; a shape
+    /// mismatch is an [`Error::Decode`](crate::error::Error::Decode).
+    fn try_from_value(v: Value) -> Result<Self>;
+}
+
+/// The [`Error::Decode`](crate::error::Error::Decode) a [`StreamData`]
+/// implementation should return on a shape mismatch: names the expected
+/// Rust type and the [`Value`] variant actually found.
+pub fn decode_mismatch<T>(got: &Value) -> Error {
+    Error::Decode(format!(
+        "expected {}, got Value::{}",
+        std::any::type_name::<T>(),
+        got.kind_name()
+    ))
+}
+
+impl StreamData for Value {
+    fn into_value(self) -> Value {
+        self
+    }
+    fn try_from_value(v: Value) -> Result<Value> {
+        Ok(v)
+    }
+}
+
+impl StreamData for i64 {
+    fn into_value(self) -> Value {
+        Value::I64(self)
+    }
+    fn try_from_value(v: Value) -> Result<i64> {
+        match v {
+            Value::I64(x) => Ok(x),
+            other => Err(decode_mismatch::<i64>(&other)),
+        }
+    }
+}
+
+impl StreamData for f64 {
+    /// Decoding accepts `I64` too (mirroring [`Value::as_f64`]); like
+    /// that conversion, integers with magnitude above 2^53 lose
+    /// precision. Mixed raw/typed pipelines that must preserve full
+    /// 64-bit integers should type the stream as `i64` or `Value`.
+    fn into_value(self) -> Value {
+        Value::F64(self)
+    }
+    fn try_from_value(v: Value) -> Result<f64> {
+        match v {
+            Value::F64(x) => Ok(x),
+            Value::I64(x) => Ok(x as f64),
+            other => Err(decode_mismatch::<f64>(&other)),
+        }
+    }
+}
+
+impl StreamData for bool {
+    fn into_value(self) -> Value {
+        Value::Bool(self)
+    }
+    fn try_from_value(v: Value) -> Result<bool> {
+        match v {
+            Value::Bool(x) => Ok(x),
+            other => Err(decode_mismatch::<bool>(&other)),
+        }
+    }
+}
+
+impl StreamData for String {
+    fn into_value(self) -> Value {
+        Value::Str(self)
+    }
+    fn try_from_value(v: Value) -> Result<String> {
+        match v {
+            Value::Str(x) => Ok(x),
+            other => Err(decode_mismatch::<String>(&other)),
+        }
+    }
+}
+
+impl<A: StreamData, B: StreamData> StreamData for (A, B) {
+    fn into_value(self) -> Value {
+        Value::pair(self.0.into_value(), self.1.into_value())
+    }
+    fn try_from_value(v: Value) -> Result<(A, B)> {
+        match v {
+            Value::Pair(kv) => {
+                let (a, b) = *kv;
+                Ok((A::try_from_value(a)?, B::try_from_value(b)?))
+            }
+            other => Err(decode_mismatch::<(A, B)>(&other)),
+        }
+    }
+}
+
+impl<A: StreamData, B: StreamData, C: StreamData> StreamData for (A, B, C) {
+    fn into_value(self) -> Value {
+        Value::List(vec![
+            self.0.into_value(),
+            self.1.into_value(),
+            self.2.into_value(),
+        ])
+    }
+    fn try_from_value(v: Value) -> Result<(A, B, C)> {
+        match v {
+            Value::List(l) if l.len() == 3 => {
+                let mut it = l.into_iter();
+                Ok((
+                    A::try_from_value(it.next().unwrap())?,
+                    B::try_from_value(it.next().unwrap())?,
+                    C::try_from_value(it.next().unwrap())?,
+                ))
+            }
+            other => Err(decode_mismatch::<(A, B, C)>(&other)),
+        }
+    }
+}
+
+impl<T: StreamData> StreamData for Vec<T> {
+    fn into_value(self) -> Value {
+        Value::List(self.into_iter().map(StreamData::into_value).collect())
+    }
+    fn try_from_value(v: Value) -> Result<Vec<T>> {
+        match v {
+            Value::List(l) => l.into_iter().map(T::try_from_value).collect(),
+            other => Err(decode_mismatch::<Vec<T>>(&other)),
+        }
+    }
+}
 
 /// Encodes a batch of values as one frame body (count-prefixed).
 pub fn encode_batch(batch: &[Value]) -> Vec<u8> {
@@ -730,6 +908,42 @@ mod tests {
         let mut mine = b.into_values();
         mine[0] = Value::I64(999);
         assert_eq!(sibling.values(), &[Value::I64(1)]);
+    }
+
+    fn roundtrip_data<T: StreamData + Clone + PartialEq + std::fmt::Debug>(x: T) {
+        let v = x.clone().into_value();
+        assert_eq!(T::try_from_value(v).unwrap(), x);
+    }
+
+    #[test]
+    fn stream_data_roundtrips_scalars_and_composites() {
+        roundtrip_data(42i64);
+        roundtrip_data(-3.25f64);
+        roundtrip_data(true);
+        roundtrip_data("héllo".to_string());
+        roundtrip_data((7i64, "k".to_string()));
+        roundtrip_data((1i64, 2.0f64, false));
+        roundtrip_data(vec![1i64, 2, 3]);
+        roundtrip_data(vec![("a".to_string(), 1i64), ("b".to_string(), 2i64)]);
+        roundtrip_data(((1i64, 2i64), (true, "x".to_string())));
+        roundtrip_data(Value::Null);
+        roundtrip_data(Value::pair(Value::I64(1), Value::Str("v".into())));
+    }
+
+    #[test]
+    fn stream_data_decode_mismatch_is_decode_error() {
+        let err = i64::try_from_value(Value::Bool(true)).unwrap_err();
+        assert!(matches!(err, Error::Decode(_)), "got {err}");
+        assert!(err.to_string().contains("i64"), "got {err}");
+        assert!(err.to_string().contains("Bool"), "got {err}");
+        assert!(String::try_from_value(Value::Null).is_err());
+        assert!(<(i64, i64)>::try_from_value(Value::I64(1)).is_err());
+        assert!(<Vec<i64>>::try_from_value(Value::List(vec![Value::Bool(true)])).is_err());
+    }
+
+    #[test]
+    fn stream_data_f64_accepts_i64_like_as_f64() {
+        assert_eq!(f64::try_from_value(Value::I64(3)).unwrap(), 3.0);
     }
 
     #[test]

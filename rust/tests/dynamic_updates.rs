@@ -2,7 +2,7 @@
 //! FlowUnit's logic *by name* and adding a geographical location while the
 //! rest of the deployment keeps running, with queue-decoupled boundaries.
 
-use flowunits::api::{JobConfig, PlannerKind, Replication, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Replication, Source, StreamContext, WindowAgg};
 use flowunits::config::{eval_cluster, fig2_cluster};
 use flowunits::coordinator::Coordinator;
 use flowunits::value::Value;

@@ -2,7 +2,7 @@
 //! paper's evaluation cluster, both planners, direct and queue-decoupled
 //! boundaries, shaped links, and result equivalence between deployments.
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::config::{eval_cluster, fig2_cluster};
 use flowunits::netsim::LinkSpec;
 use flowunits::value::Value;

@@ -3,7 +3,7 @@
 //! window/fold algebra, batch copy-on-write / encode-cache laws, and
 //! end-to-end conservation laws.
 
-use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
 use flowunits::channels::{FanOut, Inbox, OutPort, Routing, Target};
 use flowunits::config::eval_cluster;
 use flowunits::proptest::{forall, Gen};

@@ -1,0 +1,524 @@
+//! Integration tests for the typed API layer: `StreamData` round-trip
+//! properties, typed end-to-end pipelines compared against their raw-API
+//! equivalents under both planners, typed collect handles, and the
+//! no-panic decode-failure paths. (The type-state guarantees — `window`
+//! before `key_by`, cross-type `union` — are proven by the
+//! `compile_fail` doc-tests in `api::typed`.)
+
+use flowunits::api::raw;
+use flowunits::config::eval_cluster;
+use flowunits::prelude::*;
+use flowunits::proptest::{forall, Gen};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cluster() -> ClusterSpec {
+    eval_cluster(None, Duration::ZERO)
+}
+
+fn fast(planner: PlannerKind) -> JobConfig {
+    JobConfig {
+        planner,
+        batch_size: 128,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------- values
+
+fn gen_value(g: &mut Gen, depth: usize) -> Value {
+    let arms = if depth == 0 { 5 } else { 8 };
+    match g.usize_in(0, arms) {
+        0 => Value::Null,
+        1 => Value::Bool(g.bool(0.5)),
+        2 => Value::I64(g.i64_in(-1_000_000, 1_000_000)),
+        3 => Value::F64(g.f64_in(-1e9, 1e9)),
+        4 => Value::Str(g.ident(12)),
+        5 => {
+            let a = gen_value(g, depth - 1);
+            let b = gen_value(g, depth - 1);
+            Value::pair(a, b)
+        }
+        6 => {
+            let n = g.usize_in(0, 4);
+            Value::List(g.vec_of(n, |g| gen_value(g, depth - 1)))
+        }
+        _ => {
+            let n = g.usize_in(0, 4);
+            Value::F32s(g.vec_of(n, |g| g.f64_in(-100.0, 100.0) as f32))
+        }
+    }
+}
+
+#[test]
+fn stream_data_scalar_roundtrip_properties() {
+    forall("i64 roundtrips", 256, |g| {
+        let x = g.i64_in(i64::MIN / 2, i64::MAX / 2);
+        assert_eq!(i64::try_from_value(x.into_value()).unwrap(), x);
+    });
+    forall("f64 roundtrips", 256, |g| {
+        let x = g.f64_in(-1e12, 1e12);
+        assert_eq!(f64::try_from_value(x.into_value()).unwrap(), x);
+    });
+    forall("bool roundtrips", 16, |g| {
+        let x = g.bool(0.5);
+        assert_eq!(bool::try_from_value(x.into_value()).unwrap(), x);
+    });
+    forall("String roundtrips", 256, |g| {
+        let x = g.ident(24);
+        assert_eq!(String::try_from_value(x.clone().into_value()).unwrap(), x);
+    });
+}
+
+#[test]
+fn stream_data_composite_roundtrip_properties() {
+    forall("(i64, String) roundtrips", 128, |g| {
+        let x = (g.i64_in(-1000, 1000), g.ident(8));
+        assert_eq!(
+            <(i64, String)>::try_from_value(x.clone().into_value()).unwrap(),
+            x
+        );
+    });
+    forall("nested tuple roundtrips", 128, |g| {
+        let x = (
+            (g.i64_in(-1000, 1000), g.f64_in(-10.0, 10.0)),
+            (g.bool(0.5), g.ident(6)),
+        );
+        assert_eq!(
+            <((i64, f64), (bool, String))>::try_from_value(x.clone().into_value()).unwrap(),
+            x
+        );
+    });
+    forall("3-tuple roundtrips", 128, |g| {
+        let x = (g.i64_in(0, 100), g.f64_in(0.0, 1.0), g.bool(0.5));
+        assert_eq!(
+            <(i64, f64, bool)>::try_from_value(x.into_value()).unwrap(),
+            x
+        );
+    });
+    forall("Vec<i64> roundtrips", 128, |g| {
+        let n = g.usize_in(0, 16);
+        let x = g.vec_of(n, |g| g.i64_in(-1000, 1000));
+        assert_eq!(<Vec<i64>>::try_from_value(x.clone().into_value()).unwrap(), x);
+    });
+    forall("Features roundtrips", 128, |g| {
+        let n = g.usize_in(0, 8);
+        let x = Features(g.vec_of(n, |g| g.f64_in(-100.0, 100.0) as f32));
+        assert_eq!(Features::try_from_value(x.clone().into_value()).unwrap(), x);
+    });
+    forall("Value escape hatch roundtrips (incl. Null)", 256, |g| {
+        let x = gen_value(g, 3);
+        assert_eq!(Value::try_from_value(x.clone()).unwrap(), x);
+    });
+}
+
+#[test]
+fn stream_data_mismatches_are_decode_errors() {
+    assert!(matches!(
+        i64::try_from_value(Value::Str("7".into())),
+        Err(Error::Decode(_))
+    ));
+    assert!(matches!(
+        <(i64, i64)>::try_from_value(Value::List(vec![Value::I64(1), Value::I64(2)])),
+        Err(Error::Decode(_)),
+    ));
+    assert!(matches!(
+        <(i64, f64, bool)>::try_from_value(Value::List(vec![Value::I64(1)])),
+        Err(Error::Decode(_)),
+    ));
+    assert!(matches!(
+        Features::try_from_value(Value::List(vec![])),
+        Err(Error::Decode(_))
+    ));
+}
+
+// ------------------------------------------------- typed vs raw parity
+
+fn typed_wordcount(planner: PlannerKind) -> Vec<(String, i64)> {
+    let text = ["the cat", "the dog", "the cat sat"];
+    let lines: Vec<String> = text.iter().map(|l| l.to_string()).collect();
+    let mut ctx = StreamContext::new(cluster(), fast(planner));
+    // zero `as_*()` / `unwrap()` calls inside the user closures below
+    let handle = ctx
+        .stream(Source::vector(lines))
+        .to_layer("cloud")
+        .flat_map(|line| {
+            line.split(' ')
+                .map(str::to_string)
+                .collect::<Vec<String>>()
+        })
+        .group_by(|w| w.clone())
+        .fold(0i64, |acc, _| *acc += 1)
+        .collect();
+    let mut report = ctx.execute().unwrap();
+    let mut counts = report.take(handle).unwrap();
+    counts.sort();
+    counts
+}
+
+fn raw_wordcount(planner: PlannerKind) -> Vec<(String, i64)> {
+    let text = ["the cat", "the dog", "the cat sat"];
+    let lines: Vec<Value> = text.iter().map(|l| Value::Str(l.to_string())).collect();
+    let mut ctx = StreamContext::new(cluster(), fast(planner));
+    ctx.stream(raw::Source::vector(lines))
+        .to_layer("cloud")
+        .flat_map(|v| {
+            v.as_str()
+                .unwrap()
+                .split(' ')
+                .map(|w| Value::Str(w.to_string()))
+                .collect()
+        })
+        .group_by(|w| w.clone())
+        .fold(Value::I64(0), |acc, _| {
+            *acc = Value::I64(acc.as_i64().unwrap() + 1)
+        })
+        .collect_vec();
+    let report = ctx.execute().unwrap();
+    let mut counts: Vec<(String, i64)> = report
+        .collected
+        .iter()
+        .map(|v| {
+            let (w, c) = v.as_pair().unwrap();
+            (w.as_str().unwrap().to_string(), c.as_i64().unwrap())
+        })
+        .collect();
+    counts.sort();
+    counts
+}
+
+#[test]
+fn typed_wordcount_matches_raw_under_both_planners() {
+    for planner in [PlannerKind::FlowUnits, PlannerKind::Renoir] {
+        let typed = typed_wordcount(planner);
+        let raw = raw_wordcount(planner);
+        assert_eq!(typed, raw, "{planner:?}");
+        assert_eq!(
+            typed,
+            vec![
+                ("cat".to_string(), 2),
+                ("dog".to_string(), 1),
+                ("sat".to_string(), 1),
+                ("the".to_string(), 3)
+            ],
+            "{planner:?}"
+        );
+    }
+}
+
+fn typed_keyed_window(planner: PlannerKind) -> (u64, Vec<(i64, i64)>) {
+    let mut ctx = StreamContext::new(cluster(), fast(planner));
+    let handle = ctx
+        .stream(Source::synthetic(8000, |_, i| i as i64))
+        .to_layer("edge")
+        .map(|v| v)
+        .to_layer("site")
+        .key_by(|v| v % 8)
+        .window::<i64>(100, WindowAgg::Count)
+        .to_layer("cloud")
+        .collect();
+    let mut report = ctx.execute().unwrap();
+    let mut windows = report.take(handle).unwrap();
+    windows.sort();
+    (report.events_in, windows)
+}
+
+fn raw_keyed_window(planner: PlannerKind) -> (u64, Vec<(i64, i64)>) {
+    let mut ctx = StreamContext::new(cluster(), fast(planner));
+    ctx.stream(raw::Source::synthetic(8000, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .map(|v| v)
+        .to_layer("site")
+        .key_by(|v| Value::I64(v.as_i64().unwrap() % 8))
+        .window(100, WindowAgg::Count)
+        .to_layer("cloud")
+        .collect_vec();
+    let report = ctx.execute().unwrap();
+    let mut windows: Vec<(i64, i64)> = report
+        .collected
+        .iter()
+        .map(|v| {
+            let (k, c) = v.as_pair().unwrap();
+            (k.as_i64().unwrap(), c.as_i64().unwrap())
+        })
+        .collect();
+    windows.sort();
+    (report.events_in, windows)
+}
+
+#[test]
+fn typed_keyed_window_matches_raw_under_both_planners() {
+    for planner in [PlannerKind::FlowUnits, PlannerKind::Renoir] {
+        let (t_in, typed) = typed_keyed_window(planner);
+        let (r_in, raw) = raw_keyed_window(planner);
+        assert_eq!(t_in, r_in, "{planner:?}");
+        assert_eq!(typed, raw, "{planner:?}");
+        // 8000 events / 8 keys = 10 full windows per key, count=100 each
+        assert_eq!(typed.len(), 80, "{planner:?}");
+        assert!(typed.iter().all(|&(_, c)| c == 100), "{planner:?}");
+    }
+}
+
+// ----------------------------------------------- typed-only pipelines
+
+#[test]
+fn typed_tuple_pipeline_reduces_keyed_max() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let handle = ctx
+        .stream(Source::synthetic(1000, |_, i| (i as i64 % 3, i as i64)))
+        .to_layer("cloud")
+        .key_by(|r| r.0)
+        .map_values(|r| r.1)
+        .reduce(|a, b| (*a).max(*b))
+        .collect();
+    let mut report = ctx.execute().unwrap();
+    let mut maxes = report.take(handle).unwrap();
+    maxes.sort();
+    assert_eq!(maxes, vec![(0, 999), (1, 997), (2, 998)]);
+}
+
+#[test]
+fn typed_union_inspect_and_count() {
+    let seen = Arc::new(AtomicU64::new(0));
+    let seen2 = seen.clone();
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let north = ctx
+        .stream(Source::synthetic(600, |_, i| i as i64))
+        .unit("north")
+        .to_layer("edge");
+    let south = ctx
+        .stream(Source::synthetic(400, |_, i| i as i64))
+        .unit("south")
+        .to_layer("edge");
+    north
+        .union(south)
+        .unit("merge")
+        .to_layer("cloud")
+        .inspect(move |_| {
+            seen2.fetch_add(1, Ordering::Relaxed);
+        })
+        .collect_count();
+    let report = ctx.execute().unwrap();
+    assert_eq!(report.events_out, 1000);
+    assert_eq!(seen.load(Ordering::Relaxed), 1000);
+}
+
+#[test]
+fn typed_features_window_feeds_typed_map_values() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let handle = ctx
+        .stream(Source::synthetic(64, |_, i| (0i64, i as f64)))
+        .to_layer("cloud")
+        .key_by(|r| r.0)
+        .map_values(|r| r.1)
+        .window::<Features>(32, WindowAgg::FeatureStats)
+        .map_values(|Features(row)| row.len() as i64)
+        .collect();
+    let mut report = ctx.execute().unwrap();
+    let rows = report.take(handle).unwrap();
+    assert_eq!(rows, vec![(0, 5), (0, 5)], "two windows of 5 features each");
+}
+
+#[test]
+fn keyed_entries_reinterpret_as_tuple_stream() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let handle = ctx
+        .stream(Source::synthetic(10, |_, i| i as i64))
+        .to_layer("cloud")
+        .key_by(|v| v % 2)
+        .entries()
+        .map(|(k, v)| k * 1000 + v)
+        .collect();
+    let mut report = ctx.execute().unwrap();
+    let sum: i64 = report.take(handle).unwrap().into_iter().sum();
+    // Σ (i % 2) * 1000 + i for i in 0..10 = 5000 + 45
+    assert_eq!(sum, 5045);
+}
+
+#[test]
+fn split_with_two_typed_sinks_segregates_by_handle() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let s = ctx
+        .stream(Source::synthetic(100, |_, i| i as i64))
+        .to_layer("cloud");
+    let (evens, labels) = s.split();
+    let evens = evens.unit("evens").filter(|v| v % 2 == 0).collect();
+    let labels = labels.unit("labels").map(|v| format!("v{v}")).collect();
+    let mut report = ctx.execute().unwrap();
+    let evens: Vec<i64> = report.take(evens).unwrap();
+    let labels: Vec<String> = report.take(labels).unwrap();
+    assert_eq!(evens.len(), 50);
+    assert!(evens.iter().all(|v| v % 2 == 0));
+    assert_eq!(labels.len(), 100);
+    assert!(
+        report.collected.is_empty(),
+        "typed sinks do not leak into the flat collection"
+    );
+}
+
+#[test]
+fn take_of_an_empty_typed_sink_is_ok_and_empty() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let handle = ctx
+        .stream(Source::synthetic(100, |_, i| i as i64))
+        .to_layer("cloud")
+        .filter(|_| false)
+        .collect();
+    let mut report = ctx.execute().unwrap();
+    let got: Vec<i64> = report.take(handle).unwrap();
+    assert!(got.is_empty());
+}
+
+// --------------------------------------------------- no-panic failures
+
+#[test]
+fn mixed_raw_typed_decode_failure_is_error_not_panic() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let untyped = ctx
+        .stream(raw::Source::vector(vec![Value::Bool(true); 10]))
+        .to_layer("cloud");
+    // wrong claim: the stream carries Bool, not i64
+    Stream::<i64>::from_raw(untyped).map(|v| v + 1).collect_count();
+    let err = ctx.execute().unwrap_err();
+    assert!(matches!(err, Error::Decode(_)), "got {err}");
+    assert!(err.to_string().contains("i64"), "got {err}");
+    assert_eq!(ctx.decode_failures(), 10, "every event counted");
+}
+
+#[test]
+fn take_with_wrong_type_is_decode_error_not_panic() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let untyped = ctx
+        .stream(raw::Source::vector(vec![Value::Str("x".into())]))
+        .to_layer("cloud");
+    let handle = Stream::<i64>::from_raw(untyped).collect();
+    // no typed closure ran, so the job itself succeeds ...
+    let mut report = ctx.execute().unwrap();
+    // ... and the mismatch surfaces at redemption time
+    let err = report.take(handle).unwrap_err();
+    assert!(matches!(err, Error::Decode(_)), "got {err}");
+}
+
+#[test]
+fn handle_from_another_job_is_rejected_not_mixed_up() {
+    let run = |n: u64| {
+        let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+        let handle = ctx
+            .stream(Source::synthetic(n, |_, i| i as i64))
+            .to_layer("cloud")
+            .collect();
+        (ctx.execute().unwrap(), handle)
+    };
+    let (mut report_a, handle_a) = run(10);
+    let (mut report_b, handle_b) = run(20);
+    // cross redemption: same sink op ids, different jobs — must error
+    let err = report_a.take(handle_b).unwrap_err();
+    assert!(matches!(err, Error::Decode(_)), "got {err}");
+    assert!(
+        err.to_string().contains("different builder context"),
+        "got {err}"
+    );
+    // the opposite cross-redemption errors too ...
+    assert!(report_b
+        .take(handle_a)
+        .unwrap_err()
+        .to_string()
+        .contains("different builder context"));
+    // ... while a report's own handle redeems fine
+    let (mut report_c, handle_c) = run(7);
+    assert_eq!(report_c.take(handle_c).unwrap().len(), 7);
+}
+
+#[test]
+fn decode_failures_suppress_events_instead_of_poisoning() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let untyped = ctx
+        .stream(raw::Source::vector(vec![
+            Value::I64(1),
+            Value::Bool(true), // the lie
+            Value::I64(3),
+        ]))
+        .to_layer("cloud");
+    let handle = Stream::<i64>::from_raw(untyped)
+        .map(|v| v * 10)
+        .filter(|v| *v > 0)
+        .collect();
+    let err = ctx.execute().unwrap_err();
+    assert!(matches!(err, Error::Decode(_)), "got {err}");
+    // exactly one failure: the bad event is dropped at the first shim and
+    // never re-fails downstream
+    assert_eq!(ctx.decode_failures(), 1);
+    drop(handle);
+}
+
+#[test]
+fn directory_as_file_source_is_job_error_not_silent_empty_stream() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    ctx.stream(Source::file_lines(std::env::temp_dir()))
+        .to_layer("cloud")
+        .collect_count();
+    let err = ctx.execute().unwrap_err();
+    assert!(err.to_string().contains("not a regular file"), "got {err}");
+}
+
+#[test]
+fn unreadable_file_source_is_job_error_not_panic() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    ctx.stream(Source::file_lines("/definitely/not/here/fu.txt"))
+        .to_layer("cloud")
+        .collect_count();
+    let err = ctx.execute().unwrap_err();
+    assert!(matches!(err, Error::Runtime(_)), "got {err}");
+    assert!(err.to_string().contains("cannot read file"), "got {err}");
+}
+
+#[test]
+fn raw_unreadable_file_source_is_job_error_from_deploy_too() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    ctx.stream(raw::Source::file_lines("/definitely/not/here/fu.txt"))
+        .to_layer("cloud")
+        .collect_count();
+    let err = ctx.deploy().err().expect("deploy must fail");
+    assert!(err.to_string().contains("cannot read file"), "got {err}");
+}
+
+#[test]
+fn typed_file_lines_wordcount_roundtrips_through_a_real_file() {
+    let path = std::env::temp_dir().join(format!(
+        "flowunits_typed_api_{}.txt",
+        std::process::id()
+    ));
+    std::fs::write(&path, "alpha beta\nalpha\n").unwrap();
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    let handle = ctx
+        .stream(Source::file_lines(&path))
+        .to_layer("cloud")
+        .flat_map(|line| {
+            line.split_whitespace()
+                .map(str::to_string)
+                .collect::<Vec<String>>()
+        })
+        .group_by(|w| w.clone())
+        .fold(0i64, |acc, _| *acc += 1)
+        .collect();
+    let mut report = ctx.execute().unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut counts = report.take(handle).unwrap();
+    counts.sort();
+    assert_eq!(
+        counts,
+        vec![("alpha".to_string(), 2), ("beta".to_string(), 1)]
+    );
+}
+
+#[test]
+fn typed_to_layer_typo_is_builder_error() {
+    let mut ctx = StreamContext::new(cluster(), fast(PlannerKind::FlowUnits));
+    ctx.stream(Source::synthetic(10, |_, i| i as i64))
+        .to_layer("clouds") // typo
+        .collect_count();
+    let err = ctx.execute().unwrap_err();
+    assert!(matches!(err, Error::Graph(_)), "got {err}");
+    assert!(err.to_string().contains("unknown layer"), "got {err}");
+}
