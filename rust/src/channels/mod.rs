@@ -18,7 +18,12 @@
 //! * `RoundRobin` — rebalance whole batches across allowed targets
 //!   (forward edges);
 //! * `Hash` — partition records by `stable_hash(key)` so every sender maps
-//!   a key to the same target instance (keyed edges, paper's `group_by`);
+//!   a key to the same target instance (keyed edges, paper's `group_by`).
+//!   Batches arriving from a keying operator carry a per-record hash
+//!   column ([`Batch::key_hashes`]) computed when the pair was built, so
+//!   the shuffle is a one-sweep pre-partition over `u64`s — no `Value`
+//!   tree is re-walked; column-less batches fall back to hashing on the
+//!   fly;
 //! * `Broadcast` — replicate to all targets (control/barrier use).
 
 use crate::metrics::{Metrics, MetricsRegistry};
@@ -93,6 +98,10 @@ pub struct OutPort {
     rr_next: usize,
     /// Pending per-target buffers for `Hash` routing.
     pending: Vec<Vec<Value>>,
+    /// Per-target key-hash columns aligned with `pending`, so delivered
+    /// sub-batches carry their hashes forward (a re-shuffle downstream
+    /// never recomputes them).
+    pending_hashes: Vec<Vec<u64>>,
     /// Flush threshold for hash-routed buffers.
     batch_capacity: usize,
     metrics: Option<Metrics>,
@@ -107,12 +116,16 @@ impl OutPort {
         metrics: Option<Metrics>,
     ) -> Self {
         let pending = targets.iter().map(|_| Vec::new()).collect();
+        let pending_hashes = targets.iter().map(|_| Vec::new()).collect();
         OutPort {
             targets,
             routing,
             rr_next: 0,
             pending,
-            batch_capacity,
+            pending_hashes,
+            // a zero capacity would make the hash carving loop spin on
+            // empty chunks; one record per batch is the useful floor
+            batch_capacity: batch_capacity.max(1),
             metrics,
         }
     }
@@ -143,24 +156,77 @@ impl OutPort {
                 self.deliver(last, batch);
             }
             Routing::Hash => {
+                // Pre-partition the whole batch in one sweep: the key
+                // hashes come from the batch's hash column when the
+                // keying operator attached one (no `Value` tree-walks on
+                // the shuffle), falling back to on-the-fly hashing for
+                // un-keyed batches (e.g. frames decoded off the wire).
+                // Copy-on-write takes the payload in place unless a
+                // sibling edge shares the batch.
                 let n = self.targets.len() as u64;
-                // per-record partitioning needs the payload; copy-on-write
-                // takes it in place unless a sibling edge shares the batch
-                for v in batch.into_values() {
-                    let t = (route_hash(&v) % n) as usize;
-                    self.pending[t].push(v);
-                    if self.pending[t].len() >= self.batch_capacity {
-                        // swap in a pre-sized buffer: re-growing from zero
-                        // costs ~log2(batch) reallocs per delivered batch
-                        let full = std::mem::replace(
-                            &mut self.pending[t],
-                            Vec::with_capacity(self.batch_capacity),
-                        );
-                        self.deliver(t, full.into());
+                let (values, hashes) = batch.into_parts();
+                match hashes {
+                    Some(hs) if hs.len() == values.len() => {
+                        for (v, h) in values.into_iter().zip(hs) {
+                            let t = (h % n) as usize;
+                            self.pending_hashes[t].push(h);
+                            self.pending[t].push(v);
+                        }
+                    }
+                    _ => {
+                        for v in values {
+                            let h = route_hash(&v);
+                            let t = (h % n) as usize;
+                            self.pending_hashes[t].push(h);
+                            self.pending[t].push(v);
+                        }
+                    }
+                }
+                // deliver every sub-batch that reached the flush
+                // threshold (capacity check hoisted out of the sweep),
+                // carving capacity-sized batches in one O(n) pass so a
+                // huge inbound batch (e.g. a flat_map expansion) never
+                // becomes one huge delivered frame
+                for t in 0..self.targets.len() {
+                    if self.pending[t].len() < self.batch_capacity {
+                        continue;
+                    }
+                    let cap = self.batch_capacity;
+                    let vals = std::mem::replace(&mut self.pending[t], Vec::with_capacity(cap));
+                    let hs =
+                        std::mem::replace(&mut self.pending_hashes[t], Vec::with_capacity(cap));
+                    let mut vi = vals.into_iter();
+                    let mut hi = hs.into_iter();
+                    loop {
+                        let chunk: Vec<Value> = vi.by_ref().take(cap).collect();
+                        let chunk_h: Vec<u64> = hi.by_ref().take(chunk.len()).collect();
+                        if chunk.len() < cap {
+                            // tail below threshold stays pending (in the
+                            // pre-sized buffers) for future sends
+                            self.pending[t].extend(chunk);
+                            self.pending_hashes[t].extend(chunk_h);
+                            break;
+                        }
+                        self.deliver(t, Batch::with_hashes(chunk, chunk_h));
                     }
                 }
             }
         }
+    }
+
+    /// Delivers target `t`'s whole pending sub-batch (with its hash
+    /// column), swapping in pre-sized buffers: re-growing from zero costs
+    /// ~log2(batch) reallocs per delivered batch.
+    fn deliver_pending(&mut self, t: usize) {
+        let full = std::mem::replace(
+            &mut self.pending[t],
+            Vec::with_capacity(self.batch_capacity),
+        );
+        let hs = std::mem::replace(
+            &mut self.pending_hashes[t],
+            Vec::with_capacity(self.batch_capacity),
+        );
+        self.deliver(t, Batch::with_hashes(full, hs));
     }
 
     /// Flushes hash-routing buffers (call before EOS or on a timer).
@@ -173,11 +239,7 @@ impl OutPort {
             if self.pending[t].is_empty() {
                 continue;
             }
-            let full = std::mem::replace(
-                &mut self.pending[t],
-                Vec::with_capacity(self.batch_capacity),
-            );
-            self.deliver(t, full.into());
+            self.deliver_pending(t);
         }
     }
 
@@ -725,6 +787,31 @@ mod tests {
         assert!(matches!(inbox.next(), InboxEvent::Batch(b)
             if b == vec![Value::pair(Value::I64(1), Value::I64(10))]));
         assert!(matches!(inbox.next(), InboxEvent::Epoch(5)));
+    }
+
+    #[test]
+    fn hash_routing_bounds_delivered_batches_to_capacity() {
+        // one giant inbound batch must be carved into capacity-sized
+        // sub-batches, not delivered as one huge frame
+        let (t1, r1) = local_target(1024);
+        let mut port = OutPort::new(vec![t1], Routing::Hash, 32, None);
+        let big: Vec<Value> = (0..1000)
+            .map(|i| Value::pair(Value::I64(i % 8), Value::I64(i)))
+            .collect();
+        port.send(big.clone().into());
+        port.eos();
+        let mut inbox = Inbox::new(r1, 1);
+        let mut got = Vec::new();
+        while let Some(b) = inbox.recv() {
+            assert!(b.len() <= 32, "sub-batch of {} exceeds capacity", b.len());
+            assert_eq!(
+                b.key_hashes().map(|h| h.len()),
+                Some(b.len()),
+                "carved sub-batches keep aligned hash columns"
+            );
+            got.extend(b.into_values());
+        }
+        assert_eq!(got, big, "single target receives every record in order");
     }
 
     #[test]

@@ -15,8 +15,8 @@ use crate::placement::{ancestor_at_layer, plan as make_plan, ExecPlan, PlannerKi
 use crate::queue::{Broker, QueueBroker, Topic};
 use crate::runtime::{
     exec::{
-        Collector, FilterExec, FilterMapExec, FlatMapExec, FoldExec, KeyByExec, MapExec,
-        ReduceExec, SinkExec, WindowExec, XlaExec,
+        Collector, FilterExec, FilterMapExec, FlatMapExec, FoldExec, KeyByExec, KeyByFusedExec,
+        MapExec, ReduceExec, SinkExec, WindowExec, XlaExec,
     },
     run_instance, Handoff, InputKind, InstanceRuntime, OpExec, SourceRuntime,
 };
@@ -45,8 +45,12 @@ pub struct JobConfig {
     pub decouple_units: bool,
     /// Directory for durable queue segments (None ⇒ in-memory queues).
     pub queue_dir: Option<std::path::PathBuf>,
-    /// Queue consumer poll timeout.
+    /// Queue consumer poll timeout (upper bound on one uninterrupted
+    /// wait-set park; consumption itself is event-driven).
     pub poll_timeout: Duration,
+    /// Maximum records a queue consumer drains from one partition per
+    /// poll (bounds per-wakeup work and commit granularity).
+    pub poll_max_records: usize,
 }
 
 impl Default for JobConfig {
@@ -59,6 +63,7 @@ impl Default for JobConfig {
             decouple_units: false,
             queue_dir: None,
             poll_timeout: Duration::from_millis(50),
+            poll_max_records: 64,
         }
     }
 }
@@ -507,6 +512,7 @@ impl Deployment {
                     partitions,
                     group: format!("unit{}-{}", stage.unit_index, inst.zone),
                     poll_timeout: self.config.poll_timeout,
+                    poll_max: self.config.poll_max_records.max(1),
                     stop: unit_stop,
                 }
             } else {
@@ -630,9 +636,10 @@ impl Deployment {
                 OpKind::FilterMap(f) => ops.push(Box::new(FilterMapExec(f.clone()))),
                 OpKind::FlatMap(f) => ops.push(Box::new(FlatMapExec(f.clone()))),
                 OpKind::KeyBy(f) => ops.push(Box::new(KeyByExec(f.clone()))),
-                // same executor as FilterMap: the closure already emits
-                // the finished Pair(key, value); only routing differs
-                OpKind::KeyByFused(f) => ops.push(Box::new(FilterMapExec(f.clone()))),
+                // FilterMap semantics (the closure already emits the
+                // finished Pair(key, value) or None), plus the key-hash
+                // column the hash shuffle reads
+                OpKind::KeyByFused(f) => ops.push(Box::new(KeyByFusedExec(f.clone()))),
                 OpKind::Fold { init, step } => {
                     ops.push(Box::new(FoldExec::new(init.clone(), step.clone())))
                 }
@@ -870,6 +877,16 @@ impl Deployment {
         for zone in zones {
             if let Some(stop) = self.unit_stops.get(&(unit, zone.clone())) {
                 stop.store(true, Ordering::SeqCst);
+                // wake only the consumers this stop flag targets (topics
+                // feeding the unit's stages in this zone) so the flag is
+                // observed immediately instead of after a full poll
+                // timeout — shrinks the update pause window without a
+                // job-wide wake storm
+                for (key, tr) in &self.topics {
+                    if unit_stages.contains(&key.0) && key.1 == zone {
+                        tr.topic.kick();
+                    }
+                }
             }
             for h in self
                 .unit_threads

@@ -33,6 +33,19 @@ pub struct MetricsRegistry {
     pub queue_appends: AtomicU64,
     /// Records consumed from queue topics.
     pub queue_reads: AtomicU64,
+    /// Queue consumer wait-set wakeups that delivered data (event-driven
+    /// consumption: appends/closes wake parked consumers).
+    pub queue_wakeups: AtomicU64,
+    /// Queue consumer waits that expired without data (idle poll
+    /// timeouts; a healthy loaded consumer is wakeup-driven instead).
+    pub queue_wait_timeouts: AtomicU64,
+    /// Chain-interior buffer hand-offs served by a recycled allocation
+    /// (steady-state operator chains allocate nothing per operator).
+    pub chain_buffer_reuses: AtomicU64,
+    /// Chain buffer (re)allocations: warmup growth plus the one
+    /// chain-edge `Batch` payload per invocation whose allocation departs
+    /// downstream.
+    pub chain_buffer_allocs: AtomicU64,
     /// XLA executions performed on the hot path.
     pub xla_calls: AtomicU64,
     /// Rows (windows) scored through XLA.
@@ -113,6 +126,16 @@ impl MetricsRegistry {
         let qr = self.queue_reads.load(Ordering::Relaxed);
         if qa + qr > 0 {
             s.push_str(&format!("queue app/read   : {qa} / {qr}\n"));
+        }
+        let qw = self.queue_wakeups.load(Ordering::Relaxed);
+        let qt = self.queue_wait_timeouts.load(Ordering::Relaxed);
+        if qw + qt > 0 {
+            s.push_str(&format!("queue wake/tmout : {qw} / {qt}\n"));
+        }
+        let br = self.chain_buffer_reuses.load(Ordering::Relaxed);
+        let ba = self.chain_buffer_allocs.load(Ordering::Relaxed);
+        if br + ba > 0 {
+            s.push_str(&format!("chain reuse/alloc: {br} / {ba}\n"));
         }
         let cr = self.corrupt_records.load(Ordering::Relaxed);
         if cr > 0 {

@@ -26,6 +26,7 @@ use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Write};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -84,12 +85,55 @@ impl QueueBroker {
     }
 }
 
+/// Topic-level wait-set: one `Condvar` every consumer of the topic parks
+/// on, bumped by any partition append or close (and by coordinator
+/// [`Topic::kick`]s). A consumer owning N partitions blocks **once**
+/// across all of them and is woken by the first event on any — replacing
+/// the per-partition timed-poll staircase (1 ms floor × N partitions of
+/// serialized blocking) with event-driven consumption.
+///
+/// Producers stay lock-free: `bump` is one atomic increment plus an
+/// atomic load, and the mutex + notify are only touched when a consumer
+/// is actually parked — appends to distinct partitions of one topic
+/// never serialize on the wait-set.
+#[derive(Default)]
+struct WaitSet {
+    /// Event sequence number (atomic: bumped without locking).
+    seq: AtomicU64,
+    /// Parked-consumer count; producers skip the lock + notify when 0.
+    waiters: AtomicUsize,
+    /// Park lock for the condvar (holds no data — `seq` carries the
+    /// state; re-checked under this lock before parking so a bump
+    /// between a consumer's scan and its park is never lost).
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WaitSet {
+    fn bump(&self) {
+        self.seq.fetch_add(1, Ordering::SeqCst);
+        // SeqCst total order: if this load sees 0, the consumer's
+        // waiters-increment had not happened yet, so its subsequent seq
+        // re-check is guaranteed to observe the bump and skip the park.
+        if self.waiters.load(Ordering::SeqCst) != 0 {
+            // taking the lock orders the notify after the consumer's
+            // park (a consumer past its re-check holds the lock until
+            // the condvar releases it)
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+}
+
 /// A named topic: a set of partitions.
 pub struct Topic {
     /// Topic name.
     pub name: String,
     partitions: Vec<Partition>,
     producers: Mutex<ProducerCount>,
+    /// Shared wait-set all partitions bump (see [`WaitSet`]).
+    notify: Arc<WaitSet>,
+    metrics: Option<Metrics>,
 }
 
 #[derive(Default)]
@@ -105,15 +149,18 @@ impl Topic {
         dir: Option<&std::path::Path>,
         metrics: Option<Metrics>,
     ) -> Result<Topic> {
+        let notify = Arc::new(WaitSet::default());
         let mut parts = Vec::with_capacity(partitions);
         for p in 0..partitions {
             let path = dir.map(|d| d.join(format!("{name}-{p}.log")));
-            parts.push(Partition::open(path, metrics.clone())?);
+            parts.push(Partition::open(path, notify.clone(), metrics.clone())?);
         }
         Ok(Topic {
             name: name.to_string(),
             partitions: parts,
             producers: Mutex::new(ProducerCount::default()),
+            notify,
+            metrics,
         })
     }
 
@@ -145,6 +192,119 @@ impl Topic {
     pub fn append_batch(&self, key_hash: u64, batch: &Batch) -> Result<()> {
         let p = (key_hash % self.partitions.len() as u64) as usize;
         self.partitions[p].append_batch(batch)
+    }
+
+    /// Drains every ready partition among `parts` in one wakeup: up to
+    /// `max_per_partition` records per partition, starting at the
+    /// matching `offsets` slot (advanced in place to the next offset).
+    /// Blocks on the topic wait-set — woken by any append or close on
+    /// any partition, no timed-poll staircase — for at most `timeout`.
+    ///
+    /// Returns `None` once every listed partition is closed **and** fully
+    /// consumed (end of stream). Otherwise `Some(drained)`, a vec of
+    /// `(slot, records)` pairs where `slot` indexes into
+    /// `parts`/`offsets`; an empty vec means the wait ended without data
+    /// (timeout, [`Topic::kick`], or an event on a partition owned by a
+    /// different consumer) — callers re-check control flags and call
+    /// again. At most one park per call, so stop-flag latency is bounded
+    /// by `timeout` even without a kick.
+    pub fn poll_many(
+        &self,
+        parts: &[usize],
+        offsets: &mut [usize],
+        max_per_partition: usize,
+        timeout: Duration,
+    ) -> Option<Vec<(usize, Vec<Arc<[u8]>>)>> {
+        if parts.is_empty() {
+            return None;
+        }
+        debug_assert_eq!(parts.len(), offsets.len());
+        // a zero cap would drain zero-record slices forever; one record
+        // per partition per wakeup is the useful floor
+        let max_per_partition = max_per_partition.max(1);
+        let deadline = std::time::Instant::now() + timeout;
+        let mut waited = false;
+        loop {
+            // the sequence read precedes the scan: an append that the scan
+            // misses bumps the sequence afterwards, so the pre-park
+            // equality check below catches it and rescans instead of
+            // parking past it
+            let seen = self.notify.seq.load(Ordering::SeqCst);
+            let mut drained: Vec<(usize, Vec<Arc<[u8]>>)> = Vec::new();
+            let mut all_done = true;
+            for (slot, &p) in parts.iter().enumerate() {
+                let part = &self.partitions[p];
+                let st = part.state.lock().unwrap();
+                if offsets[slot] < st.records.len() {
+                    let end = (offsets[slot] + max_per_partition).min(st.records.len());
+                    let recs: Vec<Arc<[u8]>> = st.records[offsets[slot]..end].to_vec();
+                    if let Some(m) = &self.metrics {
+                        MetricsRegistry::add(&m.queue_reads, recs.len() as u64);
+                    }
+                    if !st.closed || end < st.records.len() {
+                        all_done = false;
+                    }
+                    offsets[slot] = end;
+                    drained.push((slot, recs));
+                } else if !st.closed {
+                    all_done = false;
+                }
+            }
+            if !drained.is_empty() {
+                if waited {
+                    if let Some(m) = &self.metrics {
+                        MetricsRegistry::add(&m.queue_wakeups, 1);
+                    }
+                }
+                return Some(drained);
+            }
+            if all_done {
+                return None;
+            }
+            if waited {
+                // one park per call: hand control back so the caller can
+                // observe stop flags after any wakeup
+                return Some(Vec::new());
+            }
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                if let Some(m) = &self.metrics {
+                    MetricsRegistry::add(&m.queue_wait_timeouts, 1);
+                }
+                return Some(Vec::new());
+            }
+            // register as a parked waiter *before* the under-lock seq
+            // re-check: a producer bumping after the re-check is then
+            // guaranteed to observe the registration and take the notify
+            // path (see WaitSet::bump)
+            self.notify.waiters.fetch_add(1, Ordering::SeqCst);
+            let timed_out = {
+                let g = self.notify.lock.lock().unwrap();
+                if self.notify.seq.load(Ordering::SeqCst) == seen {
+                    let (_g, res) = self.notify.cv.wait_timeout(g, remaining).unwrap();
+                    res.timed_out()
+                } else {
+                    false // the sequence moved between scan and park
+                }
+            };
+            self.notify.waiters.fetch_sub(1, Ordering::SeqCst);
+            if timed_out {
+                if let Some(m) = &self.metrics {
+                    MetricsRegistry::add(&m.queue_wait_timeouts, 1);
+                }
+                return Some(Vec::new());
+            }
+            // woken (or the sequence moved): rescan
+            waited = true;
+        }
+    }
+
+    /// Wakes every consumer parked on the topic's wait-set without
+    /// appending — the coordinator kicks topics after raising stop flags
+    /// so quiescing consumers react immediately instead of riding out
+    /// their poll timeout.
+    pub fn kick(&self) {
+        self.notify.bump();
     }
 
     /// Marks one producer as finished; when the last registered producer
@@ -184,11 +344,18 @@ pub struct Partition {
     state: Mutex<PartState>,
     cv: Condvar,
     file: Mutex<Option<File>>,
+    /// Topic-level wait-set bumped on every append/close so
+    /// [`Topic::poll_many`] consumers wake without per-partition polling.
+    notify: Arc<WaitSet>,
     metrics: Option<Metrics>,
 }
 
 impl Partition {
-    fn open(path: Option<PathBuf>, metrics: Option<Metrics>) -> Result<Partition> {
+    fn open(
+        path: Option<PathBuf>,
+        notify: Arc<WaitSet>,
+        metrics: Option<Metrics>,
+    ) -> Result<Partition> {
         let mut records = Vec::new();
         let file = match path {
             None => None,
@@ -207,6 +374,7 @@ impl Partition {
             }),
             cv: Condvar::new(),
             file: Mutex::new(file),
+            notify,
             metrics,
         })
     }
@@ -285,6 +453,10 @@ impl Partition {
             self.cv.notify_all();
             file
         };
+        // wake topic-level wait-set consumers (outside the state lock;
+        // before the durable write, matching the partition condvar's
+        // visibility: the in-memory record is already readable)
+        self.notify.bump();
         if let Some(f) = file.as_mut() {
             let mut framed = Vec::with_capacity(8 + record.len());
             framed.extend_from_slice(&(record.len() as u32).to_le_bytes());
@@ -368,6 +540,7 @@ impl Partition {
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
+        self.notify.bump();
     }
 
     /// Reopens a closed partition for further appends.
@@ -490,6 +663,105 @@ mod tests {
         t.append(0, b"x").unwrap();
         let r = t.partition(0).poll(0, 10, Duration::ZERO).unwrap();
         assert_eq!(r.0.len(), 1);
+    }
+
+    #[test]
+    fn poll_many_drains_ready_partitions_and_ends_when_all_closed() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 4).unwrap();
+        t.register_producer();
+        t.append(0, b"a").unwrap();
+        t.append(2, b"c").unwrap();
+        let parts: Vec<usize> = (0..4).collect();
+        let mut offsets = vec![0; 4];
+        let drained = t
+            .poll_many(&parts, &mut offsets, 16, Duration::from_millis(10))
+            .unwrap();
+        let slots: Vec<usize> = drained.iter().map(|(s, _)| *s).collect();
+        assert_eq!(slots, vec![0, 2], "one wakeup drains every ready partition");
+        assert_eq!(offsets, vec![1, 0, 1, 0]);
+        // timeout with every partition still open: empty drain, not EOS
+        let r = t
+            .poll_many(&parts, &mut offsets, 16, Duration::from_millis(5))
+            .unwrap();
+        assert!(r.is_empty());
+        t.producer_done(); // closes all partitions
+        assert!(t
+            .poll_many(&parts, &mut offsets, 16, Duration::from_millis(10))
+            .is_none());
+    }
+
+    #[test]
+    fn poll_many_wakes_on_single_append_across_many_partitions() {
+        let m = crate::metrics::MetricsRegistry::new();
+        let broker = QueueBroker::in_memory(Some(m.clone()));
+        let t = broker.topic("t", 16).unwrap();
+        t.register_producer();
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            t2.append(11, b"late").unwrap();
+        });
+        let parts: Vec<usize> = (0..16).collect();
+        let mut offsets = vec![0; 16];
+        let t0 = std::time::Instant::now();
+        let drained = loop {
+            let d = t
+                .poll_many(&parts, &mut offsets, 16, Duration::from_secs(30))
+                .unwrap();
+            if !d.is_empty() {
+                break d;
+            }
+        };
+        h.join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "woken by the append, not the timeout"
+        );
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].0, 11, "slot of the appended partition");
+        assert_eq!(drained[0].1[0].as_ref(), b"late");
+        assert_eq!(offsets[11], 1);
+        assert!(
+            m.queue_wakeups.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+            "consumption was wakeup-driven"
+        );
+        assert_eq!(
+            m.queue_wait_timeouts
+                .load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "no timed-poll floor in the path"
+        );
+    }
+
+    #[test]
+    fn kick_wakes_a_parked_consumer_without_data() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 2).unwrap();
+        t.register_producer();
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            t2.kick();
+        });
+        let mut offsets = vec![0, 0];
+        let t0 = std::time::Instant::now();
+        let r = t
+            .poll_many(&[0, 1], &mut offsets, 16, Duration::from_secs(30))
+            .unwrap();
+        h.join().unwrap();
+        assert!(r.is_empty(), "a kick hands back control, not data");
+        assert!(t0.elapsed() < Duration::from_secs(10));
+    }
+
+    #[test]
+    fn poll_many_with_no_partitions_is_end_of_stream() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 1).unwrap();
+        let mut offsets: Vec<usize> = Vec::new();
+        assert!(t
+            .poll_many(&[], &mut offsets, 16, Duration::from_millis(5))
+            .is_none());
     }
 
     #[test]

@@ -3,35 +3,23 @@
 
 use crate::graph::{FoldFn, ReduceFn, SinkKind, WindowAgg};
 use crate::metrics::{Metrics, MetricsRegistry};
-use crate::value::{Batch, Value};
+use crate::value::{Batch, Fnv1a, Value};
 use std::collections::{BTreeMap, HashMap};
-use std::hash::{BuildHasherDefault, Hasher};
+use std::hash::BuildHasherDefault;
 use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Mutex};
 
-/// FNV-1a as a std `Hasher` — keyed-state maps hash short encoded keys;
-/// SipHash's per-call setup cost dominates at that size.
-#[derive(Default)]
-pub struct FnvHasher(u64);
-
-impl Hasher for FnvHasher {
-    fn write(&mut self, bytes: &[u8]) {
-        let mut h = if self.0 == 0 { 0xcbf2_9ce4_8422_2325 } else { self.0 };
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1_0000_01b3);
-        }
-        self.0 = h;
-    }
-    fn finish(&self) -> u64 {
-        self.0
-    }
-}
-
-type FnvMap<V> = HashMap<Vec<u8>, V, BuildHasherDefault<FnvHasher>>;
+/// Keyed-state maps hash short encoded keys with [`Fnv1a`] — SipHash's
+/// per-call setup cost dominates at that size, and sharing `value`'s
+/// hasher keeps one FNV implementation in the codebase. (An earlier
+/// exec-local copy probed `state == 0` on every `write` to decide
+/// whether to seed, silently re-seeding mid-stream whenever a write
+/// boundary fell on a zero state; `Fnv1a` initializes explicitly.)
+type FnvMap<V> = HashMap<Vec<u8>, V, BuildHasherDefault<Fnv1a>>;
 
 /// Looks up keyed state without allocating on the hit path: the key is
 /// encoded into a reusable scratch buffer and only cloned on first sight.
+/// One hash probe on the hit path, two on a miss (probe + insert).
 fn keyed_entry<'m, V>(
     map: &'m mut FnvMap<V>,
     scratch: &mut Vec<u8>,
@@ -40,26 +28,126 @@ fn keyed_entry<'m, V>(
 ) -> &'m mut V {
     scratch.clear();
     key.encode_into(scratch);
-    // Single-lookup fast path requires the raw-entry API (unstable); two
-    // cheap FNV probes beat one SipHash probe + alloc regardless.
-    if !map.contains_key(scratch.as_slice()) {
-        map.insert(scratch.clone(), init(key));
+    // The safe single-probe form (`if let Some(v) = map.get_mut(..) {
+    // return v; }` then insert) is rejected by today's borrow checker —
+    // the failed probe's borrow is extended over the insert arm (NLL
+    // problem case #3, accepted under Polonius) — so the hit reference
+    // is carried over a raw pointer.
+    if let Some(v) = map.get_mut(scratch.as_slice()) {
+        let p: *mut V = v;
+        // SAFETY: `p` points into `map`, which stays exclusively borrowed
+        // for `'m`; the map is not touched again before the reference is
+        // returned, and the returned lifetime is the map borrow's.
+        return unsafe { &mut *p };
     }
-    map.get_mut(scratch.as_slice()).unwrap()
+    // miss: the entry probe is the second and last hash of the key
+    map.entry(scratch.clone()).or_insert_with(|| init(key))
 }
 
-/// A runtime operator: consumes batches, emits batches; `flush` runs at
-/// end-of-stream to drain any held state.
+/// Input handed to one executor: the chain head receives the shared
+/// [`Batch`] handle; chain-interior executors receive the previous
+/// operator's recycled output buffer, drained in place.
+pub enum ChainInput<'a> {
+    /// A shared batch handle (chain head, flush tail, external callers).
+    Shared(Batch),
+    /// A recycled buffer being drained: the records move out, the
+    /// allocation stays behind for the next batch.
+    Recycled(&'a mut Vec<Value>),
+}
+
+impl<'a> ChainInput<'a> {
+    /// Number of input records.
+    pub fn len(&self) -> usize {
+        match self {
+            ChainInput::Shared(b) => b.len(),
+            ChainInput::Recycled(v) => v.len(),
+        }
+    }
+
+    /// True when there are no input records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Consumes the input, yielding its records. A recycled buffer is
+    /// drained (allocation retained); a shared batch is taken
+    /// copy-on-write (see [`Batch::into_values`]).
+    pub fn drain(self) -> ValueDrain<'a> {
+        match self {
+            ChainInput::Shared(b) => ValueDrain::Owned(b.into_values().into_iter()),
+            ChainInput::Recycled(v) => ValueDrain::Recycled(v.drain(..)),
+        }
+    }
+}
+
+impl<'a> From<Batch> for ChainInput<'a> {
+    fn from(b: Batch) -> Self {
+        ChainInput::Shared(b)
+    }
+}
+
+impl<'a> From<Vec<Value>> for ChainInput<'a> {
+    fn from(v: Vec<Value>) -> Self {
+        ChainInput::Shared(Batch::new(v))
+    }
+}
+
+/// Record iterator produced by [`ChainInput::drain`].
+pub enum ValueDrain<'a> {
+    /// Records taken out of a shared batch.
+    Owned(std::vec::IntoIter<Value>),
+    /// Records drained from a recycled buffer.
+    Recycled(std::vec::Drain<'a, Value>),
+}
+
+impl Iterator for ValueDrain<'_> {
+    type Item = Value;
+    fn next(&mut self) -> Option<Value> {
+        match self {
+            ValueDrain::Owned(i) => i.next(),
+            ValueDrain::Recycled(d) => d.next(),
+        }
+    }
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match self {
+            ValueDrain::Owned(i) => i.size_hint(),
+            ValueDrain::Recycled(d) => d.size_hint(),
+        }
+    }
+}
+
+/// A runtime operator: consumes record batches, emits records; `flush`
+/// runs at end-of-stream to drain any held state.
 ///
-/// `process` consumes a shared [`Batch`] handle. Executors that need the
-/// payload take it with [`Batch::into_values`] — copy-on-write, so a
-/// single-owner chain mutates the allocation in place while a batch still
-/// shared with a sibling `split` edge is copied privately. Executors that
-/// only *count* (the non-collecting sinks) never materialise a copy at
-/// all, which makes pure fan-out pipelines fully zero-copy end to end.
+/// `process` consumes a [`ChainInput`]. At the chain head that is the
+/// shared [`Batch`] handle, taken copy-on-write — a single-owner chain
+/// mutates the allocation in place while a batch still shared with a
+/// sibling `split` edge is copied privately. Inside a fused chain it is
+/// the previous operator's recycled output buffer: records are drained in
+/// place and **no `Vec` or `Arc` is allocated per operator** — the only
+/// allocation on the steady-state chain path is the one `Batch`
+/// constructed at the chain's edge (see [`run_chain`]). Executors that
+/// only *count* (the non-collecting sinks) never materialise a copy of a
+/// shared batch at all, which keeps pure fan-out pipelines fully
+/// zero-copy end to end.
 pub trait OpExec: Send {
     /// Processes one input batch, appending outputs to `out`.
-    fn process(&mut self, batch: Batch, out: &mut Vec<Value>);
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>);
+    /// Like [`OpExec::process`], additionally appending one routing hash
+    /// per emitted record to `hashes` (aligned with `out`). The keying
+    /// operators override this to capture the key hash they already pay
+    /// for when the pair is constructed — downstream hash shuffles then
+    /// read the column instead of re-walking `Value` trees. Every other
+    /// operator leaves `hashes` untouched and the chain edge skips the
+    /// column.
+    fn process_hashed(
+        &mut self,
+        input: ChainInput<'_>,
+        out: &mut Vec<Value>,
+        _hashes: &mut Vec<u64>,
+    ) {
+        self.process(input, out);
+    }
     /// Drains state at end-of-stream.
     fn flush(&mut self, _out: &mut Vec<Value>) {}
     /// Serialises held state for a drain-and-handoff dynamic update,
@@ -77,19 +165,106 @@ pub trait OpExec: Send {
     fn restore(&mut self, _state: Value) {}
 }
 
-/// Feeds `batch` through a fused chain of executors. An empty chain
-/// passes the handle through untouched (refcount move, no copy).
-pub fn run_chain(ops: &mut [Box<dyn OpExec>], batch: Batch) -> Batch {
-    let mut cur = batch;
-    for op in ops.iter_mut() {
-        if cur.is_empty() {
-            return cur;
+/// Reusable scratch state threaded through [`run_chain`], one per stage
+/// instance: a double-buffer pair whose allocations are recycled across
+/// batches, plus the key-hash column the chain's final keying operator
+/// fills. With these, a fused chain performs **zero per-operator `Vec` or
+/// `Arc` allocations** in steady state — the only allocation per chain
+/// invocation is the single `Batch` constructed at the chain's edge
+/// (whose payload `Vec` departs downstream with it).
+pub struct ChainBuffers {
+    /// Most recent operator output (the chain edge takes it).
+    a: Vec<Value>,
+    /// Spare buffer swapped in as each interior operator's destination.
+    b: Vec<Value>,
+    /// Key-hash column aligned with the final output (see
+    /// [`OpExec::process_hashed`]).
+    hashes: Vec<u64>,
+    metrics: Option<Metrics>,
+}
+
+impl ChainBuffers {
+    /// Creates an empty buffer pair; pass the job metrics to account
+    /// buffer reuse (`chain_buffer_reuses` / `chain_buffer_allocs`).
+    pub fn new(metrics: Option<Metrics>) -> Self {
+        ChainBuffers {
+            a: Vec::new(),
+            b: Vec::new(),
+            hashes: Vec::new(),
+            metrics,
         }
-        let mut next = Vec::with_capacity(cur.len());
-        op.process(cur, &mut next);
-        cur = next.into();
     }
-    cur
+
+    /// Accounts one destination-buffer use: a capacity increase means the
+    /// buffer (re)allocated; an unchanged nonzero capacity is a reuse of
+    /// the recycled allocation.
+    fn note_dest(&self, cap_before: usize, cap_after: usize) {
+        if let Some(m) = &self.metrics {
+            if cap_after > cap_before {
+                MetricsRegistry::add(&m.chain_buffer_allocs, 1);
+            } else if cap_before > 0 {
+                MetricsRegistry::add(&m.chain_buffer_reuses, 1);
+            }
+        }
+    }
+
+    /// Constructs the chain-edge batch from the final output buffer,
+    /// attaching the key-hash column when the last operator produced one.
+    /// The buffer's allocation departs inside the batch — the one
+    /// allocation per chain invocation.
+    fn take_batch(&mut self) -> Batch {
+        if self.a.is_empty() {
+            return Batch::empty();
+        }
+        let values = std::mem::take(&mut self.a);
+        if self.hashes.len() == values.len() {
+            Batch::with_hashes(values, std::mem::take(&mut self.hashes))
+        } else {
+            Batch::new(values)
+        }
+    }
+}
+
+/// Feeds `batch` through a fused chain of executors, double-buffering
+/// intermediate results through `bufs` so no `Vec` or `Arc` is allocated
+/// per operator: the shared input handle is consumed by the head, every
+/// interior hand-off drains a recycled buffer, and one `Batch` is
+/// constructed at the chain's edge. An empty chain passes the handle
+/// through untouched (refcount move, no copy).
+pub fn run_chain(ops: &mut [Box<dyn OpExec>], batch: Batch, bufs: &mut ChainBuffers) -> Batch {
+    if ops.is_empty() || batch.is_empty() {
+        return batch;
+    }
+    let (head, rest) = ops.split_first_mut().expect("chain is non-empty");
+    bufs.hashes.clear();
+    bufs.a.clear();
+    let cap = bufs.a.capacity();
+    if rest.is_empty() {
+        head.process_hashed(ChainInput::Shared(batch), &mut bufs.a, &mut bufs.hashes);
+    } else {
+        head.process(ChainInput::Shared(batch), &mut bufs.a);
+    }
+    bufs.note_dest(cap, bufs.a.capacity());
+    let n_rest = rest.len();
+    for (j, op) in rest.iter_mut().enumerate() {
+        if bufs.a.is_empty() {
+            return Batch::empty();
+        }
+        bufs.b.clear();
+        let cap = bufs.b.capacity();
+        if j + 1 == n_rest {
+            op.process_hashed(
+                ChainInput::Recycled(&mut bufs.a),
+                &mut bufs.b,
+                &mut bufs.hashes,
+            );
+        } else {
+            op.process(ChainInput::Recycled(&mut bufs.a), &mut bufs.b);
+        }
+        bufs.note_dest(cap, bufs.b.capacity());
+        std::mem::swap(&mut bufs.a, &mut bufs.b);
+    }
+    bufs.take_batch()
 }
 
 /// Flushes a fused chain: each operator's drained state flows through the
@@ -110,46 +285,84 @@ pub fn flush_chain(ops: &mut [Box<dyn OpExec>]) -> Vec<Value> {
 /// `map`.
 pub struct MapExec(pub crate::graph::MapFn);
 impl OpExec for MapExec {
-    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
-        out.extend(batch.into_values().into_iter().map(|v| (self.0)(v)));
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        out.extend(input.drain().map(|v| (self.0)(v)));
     }
 }
 
 /// `filter`.
 pub struct FilterExec(pub crate::graph::FilterFn);
 impl OpExec for FilterExec {
-    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
-        out.extend(batch.into_values().into_iter().filter(|v| (self.0)(v)));
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        out.extend(input.drain().filter(|v| (self.0)(v)));
     }
 }
 
 /// `filter_map`: one pass, `None` drops the record.
 pub struct FilterMapExec(pub crate::graph::FilterMapFn);
 impl OpExec for FilterMapExec {
-    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
-        out.extend(batch.into_values().into_iter().filter_map(|v| (self.0)(v)));
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        out.extend(input.drain().filter_map(|v| (self.0)(v)));
     }
 }
 
 /// `flat_map`.
 pub struct FlatMapExec(pub crate::graph::FlatMapFn);
 impl OpExec for FlatMapExec {
-    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
-        for v in batch.into_values() {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
             out.extend((self.0)(v));
         }
     }
 }
 
 /// `key_by`: wraps each record in `Pair(key, record)`; the planner routes
-/// the outgoing edge by key hash.
+/// the outgoing edge by key hash. The hashed variant records each key's
+/// [`Value::stable_hash`] while the key is still in hand, so the shuffle
+/// downstream reads a `u64` column instead of re-walking the pair.
 pub struct KeyByExec(pub crate::graph::KeyFn);
 impl OpExec for KeyByExec {
-    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
-        out.extend(batch.into_values().into_iter().map(|v| {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        out.extend(input.drain().map(|v| {
             let k = (self.0)(&v);
             Value::pair(k, v)
         }));
+    }
+    fn process_hashed(
+        &mut self,
+        input: ChainInput<'_>,
+        out: &mut Vec<Value>,
+        hashes: &mut Vec<u64>,
+    ) {
+        for v in input.drain() {
+            let k = (self.0)(&v);
+            hashes.push(k.stable_hash());
+            out.push(Value::pair(k, v));
+        }
+    }
+}
+
+/// The fused `key_by` of the typed front-end: the closure already emits
+/// the finished `Pair(key, value)` (or `None` to suppress an undecodable
+/// record). Identical to [`FilterMapExec`] except that the hashed variant
+/// captures the routing hash of each emitted pair for the shuffle.
+pub struct KeyByFusedExec(pub crate::graph::FilterMapFn);
+impl OpExec for KeyByFusedExec {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        out.extend(input.drain().filter_map(|v| (self.0)(v)));
+    }
+    fn process_hashed(
+        &mut self,
+        input: ChainInput<'_>,
+        out: &mut Vec<Value>,
+        hashes: &mut Vec<u64>,
+    ) {
+        for v in input.drain() {
+            if let Some(p) = (self.0)(v) {
+                hashes.push(crate::channels::route_hash(&p));
+                out.push(p);
+            }
+        }
     }
 }
 
@@ -176,8 +389,8 @@ impl FoldExec {
 }
 
 impl OpExec for FoldExec {
-    fn process(&mut self, batch: Batch, _out: &mut Vec<Value>) {
-        for v in batch.into_values() {
+    fn process(&mut self, input: ChainInput<'_>, _out: &mut Vec<Value>) {
+        for v in input.drain() {
             let (key, payload) = match v {
                 Value::Pair(kp) => (kp.0, kp.1),
                 other => (Value::Null, other),
@@ -249,8 +462,8 @@ impl ReduceExec {
 }
 
 impl OpExec for ReduceExec {
-    fn process(&mut self, batch: Batch, _out: &mut Vec<Value>) {
-        for v in batch.into_values() {
+    fn process(&mut self, input: ChainInput<'_>, _out: &mut Vec<Value>) {
+        for v in input.drain() {
             let (key, payload) = match v {
                 Value::Pair(kp) => (kp.0, kp.1),
                 other => (Value::Null, other),
@@ -374,8 +587,8 @@ impl WindowExec {
 }
 
 impl OpExec for WindowExec {
-    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
-        for v in batch.into_values() {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
             let (key, payload) = match v {
                 Value::Pair(kp) => (kp.0, kp.1),
                 other => (Value::Null, other),
@@ -472,8 +685,8 @@ impl SinkExec {
 }
 
 impl OpExec for SinkExec {
-    fn process(&mut self, batch: Batch, _out: &mut Vec<Value>) {
-        let n = batch.len() as u64;
+    fn process(&mut self, input: ChainInput<'_>, _out: &mut Vec<Value>) {
+        let n = input.len() as u64;
         MetricsRegistry::add(&self.metrics.events_out, n);
         self.collector
             .count
@@ -487,7 +700,7 @@ impl OpExec for SinkExec {
                 .values
                 .lock()
                 .unwrap()
-                .extend(batch.into_values()),
+                .extend(input.drain()),
             SinkKind::CollectTagged => self
                 .collector
                 .tagged
@@ -495,7 +708,7 @@ impl OpExec for SinkExec {
                 .unwrap()
                 .entry(self.op)
                 .or_default()
-                .extend(batch.into_values()),
+                .extend(input.drain()),
             SinkKind::Count | SinkKind::Discard => {}
         }
     }
@@ -561,8 +774,8 @@ impl XlaExec {
 }
 
 impl OpExec for XlaExec {
-    fn process(&mut self, batch: Batch, out: &mut Vec<Value>) {
-        for v in batch.into_values() {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
             let (key, payload) = match v {
                 Value::Pair(kp) => (Some(kp.0), kp.1),
                 other => (None, other),
@@ -636,6 +849,89 @@ mod tests {
         ops
     }
 
+    fn run(ops: &mut [Box<dyn OpExec>], batch: Batch) -> Batch {
+        run_chain(ops, batch, &mut ChainBuffers::new(None))
+    }
+
+    // the standard FNV-1a parameters, asserted against the shared hasher
+    // like the crc32 known-vector test
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x1_0000_01b3;
+
+    #[test]
+    fn fnv_hasher_initialization_is_explicit() {
+        // no writes: the state is the offset basis, never 0
+        assert_eq!(Fnv1a::new().finish(), FNV_OFFSET);
+        // incremental writes equal one-shot writes wherever the boundary
+        // falls (the old exec-local impl re-seeded if a boundary landed
+        // on state 0)
+        let mut one = Fnv1a::new();
+        one.write(b"flowunits");
+        for split in 0..=9 {
+            let mut two = Fnv1a::new();
+            two.write(&b"flowunits"[..split]);
+            two.write(&b"flowunits"[split..]);
+            assert_eq!(one.finish(), two.finish(), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn fnv_hasher_zero_state_is_not_reseeded() {
+        // Drive the state through 0 (the seam stands in for a byte string
+        // whose intermediate FNV state is exactly 0 — such strings exist
+        // but are not hand-derivable) and keep writing: the next byte
+        // must hash from 0, not from a silently re-seeded offset basis.
+        let mut h = Fnv1a::from_state(0);
+        h.write(&[0x61]);
+        assert_eq!(h.finish(), 0x61u64.wrapping_mul(FNV_PRIME));
+        let mut reseeded = Fnv1a::new();
+        reseeded.write(&[0x61]);
+        assert_ne!(h.finish(), reseeded.finish());
+    }
+
+    #[test]
+    fn key_by_fills_the_hash_column() {
+        let mut ops = chain_of(vec![Box::new(KeyByExec(Arc::new(|v: &Value| {
+            Value::I64(v.as_i64().unwrap() % 2)
+        })))]);
+        let out = run(&mut ops, vec![Value::I64(4), Value::I64(7)].into());
+        let hs = out.key_hashes().expect("keying chain attaches the column");
+        assert_eq!(hs.len(), 2);
+        assert_eq!(hs[0], Value::I64(0).stable_hash());
+        assert_eq!(hs[1], Value::I64(1).stable_hash());
+        // and the column matches what the shuffle would recompute
+        for (v, &h) in out.values().iter().zip(hs) {
+            assert_eq!(crate::channels::route_hash(v), h);
+        }
+    }
+
+    #[test]
+    fn key_by_fused_fills_the_hash_column_and_drops_none() {
+        let mut ops = chain_of(vec![Box::new(KeyByFusedExec(Arc::new(
+            |v: Value| -> Option<Value> {
+                let n = v.as_i64()?;
+                if n % 3 == 0 {
+                    return None; // suppressed record
+                }
+                Some(Value::pair(Value::I64(n % 2), v))
+            },
+        )))]);
+        let out = run(&mut ops, (0..6).map(Value::I64).collect::<Vec<_>>().into());
+        // 0 and 3 suppressed
+        assert_eq!(out.len(), 4);
+        let hs = out.key_hashes().expect("column aligned with survivors");
+        for (v, &h) in out.values().iter().zip(hs) {
+            assert_eq!(crate::channels::route_hash(v), h);
+        }
+    }
+
+    #[test]
+    fn non_keying_chain_attaches_no_hash_column() {
+        let mut ops = chain_of(vec![Box::new(MapExec(Arc::new(|v| v)))]);
+        let out = run(&mut ops, vec![Value::I64(1)].into());
+        assert!(out.key_hashes().is_none());
+    }
+
     #[test]
     fn map_filter_flatmap_chain() {
         let mut ops = chain_of(vec![
@@ -648,7 +944,7 @@ mod tests {
                 Value::I64(v.as_i64().unwrap() * 10)
             }))),
         ]);
-        let out = run_chain(&mut ops, vec![Value::I64(1), Value::I64(2)].into());
+        let out = run(&mut ops, vec![Value::I64(1), Value::I64(2)].into());
         // 1 -> [1, 101] filtered out; 2 -> [2, 102] -> [20, 1020]
         assert_eq!(out, vec![Value::I64(20), Value::I64(1020)]);
         assert!(flush_chain(&mut ops).is_empty());
@@ -659,7 +955,7 @@ mod tests {
         let mut ops: Vec<Box<dyn OpExec>> = vec![];
         let b = Batch::new(vec![Value::I64(1), Value::I64(2)]);
         let twin = b.clone();
-        let out = run_chain(&mut ops, b);
+        let out = run(&mut ops, b);
         assert!(
             Batch::ptr_eq(&out, &twin),
             "a forwarding stage moves the handle, it does not copy the payload"
@@ -681,7 +977,7 @@ mod tests {
             .iter()
             .map(|w| Value::Str(w.to_string()))
             .collect();
-        let mid = run_chain(&mut ops, words.into());
+        let mid = run(&mut ops, words.into());
         assert!(mid.is_empty(), "fold holds state until flush");
         let mut out = flush_chain(&mut ops);
         out.sort_by_key(|v| v.as_pair().unwrap().0.as_str().unwrap().to_string());
@@ -989,7 +1285,7 @@ mod tests {
                 c
             }))),
         ]);
-        run_chain(&mut ops, vec![Value::I64(7), Value::I64(7)].into());
+        run(&mut ops, vec![Value::I64(7), Value::I64(7)].into());
         let out = flush_chain(&mut ops);
         assert_eq!(out, vec![Value::I64(2)]);
     }

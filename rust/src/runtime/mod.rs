@@ -12,7 +12,7 @@
 pub mod exec;
 pub mod xla_exec;
 
-pub use exec::{flush_chain, run_chain, Collector, OpExec};
+pub use exec::{flush_chain, run_chain, ChainBuffers, ChainInput, Collector, OpExec};
 
 use crate::channels::{FanOut, Inbox, InboxEvent};
 use crate::graph::SourceKind;
@@ -45,7 +45,10 @@ pub enum InputKind {
     /// member). Normally one partition per instance; after a
     /// placement-affecting dynamic update the instance count may differ
     /// from the partition count, so ownership is a round-robin assignment
-    /// (an instance may own several partitions, or none).
+    /// (an instance may own several partitions, or none). Consumption is
+    /// event-driven: the instance parks once on the topic wait-set across
+    /// all owned partitions ([`Topic::poll_many`]) and drains every ready
+    /// partition per wakeup.
     Queue {
         /// Topic shared by the FlowUnit boundary.
         topic: Arc<Topic>,
@@ -53,8 +56,12 @@ pub enum InputKind {
         partitions: Vec<usize>,
         /// Consumer group (one per downstream FlowUnit instance set).
         group: String,
-        /// Poll timeout per iteration.
+        /// Upper bound on one uninterrupted wait (stop flags are
+        /// re-checked at least this often even without a kick).
         poll_timeout: Duration,
+        /// Maximum records drained from one partition per poll
+        /// ([`JobConfig::poll_max_records`](crate::coordinator::JobConfig::poll_max_records)).
+        poll_max: usize,
         /// Cooperative stop flag — set during a dynamic update to make the
         /// instance commit, quiesce, and exit *without* treating it as
         /// end-of-stream.
@@ -127,15 +134,18 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
         }
     }
     let mut batches = 0u64;
+    // per-instance chain scratch: recycled across every batch this
+    // instance processes (see ChainBuffers)
+    let mut bufs = ChainBuffers::new(Some(rt.metrics.clone()));
     match rt.input {
         InputKind::Source(src) => {
-            run_source(src, &mut rt.ops, &mut rt.outputs, &rt.metrics);
+            run_source(src, &mut rt.ops, &mut rt.outputs, &rt.metrics, &mut bufs);
         }
         InputKind::Inbox(mut inbox) => loop {
             match inbox.next() {
                 InboxEvent::Batch(batch) => {
                     batches += 1;
-                    let out = run_chain(&mut rt.ops, batch);
+                    let out = run_chain(&mut rt.ops, batch, &mut bufs);
                     route(&mut rt.outputs, out);
                 }
                 InboxEvent::Eos => break,
@@ -152,18 +162,14 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
             partitions,
             group,
             poll_timeout,
+            poll_max,
             stop,
         } => {
             let mut offsets: Vec<usize> = partitions
                 .iter()
                 .map(|&p| topic.partition(p).committed(&group))
                 .collect();
-            let mut done = vec![false; partitions.len()];
-            // fair share of the poll budget across owned partitions (with
-            // a floor so many-partition consumers never busy-spin)
-            let per_poll =
-                (poll_timeout / partitions.len().max(1) as u32).max(Duration::from_millis(1));
-            while !done.iter().all(|&d| d) {
+            loop {
                 // Acquire pairs with the coordinator's store: the update
                 // epoch is bumped before the stop flag is raised, and the
                 // acquire edge makes that bump visible to the epoch load
@@ -181,41 +187,34 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
                     quiesce(&mut rt.ops, &mut rt.outputs, &rt.handoff, epoch);
                     return batches;
                 }
-                for (k, &p) in partitions.iter().enumerate() {
-                    if done[k] {
-                        continue;
-                    }
-                    let part = topic.partition(p);
-                    match part.poll(offsets[k], 64, per_poll) {
-                        None => done[k] = true, // closed + drained
-                        Some((recs, next)) => {
-                            if recs.is_empty() {
-                                continue; // poll timeout, still open
+                // One park across every owned partition; any append/close
+                // (or a coordinator kick) wakes it and the drain covers
+                // every ready partition. `None` = all closed + consumed.
+                let Some(drained) =
+                    topic.poll_many(&partitions, &mut offsets, poll_max, poll_timeout)
+                else {
+                    break;
+                };
+                for (slot, recs) in drained {
+                    // each queue record *is* one encoded batch; decode it
+                    // once, keeping the record bytes as the wire cache
+                    // (re-appending downstream costs no encode). A corrupt
+                    // record is skipped and reported, never fatal.
+                    for r in recs {
+                        match Batch::from_wire(r) {
+                            Ok(b) => {
+                                batches += 1;
+                                let out = run_chain(&mut rt.ops, b, &mut bufs);
+                                route(&mut rt.outputs, out);
                             }
-                            // each queue record *is* one encoded batch;
-                            // decode it once, keeping the record bytes as
-                            // the wire cache (re-appending downstream
-                            // costs no encode). A corrupt record is
-                            // skipped and reported, never fatal.
-                            for r in recs {
-                                match Batch::from_wire(r) {
-                                    Ok(b) => {
-                                        batches += 1;
-                                        let out = run_chain(&mut rt.ops, b);
-                                        route(&mut rt.outputs, out);
-                                    }
-                                    Err(_) => {
-                                        MetricsRegistry::add(
-                                            &rt.metrics.corrupt_records,
-                                            1,
-                                        );
-                                    }
-                                }
+                            Err(_) => {
+                                MetricsRegistry::add(&rt.metrics.corrupt_records, 1);
                             }
-                            offsets[k] = next;
-                            part.commit(&group, next);
                         }
                     }
+                    // one commit per drained partition per wakeup (the
+                    // poll advanced `offsets[slot]` past these records)
+                    topic.partition(partitions[slot]).commit(&group, offsets[slot]);
                 }
             }
         }
@@ -261,6 +260,7 @@ fn run_source(
     ops: &mut [Box<dyn OpExec>],
     outputs: &mut FanOut,
     metrics: &Metrics,
+    bufs: &mut ChainBuffers,
 ) {
     let (idx, n) = src.share;
     match &src.kind {
@@ -284,7 +284,7 @@ fn run_source(
                 }
                 emitted += this_batch;
                 MetricsRegistry::add(&metrics.events_in, this_batch);
-                let out = run_chain(ops, batch.into());
+                let out = run_chain(ops, batch.into(), bufs);
                 route(outputs, out);
                 if let Some(r) = rate {
                     // pace to `r` events/second for this instance
@@ -305,13 +305,13 @@ fn run_source(
                 batch.push(v.clone());
                 if batch.len() >= src.batch_size {
                     MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
-                    let out = run_chain(ops, std::mem::take(&mut batch).into());
+                    let out = run_chain(ops, std::mem::take(&mut batch).into(), bufs);
                     route(outputs, out);
                 }
             }
             if !batch.is_empty() {
                 MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
-                let out = run_chain(ops, batch.into());
+                let out = run_chain(ops, batch.into(), bufs);
                 route(outputs, out);
             }
         }
@@ -336,13 +336,13 @@ fn run_source(
                 batch.push(Value::Str(line.to_string()));
                 if batch.len() >= src.batch_size {
                     MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
-                    let out = run_chain(ops, std::mem::take(&mut batch).into());
+                    let out = run_chain(ops, std::mem::take(&mut batch).into(), bufs);
                     route(outputs, out);
                 }
             }
             if !batch.is_empty() {
                 MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
-                let out = run_chain(ops, batch.into());
+                let out = run_chain(ops, batch.into(), bufs);
                 route(outputs, out);
             }
         }
@@ -502,6 +502,7 @@ mod tests {
                 partitions: vec![0],
                 group: "g".into(),
                 poll_timeout: Duration::from_millis(20),
+                poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
             },
             outputs: FanOut::none(),
@@ -535,6 +536,7 @@ mod tests {
                 partitions: vec![0],
                 group: "g".into(),
                 poll_timeout: Duration::from_millis(20),
+                poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
             },
             outputs: FanOut::none(),
@@ -575,6 +577,7 @@ mod tests {
                 partitions: vec![0],
                 group: "g".into(),
                 poll_timeout: Duration::from_millis(20),
+                poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
             },
             outputs: FanOut::none(),
@@ -640,6 +643,7 @@ mod tests {
                         partitions: vec![0],
                         group: "g".into(),
                         poll_timeout: Duration::from_millis(5),
+                        poll_max: 64,
                         stop: stop2,
                     },
                     outputs: FanOut::single(port),
@@ -731,6 +735,7 @@ mod tests {
                 partitions: Vec::new(),
                 group: "g".into(),
                 poll_timeout: Duration::from_millis(5),
+                poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
             },
             outputs: FanOut::none(),
@@ -762,6 +767,7 @@ mod tests {
                 partitions: vec![0, 1, 2],
                 group: "g".into(),
                 poll_timeout: Duration::from_millis(20),
+                poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
             },
             outputs: FanOut::none(),

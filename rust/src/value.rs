@@ -519,6 +519,14 @@ struct BatchInner {
     values: Vec<Value>,
     /// Lazily computed, cached wire encoding ([`encode_batch`] framing).
     wire: OnceLock<Arc<[u8]>>,
+    /// Optional per-record key-hash column, aligned with `values`:
+    /// `key_hashes[i]` is the routing hash of `values[i]` (the pair key's
+    /// [`Value::stable_hash`] for keyed records). Populated by the keying
+    /// operators at pair-construction time so hash shuffles read one `u64`
+    /// per record instead of re-walking the `Value` tree. Local-only: the
+    /// column is never serialized — a batch decoded from a frame carries
+    /// no column and shuffles fall back to hashing on the fly.
+    key_hashes: Option<Vec<u64>>,
 }
 
 impl Batch {
@@ -528,8 +536,35 @@ impl Batch {
             inner: Arc::new(BatchInner {
                 values,
                 wire: OnceLock::new(),
+                key_hashes: None,
             }),
         }
+    }
+
+    /// Wraps `values` as a batch carrying a per-record key-hash column
+    /// (`hashes[i]` must be the routing hash of `values[i]`; the lengths
+    /// must match or the column is ignored).
+    pub fn with_hashes(values: Vec<Value>, hashes: Vec<u64>) -> Batch {
+        debug_assert_eq!(values.len(), hashes.len());
+        let key_hashes = if hashes.len() == values.len() {
+            Some(hashes)
+        } else {
+            None
+        };
+        Batch {
+            inner: Arc::new(BatchInner {
+                values,
+                wire: OnceLock::new(),
+                key_hashes,
+            }),
+        }
+    }
+
+    /// A shared, process-wide empty batch: returning it is a refcount
+    /// bump, so empty chain outputs allocate nothing on the hot path.
+    pub fn empty() -> Batch {
+        static EMPTY: OnceLock<Batch> = OnceLock::new();
+        EMPTY.get_or_init(|| Batch::new(Vec::new())).clone()
     }
 
     /// Decodes a batch from its wire encoding, retaining `wire` as the
@@ -543,6 +578,7 @@ impl Batch {
             inner: Arc::new(BatchInner {
                 values,
                 wire: cell,
+                key_hashes: None,
             }),
         })
     }
@@ -600,6 +636,12 @@ impl Batch {
         Arc::ptr_eq(&a.inner, &b.inner)
     }
 
+    /// The per-record key-hash column, if the batch carries one (see
+    /// [`Batch::with_hashes`]).
+    pub fn key_hashes(&self) -> Option<&[u64]> {
+        self.inner.key_hashes.as_deref()
+    }
+
     /// Takes the payload, copy-on-write: the sole owner recovers the
     /// original allocation (in-place mutation downstream); a shared batch
     /// gets a private clone, leaving every sibling untouched.
@@ -607,6 +649,15 @@ impl Batch {
         match Arc::try_unwrap(self.inner) {
             Ok(inner) => inner.values,
             Err(shared) => shared.values.clone(),
+        }
+    }
+
+    /// [`Batch::into_values`] plus the key-hash column (if any), for
+    /// consumers that partition by hash while taking the payload.
+    pub fn into_parts(self) -> (Vec<Value>, Option<Vec<u64>>) {
+        match Arc::try_unwrap(self.inner) {
+            Ok(inner) => (inner.values, inner.key_hashes),
+            Err(shared) => (shared.values.clone(), shared.key_hashes.clone()),
         }
     }
 }
@@ -720,13 +771,25 @@ fn varint_len(v: u64) -> usize {
     std::cmp::max(1, bits.div_ceil(7))
 }
 
-/// FNV-1a 64-bit hasher (deterministic across hosts/platforms).
+/// FNV-1a 64-bit hasher (deterministic across hosts/platforms). Also
+/// implements [`std::hash::Hasher`], so it doubles as the hasher of the
+/// runtime's keyed-state maps — one FNV implementation serves both
+/// routing (`stable_hash`) and state lookup. Initialization is explicit
+/// (the offset basis is written at construction), so an intermediate
+/// state that legitimately lands on 0 keeps hashing from 0.
 pub struct Fnv1a(u64);
 
 impl Fnv1a {
     /// Creates a hasher with the standard offset basis.
     pub fn new() -> Self {
         Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// A hasher whose state is already `state` (test seam: stands in for
+    /// a byte sequence whose intermediate FNV state lands there).
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub(crate) fn from_state(state: u64) -> Self {
+        Fnv1a(state)
     }
 
     /// Absorbs one byte.
@@ -751,6 +814,15 @@ impl Fnv1a {
 impl Default for Fnv1a {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl std::hash::Hasher for Fnv1a {
+    fn write(&mut self, bytes: &[u8]) {
+        Fnv1a::write(self, bytes);
+    }
+    fn finish(&self) -> u64 {
+        Fnv1a::finish(self)
     }
 }
 
@@ -899,6 +971,34 @@ mod tests {
         let ptr = values.as_ptr();
         let out = Batch::new(values).into_values();
         assert_eq!(out.as_ptr(), ptr, "sole owner takes the Vec back in place");
+    }
+
+    #[test]
+    fn batch_hash_column_travels_locally_but_never_over_the_wire() {
+        let values = vec![Value::pair(Value::I64(3), Value::Str("x".into()))];
+        let hashes = vec![Value::I64(3).stable_hash()];
+        let b = Batch::with_hashes(values.clone(), hashes.clone());
+        assert_eq!(b.key_hashes(), Some(hashes.as_slice()));
+        // the column survives refcount clones and shared take
+        let twin = b.clone();
+        let (vals, hs) = b.into_parts();
+        assert_eq!(vals, values);
+        assert_eq!(hs, Some(hashes.clone()));
+        assert_eq!(twin.key_hashes(), Some(hashes.as_slice()));
+        // the wire encoding is identical to a column-less batch, and a
+        // decoded batch carries no column
+        let plain = Batch::new(values);
+        assert_eq!(twin.wire().as_ref(), plain.wire().as_ref());
+        let decoded = Batch::from_wire(twin.wire()).unwrap();
+        assert!(decoded.key_hashes().is_none());
+    }
+
+    #[test]
+    fn empty_batch_is_shared_and_allocation_free() {
+        let a = Batch::empty();
+        let b = Batch::empty();
+        assert!(a.is_empty());
+        assert!(Batch::ptr_eq(&a, &b), "one static allocation serves all");
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Hot-path overhaul tests (PR 5): pre-partitioned hash-shuffle parity
+//! with the per-record reference path, event-driven queue wait-set
+//! consumption, zero per-operator allocation on steady-state chains
+//! (asserted through the buffer-reuse metric), and the poll-cap knob.
+
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext};
+use flowunits::channels::{route_hash, Inbox, Msg, OutPort, Routing, Target};
+use flowunits::config::eval_cluster;
+use flowunits::metrics::MetricsRegistry;
+use flowunits::proptest::forall;
+use flowunits::queue::QueueBroker;
+use flowunits::runtime::exec::{ChainBuffers, FilterExec, KeyByExec, MapExec, OpExec};
+use flowunits::runtime::run_chain;
+use flowunits::value::{Batch, Value};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn local_targets(n: usize, cap: usize) -> (Vec<Target>, Vec<Receiver<Msg>>) {
+    let mut targets = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        let (tx, rx) = sync_channel(cap);
+        targets.push(Target {
+            tx,
+            link: None,
+            latency: Duration::ZERO,
+            crossing: false,
+        });
+        rxs.push(rx);
+    }
+    (targets, rxs)
+}
+
+/// The pre-partitioned batch shuffle must deliver, per target, exactly
+/// the record sequence the old per-record path (`route_hash` + push, in
+/// arrival order) produced — same multiset per target *and* per-key
+/// order preserved — whether or not batches carry the key-hash column,
+/// and regardless of how records are grouped into batches.
+#[test]
+fn prop_prepartitioned_shuffle_matches_per_record_reference() {
+    forall("shuffle parity", 48, |g| {
+        let n_targets = g.usize_in(1, 5);
+        let n_records = g.usize_in(0, 161);
+        let batch_capacity = g.usize_in(1, 48);
+        let values: Vec<Value> = (0..n_records)
+            .map(|i| {
+                Value::pair(
+                    Value::Str(format!("k{}", g.usize_in(0, 13))),
+                    Value::I64(i as i64),
+                )
+            })
+            .collect();
+        // reference: the old per-record path
+        let mut expected: Vec<Vec<Value>> = vec![Vec::new(); n_targets];
+        for v in &values {
+            let t = (route_hash(v) % n_targets as u64) as usize;
+            expected[t].push(v.clone());
+        }
+        // new path: random batch boundaries, column attached at random
+        let (targets, rxs) = local_targets(n_targets, 4096);
+        let mut port = OutPort::new(targets, Routing::Hash, batch_capacity, None);
+        let mut rest = values.as_slice();
+        while !rest.is_empty() {
+            let take = g.usize_in(1, rest.len() + 1).min(rest.len());
+            let (chunk, tail) = rest.split_at(take);
+            rest = tail;
+            let chunk = chunk.to_vec();
+            let batch = if g.bool(0.5) {
+                let hashes: Vec<u64> = chunk.iter().map(route_hash).collect();
+                Batch::with_hashes(chunk, hashes)
+            } else {
+                chunk.into() // column-less: on-the-fly fallback
+            };
+            port.send(batch);
+        }
+        port.eos();
+        for (t, rx) in rxs.into_iter().enumerate() {
+            let mut inbox = Inbox::new(rx, 1);
+            let mut got = Vec::new();
+            while let Some(b) = inbox.recv() {
+                got.extend(b.into_values());
+            }
+            assert_eq!(
+                got, expected[t],
+                "target {t} of {n_targets} (cap {batch_capacity})"
+            );
+        }
+    });
+}
+
+/// A consumer owning N partitions parks once on the topic wait-set and
+/// is woken by a single append to *any* of them — no 1 ms-floor
+/// timed-poll staircase across partitions.
+#[test]
+fn wait_set_wakes_many_partition_consumer_on_any_append() {
+    let m = MetricsRegistry::new();
+    let broker = QueueBroker::in_memory(Some(m.clone()));
+    let topic = broker.topic("ws", 32).unwrap();
+    topic.register_producer();
+    let parts: Vec<usize> = (0..32).collect();
+    let mut offsets = vec![0usize; 32];
+    for target in [3u64, 17, 30] {
+        let t2 = topic.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(120));
+            t2.append(target, &target.to_le_bytes()).unwrap();
+        });
+        let t0 = Instant::now();
+        let drained = loop {
+            let d = topic
+                .poll_many(&parts, &mut offsets, 64, Duration::from_secs(30))
+                .unwrap();
+            if !d.is_empty() {
+                break d;
+            }
+        };
+        h.join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "append to partition {target} woke the consumer"
+        );
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].0 as u64, target);
+    }
+    assert!(
+        m.queue_wakeups.load(Ordering::Relaxed) >= 1,
+        "consumption was wakeup-driven"
+    );
+    // closing the topic also wakes the parked consumer into EOS
+    let t2 = topic.clone();
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(80));
+        t2.producer_done();
+    });
+    let t0 = Instant::now();
+    loop {
+        match topic.poll_many(&parts, &mut offsets, 64, Duration::from_secs(30)) {
+            None => break,
+            Some(d) => assert!(d.is_empty(), "no data was appended"),
+        }
+    }
+    h.join().unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(10), "close woke the consumer");
+}
+
+/// Steady-state chains allocate nothing per operator: after warmup,
+/// every interior buffer hand-off reuses a recycled allocation and the
+/// only allocation per batch is the single chain-edge `Batch` (at most
+/// one `chain_buffer_allocs` tick per invocation).
+#[test]
+fn steady_state_chain_reuses_buffers_with_zero_per_operator_allocs() {
+    let m = MetricsRegistry::new();
+    let mut bufs = ChainBuffers::new(Some(m.clone()));
+    let mut ops: Vec<Box<dyn OpExec>> = vec![
+        Box::new(MapExec(Arc::new(|v: Value| {
+            Value::I64(v.as_i64().unwrap() + 1)
+        }))),
+        Box::new(FilterExec(Arc::new(|v: &Value| {
+            v.as_i64().unwrap() % 2 == 0
+        }))),
+        Box::new(KeyByExec(Arc::new(|v: &Value| {
+            Value::I64(v.as_i64().unwrap() % 4)
+        }))),
+    ];
+    let batch_of = |n: usize| -> Batch {
+        (0..n as i64).map(Value::I64).collect::<Vec<_>>().into()
+    };
+    // warmup: buffers grow to steady-state capacity
+    for _ in 0..5 {
+        run_chain(&mut ops, batch_of(64), &mut bufs);
+    }
+    let allocs0 = m.chain_buffer_allocs.load(Ordering::Relaxed);
+    let reuses0 = m.chain_buffer_reuses.load(Ordering::Relaxed);
+    let rounds = 40u64;
+    for _ in 0..rounds {
+        let out = run_chain(&mut ops, batch_of(64), &mut bufs);
+        assert_eq!(out.len(), 32);
+        assert!(out.key_hashes().is_some(), "keying chain attaches the column");
+    }
+    let allocs = m.chain_buffer_allocs.load(Ordering::Relaxed) - allocs0;
+    let reuses = m.chain_buffer_reuses.load(Ordering::Relaxed) - reuses0;
+    assert!(
+        allocs <= rounds,
+        "at most one allocation per batch (the chain-edge Batch payload), \
+         zero per operator — got {allocs} allocs over {rounds} batches"
+    );
+    assert_eq!(
+        reuses,
+        rounds * 2,
+        "every interior hand-off (2 per batch for a 3-op chain) reused a \
+         recycled buffer"
+    );
+}
+
+/// End-to-end: a decoupled keyed pipeline with a tiny poll cap still
+/// delivers every record exactly once, and the cap bounds per-wakeup
+/// drains (the knob replaces the hardcoded 64-record cap).
+#[test]
+fn poll_cap_knob_bounds_drains_without_losing_records() {
+    let config = JobConfig {
+        planner: PlannerKind::FlowUnits,
+        decouple_units: true,
+        batch_size: 16,
+        poll_timeout: Duration::from_millis(10),
+        poll_max_records: 3,
+        ..Default::default()
+    };
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config);
+    ctx.stream(Source::synthetic(2000, |_, i| Value::I64(i as i64)))
+        .to_layer("edge")
+        .filter(|v| v.as_i64().unwrap() % 2 == 0)
+        .to_layer("cloud")
+        .collect_count();
+    let report = ctx.execute().expect("pipeline with poll_max_records = 3");
+    assert_eq!(report.events_out, 1000);
+}
+
+/// End-to-end keyed shuffle across decoupled FlowUnit boundaries: the
+/// hash-column fast path and the wire-decode fallback must agree with
+/// the direct-channel deployment record for record.
+#[test]
+fn keyed_wordcount_agrees_between_decoupled_and_direct_deployments() {
+    let run = |decouple: bool| -> Vec<(String, i64)> {
+        let config = JobConfig {
+            planner: PlannerKind::FlowUnits,
+            decouple_units: decouple,
+            batch_size: 32,
+            poll_timeout: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config);
+        ctx.stream(Source::synthetic(3000, |_, i| {
+            Value::Str(format!("w{}", i % 23))
+        }))
+        .to_layer("edge")
+        .to_layer("cloud")
+        .key_by(|v| v.clone())
+        .fold(Value::I64(0), |acc: &mut Value, _v: Value| {
+            *acc = Value::I64(acc.as_i64().unwrap() + 1);
+        })
+        .collect_vec();
+        let report = ctx.execute().expect("keyed wordcount");
+        let mut counts: Vec<(String, i64)> = report
+            .collected
+            .iter()
+            .map(|v| {
+                let (k, c) = v.as_pair().unwrap();
+                (k.as_str().unwrap().to_string(), c.as_i64().unwrap())
+            })
+            .collect();
+        counts.sort();
+        counts
+    };
+    let direct = run(false);
+    let decoupled = run(true);
+    assert_eq!(direct, decoupled);
+    assert_eq!(direct.len(), 23);
+    assert!(direct.iter().all(|(_, c)| *c * 23 >= 3000 - 23));
+}

@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Smoke-mode perf regression gate.
+
+Compares a freshly produced bench JSON against the checked-in baseline
+floors and fails if any shared scenario's throughput dropped more than 2x
+below its floor. The baseline records deliberately conservative floors
+(see BENCH_baseline.json) so the gate catches disasters — an accidental
+debug sleep, an O(n^2) hot loop — without flaking on runner noise; ratchet
+the floors upward as the trajectory improves.
+
+Usage: bench_gate.py <measured.json> <baseline.json>
+Set BENCH_GATE_SKIP=1 to bypass (e.g. when bisecting an unrelated break).
+"""
+
+import json
+import os
+import sys
+
+
+def scenarios(doc):
+    return {s["name"]: s for s in doc.get("scenarios", [])}
+
+
+def main():
+    if os.environ.get("BENCH_GATE_SKIP") == "1":
+        print("bench gate: skipped (BENCH_GATE_SKIP=1)")
+        return 0
+    measured_path, baseline_path = sys.argv[1], sys.argv[2]
+    with open(measured_path) as f:
+        measured = scenarios(json.load(f))
+    with open(baseline_path) as f:
+        baseline = scenarios(json.load(f))
+    failures = []
+    for name, base in sorted(baseline.items()):
+        floor = base.get("throughput_ev_s")
+        got = measured.get(name, {}).get("throughput_ev_s")
+        if floor is None or got is None:
+            print(f"  {name:<12} (no shared throughput figure; skipped)")
+            continue
+        threshold = floor / 2.0
+        verdict = "ok" if got >= threshold else "FAIL"
+        print(
+            f"  {name:<12} measured {got:>12.1f} ev/s   "
+            f"floor {floor:>10.1f}   gate {threshold:>10.1f}   {verdict}"
+        )
+        if got < threshold:
+            failures.append(name)
+    if failures:
+        print(f"bench gate: FAILED for {', '.join(failures)}")
+        return 1
+    print("bench gate: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
