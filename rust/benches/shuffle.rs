@@ -99,12 +99,7 @@ fn shuffle_micro_once(rounds: usize, per_batch: usize, with_column: bool) -> f64
     for _ in 0..n_targets {
         // capacity sized so the timed section never blocks on delivery
         let (tx, rx) = sync_channel(rounds * per_batch / 16 + 1024);
-        targets.push(Target {
-            tx,
-            link: None,
-            latency: Duration::ZERO,
-            crossing: false,
-        });
+        targets.push(Target::local(tx));
         rxs.push(rx);
     }
     let mut port = OutPort::new(targets, Routing::Hash, 1024, None);

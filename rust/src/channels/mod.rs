@@ -28,9 +28,11 @@
 
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::netsim::Link;
+use crate::transport::{InProcessLane, Lane, NetsimLane};
 use crate::value::{Batch, Value};
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Per-frame overhead in accounted bytes (length prefix + CRC + TCP/IP
 /// headers amortised per frame — matches a 1500-byte-MTU stream envelope).
@@ -79,16 +81,49 @@ pub enum Routing {
     Broadcast,
 }
 
-/// One reachable downstream instance.
+/// One reachable downstream instance: a transport [`Lane`] plus the
+/// edge's zone-crossing flag. The lane decides the payload shape — an
+/// unframed lane moves [`Msg::Batch`] by refcount, a framed lane gets the
+/// encode-once [`Msg::Frame`] bytes — and a failed delivery (closed or
+/// poisoned endpoint, dead peer) is *counted* by the port, never a panic.
 pub struct Target {
-    /// Destination inbox.
-    pub tx: SyncSender<Msg>,
-    /// Emulated link to traverse (None ⇒ same host: pointer move).
-    pub link: Option<Arc<Link<Msg>>>,
-    /// End-to-end route latency applied per frame on `link`.
-    pub latency: std::time::Duration,
+    lane: Box<dyn Lane>,
     /// Whether this edge crosses a zone boundary (metrics).
     pub crossing: bool,
+}
+
+impl Target {
+    /// Same-host target over a bounded in-process channel.
+    pub fn local(tx: SyncSender<Msg>) -> Target {
+        Target::over(Box::new(InProcessLane::new(tx)), false)
+    }
+
+    /// Same-process target over an unbounded channel (worker inboxes fed
+    /// by the socket demultiplexer, which must never block).
+    pub fn loose(tx: Sender<Msg>) -> Target {
+        Target::over(Box::new(InProcessLane::unbounded(tx)), false)
+    }
+
+    /// Cross-host target through an emulated [`Link`] with the route's
+    /// latency stamped per frame.
+    pub fn linked(
+        tx: SyncSender<Msg>,
+        link: Arc<Link<Msg>>,
+        latency: Duration,
+        crossing: bool,
+    ) -> Target {
+        Target::over(Box::new(NetsimLane::new(link, latency, tx)), crossing)
+    }
+
+    /// Target over any transport lane (sockets, custom transports).
+    pub fn over(lane: Box<dyn Lane>, crossing: bool) -> Target {
+        Target { lane, crossing }
+    }
+
+    /// True if batches cross this target as encoded frames.
+    pub fn framed(&self) -> bool {
+        self.lane.framed()
+    }
 }
 
 /// Output port of an operator instance.
@@ -247,14 +282,8 @@ impl OutPort {
     pub fn eos(&mut self) {
         self.flush();
         for t in 0..self.targets.len() {
-            let target = &self.targets[t];
-            match &target.link {
-                None => {
-                    let _ = target.tx.send(Msg::Eos);
-                }
-                Some(link) => {
-                    link.send(FRAME_OVERHEAD, target.latency, Msg::Eos, &target.tx);
-                }
+            if self.targets[t].lane.deliver(Msg::Eos).is_err() {
+                self.count_transport_error();
             }
         }
     }
@@ -267,14 +296,8 @@ impl OutPort {
     pub fn epoch(&mut self, epoch: u64) {
         self.flush();
         for t in 0..self.targets.len() {
-            let target = &self.targets[t];
-            match &target.link {
-                None => {
-                    let _ = target.tx.send(Msg::Epoch(epoch));
-                }
-                Some(link) => {
-                    link.send(FRAME_OVERHEAD, target.latency, Msg::Epoch(epoch), &target.tx);
-                }
+            if self.targets[t].lane.deliver(Msg::Epoch(epoch)).is_err() {
+                self.count_transport_error();
             }
             if let Some(m) = &self.metrics {
                 MetricsRegistry::add(&m.epochs_forwarded, 1);
@@ -283,32 +306,38 @@ impl OutPort {
     }
 
     fn deliver(&mut self, t: usize, batch: Batch) {
-        let target = &self.targets[t];
-        if target.crossing {
+        if self.targets[t].crossing {
             if let Some(m) = &self.metrics {
                 MetricsRegistry::add(&m.zone_crossings, batch.len() as u64);
             }
         }
-        match &target.link {
-            None => {
-                // Same host: refcount bump. A disconnected receiver means
-                // the job is shutting down; drop silently.
-                let _ = target.tx.send(Msg::Batch(batch));
-            }
-            Some(link) => {
-                // Encode-once: the first crossing edge pays the encode and
-                // caches it on the batch; every further edge (this port or
-                // a sibling) re-uses the bytes by refcount. The metrics
-                // hook runs inside the one-time initialiser, so racing
-                // senders on a shared batch still count a single encode.
-                let bytes = batch.wire_with(|| {
-                    if let Some(m) = &self.metrics {
-                        MetricsRegistry::add(&m.batch_encodes, 1);
-                    }
-                });
-                let size = bytes.len() + FRAME_OVERHEAD;
-                link.send(size, target.latency, Msg::Frame(bytes), &target.tx);
-            }
+        let msg = if self.targets[t].framed() {
+            // Encode-once: the first framed edge pays the encode and
+            // caches it on the batch; every further edge (this port or
+            // a sibling) re-uses the bytes by refcount. The metrics
+            // hook runs inside the one-time initialiser, so racing
+            // senders on a shared batch still count a single encode.
+            let bytes = batch.wire_with(|| {
+                if let Some(m) = &self.metrics {
+                    MetricsRegistry::add(&m.batch_encodes, 1);
+                }
+            });
+            Msg::Frame(bytes)
+        } else {
+            // Unframed lane: refcount bump.
+            Msg::Batch(batch)
+        };
+        if self.targets[t].lane.deliver(msg).is_err() {
+            // Closed or poisoned endpoint, or a dead peer: the satellite
+            // hardening counts the failure and keeps the instance alive
+            // (a disconnected receiver during teardown lands here too).
+            self.count_transport_error();
+        }
+    }
+
+    fn count_transport_error(&self) {
+        if let Some(m) = &self.metrics {
+            MetricsRegistry::add(&m.transport_errors, 1);
         }
     }
 }
@@ -398,6 +427,7 @@ pub struct Inbox {
     eos_seen: usize,
     epoch_seen: usize,
     epoch: u64,
+    metrics: Option<Metrics>,
 }
 
 impl Inbox {
@@ -409,6 +439,22 @@ impl Inbox {
             eos_seen: 0,
             epoch_seen: 0,
             epoch: 0,
+            metrics: None,
+        }
+    }
+
+    /// Attaches a metrics registry so skipped corrupt frames are counted.
+    pub fn with_metrics(mut self, metrics: Metrics) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Counts one corrupt frame that was skipped instead of panicking the
+    /// consuming instance (mirrors the queue substrate's poison handling).
+    fn count_corrupt(&self) {
+        if let Some(m) = &self.metrics {
+            MetricsRegistry::add(&m.corrupt_records, 1);
+            MetricsRegistry::add(&m.transport_errors, 1);
         }
     }
 
@@ -442,10 +488,15 @@ impl Inbox {
             }
             match self.rx.recv() {
                 Ok(Msg::Batch(b)) => return InboxEvent::Batch(b),
-                Ok(Msg::Frame(bytes)) => {
-                    let b = Batch::from_wire(bytes).expect("corrupt frame on channel");
-                    return InboxEvent::Batch(b);
-                }
+                Ok(Msg::Frame(bytes)) => match Batch::from_wire(bytes) {
+                    Ok(b) => return InboxEvent::Batch(b),
+                    Err(_) => {
+                        // A frame that fails to decode is skipped and
+                        // counted, not a panic: one corrupt producer (or a
+                        // garbled socket) must not take the instance down.
+                        self.count_corrupt();
+                    }
+                },
                 Ok(Msg::Eos) => {
                     self.eos_seen += 1;
                 }
@@ -485,9 +536,15 @@ impl Inbox {
         }
         match self.rx.try_recv() {
             Ok(Msg::Batch(b)) => Some(Some(b)),
-            Ok(Msg::Frame(bytes)) => {
-                Some(Some(Batch::from_wire(bytes).expect("corrupt frame")))
-            }
+            Ok(Msg::Frame(bytes)) => match Batch::from_wire(bytes) {
+                Ok(b) => Some(Some(b)),
+                Err(_) => {
+                    // skipped + counted; report "nothing ready" and let the
+                    // caller poll again
+                    self.count_corrupt();
+                    None
+                }
+            },
             Ok(Msg::Eos) => {
                 self.eos_seen += 1;
                 if self.terminal().is_some() {
@@ -518,15 +575,7 @@ mod tests {
 
     fn local_target(cap: usize) -> (Target, Receiver<Msg>) {
         let (tx, rx) = sync_channel(cap);
-        (
-            Target {
-                tx,
-                link: None,
-                latency: std::time::Duration::ZERO,
-                crossing: false,
-            },
-            rx,
-        )
+        (Target::local(tx), rx)
     }
 
     #[test]
@@ -599,12 +648,7 @@ mod tests {
     fn remote_target_encodes_and_decodes() {
         let link = Link::new("test", None, false, None);
         let (tx, rx) = sync_channel(8);
-        let target = Target {
-            tx,
-            link: Some(link.clone()),
-            latency: std::time::Duration::ZERO,
-            crossing: true,
-        };
+        let target = Target::linked(tx, link.clone(), Duration::ZERO, true);
         let m = crate::metrics::MetricsRegistry::new();
         let mut port = OutPort::new(vec![target], Routing::RoundRobin, 16, Some(m.clone()));
         let batch = vec![
@@ -692,12 +736,7 @@ mod tests {
         let link = Link::new("shared", None, false, None);
         let (tx1, rx1) = sync_channel(8);
         let (tx2, rx2) = sync_channel(8);
-        let mk = |tx| Target {
-            tx,
-            link: Some(link.clone()),
-            latency: std::time::Duration::ZERO,
-            crossing: true,
-        };
+        let mk = |tx| Target::linked(tx, link.clone(), Duration::ZERO, true);
         let m = crate::metrics::MetricsRegistry::new();
         let mut port = OutPort::new(
             vec![mk(tx1), mk(tx2)],
@@ -812,6 +851,59 @@ mod tests {
             got.extend(b.into_values());
         }
         assert_eq!(got, big, "single target receives every record in order");
+    }
+
+    #[test]
+    fn closed_target_counts_error_instead_of_panicking() {
+        let (tx, rx) = sync_channel(4);
+        drop(rx); // receiver gone: every delivery now fails
+        let m = crate::metrics::MetricsRegistry::new();
+        let mut port = OutPort::new(
+            vec![Target::local(tx)],
+            Routing::RoundRobin,
+            16,
+            Some(m.clone()),
+        );
+        port.send(vec![Value::I64(1)].into());
+        port.epoch(1);
+        port.eos();
+        assert_eq!(
+            m.transport_errors.load(std::sync::atomic::Ordering::Relaxed),
+            3,
+            "batch + epoch + eos each counted, none panicked"
+        );
+    }
+
+    #[test]
+    fn corrupt_frame_is_skipped_and_counted() {
+        let (tx, rx) = sync_channel(8);
+        let m = crate::metrics::MetricsRegistry::new();
+        let mut inbox = Inbox::new(rx, 1).with_metrics(m.clone());
+        tx.send(Msg::Frame(vec![0xff, 0xff, 0xff].into())).unwrap();
+        tx.send(Msg::Batch(vec![Value::I64(42)].into())).unwrap();
+        tx.send(Msg::Eos).unwrap();
+        // the corrupt frame is silently skipped; the good batch survives
+        assert_eq!(inbox.recv().unwrap(), vec![Value::I64(42)]);
+        assert!(inbox.recv().is_none());
+        assert_eq!(
+            m.corrupt_records.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        assert_eq!(
+            m.transport_errors.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn loose_targets_deliver_over_unbounded_channels() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut port = OutPort::new(vec![Target::loose(tx)], Routing::RoundRobin, 16, None);
+        port.send(vec![Value::I64(7)].into());
+        port.eos();
+        let mut inbox = Inbox::new(rx, 1);
+        assert_eq!(inbox.recv().unwrap(), vec![Value::I64(7)]);
+        assert!(inbox.recv().is_none());
     }
 
     #[test]

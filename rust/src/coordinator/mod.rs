@@ -21,6 +21,7 @@ use crate::runtime::{
     run_instance, Handoff, InputKind, InstanceRuntime, OpExec, SourceRuntime,
 };
 use crate::topology::LocationId;
+use crate::transport::{Endpoint, NetsimTransport, Transport};
 use crate::value::{StreamData, Value};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::marker::PhantomData;
@@ -235,7 +236,10 @@ pub struct Deployment {
     plan: ExecPlan,
     metrics: Metrics,
     collector: Arc<Collector>,
-    links: HashMap<String, Arc<Link<Msg>>>,
+    /// Emulated-network transport: owns the shared uplink cache and hands
+    /// out lanes for direct edges (in-process on the same simulated host,
+    /// shaped through a [`Link`] otherwise).
+    netsim: NetsimTransport,
     broker: Option<Broker>,
     topics: HashMap<TopicKey, TopicRuntime>,
     /// Worker threads grouped by (FlowUnit index, zone) — dynamic updates
@@ -272,6 +276,7 @@ impl Deployment {
             None
         };
         let origins = BTreeSet::from([graph.origin]);
+        let netsim = NetsimTransport::new(cluster.clone(), metrics.clone());
         let mut dep = Deployment {
             graph,
             cluster,
@@ -279,7 +284,7 @@ impl Deployment {
             plan,
             metrics: metrics.clone(),
             collector: Arc::new(Collector::default()),
-            links: HashMap::new(),
+            netsim,
             broker,
             topics: HashMap::new(),
             unit_threads: BTreeMap::new(),
@@ -295,30 +300,12 @@ impl Deployment {
     }
 
     /// Returns (creating if needed) the shared uplink for the route
-    /// `za → zb` plus the route latency to stamp on each frame.
+    /// `za → zb` plus the route latency to stamp on each frame. The cache
+    /// itself lives in [`NetsimTransport::route`] since the transport
+    /// subsystem re-homed the emulated network behind the `Transport`
+    /// trait; this delegate remains for the queue-ingest wiring.
     fn link_for_route(&mut self, za: &str, zb: &str) -> Result<(Arc<Link<Msg>>, Duration)> {
-        if za == zb {
-            let name = format!("intra-{za}");
-            let link = self
-                .links
-                .entry(name.clone())
-                .or_insert_with(|| Link::new(&name, None, false, Some(self.metrics.clone())))
-                .clone();
-            return Ok((link, Duration::ZERO));
-        }
-        let spec = crate::placement::route_spec(&self.cluster, za, zb)?;
-        // links are keyed by the route's egress hop so that all routes
-        // leaving a zone contend for the same uplink
-        let first_hop = first_hop_of_route(&self.cluster, za, zb)?;
-        let name = format!("up-{}->{}", first_hop.0, first_hop.1);
-        let needs_delay = !spec.latency.is_zero();
-        let metrics = self.metrics.clone();
-        let link = self
-            .links
-            .entry(name.clone())
-            .or_insert_with(|| Link::new(&name, spec.bandwidth_bps, needs_delay, Some(metrics)))
-            .clone();
-        Ok((link, spec.latency))
+        self.netsim.route(za, zb)
     }
 
     fn wire_and_spawn(&mut self) -> Result<()> {
@@ -367,6 +354,8 @@ impl Deployment {
                     continue;
                 }
                 let (tx, rx) = sync_channel(self.config.channel_capacity);
+                // the transport hands producers lanes to this inbox
+                self.netsim.register(inst, tx.clone());
                 inst_tx.insert(inst, tx);
                 inst_rx.insert(inst, rx);
             }
@@ -519,7 +508,10 @@ impl Deployment {
                 let rx = inst_rx.remove(&inst.id).ok_or_else(|| {
                     Error::Runtime(format!("instance {} missing inbox", inst.id))
                 })?;
-                InputKind::Inbox(Inbox::new(rx, *producer_count.get(&inst.id).unwrap_or(&0)))
+                InputKind::Inbox(
+                    Inbox::new(rx, *producer_count.get(&inst.id).unwrap_or(&0))
+                        .with_metrics(self.metrics.clone()),
+                )
             };
 
             // output: one port per outgoing stage edge (a `split` stream
@@ -545,12 +537,7 @@ impl Deployment {
                     let targets = tr
                         .ingest
                         .iter()
-                        .map(|tx| Target {
-                            tx: tx.clone(),
-                            link: Some(link.clone()),
-                            latency,
-                            crossing,
-                        })
+                        .map(|tx| Target::linked(tx.clone(), link.clone(), latency, crossing))
                         .collect();
                     OutPort::new(
                         targets,
@@ -559,21 +546,15 @@ impl Deployment {
                         Some(self.metrics.clone()),
                     )
                 } else {
+                    // direct edges go through the transport trait: same
+                    // simulated host ⇒ in-process lane, otherwise a shaped
+                    // lane over the route's shared uplink
                     let mut targets = Vec::new();
+                    let from_ep = Endpoint::of(&inst);
                     for t in plan.allowed_targets(&topo, inst.id, edge) {
                         let tgt = &plan.instances[t];
-                        let (link, latency) = if tgt.host == inst.host {
-                            (None, Duration::ZERO)
-                        } else {
-                            let (l, lat) = self.link_for_route(&inst.zone, &tgt.zone)?;
-                            (Some(l), lat)
-                        };
-                        targets.push(Target {
-                            tx: inst_tx[&t].clone(),
-                            link,
-                            latency,
-                            crossing: tgt.zone != inst.zone,
-                        });
+                        let lane = self.netsim.open(&from_ep, &Endpoint::of(tgt))?;
+                        targets.push(Target::over(lane, tgt.zone != inst.zone));
                     }
                     OutPort::new(
                         targets,
@@ -621,57 +602,18 @@ impl Deployment {
                 .or_default()
                 .push(h);
         }
-        drop(inst_tx); // senders live only inside targets now
+        // Senders must live only inside targets from here on: a producer
+        // panic must disconnect its consumers' channels so they fall back
+        // to the EOS path instead of blocking forever. The transport's
+        // registry holds clones purely for lane wiring, so clear it too.
+        drop(inst_tx);
+        self.netsim.clear_inboxes();
         Ok(())
     }
 
     /// Builds the fused executor chain for a stage from the job graph.
     fn build_ops(&self, stage: &crate::graph::Stage) -> Result<Vec<Box<dyn OpExec>>> {
-        let mut ops: Vec<Box<dyn OpExec>> = Vec::new();
-        for &oid in &stage.ops {
-            match &self.graph.ops[oid].kind {
-                OpKind::Source(_) => {} // driven by InputKind::Source
-                OpKind::Map(f) => ops.push(Box::new(MapExec(f.clone()))),
-                OpKind::Filter(f) => ops.push(Box::new(FilterExec(f.clone()))),
-                OpKind::FilterMap(f) => ops.push(Box::new(FilterMapExec(f.clone()))),
-                OpKind::FlatMap(f) => ops.push(Box::new(FlatMapExec(f.clone()))),
-                OpKind::KeyBy(f) => ops.push(Box::new(KeyByExec(f.clone()))),
-                // FilterMap semantics (the closure already emits the
-                // finished Pair(key, value) or None), plus the key-hash
-                // column the hash shuffle reads
-                OpKind::KeyByFused(f) => ops.push(Box::new(KeyByFusedExec(f.clone()))),
-                OpKind::Fold { init, step } => {
-                    ops.push(Box::new(FoldExec::new(init.clone(), step.clone())))
-                }
-                OpKind::Reduce { f } => ops.push(Box::new(ReduceExec::new(f.clone()))),
-                // merge happens in the channel wiring feeding this stage
-                OpKind::Union => {}
-                OpKind::Window { size, slide, agg } => {
-                    ops.push(Box::new(WindowExec::new(*size, *slide, agg.clone())))
-                }
-                OpKind::XlaMap {
-                    artifact,
-                    batch,
-                    in_dim,
-                } => {
-                    let engine = crate::runtime::xla_exec::XlaEngine::global()?;
-                    let art = engine.load(artifact)?;
-                    ops.push(Box::new(XlaExec::new(
-                        art,
-                        *batch,
-                        *in_dim,
-                        self.metrics.clone(),
-                    )));
-                }
-                OpKind::Sink(kind) => ops.push(Box::new(SinkExec::new(
-                    *kind,
-                    oid,
-                    self.collector.clone(),
-                    self.metrics.clone(),
-                ))),
-            }
-        }
-        Ok(ops)
+        build_stage_ops(&self.graph, stage, &self.collector, &self.metrics)
     }
 
     /// Signals all sources to stop after their current batch (used with
@@ -1242,9 +1184,7 @@ impl Deployment {
         for h in std::mem::take(&mut self.ingest_threads) {
             let _ = h.join();
         }
-        for link in self.links.values() {
-            link.shutdown();
-        }
+        self.netsim.shutdown_links();
         let wall_time = self.started.elapsed();
         let m = &self.metrics;
         Ok(JobReport {
@@ -1312,31 +1252,55 @@ fn unit_state_topic(unit: usize) -> String {
     format!("fu-state-u{unit}")
 }
 
-/// First hop of the tree route from `za` toward `zb` (used to key shared
-/// uplinks).
-fn first_hop_of_route(cluster: &ClusterSpec, za: &str, zb: &str) -> Result<(String, String)> {
-    let topo = &cluster.topology;
-    // ascend from za; if zb is not on that path, the first hop is still
-    // za -> parent(za) (all inter-zone routes leave through the uplink),
-    // except when za is an ancestor of zb — then descend toward zb.
-    if ancestor_at_layer(topo, zb, &topo.zones[za].layer).as_deref() == Some(za) {
-        // za is an ancestor of zb: first hop descends toward zb
-        let mut cur = zb.to_string();
-        loop {
-            let parent = topo.zones[&cur].parent.clone().ok_or_else(|| {
-                Error::Topology(format!("no path from {za} down to {zb}"))
-            })?;
-            if parent == za {
-                return Ok((za.to_string(), cur));
+/// Builds the fused executor chain for a stage from a job graph. Shared
+/// with worker processes, which rebuild the graph locally and execute the
+/// instances the deterministic plan assigns to them.
+pub fn build_stage_ops(
+    graph: &LogicalGraph,
+    stage: &crate::graph::Stage,
+    collector: &Arc<Collector>,
+    metrics: &Metrics,
+) -> Result<Vec<Box<dyn OpExec>>> {
+    let mut ops: Vec<Box<dyn OpExec>> = Vec::new();
+    for &oid in &stage.ops {
+        match &graph.ops[oid].kind {
+            OpKind::Source(_) => {} // driven by InputKind::Source
+            OpKind::Map(f) => ops.push(Box::new(MapExec(f.clone()))),
+            OpKind::Filter(f) => ops.push(Box::new(FilterExec(f.clone()))),
+            OpKind::FilterMap(f) => ops.push(Box::new(FilterMapExec(f.clone()))),
+            OpKind::FlatMap(f) => ops.push(Box::new(FlatMapExec(f.clone()))),
+            OpKind::KeyBy(f) => ops.push(Box::new(KeyByExec(f.clone()))),
+            // FilterMap semantics (the closure already emits the
+            // finished Pair(key, value) or None), plus the key-hash
+            // column the hash shuffle reads
+            OpKind::KeyByFused(f) => ops.push(Box::new(KeyByFusedExec(f.clone()))),
+            OpKind::Fold { init, step } => {
+                ops.push(Box::new(FoldExec::new(init.clone(), step.clone())))
             }
-            cur = parent;
+            OpKind::Reduce { f } => ops.push(Box::new(ReduceExec::new(f.clone()))),
+            // merge happens in the channel wiring feeding this stage
+            OpKind::Union => {}
+            OpKind::Window { size, slide, agg } => {
+                ops.push(Box::new(WindowExec::new(*size, *slide, agg.clone())))
+            }
+            OpKind::XlaMap {
+                artifact,
+                batch,
+                in_dim,
+            } => {
+                let engine = crate::runtime::xla_exec::XlaEngine::global()?;
+                let art = engine.load(artifact)?;
+                ops.push(Box::new(XlaExec::new(art, *batch, *in_dim, metrics.clone())));
+            }
+            OpKind::Sink(kind) => ops.push(Box::new(SinkExec::new(
+                *kind,
+                oid,
+                collector.clone(),
+                metrics.clone(),
+            ))),
         }
     }
-    let parent = topo.zones[za]
-        .parent
-        .clone()
-        .ok_or_else(|| Error::Topology(format!("root zone {za} has no uplink")))?;
-    Ok((za.to_string(), parent))
+    Ok(ops)
 }
 
 #[cfg(test)]
@@ -1365,31 +1329,6 @@ mod tests {
             "sink",
         );
         g
-    }
-
-    #[test]
-    fn first_hop_keys_shared_uplinks() {
-        let cluster = fig2_cluster();
-        // upward routes leave through the child's uplink
-        assert_eq!(
-            first_hop_of_route(&cluster, "E1", "S1").unwrap(),
-            ("E1".into(), "S1".into())
-        );
-        assert_eq!(
-            first_hop_of_route(&cluster, "E1", "C1").unwrap(),
-            ("E1".into(), "S1".into()),
-            "E1->C1 and E1->S1 share the E1 uplink"
-        );
-        // sibling routes also leave through the uplink
-        assert_eq!(
-            first_hop_of_route(&cluster, "E1", "E4").unwrap(),
-            ("E1".into(), "S1".into())
-        );
-        // downward route from an ancestor descends toward the target
-        assert_eq!(
-            first_hop_of_route(&cluster, "C1", "E1").unwrap(),
-            ("C1".into(), "S1".into())
-        );
     }
 
     #[test]

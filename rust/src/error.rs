@@ -28,6 +28,12 @@ pub enum Error {
     Decode(String),
     /// Runtime execution failure.
     Runtime(String),
+    /// Transport failure (closed lane, dead peer, handshake rejection,
+    /// malformed frame off a socket). Delivery paths *count* these and
+    /// keep running where possible — a dying peer must never take down
+    /// the whole process — while control paths (register, deploy,
+    /// report) surface them to the caller.
+    Transport(String),
     /// XLA / PJRT failure (artifact missing, compile or execute error).
     Xla(String),
     /// Underlying I/O error.
@@ -46,6 +52,7 @@ impl fmt::Display for Error {
             Error::Codec(m) => write!(f, "codec error: {m}"),
             Error::Decode(m) => write!(f, "decode error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }

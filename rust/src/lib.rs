@@ -75,10 +75,12 @@ pub mod graph;
 pub mod metrics;
 pub mod netsim;
 pub mod placement;
+pub mod pipelines;
 pub mod proptest;
 pub mod queue;
 pub mod runtime;
 pub mod topology;
+pub mod transport;
 pub mod util;
 pub mod value;
 

@@ -1,15 +1,25 @@
-//! FlowUnits CLI — the leader entrypoint.
+//! FlowUnits CLI — single-process leader and distributed entrypoints.
 //!
 //! ```text
-//! flowunits plan   --cluster cluster.fu [--planner flowunits|renoir] [--locations L1,L2]
-//! flowunits run    --pipeline eval|acme|wordcount [--planner ...] [--events N] [--bw 100Mbit] [--lat 10ms]
-//! flowunits fig3   [--events N]            # full Fig. 3 heatmap sweep
+//! flowunits plan        --cluster cluster.fu [--planner flowunits|renoir] [--locations L1,L2]
+//! flowunits run         --pipeline eval|acme|wordcount [--planner ...] [--events N] [--bw 100Mbit] [--lat 10ms]
+//! flowunits fig3        [--events N]            # full Fig. 3 heatmap sweep
+//! flowunits coordinator --listen /tmp/fu.sock --workers 2 --pipeline wordcount [--events N]
+//! flowunits worker      --connect /tmp/fu.sock --id w1 [--zone cloud] [--hosts h1,h2]
 //! ```
+//!
+//! `coordinator` + `worker` run one logical job across real OS processes:
+//! see the transport module docs and the README's "Distributed
+//! deployment" section.
 
-use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::api::raw::{JobConfig, PlannerKind, StreamContext};
 use flowunits::config::{eval_cluster, ClusterSpec};
+use flowunits::metrics::MetricsRegistry;
 use flowunits::netsim::LinkSpec;
-use flowunits::value::Value;
+use flowunits::pipelines;
+use flowunits::transport::daemon::CoordinatorDaemon;
+use flowunits::transport::socket::Addr;
+use flowunits::transport::worker::{run_worker, WorkerOpts};
 use std::time::Duration;
 
 fn main() {
@@ -19,6 +29,8 @@ fn main() {
         "plan" => cmd_plan(&args[1..]),
         "run" => cmd_run(&args[1..]),
         "fig3" => cmd_fig3(&args[1..]),
+        "coordinator" => cmd_coordinator(&args[1..]),
+        "worker" => cmd_worker(&args[1..]),
         _ => {
             print_help();
             Ok(())
@@ -34,8 +46,13 @@ fn print_help() {
     println!(
         "flowunits — dataflow for the edge-to-cloud continuum\n\n\
          USAGE:\n  flowunits plan --cluster <file> [--planner flowunits|renoir] [--locations L1,L2]\n  \
-         flowunits run  --pipeline eval|acme|wordcount [--planner ...] [--events N] [--bw 100Mbit] [--lat 10ms]\n  \
-         flowunits fig3 [--events N]\n"
+         flowunits run  --pipeline {names} [--planner ...] [--events N] [--bw 100Mbit] [--lat 10ms] [--show-collected]\n  \
+         flowunits fig3 [--events N]\n  \
+         flowunits coordinator --listen <addr> [--workers N] [--pipeline {names}] [--events N]\n                        \
+         [--heartbeat-ms MS] [--timeout-s S] [--show-collected]\n  \
+         flowunits worker --connect <addr> --id <worker-id> [--zone Z] [--hosts h1,h2] [--state-dir DIR]\n\n\
+         Addresses containing '/' are Unix domain socket paths; anything else is host:port TCP.\n",
+        names = pipelines::NAMES.join("|"),
     );
 }
 
@@ -44,6 +61,10 @@ fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .map(|s| s.as_str())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 fn parse_planner(args: &[String]) -> PlannerKind {
@@ -73,45 +94,12 @@ fn cmd_plan(args: &[String]) -> flowunits::error::Result<()> {
     let locations: Vec<String> = flag(args, "--locations")
         .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
         .unwrap_or_default();
-    let graph = eval_pipeline_graph(&cluster, 1_000_000)?;
+    let mut ctx = StreamContext::new(cluster.clone(), JobConfig::default());
+    pipelines::build(&mut ctx, "eval", 1_000_000)?;
+    let graph = ctx.into_graph()?;
     let plan = flowunits::placement::plan(&graph, &cluster, planner, &locations, false)?;
     println!("{}", plan.describe(&graph));
     Ok(())
-}
-
-fn eval_pipeline_graph(
-    cluster: &ClusterSpec,
-    events: u64,
-) -> flowunits::error::Result<flowunits::graph::LogicalGraph> {
-    let mut ctx = StreamContext::new(cluster.clone(), JobConfig::default());
-    build_eval_pipeline(&mut ctx, events);
-    ctx.into_graph()
-}
-
-/// The paper's §V pipeline: O1 filters 67% at the edge, O2 windows+averages
-/// at the site, O3 computes Collatz convergence steps in the cloud.
-pub fn build_eval_pipeline(ctx: &mut StreamContext, events: u64) {
-    ctx.stream(Source::synthetic(events, |inst, i| {
-        Value::I64((inst as i64) << 32 | (i as i64 & 0xffff_ffff))
-    }))
-    .to_layer("edge")
-    .filter(|v| v.as_i64().unwrap() % 3 == 0) // O1: keep 33%
-    .to_layer("site")
-    .key_by(|v| Value::I64(v.as_i64().unwrap() % 16))
-    .window(100, WindowAgg::Mean) // O2
-    .to_layer("cloud")
-    .map(|v| {
-        // O3: Collatz convergence steps of the window average
-        let (_k, mean) = v.as_pair().expect("keyed window output");
-        let mut n = (mean.as_f64().unwrap().abs() as u64).max(1);
-        let mut steps = 0i64;
-        while n != 1 {
-            n = if n % 2 == 0 { n / 2 } else { 3 * n + 1 };
-            steps += 1;
-        }
-        Value::I64(steps)
-    })
-    .collect_count();
 }
 
 fn cmd_run(args: &[String]) -> flowunits::error::Result<()> {
@@ -131,49 +119,18 @@ fn cmd_run(args: &[String]) -> flowunits::error::Result<()> {
         ..Default::default()
     };
     let mut ctx = StreamContext::new(cluster.clone(), config);
-    match pipeline {
-        "eval" => build_eval_pipeline(&mut ctx, events),
-        "wordcount" => {
-            let words = ["stream", "edge", "cloud", "site", "data", "flow"];
-            ctx.stream(Source::synthetic(events, move |_, i| {
-                Value::Str(words[(i % words.len() as u64) as usize].to_string())
-            }))
-            .to_layer("cloud")
-            .group_by(|w| w.clone())
-            .fold(Value::I64(0), |acc, _| {
-                *acc = Value::I64(acc.as_i64().unwrap() + 1)
-            })
-            .collect_vec();
-        }
-        "acme" => {
-            // Fig. 1 pipeline with the XLA anomaly model at the cloud
-            ctx.stream(Source::synthetic(events, |inst, i| {
-                let t = i as f64 * 0.01;
-                let v = (t.sin() * 10.0 + 50.0) + ((i % 97) as f64) * 0.1 + inst as f64;
-                Value::F64(v)
-            }))
-            .to_layer("edge")
-            .filter(|v| v.as_f64().unwrap().is_finite())
-            .to_layer("site")
-            .key_by(|v| Value::I64((v.as_f64().unwrap() * 10.0) as i64 % 4))
-            .window(32, WindowAgg::FeatureStats)
-            .to_layer("cloud")
-            .xla_map("anomaly_v1", 64, 5)
-            .add_constraint("xla = yes")
-            .collect_count();
-        }
-        other => {
-            return Err(flowunits::error::Error::Runtime(format!(
-                "unknown pipeline '{other}'"
-            )))
-        }
-    }
+    pipelines::build(&mut ctx, pipeline, events)?;
     let report = ctx.execute()?;
     println!(
         "pipeline={pipeline} planner={planner:?} link={} events={events}",
         link.describe()
     );
     println!("{}", report.render());
+    if has_flag(args, "--show-collected") {
+        for line in pipelines::render_collected(&report.collected) {
+            println!("{line}");
+        }
+    }
     Ok(())
 }
 
@@ -204,7 +161,7 @@ fn cmd_fig3(args: &[String]) -> flowunits::error::Result<()> {
                     ..Default::default()
                 };
                 let mut ctx = StreamContext::new(cluster, config);
-                build_eval_pipeline(&mut ctx, events);
+                pipelines::build(&mut ctx, "eval", events)?;
                 let report = ctx.execute()?;
                 times[i] = report.wall_time.as_secs_f64();
             }
@@ -218,5 +175,69 @@ fn cmd_fig3(args: &[String]) -> flowunits::error::Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn cmd_coordinator(args: &[String]) -> flowunits::error::Result<()> {
+    let listen = flag(args, "--listen").ok_or_else(|| {
+        flowunits::error::Error::Transport("coordinator requires --listen <addr>".into())
+    })?;
+    let workers: usize = flag(args, "--workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let pipeline = flag(args, "--pipeline").unwrap_or("wordcount");
+    let events: u64 = flag(args, "--events")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60_000);
+    let heartbeat = Duration::from_millis(
+        flag(args, "--heartbeat-ms")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(500),
+    );
+    let timeout = Duration::from_secs(
+        flag(args, "--timeout-s")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(60),
+    );
+    let mut daemon =
+        CoordinatorDaemon::start(Addr::parse(listen), heartbeat, MetricsRegistry::new())?;
+    println!("coordinator listening on {} — waiting for {workers} worker(s)", daemon.addr());
+    let outcome = daemon.run_job(pipeline, events, workers, timeout);
+    daemon.shutdown_workers();
+    // give GOODBYEs a moment to land before tearing the listener down
+    std::thread::sleep(Duration::from_millis(200));
+    daemon.shutdown();
+    let report = outcome?;
+    println!("pipeline={pipeline} events={events}");
+    print!("{}", report.render());
+    if has_flag(args, "--show-collected") {
+        for line in pipelines::render_collected(&report.collected) {
+            println!("{line}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &[String]) -> flowunits::error::Result<()> {
+    let connect = flag(args, "--connect").ok_or_else(|| {
+        flowunits::error::Error::Transport("worker requires --connect <addr>".into())
+    })?;
+    let id = flag(args, "--id")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("worker-{}", std::process::id()));
+    let mut opts = WorkerOpts::new(Addr::parse(connect), &id);
+    if let Some(zone) = flag(args, "--zone") {
+        opts.zone = zone.to_string();
+    }
+    if let Some(hosts) = flag(args, "--hosts") {
+        opts.hosts = hosts.split(',').map(|h| h.trim().to_string()).collect();
+    }
+    if let Some(dir) = flag(args, "--state-dir") {
+        opts.state_dir = dir.into();
+    }
+    opts.install_signals = true;
+    eprintln!("worker '{id}' connecting to {connect}");
+    run_worker(opts)?;
+    eprintln!("worker '{id}' exited cleanly");
     Ok(())
 }

@@ -63,6 +63,21 @@ pub struct MetricsRegistry {
     /// Milliseconds spent quiescing + respawning units across all dynamic
     /// updates (the total update pause window).
     pub update_pause_ms: AtomicU64,
+    /// Bytes written to real transport sockets (length prefixes included).
+    pub transport_bytes_sent: AtomicU64,
+    /// Bytes read from real transport sockets.
+    pub transport_bytes_recv: AtomicU64,
+    /// Frames written to real transport sockets (data + control).
+    pub transport_frames_sent: AtomicU64,
+    /// Frames read from real transport sockets (data + control).
+    pub transport_frames_recv: AtomicU64,
+    /// Successful reconnect / re-adoption handshakes after a peer or
+    /// coordinator came back.
+    pub transport_reconnects: AtomicU64,
+    /// Delivery failures on closed/poisoned lanes and malformed frames —
+    /// counted (per satellite hardening) instead of panicking the
+    /// delivering thread.
+    pub transport_errors: AtomicU64,
     /// Labelled counters (per-link bytes, per-operator events, ...).
     labelled: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
 }
@@ -149,6 +164,28 @@ impl MetricsRegistry {
         let up = self.update_pause_ms.load(Ordering::Relaxed);
         if ef + up > 0 {
             s.push_str(&format!("update epochs/ms : {ef} / {up}\n"));
+        }
+        let tb = self.transport_bytes_sent.load(Ordering::Relaxed)
+            + self.transport_bytes_recv.load(Ordering::Relaxed);
+        if tb > 0 {
+            s.push_str(&format!(
+                "sock bytes s/r   : {} / {}\n",
+                fmt_bytes(self.transport_bytes_sent.load(Ordering::Relaxed)),
+                fmt_bytes(self.transport_bytes_recv.load(Ordering::Relaxed))
+            ));
+            s.push_str(&format!(
+                "sock frames s/r  : {} / {}\n",
+                self.transport_frames_sent.load(Ordering::Relaxed),
+                self.transport_frames_recv.load(Ordering::Relaxed)
+            ));
+        }
+        let tr = self.transport_reconnects.load(Ordering::Relaxed);
+        if tr > 0 {
+            s.push_str(&format!("sock reconnects  : {tr}\n"));
+        }
+        let te = self.transport_errors.load(Ordering::Relaxed);
+        if te > 0 {
+            s.push_str(&format!("transport errors : {te} (counted, not fatal)\n"));
         }
         let xc = self.xla_calls.load(Ordering::Relaxed);
         if xc > 0 {

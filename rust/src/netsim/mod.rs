@@ -225,9 +225,15 @@ impl<T: Send + 'static> Link<T> {
             return self.enqueue_delay(latency, msg, dest.clone());
         }
         let (lock, cv) = &*self.wire;
-        let mut st = lock.lock().unwrap();
+        // A poisoned lock means a peer thread panicked mid-send; treat the
+        // link as closed (callers count a transport error) — never panic
+        // the delivering instance too.
+        let Ok(mut st) = lock.lock() else { return false };
         while st.queue.len() >= self.capacity && !st.closed {
-            st = cv.wait(st).unwrap();
+            st = match cv.wait(st) {
+                Ok(g) => g,
+                Err(_) => return false,
+            };
         }
         if st.closed {
             return false;
@@ -244,7 +250,10 @@ impl<T: Send + 'static> Link<T> {
 
     fn enqueue_delay(&self, latency: Duration, msg: T, dest: SyncSender<T>) -> bool {
         let (dlock, dcv) = &*self.delay;
-        let mut dst = dlock.lock().unwrap();
+        // poisoned ⇒ closed, not a cascading panic
+        let Ok(mut dst) = dlock.lock() else {
+            return false;
+        };
         if dst.closed {
             return false;
         }
@@ -264,7 +273,7 @@ impl<T: Send + 'static> Link<T> {
         let (lock, cv) = &*self.wire;
         loop {
             let item = {
-                let mut st = lock.lock().unwrap();
+                let Ok(mut st) = lock.lock() else { break };
                 loop {
                     if let Some(it) = st.queue.pop_front() {
                         cv.notify_all(); // wake blocked senders
@@ -273,7 +282,10 @@ impl<T: Send + 'static> Link<T> {
                     if st.closed {
                         break None;
                     }
-                    st = cv.wait(st).unwrap();
+                    st = match cv.wait(st) {
+                        Ok(g) => g,
+                        Err(_) => break None, // poisoned ⇒ shut the stage down
+                    };
                 }
             };
             let Some(item) = item else { break };
@@ -287,7 +299,9 @@ impl<T: Send + 'static> Link<T> {
         }
         // wire closed and drained: close the delay line
         let (dlock, dcv) = &*self.delay;
-        dlock.lock().unwrap().closed = true;
+        if let Ok(mut d) = dlock.lock() {
+            d.closed = true;
+        }
         dcv.notify_all();
     }
 
@@ -295,18 +309,25 @@ impl<T: Send + 'static> Link<T> {
         let (lock, cv) = &*self.delay;
         loop {
             let item = {
-                let mut st = lock.lock().unwrap();
+                let Ok(mut st) = lock.lock() else { break };
                 loop {
                     let now = Instant::now();
                     match st.heap.peek() {
                         Some(d) if d.deliver_at <= now => break Some(st.heap.pop().unwrap()),
                         Some(d) => {
                             let wait = d.deliver_at - now;
-                            let (g, _) = cv.wait_timeout(st, wait).unwrap();
-                            st = g;
+                            match cv.wait_timeout(st, wait) {
+                                Ok((g, _)) => st = g,
+                                Err(_) => break None,
+                            }
                         }
                         None if st.closed => break None,
-                        None => st = cv.wait(st).unwrap(),
+                        None => {
+                            st = match cv.wait(st) {
+                                Ok(g) => g,
+                                Err(_) => break None,
+                            }
+                        }
                     }
                 }
             };
@@ -320,7 +341,9 @@ impl<T: Send + 'static> Link<T> {
     pub fn shutdown(&self) {
         {
             let (lock, cv) = &*self.wire;
-            lock.lock().unwrap().closed = true;
+            if let Ok(mut g) = lock.lock() {
+                g.closed = true;
+            }
             cv.notify_all();
         }
         if self.bandwidth_bps.is_none() {
@@ -329,10 +352,16 @@ impl<T: Send + 'static> Link<T> {
             let (dlock, dcv) = &*self.delay;
             // wait for the heap to drain before flagging closed would race;
             // the delay loop drains everything already queued regardless.
-            dlock.lock().unwrap().closed = true;
+            if let Ok(mut g) = dlock.lock() {
+                g.closed = true;
+            }
             dcv.notify_all();
         }
-        let handles: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
+        // join even through a poisoned registry so shutdown stays a barrier
+        let handles: Vec<_> = match self.threads.lock() {
+            Ok(mut g) => g.drain(..).collect(),
+            Err(p) => p.into_inner().drain(..).collect(),
+        };
         for h in handles {
             let _ = h.join();
         }

@@ -1,0 +1,168 @@
+//! Named pipelines shared by every entrypoint.
+//!
+//! In distributed mode the program is *one* logical graph materialised in
+//! N processes: the coordinator daemon plans it, and every worker rebuilds
+//! the identical graph (same pipeline name, same event count) and re-runs
+//! the deterministic planner to learn which instances it owns. That only
+//! works if graph construction lives in exactly one place — this module.
+//! The CLI (`flowunits run`/`plan`/`fig3`), the coordinator daemon, and
+//! workers all build pipelines through [`build`].
+
+use crate::api::raw::{Source, StreamContext, WindowAgg};
+use crate::error::{Error, Result};
+use crate::value::Value;
+
+/// Pipelines [`build`] knows how to construct.
+pub const NAMES: &[&str] = &["eval", "wordcount", "wordcount_paced", "acme"];
+
+/// Words cycled by the wordcount sources.
+const WORDS: [&str; 6] = ["stream", "edge", "cloud", "site", "data", "flow"];
+
+/// Events/second *per source instance* for the paced wordcount variant —
+/// slow enough that a test (or demo) can kill a worker mid-run.
+const PACED_RATE: f64 = 20_000.0;
+
+/// Builds the named pipeline into `ctx`. Construction is deterministic:
+/// two processes calling this with the same `(pipeline, events)` get
+/// identical logical graphs, and therefore identical placement plans.
+pub fn build(ctx: &mut StreamContext, pipeline: &str, events: u64) -> Result<()> {
+    match pipeline {
+        "eval" => build_eval(ctx, events),
+        "wordcount" => build_wordcount(ctx, Source::synthetic(events, wordcount_gen)),
+        "wordcount_paced" => build_wordcount(
+            ctx,
+            Source::synthetic_rated(events, PACED_RATE, wordcount_gen),
+        ),
+        "acme" => build_acme(ctx, events),
+        other => return Err(Error::Runtime(format!("unknown pipeline '{other}'"))),
+    }
+    Ok(())
+}
+
+fn wordcount_gen(_inst: u64, i: u64) -> Value {
+    Value::Str(WORDS[(i % WORDS.len() as u64) as usize].to_string())
+}
+
+/// The paper's §V pipeline: O1 filters 67% at the edge, O2 windows+averages
+/// at the site, O3 computes Collatz convergence steps in the cloud.
+fn build_eval(ctx: &mut StreamContext, events: u64) {
+    ctx.stream(Source::synthetic(events, |inst, i| {
+        Value::I64((inst as i64) << 32 | (i as i64 & 0xffff_ffff))
+    }))
+    .to_layer("edge")
+    .filter(|v| v.as_i64().unwrap() % 3 == 0) // O1: keep 33%
+    .to_layer("site")
+    .key_by(|v| Value::I64(v.as_i64().unwrap() % 16))
+    .window(100, WindowAgg::Mean) // O2
+    .to_layer("cloud")
+    .map(|v| {
+        // O3: Collatz convergence steps of the window average
+        let (_k, mean) = v.as_pair().expect("keyed window output");
+        let mut n = (mean.as_f64().unwrap().abs() as u64).max(1);
+        let mut steps = 0i64;
+        while n != 1 {
+            n = if n % 2 == 0 { n / 2 } else { 3 * n + 1 };
+            steps += 1;
+        }
+        Value::I64(steps)
+    })
+    .collect_count();
+}
+
+/// Keyed wordcount over a cycling word source; collects `(word, count)`.
+fn build_wordcount(ctx: &mut StreamContext, source: Source) {
+    ctx.stream(source)
+        .to_layer("cloud")
+        .group_by(|w| w.clone())
+        .fold(Value::I64(0), |acc, _| {
+            *acc = Value::I64(acc.as_i64().unwrap() + 1)
+        })
+        .collect_vec();
+}
+
+/// Fig. 1 pipeline with the XLA anomaly model at the cloud.
+fn build_acme(ctx: &mut StreamContext, events: u64) {
+    ctx.stream(Source::synthetic(events, |inst, i| {
+        let t = i as f64 * 0.01;
+        let v = (t.sin() * 10.0 + 50.0) + ((i % 97) as f64) * 0.1 + inst as f64;
+        Value::F64(v)
+    }))
+    .to_layer("edge")
+    .filter(|v| v.as_f64().unwrap().is_finite())
+    .to_layer("site")
+    .key_by(|v| Value::I64((v.as_f64().unwrap() * 10.0) as i64 % 4))
+    .window(32, WindowAgg::FeatureStats)
+    .to_layer("cloud")
+    .xla_map("anomaly_v1", 64, 5)
+    .add_constraint("xla = yes")
+    .collect_count();
+}
+
+/// Stable, human-diffable rendering of one collected value. Used for the
+/// distributed-vs-in-process parity check: both sides render and sort, so
+/// instance interleaving can't perturb the comparison.
+pub fn render_value(v: &Value) -> String {
+    if let Some((k, val)) = v.as_pair() {
+        return format!("({}, {})", render_value(k), render_value(val));
+    }
+    if let Some(items) = v.as_list() {
+        let inner: Vec<String> = items.iter().map(render_value).collect();
+        return format!("[{}]", inner.join(", "));
+    }
+    if let Some(s) = v.as_str() {
+        return s.to_string();
+    }
+    if let Some(i) = v.as_i64() {
+        return i.to_string();
+    }
+    if let Some(f) = v.as_f64() {
+        return format!("{f}");
+    }
+    format!("{v:?}")
+}
+
+/// Sorted `collected: <value>` lines for a set of collected values.
+pub fn render_collected(values: &[Value]) -> Vec<String> {
+    let mut lines: Vec<String> = values
+        .iter()
+        .map(|v| format!("collected: {}", render_value(v)))
+        .collect();
+    lines.sort();
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::raw::JobConfig;
+    use crate::config::eval_cluster;
+    use std::time::Duration;
+
+    #[test]
+    fn unknown_pipeline_is_an_error() {
+        let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+        assert!(build(&mut ctx, "nope", 10).is_err());
+    }
+
+    #[test]
+    fn wordcount_builds_and_runs() {
+        let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+        build(&mut ctx, "wordcount", 600).unwrap();
+        let report = ctx.execute().unwrap();
+        let lines = render_collected(&report.collected);
+        assert_eq!(lines.len(), 6, "one (word, count) pair per word");
+        assert!(lines.iter().all(|l| l.contains("100")), "{lines:?}");
+    }
+
+    #[test]
+    fn rendering_is_sorted_and_stable() {
+        let vals = vec![
+            Value::pair(Value::Str("b".into()), Value::I64(2)),
+            Value::pair(Value::Str("a".into()), Value::I64(1)),
+        ];
+        assert_eq!(
+            render_collected(&vals),
+            vec!["collected: (a, 1)", "collected: (b, 2)"]
+        );
+    }
+}

@@ -374,12 +374,7 @@ mod tests {
         let metrics = MetricsRegistry::new();
         let (tx, rx) = sync_channel(64);
         let port = OutPort::new(
-            vec![Target {
-                tx,
-                link: None,
-                latency: Duration::ZERO,
-                crossing: false,
-            }],
+            vec![Target::local(tx)],
             Routing::RoundRobin,
             16,
             None,
@@ -422,12 +417,7 @@ mod tests {
         for idx in 0..n {
             let (tx, rx) = sync_channel(1024);
             let port = OutPort::new(
-                vec![Target {
-                    tx,
-                    link: None,
-                    latency: Duration::ZERO,
-                    crossing: false,
-                }],
+                vec![Target::local(tx)],
                 Routing::RoundRobin,
                 16,
                 None,
@@ -619,12 +609,7 @@ mod tests {
         let epoch = Arc::new(AtomicU64::new(9));
         let (tx, rx) = sync_channel(8);
         let port = OutPort::new(
-            vec![Target {
-                tx,
-                link: None,
-                latency: Duration::ZERO,
-                crossing: false,
-            }],
+            vec![Target::local(tx)],
             Routing::RoundRobin,
             16,
             None,
@@ -688,12 +673,7 @@ mod tests {
         let (up_tx, up_rx) = sync_channel(8);
         let (down_tx, down_rx) = sync_channel(8);
         let port = OutPort::new(
-            vec![Target {
-                tx: down_tx,
-                link: None,
-                latency: Duration::ZERO,
-                crossing: false,
-            }],
+            vec![Target::local(down_tx)],
             Routing::RoundRobin,
             16,
             None,
@@ -829,12 +809,7 @@ mod tests {
         let stop = Arc::new(AtomicBool::new(true)); // pre-stopped
         let (tx, rx) = sync_channel(8);
         let port = OutPort::new(
-            vec![Target {
-                tx,
-                link: None,
-                latency: Duration::ZERO,
-                crossing: false,
-            }],
+            vec![Target::local(tx)],
             Routing::RoundRobin,
             16,
             None,
@@ -867,12 +842,7 @@ mod tests {
         let vals: Vec<Value> = (0..7).map(Value::I64).collect();
         let (tx, rx) = sync_channel(64);
         let port = OutPort::new(
-            vec![Target {
-                tx,
-                link: None,
-                latency: Duration::ZERO,
-                crossing: false,
-            }],
+            vec![Target::local(tx)],
             Routing::RoundRobin,
             16,
             None,
@@ -904,12 +874,7 @@ mod tests {
         let metrics = MetricsRegistry::new();
         let (tx, rx) = sync_channel(1024);
         let port = OutPort::new(
-            vec![Target {
-                tx,
-                link: None,
-                latency: Duration::ZERO,
-                crossing: false,
-            }],
+            vec![Target::local(tx)],
             Routing::RoundRobin,
             16,
             None,

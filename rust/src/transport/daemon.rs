@@ -1,0 +1,813 @@
+//! The coordinator daemon: the control-plane half of distributed mode.
+//!
+//! One daemon process listens on a socket ([`Addr`]); worker processes
+//! connect and REGISTER (worker id, zone, advertised hosts, pid). The
+//! daemon plans a named pipeline over the shared evaluation cluster, maps
+//! the plan's hosts onto registered workers, streams each worker a DEPLOY
+//! frame, relays data-plane frames (DATA/EOS/EPOCH) between workers by
+//! destination-instance ownership, and aggregates the per-worker REPORT
+//! frames into one [`DistReport`].
+//!
+//! Liveness: every worker heartbeats at the interval the daemon announces
+//! in WELCOME. A worker is declared dead when its socket closes (reader
+//! EOF — immediate) or when it misses three heartbeats (tick loop); a
+//! death mid-job fails the active job with an error naming the worker and
+//! broadcasts JOB_ERROR to the survivors, rather than hanging the job.
+
+use super::socket::{Addr, Conn, ConnHandle, Listener, PeerSender};
+use super::wire::{self, kv, kv_get};
+use crate::api::raw::{JobConfig, StreamContext};
+use crate::config::eval_cluster;
+use crate::error::{Error, Result};
+use crate::metrics::{Metrics, MetricsRegistry};
+use crate::placement::{plan as make_plan, PlannerKind};
+use crate::value::Value;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One registered worker, as the daemon tracks it.
+struct WorkerEntry {
+    zone: String,
+    hosts: Vec<String>,
+    sender: PeerSender,
+    handle: ConnHandle,
+    last_seen: Instant,
+    alive: bool,
+}
+
+/// Per-worker slice of a finished job.
+struct WorkerReport {
+    events_in: u64,
+    events_out: u64,
+    collected: Vec<Value>,
+}
+
+/// The one active job (the daemon runs jobs serially).
+struct JobState {
+    id: u64,
+    /// Destination instance → owning worker id (drives the relay).
+    owner_of: HashMap<usize, String>,
+    /// Workers that own at least one instance.
+    expected: BTreeSet<String>,
+    reports: HashMap<String, WorkerReport>,
+    failed: Option<String>,
+}
+
+struct Shared {
+    metrics: Metrics,
+    heartbeat: Duration,
+    stop: AtomicBool,
+    workers: Mutex<HashMap<String, WorkerEntry>>,
+    reg_cv: Condvar,
+    job: Mutex<Option<JobState>>,
+    job_cv: Condvar,
+    next_job: AtomicU64,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    handles: Mutex<Vec<ConnHandle>>,
+}
+
+impl Shared {
+    fn lock_workers(&self) -> MutexGuard<'_, HashMap<String, WorkerEntry>> {
+        self.workers.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn lock_job(&self) -> MutexGuard<'_, Option<JobState>> {
+        self.job.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Marks the active job failed (if `job` is still the active one) and
+    /// broadcasts JOB_ERROR to its surviving workers.
+    fn fail_active_job(&self, job: u64, reason: String) {
+        let expected: Vec<String> = {
+            let mut st = self.lock_job();
+            match st.as_mut() {
+                Some(j) if j.id == job && j.failed.is_none() => {
+                    j.failed = Some(reason.clone());
+                    j.expected.iter().cloned().collect()
+                }
+                _ => return,
+            }
+        };
+        self.job_cv.notify_all();
+        MetricsRegistry::add(&self.metrics.transport_errors, 1);
+        let payload = kv(vec![
+            ("job", Value::I64(job as i64)),
+            ("reason", Value::Str(reason)),
+        ]);
+        let senders: Vec<PeerSender> = {
+            let ws = self.lock_workers();
+            expected
+                .iter()
+                .filter_map(|id| ws.get(id).filter(|e| e.alive).map(|e| e.sender.clone()))
+                .collect()
+        };
+        for s in senders {
+            let _ = s.send_ctl(wire::kind::JOB_ERROR, &payload);
+        }
+    }
+
+    /// Handles a worker's socket closing (EOF, error, GOODBYE, or severed
+    /// by the tick loop): marks it dead and fails the active job if the
+    /// worker still owed a report.
+    fn worker_disconnected(&self, id: &str) {
+        {
+            let mut ws = self.lock_workers();
+            match ws.get_mut(id) {
+                Some(e) if e.alive => {
+                    e.alive = false;
+                    e.handle.shutdown();
+                }
+                _ => return,
+            }
+        }
+        self.reg_cv.notify_all();
+        let owing = {
+            let st = self.lock_job();
+            match &*st {
+                Some(j)
+                    if j.failed.is_none()
+                        && j.expected.contains(id)
+                        && !j.reports.contains_key(id) =>
+                {
+                    Some(j.id)
+                }
+                _ => None,
+            }
+        };
+        if let Some(job) = owing {
+            self.fail_active_job(
+                job,
+                format!("worker '{id}' died mid-job (socket closed or heartbeats missed)"),
+            );
+        }
+    }
+
+    fn note_recv(&self, payload_len: usize) {
+        MetricsRegistry::add(&self.metrics.transport_frames_recv, 1);
+        MetricsRegistry::add(
+            &self.metrics.transport_bytes_recv,
+            wire::frame_len(payload_len) as u64,
+        );
+    }
+}
+
+/// Aggregated result of one distributed job.
+#[derive(Debug)]
+pub struct DistReport {
+    /// Wall-clock time from deploy to the last report.
+    pub wall_time: Duration,
+    /// Events produced by sources, summed over workers.
+    pub events_in: u64,
+    /// Events delivered to sinks, summed over workers.
+    pub events_out: u64,
+    /// Values gathered by collect sinks, concatenated over workers.
+    pub collected: Vec<Value>,
+    /// Sorted ids of the workers that participated.
+    pub workers: Vec<String>,
+}
+
+impl DistReport {
+    /// Renders the report (collected values are rendered separately via
+    /// [`crate::pipelines::render_collected`] so they stay diffable).
+    pub fn render(&self) -> String {
+        format!(
+            "distributed job: {} worker(s) [{}]\nwall time        : {:?}\nevents in / out  : {} / {}\ncollected values : {}\n",
+            self.workers.len(),
+            self.workers.join(", "),
+            self.wall_time,
+            self.events_in,
+            self.events_out,
+            self.collected.len()
+        )
+    }
+}
+
+/// The coordinator daemon. See the module docs for the protocol.
+pub struct CoordinatorDaemon {
+    addr: Addr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    tick: Option<JoinHandle<()>>,
+}
+
+impl CoordinatorDaemon {
+    /// Binds `addr` and starts the accept and liveness-tick threads.
+    pub fn start(addr: Addr, heartbeat: Duration, metrics: Metrics) -> Result<CoordinatorDaemon> {
+        let listener = Listener::bind(&addr)?;
+        let shared = Arc::new(Shared {
+            metrics,
+            heartbeat,
+            stop: AtomicBool::new(false),
+            workers: Mutex::new(HashMap::new()),
+            reg_cv: Condvar::new(),
+            job: Mutex::new(None),
+            job_cv: Condvar::new(),
+            next_job: AtomicU64::new(1),
+            readers: Mutex::new(Vec::new()),
+            handles: Mutex::new(Vec::new()),
+        });
+        let s2 = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("daemon-accept".into())
+            .spawn(move || accept_loop(listener, s2))
+            .map_err(|e| Error::Transport(format!("spawn accept thread: {e}")))?;
+        let s3 = shared.clone();
+        let tick = std::thread::Builder::new()
+            .name("daemon-tick".into())
+            .spawn(move || tick_loop(s3))
+            .map_err(|e| Error::Transport(format!("spawn tick thread: {e}")))?;
+        Ok(CoordinatorDaemon {
+            addr,
+            shared,
+            accept: Some(accept),
+            tick: Some(tick),
+        })
+    }
+
+    /// The address the daemon listens on.
+    pub fn addr(&self) -> &Addr {
+        &self.addr
+    }
+
+    /// The daemon's metrics registry (socket traffic, reconnects, errors).
+    pub fn metrics(&self) -> Metrics {
+        self.shared.metrics.clone()
+    }
+
+    /// Registered workers as `(id, zone, alive)`, sorted by id.
+    pub fn workers(&self) -> Vec<(String, String, bool)> {
+        let ws = self.shared.lock_workers();
+        let mut out: Vec<(String, String, bool)> = ws
+            .iter()
+            .map(|(id, e)| (id.clone(), e.zone.clone(), e.alive))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Blocks until at least `n` workers are registered and alive.
+    pub fn wait_for_workers(&self, n: usize, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut ws = self.shared.lock_workers();
+        loop {
+            let alive = ws.values().filter(|e| e.alive).count();
+            if alive >= n {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::Transport(format!(
+                    "only {alive}/{n} workers registered within {timeout:?}"
+                )));
+            }
+            ws = match self.shared.reg_cv.wait_timeout(ws, deadline - now) {
+                Ok((g, _)) => g,
+                Err(_) => return Err(Error::Transport("worker registry poisoned".into())),
+            };
+        }
+    }
+
+    /// Plans `pipeline` over the shared evaluation cluster, deploys it
+    /// across `n_workers` registered workers, and waits for every report.
+    ///
+    /// The host→worker assignment honors hosts a worker advertised at
+    /// registration; unclaimed hosts are assigned round-robin. The same
+    /// assignment ships to every worker inside DEPLOY, so all processes
+    /// agree on instance ownership without a second round-trip.
+    pub fn run_job(
+        &self,
+        pipeline: &str,
+        events: u64,
+        n_workers: usize,
+        timeout: Duration,
+    ) -> Result<DistReport> {
+        self.wait_for_workers(n_workers, timeout)?;
+        let started = Instant::now();
+        let cluster = eval_cluster(None, Duration::ZERO);
+        let mut ctx = StreamContext::new(cluster.clone(), JobConfig::default());
+        crate::pipelines::build(&mut ctx, pipeline, events)?;
+        let graph = ctx.into_graph()?;
+        let plan = make_plan(&graph, &cluster, PlannerKind::FlowUnits, &[], false)?;
+
+        // host → worker assignment over the currently-alive workers
+        let hosts: Vec<String> = plan
+            .instances
+            .iter()
+            .map(|i| i.host.clone())
+            .collect::<BTreeSet<String>>()
+            .into_iter()
+            .collect();
+        let (assign, owner_of, expected, deploy_to) = {
+            let ws = self.shared.lock_workers();
+            let ids: Vec<String> = ws
+                .iter()
+                .filter(|(_, e)| e.alive)
+                .map(|(id, _)| id.clone())
+                .collect::<BTreeSet<String>>()
+                .into_iter()
+                .collect();
+            if ids.is_empty() {
+                return Err(Error::Transport("no live workers to deploy to".into()));
+            }
+            let mut assign: Vec<(String, String)> = Vec::new();
+            for (i, h) in hosts.iter().enumerate() {
+                let claimed = ids
+                    .iter()
+                    .find(|id| ws.get(*id).is_some_and(|e| e.hosts.iter().any(|x| x == h)));
+                let w = claimed.unwrap_or(&ids[i % ids.len()]).clone();
+                assign.push((h.clone(), w));
+            }
+            let by_host: HashMap<&str, &str> = assign
+                .iter()
+                .map(|(h, w)| (h.as_str(), w.as_str()))
+                .collect();
+            let mut owner_of = HashMap::new();
+            let mut expected = BTreeSet::new();
+            for inst in &plan.instances {
+                let w = by_host[inst.host.as_str()].to_string();
+                expected.insert(w.clone());
+                owner_of.insert(inst.id, w);
+            }
+            let deploy_to: Vec<(String, PeerSender)> = expected
+                .iter()
+                .filter_map(|id| ws.get(id).map(|e| (id.clone(), e.sender.clone())))
+                .collect();
+            (assign, owner_of, expected, deploy_to)
+        };
+
+        let job = self.shared.next_job.fetch_add(1, Ordering::SeqCst);
+        *self.shared.lock_job() = Some(JobState {
+            id: job,
+            owner_of,
+            expected: expected.clone(),
+            reports: HashMap::new(),
+            failed: None,
+        });
+        let payload = kv(vec![
+            ("job", Value::I64(job as i64)),
+            ("pipeline", Value::Str(pipeline.to_string())),
+            ("events", Value::I64(events as i64)),
+            (
+                "assign",
+                Value::List(
+                    assign
+                        .iter()
+                        .map(|(h, w)| {
+                            Value::pair(Value::Str(h.clone()), Value::Str(w.clone()))
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        for (id, sender) in &deploy_to {
+            if sender.send_ctl(wire::kind::DEPLOY, &payload).is_err() {
+                self.shared
+                    .fail_active_job(job, format!("deploy to worker '{id}' failed"));
+                break;
+            }
+        }
+
+        // wait for every expected report (or failure, or timeout)
+        let deadline = started + timeout;
+        let mut st = self.shared.lock_job();
+        loop {
+            let done = match &*st {
+                Some(j) if j.id == job => {
+                    j.failed.is_some() || j.expected.iter().all(|w| j.reports.contains_key(w))
+                }
+                _ => true,
+            };
+            if done {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                self.shared
+                    .fail_active_job(job, format!("job {job} timed out after {timeout:?}"));
+                st = self.shared.lock_job();
+                break;
+            }
+            st = match self.shared.job_cv.wait_timeout(st, deadline - now) {
+                Ok((g, _)) => g,
+                Err(_) => return Err(Error::Transport("job state poisoned".into())),
+            };
+        }
+        let state = st.take();
+        drop(st);
+        let Some(mut state) = state else {
+            return Err(Error::Transport("job state vanished mid-run".into()));
+        };
+        if let Some(reason) = state.failed {
+            return Err(Error::Transport(reason));
+        }
+        let mut report = DistReport {
+            wall_time: started.elapsed(),
+            events_in: 0,
+            events_out: 0,
+            collected: Vec::new(),
+            workers: expected.into_iter().collect(),
+        };
+        for id in &report.workers {
+            if let Some(r) = state.reports.remove(id) {
+                report.events_in += r.events_in;
+                report.events_out += r.events_out;
+                report.collected.extend(r.collected);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Sends SHUTDOWN to every live worker (graceful fleet teardown).
+    pub fn shutdown_workers(&self) {
+        let senders: Vec<PeerSender> = {
+            let ws = self.shared.lock_workers();
+            ws.values()
+                .filter(|e| e.alive)
+                .map(|e| e.sender.clone())
+                .collect()
+        };
+        let empty = kv(vec![]);
+        for s in senders {
+            let _ = s.send_ctl(wire::kind::SHUTDOWN, &empty);
+        }
+    }
+
+    /// Stops the daemon: severs every connection, unblocks the accept
+    /// loop, and joins all service threads. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for h in self
+            .shared
+            .handles
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .drain(..)
+        {
+            h.shutdown();
+        }
+        // unblock the accept loop with a throwaway connection
+        let _ = Conn::connect(&self.addr, None);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.tick.take() {
+            let _ = h.join();
+        }
+        let readers: Vec<JoinHandle<()>> = self
+            .shared
+            .readers
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .drain(..)
+            .collect();
+        for h in readers {
+            let _ = h.join();
+        }
+        #[cfg(unix)]
+        if let Addr::Unix(p) = &self.addr {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for CoordinatorDaemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: Listener, shared: Arc<Shared>) {
+    loop {
+        match listener.accept(Some(shared.metrics.clone())) {
+            Ok(conn) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(h) = conn.handle() {
+                    shared
+                        .handles
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .push(h);
+                }
+                let s2 = shared.clone();
+                if let Ok(jh) = std::thread::Builder::new()
+                    .name("daemon-conn".into())
+                    .spawn(move || handle_conn(&s2, conn))
+                {
+                    shared
+                        .readers
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .push(jh);
+                }
+            }
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Liveness tick: a worker that misses three heartbeat intervals is
+/// severed (its reader thread then runs the disconnect path). Lag past
+/// one interval is recorded per worker in the labelled metrics.
+fn tick_loop(shared: Arc<Shared>) {
+    let step = Duration::from_millis(50);
+    loop {
+        let mut waited = Duration::ZERO;
+        while waited < shared.heartbeat {
+            if shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(step.min(shared.heartbeat - waited));
+            waited += step;
+        }
+        let mut dead = Vec::new();
+        {
+            let mut ws = shared.lock_workers();
+            for (id, e) in ws.iter_mut() {
+                if !e.alive {
+                    continue;
+                }
+                let lag = e.last_seen.elapsed();
+                if lag > shared.heartbeat {
+                    MetricsRegistry::add(
+                        &shared.metrics.counter(&format!("transport.hb_lag.{id}")),
+                        1,
+                    );
+                }
+                if lag > shared.heartbeat * 3 {
+                    e.handle.shutdown();
+                    dead.push(id.clone());
+                }
+            }
+        }
+        for id in dead {
+            shared.worker_disconnected(&id);
+        }
+    }
+}
+
+/// Per-connection reader: handshake, then serve frames until the peer
+/// disconnects.
+fn handle_conn(shared: &Arc<Shared>, mut conn: Conn) {
+    // --- handshake: first frame must be REGISTER ---------------------
+    let first = match conn.reader.next_frame() {
+        Ok(Some(f)) => f,
+        _ => return,
+    };
+    shared.note_recv(first.payload.len());
+    if first.kind != wire::kind::REGISTER {
+        return;
+    }
+    let Ok(v) = wire::parse_ctl(&first.payload) else {
+        let _ = conn.sender.send_ctl(
+            wire::kind::REJECT,
+            &kv(vec![("reason", Value::Str("malformed REGISTER".into()))]),
+        );
+        return;
+    };
+    let Some(id) = kv_get(&v, "worker").and_then(Value::as_str).map(String::from) else {
+        let _ = conn.sender.send_ctl(
+            wire::kind::REJECT,
+            &kv(vec![("reason", Value::Str("REGISTER without worker id".into()))]),
+        );
+        return;
+    };
+    let zone = kv_get(&v, "zone")
+        .and_then(Value::as_str)
+        .unwrap_or("")
+        .to_string();
+    let hosts: Vec<String> = kv_get(&v, "hosts")
+        .and_then(Value::as_list)
+        .map(|l| l.iter().filter_map(|h| h.as_str().map(String::from)).collect())
+        .unwrap_or_default();
+    {
+        let mut ws = shared.lock_workers();
+        if ws.get(&id).is_some_and(|e| e.alive) {
+            drop(ws);
+            let _ = conn.sender.send_ctl(
+                wire::kind::REJECT,
+                &kv(vec![(
+                    "reason",
+                    Value::Str(format!("worker id '{id}' is already registered and alive")),
+                )]),
+            );
+            return;
+        }
+        let readopted = ws.remove(&id).is_some();
+        if readopted {
+            MetricsRegistry::add(&shared.metrics.transport_reconnects, 1);
+        }
+        let Ok(handle) = conn.handle() else { return };
+        ws.insert(
+            id.clone(),
+            WorkerEntry {
+                zone,
+                hosts,
+                sender: conn.sender.clone(),
+                handle,
+                last_seen: Instant::now(),
+                alive: true,
+            },
+        );
+    }
+    shared.reg_cv.notify_all();
+    if conn
+        .sender
+        .send_ctl(
+            wire::kind::WELCOME,
+            &kv(vec![(
+                "heartbeat_ms",
+                Value::I64(shared.heartbeat.as_millis() as i64),
+            )]),
+        )
+        .is_err()
+    {
+        shared.worker_disconnected(&id);
+        return;
+    }
+
+    // --- serve -------------------------------------------------------
+    loop {
+        let f = match conn.reader.next_frame() {
+            Ok(Some(f)) => f,
+            _ => break,
+        };
+        shared.note_recv(f.payload.len());
+        if let Some(e) = shared.lock_workers().get_mut(&id) {
+            e.last_seen = Instant::now();
+        }
+        match f.kind {
+            wire::kind::HEARTBEAT => {}
+            wire::kind::DATA | wire::kind::EOS | wire::kind::EPOCH => {
+                relay(shared, f.kind, &f.payload);
+            }
+            wire::kind::REPORT => {
+                if let Ok(v) = wire::parse_ctl(&f.payload) {
+                    accept_report(shared, &v);
+                }
+            }
+            wire::kind::JOB_ERROR => {
+                if let Ok(v) = wire::parse_ctl(&f.payload) {
+                    if let Some(job) = kv_get(&v, "job").and_then(Value::as_i64) {
+                        let reason = kv_get(&v, "reason")
+                            .and_then(Value::as_str)
+                            .unwrap_or("worker-side job error")
+                            .to_string();
+                        shared.fail_active_job(job as u64, reason);
+                    }
+                }
+            }
+            wire::kind::GOODBYE => break,
+            _ => {}
+        }
+    }
+    shared.worker_disconnected(&id);
+}
+
+/// Relays one data-plane frame to the worker owning its destination
+/// instance. Frames for a job that is no longer active are dropped.
+fn relay(shared: &Arc<Shared>, kind: u8, payload: &[u8]) {
+    let Ok((job, to, _rest)) = wire::parse_data(payload) else {
+        MetricsRegistry::add(&shared.metrics.transport_errors, 1);
+        return;
+    };
+    let owner = {
+        let st = shared.lock_job();
+        match &*st {
+            Some(j) if j.id == job && j.failed.is_none() => j.owner_of.get(&to).cloned(),
+            _ => None, // stale or unknown job: drop
+        }
+    };
+    let Some(owner) = owner else { return };
+    let sender = {
+        let ws = shared.lock_workers();
+        ws.get(&owner).filter(|e| e.alive).map(|e| e.sender.clone())
+    };
+    match sender {
+        Some(s) => {
+            if s.send(kind, payload).is_err() {
+                MetricsRegistry::add(&shared.metrics.transport_errors, 1);
+            }
+        }
+        None => MetricsRegistry::add(&shared.metrics.transport_errors, 1),
+    }
+}
+
+fn accept_report(shared: &Arc<Shared>, v: &Value) {
+    let (Some(job), Some(worker)) = (
+        kv_get(v, "job").and_then(Value::as_i64),
+        kv_get(v, "worker").and_then(Value::as_str),
+    ) else {
+        return;
+    };
+    let report = WorkerReport {
+        events_in: kv_get(v, "events_in").and_then(Value::as_i64).unwrap_or(0) as u64,
+        events_out: kv_get(v, "events_out").and_then(Value::as_i64).unwrap_or(0) as u64,
+        collected: kv_get(v, "collected")
+            .and_then(Value::as_list)
+            .map(|l| l.to_vec())
+            .unwrap_or_default(),
+    };
+    {
+        let mut st = shared.lock_job();
+        if let Some(j) = st.as_mut() {
+            if j.id == job as u64 {
+                j.reports.insert(worker.to_string(), report);
+            }
+        }
+    }
+    shared.job_cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_addr(tag: &str) -> Addr {
+        let dir = std::env::temp_dir().join(format!("fu-daemon-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        Addr::parse(&dir.join("d.sock").to_string_lossy())
+    }
+
+    fn register(conn: &Conn, id: &str) {
+        conn.sender
+            .send_ctl(
+                wire::kind::REGISTER,
+                &kv(vec![
+                    ("worker", Value::Str(id.into())),
+                    ("zone", Value::Str("cloud".into())),
+                    ("pid", Value::I64(std::process::id() as i64)),
+                ]),
+            )
+            .unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn duplicate_registration_is_rejected_and_death_reenables_the_id() {
+        let metrics = MetricsRegistry::new();
+        let mut daemon = CoordinatorDaemon::start(
+            test_addr("dup"),
+            Duration::from_millis(100),
+            metrics.clone(),
+        )
+        .unwrap();
+        let mut c1 = Conn::connect(daemon.addr(), None).unwrap();
+        register(&c1, "w1");
+        let f = c1.reader.next_frame().unwrap().unwrap();
+        assert_eq!(f.kind, wire::kind::WELCOME);
+        let hb = wire::parse_ctl(&f.payload).unwrap();
+        assert_eq!(
+            kv_get(&hb, "heartbeat_ms").and_then(Value::as_i64),
+            Some(100)
+        );
+
+        // same id, live connection: rejected
+        let mut c2 = Conn::connect(daemon.addr(), None).unwrap();
+        register(&c2, "w1");
+        let f = c2.reader.next_frame().unwrap().unwrap();
+        assert_eq!(f.kind, wire::kind::REJECT);
+
+        // first connection dies -> id becomes re-adoptable
+        c1.shutdown();
+        let t0 = Instant::now();
+        while daemon.workers().iter().any(|(id, _, alive)| id == "w1" && *alive) {
+            assert!(t0.elapsed() < Duration::from_secs(5), "death not detected");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let mut c3 = Conn::connect(daemon.addr(), None).unwrap();
+        register(&c3, "w1");
+        let f = c3.reader.next_frame().unwrap().unwrap();
+        assert_eq!(f.kind, wire::kind::WELCOME, "dead id is re-adopted");
+        assert_eq!(metrics.transport_reconnects.load(Ordering::Relaxed), 1);
+        daemon.shutdown();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn run_job_without_workers_times_out_cleanly() {
+        let mut daemon = CoordinatorDaemon::start(
+            test_addr("nowork"),
+            Duration::from_millis(100),
+            MetricsRegistry::new(),
+        )
+        .unwrap();
+        let err = daemon
+            .run_job("wordcount", 60, 1, Duration::from_millis(200))
+            .unwrap_err();
+        assert!(err.to_string().contains("0/1 workers"), "{err}");
+        daemon.shutdown();
+    }
+}

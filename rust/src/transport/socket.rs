@@ -1,0 +1,405 @@
+//! Real sockets for the distributed runtime: Unix domain sockets for
+//! local deployments, TCP across hosts. One bidirectional connection per
+//! worker carries both planes — control frames (register, deploy,
+//! heartbeat, report) and relayed data frames — multiplexed by the frame
+//! kind byte ([`wire`]).
+
+use super::wire;
+use super::{Endpoint, Lane, Transport};
+use crate::channels::Msg;
+use crate::error::{Error, Result};
+use crate::metrics::{Metrics, MetricsRegistry};
+use crate::value::Value;
+use std::fmt;
+use std::io::{BufWriter, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A transport address: a Unix socket path or a TCP `host:port`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Addr {
+    /// Unix domain socket path (local coordinator + workers).
+    #[cfg(unix)]
+    Unix(PathBuf),
+    /// TCP address (`host:port`) for cross-host deployments.
+    Tcp(String),
+}
+
+impl Addr {
+    /// Parses an address: anything containing `/` (or starting with `.`)
+    /// is a Unix socket path, everything else is `host:port` TCP.
+    pub fn parse(s: &str) -> Addr {
+        #[cfg(unix)]
+        if s.contains('/') || s.starts_with('.') {
+            return Addr::Unix(PathBuf::from(s));
+        }
+        Addr::Tcp(s.to_string())
+    }
+}
+
+impl fmt::Display for Addr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            #[cfg(unix)]
+            Addr::Unix(p) => write!(f, "{}", p.display()),
+            Addr::Tcp(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// Raw stream handle — kept alongside the split reader/writer so timeouts
+/// and shutdowns can be applied from another thread (clones share the
+/// underlying socket).
+enum StreamCtl {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl StreamCtl {
+    fn try_clone(&self) -> std::io::Result<StreamCtl> {
+        Ok(match self {
+            #[cfg(unix)]
+            StreamCtl::Unix(s) => StreamCtl::Unix(s.try_clone()?),
+            StreamCtl::Tcp(s) => StreamCtl::Tcp(s.try_clone()?),
+        })
+    }
+
+    fn reader(&self) -> std::io::Result<Box<dyn Read + Send>> {
+        Ok(match self {
+            #[cfg(unix)]
+            StreamCtl::Unix(s) => Box::new(s.try_clone()?),
+            StreamCtl::Tcp(s) => Box::new(s.try_clone()?),
+        })
+    }
+
+    fn writer(&self) -> std::io::Result<Box<dyn Write + Send>> {
+        Ok(match self {
+            #[cfg(unix)]
+            StreamCtl::Unix(s) => Box::new(BufWriter::new(s.try_clone()?)),
+            StreamCtl::Tcp(s) => Box::new(BufWriter::new(s.try_clone()?)),
+        })
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            StreamCtl::Unix(s) => s.set_read_timeout(d),
+            StreamCtl::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn shutdown(&self) {
+        match self {
+            #[cfg(unix)]
+            StreamCtl::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            StreamCtl::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+/// Shareable handle to a connection's socket: lets the daemon's tick loop
+/// sever a dead peer (unblocking its reader thread) without owning the
+/// connection.
+pub struct ConnHandle(StreamCtl);
+
+impl ConnHandle {
+    /// Severs the connection (both directions).
+    pub fn shutdown(&self) {
+        self.0.shutdown();
+    }
+}
+
+/// Clonable, thread-safe writer half of a connection. All frame writes go
+/// through one mutex so interleaved senders never tear a frame; a
+/// poisoned or closed writer surfaces as [`Error::Transport`], never a
+/// panic.
+#[derive(Clone)]
+pub struct PeerSender(Arc<PeerShared>);
+
+struct PeerShared {
+    w: Mutex<Box<dyn Write + Send>>,
+    desc: String,
+    metrics: Option<Metrics>,
+}
+
+impl PeerSender {
+    fn new(w: Box<dyn Write + Send>, desc: String, metrics: Option<Metrics>) -> PeerSender {
+        PeerSender(Arc::new(PeerShared {
+            w: Mutex::new(w),
+            desc,
+            metrics,
+        }))
+    }
+
+    /// Peer description (diagnostics).
+    pub fn desc(&self) -> &str {
+        &self.0.desc
+    }
+
+    /// Writes one frame.
+    pub fn send(&self, kind: u8, payload: &[u8]) -> Result<()> {
+        let mut w = self
+            .0
+            .w
+            .lock()
+            .map_err(|_| Error::Transport(format!("writer to {} poisoned", self.0.desc)))?;
+        wire::write_frame(&mut *w, kind, payload)
+            .map_err(|e| Error::Transport(format!("send to {}: {e}", self.0.desc)))?;
+        if let Some(m) = &self.0.metrics {
+            MetricsRegistry::add(
+                &m.transport_bytes_sent,
+                wire::frame_len(payload.len()) as u64,
+            );
+            MetricsRegistry::add(&m.transport_frames_sent, 1);
+        }
+        Ok(())
+    }
+
+    /// Writes one control frame carrying a `Value` tree.
+    pub fn send_ctl(&self, kind: u8, v: &Value) -> Result<()> {
+        self.send(kind, &wire::ctl_payload(v))
+    }
+}
+
+/// One established connection: a resumable frame reader plus a shareable
+/// frame writer over the same socket.
+pub struct Conn {
+    /// Peer description (diagnostics).
+    pub desc: String,
+    ctl: StreamCtl,
+    /// Incremental frame reader (partial reads and timeouts preserved).
+    pub reader: wire::FrameReader<Box<dyn Read + Send>>,
+    /// Shareable writer half.
+    pub sender: PeerSender,
+}
+
+impl Conn {
+    fn from_ctl(ctl: StreamCtl, desc: String, metrics: Option<Metrics>) -> Result<Conn> {
+        let r = ctl
+            .reader()
+            .map_err(|e| Error::Transport(format!("clone reader for {desc}: {e}")))?;
+        let w = ctl
+            .writer()
+            .map_err(|e| Error::Transport(format!("clone writer for {desc}: {e}")))?;
+        Ok(Conn {
+            desc: desc.clone(),
+            ctl,
+            reader: wire::FrameReader::new(r),
+            sender: PeerSender::new(w, desc, metrics),
+        })
+    }
+
+    /// Connects to a coordinator or worker.
+    pub fn connect(addr: &Addr, metrics: Option<Metrics>) -> Result<Conn> {
+        let ctl = match addr {
+            #[cfg(unix)]
+            Addr::Unix(p) => StreamCtl::Unix(
+                UnixStream::connect(p)
+                    .map_err(|e| Error::Transport(format!("connect {}: {e}", p.display())))?,
+            ),
+            Addr::Tcp(s) => StreamCtl::Tcp(
+                TcpStream::connect(s)
+                    .map_err(|e| Error::Transport(format!("connect {s}: {e}")))?,
+            ),
+        };
+        Conn::from_ctl(ctl, format!("{addr}"), metrics)
+    }
+
+    /// Sets (or clears) the read timeout; the frame reader preserves
+    /// partial progress across timeouts, so polling is safe mid-frame.
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        self.ctl
+            .set_read_timeout(d)
+            .map_err(|e| Error::Transport(format!("set_read_timeout on {}: {e}", self.desc)))
+    }
+
+    /// A shareable control handle (for shutdown from another thread).
+    pub fn handle(&self) -> Result<ConnHandle> {
+        Ok(ConnHandle(self.ctl.try_clone().map_err(|e| {
+            Error::Transport(format!("clone handle for {}: {e}", self.desc))
+        })?))
+    }
+
+    /// Severs the connection.
+    pub fn shutdown(&self) {
+        self.ctl.shutdown();
+    }
+}
+
+/// A bound listening socket.
+pub enum Listener {
+    /// Unix domain socket listener.
+    #[cfg(unix)]
+    Unix(UnixListener),
+    /// TCP listener.
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Binds `addr`. A stale Unix socket file left by a dead coordinator
+    /// is removed first — workers reconnect with backoff, so reclaiming
+    /// the path is always safe.
+    pub fn bind(addr: &Addr) -> Result<Listener> {
+        match addr {
+            #[cfg(unix)]
+            Addr::Unix(p) => {
+                if let Some(dir) = p.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        let _ = std::fs::create_dir_all(dir);
+                    }
+                }
+                let _ = std::fs::remove_file(p);
+                Ok(Listener::Unix(UnixListener::bind(p).map_err(|e| {
+                    Error::Transport(format!("bind {}: {e}", p.display()))
+                })?))
+            }
+            Addr::Tcp(s) => Ok(Listener::Tcp(
+                TcpListener::bind(s).map_err(|e| Error::Transport(format!("bind {s}: {e}")))?,
+            )),
+        }
+    }
+
+    /// Accepts one connection.
+    pub fn accept(&self, metrics: Option<Metrics>) -> Result<Conn> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l
+                    .accept()
+                    .map_err(|e| Error::Transport(format!("accept: {e}")))?;
+                Conn::from_ctl(StreamCtl::Unix(s), "unix-peer".into(), metrics)
+            }
+            Listener::Tcp(l) => {
+                let (s, peer) = l
+                    .accept()
+                    .map_err(|e| Error::Transport(format!("accept: {e}")))?;
+                Conn::from_ctl(StreamCtl::Tcp(s), format!("{peer}"), metrics)
+            }
+        }
+    }
+}
+
+/// Real-socket transport: every lane writes `DATA`/`EOS`/`EPOCH` frames
+/// tagged with the job and destination instance through the worker's one
+/// coordinator connection; the coordinator relays each frame to the
+/// worker owning the destination. See the module docs on
+/// [`transport`](crate::transport) for when this is selected.
+pub struct SocketTransport {
+    peer: PeerSender,
+    job: u64,
+}
+
+impl SocketTransport {
+    /// Transport over an established peer connection, scoped to one job
+    /// (frames carry the job id so late frames from a torn-down job are
+    /// dropped, not misdelivered).
+    pub fn new(peer: PeerSender, job: u64) -> Self {
+        SocketTransport { peer, job }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn open(&mut self, _from: &Endpoint, to: &Endpoint) -> Result<Box<dyn Lane>> {
+        Ok(Box::new(PeerLane {
+            peer: self.peer.clone(),
+            job: self.job,
+            to: to.instance,
+        }))
+    }
+}
+
+/// Lane to a remote instance: encoded frames through the peer socket.
+pub struct PeerLane {
+    peer: PeerSender,
+    job: u64,
+    to: usize,
+}
+
+impl Lane for PeerLane {
+    fn framed(&self) -> bool {
+        true
+    }
+
+    fn deliver(&mut self, msg: Msg) -> Result<()> {
+        match msg {
+            Msg::Frame(bytes) => self.peer.send(
+                wire::kind::DATA,
+                &wire::data_payload(self.job, self.to, &bytes),
+            ),
+            // unreachable through OutPort (framed lanes receive frames),
+            // but a direct caller still gets correct behavior
+            Msg::Batch(b) => {
+                let bytes = b.wire();
+                self.peer.send(
+                    wire::kind::DATA,
+                    &wire::data_payload(self.job, self.to, &bytes),
+                )
+            }
+            Msg::Eos => self
+                .peer
+                .send(wire::kind::EOS, &wire::data_payload(self.job, self.to, &[])),
+            Msg::Epoch(e) => self.peer.send(
+                wire::kind::EPOCH,
+                &wire::data_payload(self.job, self.to, &e.to_le_bytes()),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parse_distinguishes_unix_and_tcp() {
+        #[cfg(unix)]
+        assert!(matches!(Addr::parse("/tmp/fu.sock"), Addr::Unix(_)));
+        #[cfg(unix)]
+        assert!(matches!(Addr::parse("./fu.sock"), Addr::Unix(_)));
+        assert!(matches!(Addr::parse("127.0.0.1:7070"), Addr::Tcp(_)));
+        assert!(matches!(Addr::parse("edge-host:9000"), Addr::Tcp(_)));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_roundtrip_and_relay_framing() {
+        let dir = std::env::temp_dir().join(format!("fu-sock-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let addr = Addr::Unix(dir.join("t.sock"));
+        let listener = Listener::bind(&addr).unwrap();
+        let addr2 = addr.clone();
+        let client = std::thread::spawn(move || {
+            let conn = Conn::connect(&addr2, None).unwrap();
+            conn.sender
+                .send_ctl(wire::kind::REGISTER, &Value::Str("w1".into()))
+                .unwrap();
+            let mut conn = conn;
+            let f = conn.reader.next_frame().unwrap().unwrap();
+            assert_eq!(f.kind, wire::kind::WELCOME);
+        });
+        let mut server = listener.accept(None).unwrap();
+        let f = server.reader.next_frame().unwrap().unwrap();
+        assert_eq!(f.kind, wire::kind::REGISTER);
+        assert_eq!(wire::parse_ctl(&f.payload).unwrap(), Value::Str("w1".into()));
+        server
+            .sender
+            .send_ctl(wire::kind::WELCOME, &Value::I64(500))
+            .unwrap();
+        client.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

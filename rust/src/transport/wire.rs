@@ -1,0 +1,316 @@
+//! Length-prefixed frame codec for the real (socket) transport.
+//!
+//! Every frame on a socket is `[u32 le length][u8 kind][payload]`, where
+//! `length` covers the kind byte plus the payload. Data-plane frames
+//! carry the engine's existing encode-once wire format — the refcounted
+//! bytes behind [`Msg::Frame`](crate::channels::Msg::Frame) — prefixed
+//! with a job id and destination instance id so the coordinator can relay
+//! them to the owning worker. Control-plane frames (register, deploy,
+//! heartbeat, report, ...) carry an encoded [`Value`] tree, reusing the
+//! crate's codec instead of introducing a serialization dependency.
+//!
+//! Reading is resumable: [`FrameReader`] preserves partial progress
+//! across short reads *and* read timeouts (`WouldBlock`/`TimedOut`), so a
+//! worker can poll its socket with a timeout — to notice SIGTERM between
+//! frames — without ever tearing a frame in half.
+
+use crate::error::{Error, Result};
+use crate::value::Value;
+use std::io::{self, Read, Write};
+
+/// Upper bound on one frame (kind byte + payload). Large enough for any
+/// realistic batch, small enough to reject garbage length prefixes from a
+/// corrupt or hostile stream before allocating.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Frame kinds. Data-plane kinds mirror [`Msg`](crate::channels::Msg);
+/// control-plane kinds drive the coordinator/worker handshake.
+pub mod kind {
+    /// Batch bytes: `[u32 job][u32 to_instance][batch wire bytes]`.
+    pub const DATA: u8 = 0x01;
+    /// One producer finished: `[u32 job][u32 to_instance]`.
+    pub const EOS: u8 = 0x02;
+    /// Drain-and-handoff marker: `[u32 job][u32 to_instance][u64 epoch]`.
+    pub const EPOCH: u8 = 0x03;
+    /// Worker → coordinator hello (Value payload).
+    pub const REGISTER: u8 = 0x10;
+    /// Coordinator → worker registration accepted (Value payload).
+    pub const WELCOME: u8 = 0x11;
+    /// Coordinator → worker registration refused (Value payload: reason).
+    pub const REJECT: u8 = 0x12;
+    /// Coordinator → worker instance-plan assignment (Value payload).
+    pub const DEPLOY: u8 = 0x13;
+    /// Worker → coordinator liveness beacon (Value payload).
+    pub const HEARTBEAT: u8 = 0x14;
+    /// Worker → coordinator per-job results (Value payload).
+    pub const REPORT: u8 = 0x15;
+    /// Worker → coordinator graceful deregistration (Value payload).
+    pub const GOODBYE: u8 = 0x16;
+    /// Coordinator → worker: a peer died; abort the named job.
+    pub const JOB_ERROR: u8 = 0x17;
+    /// Coordinator → worker: drain and exit.
+    pub const SHUTDOWN: u8 = 0x18;
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Frame kind (see [`kind`]).
+    pub kind: u8,
+    /// Payload bytes (everything after the kind byte).
+    pub payload: Vec<u8>,
+}
+
+/// Bytes one frame occupies on the wire (length prefix included).
+pub fn frame_len(payload_len: usize) -> usize {
+    4 + 1 + payload_len
+}
+
+/// Writes one frame and flushes the writer (frames are the unit of
+/// progress; a buffered half-frame helps nobody).
+pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<()> {
+    let len = 1 + payload.len();
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds MAX_FRAME"),
+        ));
+    }
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// What one [`FrameReader::poll`] produced.
+#[derive(Debug)]
+pub enum ReadEvent {
+    /// A complete frame.
+    Frame(Frame),
+    /// Clean end of stream (EOF on a frame boundary).
+    Eof,
+    /// The read timed out (`WouldBlock`/`TimedOut`) — partial progress, if
+    /// any, is preserved; call `poll` again.
+    Idle,
+}
+
+/// Incremental frame reader: survives short reads and read timeouts
+/// without losing partial progress (a frame torn across two `poll` calls
+/// is reassembled, never dropped or misparsed).
+pub struct FrameReader<R> {
+    r: R,
+    hdr: [u8; 4],
+    hdr_got: usize,
+    body: Vec<u8>,
+    body_got: usize,
+    /// Total payload+kind bytes of the frame being read; 0 ⇒ reading the
+    /// length prefix.
+    body_need: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wraps a readable stream.
+    pub fn new(r: R) -> Self {
+        FrameReader {
+            r,
+            hdr: [0; 4],
+            hdr_got: 0,
+            body: Vec::new(),
+            body_got: 0,
+            body_need: 0,
+        }
+    }
+
+    /// Reads until a full frame, EOF, or a read timeout. EOF in the
+    /// middle of a frame is an `UnexpectedEof` error (a peer died
+    /// mid-send), EOF on a boundary is the clean [`ReadEvent::Eof`].
+    pub fn poll(&mut self) -> io::Result<ReadEvent> {
+        loop {
+            if self.body_need == 0 {
+                // length prefix
+                match self.r.read(&mut self.hdr[self.hdr_got..]) {
+                    Ok(0) => {
+                        return if self.hdr_got == 0 {
+                            Ok(ReadEvent::Eof)
+                        } else {
+                            Err(io::Error::new(
+                                io::ErrorKind::UnexpectedEof,
+                                "eof inside a frame length prefix",
+                            ))
+                        };
+                    }
+                    Ok(n) => {
+                        self.hdr_got += n;
+                        if self.hdr_got == 4 {
+                            let len = u32::from_le_bytes(self.hdr) as usize;
+                            if len == 0 || len > MAX_FRAME {
+                                return Err(io::Error::new(
+                                    io::ErrorKind::InvalidData,
+                                    format!("bad frame length {len}"),
+                                ));
+                            }
+                            self.body = vec![0u8; len];
+                            self.body_got = 0;
+                            self.body_need = len;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock
+                            || e.kind() == io::ErrorKind::TimedOut =>
+                    {
+                        return Ok(ReadEvent::Idle)
+                    }
+                    Err(e) => return Err(e),
+                }
+            } else {
+                // kind byte + payload
+                match self.r.read(&mut self.body[self.body_got..]) {
+                    Ok(0) => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            "eof inside a frame body",
+                        ))
+                    }
+                    Ok(n) => {
+                        self.body_got += n;
+                        if self.body_got == self.body_need {
+                            let body = std::mem::take(&mut self.body);
+                            self.hdr_got = 0;
+                            self.body_got = 0;
+                            self.body_need = 0;
+                            let frame = Frame {
+                                kind: body[0],
+                                payload: body[1..].to_vec(),
+                            };
+                            return Ok(ReadEvent::Frame(frame));
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock
+                            || e.kind() == io::ErrorKind::TimedOut =>
+                    {
+                        return Ok(ReadEvent::Idle)
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+    }
+
+    /// Blocking convenience: polls until a frame or EOF (a stream without
+    /// a read timeout never yields `Idle`, but looping is harmless).
+    pub fn next_frame(&mut self) -> io::Result<Option<Frame>> {
+        loop {
+            match self.poll()? {
+                ReadEvent::Frame(f) => return Ok(Some(f)),
+                ReadEvent::Eof => return Ok(None),
+                ReadEvent::Idle => continue,
+            }
+        }
+    }
+}
+
+/// Builds a data-plane payload: `[u32 job][u32 to][rest]`.
+pub fn data_payload(job: u64, to: usize, rest: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + rest.len());
+    p.extend_from_slice(&(job as u32).to_le_bytes());
+    p.extend_from_slice(&(to as u32).to_le_bytes());
+    p.extend_from_slice(rest);
+    p
+}
+
+/// Splits a data-plane payload into `(job, to_instance, rest)`.
+pub fn parse_data(payload: &[u8]) -> Result<(u64, usize, &[u8])> {
+    if payload.len() < 8 {
+        return Err(Error::Transport(format!(
+            "data frame of {} bytes is shorter than its routing header",
+            payload.len()
+        )));
+    }
+    let job = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as u64;
+    let to = u32::from_le_bytes([payload[4], payload[5], payload[6], payload[7]]) as usize;
+    Ok((job, to, &payload[8..]))
+}
+
+/// Encodes a control payload (a `Value` tree).
+pub fn ctl_payload(v: &Value) -> Vec<u8> {
+    v.encode()
+}
+
+/// Decodes a control payload.
+pub fn parse_ctl(payload: &[u8]) -> Result<Value> {
+    Value::decode_exact(payload)
+        .map_err(|e| Error::Transport(format!("malformed control frame: {e}")))
+}
+
+/// Builds a control-plane record: a list of `(key, value)` pairs. Keys
+/// are looked up with [`kv_get`]; unknown keys are ignored by receivers,
+/// which keeps the handshake forward-compatible.
+pub fn kv(pairs: Vec<(&str, Value)>) -> Value {
+    Value::List(
+        pairs
+            .into_iter()
+            .map(|(k, v)| Value::pair(Value::Str(k.to_string()), v))
+            .collect(),
+    )
+}
+
+/// Looks a key up in a [`kv`] record.
+pub fn kv_get<'a>(v: &'a Value, key: &str) -> Option<&'a Value> {
+    let items = v.as_list()?;
+    for item in items {
+        if let Some((k, val)) = item.as_pair() {
+            if k.as_str() == Some(key) {
+                return Some(val);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind::DATA, b"hello").unwrap();
+        write_frame(&mut buf, kind::EOS, b"").unwrap();
+        let mut r = FrameReader::new(&buf[..]);
+        let f1 = r.next_frame().unwrap().unwrap();
+        assert_eq!((f1.kind, f1.payload.as_slice()), (kind::DATA, &b"hello"[..]));
+        let f2 = r.next_frame().unwrap().unwrap();
+        assert_eq!((f2.kind, f2.payload.as_slice()), (kind::EOS, &b""[..]));
+        assert!(r.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn data_payload_roundtrip() {
+        let p = data_payload(7, 42, b"bytes");
+        let (job, to, rest) = parse_data(&p).unwrap();
+        assert_eq!((job, to, rest), (7, 42, &b"bytes"[..]));
+        assert!(parse_data(&p[..5]).is_err(), "truncated header rejected");
+    }
+
+    #[test]
+    fn zero_and_oversized_lengths_rejected() {
+        let mut r = FrameReader::new(&[0u8, 0, 0, 0][..]);
+        assert!(r.next_frame().is_err(), "zero-length frame is malformed");
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        let mut r = FrameReader::new(&huge[..]);
+        assert!(r.next_frame().is_err(), "oversized frame rejected early");
+    }
+
+    #[test]
+    fn truncated_stream_is_clean_error_not_panic() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind::DATA, b"payload").unwrap();
+        buf.truncate(buf.len() - 3);
+        let mut r = FrameReader::new(&buf[..]);
+        let err = r.next_frame().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+}

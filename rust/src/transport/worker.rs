@@ -1,0 +1,756 @@
+//! The worker process: the execution half of distributed mode.
+//!
+//! `flowunits worker --connect <addr>` runs [`run_worker`]: it connects
+//! to the coordinator daemon, REGISTERs (worker id, zone, advertised
+//! hosts, pid), heartbeats at the interval the daemon announces, and
+//! waits for DEPLOY frames. A DEPLOY names a pipeline and ships the
+//! host→worker assignment; the worker rebuilds the identical logical
+//! graph through [`crate::pipelines::build`], re-runs the deterministic
+//! planner, and executes exactly the instances whose hosts are assigned
+//! to it. Worker-local edges stay on in-process (unbounded) channels;
+//! edges to instances owned by other workers go through the
+//! [`SocketTransport`] — encoded frames relayed by the daemon.
+//!
+//! Survivability: the worker persists a `worker-<id>.state` file (pid,
+//! coordinator address, zone) so a restarted coordinator can re-adopt it
+//! — the connect loop reconnects with backoff and re-REGISTERs. SIGTERM
+//! and SIGINT flip a flag the serve loop polls between frames (the socket
+//! read carries a timeout); in-flight jobs drain before the worker sends
+//! GOODBYE and removes its state file.
+
+use super::socket::{Addr, Conn, PeerSender, SocketTransport};
+use super::wire::{self, kv, kv_get, ReadEvent};
+use super::{Endpoint, InProcessLane, Transport};
+use crate::api::raw::{JobConfig, StreamContext};
+use crate::channels::{FanOut, Inbox, Msg, OutPort, Target};
+use crate::config::eval_cluster;
+use crate::coordinator::build_stage_ops;
+use crate::error::{Error, Result};
+use crate::graph::OpKind;
+use crate::metrics::{Metrics, MetricsRegistry};
+use crate::placement::{plan as make_plan, PlannerKind};
+use crate::runtime::{exec::Collector, run_instance, InputKind, InstanceRuntime, SourceRuntime};
+use crate::value::Value;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Process-wide flag flipped by the SIGINT/SIGTERM handler.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_signal(_sig: i32) {
+    SIGNALLED.store(true, Ordering::SeqCst);
+}
+
+/// Installs SIGINT (2) and SIGTERM (15) handlers that request a graceful
+/// worker shutdown: drain in-flight batches, deregister, exit. No-op on
+/// non-Unix targets.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    unsafe {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        signal(2, on_signal as usize);
+        signal(15, on_signal as usize);
+    }
+}
+
+/// True once a termination signal was received.
+pub fn signalled() -> bool {
+    SIGNALLED.load(Ordering::SeqCst)
+}
+
+/// Options for [`run_worker`].
+pub struct WorkerOpts {
+    /// Coordinator address to connect to.
+    pub addr: Addr,
+    /// Worker id (must be unique per coordinator).
+    pub id: String,
+    /// Zone label advertised at registration.
+    pub zone: String,
+    /// Simulated-cluster hosts this worker claims (empty ⇒ the daemon
+    /// assigns hosts round-robin).
+    pub hosts: Vec<String>,
+    /// Directory for the pid/state file.
+    pub state_dir: PathBuf,
+    /// Reconnect (with backoff) when the coordinator goes away.
+    pub reconnect: bool,
+    /// Give up after this many consecutive failed connection attempts.
+    pub max_reconnects: u32,
+    /// Install SIGINT/SIGTERM handlers (CLI mode; tests use `stop`).
+    pub install_signals: bool,
+    /// External stop flag (tests); signals always work in addition.
+    pub stop: Option<Arc<AtomicBool>>,
+}
+
+impl WorkerOpts {
+    /// Defaults: zone `cloud`, no advertised hosts, state under the
+    /// system temp dir, reconnect up to 30 times, no signal handlers.
+    pub fn new(addr: Addr, id: &str) -> WorkerOpts {
+        WorkerOpts {
+            addr,
+            id: id.to_string(),
+            zone: "cloud".into(),
+            hosts: Vec::new(),
+            state_dir: std::env::temp_dir().join("flowunits"),
+            reconnect: true,
+            max_reconnects: 30,
+            install_signals: false,
+            stop: None,
+        }
+    }
+}
+
+/// How one coordinator session ended.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Exit {
+    /// Connection lost — reconnect and re-REGISTER.
+    Reconnect,
+    /// Coordinator sent SHUTDOWN.
+    Shutdown,
+    /// Local stop (signal or external flag) after draining.
+    Stopped,
+}
+
+/// One deployed job executing on this worker.
+struct ActiveJob {
+    id: u64,
+    /// Destination instance → inbox sender (socket demultiplexer).
+    demux: HashMap<usize, Sender<Msg>>,
+    source_stop: Arc<AtomicBool>,
+    aborted: Arc<AtomicBool>,
+    /// Set by the watcher once every instance thread joined.
+    done: Arc<AtomicBool>,
+    watcher: Option<JoinHandle<()>>,
+}
+
+impl ActiveJob {
+    fn abort(&mut self) {
+        self.aborted.store(true, Ordering::SeqCst);
+        self.source_stop.store(true, Ordering::SeqCst);
+        // dropping the demux senders disconnects remote-fed inboxes so
+        // their EOS fallback fires instead of waiting forever
+        self.demux.clear();
+    }
+
+    fn join_watcher(&mut self) {
+        if let Some(h) = self.watcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Runs a worker until it is shut down (by the coordinator, a signal, or
+/// the external stop flag) or its connection attempts are exhausted.
+pub fn run_worker(opts: WorkerOpts) -> Result<()> {
+    if opts.install_signals {
+        install_signal_handlers();
+    }
+    let stop = opts
+        .stop
+        .clone()
+        .unwrap_or_else(|| Arc::new(AtomicBool::new(false)));
+    let metrics = MetricsRegistry::new();
+    let state_path = state_file_path(&opts.state_dir, &opts.id);
+    let had_state = check_and_write_state(&state_path, &opts)?;
+
+    let mut active: Option<ActiveJob> = None;
+    let mut registered_before = had_state;
+    let mut attempts: u32 = 0;
+    let result = loop {
+        if stopped(&stop) {
+            break Ok(());
+        }
+        let conn = match Conn::connect(&opts.addr, Some(metrics.clone())) {
+            Ok(c) => c,
+            Err(e) => {
+                attempts += 1;
+                if !opts.reconnect || attempts > opts.max_reconnects {
+                    break Err(e);
+                }
+                std::thread::sleep(backoff(attempts));
+                continue;
+            }
+        };
+        attempts = 0;
+        match session(
+            &opts,
+            conn,
+            &metrics,
+            &stop,
+            &mut active,
+            registered_before,
+        ) {
+            Ok(Exit::Reconnect) => {
+                registered_before = true;
+                if !opts.reconnect {
+                    break Err(Error::Transport("coordinator connection lost".into()));
+                }
+                MetricsRegistry::add(&metrics.transport_reconnects, 1);
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Ok(_) => break Ok(()),
+            Err(e) => break Err(e),
+        }
+    };
+    if let Some(mut j) = active.take() {
+        j.abort();
+        j.join_watcher();
+    }
+    let _ = std::fs::remove_file(&state_path);
+    result
+}
+
+fn stopped(stop: &Arc<AtomicBool>) -> bool {
+    stop.load(Ordering::SeqCst) || signalled()
+}
+
+fn backoff(attempt: u32) -> Duration {
+    Duration::from_millis(50 * u64::from(attempt.min(20)))
+}
+
+fn state_file_path(dir: &Path, id: &str) -> PathBuf {
+    dir.join(format!("worker-{id}.state"))
+}
+
+#[cfg(target_os = "linux")]
+fn pid_alive(pid: u32) -> bool {
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pid_alive(_pid: u32) -> bool {
+    false
+}
+
+/// Validates and (re)writes the worker's state file. Returns whether a
+/// prior incarnation's state existed (its pid dead) — the re-adoption
+/// hint sent with REGISTER. A state file naming a *live* other pid is an
+/// error: two workers must not share an id.
+fn check_and_write_state(path: &Path, opts: &WorkerOpts) -> Result<bool> {
+    let mut had_state = false;
+    if let Ok(s) = std::fs::read_to_string(path) {
+        let mut pid = None;
+        for line in s.lines() {
+            if let Some(v) = line.strip_prefix("pid=") {
+                pid = v.trim().parse::<u32>().ok();
+            }
+        }
+        if let Some(p) = pid {
+            if p != std::process::id() && pid_alive(p) {
+                return Err(Error::Transport(format!(
+                    "state file {} names live pid {p}: worker id '{}' is already running",
+                    path.display(),
+                    opts.id
+                )));
+            }
+            had_state = true;
+        }
+    }
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(
+        path,
+        format!(
+            "pid={}\naddr={}\nworker_id={}\nzone={}\n",
+            std::process::id(),
+            opts.addr,
+            opts.id,
+            opts.zone
+        ),
+    )
+    .map_err(|e| Error::Transport(format!("write state file {}: {e}", path.display())))?;
+    Ok(had_state)
+}
+
+/// One connection's lifetime: REGISTER, await WELCOME, heartbeat, serve.
+fn session(
+    opts: &WorkerOpts,
+    mut conn: Conn,
+    metrics: &Metrics,
+    stop: &Arc<AtomicBool>,
+    active: &mut Option<ActiveJob>,
+    readopt: bool,
+) -> Result<Exit> {
+    conn.sender.send_ctl(
+        wire::kind::REGISTER,
+        &kv(vec![
+            ("worker", Value::Str(opts.id.clone())),
+            ("zone", Value::Str(opts.zone.clone())),
+            (
+                "hosts",
+                Value::List(opts.hosts.iter().map(|h| Value::Str(h.clone())).collect()),
+            ),
+            ("pid", Value::I64(std::process::id() as i64)),
+            ("readopt", Value::Bool(readopt)),
+        ]),
+    )?;
+    conn.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let heartbeat = loop {
+        if stopped(stop) {
+            return Ok(Exit::Stopped);
+        }
+        match conn.reader.poll() {
+            Ok(ReadEvent::Frame(f)) => {
+                note_recv(metrics, f.payload.len());
+                match f.kind {
+                    wire::kind::WELCOME => {
+                        let ms = wire::parse_ctl(&f.payload)
+                            .ok()
+                            .and_then(|v| kv_get(&v, "heartbeat_ms").and_then(Value::as_i64))
+                            .unwrap_or(500);
+                        break Duration::from_millis(ms.max(10) as u64);
+                    }
+                    wire::kind::REJECT => {
+                        let reason = wire::parse_ctl(&f.payload)
+                            .ok()
+                            .and_then(|v| {
+                                kv_get(&v, "reason").and_then(Value::as_str).map(String::from)
+                            })
+                            .unwrap_or_else(|| "no reason given".into());
+                        return Err(Error::Transport(format!(
+                            "registration rejected: {reason}"
+                        )));
+                    }
+                    _ => {}
+                }
+            }
+            Ok(ReadEvent::Idle) => {}
+            Ok(ReadEvent::Eof) | Err(_) => return Ok(Exit::Reconnect),
+        }
+    };
+
+    // heartbeat thread: ticks until the session ends or a send fails
+    let session_alive = Arc::new(AtomicBool::new(true));
+    let hb_handle = {
+        let alive = session_alive.clone();
+        let sender = conn.sender.clone();
+        let id = opts.id.clone();
+        std::thread::Builder::new()
+            .name(format!("hb-{id}"))
+            .spawn(move || heartbeat_loop(sender, id, heartbeat, alive))
+            .map_err(|e| Error::Transport(format!("spawn heartbeat thread: {e}")))?
+    };
+    let out = serve(opts, &mut conn, metrics, stop, active);
+    session_alive.store(false, Ordering::SeqCst);
+    conn.shutdown();
+    let _ = hb_handle.join();
+    out
+}
+
+fn heartbeat_loop(sender: PeerSender, id: String, interval: Duration, alive: Arc<AtomicBool>) {
+    let step = Duration::from_millis(50);
+    let mut seq: i64 = 0;
+    loop {
+        let mut waited = Duration::ZERO;
+        while waited < interval {
+            if !alive.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(step.min(interval - waited));
+            waited += step;
+        }
+        seq += 1;
+        let beat = kv(vec![
+            ("worker", Value::Str(id.clone())),
+            ("seq", Value::I64(seq)),
+        ]);
+        if sender.send_ctl(wire::kind::HEARTBEAT, &beat).is_err() {
+            return;
+        }
+    }
+}
+
+fn note_recv(metrics: &Metrics, payload_len: usize) {
+    MetricsRegistry::add(&metrics.transport_frames_recv, 1);
+    MetricsRegistry::add(
+        &metrics.transport_bytes_recv,
+        wire::frame_len(payload_len) as u64,
+    );
+}
+
+/// Frame loop after WELCOME: deploys jobs, demultiplexes relayed data
+/// frames into instance inboxes, and drives graceful shutdown.
+fn serve(
+    opts: &WorkerOpts,
+    conn: &mut Conn,
+    metrics: &Metrics,
+    stop: &Arc<AtomicBool>,
+    active: &mut Option<ActiveJob>,
+) -> Result<Exit> {
+    let mut exit_after_drain: Option<Exit> = None;
+    let mut drain_deadline = Instant::now();
+    loop {
+        // reap a finished job (watcher already sent REPORT or JOB_ERROR)
+        if active.as_ref().is_some_and(|j| j.done.load(Ordering::SeqCst)) {
+            if let Some(mut j) = active.take() {
+                j.join_watcher();
+            }
+        }
+        if exit_after_drain.is_none() && stopped(stop) {
+            if let Some(j) = active.as_ref() {
+                j.source_stop.store(true, Ordering::SeqCst);
+            }
+            exit_after_drain = Some(Exit::Stopped);
+            drain_deadline = Instant::now() + Duration::from_secs(10);
+        }
+        if let Some(exit) = exit_after_drain {
+            if active.is_none() || Instant::now() >= drain_deadline {
+                let _ = conn.sender.send_ctl(
+                    wire::kind::GOODBYE,
+                    &kv(vec![("worker", Value::Str(opts.id.clone()))]),
+                );
+                return Ok(exit);
+            }
+        }
+        let f = match conn.reader.poll() {
+            Ok(ReadEvent::Frame(f)) => f,
+            Ok(ReadEvent::Idle) => continue,
+            Ok(ReadEvent::Eof) | Err(_) => return Ok(Exit::Reconnect),
+        };
+        note_recv(metrics, f.payload.len());
+        match f.kind {
+            wire::kind::DATA | wire::kind::EOS | wire::kind::EPOCH => {
+                demux(active, f.kind, &f.payload, metrics);
+            }
+            wire::kind::DEPLOY => {
+                let Ok(v) = wire::parse_ctl(&f.payload) else { continue };
+                let job = kv_get(&v, "job").and_then(Value::as_i64).unwrap_or(0) as u64;
+                match launch_job(opts, &conn.sender, job, &v) {
+                    Ok(j) => *active = Some(j),
+                    Err(e) => {
+                        let _ = conn.sender.send_ctl(
+                            wire::kind::JOB_ERROR,
+                            &kv(vec![
+                                ("job", Value::I64(job as i64)),
+                                ("reason", Value::Str(format!("deploy failed: {e}"))),
+                            ]),
+                        );
+                    }
+                }
+            }
+            wire::kind::JOB_ERROR => {
+                let job = wire::parse_ctl(&f.payload)
+                    .ok()
+                    .and_then(|v| kv_get(&v, "job").and_then(Value::as_i64));
+                if let (Some(job), Some(j)) = (job, active.as_mut()) {
+                    if j.id == job as u64 {
+                        j.abort();
+                    }
+                }
+            }
+            wire::kind::SHUTDOWN => {
+                if let Some(j) = active.as_ref() {
+                    j.source_stop.store(true, Ordering::SeqCst);
+                }
+                exit_after_drain = Some(Exit::Shutdown);
+                drain_deadline = Instant::now() + Duration::from_secs(10);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Routes one relayed data-plane frame into the owning instance's inbox.
+/// Frames for a job other than the active one are dropped (late frames
+/// from a torn-down job must not corrupt a successor).
+fn demux(active: &mut Option<ActiveJob>, kind: u8, payload: &[u8], metrics: &Metrics) {
+    let Ok((job, to, rest)) = wire::parse_data(payload) else {
+        MetricsRegistry::add(&metrics.transport_errors, 1);
+        return;
+    };
+    let Some(j) = active.as_ref().filter(|j| j.id == job) else {
+        return;
+    };
+    let Some(tx) = j.demux.get(&to) else {
+        MetricsRegistry::add(&metrics.transport_errors, 1);
+        return;
+    };
+    let msg = match kind {
+        wire::kind::DATA => Msg::Frame(rest.to_vec().into()),
+        wire::kind::EOS => Msg::Eos,
+        wire::kind::EPOCH => {
+            let Ok(bytes) = <[u8; 8]>::try_from(rest) else {
+                MetricsRegistry::add(&metrics.transport_errors, 1);
+                return;
+            };
+            Msg::Epoch(u64::from_le_bytes(bytes))
+        }
+        _ => return,
+    };
+    if tx.send(msg).is_err() {
+        MetricsRegistry::add(&metrics.transport_errors, 1);
+    }
+}
+
+/// Materialises the worker's share of a DEPLOY: rebuilds the pipeline's
+/// graph, re-runs the deterministic planner, and spawns the instances
+/// whose hosts the shipped assignment maps to this worker.
+fn launch_job(
+    opts: &WorkerOpts,
+    sender: &PeerSender,
+    job: u64,
+    v: &Value,
+) -> Result<ActiveJob> {
+    let pipeline = kv_get(v, "pipeline")
+        .and_then(Value::as_str)
+        .ok_or_else(|| Error::Transport("DEPLOY without pipeline".into()))?;
+    let events = kv_get(v, "events")
+        .and_then(Value::as_i64)
+        .ok_or_else(|| Error::Transport("DEPLOY without events".into()))? as u64;
+    let assign = kv_get(v, "assign")
+        .and_then(Value::as_list)
+        .ok_or_else(|| Error::Transport("DEPLOY without assignment".into()))?;
+    let mut owner_of_host: HashMap<String, String> = HashMap::new();
+    for entry in assign {
+        if let Some((h, w)) = entry.as_pair() {
+            if let (Some(h), Some(w)) = (h.as_str(), w.as_str()) {
+                owner_of_host.insert(h.to_string(), w.to_string());
+            }
+        }
+    }
+
+    // identical graph + plan on every process (see pipelines module docs)
+    let cluster = eval_cluster(None, Duration::ZERO);
+    let config = JobConfig::default();
+    let mut ctx = StreamContext::new(cluster.clone(), config.clone());
+    crate::pipelines::build(&mut ctx, pipeline, events)?;
+    let graph = ctx.into_graph()?;
+    let plan = make_plan(&graph, &cluster, PlannerKind::FlowUnits, &[], false)?;
+    let topo = cluster.topology;
+    let owned_by_me =
+        |host: &str| owner_of_host.get(host).map(String::as_str) == Some(opts.id.as_str());
+    let mine: Vec<crate::placement::InstancePlan> = plan
+        .instances
+        .iter()
+        .filter(|i| owned_by_me(&i.host))
+        .cloned()
+        .collect();
+
+    let job_metrics = MetricsRegistry::new();
+    let collector = Arc::new(Collector::default());
+    let source_stop = Arc::new(AtomicBool::new(false));
+
+    // unbounded inboxes for my non-source instances: the serve loop's
+    // demultiplexer must never block on one slow instance
+    let mut demux_tx: HashMap<usize, Sender<Msg>> = HashMap::new();
+    let mut inst_rx = HashMap::new();
+    for inst in &mine {
+        if plan.stages[inst.stage].is_source() {
+            continue;
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        demux_tx.insert(inst.id, tx);
+        inst_rx.insert(inst.id, rx);
+    }
+
+    // producers are counted over ALL instances, local and remote: a
+    // remote producer's EOS arrives per lane through the relay, exactly
+    // like a local one
+    let mut producer_count: HashMap<usize, usize> = HashMap::new();
+    for edge in &plan.edges {
+        for from in plan.instances_of(edge.from_stage) {
+            for t in plan.allowed_targets(&topo, from, edge) {
+                *producer_count.entry(t).or_default() += 1;
+            }
+        }
+    }
+
+    let mut socket = SocketTransport::new(sender.clone(), job);
+    let mut threads = Vec::new();
+    for inst in mine {
+        let stage = plan.stages[inst.stage].clone();
+        let input = if stage.is_source() {
+            let OpKind::Source(kind) = &graph.ops[stage.ops[0]].kind else {
+                return Err(Error::Runtime("source stage op is not a source".into()));
+            };
+            InputKind::Source(SourceRuntime {
+                kind: kind.clone(),
+                share: inst.source_share.unwrap_or((0, 1)),
+                batch_size: config.batch_size,
+                stop: source_stop.clone(),
+            })
+        } else {
+            let rx = inst_rx
+                .remove(&inst.id)
+                .ok_or_else(|| Error::Runtime(format!("instance {} missing inbox", inst.id)))?;
+            InputKind::Inbox(
+                Inbox::new(rx, *producer_count.get(&inst.id).unwrap_or(&0))
+                    .with_metrics(job_metrics.clone()),
+            )
+        };
+        let mut ports = Vec::new();
+        for edge in plan.edges.iter().filter(|e| e.from_stage == inst.stage) {
+            let from_ep = Endpoint::of(&inst);
+            let mut targets = Vec::new();
+            for t in plan.allowed_targets(&topo, inst.id, edge) {
+                let tgt = &plan.instances[t];
+                let crossing = tgt.zone != inst.zone;
+                if owned_by_me(&tgt.host) {
+                    let tx = demux_tx
+                        .get(&t)
+                        .ok_or_else(|| {
+                            Error::Runtime(format!("local target {t} missing inbox"))
+                        })?
+                        .clone();
+                    targets.push(Target::over(
+                        Box::new(InProcessLane::unbounded(tx)),
+                        crossing,
+                    ));
+                } else {
+                    let lane = socket.open(&from_ep, &Endpoint::of(tgt))?;
+                    targets.push(Target::over(lane, crossing));
+                }
+            }
+            ports.push(OutPort::new(
+                targets,
+                edge.routing,
+                config.batch_size,
+                Some(job_metrics.clone()),
+            ));
+        }
+        let ops = build_stage_ops(&graph, &stage, &collector, &job_metrics)?;
+        let rt = InstanceRuntime {
+            id: inst.id,
+            ops,
+            input,
+            outputs: FanOut::new(ports),
+            metrics: job_metrics.clone(),
+            handoff: None,
+            restore: Vec::new(),
+        };
+        let h = std::thread::Builder::new()
+            .name(format!("winst-{}-s{}-{}", inst.id, inst.stage, inst.host))
+            .spawn(move || run_instance(rt))
+            .map_err(|e| Error::Runtime(format!("spawn instance thread: {e}")))?;
+        threads.push(h);
+    }
+
+    // watcher: joins the instances, then reports this worker's slice
+    let aborted = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicBool::new(false));
+    let watcher = {
+        let sender = sender.clone();
+        let worker_id = opts.id.clone();
+        let collector = collector.clone();
+        let jm = job_metrics.clone();
+        let aborted = aborted.clone();
+        let done = done.clone();
+        std::thread::Builder::new()
+            .name(format!("job-{job}-watch"))
+            .spawn(move || {
+                let mut panicked = false;
+                for h in threads {
+                    if h.join().is_err() {
+                        panicked = true;
+                    }
+                }
+                done.store(true, Ordering::SeqCst);
+                if aborted.load(Ordering::SeqCst) {
+                    return;
+                }
+                if panicked {
+                    let _ = sender.send_ctl(
+                        wire::kind::JOB_ERROR,
+                        &kv(vec![
+                            ("job", Value::I64(job as i64)),
+                            (
+                                "reason",
+                                Value::Str(format!(
+                                    "instance thread panicked on worker '{worker_id}'"
+                                )),
+                            ),
+                        ]),
+                    );
+                    return;
+                }
+                let collected = std::mem::take(
+                    &mut *collector.values.lock().unwrap_or_else(|p| p.into_inner()),
+                );
+                let _ = sender.send_ctl(
+                    wire::kind::REPORT,
+                    &kv(vec![
+                        ("job", Value::I64(job as i64)),
+                        ("worker", Value::Str(worker_id)),
+                        (
+                            "events_in",
+                            Value::I64(jm.events_in.load(Ordering::Relaxed) as i64),
+                        ),
+                        (
+                            "events_out",
+                            Value::I64(jm.events_out.load(Ordering::Relaxed) as i64),
+                        ),
+                        ("collected", Value::List(collected)),
+                    ]),
+                );
+            })
+            .map_err(|e| Error::Runtime(format!("spawn watcher thread: {e}")))?
+    };
+
+    Ok(ActiveJob {
+        id: job,
+        demux: demux_tx,
+        source_stop,
+        aborted,
+        done,
+        watcher: Some(watcher),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_file_detects_live_duplicates_and_readopts_dead_ones() {
+        let dir = std::env::temp_dir().join(format!("fu-worker-state-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = WorkerOpts::new(Addr::parse("127.0.0.1:1"), "wstate");
+        let path = state_file_path(&dir, &opts.id);
+
+        // no prior state: written fresh, not a re-adoption
+        let _ = std::fs::remove_file(&path);
+        assert!(!check_and_write_state(&path, &opts).unwrap());
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains(&format!("pid={}", std::process::id())), "{s}");
+        assert!(s.contains("worker_id=wstate"), "{s}");
+
+        // prior state with a dead pid: re-adoption
+        std::fs::write(&path, "pid=4000000000\naddr=x\nworker_id=wstate\n").unwrap();
+        assert!(check_and_write_state(&path, &opts).unwrap());
+
+        // prior state naming a live *other* pid: refused
+        #[cfg(target_os = "linux")]
+        {
+            std::fs::write(&path, "pid=1\naddr=x\nworker_id=wstate\n").unwrap();
+            let err = check_and_write_state(&path, &opts).unwrap_err();
+            assert!(err.to_string().contains("already running"), "{err}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_gives_up_when_coordinator_never_appears() {
+        let dir = std::env::temp_dir().join(format!("fu-worker-noc-{}", std::process::id()));
+        let mut opts = WorkerOpts::new(
+            Addr::parse(&dir.join("absent.sock").to_string_lossy()),
+            "wnoc",
+        );
+        opts.state_dir = dir.clone();
+        opts.max_reconnects = 2;
+        let err = run_worker(opts).unwrap_err();
+        assert!(matches!(err, Error::Transport(_)));
+        assert!(
+            !state_file_path(&dir, "wnoc").exists(),
+            "state file removed on exit"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

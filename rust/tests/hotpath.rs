@@ -22,12 +22,7 @@ fn local_targets(n: usize, cap: usize) -> (Vec<Target>, Vec<Receiver<Msg>>) {
     let mut rxs = Vec::new();
     for _ in 0..n {
         let (tx, rx) = sync_channel(cap);
-        targets.push(Target {
-            tx,
-            link: None,
-            latency: Duration::ZERO,
-            crossing: false,
-        });
+        targets.push(Target::local(tx));
         rxs.push(rx);
     }
     (targets, rxs)

@@ -110,12 +110,7 @@ fn prop_split_sibling_never_observes_downstream_mutation() {
         let mk_port = |cap| {
             let (tx, rx) = sync_channel(cap);
             let port = OutPort::new(
-                vec![Target {
-                    tx,
-                    link: None,
-                    latency: Duration::ZERO,
-                    crossing: false,
-                }],
+                vec![Target::local(tx)],
                 Routing::RoundRobin,
                 16,
                 None,

@@ -1,0 +1,351 @@
+//! Tier-2 integration tests for the distribution subsystem: the frame
+//! codec under adversarial I/O, registration semantics, coordinator
+//! restart / worker re-adoption, distributed-vs-in-process output parity,
+//! and dead-worker detection — all over real Unix domain sockets.
+
+use flowunits::transport::wire::{self, kind, FrameReader, ReadEvent};
+use std::io::{self, Read, Write};
+
+/// Deterministic xorshift64* — property tests without an RNG dependency.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+}
+
+/// Accepts at most `cap` bytes per `write` call — exercises the
+/// `write_all` retry path the way a full socket buffer would.
+struct ShortWriter {
+    buf: Vec<u8>,
+    cap: usize,
+}
+
+impl Write for ShortWriter {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        let n = data.len().min(self.cap);
+        self.buf.extend_from_slice(&data[..n]);
+        Ok(n)
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Returns at most a few bytes per `read` call, with the chunk size
+/// cycling — frames are torn at every possible boundary.
+struct ChunkedReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    step: usize,
+}
+
+impl Read for ChunkedReader<'_> {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        self.step = self.step % 7 + 1;
+        let n = self.step.min(out.len()).min(self.data.len() - self.pos);
+        out[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn frame_roundtrip_survives_short_writes_and_partial_reads() {
+    let mut rng = Rng(0x5eed_cafe);
+    let kinds = [kind::DATA, kind::EOS, kind::EPOCH, kind::REPORT, kind::HEARTBEAT];
+    let mut frames = Vec::new();
+    let mut w = ShortWriter {
+        buf: Vec::new(),
+        cap: 3,
+    };
+    for _ in 0..200 {
+        let k = kinds[(rng.next() % kinds.len() as u64) as usize];
+        let len = (rng.next() % 4096) as usize;
+        let payload: Vec<u8> = (0..len).map(|_| rng.next() as u8).collect();
+        wire::write_frame(&mut w, k, &payload).unwrap();
+        frames.push((k, payload));
+    }
+    let mut r = FrameReader::new(ChunkedReader {
+        data: &w.buf,
+        pos: 0,
+        step: 0,
+    });
+    for (k, payload) in &frames {
+        let f = r.next_frame().unwrap().expect("frame present");
+        assert_eq!(f.kind, *k);
+        assert_eq!(&f.payload, payload);
+    }
+    assert!(r.next_frame().unwrap().is_none(), "clean EOF after last frame");
+}
+
+/// Yields `WouldBlock` before every productive single-byte read — the
+/// worst case of a socket with a read timeout.
+struct StutterReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    ready: bool,
+}
+
+impl Read for StutterReader<'_> {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if !self.ready {
+            self.ready = true;
+            return Err(io::Error::new(io::ErrorKind::WouldBlock, "not ready"));
+        }
+        self.ready = false;
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        out[0] = self.data[self.pos];
+        self.pos += 1;
+        Ok(1)
+    }
+}
+
+#[test]
+fn poll_preserves_partial_frames_across_timeouts() {
+    let mut buf = Vec::new();
+    wire::write_frame(&mut buf, kind::DATA, b"resumable").unwrap();
+    let mut r = FrameReader::new(StutterReader {
+        data: &buf,
+        pos: 0,
+        ready: false,
+    });
+    let mut idles = 0;
+    let frame = loop {
+        match r.poll().unwrap() {
+            ReadEvent::Frame(f) => break f,
+            ReadEvent::Idle => idles += 1,
+            ReadEvent::Eof => panic!("eof before the frame completed"),
+        }
+    };
+    assert_eq!(frame.payload, b"resumable");
+    assert_eq!(idles as usize, buf.len(), "one Idle per byte delivered");
+    assert!(matches!(r.poll().unwrap(), ReadEvent::Eof));
+}
+
+#[cfg(unix)]
+mod multiprocess {
+    use flowunits::api::raw::{JobConfig, StreamContext};
+    use flowunits::config::eval_cluster;
+    use flowunits::metrics::MetricsRegistry;
+    use flowunits::pipelines;
+    use flowunits::transport::daemon::CoordinatorDaemon;
+    use flowunits::transport::socket::Addr;
+    use flowunits::transport::worker::{run_worker, WorkerOpts};
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::thread::JoinHandle;
+    use std::time::{Duration, Instant};
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fu-it-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    struct TestWorker {
+        stop: Arc<AtomicBool>,
+        thread: Option<JoinHandle<flowunits::error::Result<()>>>,
+    }
+
+    impl TestWorker {
+        fn spawn(addr: &Addr, id: &str, dir: &std::path::Path) -> TestWorker {
+            let stop = Arc::new(AtomicBool::new(false));
+            let mut opts = WorkerOpts::new(addr.clone(), id);
+            opts.state_dir = dir.join(id);
+            opts.max_reconnects = 100;
+            opts.stop = Some(stop.clone());
+            let thread = std::thread::spawn(move || run_worker(opts));
+            TestWorker {
+                stop,
+                thread: Some(thread),
+            }
+        }
+
+        fn join(mut self) -> flowunits::error::Result<()> {
+            self.stop.store(true, Ordering::SeqCst);
+            self.thread.take().unwrap().join().expect("worker thread")
+        }
+    }
+
+    fn wait_alive(daemon: &CoordinatorDaemon, n: usize) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while daemon.workers().iter().filter(|(_, _, alive)| *alive).count() < n {
+            assert!(Instant::now() < deadline, "workers never registered");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    fn in_process_collected(pipeline: &str, events: u64) -> Vec<String> {
+        let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), JobConfig::default());
+        pipelines::build(&mut ctx, pipeline, events).unwrap();
+        let report = ctx.execute().unwrap();
+        pipelines::render_collected(&report.collected)
+    }
+
+    #[test]
+    fn duplicate_worker_id_is_rejected() {
+        let dir = scratch("dup");
+        let addr = Addr::parse(&dir.join("c.sock").to_string_lossy());
+        let mut daemon = CoordinatorDaemon::start(
+            addr.clone(),
+            Duration::from_millis(200),
+            MetricsRegistry::new(),
+        )
+        .unwrap();
+        let first = TestWorker::spawn(&addr, "dup", &dir);
+        wait_alive(&daemon, 1);
+
+        let mut opts = WorkerOpts::new(addr.clone(), "dup");
+        opts.state_dir = dir.join("second");
+        opts.reconnect = false;
+        let err = run_worker(opts).unwrap_err();
+        assert!(
+            err.to_string().contains("registration rejected"),
+            "second registration of a live id must be rejected, got: {err}"
+        );
+
+        first.join().unwrap();
+        daemon.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_survives_coordinator_restart_and_is_readopted() {
+        let dir = scratch("readopt");
+        let addr = Addr::parse(&dir.join("c.sock").to_string_lossy());
+        let mut first = CoordinatorDaemon::start(
+            addr.clone(),
+            Duration::from_millis(200),
+            MetricsRegistry::new(),
+        )
+        .unwrap();
+        let worker = TestWorker::spawn(&addr, "phoenix", &dir);
+        wait_alive(&first, 1);
+        first.shutdown();
+
+        // same address, brand-new daemon: the worker's reconnect loop must
+        // re-register, and the restarted coordinator must be able to run a
+        // job through it
+        let mut second = CoordinatorDaemon::start(
+            addr.clone(),
+            Duration::from_millis(200),
+            MetricsRegistry::new(),
+        )
+        .unwrap();
+        wait_alive(&second, 1);
+        let report = second.run_job("wordcount", 600, 1, Duration::from_secs(30)).unwrap();
+        assert_eq!(report.workers, vec!["phoenix".to_string()]);
+        assert_eq!(
+            pipelines::render_collected(&report.collected),
+            in_process_collected("wordcount", 600),
+            "post-restart distributed run must match the in-process run"
+        );
+
+        second.shutdown_workers();
+        worker.join().unwrap();
+        second.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn distributed_wordcount_matches_in_process_output() {
+        let dir = scratch("parity");
+        let addr = Addr::parse(&dir.join("c.sock").to_string_lossy());
+        let mut daemon = CoordinatorDaemon::start(
+            addr.clone(),
+            Duration::from_millis(500),
+            MetricsRegistry::new(),
+        )
+        .unwrap();
+        let alpha = TestWorker::spawn(&addr, "alpha", &dir);
+        let beta = TestWorker::spawn(&addr, "beta", &dir);
+
+        let report = daemon.run_job("wordcount", 600, 2, Duration::from_secs(30)).unwrap();
+        assert_eq!(
+            report.workers,
+            vec!["alpha".to_string(), "beta".to_string()],
+            "both workers participate"
+        );
+        assert_eq!(report.events_in, 600);
+        assert_eq!(
+            pipelines::render_collected(&report.collected),
+            in_process_collected("wordcount", 600),
+            "distributed output must be identical to the in-process run"
+        );
+
+        daemon.shutdown_workers();
+        alpha.join().unwrap();
+        beta.join().unwrap();
+        daemon.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn killing_a_worker_mid_run_fails_the_job_promptly() {
+        let dir = scratch("kill");
+        let addr = Addr::parse(&dir.join("c.sock").to_string_lossy());
+        let addr_str = addr.to_string();
+        let daemon = Arc::new(
+            CoordinatorDaemon::start(
+                addr.clone(),
+                Duration::from_millis(200),
+                MetricsRegistry::new(),
+            )
+            .unwrap(),
+        );
+        let survivor = TestWorker::spawn(&addr, "survivor", &dir);
+        // the victim is a real OS process so we can SIGKILL it mid-run
+        let mut victim = std::process::Command::new(env!("CARGO_BIN_EXE_flowunits"))
+            .arg("worker")
+            .arg("--connect")
+            .arg(&addr_str)
+            .arg("--id")
+            .arg("victim")
+            .arg("--state-dir")
+            .arg(dir.join("victim"))
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn victim worker process");
+        wait_alive(&daemon, 2);
+
+        // paced source: the job takes seconds, the kill lands mid-run
+        let runner = {
+            let daemon = daemon.clone();
+            std::thread::spawn(move || {
+                daemon.run_job("wordcount_paced", 2_000_000, 2, Duration::from_secs(60))
+            })
+        };
+        std::thread::sleep(Duration::from_millis(700));
+        victim.kill().expect("kill victim");
+        let _ = victim.wait();
+
+        let t0 = Instant::now();
+        let err = runner.join().expect("runner thread").unwrap_err();
+        assert!(
+            err.to_string().contains("victim"),
+            "failure must name the dead worker, got: {err}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "death must surface promptly, not at the job timeout"
+        );
+
+        daemon.shutdown_workers();
+        survivor.join().unwrap();
+        drop(daemon); // Drop shuts the daemon down
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

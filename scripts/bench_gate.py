@@ -21,15 +21,40 @@ def scenarios(doc):
     return {s["name"]: s for s in doc.get("scenarios", [])}
 
 
+def load_scenarios(path, role):
+    """Loads one bench JSON, exiting with a clear message (not a
+    traceback) when the file is missing or malformed — the usual causes
+    are a bench binary that crashed before writing its output, or a stale
+    path in the CI recipe."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        sys.exit(
+            f"bench gate: {role} file '{path}' does not exist "
+            "(did the bench run fail before writing its JSON?)"
+        )
+    except json.JSONDecodeError as e:
+        sys.exit(f"bench gate: {role} file '{path}' is not valid JSON: {e}")
+    if not isinstance(doc, dict) or not isinstance(doc.get("scenarios"), list):
+        sys.exit(
+            f"bench gate: {role} file '{path}' has no 'scenarios' list "
+            "(expected the layout written by the bench binaries)"
+        )
+    try:
+        return scenarios(doc)
+    except (KeyError, TypeError) as e:
+        sys.exit(f"bench gate: {role} file '{path}' has a malformed scenario entry: {e}")
+
+
 def main():
     if os.environ.get("BENCH_GATE_SKIP") == "1":
         print("bench gate: skipped (BENCH_GATE_SKIP=1)")
         return 0
-    measured_path, baseline_path = sys.argv[1], sys.argv[2]
-    with open(measured_path) as f:
-        measured = scenarios(json.load(f))
-    with open(baseline_path) as f:
-        baseline = scenarios(json.load(f))
+    if len(sys.argv) != 3:
+        sys.exit("usage: bench_gate.py <measured.json> <baseline.json>")
+    measured = load_scenarios(sys.argv[1], "measured")
+    baseline = load_scenarios(sys.argv[2], "baseline")
     failures = []
     for name, base in sorted(baseline.items()):
         floor = base.get("throughput_ev_s")

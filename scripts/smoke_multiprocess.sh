@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Multi-process smoke test: one coordinator + two worker processes over
+# Unix domain sockets run a keyed wordcount end-to-end; the collected
+# output must be byte-identical to the single-process engine's run of the
+# same pipeline. Run from the repo root after `cargo build --release`.
+#
+#   FLOWUNITS_BIN  path to the flowunits binary (default target/release/flowunits)
+#   SMOKE_EVENTS   events to stream (default 6000)
+set -euo pipefail
+
+BIN="${FLOWUNITS_BIN:-target/release/flowunits}"
+EVENTS="${SMOKE_EVENTS:-6000}"
+if [ ! -x "$BIN" ]; then
+  echo "smoke: binary '$BIN' not found — run 'cargo build --release' first" >&2
+  exit 1
+fi
+DIR="$(mktemp -d)"
+trap 'kill $(jobs -p) 2>/dev/null || true; rm -rf "$DIR"' EXIT
+SOCK="$DIR/coordinator.sock"
+
+"$BIN" coordinator --listen "$SOCK" --workers 2 --pipeline wordcount \
+  --events "$EVENTS" --timeout-s 120 --show-collected >"$DIR/dist.out" 2>&1 &
+COORD=$!
+for i in 1 2; do
+  "$BIN" worker --connect "$SOCK" --id "w$i" --state-dir "$DIR/w$i" \
+    >"$DIR/w$i.log" 2>&1 &
+done
+
+if ! wait "$COORD"; then
+  echo "smoke: coordinator failed —" >&2
+  cat "$DIR/dist.out" >&2
+  exit 1
+fi
+grep '^collected: ' "$DIR/dist.out" | sort >"$DIR/dist.collected"
+
+"$BIN" run --pipeline wordcount --events "$EVENTS" --show-collected >"$DIR/local.out"
+grep '^collected: ' "$DIR/local.out" | sort >"$DIR/local.collected"
+
+if ! diff -u "$DIR/local.collected" "$DIR/dist.collected"; then
+  echo "smoke: FAIL — distributed output differs from the in-process run" >&2
+  exit 1
+fi
+echo "smoke: OK — distributed wordcount matches in-process ($(wc -l <"$DIR/dist.collected") collected lines)"
