@@ -1,0 +1,288 @@
+//! `cargo bench --bench columnar` — typed columnar data-plane benchmarks:
+//! the monomorphized column operators against the classic `Value` path
+//! they replace. Three scenario pairs:
+//!
+//! * **micro_columnar / micro_value** — the same `map → filter → key_by`
+//!   chain driven batch-by-batch through `run_chain_data` (column
+//!   batches) and `run_chain` (`Value` rows), best-of-3 interleaved. The
+//!   tentpole acceptance bar: the monomorphized chain must beat the
+//!   `Value` chain by **≥ 2×** at full size — and produce bit-identical
+//!   outputs, key-hash column included;
+//! * **col_linear / col_linear_value** — end-to-end typed `map → filter`
+//!   pipeline with `JobConfig::columnar` on vs off;
+//! * **col_keyed / col_keyed_value** — end-to-end typed
+//!   `map → filter → key_by → fold` with the columnar hash shuffle on vs
+//!   off; the collected per-key results must match exactly.
+//!
+//! Results land in `BENCH_columnar.json` (override with `COLUMNAR_OUT`);
+//! `COLUMNAR_EVENTS` scales the workload, and CI runs a small smoke value
+//! (the 2× bar is asserted only at full size — smoke runs on shared
+//! runners are noise, so parity is the smoke-mode check).
+
+use flowunits::api::{DecodeErrors, JobConfig, JobReport, PlannerKind, Source, StreamContext};
+use flowunits::columnar::{ColumnBatch, Layout};
+use flowunits::config::eval_cluster;
+use flowunits::runtime::col_exec::{
+    column_batch_of, ColumnFilterExec, ColumnKeyByExec, ColumnMapExec,
+};
+use flowunits::runtime::exec::{FilterExec, KeyByExec, MapExec};
+use flowunits::runtime::{run_chain, run_chain_data, ChainBuffers, OpExec};
+use flowunits::value::{Batch, BatchData, Value};
+use std::io::Write;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn events() -> u64 {
+    std::env::var("COLUMNAR_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(500_000)
+}
+
+const BATCH: i64 = 4096;
+
+fn col_chain() -> Vec<Box<dyn OpExec>> {
+    let e = || Arc::new(DecodeErrors::default());
+    vec![
+        Box::new(ColumnMapExec::<i64, i64>::new(
+            Arc::new(|x| x.wrapping_mul(31)),
+            e(),
+        )),
+        Box::new(ColumnFilterExec::<i64>::new(Arc::new(|x| x % 7 != 0), e())),
+        Box::new(ColumnKeyByExec::<i64, i64>::new(Arc::new(|x| x % 64), e())),
+    ]
+}
+
+fn value_chain() -> Vec<Box<dyn OpExec>> {
+    vec![
+        Box::new(MapExec(Arc::new(|v: Value| {
+            Value::I64(v.as_i64().unwrap().wrapping_mul(31))
+        }))),
+        Box::new(FilterExec(Arc::new(|v: &Value| {
+            v.as_i64().unwrap() % 7 != 0
+        }))),
+        Box::new(KeyByExec(Arc::new(|v: &Value| {
+            Value::I64(v.as_i64().unwrap() % 64)
+        }))),
+    ]
+}
+
+/// One timed pass of the columnar chain, batch generation included (the
+/// columnar synthetic source builds columns natively, so generation is
+/// part of what the representation buys). Returns (wall, records out).
+fn time_columnar(n: i64) -> (Duration, u64) {
+    let mut ops = col_chain();
+    let mut bufs = ChainBuffers::new(None);
+    let mut out_records = 0u64;
+    let t0 = Instant::now();
+    let mut lo = 0i64;
+    while lo < n {
+        let hi = (lo + BATCH).min(n);
+        let cb = column_batch_of(&Layout::I64, lo..hi);
+        match run_chain_data(&mut ops, BatchData::Columns(cb), &mut bufs) {
+            BatchData::Columns(c) => out_records += c.len() as u64,
+            BatchData::Rows(b) => out_records += b.values().len() as u64,
+        }
+        lo = hi;
+    }
+    (t0.elapsed(), out_records)
+}
+
+/// One timed pass of the equivalent `Value` chain.
+fn time_value(n: i64) -> (Duration, u64) {
+    let mut ops = value_chain();
+    let mut bufs = ChainBuffers::new(None);
+    let mut out_records = 0u64;
+    let t0 = Instant::now();
+    let mut lo = 0i64;
+    while lo < n {
+        let hi = (lo + BATCH).min(n);
+        let mut values = Vec::with_capacity((hi - lo) as usize);
+        for i in lo..hi {
+            values.push(Value::I64(i));
+        }
+        let out = run_chain(&mut ops, Batch::new(values), &mut bufs);
+        out_records += out.values().len() as u64;
+        lo = hi;
+    }
+    (t0.elapsed(), out_records)
+}
+
+/// Feeds the full input through both chains once (untimed) and asserts
+/// the outputs — values *and* the computed key-hash column — are
+/// identical batch by batch.
+fn assert_micro_parity(n: i64) {
+    let mut col_ops = col_chain();
+    let mut row_ops = value_chain();
+    let mut bufs = ChainBuffers::new(None);
+    let mut lo = 0i64;
+    while lo < n {
+        let hi = (lo + BATCH).min(n);
+        let cb = column_batch_of(&Layout::I64, lo..hi);
+        let got: ColumnBatch =
+            match run_chain_data(&mut col_ops, BatchData::Columns(cb), &mut bufs) {
+                BatchData::Columns(c) => c,
+                BatchData::Rows(_) => panic!("monomorphized chain fell off the columnar path"),
+            };
+        let mut values = Vec::with_capacity((hi - lo) as usize);
+        for i in lo..hi {
+            values.push(Value::I64(i));
+        }
+        let expect = run_chain(&mut row_ops, Batch::new(values), &mut bufs);
+        assert_eq!(
+            got.to_batch().values(),
+            expect.values(),
+            "columnar chain diverged from the Value chain in batch [{lo}, {hi})"
+        );
+        assert_eq!(
+            got.key_hashes().expect("columnar key_by attaches hashes"),
+            expect.key_hashes().expect("row key_by attaches hashes"),
+            "key-hash column diverged in batch [{lo}, {hi})"
+        );
+        lo = hi;
+    }
+}
+
+fn config(columnar: bool) -> JobConfig {
+    JobConfig {
+        planner: PlannerKind::FlowUnits,
+        columnar,
+        ..Default::default()
+    }
+}
+
+fn run_typed_linear(n: u64, columnar: bool) -> JobReport {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config(columnar));
+    ctx.stream(Source::synthetic(n, |_, i| i as i64))
+        .to_layer("edge")
+        .map(|v: i64| v.wrapping_mul(31))
+        .filter(|v| v % 7 != 0)
+        .to_layer("cloud")
+        .collect_count();
+    ctx.execute().expect("col_linear pipeline")
+}
+
+fn run_typed_keyed(n: u64, columnar: bool) -> (JobReport, Vec<(i64, i64)>) {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config(columnar));
+    let handle = ctx
+        .stream(Source::synthetic(n, |_, i| i as i64))
+        .to_layer("edge")
+        .map(|v: i64| v.wrapping_mul(31))
+        .filter(|v| v % 7 != 0)
+        .to_layer("cloud")
+        .key_by(|v| v % 64)
+        .fold(0i64, |acc, v| *acc = acc.wrapping_add(v))
+        .collect();
+    let mut report = ctx.execute().expect("col_keyed pipeline");
+    let mut folded: Vec<(i64, i64)> = report.take(handle).expect("keyed results");
+    folded.sort_unstable();
+    (report, folded)
+}
+
+fn report_row(name: &str, n: u64, r: &JobReport) -> String {
+    let wall = r.wall_time.as_secs_f64();
+    format!(
+        "    {{\"name\": \"{name}\", \"events\": {n}, \"events_out\": {}, \
+         \"wall_s\": {:.6}, \"throughput_ev_s\": {:.1}}}",
+        r.events_out,
+        wall,
+        if wall > 0.0 { n as f64 / wall } else { 0.0 },
+    )
+}
+
+fn micro_row(name: &str, n: u64, out: u64, wall: Duration) -> String {
+    let w = wall.as_secs_f64();
+    format!(
+        "    {{\"name\": \"{name}\", \"events\": {n}, \"events_out\": {out}, \
+         \"wall_s\": {:.6}, \"throughput_ev_s\": {:.1}}}",
+        w,
+        if w > 0.0 { n as f64 / w } else { 0.0 },
+    )
+}
+
+fn main() {
+    let n = events();
+    let full = n >= 500_000;
+    println!("# FlowUnits columnar benchmarks ({n} events per scenario)");
+
+    // --- micro: the chain alone, both representations -----------------
+    assert_micro_parity(n as i64);
+    let mut best_col = (Duration::MAX, 0u64);
+    let mut best_val = (Duration::MAX, 0u64);
+    for _ in 0..3 {
+        let c = time_columnar(n as i64);
+        if c.0 < best_col.0 {
+            best_col = c;
+        }
+        let v = time_value(n as i64);
+        if v.0 < best_val.0 {
+            best_val = v;
+        }
+    }
+    assert_eq!(
+        best_col.1, best_val.1,
+        "both chains must keep the same record count"
+    );
+    let speedup = best_val.0.as_secs_f64() / best_col.0.as_secs_f64().max(1e-9);
+    println!(
+        "micro      columnar {:>9.3}s   value {:>9.3}s   speedup {speedup:.2}x",
+        best_col.0.as_secs_f64(),
+        best_val.0.as_secs_f64(),
+    );
+    if full {
+        assert!(
+            speedup >= 2.0,
+            "columnar acceptance bar: the monomorphized map/filter/key_by \
+             chain must beat the Value chain by >= 2x at full size, got {speedup:.2}x"
+        );
+    } else if speedup < 1.0 {
+        // smoke measurements are milliseconds on a shared runner — report,
+        // don't gate; the 2x bar is enforced at full size
+        println!("note: smoke-mode speedup {speedup:.2}x (noise-prone; not gated)");
+    }
+
+    // --- end-to-end: columnar on vs off, identical results ------------
+    let lin_col = run_typed_linear(n, true);
+    let lin_val = run_typed_linear(n, false);
+    assert_eq!(
+        lin_col.events_out, lin_val.events_out,
+        "columnar on/off must agree on the linear pipeline"
+    );
+    println!(
+        "linear     columnar {:>14}   value {:>14}",
+        flowunits::util::fmt_rate(n, lin_col.wall_time),
+        flowunits::util::fmt_rate(n, lin_val.wall_time),
+    );
+
+    let (keyed_col, folded_col) = run_typed_keyed(n, true);
+    let (keyed_val, folded_val) = run_typed_keyed(n, false);
+    assert_eq!(
+        folded_col, folded_val,
+        "columnar on/off must produce identical per-key fold results"
+    );
+    println!(
+        "keyed      columnar {:>14}   value {:>14}   ({} keys)",
+        flowunits::util::fmt_rate(n, keyed_col.wall_time),
+        flowunits::util::fmt_rate(n, keyed_val.wall_time),
+        folded_col.len(),
+    );
+
+    let rows = vec![
+        micro_row("micro_columnar", n, best_col.1, best_col.0),
+        micro_row("micro_value", n, best_val.1, best_val.0),
+        report_row("col_linear", n, &lin_col),
+        report_row("col_linear_value", n, &lin_val),
+        report_row("col_keyed", n, &keyed_col),
+        report_row("col_keyed_value", n, &keyed_val),
+    ];
+    let json = format!(
+        "{{\n  \"bench\": \"columnar\",\n  \"events\": {n}, \"micro_speedup\": {speedup:.3},\n  \"scenarios\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    // cargo runs bench binaries with CWD = the package root (rust/);
+    // COLUMNAR_OUT overrides the destination
+    let path = std::env::var("COLUMNAR_OUT").unwrap_or_else(|_| "BENCH_columnar.json".into());
+    let mut f = std::fs::File::create(&path).expect("create BENCH_columnar.json");
+    f.write_all(json.as_bytes()).expect("write bench results");
+    println!("\nwrote {path}");
+}

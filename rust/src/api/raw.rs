@@ -163,6 +163,10 @@ struct BuilderState {
     /// Runtime decode-failure accumulator shared with every typed-layer
     /// closure built on this context; checked after `execute()`.
     decode: Arc<DecodeErrors>,
+    /// Mirror of [`JobConfig::columnar`]: when set, the typed layer
+    /// lowers eligible chains onto monomorphized column operators
+    /// instead of `Value` closures.
+    columnar: bool,
 }
 
 impl BuilderState {
@@ -207,6 +211,7 @@ impl StreamContext {
             origin: CONTEXT_IDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             ..LogicalGraph::default()
         };
+        let columnar = config.columnar;
         StreamContext {
             cluster,
             config,
@@ -215,6 +220,7 @@ impl StreamContext {
                 errors: Vec::new(),
                 layers,
                 decode: Arc::new(DecodeErrors::default()),
+                columnar,
             })),
         }
     }
@@ -253,6 +259,12 @@ impl StreamContext {
     /// The context's shared typed-decode failure accumulator.
     pub(crate) fn decode_errors(&self) -> Arc<DecodeErrors> {
         self.state.borrow().decode.clone()
+    }
+
+    /// Whether typed chains built on this context should lower onto the
+    /// columnar data plane (mirrors [`JobConfig::columnar`]).
+    pub(crate) fn columnar_enabled(&self) -> bool {
+        self.state.borrow().columnar
     }
 
     /// Number of events that failed a typed-layer decode so far. Useful
@@ -346,6 +358,20 @@ impl Stream {
     /// The context's shared typed-decode failure accumulator.
     pub(crate) fn decode_errors(&self) -> Arc<DecodeErrors> {
         self.state.borrow().decode.clone()
+    }
+
+    /// Whether typed chains on this stream should lower onto the
+    /// columnar data plane (mirrors [`JobConfig::columnar`]).
+    pub(crate) fn columnar_enabled(&self) -> bool {
+        self.state.borrow().columnar
+    }
+
+    /// Appends a monomorphized columnar operator built by the typed
+    /// layer ([`OpKind::Columnar`]); the factory closes over the
+    /// concrete element types.
+    pub(crate) fn push_columnar(self, op: crate::graph::ColumnarOp) -> Self {
+        let name = op.label;
+        self.push(OpKind::Columnar(op), name)
     }
 
     /// The builder-context identity stamped on the graph (typed

@@ -6,9 +6,21 @@
 //! conversion to the engine's dynamic `Value` representation happens in
 //! thin adapter shims at the graph boundary (the [`StreamData`] trait).
 //! Channels, planners, placement, the zero-copy batch data plane, and
-//! dynamic updates are untouched: a typed pipeline lowers to exactly the
-//! same [`LogicalGraph`](crate::graph::LogicalGraph) as its
-//! [`api::raw`](crate::api::raw) equivalent.
+//! dynamic updates are untouched.
+//!
+//! **Columnar lowering.** When the element types have a fixed columnar
+//! [`Layout`](crate::columnar::Layout) (scalars and tuples of scalars)
+//! and [`JobConfig::columnar`](crate::coordinator::JobConfig::columnar)
+//! is on (the default), `map`/`filter`/`filter_map`/`key_by` and the
+//! keyed `fold`/`reduce`/`window` lower to **monomorphized column
+//! operators** ([`runtime::col_exec`](crate::runtime::col_exec)) that
+//! iterate native column slices directly — no per-record `Value` is
+//! allocated between the source and the first fallback point. Types
+//! without a layout (`Vec<T>`, [`Features`], raw `Value`), operators
+//! without a columnar form (`flat_map`, `inspect`, `map_values`,
+//! `xla_map`), and `columnar: false` all take the classic `Value`
+//! closure path; either way the pipeline produces identical results —
+//! the representation is an execution detail, not a semantic one.
 //!
 //! **Type-state keying.** [`Stream::key_by`] is the only way to obtain a
 //! [`KeyedStream`], and the keyed stateful operators (`fold`, `reduce`,
@@ -84,37 +96,67 @@ use super::raw;
 use super::OpenStream;
 use crate::coordinator::CollectHandle;
 use crate::error::Error;
-use crate::graph::{Replication, SinkKind, SourceKind, WindowAgg};
+use crate::graph::{ColumnarOp, Replication, SinkKind, SourceKind, WindowAgg};
+use crate::runtime::col_exec::{
+    column_batch_of, ColumnFilterExec, ColumnFilterMapExec, ColumnFoldExec, ColumnKeyByExec,
+    ColumnMapExec, ColumnReduceExec, ColumnWindowExec,
+};
 use crate::value::{StreamData, Value};
 use std::marker::PhantomData;
 use std::sync::Arc;
 
+/// Wraps a monomorphized executor factory as a graph-level
+/// [`ColumnarOp`]; the call site's closure pins the concrete types.
+fn columnar_op(
+    factory: impl Fn() -> Box<dyn crate::runtime::OpExec> + Send + Sync + 'static,
+    keys: bool,
+    stateful: bool,
+    label: &'static str,
+) -> ColumnarOp {
+    ColumnarOp {
+        factory: Arc::new(factory),
+        keys,
+        stateful,
+        label,
+    }
+}
+
 /// A typed source: like [`raw::Source`], but its generator/vector works
 /// in the native element type `T`.
 pub struct Source<T: StreamData> {
-    kind: SourceKind,
-    _t: PhantomData<T>,
+    def: SourceDef<T>,
+}
+
+/// Synthetic sources keep the native-typed generator until `open()`,
+/// where the context's columnar setting picks the engine form: batches
+/// born columnar ([`SourceKind::SyntheticColumns`]) when `T` has a
+/// layout, else per-event `Value`s. Both forms enumerate the same
+/// global event indices, so the generator sees identical inputs.
+enum SourceDef<T: StreamData> {
+    /// Already in engine form (vectors, files).
+    Lowered(SourceKind),
+    /// Deferred synthetic generator.
+    Synthetic {
+        total: u64,
+        gen: Arc<dyn Fn(u64, u64) -> T + Send + Sync>,
+        rate: Option<f64>,
+    },
 }
 
 impl<T: StreamData> Source<T> {
-    fn new(kind: SourceKind) -> Source<T> {
-        Source {
-            kind,
-            _t: PhantomData,
-        }
-    }
-
     /// Synthetic generator: `total` events split across source instances,
     /// each produced by `gen(instance_index, event_index)`.
     pub fn synthetic(
         total: u64,
         gen: impl Fn(u64, u64) -> T + Send + Sync + 'static,
     ) -> Source<T> {
-        Source::new(SourceKind::Synthetic {
-            total,
-            gen: Arc::new(move |inst, i| gen(inst, i).into_value()),
-            rate: None,
-        })
+        Source {
+            def: SourceDef::Synthetic {
+                total,
+                gen: Arc::new(gen),
+                rate: None,
+            },
+        }
     }
 
     /// Rate-limited synthetic generator (events/second per instance);
@@ -124,18 +166,22 @@ impl<T: StreamData> Source<T> {
         rate: f64,
         gen: impl Fn(u64, u64) -> T + Send + Sync + 'static,
     ) -> Source<T> {
-        Source::new(SourceKind::Synthetic {
-            total,
-            gen: Arc::new(move |inst, i| gen(inst, i).into_value()),
-            rate: Some(rate),
-        })
+        Source {
+            def: SourceDef::Synthetic {
+                total,
+                gen: Arc::new(gen),
+                rate: Some(rate),
+            },
+        }
     }
 
     /// A pre-materialised vector.
     pub fn vector(values: Vec<T>) -> Source<T> {
-        Source::new(SourceKind::Vector(Arc::new(
-            values.into_iter().map(StreamData::into_value).collect(),
-        )))
+        Source {
+            def: SourceDef::Lowered(SourceKind::Vector(Arc::new(
+                values.into_iter().map(StreamData::into_value).collect(),
+            ))),
+        }
     }
 }
 
@@ -143,7 +189,9 @@ impl Source<String> {
     /// Lines of a text file as `String` events. An unreadable file is a
     /// job-level error from `execute()`/`deploy()`, not a panic.
     pub fn file_lines(path: impl Into<std::path::PathBuf>) -> Source<String> {
-        Source::new(SourceKind::FileLines(path.into()))
+        Source {
+            def: SourceDef::Lowered(SourceKind::FileLines(path.into())),
+        }
     }
 }
 
@@ -151,7 +199,24 @@ impl<T: StreamData> OpenStream for Source<T> {
     type Handle = Stream<T>;
     fn open(self, ctx: &mut raw::StreamContext) -> Stream<T> {
         let errs = ctx.decode_errors();
-        wrap(ctx.open_source(self.kind), errs)
+        let kind = match self.def {
+            SourceDef::Lowered(kind) => kind,
+            SourceDef::Synthetic { total, gen, rate } => match T::layout() {
+                Some(layout) if ctx.columnar_enabled() => SourceKind::SyntheticColumns {
+                    total,
+                    gen: Arc::new(move |inst, range| {
+                        column_batch_of(&layout, range.map(|i| gen(inst, i)))
+                    }),
+                    rate,
+                },
+                _ => SourceKind::Synthetic {
+                    total,
+                    gen: Arc::new(move |inst, i| gen(inst, i).into_value()),
+                    rate,
+                },
+            },
+        };
+        wrap(ctx.open_source(kind), errs)
     }
 }
 
@@ -261,12 +326,25 @@ impl<T: StreamData> Stream<T> {
 
     /// Element-wise transform with a native-typed closure. An event that
     /// fails to decode as `T` is suppressed (and recorded), never
-    /// forwarded as poison.
+    /// forwarded as poison. When both `T` and `U` are columnar types (and
+    /// [`JobConfig::columnar`](crate::coordinator::JobConfig::columnar)
+    /// is on), lowers to a monomorphized column operator.
     pub fn map<U: StreamData>(
         self,
         f: impl Fn(T) -> U + Send + Sync + 'static,
     ) -> Stream<U> {
         let errs = self.errs.clone();
+        if self.raw.columnar_enabled() && T::layout().is_some() && U::layout().is_some() {
+            let f: Arc<dyn Fn(T) -> U + Send + Sync> = Arc::new(f);
+            let op_errs = errs.clone();
+            let raw = self.raw.push_columnar(columnar_op(
+                move || Box::new(ColumnMapExec::<T, U>::new(f.clone(), op_errs.clone())),
+                false,
+                false,
+                "map",
+            ));
+            return wrap(raw, errs);
+        }
         let raw = self.raw.filter_map(move |v| {
             decode_or_record::<T>(&errs, "map", v).map(|t| f(t).into_value())
         });
@@ -276,12 +354,51 @@ impl<T: StreamData> Stream<T> {
     /// Predicate filter with a native-typed closure. Events that fail to
     /// decode are dropped (and recorded). The decode consumes the event
     /// and re-encodes it on keep — payloads move, they are never
-    /// deep-copied.
+    /// deep-copied. Lowers to a monomorphized column operator when `T`
+    /// is a columnar type.
     pub fn filter(self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Self {
         let errs = self.errs.clone();
+        if self.raw.columnar_enabled() && T::layout().is_some() {
+            let f: Arc<dyn Fn(&T) -> bool + Send + Sync> = Arc::new(f);
+            let op_errs = errs.clone();
+            let raw = self.raw.push_columnar(columnar_op(
+                move || Box::new(ColumnFilterExec::<T>::new(f.clone(), op_errs.clone())),
+                false,
+                false,
+                "filter",
+            ));
+            return wrap(raw, errs);
+        }
         let raw = self.raw.filter_map(move |v| {
             decode_or_record::<T>(&errs, "filter", v)
                 .and_then(|t| if f(&t) { Some(t.into_value()) } else { None })
+        });
+        wrap(raw, self.errs)
+    }
+
+    /// Combined filter + transform: keep-and-convert in one pass. Events
+    /// that fail to decode as `T` are dropped (and recorded). Lowers to
+    /// a monomorphized column operator when both `T` and `U` are
+    /// columnar types.
+    pub fn filter_map<U: StreamData>(
+        self,
+        f: impl Fn(T) -> Option<U> + Send + Sync + 'static,
+    ) -> Stream<U> {
+        let errs = self.errs.clone();
+        if self.raw.columnar_enabled() && T::layout().is_some() && U::layout().is_some() {
+            let f: Arc<dyn Fn(T) -> Option<U> + Send + Sync> = Arc::new(f);
+            let op_errs = errs.clone();
+            let raw = self.raw.push_columnar(columnar_op(
+                move || Box::new(ColumnFilterMapExec::<T, U>::new(f.clone(), op_errs.clone())),
+                false,
+                false,
+                "filter_map",
+            ));
+            return wrap(raw, errs);
+        }
+        let raw = self.raw.filter_map(move |v| {
+            decode_or_record::<T>(&errs, "filter_map", v)
+                .and_then(|t| f(t).map(StreamData::into_value))
         });
         wrap(raw, self.errs)
     }
@@ -329,6 +446,17 @@ impl<T: StreamData> Stream<T> {
         f: impl Fn(&T) -> K + Send + Sync + 'static,
     ) -> KeyedStream<K, T> {
         let errs = self.errs.clone();
+        if self.raw.columnar_enabled() && T::layout().is_some() && K::layout().is_some() {
+            let f: Arc<dyn Fn(&T) -> K + Send + Sync> = Arc::new(f);
+            let op_errs = errs.clone();
+            let raw = self.raw.push_columnar(columnar_op(
+                move || Box::new(ColumnKeyByExec::<T, K>::new(f.clone(), op_errs.clone())),
+                true,
+                false,
+                "key_by",
+            ));
+            return wrap_keyed(raw, errs);
+        }
         let raw = self.raw.key_by_fused(move |v| {
             decode_or_record::<T>(&errs, "key_by", v).map(|t| {
                 let key = f(&t).into_value();
@@ -488,6 +616,23 @@ impl<K: StreamData, V: StreamData> KeyedStream<K, V> {
     ) -> KeyedStream<K, A> {
         let errs = self.errs.clone();
         let init_value = init.into_value();
+        if self.raw.columnar_enabled() && K::layout().is_some() && V::layout().is_some() {
+            let step: Arc<dyn Fn(&mut A, V) + Send + Sync> = Arc::new(step);
+            let op_errs = errs.clone();
+            let raw = self.raw.push_columnar(columnar_op(
+                move || {
+                    Box::new(ColumnFoldExec::<K, V, A>::from_init_value(
+                        init_value.clone(),
+                        step.clone(),
+                        op_errs.clone(),
+                    ))
+                },
+                false,
+                true,
+                "fold",
+            ));
+            return wrap_keyed(raw, errs);
+        }
         let reset = init_value.clone();
         let raw = self.raw.fold(init_value, move |acc, payload| {
             let cur = std::mem::replace(acc, Value::Null);
@@ -521,6 +666,17 @@ impl<K: StreamData, V: StreamData> KeyedStream<K, V> {
         f: impl Fn(&V, &V) -> V + Send + Sync + 'static,
     ) -> KeyedStream<K, V> {
         let errs = self.errs.clone();
+        if self.raw.columnar_enabled() && K::layout().is_some() && V::layout().is_some() {
+            let f: Arc<dyn Fn(&V, &V) -> V + Send + Sync> = Arc::new(f);
+            let op_errs = errs.clone();
+            let raw = self.raw.push_columnar(columnar_op(
+                move || Box::new(ColumnReduceExec::<K, V>::new(f.clone(), op_errs.clone())),
+                false,
+                true,
+                "reduce",
+            ));
+            return wrap_keyed(raw, errs);
+        }
         let raw = self.raw.reduce(move |a, b| {
             match (
                 decode_or_record::<V>(&errs, "reduce", a.clone()),
@@ -540,7 +696,7 @@ impl<K: StreamData, V: StreamData> KeyedStream<K, V> {
     /// for `FeatureStats` (an `R` that does not match what `agg`
     /// produces surfaces as `Error::Decode` downstream, never a panic).
     pub fn window<R: StreamData>(self, size: usize, agg: WindowAgg) -> KeyedStream<K, R> {
-        wrap_keyed(self.raw.window(size, agg), self.errs)
+        self.sliding_window(size, size, agg)
     }
 
     /// Sliding count window; see [`KeyedStream::window`] for `R`.
@@ -550,6 +706,25 @@ impl<K: StreamData, V: StreamData> KeyedStream<K, V> {
         slide: usize,
         agg: WindowAgg,
     ) -> KeyedStream<K, R> {
+        if self.raw.columnar_enabled() {
+            if let (Some(kl), Some(vl)) = (K::layout(), V::layout()) {
+                let raw = self.raw.push_columnar(columnar_op(
+                    move || {
+                        Box::new(ColumnWindowExec::new(
+                            size,
+                            slide,
+                            agg.clone(),
+                            kl.clone(),
+                            vl.clone(),
+                        ))
+                    },
+                    false,
+                    true,
+                    "window",
+                ));
+                return wrap_keyed(raw, self.errs);
+            }
+        }
         wrap_keyed(self.raw.sliding_window(size, slide, agg), self.errs)
     }
 

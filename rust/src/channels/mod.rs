@@ -26,10 +26,11 @@
 //!   fly;
 //! * `Broadcast` — replicate to all targets (control/barrier use).
 
+use crate::columnar::{ColumnBatch, ColumnBuffer, Layout};
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::netsim::Link;
 use crate::transport::{InProcessLane, Lane, NetsimLane};
-use crate::value::{Batch, Value};
+use crate::value::{Batch, BatchData, Value};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::time::Duration;
@@ -46,6 +47,12 @@ pub const DEFAULT_CHANNEL_CAPACITY: usize = 64;
 pub enum Msg {
     /// Same-host batch, shared by refcount.
     Batch(Batch),
+    /// Same-host columnar batch, shared by refcount — the typed data
+    /// plane's struct-of-arrays representation stays columnar across
+    /// local stage edges. Framed lanes never see this variant: columns
+    /// encode to the same [`Msg::Frame`] bytes as the equivalent row
+    /// batch, so the wire format is unchanged.
+    Columns(ColumnBatch),
     /// Cross-host batch, encoded; decoded by the receiving worker. The
     /// bytes are refcounted so broadcast frames share one buffer.
     Frame(Arc<[u8]>),
@@ -137,6 +144,10 @@ pub struct OutPort {
     /// sub-batches carry their hashes forward (a re-shuffle downstream
     /// never recomputes them).
     pending_hashes: Vec<Vec<u64>>,
+    /// Pending per-target *columnar* buffers for `Hash` routing: the
+    /// shuffle stays struct-of-arrays end-to-end when the upstream chain
+    /// ran columnar. Lazily allocated — row-only ports never touch these.
+    col_pending: Vec<Option<ColumnBuffer>>,
     /// Flush threshold for hash-routed buffers.
     batch_capacity: usize,
     metrics: Option<Metrics>,
@@ -152,12 +163,14 @@ impl OutPort {
     ) -> Self {
         let pending = targets.iter().map(|_| Vec::new()).collect();
         let pending_hashes = targets.iter().map(|_| Vec::new()).collect();
+        let col_pending = targets.iter().map(|_| None).collect();
         OutPort {
             targets,
             routing,
             rr_next: 0,
             pending,
             pending_hashes,
+            col_pending,
             // a zero capacity would make the hash carving loop spin on
             // empty chunks; one record per batch is the useful floor
             batch_capacity: batch_capacity.max(1),
@@ -198,6 +211,11 @@ impl OutPort {
                 // un-keyed batches (e.g. frames decoded off the wire).
                 // Copy-on-write takes the payload in place unless a
                 // sibling edge shares the batch.
+                // A representation switch (a columnar upstream falling
+                // back to rows mid-stream) must not reorder records
+                // already buffered for a target, so columnar pendings
+                // drain first.
+                self.flush_columns();
                 let n = self.targets.len() as u64;
                 let (values, hashes) = batch.into_parts();
                 match hashes {
@@ -249,6 +267,86 @@ impl OutPort {
         }
     }
 
+    /// Sends one batch in either representation: rows go through
+    /// [`OutPort::send`], columns through [`OutPort::send_columns`].
+    pub fn send_data(&mut self, data: BatchData) {
+        match data {
+            BatchData::Rows(b) => self.send(b),
+            BatchData::Columns(c) => self.send_columns(c),
+        }
+    }
+
+    /// Sends one columnar batch according to the routing policy. Local
+    /// targets receive [`Msg::Columns`] by refcount; framed targets get
+    /// the encode-once frame bytes (identical to the row encoding, so the
+    /// receiver decodes without knowing the sender ran columnar). `Hash`
+    /// routing pre-partitions rows into per-target [`ColumnBuffer`]s — the
+    /// shuffle never materialises a `Value`.
+    pub fn send_columns(&mut self, cb: ColumnBatch) {
+        if cb.is_empty() || self.targets.is_empty() {
+            return;
+        }
+        match self.routing {
+            Routing::RoundRobin => {
+                let t = self.rr_next % self.targets.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                self.deliver_columns(t, cb);
+            }
+            Routing::Broadcast => {
+                let last = self.targets.len() - 1;
+                for t in 0..last {
+                    self.deliver_columns(t, cb.clone());
+                }
+                self.deliver_columns(last, cb);
+            }
+            Routing::Hash => {
+                // Mirror of the row Hash path at per-target FIFO fidelity:
+                // row pendings (and columnar pendings of a different
+                // layout) drain before this batch's rows are buffered.
+                for t in 0..self.targets.len() {
+                    if !self.pending[t].is_empty() {
+                        self.deliver_pending(t);
+                    }
+                    let stale = self.col_pending[t]
+                        .as_ref()
+                        .map_or(false, |b| b.layout() != cb.layout());
+                    if stale {
+                        self.deliver_col_pending(t);
+                        self.col_pending[t] = None;
+                    }
+                }
+                let n = self.targets.len() as u64;
+                let cols = cb.columns();
+                // the route hash is the key for pair-shaped rows and the
+                // whole row otherwise — same contract as `route_hash`
+                let (key_layout, key_leaves) = match cb.layout() {
+                    Layout::Pair(k, _) => (k.as_ref(), k.leaf_count()),
+                    l => (l, l.leaf_count()),
+                };
+                for row in 0..cb.len() {
+                    let h = match cb.key_hashes() {
+                        Some(hs) => hs[row],
+                        None => key_layout.hash_row(&cols[..key_leaves], row),
+                    };
+                    let t = (h % n) as usize;
+                    let full = {
+                        let buf = self.col_pending[t]
+                            .get_or_insert_with(|| ColumnBuffer::new(cb.layout().clone()));
+                        buf.push_row_from(cols, row, h);
+                        if buf.len() >= self.batch_capacity {
+                            Some(buf.take())
+                        } else {
+                            None
+                        }
+                    };
+                    if let Some(full) = full {
+                        self.deliver_columns(t, full);
+                    }
+                }
+            }
+        }
+    }
+
     /// Delivers target `t`'s whole pending sub-batch (with its hash
     /// column), swapping in pre-sized buffers: re-growing from zero costs
     /// ~log2(batch) reallocs per delivered batch.
@@ -271,10 +369,28 @@ impl OutPort {
     /// flush keep the no-realloc fast path.
     pub fn flush(&mut self) {
         for t in 0..self.targets.len() {
-            if self.pending[t].is_empty() {
-                continue;
+            if !self.pending[t].is_empty() {
+                self.deliver_pending(t);
             }
-            self.deliver_pending(t);
+            self.deliver_col_pending(t);
+        }
+    }
+
+    /// Delivers target `t`'s pending columnar buffer, if any rows are
+    /// buffered. The (empty) buffer stays allocated for future sends.
+    fn deliver_col_pending(&mut self, t: usize) {
+        let full = match self.col_pending[t].as_mut() {
+            Some(buf) if !buf.is_empty() => buf.take(),
+            _ => return,
+        };
+        self.deliver_columns(t, full);
+    }
+
+    /// Drains every pending columnar buffer (ordering barrier before row
+    /// records are buffered for the same targets).
+    fn flush_columns(&mut self) {
+        for t in 0..self.targets.len() {
+            self.deliver_col_pending(t);
         }
     }
 
@@ -335,6 +451,33 @@ impl OutPort {
         }
     }
 
+    fn deliver_columns(&mut self, t: usize, cb: ColumnBatch) {
+        if cb.is_empty() {
+            return;
+        }
+        if self.targets[t].crossing {
+            if let Some(m) = &self.metrics {
+                MetricsRegistry::add(&m.zone_crossings, cb.len() as u64);
+            }
+        }
+        let msg = if self.targets[t].framed() {
+            // Encode-once, straight from the columns: the frame bytes are
+            // identical to the equivalent row batch's encoding, so the
+            // receiver's decode path is unchanged.
+            let bytes = cb.wire_with(|| {
+                if let Some(m) = &self.metrics {
+                    MetricsRegistry::add(&m.batch_encodes, 1);
+                }
+            });
+            Msg::Frame(bytes)
+        } else {
+            Msg::Columns(cb)
+        };
+        if self.targets[t].lane.deliver(msg).is_err() {
+            self.count_transport_error();
+        }
+    }
+
     fn count_transport_error(&self) {
         if let Some(m) = &self.metrics {
             MetricsRegistry::add(&m.transport_errors, 1);
@@ -385,6 +528,24 @@ impl FanOut {
         self.ports[last].send(batch);
     }
 
+    /// Sends a batch in either representation down every outgoing edge (a
+    /// refcount bump for all but the last).
+    pub fn send_data(&mut self, data: BatchData) {
+        if data.is_empty() || self.ports.is_empty() {
+            return;
+        }
+        match data {
+            BatchData::Rows(b) => self.send(b),
+            BatchData::Columns(c) => {
+                let last = self.ports.len() - 1;
+                for p in &mut self.ports[..last] {
+                    p.send_columns(c.clone());
+                }
+                self.ports[last].send_columns(c);
+            }
+        }
+    }
+
     /// Flushes pending hash-routing buffers on every edge.
     pub fn flush(&mut self) {
         for p in &mut self.ports {
@@ -413,6 +574,9 @@ impl FanOut {
 pub enum InboxEvent {
     /// A data batch (frames are decoded transparently).
     Batch(Batch),
+    /// A columnar batch delivered over a local edge: the consuming chain
+    /// keeps running struct-of-arrays without materialising rows.
+    Columns(ColumnBatch),
     /// Every still-live producer has delivered the drain-and-handoff
     /// marker for this epoch (dynamic update): quiesce without EOS.
     Epoch(u64),
@@ -488,6 +652,7 @@ impl Inbox {
             }
             match self.rx.recv() {
                 Ok(Msg::Batch(b)) => return InboxEvent::Batch(b),
+                Ok(Msg::Columns(c)) => return InboxEvent::Columns(c),
                 Ok(Msg::Frame(bytes)) => match Batch::from_wire(bytes) {
                     Ok(b) => return InboxEvent::Batch(b),
                     Err(_) => {
@@ -524,6 +689,7 @@ impl Inbox {
     pub fn recv(&mut self) -> Option<Batch> {
         match self.next() {
             InboxEvent::Batch(b) => Some(b),
+            InboxEvent::Columns(c) => Some(c.to_batch()),
             InboxEvent::Epoch(_) | InboxEvent::Eos => None,
         }
     }
@@ -536,6 +702,7 @@ impl Inbox {
         }
         match self.rx.try_recv() {
             Ok(Msg::Batch(b)) => Some(Some(b)),
+            Ok(Msg::Columns(c)) => Some(Some(c.to_batch())),
             Ok(Msg::Frame(bytes)) => match Batch::from_wire(bytes) {
                 Ok(b) => Some(Some(b)),
                 Err(_) => {
@@ -904,6 +1071,104 @@ mod tests {
         let mut inbox = Inbox::new(rx, 1);
         assert_eq!(inbox.recv().unwrap(), vec![Value::I64(7)]);
         assert!(inbox.recv().is_none());
+    }
+
+    fn keyed_columns(n: i64) -> ColumnBatch {
+        use crate::columnar::Column;
+        let layout = Layout::pair(Layout::I64, Layout::I64);
+        let mut cols = layout.new_columns(n as usize);
+        for i in 0..n {
+            match &mut cols[0] {
+                Column::I64(v) => v.push(i % 8),
+                _ => unreachable!(),
+            }
+            match &mut cols[1] {
+                Column::I64(v) => v.push(i),
+                _ => unreachable!(),
+            }
+        }
+        ColumnBatch::new(layout, cols)
+    }
+
+    #[test]
+    fn columnar_hash_routing_matches_row_routing() {
+        // the same keyed records, sent as columns and as rows, must land
+        // on the same targets in the same per-target order
+        let route = |columnar: bool| {
+            let (t1, r1) = local_target(1024);
+            let (t2, r2) = local_target(1024);
+            let mut port = OutPort::new(vec![t1, t2], Routing::Hash, 16, None);
+            if columnar {
+                port.send_columns(keyed_columns(200));
+            } else {
+                port.send(keyed_columns(200).to_batch());
+            }
+            port.eos();
+            [r1, r2].map(|rx| {
+                let mut inbox = Inbox::new(rx, 1);
+                let mut got = Vec::new();
+                while let Some(b) = inbox.recv() {
+                    assert!(b.len() <= 16, "columnar shuffle respects capacity");
+                    got.extend(b.into_values());
+                }
+                got
+            })
+        };
+        assert_eq!(route(true), route(false));
+    }
+
+    #[test]
+    fn columnar_batches_frame_identically_to_rows() {
+        let link = Link::new("col", None, false, None);
+        let (tx, rx) = sync_channel(8);
+        let target = Target::linked(tx, link.clone(), Duration::ZERO, true);
+        let mut port = OutPort::new(vec![target], Routing::RoundRobin, 16, None);
+        let cb = keyed_columns(5);
+        let expect = cb.to_batch();
+        port.send_columns(cb);
+        match rx.recv().unwrap() {
+            Msg::Frame(bytes) => {
+                assert_eq!(Batch::from_wire(bytes).unwrap(), expect.values());
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        link.shutdown();
+    }
+
+    #[test]
+    fn columnar_local_edges_share_the_allocation() {
+        let (t1, r1) = local_target(8);
+        let (t2, r2) = local_target(8);
+        let p1 = OutPort::new(vec![t1], Routing::RoundRobin, 16, None);
+        let p2 = OutPort::new(vec![t2], Routing::RoundRobin, 16, None);
+        let mut fan = FanOut::new(vec![p1, p2]);
+        fan.send_data(keyed_columns(3).into());
+        let grab = |rx: Receiver<Msg>| match rx.recv().unwrap() {
+            Msg::Columns(c) => c,
+            other => panic!("expected columns, got {other:?}"),
+        };
+        let a = grab(r1);
+        let b = grab(r2);
+        assert!(ColumnBatch::ptr_eq(&a, &b), "split edges share one allocation");
+    }
+
+    #[test]
+    fn representation_switch_preserves_per_target_order() {
+        // columns buffered below capacity, then rows for the same key:
+        // the columnar pending must drain before the row is buffered
+        let (t1, r1) = local_target(64);
+        let mut port = OutPort::new(vec![t1], Routing::Hash, 1000, None);
+        port.send_columns(keyed_columns(4));
+        port.send(vec![Value::pair(Value::I64(0), Value::I64(99))].into());
+        port.eos();
+        let mut inbox = Inbox::new(r1, 1);
+        let mut got = Vec::new();
+        while let Some(b) = inbox.recv() {
+            got.extend(b.into_values());
+        }
+        let mut expect: Vec<Value> = keyed_columns(4).to_batch().into_values();
+        expect.push(Value::pair(Value::I64(0), Value::I64(99)));
+        assert_eq!(got, expect);
     }
 
     #[test]

@@ -1,0 +1,610 @@
+//! Typed columnar batches: the struct-of-arrays fast path of the data
+//! plane.
+//!
+//! The engine's dynamic representation boxes every event into a
+//! [`Value`] tree — flexible, but on the hot path of a *typed* pipeline
+//! it taxes each record with enum tags, a `Box` per keyed pair, and a
+//! tree walk per hash or encode. [`ColumnBatch`] removes that tax for
+//! the `StreamData` types with a static shape: a batch is stored as one
+//! native column per leaf field (`Vec<i64>`/`Vec<f64>`/`Vec<bool>`/
+//! `Vec<String>`, arrow-style struct-of-arrays), and the monomorphized
+//! operators in `runtime::col_exec` iterate those slices directly.
+//!
+//! Columns are a **local** representation: at a process or queue
+//! boundary a column batch encodes row-wise into exactly the frame
+//! format of [`encode_batch`](crate::value::encode_batch), so the wire,
+//! the queue substrate, and `SocketTransport` are untouched — a peer
+//! cannot tell whether the sender ran columnar. Likewise
+//! [`Layout::hash_row`] reproduces [`Value::stable_hash`] byte-for-byte,
+//! so hash routing agrees across representations (the generalization of
+//! the PR-5 key-hash column: [`ColumnBatch::key_hashes`] is a computed
+//! column attached to the batch).
+//!
+//! Types without a static columnar shape (`Value`, `Vec<T>`, mixed
+//! streams, `Features`) keep flowing as row [`Batch`]es; the two forms
+//! meet in [`BatchData`](crate::value::BatchData).
+
+use crate::value::{Batch, Fnv1a, Value, write_varint};
+use std::sync::{Arc, OnceLock};
+
+/// One native leaf column of a [`ColumnBatch`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    /// 64-bit signed integers.
+    I64(Vec<i64>),
+    /// 64-bit floats.
+    F64(Vec<f64>),
+    /// Booleans.
+    Bool(Vec<bool>),
+    /// UTF-8 strings.
+    Str(Vec<String>),
+}
+
+impl Column {
+    /// Number of rows in the column.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::I64(v) => v.len(),
+            Column::F64(v) => v.len(),
+            Column::Bool(v) => v.len(),
+            Column::Str(v) => v.len(),
+        }
+    }
+
+    /// True when the column holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Appends row `row` of `src` (a column of the same leaf type).
+    pub fn push_from(&mut self, src: &Column, row: usize) {
+        match (self, src) {
+            (Column::I64(d), Column::I64(s)) => d.push(s[row]),
+            (Column::F64(d), Column::F64(s)) => d.push(s[row]),
+            (Column::Bool(d), Column::Bool(s)) => d.push(s[row]),
+            (Column::Str(d), Column::Str(s)) => d.push(s[row].clone()),
+            _ => unreachable!("column leaf type mismatch"),
+        }
+    }
+}
+
+/// The static shape of a columnar `StreamData` type: which leaf columns
+/// a [`ColumnBatch`] of that type carries, and how they nest back into
+/// the dynamic [`Value`] representation.
+///
+/// `Pair` mirrors `(A, B)` / `Value::Pair` (the keyed-record shape);
+/// `Triple` mirrors `(A, B, C)` / a three-element `Value::List`. Leaves
+/// are stored flattened, in declaration order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Layout {
+    /// `i64` leaf.
+    I64,
+    /// `f64` leaf.
+    F64,
+    /// `bool` leaf.
+    Bool,
+    /// `String` leaf.
+    Str,
+    /// `(A, B)` — the engine's `Pair(key, value)` shape.
+    Pair(Box<Layout>, Box<Layout>),
+    /// `(A, B, C)` — a three-element `Value::List`.
+    Triple(Box<Layout>, Box<Layout>, Box<Layout>),
+}
+
+impl Layout {
+    /// Convenience constructor for the keyed-record shape.
+    pub fn pair(key: Layout, value: Layout) -> Layout {
+        Layout::Pair(Box::new(key), Box::new(value))
+    }
+
+    /// Number of flattened leaf columns.
+    pub fn leaf_count(&self) -> usize {
+        match self {
+            Layout::Pair(a, b) => a.leaf_count() + b.leaf_count(),
+            Layout::Triple(a, b, c) => a.leaf_count() + b.leaf_count() + c.leaf_count(),
+            _ => 1,
+        }
+    }
+
+    /// Allocates one empty column per leaf, each with `capacity` rows
+    /// reserved.
+    pub fn new_columns(&self, capacity: usize) -> Vec<Column> {
+        let mut out = Vec::with_capacity(self.leaf_count());
+        self.push_new_columns(capacity, &mut out);
+        out
+    }
+
+    fn push_new_columns(&self, capacity: usize, out: &mut Vec<Column>) {
+        match self {
+            Layout::I64 => out.push(Column::I64(Vec::with_capacity(capacity))),
+            Layout::F64 => out.push(Column::F64(Vec::with_capacity(capacity))),
+            Layout::Bool => out.push(Column::Bool(Vec::with_capacity(capacity))),
+            Layout::Str => out.push(Column::Str(Vec::with_capacity(capacity))),
+            Layout::Pair(a, b) => {
+                a.push_new_columns(capacity, out);
+                b.push_new_columns(capacity, out);
+            }
+            Layout::Triple(a, b, c) => {
+                a.push_new_columns(capacity, out);
+                b.push_new_columns(capacity, out);
+                c.push_new_columns(capacity, out);
+            }
+        }
+    }
+
+    /// Materializes row `row` of `cols` (exactly this layout's leaves,
+    /// flattened) as a dynamic [`Value`].
+    pub fn read_value(&self, cols: &[Column], row: usize) -> Value {
+        let mut idx = 0;
+        self.read_value_inner(cols, &mut idx, row)
+    }
+
+    fn read_value_inner(&self, cols: &[Column], idx: &mut usize, row: usize) -> Value {
+        match self {
+            Layout::I64 | Layout::F64 | Layout::Bool | Layout::Str => {
+                let v = match &cols[*idx] {
+                    Column::I64(c) => Value::I64(c[row]),
+                    Column::F64(c) => Value::F64(c[row]),
+                    Column::Bool(c) => Value::Bool(c[row]),
+                    Column::Str(c) => Value::Str(c[row].clone()),
+                };
+                *idx += 1;
+                v
+            }
+            Layout::Pair(a, b) => {
+                let k = a.read_value_inner(cols, idx, row);
+                let v = b.read_value_inner(cols, idx, row);
+                Value::pair(k, v)
+            }
+            Layout::Triple(a, b, c) => Value::List(vec![
+                a.read_value_inner(cols, idx, row),
+                b.read_value_inner(cols, idx, row),
+                c.read_value_inner(cols, idx, row),
+            ]),
+        }
+    }
+
+    /// The routing hash of row `row` — byte-for-byte the
+    /// [`Value::stable_hash`] of the materialized row, computed without
+    /// materializing it.
+    pub fn hash_row(&self, cols: &[Column], row: usize) -> u64 {
+        let mut h = Fnv1a::new();
+        let mut idx = 0;
+        self.hash_row_inner(cols, &mut idx, row, &mut h);
+        h.finish()
+    }
+
+    fn hash_row_inner(&self, cols: &[Column], idx: &mut usize, row: usize, h: &mut Fnv1a) {
+        // tag bytes mirror Value::hash_into: Bool=1, I64=2, F64=3, Str=4
+        // (raw bytes, no length), Pair=5, List=6 (elements, no count)
+        match self {
+            Layout::I64 | Layout::F64 | Layout::Bool | Layout::Str => {
+                match &cols[*idx] {
+                    Column::I64(c) => {
+                        h.write_u8(2);
+                        h.write(&c[row].to_le_bytes());
+                    }
+                    Column::F64(c) => {
+                        h.write_u8(3);
+                        h.write(&c[row].to_bits().to_le_bytes());
+                    }
+                    Column::Bool(c) => {
+                        h.write_u8(1);
+                        h.write_u8(c[row] as u8);
+                    }
+                    Column::Str(c) => {
+                        h.write_u8(4);
+                        h.write(c[row].as_bytes());
+                    }
+                }
+                *idx += 1;
+            }
+            Layout::Pair(a, b) => {
+                h.write_u8(5);
+                a.hash_row_inner(cols, idx, row, h);
+                b.hash_row_inner(cols, idx, row, h);
+            }
+            Layout::Triple(a, b, c) => {
+                h.write_u8(6);
+                a.hash_row_inner(cols, idx, row, h);
+                b.hash_row_inner(cols, idx, row, h);
+                c.hash_row_inner(cols, idx, row, h);
+            }
+        }
+    }
+
+    /// Appends the canonical wire encoding of row `row` to `out` —
+    /// byte-for-byte what [`Value::encode_into`] would write for the
+    /// materialized row.
+    pub fn encode_row(&self, cols: &[Column], row: usize, out: &mut Vec<u8>) {
+        let mut idx = 0;
+        self.encode_row_inner(cols, &mut idx, row, out);
+    }
+
+    fn encode_row_inner(&self, cols: &[Column], idx: &mut usize, row: usize, out: &mut Vec<u8>) {
+        // tags mirror Value::encode_into: Str carries a varint length,
+        // a Triple is a List with a varint count of 3
+        match self {
+            Layout::I64 | Layout::F64 | Layout::Bool | Layout::Str => {
+                match &cols[*idx] {
+                    Column::I64(c) => {
+                        out.push(2);
+                        out.extend_from_slice(&c[row].to_le_bytes());
+                    }
+                    Column::F64(c) => {
+                        out.push(3);
+                        out.extend_from_slice(&c[row].to_bits().to_le_bytes());
+                    }
+                    Column::Bool(c) => {
+                        out.push(1);
+                        out.push(c[row] as u8);
+                    }
+                    Column::Str(c) => {
+                        out.push(4);
+                        write_varint(out, c[row].len() as u64);
+                        out.extend_from_slice(c[row].as_bytes());
+                    }
+                }
+                *idx += 1;
+            }
+            Layout::Pair(a, b) => {
+                out.push(5);
+                a.encode_row_inner(cols, idx, row, out);
+                b.encode_row_inner(cols, idx, row, out);
+            }
+            Layout::Triple(a, b, c) => {
+                out.push(6);
+                write_varint(out, 3);
+                a.encode_row_inner(cols, idx, row, out);
+                b.encode_row_inner(cols, idx, row, out);
+                c.encode_row_inner(cols, idx, row, out);
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+struct ColumnInner {
+    layout: Layout,
+    cols: Vec<Column>,
+    len: usize,
+    /// Optional per-row routing-hash column, aligned with the rows (the
+    /// generalized computed column: the columnar `key_by` fills it with
+    /// the key's [`Value::stable_hash`] so hash shuffles read one `u64`
+    /// per row). Local-only, like [`Batch::key_hashes`].
+    key_hashes: Option<Vec<u64>>,
+    /// Lazily computed row-wise wire encoding
+    /// ([`encode_batch`](crate::value::encode_batch) framing).
+    wire: OnceLock<Arc<[u8]>>,
+}
+
+/// A reference-counted typed columnar batch — the struct-of-arrays twin
+/// of the row [`Batch`].
+///
+/// Holds one native [`Column`] per leaf of its [`Layout`], all of equal
+/// length, plus an optional computed routing-hash column
+/// ([`ColumnBatch::key_hashes`]). Cloning bumps a refcount (broadcast
+/// fan-out shares one allocation); the wire encoding is computed lazily,
+/// once, in exactly the row [`encode_batch`](crate::value::encode_batch)
+/// frame format — so at a process/queue boundary a columnar batch is
+/// indistinguishable from a row batch, and the receiving side decodes
+/// rows as usual.
+///
+/// Produced by typed columnar sources and the monomorphized operators in
+/// `runtime::col_exec`; anything that needs the dynamic representation
+/// materializes rows with [`ColumnBatch::to_batch`] (the `Value`
+/// fallback path).
+#[derive(Debug, Clone)]
+pub struct ColumnBatch {
+    inner: Arc<ColumnInner>,
+}
+
+impl ColumnBatch {
+    /// Wraps `cols` (one per leaf of `layout`, all the same length) as a
+    /// batch.
+    pub fn new(layout: Layout, cols: Vec<Column>) -> ColumnBatch {
+        Self::build(layout, cols, None)
+    }
+
+    /// [`ColumnBatch::new`] with a computed routing-hash column;
+    /// `hashes[i]` must be the routing hash of row `i` (lengths must
+    /// match or the column is discarded and counted, mirroring
+    /// [`Batch::with_hashes`]).
+    pub fn with_hashes(layout: Layout, cols: Vec<Column>, hashes: Vec<u64>) -> ColumnBatch {
+        Self::build(layout, cols, Some(hashes))
+    }
+
+    fn build(layout: Layout, cols: Vec<Column>, hashes: Option<Vec<u64>>) -> ColumnBatch {
+        debug_assert_eq!(cols.len(), layout.leaf_count(), "one column per leaf");
+        let len = cols.first().map_or(0, Column::len);
+        debug_assert!(
+            cols.iter().all(|c| c.len() == len),
+            "ragged columns in a batch"
+        );
+        let key_hashes = match hashes {
+            Some(hs) if hs.len() == len => Some(hs),
+            Some(hs) => {
+                crate::value::note_hash_column_mismatch();
+                debug_assert_eq!(hs.len(), len, "hash column misaligned with rows");
+                None
+            }
+            None => None,
+        };
+        ColumnBatch {
+            inner: Arc::new(ColumnInner {
+                layout,
+                cols,
+                len,
+                key_hashes,
+                wire: OnceLock::new(),
+            }),
+        }
+    }
+
+    /// The batch's layout.
+    pub fn layout(&self) -> &Layout {
+        &self.inner.layout
+    }
+
+    /// The flattened leaf columns.
+    pub fn columns(&self) -> &[Column] {
+        &self.inner.cols
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.inner.len
+    }
+
+    /// True when the batch holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.inner.len == 0
+    }
+
+    /// The computed routing-hash column, if attached.
+    pub fn key_hashes(&self) -> Option<&[u64]> {
+        self.inner.key_hashes.as_deref()
+    }
+
+    /// True when `a` and `b` share one allocation (zero-copy fan-out
+    /// instrumentation).
+    pub fn ptr_eq(a: &ColumnBatch, b: &ColumnBatch) -> bool {
+        Arc::ptr_eq(&a.inner, &b.inner)
+    }
+
+    /// Materializes row `i` as a dynamic [`Value`].
+    pub fn row(&self, i: usize) -> Value {
+        self.inner.layout.read_value(&self.inner.cols, i)
+    }
+
+    /// Materializes every row into a dynamic [`Batch`], carrying the
+    /// routing-hash column over — the `Value` fallback path.
+    pub fn to_batch(&self) -> Batch {
+        let values: Vec<Value> = (0..self.inner.len).map(|i| self.row(i)).collect();
+        match &self.inner.key_hashes {
+            Some(hs) => Batch::with_hashes(values, hs.clone()),
+            None => Batch::new(values),
+        }
+    }
+
+    /// The wire encoding — the row-wise
+    /// [`encode_batch`](crate::value::encode_batch) frame (varint row
+    /// count, then each row's canonical encoding) — computed once and
+    /// cached for every clone.
+    pub fn wire(&self) -> Arc<[u8]> {
+        self.wire_with(|| {})
+    }
+
+    /// [`ColumnBatch::wire`] with an `on_encode` hook running inside the
+    /// one-time initializer (exact encode accounting, like
+    /// [`Batch::wire_with`]).
+    pub fn wire_with(&self, on_encode: impl FnOnce()) -> Arc<[u8]> {
+        self.inner
+            .wire
+            .get_or_init(|| {
+                on_encode();
+                let mut out = Vec::with_capacity(8 + self.inner.len * 10);
+                write_varint(&mut out, self.inner.len as u64);
+                for row in 0..self.inner.len {
+                    self.inner.layout.encode_row(&self.inner.cols, row, &mut out);
+                }
+                Arc::from(out)
+            })
+            .clone()
+    }
+
+    /// The cached wire encoding, if one has been computed.
+    pub fn wire_cached(&self) -> Option<Arc<[u8]>> {
+        self.inner.wire.get().cloned()
+    }
+}
+
+/// A mutable columnar accumulation buffer: rows are appended from an
+/// existing batch's columns (the hash shuffle partitioning a batch
+/// across targets) and taken out as finished [`ColumnBatch`]es.
+#[derive(Debug)]
+pub struct ColumnBuffer {
+    layout: Layout,
+    cols: Vec<Column>,
+    hashes: Vec<u64>,
+    len: usize,
+}
+
+impl ColumnBuffer {
+    /// Creates an empty buffer for `layout`.
+    pub fn new(layout: Layout) -> ColumnBuffer {
+        let cols = layout.new_columns(0);
+        ColumnBuffer {
+            layout,
+            cols,
+            hashes: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// The buffer's layout.
+    pub fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// Number of buffered rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Appends row `row` of `src` (columns of the same layout), with its
+    /// routing hash.
+    pub fn push_row_from(&mut self, src: &[Column], row: usize, hash: u64) {
+        for (dst, s) in self.cols.iter_mut().zip(src) {
+            dst.push_from(s, row);
+        }
+        self.hashes.push(hash);
+        self.len += 1;
+    }
+
+    /// Takes the buffered rows as a [`ColumnBatch`], leaving the buffer
+    /// empty (fresh columns of the same layout).
+    pub fn take(&mut self) -> ColumnBatch {
+        let cols = std::mem::replace(&mut self.cols, self.layout.new_columns(0));
+        let hashes = std::mem::take(&mut self.hashes);
+        self.len = 0;
+        ColumnBatch::with_hashes(self.layout.clone(), cols, hashes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::value::{encode_batch, StreamData};
+
+    fn batch_of<T: StreamData>(items: Vec<T>) -> ColumnBatch {
+        let layout = T::layout().expect("columnar type");
+        let mut cols = layout.new_columns(items.len());
+        for x in items {
+            x.append_columns(&mut cols);
+        }
+        ColumnBatch::new(layout, cols)
+    }
+
+    #[test]
+    fn scalar_roundtrip_through_columns() {
+        let cb = batch_of(vec![1i64, -5, i64::MAX]);
+        assert_eq!(cb.len(), 3);
+        assert_eq!(cb.row(0), Value::I64(1));
+        assert_eq!(cb.row(2), Value::I64(i64::MAX));
+        assert_eq!(i64::read_columns(cb.columns(), 1), -5);
+    }
+
+    #[test]
+    fn tuple_layouts_flatten_and_nest_back() {
+        let cb = batch_of(vec![(7i64, ("k".to_string(), true))]);
+        assert_eq!(cb.columns().len(), 3, "three flattened leaves");
+        assert_eq!(
+            cb.row(0),
+            Value::pair(
+                Value::I64(7),
+                Value::pair(Value::Str("k".into()), Value::Bool(true))
+            )
+        );
+        assert_eq!(
+            <(i64, (String, bool))>::read_columns(cb.columns(), 0),
+            (7, ("k".to_string(), true))
+        );
+    }
+
+    #[test]
+    fn triple_maps_to_three_element_list() {
+        let cb = batch_of(vec![(1i64, 2.5f64, false)]);
+        assert_eq!(
+            cb.row(0),
+            Value::List(vec![Value::I64(1), Value::F64(2.5), Value::Bool(false)])
+        );
+    }
+
+    #[test]
+    fn hash_row_matches_stable_hash_of_materialized_row() {
+        let items = vec![
+            (0i64, "alpha".to_string()),
+            (-42, "".to_string()),
+            (7, "βeta".to_string()),
+        ];
+        let cb = batch_of(items);
+        for row in 0..cb.len() {
+            assert_eq!(
+                cb.layout().hash_row(cb.columns(), row),
+                cb.row(row).stable_hash(),
+                "row {row}"
+            );
+        }
+    }
+
+    #[test]
+    fn encode_row_matches_value_encoding() {
+        let cb = batch_of(vec![(1i64, 2.5f64, true), (-9, f64::NEG_INFINITY, false)]);
+        for row in 0..cb.len() {
+            let mut got = Vec::new();
+            cb.layout().encode_row(cb.columns(), row, &mut got);
+            assert_eq!(got, cb.row(row).encode(), "row {row}");
+        }
+    }
+
+    #[test]
+    fn wire_is_identical_to_row_batch_encoding() {
+        let cb = batch_of(vec![("x".to_string(), 1i64), ("yz".to_string(), 2)]);
+        let rows: Vec<Value> = (0..cb.len()).map(|i| cb.row(i)).collect();
+        assert_eq!(cb.wire().as_ref(), encode_batch(&rows).as_slice());
+        // encode-once: clones share the cache
+        let twin = cb.clone();
+        assert!(Arc::ptr_eq(&cb.wire(), &twin.wire()));
+    }
+
+    #[test]
+    fn empty_batch_wire_and_materialization() {
+        let cb = batch_of(Vec::<i64>::new());
+        assert!(cb.is_empty());
+        assert_eq!(cb.to_batch().len(), 0);
+        assert_eq!(cb.wire().as_ref(), encode_batch(&[]).as_slice());
+    }
+
+    #[test]
+    fn to_batch_carries_the_hash_column() {
+        let layout = Layout::I64;
+        let mut cols = layout.new_columns(2);
+        3i64.append_columns(&mut cols);
+        4i64.append_columns(&mut cols);
+        let hashes = vec![Value::I64(3).stable_hash(), Value::I64(4).stable_hash()];
+        let cb = ColumnBatch::with_hashes(layout, cols, hashes.clone());
+        assert_eq!(cb.key_hashes(), Some(hashes.as_slice()));
+        assert_eq!(cb.to_batch().key_hashes(), Some(hashes.as_slice()));
+    }
+
+    #[test]
+    fn column_buffer_partitions_and_resets() {
+        let src = batch_of(vec![(1i64, 10i64), (2, 20), (3, 30)]);
+        let mut buf = ColumnBuffer::new(src.layout().clone());
+        for row in [0usize, 2] {
+            buf.push_row_from(src.columns(), row, src.layout().hash_row(src.columns(), row));
+        }
+        assert_eq!(buf.len(), 2);
+        let taken = buf.take();
+        assert!(buf.is_empty());
+        assert_eq!(taken.len(), 2);
+        assert_eq!(taken.row(1), src.row(2));
+        assert_eq!(
+            taken.key_hashes().unwrap()[1],
+            src.layout().hash_row(src.columns(), 2)
+        );
+    }
+
+    #[test]
+    fn clone_shares_the_allocation() {
+        let cb = batch_of(vec![1i64, 2]);
+        let twin = cb.clone();
+        assert!(ColumnBatch::ptr_eq(&cb, &twin));
+    }
+}

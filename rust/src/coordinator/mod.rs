@@ -52,6 +52,11 @@ pub struct JobConfig {
     /// Maximum records a queue consumer drains from one partition per
     /// poll (bounds per-wakeup work and commit granularity).
     pub poll_max_records: usize,
+    /// Lower typed (`api::typed`) chains onto the columnar data plane
+    /// where their types allow it (monomorphized column operators, no
+    /// per-record `Value` allocation). Off ⇒ every typed chain lowers to
+    /// the classic `Value` pipeline; results are identical either way.
+    pub columnar: bool,
 }
 
 impl Default for JobConfig {
@@ -65,6 +70,7 @@ impl Default for JobConfig {
             queue_dir: None,
             poll_timeout: Duration::from_millis(50),
             poll_max_records: 64,
+            columnar: true,
         }
     }
 }
@@ -1224,6 +1230,12 @@ fn ingest_loop(topic: Arc<Topic>, partition: usize, rx: Receiver<Msg>, expected:
             Ok(Msg::Batch(batch)) => {
                 let _ = part.append_batch(&batch);
             }
+            Ok(Msg::Columns(cb)) => {
+                // decoupled edges deliver frames (OutPort encodes before a
+                // framed target), so this is defensive — the columnar wire
+                // bytes are the same row-format frame either way
+                let _ = part.append_shared(cb.wire());
+            }
             Ok(Msg::Epoch(_)) => {
                 // a producer quiesced for a dynamic update; its replacement
                 // inherits the registration — downstream units observe a
@@ -1278,6 +1290,9 @@ pub fn build_stage_ops(
                 ops.push(Box::new(FoldExec::new(init.clone(), step.clone())))
             }
             OpKind::Reduce { f } => ops.push(Box::new(ReduceExec::new(f.clone()))),
+            // monomorphized columnar executor built by the typed layer's
+            // captured factory (closes over the concrete types)
+            OpKind::Columnar(c) => ops.push((c.factory)()),
             // merge happens in the channel wiring feeding this stage
             OpKind::Union => {}
             OpKind::Window { size, slide, agg } => {

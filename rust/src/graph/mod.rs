@@ -48,6 +48,13 @@ pub type FoldFn = Arc<dyn Fn(&mut Value, Value) + Send + Sync>;
 pub type ReduceFn = Arc<dyn Fn(&Value, &Value) -> Value + Send + Sync>;
 /// Synthetic event generator: `(instance_index, event_index) -> event`.
 pub type GenFn = Arc<dyn Fn(u64, u64) -> Value + Send + Sync>;
+/// Synthetic columnar generator: `(instance_index, global_index_range) ->
+/// one column batch covering the range`.
+pub type ColGenFn =
+    Arc<dyn Fn(u64, std::ops::Range<u64>) -> crate::columnar::ColumnBatch + Send + Sync>;
+/// Factory building a fresh monomorphized columnar executor per stage
+/// instance (each instance owns its state, so executors cannot be shared).
+pub type ColumnOpFactory = Arc<dyn Fn() -> Box<dyn crate::runtime::OpExec> + Send + Sync>;
 /// Custom window aggregate over the buffered payloads.
 pub type WindowFn = Arc<dyn Fn(&[Value]) -> Value + Send + Sync>;
 
@@ -141,6 +148,17 @@ pub enum SourceKind {
     /// Lines of a text file as `Value::Str`, split across instances by
     /// line index modulo instance count.
     FileLines(std::path::PathBuf),
+    /// Synthetic generator that emits ready-made [`crate::columnar::ColumnBatch`]es:
+    /// the typed layer's columnar lowering of [`SourceKind::Synthetic`].
+    /// Splits `total` events evenly across instances like `Synthetic`.
+    SyntheticColumns {
+        /// Total events across all instances.
+        total: u64,
+        /// Column-batch generator closure.
+        gen: ColGenFn,
+        /// Optional per-instance rate limit (events/second).
+        rate: Option<f64>,
+    },
 }
 
 impl std::fmt::Debug for SourceKind {
@@ -151,6 +169,9 @@ impl std::fmt::Debug for SourceKind {
             }
             SourceKind::Vector(v) => write!(f, "Vector(len={})", v.len()),
             SourceKind::FileLines(p) => write!(f, "FileLines({})", p.display()),
+            SourceKind::SyntheticColumns { total, rate, .. } => {
+                write!(f, "SyntheticColumns(total={total}, rate={rate:?})")
+            }
         }
     }
 }
@@ -227,8 +248,29 @@ pub enum OpKind {
     /// Merge point of two or more streams (pass-through; the merge itself
     /// happens in the channel wiring feeding this operator's stage).
     Union,
+    /// A monomorphized columnar operator emitted by the typed layer: the
+    /// factory builds one fresh executor per stage instance. Key-extracting
+    /// columnar operators (`keys: true`) route and break stages exactly
+    /// like [`OpKind::KeyBy`].
+    Columnar(ColumnarOp),
     /// Terminal sink (a DAG leaf; has no consumers).
     Sink(SinkKind),
+}
+
+/// A typed columnar operator carried opaquely through the logical graph.
+/// The closure inside `factory` captures the monomorphized executor type;
+/// the graph layer only needs the routing/fusion metadata alongside it.
+#[derive(Clone)]
+pub struct ColumnarOp {
+    /// Builds a fresh executor (state included) for one stage instance.
+    pub factory: ColumnOpFactory,
+    /// True for key extraction: the outgoing edge is hash-partitioned and
+    /// the stage breaks after this operator.
+    pub keys: bool,
+    /// True for keyed state holders (fold/reduce/window).
+    pub stateful: bool,
+    /// Operator kind label for Debug/describe output.
+    pub label: &'static str,
 }
 
 impl std::fmt::Debug for OpKind {
@@ -250,6 +292,7 @@ impl std::fmt::Debug for OpKind {
                 artifact, batch, ..
             } => write!(f, "XlaMap({artifact}, batch={batch})"),
             OpKind::Union => write!(f, "Union"),
+            OpKind::Columnar(c) => write!(f, "Columnar({})", c.label),
             OpKind::Sink(s) => write!(f, "Sink({s:?})"),
         }
     }
@@ -258,10 +301,21 @@ impl std::fmt::Debug for OpKind {
 impl OpKind {
     /// Whether this operator holds keyed/windowed state.
     pub fn is_stateful(&self) -> bool {
-        matches!(
-            self,
-            OpKind::Fold { .. } | OpKind::Reduce { .. } | OpKind::Window { .. }
-        )
+        match self {
+            OpKind::Fold { .. } | OpKind::Reduce { .. } | OpKind::Window { .. } => true,
+            OpKind::Columnar(c) => c.stateful,
+            _ => false,
+        }
+    }
+
+    /// Whether the operator extracts keys, hash-partitioning its outgoing
+    /// edge and breaking the stage after itself.
+    pub fn is_key_extractor(&self) -> bool {
+        match self {
+            OpKind::KeyBy(_) | OpKind::KeyByFused(_) => true,
+            OpKind::Columnar(c) => c.keys,
+            _ => false,
+        }
     }
 }
 
@@ -566,10 +620,8 @@ impl LogicalGraph {
                 let prev = &self.ops[p];
                 prev.unit == op.unit
                     && consumers[p] == 1
-                    && !matches!(
-                        prev.kind,
-                        OpKind::Source(_) | OpKind::KeyBy(_) | OpKind::KeyByFused(_)
-                    )
+                    && !matches!(prev.kind, OpKind::Source(_))
+                    && !prev.kind.is_key_extractor()
             } else {
                 false
             };
@@ -619,7 +671,7 @@ impl LogicalGraph {
     /// the stage ends with `KeyBy`.
     pub fn edge_routing(&self, stage: &Stage) -> crate::channels::Routing {
         let last = &self.ops[*stage.ops.last().unwrap()];
-        if matches!(last.kind, OpKind::KeyBy(_) | OpKind::KeyByFused(_)) {
+        if last.kind.is_key_extractor() {
             crate::channels::Routing::Hash
         } else {
             crate::channels::Routing::RoundRobin

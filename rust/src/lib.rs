@@ -68,6 +68,7 @@
 
 pub mod api;
 pub mod channels;
+pub mod columnar;
 pub mod config;
 pub mod coordinator;
 pub mod error;
@@ -98,5 +99,6 @@ pub mod prelude {
     pub use crate::graph::{LogicalGraph, UnitDef};
     pub use crate::netsim::LinkSpec;
     pub use crate::topology::{Capabilities, ConstraintExpr, LayerId, LocationId, ZoneId};
-    pub use crate::value::{Batch, Value};
+    pub use crate::columnar::ColumnBatch;
+    pub use crate::value::{Batch, BatchData, Value};
 }

@@ -1,0 +1,889 @@
+//! Monomorphized columnar executors: the typed fast path of the
+//! operator runtime.
+//!
+//! Each executor here is the columnar twin of one `Value` executor in
+//! [`exec`](super::exec), generic over the concrete `StreamData` types
+//! the typed API chain was built with. [`OpExec::process_columns`]
+//! iterates native column slices directly — no per-record `Value`
+//! allocation, no enum-tag dispatch in the loop body — and produces
+//! either a new [`ColumnBatch`] (the chain stays columnar) or `Value`
+//! rows (aggregates without a static layout).
+//!
+//! Every executor also implements the row-path [`OpExec::process`] with
+//! the same semantics as the typed layer's `Value` lowering (decode
+//! failures are recorded on the shared [`DecodeErrors`] accumulator and
+//! the event is dropped), so a columnar operator that receives a row
+//! batch — a mixed chain, a replayed queue segment, a restored
+//! snapshot — behaves identically to the classic pipeline. A columnar
+//! batch whose [`Layout`] is not the one the executor was compiled for
+//! is handed back as [`ColumnFlow::Fallback`] and the chain continues on
+//! materialized rows: never wrong, merely slower.
+//!
+//! Keyed state (`fold`/`reduce`/`window`) is keyed by the canonical
+//! encoded key bytes — [`Layout::encode_row`] over the key sub-columns
+//! produces exactly [`Value::encode_into`] of the materialized key — so
+//! state maps, flush order, and snapshot/restore payloads are
+//! byte-compatible with the `Value` executors; a dynamic update may hand
+//! state across the representation boundary in either direction.
+
+use super::exec::{ChainInput, ColumnFlow, FnvMap, OpExec, WindowExec};
+use crate::api::data::DecodeErrors;
+use crate::columnar::{ColumnBatch, Layout};
+use crate::graph::WindowAgg;
+use crate::value::{StreamData, Value};
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+/// Decodes a dynamic value on the row path, recording (and dropping)
+/// mismatches exactly like the typed layer's `Value` lowering shims.
+fn decode<T: StreamData>(errs: &DecodeErrors, op: &'static str, v: Value) -> Option<T> {
+    match T::try_from_value(v) {
+        Ok(t) => Some(t),
+        Err(e) => {
+            errs.record(op, &e);
+            None
+        }
+    }
+}
+
+/// Typed `map`: `T -> U` over native columns.
+pub struct ColumnMapExec<T: StreamData, U: StreamData> {
+    f: Arc<dyn Fn(T) -> U + Send + Sync>,
+    errs: Arc<DecodeErrors>,
+    in_layout: Layout,
+    out_layout: Layout,
+}
+
+impl<T: StreamData, U: StreamData> ColumnMapExec<T, U> {
+    /// Creates the executor; both `T` and `U` must be columnar types.
+    pub fn new(f: Arc<dyn Fn(T) -> U + Send + Sync>, errs: Arc<DecodeErrors>) -> Self {
+        ColumnMapExec {
+            f,
+            errs,
+            in_layout: T::layout().expect("columnar map input"),
+            out_layout: U::layout().expect("columnar map output"),
+        }
+    }
+}
+
+impl<T: StreamData, U: StreamData> OpExec for ColumnMapExec<T, U> {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
+            if let Some(t) = decode::<T>(&self.errs, "map", v) {
+                out.push((self.f)(t).into_value());
+            }
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.in_layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let cols = input.columns();
+        let mut out = self.out_layout.new_columns(input.len());
+        for row in 0..input.len() {
+            (self.f)(T::read_columns(cols, row)).append_columns(&mut out);
+        }
+        ColumnFlow::Columns(ColumnBatch::new(self.out_layout.clone(), out))
+    }
+}
+
+/// Typed `filter`: kept rows are copied column-wise; an attached
+/// routing-hash column survives (rows are unchanged, so their hashes
+/// stay valid).
+pub struct ColumnFilterExec<T: StreamData> {
+    f: Arc<dyn Fn(&T) -> bool + Send + Sync>,
+    errs: Arc<DecodeErrors>,
+    layout: Layout,
+}
+
+impl<T: StreamData> ColumnFilterExec<T> {
+    /// Creates the executor; `T` must be a columnar type.
+    pub fn new(f: Arc<dyn Fn(&T) -> bool + Send + Sync>, errs: Arc<DecodeErrors>) -> Self {
+        ColumnFilterExec {
+            f,
+            errs,
+            layout: T::layout().expect("columnar filter input"),
+        }
+    }
+}
+
+impl<T: StreamData> OpExec for ColumnFilterExec<T> {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
+            if let Some(t) = decode::<T>(&self.errs, "filter", v) {
+                if (self.f)(&t) {
+                    out.push(t.into_value());
+                }
+            }
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let cols = input.columns();
+        let src_hashes = input.key_hashes();
+        let mut out = self.layout.new_columns(input.len());
+        let mut kept = src_hashes.map(|_| Vec::new());
+        for row in 0..input.len() {
+            if (self.f)(&T::read_columns(cols, row)) {
+                for (dst, src) in out.iter_mut().zip(cols) {
+                    dst.push_from(src, row);
+                }
+                if let (Some(kept), Some(hs)) = (kept.as_mut(), src_hashes) {
+                    kept.push(hs[row]);
+                }
+            }
+        }
+        let cb = match kept {
+            Some(hs) => ColumnBatch::with_hashes(self.layout.clone(), out, hs),
+            None => ColumnBatch::new(self.layout.clone(), out),
+        };
+        ColumnFlow::Columns(cb)
+    }
+}
+
+/// Typed `filter_map`: `T -> Option<U>` in one columnar pass.
+pub struct ColumnFilterMapExec<T: StreamData, U: StreamData> {
+    f: Arc<dyn Fn(T) -> Option<U> + Send + Sync>,
+    errs: Arc<DecodeErrors>,
+    in_layout: Layout,
+    out_layout: Layout,
+}
+
+impl<T: StreamData, U: StreamData> ColumnFilterMapExec<T, U> {
+    /// Creates the executor; both `T` and `U` must be columnar types.
+    pub fn new(f: Arc<dyn Fn(T) -> Option<U> + Send + Sync>, errs: Arc<DecodeErrors>) -> Self {
+        ColumnFilterMapExec {
+            f,
+            errs,
+            in_layout: T::layout().expect("columnar filter_map input"),
+            out_layout: U::layout().expect("columnar filter_map output"),
+        }
+    }
+}
+
+impl<T: StreamData, U: StreamData> OpExec for ColumnFilterMapExec<T, U> {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
+            if let Some(t) = decode::<T>(&self.errs, "filter_map", v) {
+                if let Some(u) = (self.f)(t) {
+                    out.push(u.into_value());
+                }
+            }
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.in_layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let cols = input.columns();
+        let mut out = self.out_layout.new_columns(input.len());
+        for row in 0..input.len() {
+            if let Some(u) = (self.f)(T::read_columns(cols, row)) {
+                u.append_columns(&mut out);
+            }
+        }
+        ColumnFlow::Columns(ColumnBatch::new(self.out_layout.clone(), out))
+    }
+}
+
+/// Typed `key_by`: emits the keyed `Pair(K, T)` layout and fills the
+/// computed routing-hash column ([`ColumnBatch::key_hashes`]) with the
+/// key's [`Value::stable_hash`] — downstream hash shuffles read one
+/// `u64` per row instead of re-walking the record.
+pub struct ColumnKeyByExec<T: StreamData, K: StreamData> {
+    f: Arc<dyn Fn(&T) -> K + Send + Sync>,
+    errs: Arc<DecodeErrors>,
+    in_layout: Layout,
+    out_layout: Layout,
+    key_layout: Layout,
+    key_leaves: usize,
+}
+
+impl<T: StreamData, K: StreamData> ColumnKeyByExec<T, K> {
+    /// Creates the executor; both `T` and `K` must be columnar types.
+    pub fn new(f: Arc<dyn Fn(&T) -> K + Send + Sync>, errs: Arc<DecodeErrors>) -> Self {
+        let key_layout = K::layout().expect("columnar key type");
+        let in_layout = T::layout().expect("columnar key_by input");
+        ColumnKeyByExec {
+            f,
+            errs,
+            out_layout: Layout::pair(key_layout.clone(), in_layout.clone()),
+            in_layout,
+            key_layout,
+            key_leaves: K::column_count(),
+        }
+    }
+}
+
+impl<T: StreamData, K: StreamData> OpExec for ColumnKeyByExec<T, K> {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
+            if let Some(t) = decode::<T>(&self.errs, "key_by", v) {
+                let k = (self.f)(&t);
+                out.push(Value::pair(k.into_value(), t.into_value()));
+            }
+        }
+    }
+
+    fn process_hashed(
+        &mut self,
+        input: ChainInput<'_>,
+        out: &mut Vec<Value>,
+        hashes: &mut Vec<u64>,
+    ) {
+        for v in input.drain() {
+            if let Some(t) = decode::<T>(&self.errs, "key_by", v) {
+                let kv = (self.f)(&t).into_value();
+                hashes.push(kv.stable_hash());
+                out.push(Value::pair(kv, t.into_value()));
+            }
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.in_layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let cols = input.columns();
+        let n = input.len();
+        let kc = self.key_leaves;
+        let mut out = self.out_layout.new_columns(n);
+        let mut hashes = Vec::with_capacity(n);
+        for row in 0..n {
+            let t = T::read_columns(cols, row);
+            let k = (self.f)(&t);
+            k.append_columns(&mut out[..kc]);
+            t.append_columns(&mut out[kc..]);
+            hashes.push(self.key_layout.hash_row(&out[..kc], row));
+        }
+        ColumnFlow::Columns(ColumnBatch::with_hashes(self.out_layout.clone(), out, hashes))
+    }
+}
+
+/// Typed keyed `fold`: a native `A` accumulator per key, stepped without
+/// any per-event `Value` round-trip on the columnar path. State and
+/// snapshot format are byte-compatible with
+/// [`FoldExec`](super::exec::FoldExec).
+pub struct ColumnFoldExec<K: StreamData, V: StreamData, A: StreamData> {
+    init: Value,
+    step: Arc<dyn Fn(&mut A, V) + Send + Sync>,
+    errs: Arc<DecodeErrors>,
+    in_layout: Layout,
+    key_layout: Layout,
+    key_leaves: usize,
+    /// encoded key → (key, accumulator).
+    state: FnvMap<(Value, A)>,
+    scratch: Vec<u8>,
+    _k: PhantomData<K>,
+}
+
+impl<K: StreamData, V: StreamData, A: StreamData> ColumnFoldExec<K, V, A> {
+    /// Creates the executor; `K` and `V` must be columnar types.
+    pub fn new(init: A, step: Arc<dyn Fn(&mut A, V) + Send + Sync>, errs: Arc<DecodeErrors>) -> Self {
+        Self::from_init_value(init.into_value(), step, errs)
+    }
+
+    /// Like [`ColumnFoldExec::new`], but takes the initial accumulator
+    /// already lowered to a `Value` — the typed layer's operator factory
+    /// is called once per stage instance, so it holds the init in the
+    /// clonable `Value` form rather than requiring `A: Clone`.
+    pub fn from_init_value(
+        init: Value,
+        step: Arc<dyn Fn(&mut A, V) + Send + Sync>,
+        errs: Arc<DecodeErrors>,
+    ) -> Self {
+        let key_layout = K::layout().expect("columnar fold key");
+        let value_layout = V::layout().expect("columnar fold input");
+        ColumnFoldExec {
+            init,
+            step,
+            errs,
+            in_layout: Layout::pair(key_layout.clone(), value_layout),
+            key_layout,
+            key_leaves: K::column_count(),
+            state: FnvMap::default(),
+            scratch: Vec::with_capacity(32),
+            _k: PhantomData,
+        }
+    }
+
+    fn fold_in(&mut self, key_value: impl FnOnce() -> Value, payload: V) {
+        match self.state.get_mut(self.scratch.as_slice()) {
+            Some(entry) => (self.step)(&mut entry.1, payload),
+            None => {
+                let mut acc = match A::try_from_value(self.init.clone()) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        self.errs.record("fold", &e);
+                        return;
+                    }
+                };
+                (self.step)(&mut acc, payload);
+                self.state.insert(self.scratch.clone(), (key_value(), acc));
+            }
+        }
+    }
+}
+
+impl<K: StreamData, V: StreamData, A: StreamData> OpExec for ColumnFoldExec<K, V, A> {
+    fn process(&mut self, input: ChainInput<'_>, _out: &mut Vec<Value>) {
+        for v in input.drain() {
+            let (key, payload) = match v {
+                Value::Pair(kp) => (kp.0, kp.1),
+                other => (Value::Null, other),
+            };
+            let Some(pv) = decode::<V>(&self.errs, "fold", payload) else {
+                continue;
+            };
+            self.scratch.clear();
+            key.encode_into(&mut self.scratch);
+            self.fold_in(|| key, pv);
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.in_layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let kc = self.key_leaves;
+        for row in 0..input.len() {
+            let cols = input.columns();
+            let payload = V::read_columns(&cols[kc..], row);
+            self.scratch.clear();
+            self.key_layout.encode_row(&cols[..kc], row, &mut self.scratch);
+            let key_layout = &self.key_layout;
+            match self.state.get_mut(self.scratch.as_slice()) {
+                Some(entry) => (self.step)(&mut entry.1, payload),
+                None => {
+                    let mut acc = match A::try_from_value(self.init.clone()) {
+                        Ok(a) => a,
+                        Err(e) => {
+                            self.errs.record("fold", &e);
+                            continue;
+                        }
+                    };
+                    (self.step)(&mut acc, payload);
+                    let key = key_layout.read_value(&cols[..kc], row);
+                    self.state.insert(self.scratch.clone(), (key, acc));
+                }
+            }
+        }
+        ColumnFlow::Rows(Vec::new())
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        // deterministic emission order despite the hash map
+        let mut entries: Vec<(Vec<u8>, (Value, A))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, (key, acc)) in entries {
+            out.push(Value::pair(key, acc.into_value()));
+        }
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.state.is_empty() {
+            return None;
+        }
+        let mut entries: Vec<(Vec<u8>, (Value, A))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        Some(Value::List(
+            entries
+                .into_iter()
+                .map(|(_, (key, acc))| Value::pair(key, acc.into_value()))
+                .collect(),
+        ))
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((key, acc)) = e.into_pair() else { continue };
+            let Some(acc) = decode::<A>(&self.errs, "fold", acc) else {
+                continue;
+            };
+            self.scratch.clear();
+            key.encode_into(&mut self.scratch);
+            // a key restored twice keeps the first accumulator, matching
+            // FoldExec: fold partials are not mergeable
+            if !self.state.contains_key(self.scratch.as_slice()) {
+                self.state.insert(self.scratch.clone(), (key, acc));
+            }
+        }
+    }
+}
+
+/// Typed keyed `reduce`: native `V` accumulators with an explicit empty
+/// state, byte-compatible with [`ReduceExec`](super::exec::ReduceExec).
+pub struct ColumnReduceExec<K: StreamData, V: StreamData> {
+    f: Arc<dyn Fn(&V, &V) -> V + Send + Sync>,
+    errs: Arc<DecodeErrors>,
+    in_layout: Layout,
+    key_layout: Layout,
+    key_leaves: usize,
+    /// encoded key → (key, accumulator-if-any).
+    state: FnvMap<(Value, Option<V>)>,
+    scratch: Vec<u8>,
+    _k: PhantomData<K>,
+}
+
+impl<K: StreamData, V: StreamData> ColumnReduceExec<K, V> {
+    /// Creates the executor; `K` and `V` must be columnar types.
+    pub fn new(f: Arc<dyn Fn(&V, &V) -> V + Send + Sync>, errs: Arc<DecodeErrors>) -> Self {
+        let key_layout = K::layout().expect("columnar reduce key");
+        let value_layout = V::layout().expect("columnar reduce input");
+        ColumnReduceExec {
+            f,
+            errs,
+            in_layout: Layout::pair(key_layout.clone(), value_layout),
+            key_layout,
+            key_leaves: K::column_count(),
+            state: FnvMap::default(),
+            scratch: Vec::with_capacity(32),
+            _k: PhantomData,
+        }
+    }
+
+    /// Merges `payload` into the state slot keyed by `self.scratch`.
+    fn reduce_in(&mut self, key_value: impl FnOnce() -> Value, payload: V) {
+        match self.state.get_mut(self.scratch.as_slice()) {
+            Some(entry) => {
+                entry.1 = Some(match entry.1.take() {
+                    Some(prev) => (self.f)(&prev, &payload),
+                    None => payload,
+                });
+            }
+            None => {
+                self.state
+                    .insert(self.scratch.clone(), (key_value(), Some(payload)));
+            }
+        }
+    }
+}
+
+impl<K: StreamData, V: StreamData> OpExec for ColumnReduceExec<K, V> {
+    fn process(&mut self, input: ChainInput<'_>, _out: &mut Vec<Value>) {
+        for v in input.drain() {
+            let (key, payload) = match v {
+                Value::Pair(kp) => (kp.0, kp.1),
+                other => (Value::Null, other),
+            };
+            let Some(pv) = decode::<V>(&self.errs, "reduce", payload) else {
+                continue;
+            };
+            self.scratch.clear();
+            key.encode_into(&mut self.scratch);
+            self.reduce_in(|| key, pv);
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.in_layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let kc = self.key_leaves;
+        let key_layout = self.key_layout.clone();
+        for row in 0..input.len() {
+            let cols = input.columns();
+            let payload = V::read_columns(&cols[kc..], row);
+            self.scratch.clear();
+            key_layout.encode_row(&cols[..kc], row, &mut self.scratch);
+            self.reduce_in(|| key_layout.read_value(&input.columns()[..kc], row), payload);
+        }
+        ColumnFlow::Rows(Vec::new())
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        // deterministic emission order despite the hash map
+        let mut entries: Vec<(Vec<u8>, (Value, Option<V>))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, (key, acc)) in entries {
+            if let Some(acc) = acc {
+                out.push(Value::pair(key, acc.into_value()));
+            }
+        }
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.state.is_empty() {
+            return None;
+        }
+        let mut entries: Vec<(Vec<u8>, (Value, Option<V>))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let list: Vec<Value> = entries
+            .into_iter()
+            .filter_map(|(_, (key, acc))| acc.map(|a| Value::pair(key, a.into_value())))
+            .collect();
+        if list.is_empty() {
+            None
+        } else {
+            Some(Value::List(list))
+        }
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((key, acc)) = e.into_pair() else { continue };
+            let Some(acc) = decode::<V>(&self.errs, "reduce", acc) else {
+                continue;
+            };
+            self.scratch.clear();
+            key.encode_into(&mut self.scratch);
+            // a key restored twice combines through the reduction itself,
+            // matching ReduceExec
+            self.reduce_in(|| key, acc);
+        }
+    }
+}
+
+/// Count-based (sliding) window over a keyed columnar stream. Ingestion
+/// runs columnar — key bytes come straight off the key sub-columns —
+/// while the per-key buffers and emitted `Pair(key, aggregate)` rows stay
+/// dynamic (aggregates have no static layout), so the chain switches to
+/// rows at the window. State and snapshot format are byte-compatible
+/// with [`WindowExec`](super::exec::WindowExec).
+pub struct ColumnWindowExec {
+    size: usize,
+    slide: usize,
+    agg: WindowAgg,
+    in_layout: Layout,
+    key_layout: Layout,
+    value_layout: Layout,
+    key_leaves: usize,
+    state: FnvMap<(Value, Vec<Value>)>,
+    scratch: Vec<u8>,
+}
+
+impl ColumnWindowExec {
+    /// Creates a window executor for a keyed stream of layout
+    /// `Pair(key_layout, value_layout)`.
+    pub fn new(
+        size: usize,
+        slide: usize,
+        agg: WindowAgg,
+        key_layout: Layout,
+        value_layout: Layout,
+    ) -> Self {
+        ColumnWindowExec {
+            size,
+            slide,
+            agg,
+            in_layout: Layout::pair(key_layout.clone(), value_layout.clone()),
+            key_leaves: key_layout.leaf_count(),
+            key_layout,
+            value_layout,
+            state: FnvMap::default(),
+            scratch: Vec::with_capacity(32),
+        }
+    }
+
+    /// Appends `payload` to the window keyed by `self.scratch`, emitting
+    /// a full window's aggregate if one completes.
+    fn window_in(&mut self, key_value: impl FnOnce() -> Value, payload: Value, out: &mut Vec<Value>) {
+        if !self.state.contains_key(self.scratch.as_slice()) {
+            self.state.insert(
+                self.scratch.clone(),
+                (key_value(), Vec::with_capacity(self.size)),
+            );
+        }
+        let entry = self
+            .state
+            .get_mut(self.scratch.as_slice())
+            .expect("window slot just ensured");
+        entry.1.push(payload);
+        if entry.1.len() >= self.size {
+            let agg = WindowExec::aggregate(&self.agg, &entry.1);
+            out.push(Value::pair(entry.0.clone(), agg));
+            entry.1.drain(..self.slide);
+        }
+    }
+}
+
+impl OpExec for ColumnWindowExec {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
+            let (key, payload) = match v {
+                Value::Pair(kp) => (kp.0, kp.1),
+                other => (Value::Null, other),
+            };
+            self.scratch.clear();
+            key.encode_into(&mut self.scratch);
+            self.window_in(|| key, payload, out);
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.in_layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let kc = self.key_leaves;
+        let key_layout = self.key_layout.clone();
+        let value_layout = self.value_layout.clone();
+        let mut out = Vec::new();
+        for row in 0..input.len() {
+            let cols = input.columns();
+            let payload = value_layout.read_value(&cols[kc..], row);
+            self.scratch.clear();
+            key_layout.encode_row(&cols[..kc], row, &mut self.scratch);
+            self.window_in(
+                || key_layout.read_value(&input.columns()[..kc], row),
+                payload,
+                &mut out,
+            );
+        }
+        ColumnFlow::Rows(out)
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        // deterministic emission order despite the hash map
+        let mut entries: Vec<(Vec<u8>, (Value, Vec<Value>))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, (key, buf)) in entries {
+            if !buf.is_empty() {
+                out.push(Value::pair(key, WindowExec::aggregate(&self.agg, &buf)));
+            }
+        }
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.state.is_empty() {
+            return None;
+        }
+        let mut entries: Vec<(Vec<u8>, (Value, Vec<Value>))> = self.state.drain().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let list: Vec<Value> = entries
+            .into_iter()
+            .filter(|(_, (_, buf))| !buf.is_empty())
+            .map(|(_, (key, buf))| Value::pair(key, Value::List(buf)))
+            .collect();
+        if list.is_empty() {
+            None
+        } else {
+            Some(Value::List(list))
+        }
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((key, buf)) = e.into_pair() else { continue };
+            let Value::List(buf) = buf else { continue };
+            self.scratch.clear();
+            key.encode_into(&mut self.scratch);
+            if !self.state.contains_key(self.scratch.as_slice()) {
+                self.state.insert(
+                    self.scratch.clone(),
+                    (key, Vec::with_capacity(self.size)),
+                );
+            }
+            let entry = self
+                .state
+                .get_mut(self.scratch.as_slice())
+                .expect("window slot just ensured");
+            // a key restored twice concatenates its partial windows
+            entry.1.extend(buf);
+        }
+    }
+}
+
+/// A convenience used by the typed lowering: builds a [`ColumnBatch`]
+/// from typed items (the columnar synthetic source path).
+pub fn column_batch_of<T: StreamData>(layout: &Layout, items: impl Iterator<Item = T>) -> ColumnBatch {
+    let (lo, hi) = items.size_hint();
+    let mut cols = layout.new_columns(hi.unwrap_or(lo));
+    for item in items {
+        item.append_columns(&mut cols);
+    }
+    ColumnBatch::new(layout.clone(), cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exec::{
+        flush_chain, run_chain, run_chain_data, ChainBuffers, FilterExec, FoldExec, KeyByExec,
+        MapExec, ReduceExec,
+    };
+    use super::*;
+    use crate::value::{Batch, BatchData};
+
+    fn errs() -> Arc<DecodeErrors> {
+        Arc::new(DecodeErrors::default())
+    }
+
+    fn i64_batch(n: i64) -> ColumnBatch {
+        column_batch_of(&Layout::I64, 0..n)
+    }
+
+    fn sorted(mut v: Vec<Value>) -> Vec<Value> {
+        v.sort_by(|a, b| a.encode().cmp(&b.encode()));
+        v
+    }
+
+    #[test]
+    fn columnar_map_filter_key_by_matches_value_chain() {
+        let cb = i64_batch(1000);
+        let rows = cb.to_batch();
+
+        let mut col_ops: Vec<Box<dyn OpExec>> = vec![
+            Box::new(ColumnMapExec::<i64, i64>::new(Arc::new(|x| x * 31), errs())),
+            Box::new(ColumnFilterExec::<i64>::new(Arc::new(|x| x % 7 != 0), errs())),
+            Box::new(ColumnKeyByExec::<i64, i64>::new(Arc::new(|x| x % 64), errs())),
+        ];
+        let mut row_ops: Vec<Box<dyn OpExec>> = vec![
+            Box::new(MapExec(Arc::new(|v: Value| {
+                Value::I64(v.as_i64().unwrap() * 31)
+            }))),
+            Box::new(FilterExec(Arc::new(|v: &Value| {
+                v.as_i64().unwrap() % 7 != 0
+            }))),
+            Box::new(KeyByExec(Arc::new(|v: &Value| {
+                Value::I64(v.as_i64().unwrap() % 64)
+            }))),
+        ];
+
+        let mut bufs = ChainBuffers::new(None);
+        let got = match run_chain_data(&mut col_ops, BatchData::Columns(cb), &mut bufs) {
+            BatchData::Columns(c) => c,
+            BatchData::Rows(_) => panic!("chain should stay columnar"),
+        };
+        let expect = run_chain(&mut row_ops, rows, &mut bufs);
+
+        assert_eq!(got.to_batch().values(), expect.values());
+        // the computed hash column agrees with the row path's
+        assert_eq!(got.key_hashes().unwrap(), expect.key_hashes().unwrap());
+    }
+
+    #[test]
+    fn columnar_executors_row_path_matches_value_executors() {
+        // a columnar executor fed ROW batches (mixed chain) behaves
+        // exactly like the classic executor
+        let rows = i64_batch(500).to_batch();
+        let mut bufs = ChainBuffers::new(None);
+
+        let mut col_op: Vec<Box<dyn OpExec>> = vec![Box::new(ColumnFilterMapExec::<i64, i64>::new(
+            Arc::new(|x| if x % 2 == 0 { Some(x + 1) } else { None }),
+            errs(),
+        ))];
+        let got = run_chain(&mut col_op, rows.clone(), &mut bufs);
+
+        let mut row_op: Vec<Box<dyn OpExec>> = vec![Box::new(crate::runtime::exec::FilterMapExec(
+            Arc::new(|v: Value| {
+                let x = v.as_i64().unwrap();
+                if x % 2 == 0 {
+                    Some(Value::I64(x + 1))
+                } else {
+                    None
+                }
+            }),
+        ))];
+        let expect = run_chain(&mut row_op, rows, &mut bufs);
+        assert_eq!(got.values(), expect.values());
+    }
+
+    #[test]
+    fn layout_mismatch_falls_back_to_rows() {
+        let cb = column_batch_of(&Layout::F64, [1.5f64, 2.5].into_iter());
+        let mut op = ColumnMapExec::<i64, i64>::new(Arc::new(|x| x), errs());
+        match op.process_columns(cb.clone()) {
+            ColumnFlow::Fallback(same) => assert!(ColumnBatch::ptr_eq(&same, &cb)),
+            _ => panic!("expected fallback on foreign layout"),
+        }
+    }
+
+    #[test]
+    fn columnar_fold_matches_value_fold() {
+        let keyed = column_batch_of(
+            &Layout::pair(Layout::I64, Layout::I64),
+            (0..300i64).map(|i| (i % 5, i)),
+        );
+
+        let mut col_ops: Vec<Box<dyn OpExec>> =
+            vec![Box::new(ColumnFoldExec::<i64, i64, i64>::new(
+                0,
+                Arc::new(|acc, x| *acc += x),
+                errs(),
+            ))];
+        let mut row_ops: Vec<Box<dyn OpExec>> = vec![Box::new(FoldExec::new(
+            Value::I64(0),
+            Arc::new(|acc: &mut Value, v: Value| {
+                *acc = Value::I64(acc.as_i64().unwrap() + v.as_i64().unwrap())
+            }),
+        ))];
+
+        let mut bufs = ChainBuffers::new(None);
+        let out = run_chain_data(&mut col_ops, BatchData::Columns(keyed.clone()), &mut bufs);
+        assert!(out.is_empty(), "fold emits nothing mid-stream");
+        run_chain(&mut row_ops, keyed.to_batch(), &mut bufs);
+
+        assert_eq!(flush_chain(&mut col_ops), flush_chain(&mut row_ops));
+    }
+
+    #[test]
+    fn columnar_reduce_snapshot_restores_into_value_reduce() {
+        let keyed = column_batch_of(
+            &Layout::pair(Layout::I64, Layout::I64),
+            (0..100i64).map(|i| (i % 3, i)),
+        );
+        let mut col_op = ColumnReduceExec::<i64, i64>::new(Arc::new(|a, b| (*a).max(*b)), errs());
+        let _ = col_op.process_columns(keyed.clone());
+        let snap = col_op.snapshot().expect("state present");
+
+        // the snapshot restores into the CLASSIC executor (dynamic-update
+        // handoff across the representation boundary)
+        let mut row_op = ReduceExec::new(Arc::new(|a: &Value, b: &Value| {
+            Value::I64(a.as_i64().unwrap().max(b.as_i64().unwrap()))
+        }));
+        row_op.restore(snap);
+        let mut out = Vec::new();
+        row_op.flush(&mut out);
+        assert_eq!(
+            sorted(out),
+            sorted(vec![
+                Value::pair(Value::I64(0), Value::I64(99)),
+                Value::pair(Value::I64(1), Value::I64(97)),
+                Value::pair(Value::I64(2), Value::I64(98)),
+            ])
+        );
+    }
+
+    #[test]
+    fn columnar_window_matches_value_window_through_flush() {
+        let keyed = column_batch_of(
+            &Layout::pair(Layout::I64, Layout::F64),
+            (0..250i64).map(|i| (i % 4, i as f64)),
+        );
+        let mut col_op =
+            ColumnWindowExec::new(20, 20, WindowAgg::Mean, Layout::I64, Layout::F64);
+        let mut row_op = crate::runtime::exec::WindowExec::new(20, 20, WindowAgg::Mean);
+
+        let got = match col_op.process_columns(keyed.clone()) {
+            ColumnFlow::Rows(rows) => rows,
+            _ => panic!("window emits rows"),
+        };
+        let mut expect = Vec::new();
+        row_op.process(ChainInput::Shared(keyed.to_batch()), &mut expect);
+        assert_eq!(got, expect);
+
+        let mut got_tail = Vec::new();
+        let mut expect_tail = Vec::new();
+        col_op.flush(&mut got_tail);
+        row_op.flush(&mut expect_tail);
+        assert_eq!(got_tail, expect_tail);
+    }
+
+    #[test]
+    fn decode_failures_on_the_row_path_are_recorded_not_poisonous() {
+        let e = errs();
+        let mut op = ColumnMapExec::<i64, i64>::new(Arc::new(|x| x + 1), e.clone());
+        let batch = Batch::new(vec![Value::I64(1), Value::Str("bad".into()), Value::I64(2)]);
+        let mut out = Vec::new();
+        op.process(ChainInput::Shared(batch), &mut out);
+        assert_eq!(out, vec![Value::I64(2), Value::I64(3)]);
+        assert_eq!(e.count(), 1);
+    }
+}

@@ -1,9 +1,10 @@
 //! Operator executors: the runtime counterparts of
 //! [`OpKind`](crate::graph::OpKind), fused into per-stage chains.
 
+use crate::columnar::ColumnBatch;
 use crate::graph::{FoldFn, ReduceFn, SinkKind, WindowAgg};
 use crate::metrics::{Metrics, MetricsRegistry};
-use crate::value::{Batch, Fnv1a, Value};
+use crate::value::{Batch, BatchData, Fnv1a, Value};
 use std::collections::{BTreeMap, HashMap};
 use std::hash::BuildHasherDefault;
 use std::sync::atomic::AtomicU64;
@@ -15,7 +16,7 @@ use std::sync::{Arc, Mutex};
 /// exec-local copy probed `state == 0` on every `write` to decide
 /// whether to seed, silently re-seeding mid-stream whenever a write
 /// boundary fell on a zero state; `Fnv1a` initializes explicitly.)
-type FnvMap<V> = HashMap<Vec<u8>, V, BuildHasherDefault<Fnv1a>>;
+pub(crate) type FnvMap<V> = HashMap<Vec<u8>, V, BuildHasherDefault<Fnv1a>>;
 
 /// Looks up keyed state without allocating on the hit path: the key is
 /// encoded into a reusable scratch buffer and only cloned on first sight.
@@ -163,6 +164,33 @@ pub trait OpExec: Send {
     /// incarnation; `state` is the `Value::List` of entries assigned to
     /// this instance. Called before the first batch is processed.
     fn restore(&mut self, _state: Value) {}
+    /// Processes one typed columnar batch, when this executor has a
+    /// columnar fast path. The monomorphized executors in
+    /// `runtime::col_exec` override this to iterate native column slices
+    /// directly; the default hands the batch back untouched
+    /// ([`ColumnFlow::Fallback`]) and [`run_chain_data`] materializes
+    /// `Value` rows for the remainder of the chain — so a mixed chain is
+    /// always correct, merely slower from the first row-only operator on.
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        ColumnFlow::Fallback(input)
+    }
+}
+
+/// What one executor produced from a columnar input batch (see
+/// [`OpExec::process_columns`]).
+pub enum ColumnFlow {
+    /// The operator ran columnar and produced a columnar output; the
+    /// chain stays on the fast path.
+    Columns(ColumnBatch),
+    /// The operator ran columnar but its output has no static layout
+    /// (e.g. a window emitting aggregate rows); the remainder of the
+    /// chain runs on `Value` rows.
+    Rows(Vec<Value>),
+    /// The operator has no columnar path (or the batch's layout was not
+    /// the one it is compiled for); the *unconsumed* input is handed
+    /// back and this operator plus the remainder of the chain run on
+    /// materialized rows.
+    Fallback(ColumnBatch),
 }
 
 /// Reusable scratch state threaded through [`run_chain`], one per stage
@@ -265,6 +293,44 @@ pub fn run_chain(ops: &mut [Box<dyn OpExec>], batch: Batch, bufs: &mut ChainBuff
         std::mem::swap(&mut bufs.a, &mut bufs.b);
     }
     bufs.take_batch()
+}
+
+/// [`run_chain`] over either data-plane representation. A row batch
+/// takes the classic path unchanged. A columnar batch is fed through
+/// each executor's [`OpExec::process_columns`] until the chain ends
+/// (columns out), an operator emits layout-less rows (remainder runs on
+/// rows), or an operator has no columnar path (the batch is
+/// materialized and the remainder — including that operator — runs on
+/// rows). Empty intermediate results short-circuit exactly like
+/// [`run_chain`].
+pub fn run_chain_data(
+    ops: &mut [Box<dyn OpExec>],
+    data: BatchData,
+    bufs: &mut ChainBuffers,
+) -> BatchData {
+    let cb = match data {
+        BatchData::Rows(b) => return BatchData::Rows(run_chain(ops, b, bufs)),
+        BatchData::Columns(cb) => cb,
+    };
+    if ops.is_empty() || cb.is_empty() {
+        return BatchData::Columns(cb);
+    }
+    let mut cur = cb;
+    for i in 0..ops.len() {
+        if cur.is_empty() {
+            return BatchData::Rows(Batch::empty());
+        }
+        match ops[i].process_columns(cur) {
+            ColumnFlow::Columns(next) => cur = next,
+            ColumnFlow::Rows(rows) => {
+                return BatchData::Rows(run_chain(&mut ops[i + 1..], Batch::new(rows), bufs));
+            }
+            ColumnFlow::Fallback(same) => {
+                return BatchData::Rows(run_chain(&mut ops[i..], same.to_batch(), bufs));
+            }
+        }
+    }
+    BatchData::Columns(cur)
 }
 
 /// Flushes a fused chain: each operator's drained state flows through the
@@ -546,7 +612,7 @@ impl WindowExec {
         }
     }
 
-    fn aggregate(agg: &WindowAgg, window: &[Value]) -> Value {
+    pub(crate) fn aggregate(agg: &WindowAgg, window: &[Value]) -> Value {
         match agg {
             WindowAgg::Mean => {
                 let n = window.len().max(1) as f64;
@@ -710,6 +776,23 @@ impl OpExec for SinkExec {
                 .or_default()
                 .extend(input.drain()),
             SinkKind::Count | SinkKind::Discard => {}
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        // the non-collecting kinds only need the row count — no reason
+        // to materialize Value rows; the collecting kinds fall back so
+        // the collectors keep receiving plain Values
+        match self.kind {
+            SinkKind::Count | SinkKind::Discard => {
+                let n = input.len() as u64;
+                MetricsRegistry::add(&self.metrics.events_out, n);
+                self.collector
+                    .count
+                    .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+                ColumnFlow::Rows(Vec::new())
+            }
+            SinkKind::Collect | SinkKind::CollectTagged => ColumnFlow::Fallback(input),
         }
     }
 }

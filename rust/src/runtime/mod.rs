@@ -9,16 +9,20 @@
 //! stage edge). End-of-stream flushes stateful operators and cascades EOS
 //! downstream.
 
+pub mod col_exec;
 pub mod exec;
 pub mod xla_exec;
 
-pub use exec::{flush_chain, run_chain, ChainBuffers, ChainInput, Collector, OpExec};
+pub use exec::{
+    flush_chain, run_chain, run_chain_data, ChainBuffers, ChainInput, ColumnFlow, Collector,
+    OpExec,
+};
 
 use crate::channels::{FanOut, Inbox, InboxEvent};
 use crate::graph::SourceKind;
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::queue::Topic;
-use crate::value::{Batch, Value};
+use crate::value::{Batch, BatchData, Value};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -148,6 +152,11 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
                     let out = run_chain(&mut rt.ops, batch, &mut bufs);
                     route(&mut rt.outputs, out);
                 }
+                InboxEvent::Columns(cb) => {
+                    batches += 1;
+                    let out = run_chain_data(&mut rt.ops, cb.into(), &mut bufs);
+                    route_data(&mut rt.outputs, out);
+                }
                 InboxEvent::Eos => break,
                 InboxEvent::Epoch(epoch) => {
                     // Dynamic update: every producer quiesced — snapshot
@@ -255,6 +264,13 @@ fn route(outputs: &mut FanOut, batch: Batch) {
     outputs.send(batch);
 }
 
+fn route_data(outputs: &mut FanOut, data: BatchData) {
+    if data.is_empty() {
+        return;
+    }
+    outputs.send_data(data);
+}
+
 fn run_source(
     src: SourceRuntime,
     ops: &mut [Box<dyn OpExec>],
@@ -288,6 +304,37 @@ fn run_source(
                 route(outputs, out);
                 if let Some(r) = rate {
                     // pace to `r` events/second for this instance
+                    let target = Duration::from_secs_f64(emitted as f64 / r);
+                    let elapsed = t0.elapsed();
+                    if target > elapsed {
+                        std::thread::sleep(target - elapsed);
+                    }
+                }
+            }
+        }
+        SourceKind::SyntheticColumns { total, gen, rate } => {
+            // identical share split to `Synthetic`, but each emitted batch
+            // is born columnar: the generator fills native columns for a
+            // whole index range, so no `Value` is ever allocated upstream
+            // of a fallback point.
+            let base = total / n;
+            let rem = total % n;
+            let count = base + if idx < rem { 1 } else { 0 };
+            let lo = idx * base + idx.min(rem);
+            let mut emitted = 0u64;
+            let t0 = std::time::Instant::now();
+            while emitted < count {
+                if src.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let this_batch = (src.batch_size as u64).min(count - emitted);
+                let start = lo + emitted;
+                let cb = gen(idx, start..start + this_batch);
+                emitted += this_batch;
+                MetricsRegistry::add(&metrics.events_in, this_batch);
+                let out = run_chain_data(ops, cb.into(), bufs);
+                route_data(outputs, out);
+                if let Some(r) = rate {
                     let target = Duration::from_secs_f64(emitted as f64 / r);
                     let elapsed = t0.elapsed();
                     if target > elapsed {

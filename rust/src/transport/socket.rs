@@ -349,6 +349,13 @@ impl Lane for PeerLane {
                     &wire::data_payload(self.job, self.to, &bytes),
                 )
             }
+            Msg::Columns(cb) => {
+                let bytes = cb.wire();
+                self.peer.send(
+                    wire::kind::DATA,
+                    &wire::data_payload(self.job, self.to, &bytes),
+                )
+            }
             Msg::Eos => self
                 .peer
                 .send(wire::kind::EOS, &wire::data_payload(self.job, self.to, &[])),

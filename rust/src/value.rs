@@ -14,7 +14,9 @@
 //! (`api::typed`), which lets user closures work with `i64`/`String`/tuple
 //! values while the engine underneath keeps exchanging [`Value`] batches.
 
+use crate::columnar::{Column, ColumnBatch, Layout};
 use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 
 /// A dynamically-typed event.
@@ -339,6 +341,40 @@ pub trait StreamData: Sized + Send + Sync + 'static {
     /// Decodes an engine [`Value`] back into the native type; a shape
     /// mismatch is an [`Error::Decode`](crate::error::Error::Decode).
     fn try_from_value(v: Value) -> Result<Self>;
+
+    /// The static columnar [`Layout`] of this type, when it has one.
+    ///
+    /// `Some` means batches of this type can travel as a
+    /// [`ColumnBatch`] (struct-of-arrays native columns) instead of
+    /// boxed [`Value`] rows, and the typed front-end lowers operators on
+    /// it to the monomorphized columnar executors. The default is `None`
+    /// — the type flows as `Value` rows (`Value` itself, `Vec<T>`,
+    /// `Features`, and any user type without a static shape).
+    fn layout() -> Option<Layout> {
+        None
+    }
+
+    /// Number of flattened leaf columns of [`layout`](StreamData::layout)
+    /// (tuples split their fields without allocating a `Layout` tree,
+    /// which keeps per-record column access allocation-free).
+    fn column_count() -> usize {
+        1
+    }
+
+    /// Appends `self` as one row across `cols` — exactly
+    /// [`column_count`](StreamData::column_count) columns matching
+    /// [`layout`](StreamData::layout). Only called for types whose
+    /// `layout()` is `Some`.
+    fn append_columns(self, _cols: &mut [Column]) {
+        unreachable!("append_columns on a non-columnar StreamData type")
+    }
+
+    /// Reads row `row` of `cols` (same shape contract as
+    /// [`append_columns`](StreamData::append_columns)) back as a native
+    /// value. Only called for types whose `layout()` is `Some`.
+    fn read_columns(_cols: &[Column], _row: usize) -> Self {
+        unreachable!("read_columns on a non-columnar StreamData type")
+    }
 }
 
 /// The [`Error::Decode`](crate::error::Error::Decode) a [`StreamData`]
@@ -371,6 +407,21 @@ impl StreamData for i64 {
             other => Err(decode_mismatch::<i64>(&other)),
         }
     }
+    fn layout() -> Option<Layout> {
+        Some(Layout::I64)
+    }
+    fn append_columns(self, cols: &mut [Column]) {
+        match &mut cols[0] {
+            Column::I64(c) => c.push(self),
+            _ => unreachable!("i64 column expected"),
+        }
+    }
+    fn read_columns(cols: &[Column], row: usize) -> i64 {
+        match &cols[0] {
+            Column::I64(c) => c[row],
+            _ => unreachable!("i64 column expected"),
+        }
+    }
 }
 
 impl StreamData for f64 {
@@ -388,6 +439,21 @@ impl StreamData for f64 {
             other => Err(decode_mismatch::<f64>(&other)),
         }
     }
+    fn layout() -> Option<Layout> {
+        Some(Layout::F64)
+    }
+    fn append_columns(self, cols: &mut [Column]) {
+        match &mut cols[0] {
+            Column::F64(c) => c.push(self),
+            _ => unreachable!("f64 column expected"),
+        }
+    }
+    fn read_columns(cols: &[Column], row: usize) -> f64 {
+        match &cols[0] {
+            Column::F64(c) => c[row],
+            _ => unreachable!("f64 column expected"),
+        }
+    }
 }
 
 impl StreamData for bool {
@@ -400,6 +466,21 @@ impl StreamData for bool {
             other => Err(decode_mismatch::<bool>(&other)),
         }
     }
+    fn layout() -> Option<Layout> {
+        Some(Layout::Bool)
+    }
+    fn append_columns(self, cols: &mut [Column]) {
+        match &mut cols[0] {
+            Column::Bool(c) => c.push(self),
+            _ => unreachable!("bool column expected"),
+        }
+    }
+    fn read_columns(cols: &[Column], row: usize) -> bool {
+        match &cols[0] {
+            Column::Bool(c) => c[row],
+            _ => unreachable!("bool column expected"),
+        }
+    }
 }
 
 impl StreamData for String {
@@ -410,6 +491,21 @@ impl StreamData for String {
         match v {
             Value::Str(x) => Ok(x),
             other => Err(decode_mismatch::<String>(&other)),
+        }
+    }
+    fn layout() -> Option<Layout> {
+        Some(Layout::Str)
+    }
+    fn append_columns(self, cols: &mut [Column]) {
+        match &mut cols[0] {
+            Column::Str(c) => c.push(self),
+            _ => unreachable!("String column expected"),
+        }
+    }
+    fn read_columns(cols: &[Column], row: usize) -> String {
+        match &cols[0] {
+            Column::Str(c) => c[row].clone(),
+            _ => unreachable!("String column expected"),
         }
     }
 }
@@ -426,6 +522,24 @@ impl<A: StreamData, B: StreamData> StreamData for (A, B) {
             }
             other => Err(decode_mismatch::<(A, B)>(&other)),
         }
+    }
+    fn layout() -> Option<Layout> {
+        Some(Layout::Pair(
+            Box::new(A::layout()?),
+            Box::new(B::layout()?),
+        ))
+    }
+    fn column_count() -> usize {
+        A::column_count() + B::column_count()
+    }
+    fn append_columns(self, cols: &mut [Column]) {
+        let (a, b) = cols.split_at_mut(A::column_count());
+        self.0.append_columns(a);
+        self.1.append_columns(b);
+    }
+    fn read_columns(cols: &[Column], row: usize) -> (A, B) {
+        let (a, b) = cols.split_at(A::column_count());
+        (A::read_columns(a, row), B::read_columns(b, row))
     }
 }
 
@@ -449,6 +563,32 @@ impl<A: StreamData, B: StreamData, C: StreamData> StreamData for (A, B, C) {
             }
             other => Err(decode_mismatch::<(A, B, C)>(&other)),
         }
+    }
+    fn layout() -> Option<Layout> {
+        Some(Layout::Triple(
+            Box::new(A::layout()?),
+            Box::new(B::layout()?),
+            Box::new(C::layout()?),
+        ))
+    }
+    fn column_count() -> usize {
+        A::column_count() + B::column_count() + C::column_count()
+    }
+    fn append_columns(self, cols: &mut [Column]) {
+        let (a, rest) = cols.split_at_mut(A::column_count());
+        let (b, c) = rest.split_at_mut(B::column_count());
+        self.0.append_columns(a);
+        self.1.append_columns(b);
+        self.2.append_columns(c);
+    }
+    fn read_columns(cols: &[Column], row: usize) -> (A, B, C) {
+        let (a, rest) = cols.split_at(A::column_count());
+        let (b, c) = rest.split_at(B::column_count());
+        (
+            A::read_columns(a, row),
+            B::read_columns(b, row),
+            C::read_columns(c, row),
+        )
     }
 }
 
@@ -542,13 +682,21 @@ impl Batch {
     }
 
     /// Wraps `values` as a batch carrying a per-record key-hash column
-    /// (`hashes[i]` must be the routing hash of `values[i]`; the lengths
-    /// must match or the column is ignored).
+    /// (`hashes[i]` must be the routing hash of `values[i]`). A length
+    /// mismatch is a routing bug upstream: it trips a debug assertion,
+    /// and in release builds it is counted via
+    /// [`hash_column_mismatches`] before the column is discarded, so the
+    /// silent degradation to hash-on-the-fly stays observable.
     pub fn with_hashes(values: Vec<Value>, hashes: Vec<u64>) -> Batch {
-        debug_assert_eq!(values.len(), hashes.len());
         let key_hashes = if hashes.len() == values.len() {
             Some(hashes)
         } else {
+            note_hash_column_mismatch();
+            debug_assert_eq!(
+                hashes.len(),
+                values.len(),
+                "key-hash column misaligned with batch"
+            );
             None
         };
         Batch {
@@ -691,6 +839,79 @@ impl PartialEq<Vec<Value>> for Batch {
 impl PartialEq<&[Value]> for Batch {
     fn eq(&self, other: &&[Value]) -> bool {
         self.values() == *other
+    }
+}
+
+static HASH_COLUMN_MISMATCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of batches constructed with a hash column whose
+/// length did not match the payload (see [`Batch::with_hashes`] and
+/// `ColumnBatch::with_hashes`). Each mismatch silently costs a re-hash
+/// per record at the next shuffle, so a nonzero value flags a routing
+/// bug that would otherwise only show up as throughput loss.
+pub fn hash_column_mismatches() -> u64 {
+    HASH_COLUMN_MISMATCHES.load(Ordering::Relaxed)
+}
+
+pub(crate) fn note_hash_column_mismatch() {
+    HASH_COLUMN_MISMATCHES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A batch in either of the data plane's representations: dynamic
+/// [`Value`] rows or typed struct-of-arrays columns.
+///
+/// The row form is the universal one — every operator accepts it, and it
+/// is the only form that crosses the wire. The columnar form exists on
+/// the hot path between typed columnar sources/operators; anything that
+/// cannot consume columns materializes rows via
+/// [`BatchData::into_rows`] (exact `Value` parity by construction).
+#[derive(Clone, Debug)]
+pub enum BatchData {
+    /// Dynamic row representation.
+    Rows(Batch),
+    /// Typed columnar representation.
+    Columns(ColumnBatch),
+}
+
+impl BatchData {
+    /// Number of records in the batch, in either representation.
+    pub fn len(&self) -> usize {
+        match self {
+            BatchData::Rows(b) => b.len(),
+            BatchData::Columns(c) => c.len(),
+        }
+    }
+
+    /// True when the batch holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materializes the row representation (a refcount bump when the
+    /// batch already is rows).
+    pub fn into_rows(self) -> Batch {
+        match self {
+            BatchData::Rows(b) => b,
+            BatchData::Columns(c) => c.to_batch(),
+        }
+    }
+}
+
+impl From<Batch> for BatchData {
+    fn from(b: Batch) -> BatchData {
+        BatchData::Rows(b)
+    }
+}
+
+impl From<ColumnBatch> for BatchData {
+    fn from(c: ColumnBatch) -> BatchData {
+        BatchData::Columns(c)
+    }
+}
+
+impl From<Vec<Value>> for BatchData {
+    fn from(values: Vec<Value>) -> BatchData {
+        BatchData::Rows(Batch::new(values))
     }
 }
 
@@ -991,6 +1212,24 @@ mod tests {
         assert_eq!(twin.wire().as_ref(), plain.wire().as_ref());
         let decoded = Batch::from_wire(twin.wire()).unwrap();
         assert!(decoded.key_hashes().is_none());
+    }
+
+    #[test]
+    fn mismatched_hash_column_is_counted_not_silent() {
+        let before = hash_column_mismatches();
+        let build = || Batch::with_hashes(vec![Value::I64(1), Value::I64(2)], vec![7]);
+        if cfg!(debug_assertions) {
+            assert!(
+                std::panic::catch_unwind(build).is_err(),
+                "debug builds assert on a misaligned hash column"
+            );
+        } else {
+            assert!(
+                build().key_hashes().is_none(),
+                "release builds drop the misaligned column"
+            );
+        }
+        assert!(hash_column_mismatches() > before, "mismatch was counted");
     }
 
     #[test]

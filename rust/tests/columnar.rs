@@ -1,0 +1,257 @@
+//! Property tests for the typed columnar data plane (in-repo harness,
+//! see `flowunits::proptest`):
+//!
+//! * end-to-end parity — every typed operator chain shape
+//!   (`map`/`filter`/`filter_map`, `key_by → fold`, `key_by → reduce`,
+//!   `key_by → window`, and a mixed chain crossing the columnar/`Value`
+//!   boundary) produces identical results with
+//!   [`JobConfig::columnar`] on and off, under both planners;
+//! * representation laws — `StreamData` column round-trips (including
+//!   empty batches), row materialization vs `into_value`, the
+//!   `hash_row`/`stable_hash` agreement the columnar shuffle relies on,
+//!   and the wire-format equivalence that lets column batches cross
+//!   process boundaries unchanged.
+
+use flowunits::api::{JobConfig, PlannerKind, Source, StreamContext, WindowAgg};
+use flowunits::channels::route_hash;
+use flowunits::columnar::{ColumnBatch, Layout};
+use flowunits::config::eval_cluster;
+use flowunits::proptest::{forall, Gen};
+use flowunits::value::StreamData;
+use std::time::Duration;
+
+fn cfg(planner: PlannerKind, columnar: bool) -> JobConfig {
+    JobConfig {
+        planner,
+        columnar,
+        ..Default::default()
+    }
+}
+
+fn planner(g: &mut Gen) -> PlannerKind {
+    if g.bool(0.5) {
+        PlannerKind::FlowUnits
+    } else {
+        PlannerKind::Renoir
+    }
+}
+
+#[test]
+fn prop_typed_linear_chain_columnar_parity() {
+    forall("map/filter/filter_map: columnar == value", 12, |g| {
+        let n = g.usize_in(0, 300) as u64;
+        let m = g.i64_in(1, 50);
+        let p = g.i64_in(2, 9);
+        let pl = planner(g);
+        let run = |columnar: bool| -> Vec<i64> {
+            let mut ctx =
+                StreamContext::new(eval_cluster(None, Duration::ZERO), cfg(pl, columnar));
+            let h = ctx
+                .stream(Source::synthetic(n, |_, i| i as i64))
+                .to_layer("edge")
+                .map(move |v: i64| v.wrapping_mul(m))
+                .filter(move |v| v % p != 0)
+                .filter_map(|v| if v % 2 == 0 { Some(v / 2) } else { None })
+                .to_layer("cloud")
+                .collect();
+            let mut report = ctx.execute().expect("linear chain");
+            let mut out: Vec<i64> = report.take(h).expect("collect");
+            out.sort_unstable();
+            out
+        };
+        assert_eq!(run(true), run(false));
+    });
+}
+
+#[test]
+fn prop_typed_keyed_fold_columnar_parity() {
+    forall("tuple key_by → fold: columnar == value", 10, |g| {
+        let n = g.usize_in(0, 300) as u64;
+        let k = g.i64_in(1, 17);
+        let pl = planner(g);
+        let run = |columnar: bool| -> Vec<(i64, i64)> {
+            let mut ctx =
+                StreamContext::new(eval_cluster(None, Duration::ZERO), cfg(pl, columnar));
+            let h = ctx
+                .stream(Source::synthetic(n, |_, i| {
+                    (i as i64, (i as i64).wrapping_mul(7))
+                }))
+                .to_layer("edge")
+                .to_layer("cloud")
+                .key_by(move |t: &(i64, i64)| t.0 % k)
+                .fold(0i64, |acc, t| *acc = acc.wrapping_add(t.1))
+                .collect();
+            let mut report = ctx.execute().expect("keyed fold");
+            let mut out: Vec<(i64, i64)> = report.take(h).expect("collect");
+            out.sort_unstable();
+            out
+        };
+        assert_eq!(run(true), run(false));
+    });
+}
+
+#[test]
+fn prop_typed_string_keyed_reduce_columnar_parity() {
+    forall("string key_by → reduce: columnar == value", 8, |g| {
+        let n = g.usize_in(0, 250) as u64;
+        let k = g.usize_in(1, 12) as u64;
+        let pl = planner(g);
+        let run = |columnar: bool| -> Vec<(String, (String, i64))> {
+            let mut ctx =
+                StreamContext::new(eval_cluster(None, Duration::ZERO), cfg(pl, columnar));
+            let h = ctx
+                .stream(Source::synthetic(n, move |_, i| {
+                    (format!("sensor-{:03}", i % k), i as i64)
+                }))
+                .to_layer("edge")
+                .to_layer("cloud")
+                .key_by(|t: &(String, i64)| t.0.clone())
+                .reduce(|a, b| if a.1 >= b.1 { a.clone() } else { b.clone() })
+                .collect();
+            let mut report = ctx.execute().expect("keyed reduce");
+            let mut out: Vec<(String, (String, i64))> = report.take(h).expect("collect");
+            out.sort();
+            out
+        };
+        assert_eq!(run(true), run(false));
+    });
+}
+
+#[test]
+fn prop_typed_window_columnar_parity() {
+    forall("key_by → sliding_window: columnar == value", 8, |g| {
+        let n = g.usize_in(0, 400) as u64;
+        let k = g.i64_in(1, 9);
+        let size = g.usize_in(1, 20);
+        let slide = g.usize_in(1, size + 1);
+        let pl = planner(g);
+        let run = |columnar: bool| -> Vec<(i64, i64)> {
+            let mut ctx =
+                StreamContext::new(eval_cluster(None, Duration::ZERO), cfg(pl, columnar));
+            let h = ctx
+                .stream(Source::synthetic(n, |_, i| i as i64))
+                .to_layer("edge")
+                .to_layer("cloud")
+                .key_by(move |v: &i64| v % k)
+                .sliding_window::<i64>(size, slide, WindowAgg::Count)
+                .collect();
+            let mut report = ctx.execute().expect("keyed window");
+            let mut out: Vec<(i64, i64)> = report.take(h).expect("collect");
+            out.sort_unstable();
+            out
+        };
+        assert_eq!(run(true), run(false));
+    });
+}
+
+#[test]
+fn prop_mixed_chain_crossing_the_fallback_boundary() {
+    // `map_values` has no columnar form: the chain runs columnar up to
+    // `key_by`, falls back to `Value` rows through `map_values`, and the
+    // columnar window executor then consumes rows on its row path — the
+    // full representation-switch spectrum in one pipeline. Window
+    // *membership* per key depends on cross-instance arrival order, so
+    // the comparison is over order-independent per-key aggregates: the
+    // window count and the total of the window sums (values are exact
+    // binary halves, so f64 addition order cannot perturb the total).
+    forall("columnar → fallback → columnar-op rows", 8, |g| {
+        let n = g.usize_in(0, 400) as u64;
+        let k = g.i64_in(1, 7);
+        let size = g.usize_in(1, 16);
+        let pl = planner(g);
+        let run = |columnar: bool| -> Vec<(i64, usize, u64)> {
+            let mut ctx =
+                StreamContext::new(eval_cluster(None, Duration::ZERO), cfg(pl, columnar));
+            let h = ctx
+                .stream(Source::synthetic(n, |_, i| {
+                    (i as i64, (i % 1000) as f64 * 0.5)
+                }))
+                .to_layer("edge")
+                .to_layer("cloud")
+                .key_by(move |t: &(i64, f64)| t.0 % k)
+                .map_values(|t: (i64, f64)| t.1)
+                .window::<f64>(size, WindowAgg::Sum)
+                .collect();
+            let mut report = ctx.execute().expect("mixed chain");
+            let out: Vec<(i64, f64)> = report.take(h).expect("collect");
+            let mut agg: std::collections::BTreeMap<i64, (usize, f64)> = Default::default();
+            for (key, sum) in out {
+                let slot = agg.entry(key).or_insert((0, 0.0));
+                slot.0 += 1;
+                slot.1 += sum;
+            }
+            agg.into_iter()
+                .map(|(key, (windows, total))| (key, windows, total.to_bits()))
+                .collect()
+        };
+        assert_eq!(run(true), run(false));
+    });
+}
+
+/// Builds a column batch from `items` and checks every representation
+/// law against the row path.
+fn check_roundtrip<T: StreamData + Clone + PartialEq + std::fmt::Debug>(items: &[T]) {
+    let layout = T::layout().expect("columnar type");
+    let mut cols = layout.new_columns(items.len());
+    for it in items {
+        it.clone().append_columns(&mut cols);
+    }
+    let cb = ColumnBatch::new(layout.clone(), cols);
+    assert_eq!(cb.len(), items.len());
+    assert_eq!(cb.is_empty(), items.is_empty());
+    for (i, it) in items.iter().enumerate() {
+        assert_eq!(&T::read_columns(cb.columns(), i), it, "read_columns");
+        let v = it.clone().into_value();
+        assert_eq!(cb.row(i), v, "row materialization");
+        assert_eq!(
+            layout.hash_row(cb.columns(), i),
+            v.stable_hash(),
+            "hash_row must agree with stable_hash"
+        );
+    }
+    // the columnar wire bytes are exactly the materialized row frame —
+    // what lets column batches cross the socket unchanged
+    assert_eq!(cb.wire().as_ref(), cb.to_batch().wire().as_ref());
+}
+
+#[test]
+fn prop_streamdata_column_roundtrip() {
+    forall("StreamData columns round-trip", 150, |g| {
+        let n = g.usize_in(0, 40); // 0 ⇒ empty batches are covered
+        check_roundtrip(&g.vec_of(n, |g| g.i64_in(i64::MIN / 2, i64::MAX / 2)));
+        check_roundtrip(&g.vec_of(n, |g| g.f64_in(-1e12, 1e12)));
+        check_roundtrip(&g.vec_of(n, |g| g.bool(0.5)));
+        check_roundtrip(&g.vec_of(n, |g| g.ident(24)));
+        check_roundtrip(&g.vec_of(n, |g| (g.i64_in(-1000, 1000), g.ident(8))));
+        check_roundtrip(&g.vec_of(n, |g| (g.bool(0.3), (g.i64_in(0, 9), g.f64_in(-1.0, 1.0)))));
+    });
+}
+
+#[test]
+fn prop_computed_hash_column_matches_row_routing() {
+    forall("hash column == per-row route_hash", 100, |g| {
+        let n = g.usize_in(0, 40);
+        let items: Vec<(i64, String)> =
+            g.vec_of(n, |g| (g.i64_in(-100, 100), g.ident(12)));
+        let layout = <(i64, String)>::layout().expect("pair layout");
+        let mut cols = layout.new_columns(items.len());
+        for it in &items {
+            it.clone().append_columns(&mut cols);
+        }
+        // the key side of the Pair layout is the first leaf column
+        let hashes: Vec<u64> = (0..items.len())
+            .map(|i| Layout::I64.hash_row(&cols[..1], i))
+            .collect();
+        let cb = ColumnBatch::with_hashes(layout, cols, hashes.clone());
+        let kept = cb.key_hashes().expect("well-formed hash column is kept");
+        for (i, h) in kept.iter().enumerate() {
+            assert_eq!(
+                *h,
+                route_hash(&cb.row(i)),
+                "computed column must agree with the shuffle's row hash"
+            );
+        }
+        // the column survives materialization to the Value fallback
+        assert_eq!(cb.to_batch().key_hashes(), Some(hashes.as_slice()));
+    });
+}

@@ -8,6 +8,11 @@ below its floor. The baseline records deliberately conservative floors
 debug sleep, an O(n^2) hot loop — without flaking on runner noise; ratchet
 the floors upward as the trajectory improves.
 
+The baseline may hold one section per bench binary under "benches",
+keyed by the measured JSON's "bench" field (scenario names like "linear"
+recur across benches, so floors are scoped); a baseline with a top-level
+"scenarios" list is the legacy single-bench layout and is used as-is.
+
 Usage: bench_gate.py <measured.json> <baseline.json>
 Set BENCH_GATE_SKIP=1 to bypass (e.g. when bisecting an unrelated break).
 """
@@ -21,7 +26,7 @@ def scenarios(doc):
     return {s["name"]: s for s in doc.get("scenarios", [])}
 
 
-def load_scenarios(path, role):
+def load_doc(path, role):
     """Loads one bench JSON, exiting with a clear message (not a
     traceback) when the file is missing or malformed — the usual causes
     are a bench binary that crashed before writing its output, or a stale
@@ -36,7 +41,15 @@ def load_scenarios(path, role):
         )
     except json.JSONDecodeError as e:
         sys.exit(f"bench gate: {role} file '{path}' is not valid JSON: {e}")
-    if not isinstance(doc, dict) or not isinstance(doc.get("scenarios"), list):
+    if not isinstance(doc, dict):
+        sys.exit(f"bench gate: {role} file '{path}' is not a JSON object")
+    return doc
+
+
+def section_scenarios(doc, path, role):
+    """Scenario table of one bench document (measured files and the
+    legacy flat baseline layout)."""
+    if not isinstance(doc.get("scenarios"), list):
         sys.exit(
             f"bench gate: {role} file '{path}' has no 'scenarios' list "
             "(expected the layout written by the bench binaries)"
@@ -47,14 +60,32 @@ def load_scenarios(path, role):
         sys.exit(f"bench gate: {role} file '{path}' has a malformed scenario entry: {e}")
 
 
+def baseline_scenarios(doc, path, bench_name):
+    """Picks the floor table for `bench_name`: the matching "benches"
+    section when present, else the whole document (legacy layout)."""
+    benches = doc.get("benches")
+    if isinstance(benches, dict):
+        section = benches.get(bench_name)
+        if not isinstance(section, dict):
+            sys.exit(
+                f"bench gate: baseline '{path}' has no section for bench "
+                f"'{bench_name}' (known: {', '.join(sorted(benches))})"
+            )
+        return section_scenarios(section, path, "baseline")
+    return section_scenarios(doc, path, "baseline")
+
+
 def main():
     if os.environ.get("BENCH_GATE_SKIP") == "1":
         print("bench gate: skipped (BENCH_GATE_SKIP=1)")
         return 0
     if len(sys.argv) != 3:
         sys.exit("usage: bench_gate.py <measured.json> <baseline.json>")
-    measured = load_scenarios(sys.argv[1], "measured")
-    baseline = load_scenarios(sys.argv[2], "baseline")
+    measured_doc = load_doc(sys.argv[1], "measured")
+    measured = section_scenarios(measured_doc, sys.argv[1], "measured")
+    bench_name = measured_doc.get("bench", "")
+    baseline = baseline_scenarios(load_doc(sys.argv[2], "baseline"), sys.argv[2], bench_name)
+    print(f"bench gate: '{bench_name or sys.argv[1]}' vs baseline floors")
     failures = []
     for name, base in sorted(baseline.items()):
         floor = base.get("throughput_ev_s")
