@@ -1,0 +1,214 @@
+//! `cargo bench --bench recovery` — cost of the checkpoint/recovery
+//! control plane.
+//!
+//! Three scenarios over the keyed-reduce stress shape (`source@edge →
+//! filter ∥ "agg"@cloud: key_by → reduce → collect`, rate-limited
+//! sources so throughput reflects a sustained steady state):
+//!
+//! * `checkpoint_off` — the legacy deployment, no supervisor;
+//! * `checkpoint_on` — periodic coordinated checkpoints on
+//!   `RECOVERY_CKPT_MS`; the paper-level claim checked in-binary is that
+//!   steady-state throughput stays within 10% of `checkpoint_off`
+//!   (override the threshold with `RECOVERY_RATIO_PCT`);
+//! * `kill_recovery` — an instance thread is killed mid-run by an
+//!   injected panic; the run must still produce exact per-key sums, and
+//!   the time from the fault to the supervisor's recovery is reported
+//!   as `recovery_ms` (informational, not gated).
+//!
+//! Results land in `BENCH_recovery.json` (override with `RECOVERY_OUT`).
+//! `RECOVERY_EVENTS`, `RECOVERY_RATE` (events/second per source), and
+//! `RECOVERY_REPS` scale the workload; CI runs a small smoke
+//! configuration gated by the floors in `BENCH_baseline.json`.
+
+use flowunits::api::raw::{JobConfig, PlannerKind, Source, StreamContext};
+use flowunits::config::eval_cluster;
+use flowunits::coordinator::Coordinator;
+use flowunits::value::Value;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const KEYS: i64 = 16;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn config(checkpoint_ms: u64) -> JobConfig {
+    JobConfig {
+        planner: PlannerKind::FlowUnits,
+        decouple_units: true,
+        batch_size: 128,
+        poll_timeout: Duration::from_millis(10),
+        checkpoint_interval: if checkpoint_ms > 0 {
+            Some(Duration::from_millis(checkpoint_ms))
+        } else {
+            None
+        },
+        ..Default::default()
+    }
+}
+
+fn graph(
+    total: u64,
+    rate: f64,
+    cfg: &JobConfig,
+    bomb: Option<Arc<AtomicI64>>,
+    fired: Option<Arc<Mutex<Option<Instant>>>>,
+) -> flowunits::graph::LogicalGraph {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), cfg.clone());
+    ctx.stream(Source::synthetic_rated(total, rate, |_, i| {
+        Value::I64(i as i64)
+    }))
+    .to_layer("edge")
+    .filter(|v| v.as_i64().unwrap() >= 0)
+    .unit("agg")
+    .to_layer("cloud")
+    .map(move |v| {
+        if let Some(b) = &bomb {
+            if b.fetch_sub(1, Ordering::SeqCst) == 1 {
+                if let Some(f) = &fired {
+                    *f.lock().unwrap() = Some(Instant::now());
+                }
+                panic!("injected fault: bench kills this instance");
+            }
+        }
+        v
+    })
+    .key_by(|v| Value::I64(v.as_i64().unwrap() % KEYS))
+    .reduce(|a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+    .collect_vec();
+    ctx.into_graph().expect("bench graph")
+}
+
+struct Outcome {
+    ev_s: f64,
+    checkpoints: u64,
+    recoveries: u64,
+    recovery_ms: f64,
+}
+
+/// One measured job. With `kill_at`, an instance panics on the
+/// `kill_at`-th processed event and the fault→recovery latency is
+/// sampled from the metrics.
+fn run(total: u64, rate: f64, checkpoint_ms: u64, kill_at: Option<i64>) -> Outcome {
+    let cfg = config(checkpoint_ms);
+    let bomb = kill_at.map(|n| Arc::new(AtomicI64::new(n)));
+    let fired: Option<Arc<Mutex<Option<Instant>>>> = kill_at.map(|_| Arc::new(Mutex::new(None)));
+    let g = graph(total, rate, &cfg, bomb.clone(), fired.clone());
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), cfg);
+    let dep = coord.deploy(&g).expect("deploy");
+    let metrics = dep.metrics();
+
+    // watcher: timestamp the moment the supervisor's recovery lands
+    let done = Arc::new(AtomicBool::new(false));
+    let watcher = {
+        let metrics = metrics.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            while !done.load(Ordering::Relaxed) {
+                if metrics.recoveries.load(Ordering::Relaxed) >= 1 {
+                    return Some(Instant::now());
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            None
+        })
+    };
+    let report = dep.wait().expect("job completes");
+    done.store(true, Ordering::Relaxed);
+    let recovered_at = watcher.join().expect("watcher");
+
+    // conservation: the per-key sums must add up to sum(0..total)
+    // whatever checkpoints, rolls, or recoveries happened mid-run
+    let got: i64 = report
+        .collected
+        .iter()
+        .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
+        .sum();
+    let expect = (total as i64) * (total as i64 - 1) / 2;
+    assert_eq!(got, expect, "per-key sums diverged (loss or duplication)");
+    assert_eq!(report.events_in, total);
+
+    let recovery_ms = match (fired.and_then(|f| *f.lock().unwrap()), recovered_at) {
+        (Some(t0), Some(t1)) if t1 > t0 => t1.duration_since(t0).as_secs_f64() * 1000.0,
+        _ => -1.0,
+    };
+    Outcome {
+        ev_s: report.events_in as f64 / report.wall_time.as_secs_f64(),
+        checkpoints: report.metrics.checkpoints_taken.load(Ordering::Relaxed),
+        recoveries: report.metrics.recoveries.load(Ordering::Relaxed),
+        recovery_ms,
+    }
+}
+
+/// Best-of-`reps` (throughput noise on shared runners only ever slows a
+/// run down, so max is the honest steady-state figure).
+fn best_of(reps: u64, mut f: impl FnMut() -> Outcome) -> Outcome {
+    let mut best = f();
+    for _ in 1..reps {
+        let o = f();
+        if o.ev_s > best.ev_s {
+            best = o;
+        }
+    }
+    best
+}
+
+fn main() {
+    let total = env_u64("RECOVERY_EVENTS", 300_000);
+    let rate = env_u64("RECOVERY_RATE", 25_000) as f64;
+    let ckpt_ms = env_u64("RECOVERY_CKPT_MS", 250);
+    let reps = env_u64("RECOVERY_REPS", 2).max(1);
+    let ratio_pct = env_u64("RECOVERY_RATIO_PCT", 90);
+    println!(
+        "# FlowUnits recovery bench ({total} events, {rate} ev/s per source, \
+         checkpoint every {ckpt_ms} ms, best of {reps})"
+    );
+
+    let off = best_of(reps, || run(total, rate, 0, None));
+    println!("checkpoint_off : {:>12.0} ev/s", off.ev_s);
+    let on = best_of(reps, || run(total, rate, ckpt_ms, None));
+    println!(
+        "checkpoint_on  : {:>12.0} ev/s   ({} checkpoints)",
+        on.ev_s, on.checkpoints
+    );
+    let kill = run(total, rate, ckpt_ms, Some((total / 2) as i64));
+    println!(
+        "kill_recovery  : {:>12.0} ev/s   ({} recoveries, fault→recovery {:.1} ms)",
+        kill.ev_s, kill.recoveries, kill.recovery_ms
+    );
+    assert!(
+        kill.recoveries >= 1,
+        "the injected fault did not trigger a recovery"
+    );
+
+    let ratio = on.ev_s / off.ev_s;
+    println!("on/off ratio   : {ratio:.3} (threshold {:.2})", ratio_pct as f64 / 100.0);
+    assert!(
+        ratio >= ratio_pct as f64 / 100.0,
+        "checkpointing costs more than {}% of steady-state throughput \
+         (off {:.0} ev/s, on {:.0} ev/s)",
+        100 - ratio_pct,
+        off.ev_s,
+        on.ev_s
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"recovery\",\n  \"events\": {total},\n  \"rate_per_source\": {rate},\n  \
+         \"checkpoint_ms\": {ckpt_ms},\n  \"on_off_ratio\": {ratio:.4},\n  \"scenarios\": [\n    \
+         {{\"name\": \"checkpoint_off\", \"throughput_ev_s\": {:.1}}},\n    \
+         {{\"name\": \"checkpoint_on\", \"throughput_ev_s\": {:.1}, \"checkpoints\": {}}},\n    \
+         {{\"name\": \"kill_recovery\", \"throughput_ev_s\": {:.1}, \"recoveries\": {}, \
+         \"recovery_ms\": {:.1}}}\n  ]\n}}\n",
+        off.ev_s, on.ev_s, on.checkpoints, kill.ev_s, kill.recoveries, kill.recovery_ms,
+    );
+    let path = std::env::var("RECOVERY_OUT").unwrap_or_else(|_| "BENCH_recovery.json".into());
+    let mut f = std::fs::File::create(&path).expect("create BENCH_recovery.json");
+    f.write_all(json.as_bytes()).expect("write bench results");
+    println!("\nwrote {path}");
+}

@@ -48,7 +48,7 @@ pub mod data;
 pub mod raw;
 pub mod typed;
 
-pub use crate::coordinator::{CollectHandle, JobConfig, JobReport};
+pub use crate::coordinator::{AutoscaleConfig, CollectHandle, JobConfig, JobReport};
 pub use crate::graph::{Replication, WindowAgg};
 pub use crate::placement::PlannerKind;
 pub use data::{DecodeErrors, Features};

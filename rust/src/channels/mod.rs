@@ -66,6 +66,29 @@ pub enum Msg {
     Epoch(u64),
 }
 
+/// Epoch-kind tag bit: epochs with this bit set are *checkpoint* epochs
+/// (periodic, coordinator-driven state capture) as opposed to planned
+/// drain-and-handoff update epochs. The tag travels inside the existing
+/// `u64` epoch payload, so the in-process channels, the socket EPOCH
+/// frame, and every [`Inbox`] pass it through untouched — only the
+/// endpoints (coordinator, quiesce path) interpret it.
+pub const CHECKPOINT_BIT: u64 = 1 << 63;
+
+/// Tags a sequence number as a checkpoint epoch.
+pub fn checkpoint_epoch(seq: u64) -> u64 {
+    seq | CHECKPOINT_BIT
+}
+
+/// True if `epoch` is a checkpoint epoch (vs. a planned-update epoch).
+pub fn is_checkpoint(epoch: u64) -> bool {
+    epoch & CHECKPOINT_BIT != 0
+}
+
+/// The sequence number of an epoch, with the kind tag stripped.
+pub fn epoch_seq(epoch: u64) -> u64 {
+    epoch & !CHECKPOINT_BIT
+}
+
 /// Hash used to route one record on a [`Routing::Hash`] edge: the pair
 /// key for keyed records, the whole value otherwise. The coordinator's
 /// restore re-partitioning (dynamic updates) must mirror live routing
@@ -591,6 +614,11 @@ pub struct Inbox {
     eos_seen: usize,
     epoch_seen: usize,
     epoch: u64,
+    /// Set when every sender dropped *without* a terminal signal from some
+    /// producer — an upstream crash, not a quiesce or a normal EOS. The
+    /// recovery supervisor uses this to tell "stream genuinely ended" from
+    /// "producer died mid-stream" (the latter must not cascade EOS).
+    disconnected: bool,
     metrics: Option<Metrics>,
 }
 
@@ -603,8 +631,15 @@ impl Inbox {
             eos_seen: 0,
             epoch_seen: 0,
             epoch: 0,
+            disconnected: false,
             metrics: None,
         }
+    }
+
+    /// True if the stream terminated because every sender dropped without
+    /// a terminal signal (producer crash) rather than via EOS/markers.
+    pub fn disconnected(&self) -> bool {
+        self.disconnected
     }
 
     /// Attaches a metrics registry so skipped corrupt frames are counted.
@@ -675,7 +710,10 @@ impl Inbox {
                     // crash), not a quiesce (a quiescing producer's marker
                     // is buffered before its sender drops, so it was
                     // already counted). Fall back to the EOS path so the
-                    // stream terminates instead of quiescing half-drained.
+                    // stream terminates instead of quiescing half-drained,
+                    // and remember the crash so a recovery-enabled consumer
+                    // can exit without cascading a spurious EOS downstream.
+                    self.disconnected = true;
                     self.eos_seen = self.producers;
                     self.epoch_seen = 0;
                 }
@@ -730,7 +768,12 @@ impl Inbox {
                 }
             }
             Err(std::sync::mpsc::TryRecvError::Empty) => None,
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => Some(None),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                if self.terminal().is_none() {
+                    self.disconnected = true;
+                }
+                Some(None)
+            }
         }
     }
 }
@@ -968,6 +1011,34 @@ mod tests {
         tx2.send(Msg::Epoch(3)).unwrap();
         assert!(matches!(inbox.next(), InboxEvent::Batch(b) if b == vec![Value::I64(5)]));
         assert!(matches!(inbox.next(), InboxEvent::Epoch(3)));
+    }
+
+    #[test]
+    fn checkpoint_epochs_round_trip_through_the_tag_bit() {
+        let e = checkpoint_epoch(7);
+        assert!(is_checkpoint(e));
+        assert_eq!(epoch_seq(e), 7);
+        assert!(!is_checkpoint(7));
+        assert_eq!(epoch_seq(7), 7);
+    }
+
+    #[test]
+    fn dropped_senders_mark_the_inbox_disconnected() {
+        let (tx, rx) = sync_channel(8);
+        let mut inbox = Inbox::new(rx, 1);
+        tx.send(Msg::Batch(vec![Value::I64(1)].into())).unwrap();
+        drop(tx); // crash: no EOS, no marker
+        assert!(matches!(inbox.next(), InboxEvent::Batch(_)));
+        assert!(matches!(inbox.next(), InboxEvent::Eos));
+        assert!(inbox.disconnected(), "crash teardown is distinguishable");
+
+        // a normal EOS does NOT set the flag
+        let (tx, rx) = sync_channel(8);
+        let mut inbox = Inbox::new(rx, 1);
+        tx.send(Msg::Eos).unwrap();
+        drop(tx);
+        assert!(matches!(inbox.next(), InboxEvent::Eos));
+        assert!(!inbox.disconnected());
     }
 
     #[test]

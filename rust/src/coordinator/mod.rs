@@ -5,7 +5,7 @@
 //! replacing a FlowUnit's logic and adding a geographical location while
 //! the rest of the deployment keeps running (§III "Dynamic updates").
 
-use crate::channels::{FanOut, Inbox, Msg, OutPort, Target};
+use crate::channels::{checkpoint_epoch, epoch_seq, FanOut, Inbox, Msg, OutPort, Target};
 use crate::config::ClusterSpec;
 use crate::error::{Error, Result};
 use crate::graph::{LogicalGraph, OpKind, SourceKind};
@@ -18,7 +18,7 @@ use crate::runtime::{
         Collector, FilterExec, FilterMapExec, FlatMapExec, FoldExec, KeyByExec, KeyByFusedExec,
         MapExec, ReduceExec, SinkExec, WindowExec, XlaExec,
     },
-    run_instance, Handoff, InputKind, InstanceRuntime, OpExec, SourceRuntime,
+    run_instance, state_record, Handoff, InputKind, InstanceRuntime, OpExec, SourceRuntime,
 };
 use crate::topology::LocationId;
 use crate::transport::{Endpoint, NetsimTransport, Transport};
@@ -57,6 +57,59 @@ pub struct JobConfig {
     /// per-record `Value` allocation). Off ⇒ every typed chain lowers to
     /// the classic `Value` pipeline; results are identical either way.
     pub columnar: bool,
+    /// Interval between coordinator-driven checkpoint epochs (requires
+    /// `decouple_units`). `Some(_)` switches the deployment into
+    /// *checkpoint mode*: every unit roll becomes an atomically-committed
+    /// checkpoint (state + covered input offsets in the unit's state
+    /// topic, offsets advanced by the coordinator only after the whole
+    /// unit-zone quiesced), and an instance-thread death triggers
+    /// recovery from the last committed checkpoint instead of failing
+    /// the job. `None` keeps the legacy behavior: planned hot-swaps
+    /// only, per-drain offset commits, fail-fast on panics.
+    pub checkpoint_interval: Option<Duration>,
+    /// Lag-driven elastic rescaling policy (None ⇒ autoscaler off).
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+/// Policy of the lag-driven autoscaler: how the control loop inside
+/// [`Deployment::wait`] turns sustained queue lag on a unit's entry
+/// topics into replication changes. Scaling rides the planned-update
+/// path (placement re-plan + zone-by-zone drain/splice), so records are
+/// neither lost nor duplicated by a scale action.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Sampling period of the per-unit lag probe.
+    pub sample_interval: Duration,
+    /// Total entry-topic lag (records appended but not committed by the
+    /// unit's consumer groups) at or above which the unit counts as
+    /// overloaded.
+    pub scale_up_lag: u64,
+    /// Lag at or below which the unit counts as drained.
+    pub scale_down_lag: u64,
+    /// Consecutive samples past a threshold before the autoscaler acts
+    /// (hysteresis against transient spikes).
+    pub samples: u32,
+    /// Minimum wait between consecutive scale actions on the same unit.
+    pub cooldown: Duration,
+    /// Per-zone replication floor for scale-down.
+    pub min_instances: usize,
+    /// Per-zone replication ceiling for scale-up (additionally capped by
+    /// the entry topics' partition counts, which are fixed at launch).
+    pub max_instances: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            sample_interval: Duration::from_millis(100),
+            scale_up_lag: 10_000,
+            scale_down_lag: 1_000,
+            samples: 3,
+            cooldown: Duration::from_secs(2),
+            min_instances: 1,
+            max_instances: 8,
+        }
+    }
 }
 
 impl Default for JobConfig {
@@ -71,6 +124,8 @@ impl Default for JobConfig {
             poll_timeout: Duration::from_millis(50),
             poll_max_records: 64,
             columnar: true,
+            checkpoint_interval: None,
+            autoscale: None,
         }
     }
 }
@@ -98,6 +153,15 @@ pub struct JobReport {
     pub corrupt_records: u64,
     /// Plan summary (stages → per-zone instance counts).
     pub plan_description: String,
+    /// Per-topic queue lag at completion — records appended to each
+    /// decoupling topic minus records its consumer group committed,
+    /// keyed by topic name. 0 everywhere in a fully drained run; the
+    /// same probe feeds the autoscaler while the job runs.
+    pub queue_lag: BTreeMap<String, u64>,
+    /// Batches processed per instance id — the per-instance throughput
+    /// signal the control plane samples, surfaced for observability.
+    /// Instances that processed no batch are omitted.
+    pub instance_batches: BTreeMap<usize, u64>,
     /// Full metrics registry snapshot.
     pub metrics: Metrics,
     /// Values gathered by typed (tagged) collect sinks, keyed by sink
@@ -234,6 +298,18 @@ struct TopicRuntime {
     expected_producers: Arc<AtomicUsize>,
 }
 
+/// What one unit-zone's quiesce records hand the control plane: operator
+/// state to restore into the replacement instances, and the input
+/// offsets that state covers (to be committed if the roll is a
+/// checkpoint).
+#[derive(Default)]
+struct ZoneState {
+    /// Instance id → per-executor restore entries.
+    restores: HashMap<usize, Vec<Value>>,
+    /// Stage → (partition → next offset) covered by the records.
+    offsets: BTreeMap<usize, BTreeMap<usize, usize>>,
+}
+
 /// A running deployment.
 pub struct Deployment {
     graph: LogicalGraph,
@@ -258,10 +334,22 @@ pub struct Deployment {
     /// graph + every update_unit replacement), for CollectHandle
     /// validation in the final report.
     origins: BTreeSet<u64>,
-    /// Deployment-wide drain-and-handoff epoch, bumped once per
-    /// `update_unit` before any stop flag is raised; quiescing instances
-    /// stamp their state snapshots (and markers) with it.
+    /// Deployment-wide drain-and-handoff epoch, bumped once per roll
+    /// (planned update, periodic checkpoint, or rescale) before any stop
+    /// flag is raised; quiescing instances stamp their state snapshots
+    /// (and markers) with it. In checkpoint mode the stamp carries the
+    /// [`crate::channels::CHECKPOINT_BIT`] tag.
     update_epoch: Arc<AtomicU64>,
+    /// Last *committed* checkpoint per (unit, zone): the stamped
+    /// checkpoint epoch and the state-topic offset its records start at.
+    /// Recovery restores from here; a roll that dies before its commit
+    /// marker leaves the previous entry in force.
+    checkpoints: HashMap<(usize, String), (u64, usize)>,
+    /// Per-instance end-of-stream flags, set by each instance on its
+    /// normal EOS path. Checkpoint-mode rolls and recoveries consult
+    /// them so an instance that already finished is not respawned into a
+    /// second end-of-stream toward downstream topics.
+    inst_done: HashMap<usize, Arc<AtomicBool>>,
     started: Instant,
 }
 
@@ -299,6 +387,8 @@ impl Deployment {
             unit_stops: BTreeMap::new(),
             origins,
             update_epoch: Arc::new(AtomicU64::new(0)),
+            checkpoints: HashMap::new(),
+            inst_done: HashMap::new(),
             started: Instant::now(),
         };
         dep.wire_and_spawn()?;
@@ -386,10 +476,26 @@ impl Deployment {
                     continue;
                 }
                 let name = format!("fu-s{}-{zone}", edge.to_stage);
-                let topic = broker.topic(&name, insts.len())?;
+                // partition count = the zone's core capacity (at least the
+                // planned instance count): partition ownership is
+                // round-robin, so extra partitions cost only idle ingest
+                // threads while leaving headroom for the autoscaler to
+                // raise replication beyond the launch instance count
+                let capacity: usize = topo
+                    .hosts
+                    .values()
+                    .filter(|h| h.zone == zone)
+                    .map(|h| h.cores)
+                    .sum();
+                let topic = broker.topic(&name, insts.len().max(capacity))?;
                 let expected = Arc::new(AtomicUsize::new(0));
                 let mut ingest = Vec::new();
-                for p in 0..insts.len() {
+                // one ingest thread per partition (not per instance):
+                // producers hash-route over the ingest senders, so the
+                // sender count must equal the partition count for the
+                // checkpoint re-partition mapping to agree with routing —
+                // and every partition needs its EOS-driven close
+                for p in 0..topic.partitions() {
                     let (tx, rx) = sync_channel::<Msg>(self.config.channel_capacity);
                     ingest.push(tx);
                     let topic2 = topic.clone();
@@ -509,6 +615,7 @@ impl Deployment {
                     poll_timeout: self.config.poll_timeout,
                     poll_max: self.config.poll_max_records.max(1),
                     stop: unit_stop,
+                    commit_each_drain: self.config.checkpoint_interval.is_none(),
                 }
             } else {
                 let rx = inst_rx.remove(&inst.id).ok_or_else(|| {
@@ -578,12 +685,18 @@ impl Deployment {
             // hot-swappable, and without a queue substrate neither is
             // anything else)
             let handoff = match (&self.broker, stage.is_source()) {
-                (Some(broker), false) => Some(Handoff {
-                    state_topic: broker.topic(&unit_state_topic(stage.unit_index), 1)?,
-                    stage: inst.stage,
-                    zone: inst.zone.clone(),
-                    epoch: self.update_epoch.clone(),
-                }),
+                (Some(broker), false) => {
+                    let done = Arc::new(AtomicBool::new(false));
+                    self.inst_done.insert(inst.id, done.clone());
+                    Some(Handoff {
+                        state_topic: broker.topic(&unit_state_topic(stage.unit_index), 1)?,
+                        stage: inst.stage,
+                        zone: inst.zone.clone(),
+                        epoch: self.update_epoch.clone(),
+                        checkpoint: self.config.checkpoint_interval.is_some(),
+                        eos_done: done,
+                    })
+                }
                 _ => None,
             };
 
@@ -791,7 +904,7 @@ impl Deployment {
 
         // the epoch is bumped *before* any stop flag so quiescing
         // instances stamp their snapshots and markers consistently
-        let epoch = self.update_epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        let epoch = self.bump_epoch();
         // this epoch's snapshots land at or after the current end of the
         // state topic — remember it so restore scans skip older epochs'
         // records instead of re-decoding the whole history every update
@@ -810,6 +923,34 @@ impl Deployment {
         // roll the unit zone by zone: quiesce, collect handed-off state,
         // respawn with restores — replicas in other zones keep running
         // until their turn
+        for zone in self.unit_zones(unit) {
+            self.roll_zone(unit, &unit_stages, &zone, epoch, scan_from)?;
+        }
+        MetricsRegistry::add(
+            &self.metrics.update_pause_ms,
+            t0.elapsed().as_millis() as u64,
+        );
+        Ok(())
+    }
+
+    /// Advances the deployment epoch for one roll and returns the stamped
+    /// value. In checkpoint mode every roll is a checkpoint, so the stamp
+    /// carries the checkpoint tag bit. All rolls run on the coordinator
+    /// thread, so a plain load-compute-store cannot race.
+    fn bump_epoch(&self) -> u64 {
+        let seq = epoch_seq(self.update_epoch.load(Ordering::SeqCst)) + 1;
+        let stamped = if self.config.checkpoint_interval.is_some() {
+            checkpoint_epoch(seq)
+        } else {
+            seq
+        };
+        self.update_epoch.store(stamped, Ordering::SeqCst);
+        stamped
+    }
+
+    /// Every zone the unit has planned instances (or still-tracked
+    /// threads) in.
+    fn unit_zones(&self, unit: usize) -> BTreeSet<String> {
         let mut zones: BTreeSet<String> = self
             .plan
             .instances
@@ -822,44 +963,110 @@ impl Deployment {
                 zones.insert(key.1.clone());
             }
         }
-        for zone in zones {
-            if let Some(stop) = self.unit_stops.get(&(unit, zone.clone())) {
-                stop.store(true, Ordering::SeqCst);
-                // wake only the consumers this stop flag targets (topics
-                // feeding the unit's stages in this zone) so the flag is
-                // observed immediately instead of after a full poll
-                // timeout — shrinks the update pause window without a
-                // job-wide wake storm
-                for (key, tr) in &self.topics {
-                    if unit_stages.contains(&key.0) && key.1 == zone {
-                        tr.topic.kick();
-                    }
+        zones
+    }
+
+    /// Quiesces, collects, (in checkpoint mode) commits, and respawns one
+    /// unit-zone — the shared building block of planned updates, periodic
+    /// checkpoints, rescaling, and recovery. If a thread of the zone
+    /// turns out to have *panicked* rather than quiesced, the roll
+    /// degrades into a recovery from the last committed checkpoint
+    /// instead of trusting the partial quiesce records.
+    fn roll_zone(
+        &mut self,
+        unit: usize,
+        unit_stages: &BTreeSet<usize>,
+        zone: &str,
+        epoch: u64,
+        scan_from: usize,
+    ) -> Result<()> {
+        self.stop_zone(unit, unit_stages, zone);
+        if self.join_zone(unit, zone) > 0 {
+            return self.restore_zone_from_checkpoint(unit, zone);
+        }
+        let state = self.collect_zone_state(unit, zone, epoch, scan_from)?;
+        if self.config.checkpoint_interval.is_some() {
+            self.commit_checkpoint(unit, zone, epoch, scan_from, &state)?;
+        }
+        self.respawn_zone(unit, zone, &state.restores)
+    }
+
+    /// Raises the zone's stop flag and wakes only the consumers it
+    /// targets (topics feeding the unit's stages in this zone) so the
+    /// flag is observed immediately instead of after a full poll timeout
+    /// — shrinks the pause window without a job-wide wake storm.
+    fn stop_zone(&self, unit: usize, unit_stages: &BTreeSet<usize>, zone: &str) {
+        if let Some(stop) = self.unit_stops.get(&(unit, zone.to_string())) {
+            stop.store(true, Ordering::SeqCst);
+            for (key, tr) in &self.topics {
+                if unit_stages.contains(&key.0) && key.1 == zone {
+                    tr.topic.kick();
                 }
             }
-            for h in self
-                .unit_threads
-                .remove(&(unit, zone.clone()))
-                .unwrap_or_default()
-            {
-                let _ = h.join();
-            }
-            let restores = self.collect_restores(unit, &zone, epoch, scan_from)?;
-            self.unit_stops
-                .insert((unit, zone.clone()), Arc::new(AtomicBool::new(false)));
-            let insts: Vec<_> = self
-                .plan
-                .instances
-                .iter()
-                .filter(|i| self.plan.stages[i.stage].unit_index == unit && i.zone == zone)
-                .cloned()
-                .collect();
-            self.spawn_set(&insts, false, &restores)?;
         }
-        MetricsRegistry::add(
-            &self.metrics.update_pause_ms,
-            t0.elapsed().as_millis() as u64,
-        );
-        Ok(())
+    }
+
+    /// Joins every tracked thread of the unit-zone; returns how many of
+    /// them panicked instead of exiting cleanly.
+    fn join_zone(&mut self, unit: usize, zone: &str) -> usize {
+        let mut panicked = 0;
+        for h in self
+            .unit_threads
+            .remove(&(unit, zone.to_string()))
+            .unwrap_or_default()
+        {
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        panicked
+    }
+
+    /// Arms a fresh stop flag and respawns the unit-zone's instances with
+    /// `restores`. In checkpoint mode, instances that already delivered
+    /// their end-of-stream are not resurrected: replaying a finished
+    /// exit-stage instance would send downstream topics a second EOS and
+    /// close them early. A zone whose instances *all* finished respawns
+    /// nothing; a partially-finished zone with internal direct channels
+    /// respawns everything (safe — the finished instances re-emit EOS on
+    /// the *internal* channels only, and an exit stage cannot have
+    /// finished while a sibling still runs).
+    fn respawn_zone(
+        &mut self,
+        unit: usize,
+        zone: &str,
+        restores: &HashMap<usize, Vec<Value>>,
+    ) -> Result<()> {
+        self.unit_stops
+            .insert((unit, zone.to_string()), Arc::new(AtomicBool::new(false)));
+        let insts: Vec<_> = self
+            .plan
+            .instances
+            .iter()
+            .filter(|i| self.plan.stages[i.stage].unit_index == unit && i.zone == zone)
+            .cloned()
+            .collect();
+        let set: Vec<_> = if self.config.checkpoint_interval.is_some() {
+            let done = |i: &crate::placement::InstancePlan| {
+                self.inst_done
+                    .get(&i.id)
+                    .is_some_and(|d| d.load(Ordering::SeqCst))
+            };
+            let stages: BTreeSet<usize> = insts.iter().map(|i| i.stage).collect();
+            let internal_direct = self.plan.edges.iter().any(|e| {
+                !e.decoupled && stages.contains(&e.from_stage) && stages.contains(&e.to_stage)
+            });
+            if insts.iter().all(done) {
+                Vec::new()
+            } else if internal_direct {
+                insts
+            } else {
+                insts.into_iter().filter(|i| !done(i)).collect()
+            }
+        } else {
+            insts
+        };
+        self.spawn_set(&set, false, restores)
     }
 
     /// Re-runs placement for one unit (constraint/replication changed) and
@@ -977,23 +1184,245 @@ impl Deployment {
         Ok(())
     }
 
+    /// Commits one unit-zone checkpoint: advances the zone's consumer
+    /// groups to the offsets its quiesce records cover, then appends the
+    /// commit marker (a `stage = -1` record) to the unit's state topic
+    /// and publishes the checkpoint for recovery. Ordering is the
+    /// atomicity argument: a roll that dies *before* the marker leaves
+    /// the previous checkpoint in force, and since offsets only advance
+    /// here — never inside the instances — replay after a mid-roll crash
+    /// re-reads everything the dead roll had consumed.
+    fn commit_checkpoint(
+        &mut self,
+        unit: usize,
+        zone: &str,
+        epoch: u64,
+        scan_from: usize,
+        state: &ZoneState,
+    ) -> Result<()> {
+        for (&stage, parts) in &state.offsets {
+            if let Some(tr) = self.topics.get(&(stage, zone.to_string())) {
+                let group = format!("unit{unit}-{zone}");
+                for (&p, &off) in parts {
+                    tr.topic.partition(p).commit(&group, off);
+                }
+            }
+        }
+        let broker = self
+            .broker
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("checkpoint without queue substrate".into()))?;
+        let marker = state_record(-1, zone, epoch, Vec::new(), &[]);
+        let topic = broker.topic(&unit_state_topic(unit), 1)?;
+        if topic.partition(0).append(&marker.encode()).is_err() {
+            MetricsRegistry::add(&self.metrics.state_append_failures, 1);
+            return Err(Error::Runtime(
+                "state topic rejected the checkpoint commit marker".into(),
+            ));
+        }
+        self.checkpoints
+            .insert((unit, zone.to_string()), (epoch, scan_from));
+        MetricsRegistry::add(&self.metrics.checkpoints_taken, 1);
+        Ok(())
+    }
+
+    /// Respawns a unit-zone from its last *committed* checkpoint: state
+    /// snapshots are re-read from the checkpoint's records, and the queue
+    /// consumers resume from the group offsets the checkpoint committed —
+    /// anything consumed after it is replayed. Quiesce records any
+    /// surviving siblings wrote while being stopped are deliberately
+    /// ignored (they are stamped with a fresher epoch): state and offsets
+    /// must rewind *together* or replay would double-count.
+    ///
+    /// Without checkpoint mode this degenerates into the legacy fail-fast
+    /// error.
+    fn restore_zone_from_checkpoint(&mut self, unit: usize, zone: &str) -> Result<()> {
+        if self.config.checkpoint_interval.is_none() {
+            return Err(Error::Runtime("instance thread panicked".into()));
+        }
+        let restores = match self.checkpoints.get(&(unit, zone.to_string())).copied() {
+            Some((epoch, scan_from)) => {
+                self.collect_zone_state(unit, zone, epoch, scan_from)?.restores
+            }
+            // no checkpoint committed yet: restart from scratch — the
+            // group offsets were never advanced, so the entry topics
+            // replay from the beginning
+            None => HashMap::new(),
+        };
+        MetricsRegistry::add(&self.metrics.recoveries, 1);
+        self.respawn_zone(unit, zone, &restores)
+    }
+
+    /// **Unplanned-failure recovery**: called when an instance thread of
+    /// the unit-zone is found dead. Stops and joins the surviving
+    /// siblings (their fresh quiesce records are ignored — the epoch is
+    /// bumped first so they cannot alias the checkpoint being restored),
+    /// then respawns the whole unit-zone from the last committed
+    /// checkpoint. Source units are not recoverable (their progress lives
+    /// outside the queue substrate), nor is anything without checkpoint
+    /// mode — those fail the job exactly as before.
+    fn recover_unit_zone(&mut self, unit: usize, zone: &str) -> Result<()> {
+        let Some(unit_stages) = self.unit_rollable(unit) else {
+            return Err(Error::Runtime("instance thread panicked".into()));
+        };
+        self.bump_epoch();
+        self.stop_zone(unit, &unit_stages, zone);
+        self.join_zone(unit, zone);
+        self.restore_zone_from_checkpoint(unit, zone)
+    }
+
+    /// Returns the unit's stage set if the unit can be rolled: non-source,
+    /// every boundary edge queue-decoupled, FlowUnits planner — the same
+    /// preconditions `update_unit_at` enforces, in predicate form for the
+    /// checkpoint and autoscale ticks.
+    fn unit_rollable(&self, unit: usize) -> Option<BTreeSet<usize>> {
+        let unit_stages: BTreeSet<usize> = self
+            .plan
+            .stages
+            .iter()
+            .filter(|s| s.unit_index == unit)
+            .map(|s| s.index)
+            .collect();
+        if unit_stages.is_empty()
+            || self
+                .plan
+                .stages
+                .iter()
+                .any(|s| unit_stages.contains(&s.index) && s.is_source())
+            || self.plan.edges.iter().any(|e| {
+                !e.decoupled
+                    && (unit_stages.contains(&e.to_stage) != unit_stages.contains(&e.from_stage))
+            })
+            || self.broker.is_none()
+            || self.plan.planner != PlannerKind::FlowUnits
+        {
+            return None;
+        }
+        Some(unit_stages)
+    }
+
+    /// Takes a coordinated checkpoint of every rollable unit that still
+    /// has live instances: each unit-zone quiesces, its state and covered
+    /// offsets land in the state topic, the coordinator commits and
+    /// respawns it restored. Public so tests (and embedding applications)
+    /// can force a checkpoint at a deterministic point; the supervisor
+    /// calls it on every `checkpoint_interval` tick.
+    pub fn checkpoint(&mut self) -> Result<()> {
+        for unit in 0..self.graph.units.len() {
+            let Some(unit_stages) = self.unit_rollable(unit) else {
+                continue;
+            };
+            let zones: Vec<String> = self
+                .unit_threads
+                .keys()
+                .filter(|k| k.0 == unit)
+                .map(|k| k.1.clone())
+                .collect();
+            if zones.is_empty() {
+                continue;
+            }
+            let epoch = self.bump_epoch();
+            let scan_from = match &self.broker {
+                Some(broker) => broker.topic(&unit_state_topic(unit), 1)?.partition(0).len(),
+                None => 0,
+            };
+            for zone in zones {
+                self.roll_zone(unit, &unit_stages, &zone, epoch, scan_from)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Current per-zone instance count of a unit (max across its zones
+    /// and stages).
+    fn unit_replication(&self, unit: usize) -> usize {
+        let mut per_zone: BTreeMap<(&str, usize), usize> = BTreeMap::new();
+        for i in &self.plan.instances {
+            if self.plan.stages[i.stage].unit_index == unit {
+                *per_zone.entry((i.zone.as_str(), i.stage)).or_default() += 1;
+            }
+        }
+        per_zone.values().copied().max().unwrap_or(0)
+    }
+
+    /// One autoscaler sample: probes every rollable unit's entry-topic
+    /// lag, updates its hysteresis streaks, and — when a streak crosses
+    /// the configured sample count outside the cooldown window — steps
+    /// the unit's replication by one through the planned-update path.
+    fn autoscale_tick(
+        &mut self,
+        a: &AutoscaleConfig,
+        streaks: &mut HashMap<usize, (u32, u32)>,
+        last_action: &mut HashMap<usize, Instant>,
+    ) -> Result<()> {
+        for unit in 0..self.graph.units.len() {
+            let Some(unit_stages) = self.unit_rollable(unit) else {
+                continue;
+            };
+            let mut lag = 0u64;
+            let mut part_cap = usize::MAX;
+            for ((stage, zone), tr) in &self.topics {
+                if unit_stages.contains(stage) {
+                    lag += tr.topic.lag(&format!("unit{unit}-{zone}"));
+                    part_cap = part_cap.min(tr.topic.partitions());
+                }
+            }
+            if part_cap == usize::MAX {
+                continue; // no entry topics — nothing to scale on
+            }
+            let (mut ups, mut downs) = streaks.get(&unit).copied().unwrap_or((0, 0));
+            ups = if lag >= a.scale_up_lag { ups + 1 } else { 0 };
+            downs = if lag <= a.scale_down_lag { downs + 1 } else { 0 };
+            streaks.insert(unit, (ups, downs));
+            let cur = self.unit_replication(unit);
+            let max = a.max_instances.min(part_cap);
+            let target = if ups >= a.samples && cur < max {
+                cur + 1
+            } else if downs >= a.samples && cur > a.min_instances.max(1) {
+                cur - 1
+            } else {
+                continue;
+            };
+            let cooled = last_action
+                .get(&unit)
+                .map_or(true, |t| t.elapsed() >= a.cooldown);
+            if !cooled {
+                continue;
+            }
+            streaks.insert(unit, (0, 0));
+            last_action.insert(unit, Instant::now());
+            let mut g = self.graph.clone();
+            g.units[unit].replication = crate::graph::Replication::Fixed(target);
+            self.update_unit_at(unit, g)?;
+            if target > cur {
+                MetricsRegistry::add(&self.metrics.autoscale_ups, 1);
+            } else {
+                MetricsRegistry::add(&self.metrics.autoscale_downs, 1);
+            }
+        }
+        Ok(())
+    }
+
     /// Reads the unit's state topic and partitions the snapshot entries of
     /// `zone` at `epoch` across the unit's (new) instances, mirroring the
     /// key routing each stage's input applies: keys of a queue-fed stage
     /// land on partition `hash % P` owned by instance `(hash % P) % n`;
     /// keys of an inbox-fed stage come from a hash-routed port at
-    /// `hash % n`. Corrupt state records are skipped and counted.
+    /// `hash % n`. Also gathers the input offsets the records declare
+    /// covered, which a checkpoint commit advances the consumer groups
+    /// to. Corrupt state records are skipped and counted; `stage = -1`
+    /// commit markers are ignored.
     ///
-    /// `scan_from`: state-topic offset recorded when the update began —
+    /// `scan_from`: state-topic offset recorded when the roll began —
     /// records before it belong to earlier epochs and are skipped without
     /// decoding.
-    fn collect_restores(
+    fn collect_zone_state(
         &self,
         unit: usize,
         zone: &str,
         epoch: u64,
         scan_from: usize,
-    ) -> Result<HashMap<usize, Vec<Value>>> {
+    ) -> Result<ZoneState> {
         let broker = self
             .broker
             .as_ref()
@@ -1001,35 +1430,55 @@ impl Deployment {
         let topic = broker.topic(&unit_state_topic(unit), 1)?;
         let part = topic.partition(0);
         let mut out: HashMap<usize, Vec<Value>> = HashMap::new();
+        let mut offsets: BTreeMap<usize, BTreeMap<usize, usize>> = BTreeMap::new();
         let n_records = part.len();
         if n_records <= scan_from {
-            return Ok(out);
+            return Ok(ZoneState::default());
         }
         let records = match part.poll(scan_from, n_records - scan_from, Duration::ZERO) {
             Some((recs, _)) => recs,
-            None => return Ok(out),
+            None => return Ok(ZoneState::default()),
         };
         // stage → per-executor entry lists, merged across the zone's
         // quiesced instances
         let mut per_stage: BTreeMap<usize, Vec<Vec<Value>>> = BTreeMap::new();
         for rec in records {
-            let v = match Value::decode_exact(&rec) {
-                Ok(v) => v,
+            let fields = match Value::decode_exact(&rec) {
+                Ok(Value::List(f)) if f.len() == 5 => f,
+                Ok(_) => continue,
                 Err(_) => {
                     MetricsRegistry::add(&self.metrics.corrupt_records, 1);
                     continue;
                 }
             };
-            let Some((head, body)) = v.into_pair() else { continue };
-            let Some((stage_v, zone_v)) = head.into_pair() else { continue };
-            let Some((epoch_v, snaps_v)) = body.into_pair() else { continue };
+            let mut fields = fields.into_iter();
+            let (stage_v, zone_v, epoch_v, snaps_v, offs_v) = (
+                fields.next().unwrap(),
+                fields.next().unwrap(),
+                fields.next().unwrap(),
+                fields.next().unwrap(),
+                fields.next().unwrap(),
+            );
             let (Some(stage), Some(rec_zone), Some(rec_epoch)) =
                 (stage_v.as_i64(), zone_v.as_str(), epoch_v.as_i64())
             else {
                 continue;
             };
-            if rec_zone != zone || rec_epoch != epoch as i64 {
+            // the epoch comparison goes through the same `as i64` cast the
+            // writer applied, so checkpoint-tagged stamps compare exactly
+            if rec_zone != zone || rec_epoch != epoch as i64 || stage < 0 {
                 continue;
+            }
+            if let Value::List(offs) = offs_v {
+                let covered = offsets.entry(stage as usize).or_default();
+                for pr in offs {
+                    if let Some((p_v, o_v)) = pr.into_pair() {
+                        if let (Some(p), Some(o)) = (p_v.as_i64(), o_v.as_i64()) {
+                            let slot = covered.entry(p as usize).or_default();
+                            *slot = (*slot).max(o as usize);
+                        }
+                    }
+                }
             }
             let Value::List(snaps) = snaps_v else { continue };
             let slot = per_stage
@@ -1081,7 +1530,10 @@ impl Deployment {
                 }
             }
         }
-        Ok(out)
+        Ok(ZoneState {
+            restores: out,
+            offsets,
+        })
     }
 
     /// **Dynamic update**: enables a new location while the job runs.
@@ -1175,13 +1627,24 @@ impl Deployment {
 
     /// Waits for the job to finish, tears down links, and reports.
     ///
-    /// Fail-fast semantics: if any instance thread panicked (a user
-    /// closure fault), the first failed join surfaces as
+    /// Legacy (no checkpoint interval, no autoscaler) semantics are
+    /// fail-fast: if any instance thread panicked (a user closure
+    /// fault), the first failed join surfaces as
     /// `Error::Runtime("instance thread panicked")` immediately;
     /// downstream threads of the failed unit are abandoned to process
     /// teardown rather than joined (they may be blocked on an EOS that
     /// will never arrive).
+    ///
+    /// With `checkpoint_interval` or `autoscale` configured, waiting
+    /// becomes supervision (see [`Deployment::supervise`]): dead
+    /// unit-zones are recovered from their last committed checkpoint
+    /// instead of failing the job, checkpoints are taken on the
+    /// configured interval, and the autoscaler steps replication with
+    /// queue lag.
     pub fn wait(mut self) -> Result<JobReport> {
+        if self.config.checkpoint_interval.is_some() || self.config.autoscale.is_some() {
+            self.supervise()?;
+        }
         for (_, handles) in std::mem::take(&mut self.unit_threads) {
             for h in handles {
                 h.join().map_err(|_| Error::Runtime("instance thread panicked".into()))?;
@@ -1192,7 +1655,16 @@ impl Deployment {
         }
         self.netsim.shutdown_links();
         let wall_time = self.started.elapsed();
+        let queue_lag = self.queue_lags();
         let m = &self.metrics;
+        let instance_batches = m
+            .labelled_snapshot()
+            .into_iter()
+            .filter_map(|(k, v)| {
+                let id = k.strip_prefix("inst.")?.strip_suffix(".batches")?;
+                Some((id.parse().ok()?, v))
+            })
+            .collect();
         Ok(JobReport {
             wall_time,
             events_in: m.events_in.load(Ordering::Relaxed),
@@ -1203,10 +1675,89 @@ impl Deployment {
             wire_encodes: m.batch_encodes.load(Ordering::Relaxed),
             corrupt_records: m.corrupt_records.load(Ordering::Relaxed),
             plan_description: self.plan.describe(&self.graph),
+            queue_lag,
+            instance_batches,
             metrics: self.metrics.clone(),
             collected_tagged: std::mem::take(&mut *self.collector.tagged.lock().unwrap()),
             origins: std::mem::take(&mut self.origins),
         })
+    }
+
+    /// Live per-topic queue lag (records appended minus records the
+    /// consuming unit's group committed), keyed by topic name — the
+    /// autoscaler's input, exposed for observability.
+    pub fn queue_lags(&self) -> BTreeMap<String, u64> {
+        self.topics
+            .iter()
+            .map(|((stage, zone), tr)| {
+                let unit = self.plan.stages[*stage].unit_index;
+                (
+                    format!("fu-s{stage}-{zone}"),
+                    tr.topic.lag(&format!("unit{unit}-{zone}")),
+                )
+            })
+            .collect()
+    }
+
+    /// The control loop of checkpoint mode. Repeatedly:
+    ///
+    /// - **reaps** finished instance threads — a clean exit is collected,
+    ///   a panic triggers [`Deployment::recover_unit_zone`] for its
+    ///   unit-zone (which fails the job only if the unit is not
+    ///   recoverable, e.g. a source unit or no checkpoint substrate);
+    /// - **checkpoints** every rollable unit each `checkpoint_interval`;
+    /// - **autoscales** on the configured lag policy.
+    ///
+    /// Returns once every instance thread has exited cleanly.
+    fn supervise(&mut self) -> Result<()> {
+        let auto = self.config.autoscale.clone();
+        let mut last_ckpt = Instant::now();
+        let mut last_sample = Instant::now();
+        let mut streaks: HashMap<usize, (u32, u32)> = HashMap::new();
+        let mut last_action: HashMap<usize, Instant> = HashMap::new();
+        loop {
+            let keys: Vec<(usize, String)> = self.unit_threads.keys().cloned().collect();
+            let mut dead: Vec<(usize, String)> = Vec::new();
+            for key in keys {
+                let mut handles = self.unit_threads.remove(&key).unwrap_or_default();
+                let mut live = Vec::new();
+                let mut panicked = false;
+                for h in handles.drain(..) {
+                    if h.is_finished() {
+                        if h.join().is_err() {
+                            panicked = true;
+                        }
+                    } else {
+                        live.push(h);
+                    }
+                }
+                if !live.is_empty() {
+                    self.unit_threads.insert(key.clone(), live);
+                }
+                if panicked {
+                    dead.push(key);
+                }
+            }
+            for (unit, zone) in dead {
+                self.recover_unit_zone(unit, &zone)?;
+            }
+            if self.unit_threads.is_empty() {
+                return Ok(());
+            }
+            if let Some(iv) = self.config.checkpoint_interval {
+                if last_ckpt.elapsed() >= iv {
+                    self.checkpoint()?;
+                    last_ckpt = Instant::now();
+                }
+            }
+            if let Some(a) = &auto {
+                if last_sample.elapsed() >= a.sample_interval {
+                    last_sample = Instant::now();
+                    self.autoscale_tick(a, &mut streaks, &mut last_action)?;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
     }
 }
 

@@ -70,6 +70,10 @@ pub enum Replication {
     PerHost,
     /// A single instance per zone (on the first satisfying host).
     PerZone,
+    /// Exactly `n` instances per zone (at least one), spread round-robin
+    /// across the satisfying hosts' cores. The autoscaler steps a unit's
+    /// replication through this policy; it is equally usable by hand.
+    Fixed(usize),
 }
 
 /// A first-class FlowUnit: the unit of placement, replication, and

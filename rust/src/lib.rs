@@ -90,8 +90,8 @@ pub mod value;
 /// builder remains available under [`api::raw`].
 pub mod prelude {
     pub use crate::api::{
-        CollectHandle, Features, JobConfig, KeyedStream, PlannerKind, Replication, Source,
-        Stream, StreamContext, StreamData, WindowAgg,
+        AutoscaleConfig, CollectHandle, Features, JobConfig, KeyedStream, PlannerKind,
+        Replication, Source, Stream, StreamContext, StreamData, WindowAgg,
     };
     pub use crate::config::ClusterSpec;
     pub use crate::coordinator::{Coordinator, Deployment, JobReport};

@@ -49,7 +49,7 @@ fn print_help() {
          flowunits run  --pipeline {names} [--planner ...] [--events N] [--bw 100Mbit] [--lat 10ms] [--show-collected]\n  \
          flowunits fig3 [--events N]\n  \
          flowunits coordinator --listen <addr> [--workers N] [--pipeline {names}] [--events N]\n                        \
-         [--heartbeat-ms MS] [--timeout-s S] [--show-collected]\n  \
+         [--heartbeat-ms MS] [--checkpoint-ms MS] [--timeout-s S] [--show-collected]\n  \
          flowunits worker --connect <addr> --id <worker-id> [--zone Z] [--hosts h1,h2] [--state-dir DIR]\n\n\
          Addresses containing '/' are Unix domain socket paths; anything else is host:port TCP.\n",
         names = pipelines::NAMES.join("|"),
@@ -199,8 +199,13 @@ fn cmd_coordinator(args: &[String]) -> flowunits::error::Result<()> {
             .and_then(|s| s.parse().ok())
             .unwrap_or(60),
     );
+    let checkpoint = flag(args, "--checkpoint-ms")
+        .and_then(|s| s.parse().ok())
+        .filter(|&ms: &u64| ms > 0)
+        .map(Duration::from_millis);
     let mut daemon =
         CoordinatorDaemon::start(Addr::parse(listen), heartbeat, MetricsRegistry::new())?;
+    daemon.set_checkpoint_interval(checkpoint);
     println!("coordinator listening on {} — waiting for {workers} worker(s)", daemon.addr());
     let outcome = daemon.run_job(pipeline, events, workers, timeout);
     daemon.shutdown_workers();

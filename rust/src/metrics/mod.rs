@@ -63,6 +63,20 @@ pub struct MetricsRegistry {
     /// Milliseconds spent quiescing + respawning units across all dynamic
     /// updates (the total update pause window).
     pub update_pause_ms: AtomicU64,
+    /// Checkpoint records committed to per-unit state topics (one per
+    /// unit-zone per completed checkpoint epoch).
+    pub checkpoints_taken: AtomicU64,
+    /// State-topic appends that failed (closed topic, poisoned partition).
+    /// A failed append means the checkpoint/handoff record was *dropped* —
+    /// surfaced here instead of silently discarded.
+    pub state_append_failures: AtomicU64,
+    /// Unit-zone recoveries performed after an instance thread died
+    /// (respawn from last committed checkpoint + replay).
+    pub recoveries: AtomicU64,
+    /// Autoscaler scale-up actions (replication raised under lag).
+    pub autoscale_ups: AtomicU64,
+    /// Autoscaler scale-down actions (replication lowered when lag drained).
+    pub autoscale_downs: AtomicU64,
     /// Bytes written to real transport sockets (length prefixes included).
     pub transport_bytes_sent: AtomicU64,
     /// Bytes read from real transport sockets.
@@ -164,6 +178,23 @@ impl MetricsRegistry {
         let up = self.update_pause_ms.load(Ordering::Relaxed);
         if ef + up > 0 {
             s.push_str(&format!("update epochs/ms : {ef} / {up}\n"));
+        }
+        let ck = self.checkpoints_taken.load(Ordering::Relaxed);
+        if ck > 0 {
+            s.push_str(&format!("checkpoints      : {ck}\n"));
+        }
+        let saf = self.state_append_failures.load(Ordering::Relaxed);
+        if saf > 0 {
+            s.push_str(&format!("state app fails  : {saf} (records dropped)\n"));
+        }
+        let rc = self.recoveries.load(Ordering::Relaxed);
+        if rc > 0 {
+            s.push_str(&format!("recoveries       : {rc}\n"));
+        }
+        let au = self.autoscale_ups.load(Ordering::Relaxed);
+        let ad = self.autoscale_downs.load(Ordering::Relaxed);
+        if au + ad > 0 {
+            s.push_str(&format!("autoscale up/down: {au} / {ad}\n"));
         }
         let tb = self.transport_bytes_sent.load(Ordering::Relaxed)
             + self.transport_bytes_recv.load(Ordering::Relaxed);

@@ -392,6 +392,25 @@ fn place_stage(
                 }
                 let mut hosts: Vec<_> = hosts;
                 hosts.sort_by(|a, b| a.id.cmp(&b.id));
+                if let crate::graph::Replication::Fixed(n) = stage.replication {
+                    // n slots round-robin across hosts, core-major wave by
+                    // wave, capped at the zone's total core capacity
+                    let want = n.max(1);
+                    let max_cores = hosts.iter().map(|h| h.cores).max().unwrap_or(1);
+                    let mut placed = 0usize;
+                    'fill: for core in 0..max_cores {
+                        for host in &hosts {
+                            if core < host.cores {
+                                out.push((host.id.clone(), host.zone.clone(), core));
+                                placed += 1;
+                                if placed == want {
+                                    break 'fill;
+                                }
+                            }
+                        }
+                    }
+                    continue;
+                }
                 for host in hosts {
                     match stage.replication {
                         crate::graph::Replication::PerCore => {
@@ -406,6 +425,7 @@ fn place_stage(
                             out.push((host.id.clone(), host.zone.clone(), 0));
                             break;
                         }
+                        crate::graph::Replication::Fixed(_) => unreachable!("handled above"),
                     }
                 }
             }
@@ -670,6 +690,9 @@ mod tests {
             (Replication::PerCore, 8), // 2 hosts × 4 cores
             (Replication::PerHost, 2),
             (Replication::PerZone, 1),
+            (Replication::Fixed(3), 3),
+            (Replication::Fixed(0), 1), // clamped to at least one
+            (Replication::Fixed(99), 8), // capped at zone core capacity
         ] {
             let mut g = LogicalGraph::default();
             let u_edge = g.add_unit(Some("ingest"), "edge".into(), None, Replication::PerCore);

@@ -322,6 +322,13 @@ impl Topic {
         }
     }
 
+    /// Consumer lag of `group` across all partitions: records appended but
+    /// not yet committed. The autoscaler samples this to detect sustained
+    /// overload, and [`crate::coordinator::JobReport`] exposes it per topic.
+    pub fn lag(&self, group: &str) -> u64 {
+        self.partitions.iter().map(|p| p.lag(group) as u64).sum()
+    }
+
     /// Force-reopens the topic for new producers after a close (used when a
     /// new location joins a finished epoch — not needed on the normal path).
     pub fn reopen(&self) {
@@ -526,6 +533,16 @@ impl Partition {
     /// Number of records currently in the log.
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().records.len()
+    }
+
+    /// Records appended but not yet committed by `group` (consumer lag).
+    /// Reads the log length and the committed offset under one lock so a
+    /// concurrent append/commit never yields a torn reading.
+    pub fn lag(&self, group: &str) -> usize {
+        let st = self.state.lock().unwrap();
+        st.records
+            .len()
+            .saturating_sub(*st.committed.get(group).unwrap_or(&0))
     }
 
     /// True when no records are present.
@@ -799,6 +816,23 @@ mod tests {
         p.commit("g", 3); // must not regress
         assert_eq!(p.committed("g"), 5);
         assert_eq!(p.committed("other"), 0);
+    }
+
+    #[test]
+    fn lag_tracks_appends_minus_commits() {
+        let broker = QueueBroker::in_memory(None);
+        let t = broker.topic("t", 2).unwrap();
+        t.register_producer();
+        for i in 0..6u64 {
+            t.append(i, b"r").unwrap();
+        }
+        assert_eq!(t.lag("g"), 6, "nothing committed yet");
+        t.partition(0).commit("g", 2);
+        assert_eq!(t.lag("g"), 4);
+        assert_eq!(t.partition(0).lag("g"), 1);
+        // a foreign group's commits don't affect this group's lag
+        t.partition(1).commit("other", 3);
+        assert_eq!(t.lag("g"), 4);
     }
 
     #[test]

@@ -877,6 +877,91 @@ mod tests {
     }
 
     #[test]
+    fn value_reduce_snapshot_restores_into_columnar_reduce() {
+        // the reverse crossing: a CLASSIC snapshot restores into the
+        // columnar executor (checkpoint taken under the row plane,
+        // recovered under the columnar plane), which keeps reducing
+        let pairs = |r: std::ops::Range<i64>| {
+            column_batch_of(&Layout::pair(Layout::I64, Layout::I64), r.map(|i| (i % 3, i)))
+        };
+        let mut row_op = ReduceExec::new(Arc::new(|a: &Value, b: &Value| {
+            Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap())
+        }));
+        let mut sink = Vec::new();
+        row_op.process(ChainInput::Shared(pairs(0..100).to_batch()), &mut sink);
+        let snap = row_op.snapshot().expect("state present");
+
+        let mut col_op = ColumnReduceExec::<i64, i64>::new(Arc::new(|a, b| a + b), errs());
+        col_op.restore(snap);
+        let _ = col_op.process_columns(pairs(100..200));
+        let mut out = Vec::new();
+        col_op.flush(&mut out);
+
+        // baseline: one columnar executor sees the whole stream
+        let mut base = ColumnReduceExec::<i64, i64>::new(Arc::new(|a, b| a + b), errs());
+        let _ = base.process_columns(pairs(0..200));
+        let mut expect = Vec::new();
+        base.flush(&mut expect);
+        assert_eq!(sorted(out), sorted(expect));
+    }
+
+    #[test]
+    fn fold_snapshot_round_trips_across_planes() {
+        // row → columnar: fold half the stream classically, snapshot,
+        // restore columnar, fold the rest — totals match a single run
+        let pairs = |r: std::ops::Range<i64>| {
+            column_batch_of(&Layout::pair(Layout::I64, Layout::I64), r.map(|i| (i % 7, i)))
+        };
+        let step_rows = || {
+            Arc::new(|acc: &mut Value, v: Value| {
+                *acc = Value::I64(acc.as_i64().unwrap() + v.as_i64().unwrap())
+            })
+        };
+        let mut row_op = FoldExec::new(Value::I64(0), step_rows());
+        let mut sink = Vec::new();
+        row_op.process(ChainInput::Shared(pairs(0..150).to_batch()), &mut sink);
+        let snap = row_op.snapshot().expect("state present");
+
+        let mut col_op =
+            ColumnFoldExec::<i64, i64, i64>::new(0, Arc::new(|acc, x| *acc += x), errs());
+        col_op.restore(snap);
+        let _ = col_op.process_columns(pairs(150..300));
+        let mut out = Vec::new();
+        col_op.flush(&mut out);
+
+        let mut base = FoldExec::new(Value::I64(0), step_rows());
+        base.process(ChainInput::Shared(pairs(0..300).to_batch()), &mut sink);
+        let mut expect = Vec::new();
+        base.flush(&mut expect);
+        assert_eq!(sorted(out), sorted(expect));
+    }
+
+    #[test]
+    fn window_snapshot_round_trips_across_planes() {
+        // columnar → row: partial windows snapshotted under the columnar
+        // plane land in the classic executor and close there
+        let layout = Layout::pair(Layout::I64, Layout::F64);
+        let pairs = |r: std::ops::Range<i64>| column_batch_of(&layout, r.map(|i| (i % 4, i as f64)));
+        let mut col_op = ColumnWindowExec::new(16, 16, WindowAgg::Sum, Layout::I64, Layout::F64);
+        let mut emitted = match col_op.process_columns(pairs(0..100)) {
+            ColumnFlow::Rows(rows) => rows,
+            _ => panic!("window emits rows"),
+        };
+        let snap = col_op.snapshot().expect("partial windows present");
+        let mut row_op = crate::runtime::exec::WindowExec::new(16, 16, WindowAgg::Sum);
+        row_op.restore(snap);
+        row_op.process(ChainInput::Shared(pairs(100..200).to_batch()), &mut emitted);
+        row_op.flush(&mut emitted);
+
+        // baseline: one row executor sees the whole stream
+        let mut base = crate::runtime::exec::WindowExec::new(16, 16, WindowAgg::Sum);
+        let mut expect = Vec::new();
+        base.process(ChainInput::Shared(pairs(0..200).to_batch()), &mut expect);
+        base.flush(&mut expect);
+        assert_eq!(sorted(emitted), sorted(expect));
+    }
+
+    #[test]
     fn decode_failures_on_the_row_path_are_recorded_not_poisonous() {
         let e = errs();
         let mut op = ColumnMapExec::<i64, i64>::new(Arc::new(|x| x + 1), e.clone());

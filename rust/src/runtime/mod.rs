@@ -70,11 +70,19 @@ pub enum InputKind {
         /// instance commit, quiesce, and exit *without* treating it as
         /// end-of-stream.
         stop: Arc<AtomicBool>,
+        /// Commit consumed offsets after every drain (legacy at-least-once
+        /// mode). Checkpoint mode sets this `false`: offsets are recorded
+        /// inside checkpoint records and committed *by the coordinator*
+        /// only after a whole unit-zone checkpointed, so a crash replays
+        /// from the last complete checkpoint instead of double-counting
+        /// records an interior stage already folded into restored state.
+        commit_each_drain: bool,
     },
 }
 
 /// Drain-and-handoff context of one instance: where to snapshot held state
-/// when quiescing for a dynamic update, and which epoch is in progress.
+/// when quiescing for a dynamic update or checkpoint, and which epoch is
+/// in progress.
 pub struct Handoff {
     /// Per-unit state topic (snapshots are appended as records keyed by
     /// stage + zone + epoch; the coordinator reads them back to seed the
@@ -84,23 +92,66 @@ pub struct Handoff {
     pub stage: usize,
     /// Zone this instance runs in (snapshot record key).
     pub zone: String,
-    /// Deployment-wide update epoch, bumped by the coordinator *before*
-    /// stop flags are set / markers begin to flow.
+    /// Deployment-wide epoch stamp, written by the coordinator *before*
+    /// stop flags are set / markers begin to flow. Checkpoint epochs carry
+    /// [`crate::channels::CHECKPOINT_BIT`].
     pub epoch: Arc<AtomicU64>,
+    /// Checkpoint mode: quiescing records input offsets even for stateless
+    /// chains (a replayed entry stage with no record would restart from
+    /// offset 0 and double-feed restored interior state), and a producer
+    /// crash makes the instance exit *without* EOS so the recovery
+    /// supervisor can respawn the whole unit-zone.
+    pub checkpoint: bool,
+    /// Set once this instance flushed and cascaded EOS normally. Later
+    /// rolls (checkpoint, recovery, rescale) must not respawn it — a fresh
+    /// incarnation would emit a second EOS into downstream accounting.
+    pub eos_done: Arc<AtomicBool>,
 }
 
 impl Handoff {
-    /// Appends this instance's per-operator snapshots to the state topic.
-    /// Record layout: `Pair(Pair(stage, zone), Pair(epoch, List(snaps)))`
-    /// with one entry (or `Null` for stateless operators) per executor in
-    /// the fused chain.
-    pub fn save(&self, epoch: u64, snaps: Vec<Value>) {
-        let rec = Value::pair(
-            Value::pair(Value::I64(self.stage as i64), Value::Str(self.zone.clone())),
-            Value::pair(Value::I64(epoch as i64), Value::List(snaps)),
-        );
-        let _ = self.state_topic.partition(0).append(&rec.encode());
+    /// Appends one state record to the state topic. Record layout (flat
+    /// list): `[I64 stage, Str zone, I64 epoch, List snaps, List offsets]`
+    /// — one snapshot entry (or `Null` for stateless operators) per
+    /// executor in the fused chain, and one `Pair(partition, next_offset)`
+    /// per owned input partition (empty for inbox-fed stages). A failed
+    /// append is surfaced in `state_append_failures` — the record was
+    /// dropped, never silently discarded.
+    pub fn save(
+        &self,
+        epoch: u64,
+        snaps: Vec<Value>,
+        offsets: &[(usize, usize)],
+        metrics: &Metrics,
+    ) {
+        let rec = state_record(self.stage as i64, &self.zone, epoch, snaps, offsets);
+        if self.state_topic.partition(0).append(&rec.encode()).is_err() {
+            MetricsRegistry::add(&metrics.state_append_failures, 1);
+        }
     }
+}
+
+/// Builds one state-topic record in the shared flat layout (see
+/// [`Handoff::save`]; the coordinator uses the same shape for its epoch
+/// commit markers, with stage `-1`).
+pub fn state_record(
+    stage: i64,
+    zone: &str,
+    epoch: u64,
+    snaps: Vec<Value>,
+    offsets: &[(usize, usize)],
+) -> Value {
+    Value::List(vec![
+        Value::I64(stage),
+        Value::Str(zone.to_string()),
+        Value::I64(epoch as i64),
+        Value::List(snaps),
+        Value::List(
+            offsets
+                .iter()
+                .map(|&(p, o)| Value::pair(Value::I64(p as i64), Value::I64(o as i64)))
+                .collect(),
+        ),
+    ])
 }
 
 /// Everything a stage-instance thread needs.
@@ -126,8 +177,19 @@ pub struct InstanceRuntime {
 }
 
 /// Runs one stage instance to completion. Returns the number of input
-/// batches processed (diagnostics).
-pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
+/// batches processed (also published as the labelled counter
+/// `inst.{id}.batches`, the autoscaler's per-instance throughput input).
+pub fn run_instance(rt: InstanceRuntime) -> u64 {
+    let id = rt.id;
+    let metrics = rt.metrics.clone();
+    let batches = run_instance_inner(rt);
+    if batches > 0 {
+        MetricsRegistry::add(&metrics.counter(&format!("inst.{id}.batches")), batches);
+    }
+    batches
+}
+
+fn run_instance_inner(mut rt: InstanceRuntime) -> u64 {
     // restore handed-off state before the first batch
     if !rt.restore.is_empty() {
         let restore = std::mem::take(&mut rt.restore);
@@ -157,11 +219,23 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
                     let out = run_chain_data(&mut rt.ops, cb.into(), &mut bufs);
                     route_data(&mut rt.outputs, out);
                 }
-                InboxEvent::Eos => break,
+                InboxEvent::Eos => {
+                    if inbox.disconnected() && rt.handoff.as_ref().is_some_and(|h| h.checkpoint) {
+                        // A producer crashed (senders dropped without EOS
+                        // or marker). Under checkpointing the supervisor
+                        // respawns the whole unit-zone from the last
+                        // committed checkpoint; exiting *without* EOS here
+                        // keeps downstream EOS accounting intact — the
+                        // respawned incarnation will terminate the stream.
+                        return batches;
+                    }
+                    break;
+                }
                 InboxEvent::Epoch(epoch) => {
-                    // Dynamic update: every producer quiesced — snapshot
-                    // held state, forward the marker, exit without EOS.
-                    quiesce(&mut rt.ops, &mut rt.outputs, &rt.handoff, epoch);
+                    // Dynamic update / checkpoint: every producer quiesced
+                    // — snapshot held state, forward the marker, exit
+                    // without EOS.
+                    quiesce(&mut rt.ops, &mut rt.outputs, &rt.handoff, epoch, &[], &rt.metrics);
                     return batches;
                 }
             }
@@ -173,6 +247,7 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
             poll_timeout,
             poll_max,
             stop,
+            commit_each_drain,
         } => {
             let mut offsets: Vec<usize> = partitions
                 .iter()
@@ -185,15 +260,30 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
                 // below (a relaxed load could legally stamp the snapshot
                 // with the previous epoch on weak-memory hardware).
                 if stop.load(Ordering::Acquire) {
-                    // Dynamic update: everything processed so far is
-                    // committed; snapshot state and quiesce — the
-                    // replacement resumes from the committed offsets.
+                    // Dynamic update / checkpoint: snapshot state together
+                    // with the offsets it covers and quiesce. In legacy
+                    // mode everything processed so far is already
+                    // committed; in checkpoint mode the coordinator
+                    // commits these recorded offsets once the whole
+                    // unit-zone quiesced.
                     let epoch = rt
                         .handoff
                         .as_ref()
                         .map(|h| h.epoch.load(Ordering::SeqCst))
                         .unwrap_or(0);
-                    quiesce(&mut rt.ops, &mut rt.outputs, &rt.handoff, epoch);
+                    let covered: Vec<(usize, usize)> = partitions
+                        .iter()
+                        .zip(&offsets)
+                        .map(|(&p, &o)| (p, o))
+                        .collect();
+                    quiesce(
+                        &mut rt.ops,
+                        &mut rt.outputs,
+                        &rt.handoff,
+                        epoch,
+                        &covered,
+                        &rt.metrics,
+                    );
                     return batches;
                 }
                 // One park across every owned partition; any append/close
@@ -202,6 +292,14 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
                 let Some(drained) =
                     topic.poll_many(&partitions, &mut offsets, poll_max, poll_timeout)
                 else {
+                    // End of stream. In checkpoint mode nothing was
+                    // committed per drain — commit the final offsets now
+                    // so the job-level lag accounting drains to zero.
+                    if !commit_each_drain {
+                        for (slot, &p) in partitions.iter().enumerate() {
+                            topic.partition(p).commit(&group, offsets[slot]);
+                        }
+                    }
                     break;
                 };
                 for (slot, recs) in drained {
@@ -222,8 +320,11 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
                         }
                     }
                     // one commit per drained partition per wakeup (the
-                    // poll advanced `offsets[slot]` past these records)
-                    topic.partition(partitions[slot]).commit(&group, offsets[slot]);
+                    // poll advanced `offsets[slot]` past these records);
+                    // checkpoint mode defers the commit to the coordinator
+                    if commit_each_drain {
+                        topic.partition(partitions[slot]).commit(&group, offsets[slot]);
+                    }
                 }
             }
         }
@@ -232,6 +333,11 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
     let tail = flush_chain(&mut rt.ops);
     route(&mut rt.outputs, tail.into());
     rt.outputs.eos();
+    if let Some(h) = &rt.handoff {
+        // a normally-completed instance must never be respawned by a
+        // later checkpoint/recovery roll (it would EOS a second time)
+        h.eos_done.store(true, Ordering::SeqCst);
+    }
     batches
 }
 
@@ -239,19 +345,28 @@ pub fn run_instance(mut rt: InstanceRuntime) -> u64 {
 /// unit's state topic, then forward the epoch marker downstream (after
 /// flushing any pending routed records). No EOS is emitted — downstream
 /// consumers observe a pause, never an end-of-stream.
+///
+/// `offsets` are the `(partition, next_offset)` pairs the held state
+/// covers (empty for inbox-fed stages). In checkpoint mode a record is
+/// written even for a stateless chain when offsets are present: the
+/// replacement must resume from here, not replay the topic from zero into
+/// already-restored interior state.
 fn quiesce(
     ops: &mut [Box<dyn OpExec>],
     outputs: &mut FanOut,
     handoff: &Option<Handoff>,
     epoch: u64,
+    offsets: &[(usize, usize)],
+    metrics: &Metrics,
 ) {
     if let Some(h) = handoff {
         let snaps: Vec<Value> = ops
             .iter_mut()
             .map(|op| op.snapshot().unwrap_or(Value::Null))
             .collect();
-        if snaps.iter().any(|s| !matches!(s, Value::Null)) {
-            h.save(epoch, snaps);
+        let stateful = snaps.iter().any(|s| !matches!(s, Value::Null));
+        if stateful || (h.checkpoint && !offsets.is_empty()) {
+            h.save(epoch, snaps, offsets, metrics);
         }
     }
     outputs.epoch(epoch);
@@ -541,6 +656,7 @@ mod tests {
                 poll_timeout: Duration::from_millis(20),
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
+                commit_each_drain: true,
             },
             outputs: FanOut::none(),
             metrics,
@@ -575,6 +691,7 @@ mod tests {
                 poll_timeout: Duration::from_millis(20),
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
+                commit_each_drain: true,
             },
             outputs: FanOut::none(),
             metrics,
@@ -616,6 +733,7 @@ mod tests {
                 poll_timeout: Duration::from_millis(20),
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
+                commit_each_drain: true,
             },
             outputs: FanOut::none(),
             metrics: metrics.clone(),
@@ -677,6 +795,7 @@ mod tests {
                         poll_timeout: Duration::from_millis(5),
                         poll_max: 64,
                         stop: stop2,
+                        commit_each_drain: true,
                     },
                     outputs: FanOut::single(port),
                     metrics: MetricsRegistry::new(),
@@ -685,6 +804,8 @@ mod tests {
                         stage: 2,
                         zone: "C0".into(),
                         epoch,
+                        checkpoint: false,
+                        eos_done: Arc::new(AtomicBool::new(false)),
                     }),
                     restore: Vec::new(),
                 })
@@ -704,13 +825,82 @@ mod tests {
             .poll(0, 10, Duration::from_millis(10))
             .unwrap();
         let rec = Value::decode_exact(&recs[0]).unwrap();
-        let (head, body) = rec.as_pair().unwrap();
-        assert_eq!(head, &Value::pair(Value::I64(2), Value::Str("C0".into())));
-        let (ep, snaps) = body.as_pair().unwrap();
-        assert_eq!(ep.as_i64(), Some(9));
+        let fields = rec.as_list().unwrap();
+        assert_eq!(fields[0].as_i64(), Some(2), "stage");
+        assert_eq!(fields[1], Value::Str("C0".into()), "zone");
+        assert_eq!(fields[2].as_i64(), Some(9), "epoch");
         assert_eq!(
-            snaps.as_list().unwrap()[0],
-            Value::List(vec![Value::pair(Value::I64(1), Value::I64(5))])
+            fields[3].as_list().unwrap()[0],
+            Value::List(vec![Value::pair(Value::I64(1), Value::I64(5))]),
+            "reduce snapshot"
+        );
+        assert_eq!(
+            fields[4].as_list().unwrap(),
+            &[Value::pair(Value::I64(0), Value::I64(1))],
+            "offsets covered by the snapshot"
+        );
+    }
+
+    #[test]
+    fn checkpoint_mode_records_offsets_for_stateless_chains() {
+        // a stateless queue-fed entry stage must still record the offsets
+        // its processing covered: the replacement replays from there, not
+        // from zero (which would double-feed restored interior state)
+        let broker = crate::queue::QueueBroker::in_memory(None);
+        let topic = broker.topic("t", 1).unwrap();
+        let state = broker.topic("state", 1).unwrap();
+        topic.register_producer();
+        topic
+            .append(0, &crate::value::encode_batch(&[Value::I64(7)]))
+            .unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let state2 = state.clone();
+        let topic2 = topic.clone();
+        let h = std::thread::spawn(move || {
+            run_instance(InstanceRuntime {
+                id: 0,
+                ops: vec![], // stateless
+                input: InputKind::Queue {
+                    topic: topic2,
+                    partitions: vec![0],
+                    group: "g".into(),
+                    poll_timeout: Duration::from_millis(5),
+                    poll_max: 64,
+                    stop: stop2,
+                    commit_each_drain: false,
+                },
+                outputs: FanOut::none(),
+                metrics: MetricsRegistry::new(),
+                handoff: Some(Handoff {
+                    state_topic: state2,
+                    stage: 1,
+                    zone: "C0".into(),
+                    epoch: Arc::new(AtomicU64::new(3)),
+                    checkpoint: true,
+                    eos_done: Arc::new(AtomicBool::new(false)),
+                }),
+                restore: Vec::new(),
+            })
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        stop.store(true, Ordering::SeqCst);
+        topic.kick();
+        h.join().unwrap();
+        // checkpoint mode also defers the commit to the coordinator
+        assert_eq!(topic.partition(0).committed("g"), 0, "no self-commit");
+        assert_eq!(state.partition(0).len(), 1, "stateless chain still saved");
+        let (recs, _) = state
+            .partition(0)
+            .poll(0, 10, Duration::from_millis(10))
+            .unwrap();
+        let rec = Value::decode_exact(&recs[0]).unwrap();
+        let fields = rec.as_list().unwrap();
+        assert!(fields[3].as_list().unwrap().is_empty(), "no state held");
+        assert_eq!(
+            fields[4].as_list().unwrap(),
+            &[Value::pair(Value::I64(0), Value::I64(1))],
+            "covered offsets recorded"
         );
     }
 
@@ -764,6 +954,7 @@ mod tests {
                 poll_timeout: Duration::from_millis(5),
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
+                commit_each_drain: true,
             },
             outputs: FanOut::none(),
             metrics,
@@ -796,6 +987,7 @@ mod tests {
                 poll_timeout: Duration::from_millis(20),
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
+                commit_each_drain: true,
             },
             outputs: FanOut::none(),
             metrics,

@@ -11,8 +11,12 @@
 //! Liveness: every worker heartbeats at the interval the daemon announces
 //! in WELCOME. A worker is declared dead when its socket closes (reader
 //! EOF — immediate) or when it misses three heartbeats (tick loop); a
-//! death mid-job fails the active job with an error naming the worker and
-//! broadcasts JOB_ERROR to the survivors, rather than hanging the job.
+//! death mid-job fails the active attempt with an error naming the worker
+//! and broadcasts JOB_ERROR to the survivors, rather than hanging the
+//! job. [`CoordinatorDaemon::run_job`] then redispatches the job over the
+//! surviving workers (fresh job id, dead worker's hosts reassigned)
+//! instead of surfacing the failure, as long as the deadline and attempt
+//! budget allow.
 
 use super::socket::{Addr, Conn, ConnHandle, Listener, PeerSender};
 use super::wire::{self, kv, kv_get};
@@ -56,9 +60,15 @@ struct JobState {
     failed: Option<String>,
 }
 
+/// Total dispatch attempts per [`CoordinatorDaemon::run_job`] call: the
+/// initial deploy plus up to two redispatches after worker deaths.
+const DISPATCH_ATTEMPTS: u32 = 3;
+
 struct Shared {
     metrics: Metrics,
     heartbeat: Duration,
+    /// Checkpoint interval shipped to workers inside DEPLOY (0 = off).
+    checkpoint_ms: AtomicU64,
     stop: AtomicBool,
     workers: Mutex<HashMap<String, WorkerEntry>>,
     reg_cv: Condvar,
@@ -200,6 +210,7 @@ impl CoordinatorDaemon {
         let shared = Arc::new(Shared {
             metrics,
             heartbeat,
+            checkpoint_ms: AtomicU64::new(0),
             stop: AtomicBool::new(false),
             workers: Mutex::new(HashMap::new()),
             reg_cv: Condvar::new(),
@@ -235,6 +246,14 @@ impl CoordinatorDaemon {
     /// The daemon's metrics registry (socket traffic, reconnects, errors).
     pub fn metrics(&self) -> Metrics {
         self.shared.metrics.clone()
+    }
+
+    /// Sets the checkpoint interval shipped to workers inside DEPLOY
+    /// (`None` disables periodic checkpoints). Takes effect for jobs
+    /// dispatched after the call.
+    pub fn set_checkpoint_interval(&self, interval: Option<Duration>) {
+        let ms = interval.map_or(0, |d| d.as_millis() as u64);
+        self.shared.checkpoint_ms.store(ms, Ordering::SeqCst);
     }
 
     /// Registered workers as `(id, zone, alive)`, sorted by id.
@@ -277,6 +296,12 @@ impl CoordinatorDaemon {
     /// registration; unclaimed hosts are assigned round-robin. The same
     /// assignment ships to every worker inside DEPLOY, so all processes
     /// agree on instance ownership without a second round-trip.
+    ///
+    /// A worker death mid-job does not fail the run outright: the job is
+    /// redispatched under a fresh id over the surviving workers, with the
+    /// dead worker's hosts reassigned. Pipelines are deterministic, so a
+    /// rerun produces identical output. Up to three total attempts are
+    /// made within the original `timeout`.
     pub fn run_job(
         &self,
         pipeline: &str,
@@ -285,6 +310,42 @@ impl CoordinatorDaemon {
         timeout: Duration,
     ) -> Result<DistReport> {
         self.wait_for_workers(n_workers, timeout)?;
+        let deadline = Instant::now() + timeout;
+        let mut attempt = 0;
+        loop {
+            attempt += 1;
+            let err = match self.run_job_attempt(pipeline, events, deadline) {
+                Ok(report) => return Ok(report),
+                Err(e) => e,
+            };
+            let msg = err.to_string();
+            let retryable = msg.contains("died mid-job") || msg.contains("deploy to worker");
+            let survivors = self
+                .shared
+                .lock_workers()
+                .values()
+                .filter(|e| e.alive)
+                .count();
+            if !retryable
+                || survivors == 0
+                || attempt >= DISPATCH_ATTEMPTS
+                || Instant::now() >= deadline
+            {
+                return Err(err);
+            }
+            MetricsRegistry::add(&self.shared.metrics.recoveries, 1);
+            // let survivors process the JOB_ERROR abort before redeploying
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+
+    /// One dispatch attempt: plan, assign, deploy, wait for reports.
+    fn run_job_attempt(
+        &self,
+        pipeline: &str,
+        events: u64,
+        deadline: Instant,
+    ) -> Result<DistReport> {
         let started = Instant::now();
         let cluster = eval_cluster(None, Duration::ZERO);
         let mut ctx = StreamContext::new(cluster.clone(), JobConfig::default());
@@ -351,6 +412,10 @@ impl CoordinatorDaemon {
             ("pipeline", Value::Str(pipeline.to_string())),
             ("events", Value::I64(events as i64)),
             (
+                "checkpoint_ms",
+                Value::I64(self.shared.checkpoint_ms.load(Ordering::SeqCst) as i64),
+            ),
+            (
                 "assign",
                 Value::List(
                     assign
@@ -371,7 +436,6 @@ impl CoordinatorDaemon {
         }
 
         // wait for every expected report (or failure, or timeout)
-        let deadline = started + timeout;
         let mut st = self.shared.lock_job();
         loop {
             let done = match &*st {
@@ -387,7 +451,7 @@ impl CoordinatorDaemon {
             if now >= deadline {
                 drop(st);
                 self.shared
-                    .fail_active_job(job, format!("job {job} timed out after {timeout:?}"));
+                    .fail_active_job(job, format!("job {job} timed out"));
                 st = self.shared.lock_job();
                 break;
             }

@@ -423,6 +423,12 @@ fn serve(
             wire::kind::DEPLOY => {
                 let Ok(v) = wire::parse_ctl(&f.payload) else { continue };
                 let job = kv_get(&v, "job").and_then(Value::as_i64).unwrap_or(0) as u64;
+                // a redispatched job supersedes any still-active one:
+                // tear the old one down so its instances don't race the
+                // replacement (aborted jobs never REPORT)
+                if let Some(mut old) = active.take() {
+                    old.abort();
+                }
                 match launch_job(opts, &conn.sender, job, &v) {
                     Ok(j) => *active = Some(j),
                     Err(e) => {
@@ -519,7 +525,12 @@ fn launch_job(
 
     // identical graph + plan on every process (see pipelines module docs)
     let cluster = eval_cluster(None, Duration::ZERO);
-    let config = JobConfig::default();
+    let mut config = JobConfig::default();
+    // the daemon threads its --checkpoint-ms knob through DEPLOY; 0 = off
+    let checkpoint_ms = kv_get(v, "checkpoint_ms").and_then(Value::as_i64).unwrap_or(0);
+    if checkpoint_ms > 0 {
+        config.checkpoint_interval = Some(Duration::from_millis(checkpoint_ms as u64));
+    }
     let mut ctx = StreamContext::new(cluster.clone(), config.clone());
     crate::pipelines::build(&mut ctx, pipeline, events)?;
     let graph = ctx.into_graph()?;

@@ -1,0 +1,276 @@
+//! Integration tests of the checkpoint/recovery control plane: periodic
+//! checkpoints through the epoch machinery, unplanned-failure recovery
+//! (exactly-once output under injected instance death, including deaths
+//! that land mid-checkpoint), and lag-driven elastic rescaling.
+
+use flowunits::api::raw::{JobConfig, PlannerKind, Replication, Source, StreamContext};
+use flowunits::config::eval_cluster;
+use flowunits::coordinator::{AutoscaleConfig, Coordinator, JobReport};
+use flowunits::value::Value;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn recovery_config(checkpoint: Option<Duration>) -> JobConfig {
+    JobConfig {
+        planner: PlannerKind::FlowUnits,
+        decouple_units: true,
+        batch_size: 64,
+        poll_timeout: Duration::from_millis(10),
+        checkpoint_interval: checkpoint,
+        ..Default::default()
+    }
+}
+
+/// `source@edge → filter ∥ "agg"@cloud: map(fault/drag) → key_by % keys
+/// → reduce(sum) → collect`. The map stage optionally panics on the
+/// `bomb`-th event it processes (a one-shot global countdown — the
+/// injected unplanned failure; replayed events keep decrementing past
+/// zero and never re-fire) and drags each event while `heavy` is set
+/// (the synthetic overload the autoscaler reacts to).
+fn agg_graph(
+    total: u64,
+    rate: f64,
+    keys: i64,
+    config: &JobConfig,
+    replication: Replication,
+    bomb: Option<Arc<AtomicI64>>,
+    heavy: Option<Arc<AtomicBool>>,
+) -> flowunits::graph::LogicalGraph {
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), config.clone());
+    ctx.stream(Source::synthetic_rated(total, rate, |_, i| {
+        Value::I64(i as i64)
+    }))
+    .to_layer("edge")
+    .filter(|v| v.as_i64().unwrap() >= 0)
+    .unit("agg")
+    .to_layer("cloud")
+    .replicate(replication)
+    .map(move |v| {
+        if let Some(b) = &bomb {
+            if b.fetch_sub(1, Ordering::SeqCst) == 1 {
+                panic!("injected fault: test kills this instance");
+            }
+        }
+        if let Some(h) = &heavy {
+            if h.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_micros(300));
+            }
+        }
+        v
+    })
+    .key_by(move |v| Value::I64(v.as_i64().unwrap() % keys))
+    .reduce(|a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+    .collect_vec();
+    ctx.into_graph().unwrap()
+}
+
+fn run_agg(
+    total: u64,
+    rate: f64,
+    keys: i64,
+    config: JobConfig,
+    bomb: Option<Arc<AtomicI64>>,
+    heavy: Option<Arc<AtomicBool>>,
+) -> JobReport {
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), config.clone());
+    let g = agg_graph(total, rate, keys, &config, Replication::PerCore, bomb, heavy);
+    let dep = coord.deploy(&g).unwrap();
+    dep.wait().unwrap()
+}
+
+fn sorted_sums(report: &JobReport) -> Vec<(i64, i64)> {
+    let mut got: Vec<(i64, i64)> = report
+        .collected
+        .iter()
+        .map(|v| {
+            let (k, x) = v.as_pair().unwrap();
+            (k.as_i64().unwrap(), x.as_i64().unwrap())
+        })
+        .collect();
+    got.sort_unstable();
+    got
+}
+
+/// Source instances enumerate disjoint global event indices, so the
+/// correct per-key sums are a pure function of `total` and `keys`.
+fn expected_sums(total: u64, keys: i64) -> Vec<(i64, i64)> {
+    let mut sums: BTreeMap<i64, i64> = BTreeMap::new();
+    for i in 0..total as i64 {
+        *sums.entry(i % keys).or_insert(0) += i;
+    }
+    sums.into_iter().collect()
+}
+
+#[test]
+fn instance_death_recovers_from_checkpoint_exactly_once() {
+    let (total, keys) = (40_000u64, 16i64);
+    let bomb = Arc::new(AtomicI64::new(12_000));
+    let report = run_agg(
+        total,
+        4_000.0,
+        keys,
+        recovery_config(Some(Duration::from_millis(50))),
+        Some(bomb.clone()),
+        None,
+    );
+    assert!(bomb.load(Ordering::SeqCst) <= 0, "the injected fault fired");
+    assert!(
+        report.metrics.recoveries.load(Ordering::Relaxed) >= 1,
+        "the supervisor recovered the dead unit-zone"
+    );
+    assert!(
+        report.metrics.checkpoints_taken.load(Ordering::Relaxed) > 0,
+        "periodic checkpoints were committed"
+    );
+    assert_eq!(
+        sorted_sums(&report),
+        expected_sums(total, keys),
+        "per-key sums survive an instance death exactly — no loss, no duplication"
+    );
+}
+
+#[test]
+fn instance_death_without_any_committed_checkpoint_replays_from_scratch() {
+    // kill almost immediately: recovery may find no committed checkpoint
+    // yet and must fall back to a from-the-beginning replay (group
+    // offsets were never advanced)
+    let (total, keys) = (20_000u64, 8i64);
+    let bomb = Arc::new(AtomicI64::new(500));
+    let report = run_agg(
+        total,
+        4_000.0,
+        keys,
+        recovery_config(Some(Duration::from_millis(400))),
+        Some(bomb.clone()),
+        None,
+    );
+    assert!(bomb.load(Ordering::SeqCst) <= 0, "the injected fault fired");
+    assert!(report.metrics.recoveries.load(Ordering::Relaxed) >= 1);
+    assert_eq!(sorted_sums(&report), expected_sums(total, keys));
+}
+
+#[test]
+fn prop_kill_at_random_points_under_load_is_exactly_once() {
+    // property: wherever the fault lands — early, late, mid-checkpoint —
+    // the recovered run produces exactly the no-fault per-key sums
+    flowunits::proptest::forall("instance kill is exactly-once", 3, |g| {
+        let keys = g.i64_in(1, 24);
+        let kill_at = g.i64_in(2_000, 30_000);
+        let interval_ms = [20u64, 50, 120][g.usize_in(0, 3)];
+        let batch = [16usize, 64, 200][g.usize_in(0, 3)];
+        let total = 36_000u64;
+        let mut config = recovery_config(Some(Duration::from_millis(interval_ms)));
+        config.batch_size = batch;
+        let bomb = Arc::new(AtomicI64::new(kill_at));
+        let report = run_agg(total, 4_500.0, keys, config, Some(bomb.clone()), None);
+        assert!(bomb.load(Ordering::SeqCst) <= 0, "the injected fault fired");
+        assert!(
+            report.metrics.recoveries.load(Ordering::Relaxed) >= 1,
+            "keys={keys} kill_at={kill_at} interval={interval_ms}ms: no recovery ran"
+        );
+        assert_eq!(
+            sorted_sums(&report),
+            expected_sums(total, keys),
+            "keys={keys} kill_at={kill_at} interval={interval_ms}ms batch={batch}: \
+             outputs diverged from the no-fault run"
+        );
+    });
+}
+
+#[test]
+fn forced_checkpoint_is_invisible_in_output_and_observable_in_report() {
+    // a checkpoint at a deterministic point must not disturb results,
+    // and the report must carry the new observability surfaces
+    let (total, keys) = (24_000u64, 8i64);
+    let config = recovery_config(Some(Duration::from_secs(3600))); // manual ticks only
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), config.clone());
+    let g = agg_graph(
+        total,
+        2_000.0,
+        keys,
+        &config,
+        Replication::PerCore,
+        None,
+        None,
+    );
+    let mut dep = coord.deploy(&g).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    dep.checkpoint().unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    dep.checkpoint().unwrap();
+    let report = dep.wait().unwrap();
+    assert!(
+        report.metrics.checkpoints_taken.load(Ordering::Relaxed) >= 2,
+        "both forced checkpoints committed"
+    );
+    assert_eq!(report.events_in, total);
+    assert_eq!(sorted_sums(&report), expected_sums(total, keys));
+    // observability satellites: per-topic lag and per-instance batch
+    // counts ride along in the report
+    assert!(!report.queue_lag.is_empty(), "per-topic lag map present");
+    assert!(report.queue_lag.keys().all(|k| k.starts_with("fu-s")));
+    assert!(
+        report.queue_lag.values().all(|&lag| lag == 0),
+        "a finished job has drained all topics: {:?}",
+        report.queue_lag
+    );
+    assert!(
+        !report.instance_batches.is_empty(),
+        "per-instance processed-batch counts present"
+    );
+    assert_eq!(
+        report.metrics.state_append_failures.load(Ordering::Relaxed),
+        0
+    );
+}
+
+#[test]
+fn autoscaler_scales_up_under_lag_then_back_down_without_losing_records() {
+    // phase 1: one dragging instance falls behind a fast source — the
+    // control loop must raise replication. phase 2: the drag is lifted,
+    // lag drains, and replication steps back down. every record still
+    // counts exactly once across all of the rescaling rolls.
+    let (total, keys) = (40_000u64, 12i64);
+    let mut config = recovery_config(None);
+    config.autoscale = Some(AutoscaleConfig {
+        sample_interval: Duration::from_millis(20),
+        scale_up_lag: 1_500,
+        scale_down_lag: 100,
+        samples: 2,
+        cooldown: Duration::from_millis(80),
+        min_instances: 1,
+        max_instances: 4,
+    });
+    let heavy = Arc::new(AtomicBool::new(true));
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), config.clone());
+    let g = agg_graph(
+        total,
+        2_500.0,
+        keys,
+        &config,
+        Replication::Fixed(1),
+        None,
+        Some(heavy.clone()),
+    );
+    let dep = coord.deploy(&g).unwrap();
+    // lift the synthetic overload partway through so lag can drain and
+    // the scale-down leg of the hysteresis gets exercised
+    std::thread::sleep(Duration::from_millis(700));
+    heavy.store(false, Ordering::Relaxed);
+    let report = dep.wait().unwrap();
+    let ups = report.metrics.autoscale_ups.load(Ordering::Relaxed);
+    let downs = report.metrics.autoscale_downs.load(Ordering::Relaxed);
+    assert!(ups >= 1, "sustained lag raised replication (ups={ups})");
+    assert!(
+        downs >= 1,
+        "drained lag lowered replication (ups={ups} downs={downs})"
+    );
+    assert_eq!(report.events_in, total);
+    assert_eq!(
+        sorted_sums(&report),
+        expected_sums(total, keys),
+        "per-key sums are exact across scale-up and scale-down rolls"
+    );
+}

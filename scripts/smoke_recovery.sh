@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Chaos smoke test: one coordinator + two worker processes run the paced
+# wordcount over Unix domain sockets, and one worker is SIGKILLed while
+# the job is in flight. The daemon must declare the worker dead (socket
+# EOF), redispatch the job over the survivor, and finish; the collected
+# output must still be byte-identical to the in-process engine's run.
+# Run from the repo root after `cargo build --release`.
+#
+#   FLOWUNITS_BIN     path to the flowunits binary (default target/release/flowunits)
+#   SMOKE_EVENTS      events to stream (default 600000 — paced at 20k ev/s
+#                     per source, so the job outlives the kill below)
+#   SMOKE_KILL_AFTER  seconds to wait before the SIGKILL (default 1)
+set -euo pipefail
+
+BIN="${FLOWUNITS_BIN:-target/release/flowunits}"
+EVENTS="${SMOKE_EVENTS:-600000}"
+KILL_AFTER="${SMOKE_KILL_AFTER:-1}"
+if [ ! -x "$BIN" ]; then
+  echo "smoke: binary '$BIN' not found — run 'cargo build --release' first" >&2
+  exit 1
+fi
+DIR="$(mktemp -d)"
+trap 'kill $(jobs -p) 2>/dev/null || true; rm -rf "$DIR"' EXIT
+SOCK="$DIR/coordinator.sock"
+
+"$BIN" coordinator --listen "$SOCK" --workers 2 --pipeline wordcount_paced \
+  --events "$EVENTS" --timeout-s 120 --show-collected >"$DIR/dist.out" 2>&1 &
+COORD=$!
+"$BIN" worker --connect "$SOCK" --id w1 --state-dir "$DIR/w1" >"$DIR/w1.log" 2>&1 &
+"$BIN" worker --connect "$SOCK" --id w2 --state-dir "$DIR/w2" >"$DIR/w2.log" 2>&1 &
+VICTIM=$!
+
+sleep "$KILL_AFTER"
+if ! kill -9 "$VICTIM" 2>/dev/null; then
+  echo "smoke: FAIL — worker w2 was already gone before the injected kill" >&2
+  exit 1
+fi
+
+if ! wait "$COORD"; then
+  echo "smoke: FAIL — coordinator did not survive the worker kill —" >&2
+  cat "$DIR/dist.out" >&2
+  exit 1
+fi
+# the successful attempt must have run on the lone survivor
+if ! grep -q '^distributed job: 1 worker(s)' "$DIR/dist.out"; then
+  echo "smoke: FAIL — expected a redispatch over 1 surviving worker —" >&2
+  cat "$DIR/dist.out" >&2
+  exit 1
+fi
+grep '^collected: ' "$DIR/dist.out" | sort >"$DIR/dist.collected"
+
+"$BIN" run --pipeline wordcount_paced --events "$EVENTS" --show-collected >"$DIR/local.out"
+grep '^collected: ' "$DIR/local.out" | sort >"$DIR/local.collected"
+
+if ! diff -u "$DIR/local.collected" "$DIR/dist.collected"; then
+  echo "smoke: FAIL — post-recovery output differs from the in-process run" >&2
+  exit 1
+fi
+echo "smoke: OK — worker killed mid-job, coordinator redispatched, output matches in-process" \
+     "($(wc -l <"$DIR/dist.collected") collected lines)"
