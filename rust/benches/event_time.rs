@@ -1,0 +1,181 @@
+//! `cargo bench --bench event_time` — event-time subsystem benchmarks.
+//! Three scenarios:
+//!
+//! * **proc_window** — the processing-time baseline: a keyed count
+//!   window over the same disordered source, no timestamps, no
+//!   watermarks. This is the cost floor the event-time path is compared
+//!   against;
+//! * **event_window** — the same source through `assign_timestamps`
+//!   (bounded out-of-orderness watermarks) and a keyed tumbling
+//!   event-time window. The delta vs `proc_window` is the price of
+//!   event-time semantics: timestamp extraction, watermark frames, and
+//!   pane buffering until the watermark fires them. Every run asserts
+//!   conservation (pane counts sum to the input) and zero late records
+//!   (the synthetic disorder stays within the watermark bound);
+//! * **watermark_3hop** — the event-time pipeline stretched across
+//!   edge → site → cloud, so every watermark crosses two shuffles and a
+//!   min-of-inputs merge per hop. Reports `watermarks_forwarded` and
+//!   the worst observed end-to-end propagation lag
+//!   (`watermark_lag_ms`) alongside throughput.
+//!
+//! Results land in `BENCH_event_time.json` (override with
+//! `EVENT_TIME_OUT`); `EVENT_TIME_EVENTS` scales the workload, and CI
+//! runs a small smoke value.
+
+use flowunits::api::raw::{
+    JobConfig, JobReport, PlannerKind, Source, StreamContext, WatermarkGen, WindowAgg,
+    WindowAssigner,
+};
+use flowunits::config::eval_cluster;
+use flowunits::value::Value;
+use std::io::Write;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn events() -> u64 {
+    std::env::var("EVENT_TIME_EVENTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000)
+}
+
+/// Deterministically disordered event timestamps: blocks of 8 ticks
+/// delivered back-to-front, 5 ms apart — at most 35 ms of disorder,
+/// safely inside the 40 ms watermark bound used below.
+fn disordered_ts(i: u64) -> i64 {
+    let tick = (i / 8) * 8 + (7 - i % 8);
+    tick as i64 * 5
+}
+
+fn ctx() -> StreamContext {
+    StreamContext::new(
+        eval_cluster(None, Duration::ZERO),
+        JobConfig {
+            planner: PlannerKind::FlowUnits,
+            ..Default::default()
+        },
+    )
+}
+
+/// Processing-time baseline: keyed count windows, no event-time at all.
+fn run_proc_window(n: u64) -> JobReport {
+    let mut c = ctx();
+    c.stream(Source::synthetic(n, |_, i| Value::I64(disordered_ts(i))))
+        .to_layer("edge")
+        .to_layer("cloud")
+        .key_by(|v| Value::I64((v.as_i64().unwrap_or(0) / 5) % 64))
+        .window(100, WindowAgg::Count)
+        .collect_vec();
+    c.execute().expect("proc_window pipeline")
+}
+
+/// Event-time tumbling windows behind bounded-out-of-orderness
+/// watermarks; `three_hop` stretches the two-layer (edge → cloud) shape
+/// into three (edge → site → cloud).
+fn run_event_window(n: u64, three_hop: bool) -> JobReport {
+    let mut c = ctx();
+    let mut s = c
+        .stream(Source::synthetic(n, |_, i| Value::I64(disordered_ts(i))))
+        .to_layer("edge")
+        .assign_timestamps(|v| v.as_i64().unwrap_or(0), WatermarkGen::bounded(40));
+    if three_hop {
+        // an extra site hop: every watermark crosses one more shuffle
+        // and one more min-of-inputs merge before it can fire a pane
+        s = s
+            .to_layer("site")
+            .filter(|v| v.as_i64().unwrap_or(0) >= 0);
+    }
+    s.to_layer("cloud")
+        .key_by(|v| Value::I64((v.as_i64().unwrap_or(0) / 5) % 64))
+        .event_window(
+            |v| v.as_i64().unwrap_or(0),
+            WindowAssigner::tumbling(500),
+            WindowAgg::Count,
+            0,
+        )
+        .collect_vec();
+    c.execute().expect("event_window pipeline")
+}
+
+/// Panes must account for every input record, and none may be late: the
+/// disorder is bounded by construction, so any loss or lateness is a
+/// watermark-propagation bug, at smoke size as much as at full size.
+fn assert_exact(name: &str, n: u64, r: &JobReport) {
+    let paned: i64 = r
+        .collected
+        .iter()
+        .map(|v| {
+            v.as_pair()
+                .and_then(|(_, c)| c.as_i64())
+                .expect("(key, count) pane output")
+        })
+        .sum();
+    assert_eq!(paned as u64, n, "{name}: every record lands in exactly one pane");
+    let late = r.metrics.late_records.load(Ordering::Relaxed);
+    assert_eq!(late, 0, "{name}: disorder stays within the watermark bound");
+}
+
+fn report_row(name: &str, n: u64, r: &JobReport) -> String {
+    let wall = r.wall_time.as_secs_f64();
+    format!(
+        "    {{\"name\": \"{name}\", \"events\": {n}, \"wall_s\": {:.6}, \
+         \"throughput_ev_s\": {:.1}, \"late_records\": {}, \
+         \"watermarks_forwarded\": {}, \"watermark_lag_ms\": {}}}",
+        wall,
+        if wall > 0.0 { n as f64 / wall } else { 0.0 },
+        r.metrics.late_records.load(Ordering::Relaxed),
+        r.metrics.watermarks_forwarded.load(Ordering::Relaxed),
+        r.metrics.watermark_lag_ms.load(Ordering::Relaxed),
+    )
+}
+
+fn main() {
+    let n = events();
+    println!("# FlowUnits event-time benchmarks ({n} events per scenario)");
+
+    let proc = run_proc_window(n);
+    println!(
+        "proc_window     {:>10.3}s  {:>14}",
+        proc.wall_time.as_secs_f64(),
+        flowunits::util::fmt_rate(n, proc.wall_time),
+    );
+
+    let event = run_event_window(n, false);
+    assert_exact("event_window", n, &event);
+    let ratio = event.wall_time.as_secs_f64() / proc.wall_time.as_secs_f64().max(1e-9);
+    println!(
+        "event_window    {:>10.3}s  {:>14}  ({ratio:.2}x the processing-time wall)",
+        event.wall_time.as_secs_f64(),
+        flowunits::util::fmt_rate(n, event.wall_time),
+    );
+
+    let hop3 = run_event_window(n, true);
+    assert_exact("watermark_3hop", n, &hop3);
+    let fw = hop3.metrics.watermarks_forwarded.load(Ordering::Relaxed);
+    let lag = hop3.metrics.watermark_lag_ms.load(Ordering::Relaxed);
+    assert!(
+        fw > 0,
+        "three hops with event-time panes must forward watermark frames"
+    );
+    println!(
+        "watermark_3hop  {:>10.3}s  {:>14}  {fw} watermarks forwarded, worst lag {lag}ms",
+        hop3.wall_time.as_secs_f64(),
+        flowunits::util::fmt_rate(n, hop3.wall_time),
+    );
+
+    let rows = vec![
+        report_row("proc_window", n, &proc),
+        report_row("event_window", n, &event),
+        report_row("watermark_3hop", n, &hop3),
+    ];
+    let json = format!(
+        "{{\n  \"bench\": \"event_time\",\n  \"events\": {n},\n  \"scenarios\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    // cargo runs bench binaries with CWD = the package root (rust/);
+    // EVENT_TIME_OUT overrides the destination
+    let path = std::env::var("EVENT_TIME_OUT").unwrap_or_else(|_| "BENCH_event_time.json".into());
+    let mut f = std::fs::File::create(&path).expect("create BENCH_event_time.json");
+    f.write_all(json.as_bytes()).expect("write bench results");
+    println!("\nwrote {path}");
+}

@@ -51,6 +51,7 @@ pub mod typed;
 pub use crate::coordinator::{AutoscaleConfig, CollectHandle, JobConfig, JobReport};
 pub use crate::graph::{Replication, WindowAgg};
 pub use crate::placement::PlannerKind;
+pub use crate::time::{WatermarkGen, WindowAssigner};
 pub use data::{DecodeErrors, Features};
 pub use raw::StreamContext;
 pub use typed::{KeyedStream, Source, Stream};

@@ -90,6 +90,7 @@
 pub use crate::coordinator::{JobConfig, JobReport};
 pub use crate::graph::{Replication, WindowAgg};
 pub use crate::placement::PlannerKind;
+pub use crate::time::{WatermarkGen, WindowAssigner};
 
 use super::data::DecodeErrors;
 use super::OpenStream;
@@ -97,6 +98,7 @@ use crate::config::ClusterSpec;
 use crate::coordinator::{Coordinator, Deployment};
 use crate::error::{Error, Result};
 use crate::graph::{LogicalGraph, OpId, OpKind, SinkKind, SourceKind, UnitId};
+use crate::time::TsFn;
 use crate::topology::ConstraintExpr;
 use crate::value::Value;
 use std::cell::RefCell;
@@ -658,6 +660,148 @@ impl Stream {
             })),
             "inspect",
         )
+    }
+
+    /// Assigns each record's *event timestamp* (milliseconds, extracted
+    /// by `ts`) and mints watermarks with the generator discipline `gen`.
+    /// Watermarks flow downstream as control frames — broadcast across
+    /// fan-out, merged min-of-inputs at fan-in — and drive the event-time
+    /// operators ([`Stream::event_window`], [`Stream::interval_join`]).
+    /// An assigner *replaces* any upstream time domain: watermarks from
+    /// further up are swallowed here.
+    pub fn assign_timestamps(
+        self,
+        ts: impl Fn(&Value) -> i64 + Send + Sync + 'static,
+        gen: WatermarkGen,
+    ) -> Self {
+        self.push(
+            OpKind::AssignTimestamps {
+                ts: Arc::new(ts),
+                gen,
+            },
+            "assign_timestamps",
+        )
+    }
+
+    /// Event-time window over a keyed stream: buffers `Pair(key, value)`
+    /// records into windows by the event timestamp `ts` extracts from the
+    /// *value*, and fires each window exactly once when the watermark
+    /// passes its end plus `lateness_ms`. Records arriving after every
+    /// window they belong to has fired are counted in the `late_records`
+    /// metric. Needs watermarks: put an [`Stream::assign_timestamps`]
+    /// upstream.
+    pub fn event_window(
+        self,
+        ts: impl Fn(&Value) -> i64 + Send + Sync + 'static,
+        assigner: WindowAssigner,
+        agg: WindowAgg,
+        lateness_ms: i64,
+    ) -> Self {
+        self.event_window_cfg(Arc::new(ts), assigner, agg, lateness_ms, false)
+    }
+
+    /// [`Stream::event_window`] with an explicit late-record side-output
+    /// flag (the typed layer turns the flag into a [`CollectHandle`]
+    /// redeemed under the window operator's id).
+    ///
+    /// [`CollectHandle`]: crate::coordinator::CollectHandle
+    pub(crate) fn event_window_cfg(
+        self,
+        ts: TsFn,
+        assigner: WindowAssigner,
+        agg: WindowAgg,
+        lateness_ms: i64,
+        late_side: bool,
+    ) -> Self {
+        self.push(
+            OpKind::EventWindow {
+                ts,
+                assigner,
+                agg,
+                lateness_ms,
+                late_side,
+            },
+            "event_window",
+        )
+    }
+
+    /// Keyed stream-stream interval join: matches records of this (left)
+    /// stream with records of `other` (right) that share the same key and
+    /// whose event timestamps satisfy
+    /// `ts_right ∈ [ts_left + lower_ms, ts_left + upper_ms]`, emitting
+    /// `Pair(key, Pair(left, right))` per match. Both inputs must be
+    /// keyed; the merged watermark (min across both inputs) evicts
+    /// buffered records. The join point lands in a fresh unit on the
+    /// innermost of the two input layers; name it with [`Stream::unit`].
+    pub fn interval_join(
+        self,
+        other: Stream,
+        ts_left: impl Fn(&Value) -> i64 + Send + Sync + 'static,
+        ts_right: impl Fn(&Value) -> i64 + Send + Sync + 'static,
+        lower_ms: i64,
+        upper_ms: i64,
+    ) -> Stream {
+        self.interval_join_cfg(other, Arc::new(ts_left), Arc::new(ts_right), lower_ms, upper_ms)
+    }
+
+    /// [`Stream::interval_join`] taking already-erased timestamp
+    /// extractors (the typed layer's lowering target).
+    pub(crate) fn interval_join_cfg(
+        self,
+        other: Stream,
+        ts_left: TsFn,
+        ts_right: TsFn,
+        lower_ms: i64,
+        upper_ms: i64,
+    ) -> Stream {
+        if !Rc::ptr_eq(&self.state, &other.state) {
+            self.state
+                .borrow_mut()
+                .errors
+                .push("interval_join: streams were built by different StreamContexts".into());
+            return self;
+        }
+        // tag each input in its own unit so the two sides of the shared
+        // inbox stay distinguishable after the fan-in merges them
+        let left = self.push(OpKind::SideTag(0), "side_tag");
+        let right = other.push(OpKind::SideTag(1), "side_tag");
+        let (head, unit) = {
+            let mut st = left.state.borrow_mut();
+            let la = st.graph.units[left.unit].layer.clone();
+            let lb = st.graph.units[right.unit].layer.clone();
+            let layer = if st.layer_pos(&lb) > st.layer_pos(&la) {
+                lb
+            } else {
+                la
+            };
+            let unit = st
+                .graph
+                .add_unit(None, layer, None, Replication::PerCore);
+            let head = st.graph.add_op(
+                OpKind::IntervalJoin {
+                    ts_left,
+                    ts_right,
+                    lower_ms,
+                    upper_ms,
+                },
+                unit,
+                vec![left.head, right.head],
+                "interval_join",
+            );
+            (head, unit)
+        };
+        Stream {
+            head,
+            unit,
+            forked: false,
+            ..left
+        }
+    }
+
+    /// The operator id at the head of this stream (the typed layer tags
+    /// late-record side outputs by the window operator's id).
+    pub(crate) fn head_op(&self) -> OpId {
+        self.head
     }
 
     /// Tumbling count window of `size` events with aggregate `agg`.

@@ -98,9 +98,10 @@ use crate::coordinator::CollectHandle;
 use crate::error::Error;
 use crate::graph::{ColumnarOp, Replication, SinkKind, SourceKind, WindowAgg};
 use crate::runtime::col_exec::{
-    column_batch_of, ColumnFilterExec, ColumnFilterMapExec, ColumnFoldExec, ColumnKeyByExec,
-    ColumnMapExec, ColumnReduceExec, ColumnWindowExec,
+    column_batch_of, ColumnAssignTsExec, ColumnFilterExec, ColumnFilterMapExec, ColumnFoldExec,
+    ColumnKeyByExec, ColumnMapExec, ColumnReduceExec, ColumnWindowExec,
 };
+use crate::time::{TsFn, WatermarkGen, WindowAssigner};
 use crate::value::{StreamData, Value};
 use std::marker::PhantomData;
 use std::sync::Arc;
@@ -266,6 +267,24 @@ fn record_unkeyed(errs: &DecodeErrors, op: &str) {
         op,
         &Error::Decode("expected a keyed Pair(key, value) record".into()),
     );
+}
+
+/// Erases a native-typed timestamp extractor to the engine's [`TsFn`].
+/// A record that fails to decode as `V` gets `i64::MIN` — already behind
+/// any watermark, so the event-time operators count it late instead of
+/// polluting a window — and the failure is recorded for `execute()`.
+fn value_ts<V: StreamData>(
+    errs: Arc<DecodeErrors>,
+    op: &'static str,
+    ts: impl Fn(&V) -> i64 + Send + Sync + 'static,
+) -> TsFn {
+    Arc::new(move |v: &Value| match V::try_from_value(v.clone()) {
+        Ok(t) => ts(&t),
+        Err(e) => {
+            errs.record(op, &e);
+            i64::MIN
+        }
+    })
 }
 
 impl<T: StreamData> Stream<T> {
@@ -472,6 +491,52 @@ impl<T: StreamData> Stream<T> {
         f: impl Fn(&T) -> K + Send + Sync + 'static,
     ) -> KeyedStream<K, T> {
         self.key_by(f)
+    }
+
+    /// Assigns each record's *event timestamp* (milliseconds, extracted
+    /// by `ts`) and mints watermarks with the generator discipline `gen`
+    /// — the entry point to event time. Watermarks flow downstream as
+    /// control frames (broadcast across fan-out, merged min-of-inputs at
+    /// fan-in, carried across socket transport) and drive
+    /// [`KeyedStream::event_window`] and [`KeyedStream::interval_join`].
+    /// An assigner *replaces* any upstream time domain. Lowers to a
+    /// monomorphized column operator when `T` is a columnar type (where
+    /// punctuated generators degrade to per-batch emission — the column
+    /// scan has no per-row punctuation test).
+    pub fn assign_timestamps(
+        self,
+        ts: impl Fn(&T) -> i64 + Send + Sync + 'static,
+        gen: WatermarkGen,
+    ) -> Self {
+        let errs = self.errs.clone();
+        if self.raw.columnar_enabled() && T::layout().is_some() {
+            let ts: Arc<dyn Fn(&T) -> i64 + Send + Sync> = Arc::new(ts);
+            let op_errs = errs.clone();
+            let raw = self.raw.push_columnar(columnar_op(
+                move || {
+                    Box::new(ColumnAssignTsExec::<T>::new(
+                        ts.clone(),
+                        gen.clone(),
+                        op_errs.clone(),
+                    ))
+                },
+                false,
+                true,
+                "assign_timestamps",
+            ));
+            return wrap(raw, errs);
+        }
+        let raw = self.raw.assign_timestamps(
+            move |v: &Value| match T::try_from_value(v.clone()) {
+                Ok(t) => ts(&t),
+                Err(e) => {
+                    errs.record("assign_timestamps", &e);
+                    i64::MIN
+                }
+            },
+            gen,
+        );
+        wrap(raw, self.errs)
     }
 
     /// Terminal: collect events, returning a receipt redeemed with
@@ -726,6 +791,93 @@ impl<K: StreamData, V: StreamData> KeyedStream<K, V> {
             }
         }
         wrap_keyed(self.raw.sliding_window(size, slide, agg), self.errs)
+    }
+
+    /// Event-time window: buffers `(K, V)` records into windows by the
+    /// event timestamp `ts` extracts from the value, firing each window
+    /// exactly once when the watermark passes its end plus `lateness_ms`.
+    /// `assigner` picks the window shape (tumbling / sliding / session);
+    /// `R` names the aggregate's native type exactly as in
+    /// [`KeyedStream::window`]. Records arriving after every window they
+    /// belong to has fired are counted in the `late_records` metric (use
+    /// [`KeyedStream::event_window_with_late`] to also capture them).
+    /// Needs watermarks: put a [`Stream::assign_timestamps`] upstream.
+    /// Runs on the row plane — an upstream columnar chain falls back to
+    /// materialized rows at the window, exactly like any aggregate
+    /// without a static layout.
+    pub fn event_window<R: StreamData>(
+        self,
+        ts: impl Fn(&V) -> i64 + Send + Sync + 'static,
+        assigner: WindowAssigner,
+        agg: WindowAgg,
+        lateness_ms: i64,
+    ) -> KeyedStream<K, R> {
+        let errs = self.errs.clone();
+        let raw = self.raw.event_window_cfg(
+            value_ts::<V>(errs, "event_window", ts),
+            assigner,
+            agg,
+            lateness_ms,
+            false,
+        );
+        wrap_keyed(raw, self.errs)
+    }
+
+    /// [`KeyedStream::event_window`] with a late-record side output: the
+    /// second return is a receipt redeemed with
+    /// [`JobReport::take`](crate::coordinator::JobReport::take) for the
+    /// `Vec<(K, V)>` of records that arrived after their window fired —
+    /// late data stays observable instead of silently dropped.
+    pub fn event_window_with_late<R: StreamData>(
+        self,
+        ts: impl Fn(&V) -> i64 + Send + Sync + 'static,
+        assigner: WindowAssigner,
+        agg: WindowAgg,
+        lateness_ms: i64,
+    ) -> (KeyedStream<K, R>, CollectHandle<(K, V)>) {
+        let errs = self.errs.clone();
+        let origin = self.raw.graph_origin();
+        let raw = self.raw.event_window_cfg(
+            value_ts::<V>(errs, "event_window", ts),
+            assigner,
+            agg,
+            lateness_ms,
+            true,
+        );
+        let handle = CollectHandle {
+            op: raw.head_op(),
+            origin,
+            _t: PhantomData,
+        };
+        (wrap_keyed(raw, self.errs), handle)
+    }
+
+    /// Keyed stream-stream interval join: matches records of this (left)
+    /// stream with records of `other` (right) that share the same key and
+    /// whose event timestamps satisfy
+    /// `ts_right ∈ [ts_left + lower_ms, ts_left + upper_ms]`, emitting
+    /// one `(K, (V, V2))` record per match. Both sides buffer until the
+    /// merged watermark (min across both inputs) evicts them; records
+    /// arriving past their own eviction horizon are counted in
+    /// `late_records`. Needs watermarks on *both* inputs
+    /// ([`Stream::assign_timestamps`]).
+    pub fn interval_join<V2: StreamData>(
+        self,
+        other: KeyedStream<K, V2>,
+        ts_left: impl Fn(&V) -> i64 + Send + Sync + 'static,
+        ts_right: impl Fn(&V2) -> i64 + Send + Sync + 'static,
+        lower_ms: i64,
+        upper_ms: i64,
+    ) -> KeyedStream<K, (V, V2)> {
+        let errs = self.errs.clone();
+        let raw = self.raw.interval_join_cfg(
+            other.raw,
+            value_ts::<V>(errs.clone(), "interval_join", ts_left),
+            value_ts::<V2>(errs, "interval_join", ts_right),
+            lower_ms,
+            upper_ms,
+        );
+        wrap_keyed(raw, self.errs)
     }
 
     /// Terminal: collect `(key, value)` records, returning a receipt

@@ -64,6 +64,27 @@ pub enum Msg {
     /// marker from every producer quiesces itself (snapshotting state and
     /// forwarding the marker) instead of flushing and cascading EOS.
     Epoch(u64),
+    /// Event-time watermark: the sending producer promises it will emit no
+    /// further record with an event timestamp below `ts`. Unlike epochs,
+    /// watermarks carry the *sender's instance id* so a fan-in consumer can
+    /// merge them min-of-inputs — the shared inbox channel is otherwise
+    /// anonymous.
+    Watermark(Watermark),
+}
+
+/// One watermark frame. `from` identifies the producing instance (inbox
+/// messages carry no other sender identity); `origin_ms` is the wall-clock
+/// time the watermark was *generated* at its source assigner, preserved
+/// hop-to-hop so `watermark_lag_ms` measures end-to-end propagation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Watermark {
+    /// Producing instance id (unique per job).
+    pub from: u32,
+    /// Event-time promise: no later record below this timestamp (ms).
+    pub ts: i64,
+    /// Wall-clock generation time at the originating assigner (ms since
+    /// the Unix epoch).
+    pub origin_ms: u64,
 }
 
 /// Epoch-kind tag bit: epochs with this bit set are *checkpoint* epochs
@@ -173,6 +194,9 @@ pub struct OutPort {
     col_pending: Vec<Option<ColumnBuffer>>,
     /// Flush threshold for hash-routed buffers.
     batch_capacity: usize,
+    /// Producing instance id stamped onto outgoing watermarks so fan-in
+    /// consumers can merge min-of-inputs (see [`Watermark::from`]).
+    sender: u32,
     metrics: Option<Metrics>,
 }
 
@@ -197,8 +221,17 @@ impl OutPort {
             // a zero capacity would make the hash carving loop spin on
             // empty chunks; one record per batch is the useful floor
             batch_capacity: batch_capacity.max(1),
+            sender: 0,
             metrics,
         }
+    }
+
+    /// Stamps the producing instance id onto outgoing watermarks. Ports
+    /// feeding a shared inbox must carry distinct ids or the min-of-inputs
+    /// merge collapses the producers into one.
+    pub fn with_sender(mut self, id: u32) -> Self {
+        self.sender = id;
+        self
     }
 
     /// Number of downstream targets.
@@ -444,6 +477,28 @@ impl OutPort {
         }
     }
 
+    /// Flushes pending buffers, then broadcasts an event-time watermark to
+    /// every target (watermarks are control frames: they must reach every
+    /// downstream partition regardless of the data routing policy). The
+    /// flush keeps the ordering promise — no buffered record with a lower
+    /// timestamp can arrive after the watermark on the same lane.
+    pub fn watermark(&mut self, ts: i64, origin_ms: u64) {
+        self.flush();
+        let wm = Watermark {
+            from: self.sender,
+            ts,
+            origin_ms,
+        };
+        for t in 0..self.targets.len() {
+            if self.targets[t].lane.deliver(Msg::Watermark(wm)).is_err() {
+                self.count_transport_error();
+            }
+            if let Some(m) = &self.metrics {
+                MetricsRegistry::add(&m.watermarks_forwarded, 1);
+            }
+        }
+    }
+
     fn deliver(&mut self, t: usize, batch: Batch) {
         if self.targets[t].crossing {
             if let Some(m) = &self.metrics {
@@ -589,6 +644,21 @@ impl FanOut {
             p.epoch(epoch);
         }
     }
+
+    /// Flushes then broadcasts a watermark down every edge.
+    pub fn watermark(&mut self, ts: i64, origin_ms: u64) {
+        for p in &mut self.ports {
+            p.watermark(ts, origin_ms);
+        }
+    }
+
+    /// Stamps the producing instance id onto every port (watermark merge
+    /// identity — see [`OutPort::with_sender`]).
+    pub fn set_sender(&mut self, id: u32) {
+        for p in &mut self.ports {
+            p.sender = id;
+        }
+    }
 }
 
 /// What an [`Inbox`] yielded: a data batch, or one of the two terminal
@@ -603,6 +673,16 @@ pub enum InboxEvent {
     /// Every still-live producer has delivered the drain-and-handoff
     /// marker for this epoch (dynamic update): quiesce without EOS.
     Epoch(u64),
+    /// The merged (min-of-inputs) event-time watermark advanced: every
+    /// producer has promised no further record below `ts`. `origin_ms` is
+    /// the generation wall-clock of the frame that unblocked the merge,
+    /// preserved so downstream hops keep measuring end-to-end lag.
+    Watermark {
+        /// New merged watermark (event-time ms).
+        ts: i64,
+        /// Wall-clock generation time of the triggering frame.
+        origin_ms: u64,
+    },
     /// Every producer signalled EOS (or disconnected): end of stream.
     Eos,
 }
@@ -614,6 +694,12 @@ pub struct Inbox {
     eos_seen: usize,
     epoch_seen: usize,
     epoch: u64,
+    /// Latest watermark per producer id (linear scan — fan-in degrees are
+    /// small). The merged watermark is the min over these once every
+    /// producer has reported at least once.
+    wm_in: Vec<(u32, i64)>,
+    /// Last merged watermark emitted downstream (monotonicity guard).
+    wm_out: i64,
     /// Set when every sender dropped *without* a terminal signal from some
     /// producer — an upstream crash, not a quiesce or a normal EOS. The
     /// recovery supervisor uses this to tell "stream genuinely ended" from
@@ -631,8 +717,49 @@ impl Inbox {
             eos_seen: 0,
             epoch_seen: 0,
             epoch: 0,
+            wm_in: Vec::new(),
+            wm_out: i64::MIN,
             disconnected: false,
             metrics: None,
+        }
+    }
+
+    /// The current merged event-time watermark, if every producer has
+    /// reported one.
+    pub fn watermark(&self) -> Option<i64> {
+        (self.wm_out > i64::MIN).then_some(self.wm_out)
+    }
+
+    /// Folds one watermark frame into the per-producer merge state.
+    /// Returns the advanced merged watermark when (a) every producer that
+    /// has not already ended its stream reported at least once and (b) the
+    /// min over the latest per-producer promises moved forward.
+    fn merge_watermark(&mut self, wm: Watermark) -> Option<i64> {
+        match self.wm_in.iter_mut().find(|(f, _)| *f == wm.from) {
+            Some((_, t)) => *t = (*t).max(wm.ts),
+            None => self.wm_in.push((wm.from, wm.ts)),
+        }
+        // A producer that already delivered EOS stopped advancing — treat
+        // it as +inf so a finished source cannot stall the merge forever.
+        // (EOS frames are anonymous, so this over-approximates when an
+        // EOS'd producer also sits in `wm_in`; the min over live entries
+        // is still a sound lower bound.)
+        if self.wm_in.len() + self.eos_seen < self.producers {
+            return None;
+        }
+        let min = self.wm_in.iter().map(|(_, t)| *t).min()?;
+        if min > self.wm_out {
+            self.wm_out = min;
+            if let Some(m) = &self.metrics {
+                let now = crate::time::now_ms();
+                MetricsRegistry::fetch_max(
+                    &m.watermark_lag_ms,
+                    now.saturating_sub(wm.origin_ms),
+                );
+            }
+            Some(min)
+        } else {
+            None
         }
     }
 
@@ -704,6 +831,12 @@ impl Inbox {
                     self.epoch_seen += 1;
                     self.epoch = e;
                 }
+                Ok(Msg::Watermark(wm)) => {
+                    let origin_ms = wm.origin_ms;
+                    if let Some(ts) = self.merge_watermark(wm) {
+                        return InboxEvent::Watermark { ts, origin_ms };
+                    }
+                }
                 Err(_) => {
                     // All senders dropped with neither marker nor EOS from
                     // some producer — an abnormal teardown (producer
@@ -725,10 +858,15 @@ impl Inbox {
     /// — either every producer signalled EOS / disconnected, or an epoch
     /// completed (callers that distinguish the two use [`Inbox::next`]).
     pub fn recv(&mut self) -> Option<Batch> {
-        match self.next() {
-            InboxEvent::Batch(b) => Some(b),
-            InboxEvent::Columns(c) => Some(c.to_batch()),
-            InboxEvent::Epoch(_) | InboxEvent::Eos => None,
+        loop {
+            match self.next() {
+                InboxEvent::Batch(b) => return Some(b),
+                InboxEvent::Columns(c) => return Some(c.to_batch()),
+                // watermark-oblivious consumers skip the control event;
+                // the merged value stays queryable via `watermark()`
+                InboxEvent::Watermark { .. } => continue,
+                InboxEvent::Epoch(_) | InboxEvent::Eos => return None,
+            }
         }
     }
 
@@ -766,6 +904,12 @@ impl Inbox {
                 } else {
                     None
                 }
+            }
+            Ok(Msg::Watermark(wm)) => {
+                // control-multiplexing callers don't consume watermark
+                // events; fold into the merge state and report "not ready"
+                self.merge_watermark(wm);
+                None
             }
             Err(std::sync::mpsc::TryRecvError::Empty) => None,
             Err(std::sync::mpsc::TryRecvError::Disconnected) => {
@@ -1240,6 +1384,87 @@ mod tests {
         let mut expect: Vec<Value> = keyed_columns(4).to_batch().into_values();
         expect.push(Value::pair(Value::I64(0), Value::I64(99)));
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn watermarks_merge_min_of_inputs() {
+        let (tx, rx) = sync_channel(16);
+        let tx2 = tx.clone();
+        let mut inbox = Inbox::new(rx, 2);
+        let wm = |from, ts| {
+            Msg::Watermark(Watermark {
+                from,
+                ts,
+                origin_ms: 0,
+            })
+        };
+        tx.send(wm(0, 100)).unwrap();
+        tx2.send(Msg::Batch(vec![Value::I64(1)].into())).unwrap();
+        // only one producer reported: no merged watermark yet, data flows
+        assert!(matches!(inbox.next(), InboxEvent::Batch(_)));
+        assert_eq!(inbox.watermark(), None);
+        tx2.send(wm(1, 50)).unwrap();
+        assert!(matches!(inbox.next(), InboxEvent::Watermark { ts: 50, .. }));
+        // the slower producer advancing moves the min up to the other bound
+        tx2.send(wm(1, 200)).unwrap();
+        assert!(matches!(inbox.next(), InboxEvent::Watermark { ts: 100, .. }));
+        assert_eq!(inbox.watermark(), Some(100));
+        // a regressing producer never moves the merged watermark backwards
+        tx.send(wm(0, 90)).unwrap();
+        tx.send(Msg::Eos).unwrap();
+        tx2.send(Msg::Eos).unwrap();
+        assert!(matches!(inbox.next(), InboxEvent::Eos));
+        assert_eq!(inbox.watermark(), Some(100));
+    }
+
+    #[test]
+    fn finished_producer_does_not_stall_watermarks() {
+        let (tx, rx) = sync_channel(8);
+        let tx2 = tx.clone();
+        let mut inbox = Inbox::new(rx, 2);
+        tx.send(Msg::Eos).unwrap();
+        tx2.send(Msg::Watermark(Watermark {
+            from: 1,
+            ts: 10,
+            origin_ms: 0,
+        }))
+        .unwrap();
+        // producer 0 ended its stream; producer 1's promise alone decides
+        assert!(matches!(inbox.next(), InboxEvent::Watermark { ts: 10, .. }));
+        tx2.send(Msg::Eos).unwrap();
+        assert!(matches!(inbox.next(), InboxEvent::Eos));
+    }
+
+    #[test]
+    fn outport_watermark_flushes_pending_then_broadcasts() {
+        let (t1, r1) = local_target(8);
+        let (t2, r2) = local_target(8);
+        let mut port =
+            OutPort::new(vec![t1, t2], Routing::Hash, 1000, None).with_sender(7);
+        port.send(vec![Value::pair(Value::I64(1), Value::I64(10))].into());
+        port.watermark(42, 5);
+        let mut batches = 0;
+        let mut marks = 0;
+        for rx in [r1, r2] {
+            let mut saw_mark = false;
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    Msg::Batch(_) => {
+                        assert!(!saw_mark, "buffered records precede the watermark");
+                        batches += 1;
+                    }
+                    Msg::Watermark(w) => {
+                        assert_eq!((w.from, w.ts, w.origin_ms), (7, 42, 5));
+                        saw_mark = true;
+                        marks += 1;
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            assert!(saw_mark);
+        }
+        assert_eq!(batches, 1, "hash routing delivers the record once");
+        assert_eq!(marks, 2, "the watermark reaches every partition");
     }
 
     #[test]

@@ -15,8 +15,9 @@ use crate::placement::{ancestor_at_layer, plan as make_plan, ExecPlan, PlannerKi
 use crate::queue::{Broker, QueueBroker, Topic};
 use crate::runtime::{
     exec::{
-        Collector, FilterExec, FilterMapExec, FlatMapExec, FoldExec, KeyByExec, KeyByFusedExec,
-        MapExec, ReduceExec, SinkExec, WindowExec, XlaExec,
+        AssignTsExec, Collector, EventWindowExec, FilterExec, FilterMapExec, FlatMapExec,
+        FoldExec, IntervalJoinExec, KeyByExec, KeyByFusedExec, MapExec, ReduceExec, SideTagExec,
+        SinkExec, WindowExec, XlaExec,
     },
     run_instance, state_record, Handoff, InputKind, InstanceRuntime, OpExec, SourceRuntime,
 };
@@ -676,7 +677,9 @@ impl Deployment {
                         Some(self.metrics.clone()),
                     )
                 };
-                ports.push(port);
+                // stamp the producer's identity so downstream inboxes can
+                // min-merge watermarks per producer
+                ports.push(port.with_sender(inst.id as u32));
             }
             let outputs = FanOut::new(ports);
 
@@ -1223,6 +1226,21 @@ impl Deployment {
         self.checkpoints
             .insert((unit, zone.to_string()), (epoch, scan_from));
         MetricsRegistry::add(&self.metrics.checkpoints_taken, 1);
+        // Compact the state topic: every committed checkpoint of this unit
+        // re-reads its records from its own `scan_from` onward, so nothing
+        // below the minimum scan_from across the unit's zones can ever be
+        // read again. Tombstoning (not removal) keeps the surviving
+        // records' absolute offsets intact, so the topic's length — and
+        // the memory/disk behind it — stays bounded across arbitrarily
+        // many checkpoint cycles.
+        let keep_from = self
+            .checkpoints
+            .iter()
+            .filter(|((u, _), _)| *u == unit)
+            .map(|(_, &(_, sf))| sf)
+            .min()
+            .unwrap_or(0);
+        topic.partition(0).compact_before(keep_from);
         Ok(())
     }
 
@@ -1443,6 +1461,9 @@ impl Deployment {
         // quiesced instances
         let mut per_stage: BTreeMap<usize, Vec<Vec<Value>>> = BTreeMap::new();
         for rec in records {
+            if rec.is_empty() {
+                continue; // compaction tombstone — superseded epoch
+            }
             let fields = match Value::decode_exact(&rec) {
                 Ok(Value::List(f)) if f.len() == 5 => f,
                 Ok(_) => continue,
@@ -1849,6 +1870,33 @@ pub fn build_stage_ops(
             OpKind::Window { size, slide, agg } => {
                 ops.push(Box::new(WindowExec::new(*size, *slide, agg.clone())))
             }
+            OpKind::AssignTimestamps { ts, gen } => {
+                ops.push(Box::new(AssignTsExec::new(ts.clone(), gen.clone())))
+            }
+            OpKind::EventWindow {
+                ts,
+                assigner,
+                agg,
+                lateness_ms,
+                late_side,
+            } => {
+                let mut exec = EventWindowExec::new(ts.clone(), *assigner, agg.clone(), *lateness_ms)
+                    .with_metrics(metrics.clone());
+                if *late_side {
+                    exec = exec.with_late_side(oid, collector.clone());
+                }
+                ops.push(Box::new(exec));
+            }
+            OpKind::SideTag(side) => ops.push(Box::new(SideTagExec(*side))),
+            OpKind::IntervalJoin {
+                ts_left,
+                ts_right,
+                lower_ms,
+                upper_ms,
+            } => ops.push(Box::new(
+                IntervalJoinExec::new(ts_left.clone(), ts_right.clone(), *lower_ms, *upper_ms)
+                    .with_metrics(metrics.clone()),
+            )),
             OpKind::XlaMap {
                 artifact,
                 batch,

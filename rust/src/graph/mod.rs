@@ -252,6 +252,57 @@ pub enum OpKind {
     /// Merge point of two or more streams (pass-through; the merge itself
     /// happens in the channel wiring feeding this operator's stage).
     Union,
+    /// Event-time assignment: extracts each record's event timestamp and
+    /// generates watermarks per the configured discipline. A pass-through
+    /// on the data plane; the watermark control frames it emits travel
+    /// alongside the data (see [`crate::channels::Msg::Watermark`]).
+    AssignTimestamps {
+        /// Event-timestamp extractor (milliseconds).
+        ts: crate::time::TsFn,
+        /// Watermark generation discipline.
+        gen: crate::time::WatermarkGen,
+    },
+    /// Event-time window over a keyed stream: panes buffer per key and
+    /// fire when the merged watermark passes each window's end plus the
+    /// allowed lateness. Records arriving after that horizon are counted
+    /// in `late_records` (and optionally routed to the typed side output
+    /// under this operator's id).
+    EventWindow {
+        /// Event-timestamp extractor applied to the pair's *payload*.
+        ts: crate::time::TsFn,
+        /// Window shape (tumbling / sliding / session).
+        assigner: crate::time::WindowAssigner,
+        /// Aggregate emitted per fired pane.
+        agg: WindowAgg,
+        /// Grace period after the window end during which late records
+        /// are still incorporated (milliseconds).
+        lateness_ms: i64,
+        /// Route late-beyond-lateness records into the tagged collector
+        /// under this operator's id (typed side output) instead of only
+        /// counting them.
+        late_side: bool,
+    },
+    /// Tags keyed records with their interval-join side: `Pair(k, v)`
+    /// becomes `Pair(k, Pair(I64(side), v))`. Counts as a key extractor
+    /// (the key is unchanged, so the outgoing edge stays hash-routed) and
+    /// — uniquely — fuses *after* a key extractor, so tagging rides in
+    /// the keying stage instead of costing an extra shuffle hop.
+    SideTag(u8),
+    /// Keyed stream-stream interval join: left records at time `t` match
+    /// right records (same key) in `[t + lower_ms, t + upper_ms]`. Both
+    /// sides buffer until the merged watermark proves no further match
+    /// can arrive; inputs are the two [`OpKind::SideTag`]-wrapped keyed
+    /// streams (left = side 0, right = side 1).
+    IntervalJoin {
+        /// Left-payload event-timestamp extractor.
+        ts_left: crate::time::TsFn,
+        /// Right-payload event-timestamp extractor.
+        ts_right: crate::time::TsFn,
+        /// Interval lower bound relative to the left timestamp (ms).
+        lower_ms: i64,
+        /// Interval upper bound relative to the left timestamp (ms).
+        upper_ms: i64,
+    },
     /// A monomorphized columnar operator emitted by the typed layer: the
     /// factory builds one fresh executor per stage instance. Key-extracting
     /// columnar operators (`keys: true`) route and break stages exactly
@@ -296,6 +347,20 @@ impl std::fmt::Debug for OpKind {
                 artifact, batch, ..
             } => write!(f, "XlaMap({artifact}, batch={batch})"),
             OpKind::Union => write!(f, "Union"),
+            OpKind::AssignTimestamps { gen, .. } => write!(f, "AssignTimestamps({gen:?})"),
+            OpKind::EventWindow {
+                assigner,
+                agg,
+                lateness_ms,
+                ..
+            } => write!(
+                f,
+                "EventWindow({assigner:?}, agg={agg:?}, lateness={lateness_ms}ms)"
+            ),
+            OpKind::SideTag(side) => write!(f, "SideTag({side})"),
+            OpKind::IntervalJoin {
+                lower_ms, upper_ms, ..
+            } => write!(f, "IntervalJoin([{lower_ms}, {upper_ms}]ms)"),
             OpKind::Columnar(c) => write!(f, "Columnar({})", c.label),
             OpKind::Sink(s) => write!(f, "Sink({s:?})"),
         }
@@ -307,6 +372,9 @@ impl OpKind {
     pub fn is_stateful(&self) -> bool {
         match self {
             OpKind::Fold { .. } | OpKind::Reduce { .. } | OpKind::Window { .. } => true,
+            OpKind::AssignTimestamps { .. }
+            | OpKind::EventWindow { .. }
+            | OpKind::IntervalJoin { .. } => true,
             OpKind::Columnar(c) => c.stateful,
             _ => false,
         }
@@ -317,6 +385,7 @@ impl OpKind {
     pub fn is_key_extractor(&self) -> bool {
         match self {
             OpKind::KeyBy(_) | OpKind::KeyByFused(_) => true,
+            OpKind::SideTag(_) => true,
             OpKind::Columnar(c) => c.keys,
             _ => false,
         }
@@ -549,6 +618,29 @@ impl LogicalGraph {
                         )));
                     }
                 }
+                OpKind::IntervalJoin {
+                    lower_ms, upper_ms, ..
+                } => {
+                    if op.inputs.len() != 2 {
+                        return Err(Error::Graph(format!(
+                            "interval join '{}' needs exactly two inputs (left, right)",
+                            op.name
+                        )));
+                    }
+                    if op.inputs[0] == op.inputs[1] {
+                        return Err(Error::Graph(format!(
+                            "interval join '{}' has the same stream on both sides",
+                            op.name
+                        )));
+                    }
+                    if lower_ms > upper_ms {
+                        return Err(Error::Graph(format!(
+                            "interval join '{}' bounds invalid: need lower <= upper, \
+                             got [{lower_ms}, {upper_ms}]",
+                            op.name
+                        )));
+                    }
+                }
                 _ => {
                     if op.inputs.len() != 1 {
                         return Err(Error::Graph(format!(
@@ -569,6 +661,20 @@ impl LogicalGraph {
                 if *size == 0 || *slide == 0 || *slide > *size {
                     return Err(Error::Graph(format!(
                         "window(size={size}, slide={slide}) invalid: need 0 < slide <= size"
+                    )));
+                }
+            }
+            if let OpKind::EventWindow {
+                assigner,
+                lateness_ms,
+                ..
+            } = &op.kind
+            {
+                assigner.validate().map_err(Error::Graph)?;
+                if *lateness_ms < 0 {
+                    return Err(Error::Graph(format!(
+                        "event window '{}' has negative allowed lateness ({lateness_ms}ms)",
+                        op.name
                     )));
                 }
             }
@@ -622,10 +728,16 @@ impl LogicalGraph {
             let fused = if op.inputs.len() == 1 {
                 let p = op.inputs[0];
                 let prev = &self.ops[p];
+                // SideTag rewrites `Pair(k, v)` into `Pair(k, Pair(side, v))`
+                // without touching the key, so it may ride in a key-extractor
+                // stage: the hash break moves after the tag (itself a key
+                // extractor) and routing is unchanged.
+                let after_key_ok = !prev.kind.is_key_extractor()
+                    || matches!(op.kind, OpKind::SideTag(_));
                 prev.unit == op.unit
                     && consumers[p] == 1
                     && !matches!(prev.kind, OpKind::Source(_))
-                    && !prev.kind.is_key_extractor()
+                    && after_key_ok
             } else {
                 false
             };
@@ -900,6 +1012,148 @@ mod tests {
             g.stage_edges(&stages),
             vec![(0, 2), (1, 2), (2, 3), (2, 4)]
         );
+    }
+
+    fn ts_fn() -> crate::time::TsFn {
+        Arc::new(|v: &Value| v.as_i64().unwrap_or(0))
+    }
+
+    /// Two keyed sides tagged and interval-joined:
+    /// srcL -> key_by -> tag(0) \
+    ///                            join -> sink
+    /// srcR -> key_by -> tag(1) /
+    fn join_graph() -> LogicalGraph {
+        let mut g = LogicalGraph::default();
+        let ul = g.add_unit(Some("left"), "edge".into(), None, Replication::PerCore);
+        let ur = g.add_unit(Some("right"), "edge".into(), None, Replication::PerCore);
+        let uj = g.add_unit(Some("join"), "cloud".into(), None, Replication::PerCore);
+        let sl = g.add_op(
+            OpKind::Source(SourceKind::Vector(Arc::new(vec![Value::I64(1)]))),
+            ul,
+            vec![],
+            "srcL",
+        );
+        let sr = g.add_op(
+            OpKind::Source(SourceKind::Vector(Arc::new(vec![Value::I64(2)]))),
+            ur,
+            vec![],
+            "srcR",
+        );
+        let kl = g.add_op(
+            OpKind::KeyBy(Arc::new(|v| Value::I64(v.as_i64().unwrap() % 2))),
+            ul,
+            vec![sl],
+            "keyL",
+        );
+        let kr = g.add_op(
+            OpKind::KeyBy(Arc::new(|v| Value::I64(v.as_i64().unwrap() % 2))),
+            ur,
+            vec![sr],
+            "keyR",
+        );
+        let tl = g.add_op(OpKind::SideTag(0), ul, vec![kl], "tagL");
+        let tr = g.add_op(OpKind::SideTag(1), ur, vec![kr], "tagR");
+        let j = g.add_op(
+            OpKind::IntervalJoin {
+                ts_left: ts_fn(),
+                ts_right: ts_fn(),
+                lower_ms: -10,
+                upper_ms: 10,
+            },
+            uj,
+            vec![tl, tr],
+            "join",
+        );
+        g.add_op(OpKind::Sink(SinkKind::Collect), uj, vec![j], "sink");
+        g
+    }
+
+    #[test]
+    fn side_tag_fuses_into_keyby_stage_and_stays_hash_routed() {
+        let g = join_graph();
+        g.validate(&layers()).unwrap();
+        let stages = g.stages();
+        // [srcL] [srcR] [keyL, tagL] [keyR, tagR] [join, sink]
+        assert_eq!(stages.len(), 5);
+        assert_eq!(stages[2].ops, vec![2, 4]);
+        assert_eq!(stages[3].ops, vec![3, 5]);
+        assert_eq!(stages[4].ops, vec![6, 7]);
+        // the tag stage ends with a key extractor, so both join input
+        // edges stay hash-partitioned
+        assert_eq!(g.edge_routing(&stages[2]), crate::channels::Routing::Hash);
+        assert_eq!(g.edge_routing(&stages[3]), crate::channels::Routing::Hash);
+    }
+
+    #[test]
+    fn interval_join_rejects_bad_shapes() {
+        // same stream on both sides
+        let mut g = LogicalGraph::default();
+        let u = g.add_unit(None, "edge".into(), None, Replication::PerCore);
+        let s = g.add_op(
+            OpKind::Source(SourceKind::Vector(Arc::new(vec![Value::I64(1)]))),
+            u,
+            vec![],
+            "src",
+        );
+        let k = g.add_op(OpKind::KeyBy(Arc::new(|v| v)), u, vec![s], "k");
+        let t = g.add_op(OpKind::SideTag(0), u, vec![k], "t");
+        let j = g.add_op(
+            OpKind::IntervalJoin {
+                ts_left: ts_fn(),
+                ts_right: ts_fn(),
+                lower_ms: 0,
+                upper_ms: 10,
+            },
+            u,
+            vec![t, t],
+            "join",
+        );
+        g.add_op(OpKind::Sink(SinkKind::Discard), u, vec![j], "sink");
+        assert!(g.validate(&layers()).is_err());
+
+        // inverted bounds
+        let mut g = join_graph();
+        if let OpKind::IntervalJoin {
+            lower_ms, upper_ms, ..
+        } = &mut g.ops[6].kind
+        {
+            *lower_ms = 5;
+            *upper_ms = -5;
+        }
+        assert!(g.validate(&layers()).is_err());
+    }
+
+    #[test]
+    fn event_window_validates_assigner_and_lateness() {
+        let mut base = eval_graph();
+        // replace the processing-time window with an event-time one
+        base.ops[3].kind = OpKind::EventWindow {
+            ts: ts_fn(),
+            assigner: crate::time::WindowAssigner::Tumbling { size_ms: 100 },
+            agg: WindowAgg::Sum,
+            lateness_ms: 50,
+            late_side: false,
+        };
+        base.validate(&layers()).unwrap();
+        assert!(base.ops[3].kind.is_stateful());
+
+        base.ops[3].kind = OpKind::EventWindow {
+            ts: ts_fn(),
+            assigner: crate::time::WindowAssigner::Tumbling { size_ms: 0 },
+            agg: WindowAgg::Sum,
+            lateness_ms: 0,
+            late_side: false,
+        };
+        assert!(base.validate(&layers()).is_err());
+
+        base.ops[3].kind = OpKind::EventWindow {
+            ts: ts_fn(),
+            assigner: crate::time::WindowAssigner::Tumbling { size_ms: 100 },
+            agg: WindowAgg::Sum,
+            lateness_ms: -1,
+            late_side: false,
+        };
+        assert!(base.validate(&layers()).is_err());
     }
 
     #[test]

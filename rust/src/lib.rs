@@ -80,6 +80,7 @@ pub mod pipelines;
 pub mod proptest;
 pub mod queue;
 pub mod runtime;
+pub mod time;
 pub mod topology;
 pub mod transport;
 pub mod util;
@@ -91,7 +92,8 @@ pub mod value;
 pub mod prelude {
     pub use crate::api::{
         AutoscaleConfig, CollectHandle, Features, JobConfig, KeyedStream, PlannerKind,
-        Replication, Source, Stream, StreamContext, StreamData, WindowAgg,
+        Replication, Source, Stream, StreamContext, StreamData, WatermarkGen, WindowAgg,
+        WindowAssigner,
     };
     pub use crate::config::ClusterSpec;
     pub use crate::coordinator::{Coordinator, Deployment, JobReport};

@@ -60,6 +60,22 @@ pub struct MetricsRegistry {
     /// Epoch markers forwarded between instances during drain-and-handoff
     /// dynamic updates.
     pub epochs_forwarded: AtomicU64,
+    /// Event-time watermark frames forwarded between instances (one per
+    /// target edge, like `epochs_forwarded`).
+    pub watermarks_forwarded: AtomicU64,
+    /// Worst observed end-to-end watermark propagation latency in
+    /// milliseconds: wall-clock at a fan-in merge minus the generation
+    /// time stamped by the originating assigner (a high-water gauge, not
+    /// a counter).
+    pub watermark_lag_ms: AtomicU64,
+    /// Records that arrived with an event timestamp at or below an
+    /// event-time operator's expired horizon (watermark minus allowed
+    /// lateness): counted — and optionally routed to a side output —
+    /// instead of silently dropped.
+    pub late_records: AtomicU64,
+    /// State-topic compactions: superseded checkpoint epochs truncated
+    /// from per-unit state topics after a newer commit record landed.
+    pub state_compactions: AtomicU64,
     /// Milliseconds spent quiescing + respawning units across all dynamic
     /// updates (the total update pause window).
     pub update_pause_ms: AtomicU64,
@@ -126,6 +142,11 @@ impl MetricsRegistry {
         counter.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Raises a high-water gauge to `n` if `n` exceeds its current value.
+    pub fn fetch_max(counter: &AtomicU64, n: u64) {
+        counter.fetch_max(n, Ordering::Relaxed);
+    }
+
     /// Renders a human-readable report.
     pub fn render(&self, wall: Duration) -> String {
         use crate::util::{fmt_bytes, fmt_rate};
@@ -179,9 +200,24 @@ impl MetricsRegistry {
         if ef + up > 0 {
             s.push_str(&format!("update epochs/ms : {ef} / {up}\n"));
         }
+        let wf = self.watermarks_forwarded.load(Ordering::Relaxed);
+        if wf > 0 {
+            s.push_str(&format!(
+                "watermarks fw/lag: {wf} / {}ms\n",
+                self.watermark_lag_ms.load(Ordering::Relaxed)
+            ));
+        }
+        let lr = self.late_records.load(Ordering::Relaxed);
+        if lr > 0 {
+            s.push_str(&format!("late records     : {lr} (counted, not dropped)\n"));
+        }
         let ck = self.checkpoints_taken.load(Ordering::Relaxed);
         if ck > 0 {
             s.push_str(&format!("checkpoints      : {ck}\n"));
+        }
+        let sc = self.state_compactions.load(Ordering::Relaxed);
+        if sc > 0 {
+            s.push_str(&format!("state compactions: {sc}\n"));
         }
         let saf = self.state_append_failures.load(Ordering::Relaxed);
         if saf > 0 {

@@ -510,6 +510,52 @@ impl Partition {
         }
     }
 
+    /// Compacts the log prefix `[0, before)`: superseded records are
+    /// replaced **in place** with zero-length tombstones, so the absolute
+    /// offsets of every surviving record are preserved (consumer commits,
+    /// poll offsets, and checkpoint `scan_from` markers all index the
+    /// same positions before and after). Readers that decode record
+    /// payloads must skip empty records. Returns how many records were
+    /// tombstoned for the first time (repeat calls are idempotent).
+    ///
+    /// File-backed partitions rewrite their segment under the file guard
+    /// (acquired before the state lock is released, like appends, so
+    /// segment order stays aligned with log order): tombstones persist as
+    /// zero-length frames and recovery reproduces them at the same
+    /// indices, so the reclaimed space is durable too.
+    pub fn compact_before(&self, before: usize) -> usize {
+        let tombstone: Arc<[u8]> = Arc::from(&[][..]);
+        let mut st = self.state.lock().unwrap();
+        let end = before.min(st.records.len());
+        let mut n = 0usize;
+        for r in &mut st.records[..end] {
+            if !r.is_empty() {
+                *r = tombstone.clone();
+                n += 1;
+            }
+        }
+        if n == 0 {
+            return 0;
+        }
+        if let Some(m) = &self.metrics {
+            MetricsRegistry::add(&m.state_compactions, n as u64);
+        }
+        let mut file = self.file.lock().unwrap();
+        let snapshot = file.as_ref().map(|_| st.records.clone());
+        drop(st); // disk I/O happens outside the state lock, like appends
+        if let (Some(f), Some(records)) = (file.as_mut(), snapshot) {
+            let _ = f.set_len(0);
+            for r in &records {
+                let mut framed = Vec::with_capacity(8 + r.len());
+                framed.extend_from_slice(&(r.len() as u32).to_le_bytes());
+                framed.extend_from_slice(&crc32(r).to_le_bytes());
+                framed.extend_from_slice(r);
+                let _ = f.write_all(&framed);
+            }
+        }
+        n
+    }
+
     /// Records a consumer group's committed offset.
     pub fn commit(&self, group: &str, offset: usize) {
         let mut st = self.state.lock().unwrap();
@@ -833,6 +879,62 @@ mod tests {
         // a foreign group's commits don't affect this group's lag
         t.partition(1).commit("other", 3);
         assert_eq!(t.lag("g"), 4);
+    }
+
+    #[test]
+    fn compact_before_tombstones_in_place_and_preserves_offsets() {
+        let m = crate::metrics::MetricsRegistry::new();
+        let broker = QueueBroker::in_memory(Some(m.clone()));
+        let t = broker.topic("state", 1).unwrap();
+        t.register_producer();
+        for i in 0..6u64 {
+            t.append(0, &i.to_le_bytes()).unwrap();
+        }
+        let p = t.partition(0);
+        assert_eq!(p.compact_before(4), 4);
+        // offsets are stable: the log is the same length, survivors sit at
+        // their original positions, the prefix reads back as empty records
+        assert_eq!(p.len(), 6);
+        let (recs, next) = p.poll(0, 10, Duration::from_millis(10)).unwrap();
+        assert_eq!(next, 6);
+        assert!(recs[..4].iter().all(|r| r.is_empty()));
+        assert_eq!(recs[4].as_ref(), &4u64.to_le_bytes());
+        assert_eq!(recs[5].as_ref(), &5u64.to_le_bytes());
+        // idempotent: a second pass finds nothing new to tombstone
+        assert_eq!(p.compact_before(4), 0);
+        assert_eq!(
+            m.state_compactions.load(std::sync::atomic::Ordering::Relaxed),
+            4
+        );
+        // appends continue past the compacted prefix
+        t.append(0, &6u64.to_le_bytes()).unwrap();
+        assert_eq!(p.len(), 7);
+    }
+
+    #[test]
+    fn durable_compaction_survives_recovery() {
+        let dir = std::env::temp_dir().join(format!("fuq-compact-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let broker = QueueBroker::durable(&dir, None).unwrap();
+            let t = broker.topic("state", 1).unwrap();
+            t.register_producer();
+            for i in 0..5u32 {
+                t.append(0, format!("rec{i}").as_bytes()).unwrap();
+            }
+            assert_eq!(t.partition(0).compact_before(3), 3);
+        }
+        {
+            let broker = QueueBroker::durable(&dir, None).unwrap();
+            let t = broker.topic("state", 1).unwrap();
+            let p = t.partition(0);
+            assert_eq!(p.len(), 5, "tombstones recover at their indices");
+            let (recs, _) = p.poll(0, 10, Duration::from_millis(10)).unwrap();
+            assert!(recs[..3].iter().all(|r| r.is_empty()));
+            assert_eq!(recs[3].as_ref(), b"rec3");
+            assert_eq!(recs[4].as_ref(), b"rec4");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

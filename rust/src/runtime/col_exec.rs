@@ -26,10 +26,11 @@
 //! byte-compatible with the `Value` executors; a dynamic update may hand
 //! state across the representation boundary in either direction.
 
-use super::exec::{ChainInput, ColumnFlow, FnvMap, OpExec, WindowExec};
+use super::exec::{ChainInput, ColumnFlow, EventWindowExec, FnvMap, OpExec, WindowExec};
 use crate::api::data::DecodeErrors;
 use crate::columnar::{ColumnBatch, Layout};
 use crate::graph::WindowAgg;
+use crate::time::{WatermarkGen, WatermarkState};
 use crate::value::{StreamData, Value};
 use std::marker::PhantomData;
 use std::sync::Arc;
@@ -691,6 +692,156 @@ impl OpExec for ColumnWindowExec {
     }
 }
 
+/// Typed `assign_timestamps`: extracts each row's event timestamp from
+/// native columns and feeds the watermark generator, passing the batch
+/// through untouched (zero-copy — timestamps are a read-only scan).
+/// Snapshot format is byte-compatible with
+/// [`AssignTsExec`](super::exec::AssignTsExec). On the columnar path a
+/// punctuated generator has no row to test, so it degrades to per-batch
+/// emission ([`WatermarkState::observe_ts`]); the row path punctuates
+/// exactly.
+pub struct ColumnAssignTsExec<T: StreamData> {
+    ts: Arc<dyn Fn(&T) -> i64 + Send + Sync>,
+    errs: Arc<DecodeErrors>,
+    layout: Layout,
+    state: WatermarkState,
+}
+
+impl<T: StreamData> ColumnAssignTsExec<T> {
+    /// Creates the executor; `T` must be a columnar type.
+    pub fn new(
+        ts: Arc<dyn Fn(&T) -> i64 + Send + Sync>,
+        gen: WatermarkGen,
+        errs: Arc<DecodeErrors>,
+    ) -> Self {
+        ColumnAssignTsExec {
+            ts,
+            errs,
+            layout: T::layout().expect("columnar assign_timestamps input"),
+            state: WatermarkState::new(gen),
+        }
+    }
+}
+
+impl<T: StreamData> OpExec for ColumnAssignTsExec<T> {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
+            if let Some(t) = decode::<T>(&self.errs, "assign_timestamps", v) {
+                let ts = (self.ts)(&t);
+                let v = t.into_value();
+                self.state.observe(&v, ts);
+                out.push(v);
+            }
+        }
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let cols = input.columns();
+        for row in 0..input.len() {
+            self.state.observe_ts((self.ts)(&T::read_columns(cols, row)));
+        }
+        ColumnFlow::Columns(input)
+    }
+
+    fn on_watermark(&mut self, _wm: i64, _out: &mut Vec<Value>) -> Option<i64> {
+        // an assigner replaces the upstream time domain
+        None
+    }
+
+    fn take_watermark(&mut self) -> Option<i64> {
+        self.state.take()
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        Some(Value::List(vec![Value::pair(
+            Value::Null,
+            self.state.snapshot(),
+        )]))
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((_, s)) = e.into_pair() else { continue };
+            self.state.restore(&s);
+        }
+    }
+}
+
+/// Event-time window over a keyed columnar stream: ingestion reads key
+/// and payload straight off the columns, while pane state, firing, and
+/// snapshots are delegated to the wrapped [`EventWindowExec`] — the two
+/// planes share one clock and one state format, so a checkpoint taken
+/// under either restores into the other.
+pub struct ColumnEventWindowExec {
+    inner: EventWindowExec,
+    in_layout: Layout,
+    key_layout: Layout,
+    value_layout: Layout,
+    key_leaves: usize,
+}
+
+impl ColumnEventWindowExec {
+    /// Wraps an event-window executor for a keyed stream of layout
+    /// `Pair(key_layout, value_layout)`.
+    pub fn new(inner: EventWindowExec, key_layout: Layout, value_layout: Layout) -> Self {
+        ColumnEventWindowExec {
+            inner,
+            in_layout: Layout::pair(key_layout.clone(), value_layout.clone()),
+            key_leaves: key_layout.leaf_count(),
+            key_layout,
+            value_layout,
+        }
+    }
+}
+
+impl OpExec for ColumnEventWindowExec {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        self.inner.process(input, out);
+    }
+
+    fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
+        if input.layout() != &self.in_layout {
+            return ColumnFlow::Fallback(input);
+        }
+        let kc = self.key_leaves;
+        let cols = input.columns();
+        let mut rows = Vec::with_capacity(input.len());
+        for row in 0..input.len() {
+            rows.push(Value::pair(
+                self.key_layout.read_value(&cols[..kc], row),
+                self.value_layout.read_value(&cols[kc..], row),
+            ));
+        }
+        let mut out = Vec::new();
+        self.inner.process(rows.into(), &mut out);
+        ColumnFlow::Rows(out)
+    }
+
+    fn on_watermark(&mut self, wm: i64, out: &mut Vec<Value>) -> Option<i64> {
+        self.inner.on_watermark(wm, out)
+    }
+
+    fn take_watermark(&mut self) -> Option<i64> {
+        self.inner.take_watermark()
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        self.inner.flush(out);
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        self.inner.snapshot()
+    }
+
+    fn restore(&mut self, state: Value) {
+        self.inner.restore(state);
+    }
+}
+
 /// A convenience used by the typed lowering: builds a [`ColumnBatch`]
 /// from typed items (the columnar synthetic source path).
 pub fn column_batch_of<T: StreamData>(layout: &Layout, items: impl Iterator<Item = T>) -> ColumnBatch {
@@ -959,6 +1110,113 @@ mod tests {
         base.process(ChainInput::Shared(pairs(0..200).to_batch()), &mut expect);
         base.flush(&mut expect);
         assert_eq!(sorted(emitted), sorted(expect));
+    }
+
+    #[test]
+    fn columnar_assigner_mints_watermarks_and_passes_columns_through() {
+        let mut op = ColumnAssignTsExec::<i64>::new(
+            Arc::new(|x| *x),
+            WatermarkGen::BoundedOutOfOrderness { bound_ms: 5 },
+            errs(),
+        );
+        let cb = i64_batch(100);
+        match op.process_columns(cb.clone()) {
+            ColumnFlow::Columns(same) => assert!(
+                ColumnBatch::ptr_eq(&same, &cb),
+                "assigner scans, never rebuilds"
+            ),
+            _ => panic!("assigner keeps the chain columnar"),
+        }
+        assert_eq!(op.take_watermark(), Some(94), "max ts 99 minus bound 5");
+        assert_eq!(op.take_watermark(), None, "promise did not advance");
+
+        // the snapshot restores into the CLASSIC assigner without
+        // regressing the promise
+        let snap = op.snapshot().expect("generator state present");
+        let mut row_op = crate::runtime::exec::AssignTsExec::new(
+            Arc::new(|v: &Value| v.as_i64().unwrap_or(0)),
+            WatermarkGen::BoundedOutOfOrderness { bound_ms: 5 },
+        );
+        row_op.restore(snap);
+        let mut out = Vec::new();
+        row_op.process(ChainInput::Shared(Batch::new(vec![Value::I64(50)])), &mut out);
+        assert_eq!(out, vec![Value::I64(50)]);
+        assert_eq!(
+            row_op.take_watermark(),
+            None,
+            "older data after restore never lowers the watermark"
+        );
+    }
+
+    #[test]
+    fn columnar_event_window_matches_value_event_window() {
+        let ts = || Arc::new(|v: &Value| v.as_i64().unwrap_or(0)) as crate::time::TsFn;
+        let assigner = crate::time::WindowAssigner::Tumbling { size_ms: 10 };
+        let keyed = column_batch_of(
+            &Layout::pair(Layout::I64, Layout::I64),
+            (0..100i64).map(|i| (i % 4, i)),
+        );
+        let mut col_op = ColumnEventWindowExec::new(
+            EventWindowExec::new(ts(), assigner, WindowAgg::Count, 0),
+            Layout::I64,
+            Layout::I64,
+        );
+        let mut row_op = EventWindowExec::new(ts(), assigner, WindowAgg::Count, 0);
+
+        match col_op.process_columns(keyed.clone()) {
+            ColumnFlow::Rows(rows) => assert!(rows.is_empty(), "panes buffer until the watermark"),
+            _ => panic!("event window emits rows"),
+        }
+        let mut sink = Vec::new();
+        row_op.process(ChainInput::Shared(keyed.to_batch()), &mut sink);
+
+        let mut got = Vec::new();
+        let mut expect = Vec::new();
+        assert_eq!(col_op.on_watermark(50, &mut got), Some(50));
+        assert_eq!(row_op.on_watermark(50, &mut expect), Some(50));
+        assert_eq!(got, expect);
+        assert_eq!(got.len(), 20, "5 closed panes x 4 keys");
+
+        got.clear();
+        expect.clear();
+        col_op.flush(&mut got);
+        row_op.flush(&mut expect);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn event_window_snapshot_round_trips_across_planes() {
+        // columnar → row: panes buffered (and a clock advanced) under the
+        // columnar plane land in the classic executor and fire there
+        let ts = || Arc::new(|v: &Value| v.as_i64().unwrap_or(0)) as crate::time::TsFn;
+        let assigner = crate::time::WindowAssigner::Tumbling { size_ms: 10 };
+        let layout = Layout::pair(Layout::I64, Layout::I64);
+        let pairs = |r: std::ops::Range<i64>| column_batch_of(&layout, r.map(|i| (i % 4, i)));
+
+        let mut col_op = ColumnEventWindowExec::new(
+            EventWindowExec::new(ts(), assigner, WindowAgg::Count, 0),
+            Layout::I64,
+            Layout::I64,
+        );
+        let _ = col_op.process_columns(pairs(0..50));
+        let mut emitted = Vec::new();
+        col_op.on_watermark(30, &mut emitted);
+        let snap = col_op.snapshot().expect("open panes and a clock");
+
+        let mut row_op = EventWindowExec::new(ts(), assigner, WindowAgg::Count, 0);
+        row_op.restore(snap);
+        row_op.process(ChainInput::Shared(pairs(50..100).to_batch()), &mut emitted);
+        row_op.flush(&mut emitted);
+
+        // baseline: one row executor sees the whole stream with the same
+        // watermark sequence
+        let mut base = EventWindowExec::new(ts(), assigner, WindowAgg::Count, 0);
+        let mut expect = Vec::new();
+        base.process(ChainInput::Shared(pairs(0..50).to_batch()), &mut expect);
+        base.on_watermark(30, &mut expect);
+        base.process(ChainInput::Shared(pairs(50..100).to_batch()), &mut expect);
+        base.flush(&mut expect);
+        assert_eq!(emitted, expect);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use crate::columnar::ColumnBatch;
 use crate::graph::{FoldFn, ReduceFn, SinkKind, WindowAgg};
 use crate::metrics::{Metrics, MetricsRegistry};
+use crate::time::{TsFn, WatermarkGen, WatermarkState, WindowAssigner};
 use crate::value::{Batch, BatchData, Fnv1a, Value};
 use std::collections::{BTreeMap, HashMap};
 use std::hash::BuildHasherDefault;
@@ -173,6 +174,25 @@ pub trait OpExec: Send {
     /// always correct, merely slower from the first row-only operator on.
     fn process_columns(&mut self, input: ColumnBatch) -> ColumnFlow {
         ColumnFlow::Fallback(input)
+    }
+    /// Advances the operator's event-time clock to `wm`, appending any
+    /// panes that became complete to `out`, and returns the watermark to
+    /// forward downstream. The default passes the watermark through
+    /// untouched; a timestamp assigner returns `None` (it replaces the
+    /// upstream time domain with its own, see
+    /// [`OpExec::take_watermark`]).
+    fn on_watermark(&mut self, wm: i64, out: &mut Vec<Value>) -> Option<i64> {
+        let _ = out;
+        Some(wm)
+    }
+    /// Polled after each processed batch: a watermark this operator
+    /// *generated* from the records it just saw. The runtime cascades it
+    /// through the remainder of the chain (firing event-time windows on
+    /// the way) and forwards it to downstream stages. `None` ⇒ no
+    /// advance since the last poll (the common case for everything but
+    /// timestamp assigners).
+    fn take_watermark(&mut self) -> Option<i64> {
+        None
     }
 }
 
@@ -346,6 +366,62 @@ pub fn flush_chain(ops: &mut [Box<dyn OpExec>]) -> Vec<Value> {
         pending = out;
     }
     pending
+}
+
+/// Advances a fused chain's event-time clock: starting at operator
+/// `from`, each operator observes the watermark (firing any due panes),
+/// and its fired panes flow through the *remainder* of the chain as
+/// ordinary data before the next operator sees the watermark — so a
+/// downstream aggregation absorbs a fired pane before its own clock
+/// moves. Returns the watermark to forward out of the chain, `None` if
+/// some operator swallowed it (e.g. a mid-chain timestamp assigner).
+pub fn advance_chain_watermark(
+    ops: &mut [Box<dyn OpExec>],
+    from: usize,
+    wm: i64,
+    out: &mut Vec<Value>,
+) -> Option<i64> {
+    let mut cur = Some(wm);
+    for i in from..ops.len() {
+        let w = cur?;
+        let mut fired = Vec::new();
+        cur = ops[i].on_watermark(w, &mut fired);
+        if fired.is_empty() {
+            continue;
+        }
+        let mut pending = fired;
+        for j in i + 1..ops.len() {
+            if pending.is_empty() {
+                break;
+            }
+            let mut next = Vec::new();
+            ops[j].process(std::mem::take(&mut pending).into(), &mut next);
+            pending = next;
+        }
+        out.append(&mut pending);
+    }
+    cur
+}
+
+/// Post-batch watermark poll: collects every watermark the chain's
+/// operators *generated* while processing the last batch (see
+/// [`OpExec::take_watermark`]), cascades each through the operators
+/// downstream of its generator, and returns the highest watermark that
+/// survived to the chain's edge — the one to forward to downstream
+/// stages. Fired panes land in `out` alongside regular chain output.
+pub fn drain_generated_watermarks(
+    ops: &mut [Box<dyn OpExec>],
+    out: &mut Vec<Value>,
+) -> Option<i64> {
+    let mut forwarded: Option<i64> = None;
+    for i in 0..ops.len() {
+        if let Some(wm) = ops[i].take_watermark() {
+            if let Some(w) = advance_chain_watermark(ops, i + 1, wm, out) {
+                forwarded = Some(forwarded.map_or(w, |f| f.max(w)));
+            }
+        }
+    }
+    forwarded
 }
 
 /// `map`.
@@ -712,6 +788,555 @@ impl OpExec for WindowExec {
             });
             // a key restored twice concatenates its partial windows
             entry.1.extend(buf);
+        }
+    }
+}
+
+/// `assign_timestamps`: extracts each record's event timestamp, feeds the
+/// watermark generator, and passes the record through unchanged. The
+/// runtime polls [`OpExec::take_watermark`] after every batch to pick up
+/// the watermarks this operator mints. Upstream watermarks are swallowed
+/// ([`OpExec::on_watermark`] returns `None`): an assigner *replaces* the
+/// upstream time domain.
+pub struct AssignTsExec {
+    ts: TsFn,
+    state: WatermarkState,
+}
+
+impl AssignTsExec {
+    /// Creates a timestamp assigner with the given generator discipline.
+    pub fn new(ts: TsFn, gen: WatermarkGen) -> Self {
+        AssignTsExec {
+            ts,
+            state: WatermarkState::new(gen),
+        }
+    }
+}
+
+impl OpExec for AssignTsExec {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
+            let t = (self.ts)(&v);
+            self.state.observe(&v, t);
+            out.push(v);
+        }
+    }
+
+    fn on_watermark(&mut self, _wm: i64, _out: &mut Vec<Value>) -> Option<i64> {
+        None
+    }
+
+    fn take_watermark(&mut self) -> Option<i64> {
+        self.state.take()
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        // a single Null-keyed entry: the generator state is not keyed, so
+        // after a repartition one replacement instance inherits the
+        // promise and the rest restart conservatively from scratch
+        Some(Value::List(vec![Value::pair(
+            Value::Null,
+            self.state.snapshot(),
+        )]))
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((_, s)) = e.into_pair() else { continue };
+            self.state.restore(&s);
+        }
+    }
+}
+
+/// `side_tag`: rewrites `Pair(k, v)` into `Pair(k, Pair(I64(side), v))`
+/// so the two inputs of an interval join stay distinguishable after the
+/// fan-in merges them into one inbox. Keeps the key (and therefore the
+/// routing hash) unchanged.
+pub struct SideTagExec(pub u8);
+
+impl SideTagExec {
+    fn tag(&self, v: Value) -> Value {
+        let (key, payload) = match v {
+            Value::Pair(kp) => (kp.0, kp.1),
+            other => (Value::Null, other),
+        };
+        Value::pair(key, Value::pair(Value::I64(self.0 as i64), payload))
+    }
+}
+
+impl OpExec for SideTagExec {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        out.extend(input.drain().map(|v| self.tag(v)));
+    }
+
+    fn process_hashed(
+        &mut self,
+        input: ChainInput<'_>,
+        out: &mut Vec<Value>,
+        hashes: &mut Vec<u64>,
+    ) {
+        for v in input.drain() {
+            let p = self.tag(v);
+            hashes.push(crate::channels::route_hash(&p));
+            out.push(p);
+        }
+    }
+}
+
+/// A `(start, end, records)` span held by an event-time session window
+/// or restored from a snapshot.
+type Span = (i64, i64, Vec<Value>);
+
+/// Inserts `[start, end)` with `buf` into a key's sorted span list,
+/// coalescing every overlapping-or-touching span into one (the session
+/// merge: two bursts within the gap become one session).
+fn merge_span(spans: &mut Vec<Span>, mut start: i64, mut end: i64, mut buf: Vec<Value>) {
+    let mut i = 0;
+    while i < spans.len() {
+        if spans[i].0 <= end && start <= spans[i].1 {
+            let (s, e, b) = spans.remove(i);
+            start = start.min(s);
+            end = end.max(e);
+            buf.extend(b);
+        } else {
+            i += 1;
+        }
+    }
+    let pos = spans
+        .iter()
+        .position(|&(s, _, _)| s > start)
+        .unwrap_or(spans.len());
+    spans.insert(pos, (start, end, buf));
+}
+
+/// Event-time window over a keyed stream: buffers `Pair(key, payload)`
+/// records into panes by their *event* timestamp and fires each pane
+/// exactly once, when the merged input watermark passes the window's end
+/// plus the allowed lateness. Records whose every window already fired
+/// are *late*: counted in the `late_records` metric and, when a side
+/// output is configured, routed into the tagged collector under the
+/// window operator's id — observable, never silently dropped.
+///
+/// Snapshots carry the pane buffers *and* the operator's current
+/// watermark (each entry embeds it, so any subset of repartitioned
+/// entries restores the clock): a checkpoint taken between a watermark
+/// and the panes it will fire neither drops nor re-fires those panes.
+pub struct EventWindowExec {
+    ts: TsFn,
+    assigner: WindowAssigner,
+    agg: WindowAgg,
+    lateness_ms: i64,
+    /// Merged event-time clock (`i64::MIN` until the first watermark).
+    wm: i64,
+    /// `(end, start)` → per-key pane buffers, fired in end order.
+    panes: BTreeMap<(i64, i64), FnvMap<(Value, Vec<Value>)>>,
+    /// Per-key session spans (session assigner only), sorted by start.
+    sessions: FnvMap<(Value, Vec<Span>)>,
+    scratch: Vec<u8>,
+    metrics: Option<Metrics>,
+    /// `(window op id, collector)` for the late-record side output.
+    late_side: Option<(usize, Arc<Collector>)>,
+}
+
+impl EventWindowExec {
+    /// Creates an event-time window executor.
+    pub fn new(ts: TsFn, assigner: WindowAssigner, agg: WindowAgg, lateness_ms: i64) -> Self {
+        EventWindowExec {
+            ts,
+            assigner,
+            agg,
+            lateness_ms,
+            wm: i64::MIN,
+            panes: BTreeMap::new(),
+            sessions: FnvMap::default(),
+            scratch: Vec::with_capacity(32),
+            metrics: None,
+            late_side: None,
+        }
+    }
+
+    /// Attaches the job metrics (`late_records`).
+    pub fn with_metrics(mut self, m: Metrics) -> Self {
+        self.metrics = Some(m);
+        self
+    }
+
+    /// Routes late records into the tagged collector under `op` (the
+    /// window operator's own id) instead of only counting them.
+    pub fn with_late_side(mut self, op: usize, collector: Arc<Collector>) -> Self {
+        self.late_side = Some((op, collector));
+        self
+    }
+
+    fn count_late(&mut self, key: Value, payload: Value) {
+        if let Some(m) = &self.metrics {
+            MetricsRegistry::add(&m.late_records, 1);
+        }
+        if let Some((op, c)) = &self.late_side {
+            c.tagged
+                .lock()
+                .unwrap()
+                .entry(*op)
+                .or_default()
+                .push(Value::pair(key, payload));
+        }
+    }
+
+    /// Fires every pane whose `end + lateness` the clock has passed, in
+    /// deterministic `(end, start, key)` order.
+    fn fire_due(&mut self, out: &mut Vec<Value>) {
+        while let Some((&(end, start), _)) = self.panes.iter().next() {
+            if end.saturating_add(self.lateness_ms) > self.wm {
+                break;
+            }
+            let pane = self.panes.remove(&(end, start)).expect("pane just seen");
+            let mut entries: Vec<(Vec<u8>, (Value, Vec<Value>))> = pane.into_iter().collect();
+            entries.sort_by(|a, b| a.0.cmp(&b.0));
+            for (_, (key, buf)) in entries {
+                out.push(Value::pair(key, WindowExec::aggregate(&self.agg, &buf)));
+            }
+        }
+        if self.assigner.session_gap().is_some() && !self.sessions.is_empty() {
+            let (wm, lat) = (self.wm, self.lateness_ms);
+            let mut due: Vec<((i64, i64, Vec<u8>), Value, Vec<Value>)> = Vec::new();
+            self.sessions.retain(|enc, (key, spans)| {
+                let mut i = 0;
+                while i < spans.len() {
+                    if spans[i].1.saturating_add(lat) <= wm {
+                        let (s, e, buf) = spans.remove(i);
+                        due.push(((e, s, enc.clone()), key.clone(), buf));
+                    } else {
+                        i += 1;
+                    }
+                }
+                !spans.is_empty()
+            });
+            due.sort_by(|a, b| a.0.cmp(&b.0));
+            for (_, key, buf) in due {
+                out.push(Value::pair(key, WindowExec::aggregate(&self.agg, &buf)));
+            }
+        }
+    }
+}
+
+impl OpExec for EventWindowExec {
+    fn process(&mut self, input: ChainInput<'_>, _out: &mut Vec<Value>) {
+        for v in input.drain() {
+            let (key, mut payload) = match v {
+                Value::Pair(kp) => (kp.0, kp.1),
+                other => (Value::Null, other),
+            };
+            let t = (self.ts)(&payload);
+            if let Some(gap) = self.assigner.session_gap() {
+                // a session seeded at t closes at t + gap; if the clock
+                // already passed that close plus the lateness, the
+                // record's session fired (or would have) — late
+                if t.saturating_add(gap).saturating_add(self.lateness_ms) <= self.wm {
+                    self.count_late(key, payload);
+                    continue;
+                }
+                let entry = keyed_entry(&mut self.sessions, &mut self.scratch, &key, |k| {
+                    (k.clone(), Vec::new())
+                });
+                merge_span(&mut entry.1, t, t.saturating_add(gap), vec![payload]);
+            } else {
+                let windows: Vec<(i64, i64)> = self
+                    .assigner
+                    .assign(t)
+                    .into_iter()
+                    .filter(|&(_, end)| end.saturating_add(self.lateness_ms) > self.wm)
+                    .collect();
+                if windows.is_empty() {
+                    self.count_late(key, payload);
+                    continue;
+                }
+                let last = windows.len() - 1;
+                for (i, (start, end)) in windows.into_iter().enumerate() {
+                    let p = if i == last {
+                        std::mem::replace(&mut payload, Value::Null)
+                    } else {
+                        payload.clone()
+                    };
+                    let pane = self.panes.entry((end, start)).or_default();
+                    let entry = keyed_entry(pane, &mut self.scratch, &key, |k| {
+                        (k.clone(), Vec::new())
+                    });
+                    entry.1.push(p);
+                }
+            }
+        }
+    }
+
+    fn on_watermark(&mut self, wm: i64, out: &mut Vec<Value>) -> Option<i64> {
+        if wm > self.wm {
+            self.wm = wm;
+            self.fire_due(out);
+        }
+        Some(wm)
+    }
+
+    fn flush(&mut self, out: &mut Vec<Value>) {
+        // end-of-stream closes every window regardless of watermarks
+        self.wm = i64::MAX;
+        self.fire_due(out);
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.wm == i64::MIN && self.panes.is_empty() && self.sessions.is_empty() {
+            return None;
+        }
+        let wm = Value::I64(self.wm);
+        let mut entries: Vec<Value> = Vec::new();
+        // the clock itself, restorable even with no buffered panes; the
+        // empty-list key is not a record key, so it cannot collide
+        entries.push(Value::pair(
+            Value::List(vec![]),
+            Value::List(vec![wm.clone()]),
+        ));
+        for ((end, start), pane) in std::mem::take(&mut self.panes) {
+            let mut ps: Vec<(Vec<u8>, (Value, Vec<Value>))> = pane.into_iter().collect();
+            ps.sort_by(|a, b| a.0.cmp(&b.0));
+            for (_, (key, buf)) in ps {
+                entries.push(Value::pair(
+                    Value::List(vec![key]),
+                    Value::List(vec![
+                        wm.clone(),
+                        Value::I64(start),
+                        Value::I64(end),
+                        Value::List(buf),
+                    ]),
+                ));
+            }
+        }
+        let mut ss: Vec<(Vec<u8>, (Value, Vec<Span>))> =
+            std::mem::take(&mut self.sessions).into_iter().collect();
+        ss.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, (key, spans)) in ss {
+            for (start, end, buf) in spans {
+                entries.push(Value::pair(
+                    Value::List(vec![key.clone()]),
+                    Value::List(vec![
+                        wm.clone(),
+                        Value::I64(start),
+                        Value::I64(end),
+                        Value::List(buf),
+                    ]),
+                ));
+            }
+        }
+        Some(Value::List(entries))
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        for e in entries {
+            let Some((key, body)) = e.into_pair() else { continue };
+            let Value::List(mut body) = body else { continue };
+            let Value::List(mut key) = key else { continue };
+            // every entry carries the snapshot clock: max-merging keeps
+            // already-fired panes from re-forming out of replayed records
+            if let Some(w) = body.first().and_then(Value::as_i64) {
+                self.wm = self.wm.max(w);
+            }
+            if key.is_empty() || body.len() < 4 {
+                continue;
+            }
+            let key = key.remove(0);
+            let (Some(start), Some(end)) = (
+                body.get(1).and_then(Value::as_i64),
+                body.get(2).and_then(Value::as_i64),
+            ) else {
+                continue;
+            };
+            let Value::List(buf) = body.remove(3) else { continue };
+            if self.assigner.session_gap().is_some() {
+                let entry = keyed_entry(&mut self.sessions, &mut self.scratch, &key, |k| {
+                    (k.clone(), Vec::new())
+                });
+                merge_span(&mut entry.1, start, end, buf);
+            } else {
+                let pane = self.panes.entry((end, start)).or_default();
+                let entry = keyed_entry(pane, &mut self.scratch, &key, |k| {
+                    (k.clone(), Vec::new())
+                });
+                // a key restored twice concatenates its partial panes
+                entry.1.extend(buf);
+            }
+        }
+    }
+}
+
+/// Keyed stream-stream interval join: a left record at `tl` matches
+/// right records with the same key whose timestamp lies in
+/// `[tl + lower, tl + upper]`. Each arrival scans the opposite side's
+/// buffer and emits `Pair(key, Pair(left, right))` per match, then
+/// buffers itself — every match is emitted exactly once, by whichever
+/// side arrives second. The merged watermark (min across both inputs,
+/// courtesy of the shared inbox) drives eviction: a left is dead once
+/// `tl + upper < wm`, a right once `tr < wm + lower`. Records arriving
+/// past their own eviction horizon are counted late and dropped.
+pub struct IntervalJoinExec {
+    ts_left: TsFn,
+    ts_right: TsFn,
+    lower_ms: i64,
+    upper_ms: i64,
+    /// encoded key → (key, left (ts, payload) buffer, right buffer).
+    state: FnvMap<(Value, Vec<(i64, Value)>, Vec<(i64, Value)>)>,
+    scratch: Vec<u8>,
+    wm: i64,
+    metrics: Option<Metrics>,
+}
+
+impl IntervalJoinExec {
+    /// Creates an interval-join executor.
+    pub fn new(ts_left: TsFn, ts_right: TsFn, lower_ms: i64, upper_ms: i64) -> Self {
+        IntervalJoinExec {
+            ts_left,
+            ts_right,
+            lower_ms,
+            upper_ms,
+            state: FnvMap::default(),
+            scratch: Vec::with_capacity(32),
+            wm: i64::MIN,
+            metrics: None,
+        }
+    }
+
+    /// Attaches the job metrics (`late_records`).
+    pub fn with_metrics(mut self, m: Metrics) -> Self {
+        self.metrics = Some(m);
+        self
+    }
+}
+
+impl OpExec for IntervalJoinExec {
+    fn process(&mut self, input: ChainInput<'_>, out: &mut Vec<Value>) {
+        for v in input.drain() {
+            // Pair(key, Pair(I64(side), payload)) — see SideTagExec
+            let Value::Pair(kp) = v else { continue };
+            let (key, tagged) = (kp.0, kp.1);
+            let Value::Pair(sp) = tagged else { continue };
+            let (side, payload) = (sp.0, sp.1);
+            let left = side.as_i64() == Some(0);
+            let t = if left {
+                (self.ts_left)(&payload)
+            } else {
+                (self.ts_right)(&payload)
+            };
+            let evicted = if left {
+                self.wm != i64::MIN && t.saturating_add(self.upper_ms) < self.wm
+            } else {
+                self.wm != i64::MIN && t < self.wm.saturating_add(self.lower_ms)
+            };
+            if evicted {
+                if let Some(m) = &self.metrics {
+                    MetricsRegistry::add(&m.late_records, 1);
+                }
+                continue;
+            }
+            let entry = keyed_entry(&mut self.state, &mut self.scratch, &key, |k| {
+                (k.clone(), Vec::new(), Vec::new())
+            });
+            if left {
+                for (tr, r) in &entry.2 {
+                    if *tr >= t.saturating_add(self.lower_ms)
+                        && *tr <= t.saturating_add(self.upper_ms)
+                    {
+                        out.push(Value::pair(
+                            entry.0.clone(),
+                            Value::pair(payload.clone(), r.clone()),
+                        ));
+                    }
+                }
+                entry.1.push((t, payload));
+            } else {
+                for (tl, l) in &entry.1 {
+                    if t >= tl.saturating_add(self.lower_ms)
+                        && t <= tl.saturating_add(self.upper_ms)
+                    {
+                        out.push(Value::pair(
+                            entry.0.clone(),
+                            Value::pair(l.clone(), payload.clone()),
+                        ));
+                    }
+                }
+                entry.2.push((t, payload));
+            }
+        }
+    }
+
+    fn on_watermark(&mut self, wm: i64, _out: &mut Vec<Value>) -> Option<i64> {
+        if wm > self.wm {
+            self.wm = wm;
+            let (w, lower, upper) = (self.wm, self.lower_ms, self.upper_ms);
+            self.state.retain(|_, (_, lefts, rights)| {
+                lefts.retain(|(tl, _)| tl.saturating_add(upper) >= w);
+                rights.retain(|(tr, _)| *tr >= w.saturating_add(lower));
+                !lefts.is_empty() || !rights.is_empty()
+            });
+        }
+        Some(wm)
+    }
+
+    fn snapshot(&mut self) -> Option<Value> {
+        if self.wm == i64::MIN && self.state.is_empty() {
+            return None;
+        }
+        let wm = Value::I64(self.wm);
+        let mut entries: Vec<Value> = vec![Value::pair(
+            Value::List(vec![]),
+            Value::List(vec![wm.clone()]),
+        )];
+        let mut st: Vec<(Vec<u8>, (Value, Vec<(i64, Value)>, Vec<(i64, Value)>))> =
+            std::mem::take(&mut self.state).into_iter().collect();
+        st.sort_by(|a, b| a.0.cmp(&b.0));
+        let side = |buf: Vec<(i64, Value)>| {
+            Value::List(
+                buf.into_iter()
+                    .map(|(t, p)| Value::pair(Value::I64(t), p))
+                    .collect(),
+            )
+        };
+        for (_, (key, lefts, rights)) in st {
+            entries.push(Value::pair(
+                Value::List(vec![key]),
+                Value::List(vec![wm.clone(), side(lefts), side(rights)]),
+            ));
+        }
+        Some(Value::List(entries))
+    }
+
+    fn restore(&mut self, state: Value) {
+        let Value::List(entries) = state else { return };
+        let parse_side = |v: Value| -> Vec<(i64, Value)> {
+            let Value::List(items) = v else { return Vec::new() };
+            items
+                .into_iter()
+                .filter_map(|e| {
+                    let (t, p) = e.into_pair()?;
+                    Some((t.as_i64()?, p))
+                })
+                .collect()
+        };
+        for e in entries {
+            let Some((key, body)) = e.into_pair() else { continue };
+            let Value::List(mut body) = body else { continue };
+            let Value::List(mut key) = key else { continue };
+            if let Some(w) = body.first().and_then(Value::as_i64) {
+                self.wm = self.wm.max(w);
+            }
+            if key.is_empty() || body.len() < 3 {
+                continue;
+            }
+            let key = key.remove(0);
+            let rights = parse_side(body.remove(2));
+            let lefts = parse_side(body.remove(1));
+            let entry = keyed_entry(&mut self.state, &mut self.scratch, &key, |k| {
+                (k.clone(), Vec::new(), Vec::new())
+            });
+            entry.1.extend(lefts);
+            entry.2.extend(rights);
         }
     }
 }
@@ -1351,6 +1976,341 @@ mod tests {
         assert!(m.snapshot().is_none());
         let mut r = ReduceExec::new(Arc::new(|a: &Value, _: &Value| a.clone()));
         assert!(r.snapshot().is_none(), "empty state snapshots as None");
+    }
+
+    fn id_ts() -> crate::time::TsFn {
+        Arc::new(|v: &Value| v.as_i64().unwrap_or(0))
+    }
+
+    fn keyed(k: i64, t: i64) -> Value {
+        Value::pair(Value::I64(k), Value::I64(t))
+    }
+
+    #[test]
+    fn assign_ts_passes_records_and_mints_watermarks() {
+        let mut a = AssignTsExec::new(id_ts(), WatermarkGen::BoundedOutOfOrderness { bound_ms: 10 });
+        let mut out = Vec::new();
+        a.process(vec![Value::I64(100), Value::I64(50)].into(), &mut out);
+        assert_eq!(out, vec![Value::I64(100), Value::I64(50)]);
+        assert_eq!(a.take_watermark(), Some(90));
+        assert_eq!(a.take_watermark(), None, "no advance, no re-emit");
+        // upstream watermarks are swallowed: this assigner owns the clock
+        assert_eq!(a.on_watermark(500, &mut out), None);
+    }
+
+    #[test]
+    fn event_window_fires_once_when_watermark_passes_end_plus_lateness() {
+        let mut w = EventWindowExec::new(
+            id_ts(),
+            WindowAssigner::Tumbling { size_ms: 10 },
+            WindowAgg::Count,
+            5,
+        );
+        let mut out = Vec::new();
+        w.process(vec![keyed(0, 1), keyed(0, 9), keyed(1, 3)].into(), &mut out);
+        assert!(out.is_empty(), "panes buffer until the watermark");
+        // end=10, lateness=5: watermark 14 is not yet due
+        assert_eq!(w.on_watermark(14, &mut out), Some(14));
+        assert!(out.is_empty());
+        assert_eq!(w.on_watermark(15, &mut out), Some(15));
+        out.sort_by_key(|v| v.as_pair().unwrap().0.as_i64().unwrap());
+        assert_eq!(
+            out,
+            vec![
+                Value::pair(Value::I64(0), Value::I64(2)),
+                Value::pair(Value::I64(1), Value::I64(1)),
+            ]
+        );
+        // a second watermark must not re-fire the pane
+        let mut again = Vec::new();
+        w.on_watermark(100, &mut again);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn event_window_counts_late_records_and_routes_side_output() {
+        let collector = Arc::new(Collector::default());
+        let m = crate::metrics::MetricsRegistry::new();
+        let mut w = EventWindowExec::new(
+            id_ts(),
+            WindowAssigner::Tumbling { size_ms: 10 },
+            WindowAgg::Count,
+            0,
+        )
+        .with_metrics(m.clone())
+        .with_late_side(42, collector.clone());
+        let mut out = Vec::new();
+        w.on_watermark(20, &mut out);
+        // ts=5 falls in [0,10), which fired (vacuously) at wm=20: late
+        w.process(vec![keyed(7, 5)].into(), &mut out);
+        assert!(out.is_empty());
+        assert_eq!(m.late_records.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(
+            collector.tagged.lock().unwrap()[&42],
+            vec![keyed(7, 5)],
+            "late record observable on the side output, key intact"
+        );
+        // ts=25 is on time and fires at flush
+        w.process(vec![keyed(7, 25)].into(), &mut out);
+        w.flush(&mut out);
+        assert_eq!(out, vec![Value::pair(Value::I64(7), Value::I64(1))]);
+    }
+
+    #[test]
+    fn event_window_within_lateness_still_lands_in_pane() {
+        let mut w = EventWindowExec::new(
+            id_ts(),
+            WindowAssigner::Tumbling { size_ms: 10 },
+            WindowAgg::Count,
+            5,
+        );
+        let mut out = Vec::new();
+        w.process(vec![keyed(0, 3)].into(), &mut out);
+        w.on_watermark(12, &mut out);
+        assert!(out.is_empty(), "end=10 holds open until 15");
+        // ts=8 arrives after the watermark passed the window end but
+        // within the allowed lateness: incorporated, not late
+        w.process(vec![keyed(0, 8)].into(), &mut out);
+        w.on_watermark(15, &mut out);
+        assert_eq!(out, vec![Value::pair(Value::I64(0), Value::I64(2))]);
+    }
+
+    #[test]
+    fn session_window_merges_bursts_within_gap() {
+        let mut w = EventWindowExec::new(
+            id_ts(),
+            WindowAssigner::Session { gap_ms: 10 },
+            WindowAgg::Count,
+            0,
+        );
+        let mut out = Vec::new();
+        // two bursts for key 0: {1, 5} and {30} (gap > 10 between them);
+        // out-of-order arrival must not change the sessionization
+        w.process(
+            vec![keyed(0, 5), keyed(0, 30), keyed(0, 1)].into(),
+            &mut out,
+        );
+        assert!(out.is_empty());
+        // first session [1, 15) closes once the clock passes 15
+        w.on_watermark(15, &mut out);
+        assert_eq!(out, vec![Value::pair(Value::I64(0), Value::I64(2))]);
+        out.clear();
+        w.flush(&mut out);
+        assert_eq!(out, vec![Value::pair(Value::I64(0), Value::I64(1))]);
+    }
+
+    /// A checkpoint epoch marker lands *between* a watermark and the
+    /// window firing it will cause: the snapshot must carry both the
+    /// pane buffers and the current watermark, so the restored
+    /// incarnation fires the pane exactly once — neither dropped (buffers
+    /// lost) nor duplicated (clock lost, pane re-formed from replay).
+    #[test]
+    fn event_window_snapshot_between_watermark_and_firing_is_exactly_once() {
+        let mk = || {
+            EventWindowExec::new(
+                id_ts(),
+                WindowAssigner::Tumbling { size_ms: 10 },
+                WindowAgg::Count,
+                10,
+            )
+        };
+        let mut w1 = mk();
+        let mut out = Vec::new();
+        w1.process(vec![keyed(0, 4)].into(), &mut out);
+        // watermark 12 passed the window end (10) but not end+lateness
+        // (20): the pane is pending, primed to fire later
+        w1.on_watermark(12, &mut out);
+        assert!(out.is_empty());
+        let snap = w1.snapshot().expect("pending pane held");
+        let mut w2 = mk();
+        w2.restore(snap);
+        // replay of the pre-checkpoint record (at-least-once input):
+        // ts=4's window has NOT fired yet, so it re-joins the pane...
+        w2.process(vec![keyed(0, 4)].into(), &mut out);
+        // ...which is why the coordinator replays from the same epoch the
+        // snapshot was cut at — the restored buffer already holds it; the
+        // duplicate is the replay mechanism's concern, not the clock's.
+        // What the clock must guarantee: no firing before 20, one at 20.
+        w2.on_watermark(19, &mut out);
+        assert!(out.is_empty(), "restored clock kept the pane pending");
+        w2.on_watermark(20, &mut out);
+        assert_eq!(out.len(), 1, "exactly one firing after restore");
+
+        // and the restored clock also keeps classifying lateness: a
+        // record below wm - lateness would have fired pre-checkpoint
+        let snap2 = {
+            let mut w = mk();
+            w.on_watermark(40, &mut Vec::new());
+            w.snapshot().expect("clock-only snapshot")
+        };
+        let mut w3 = mk();
+        w3.restore(snap2);
+        let mut late_out = Vec::new();
+        w3.process(vec![keyed(0, 4)].into(), &mut late_out);
+        w3.flush(&mut late_out);
+        assert!(
+            late_out.is_empty(),
+            "window [0,10) fired before the checkpoint; restore must not re-fire it"
+        );
+    }
+
+    #[test]
+    fn side_tag_wraps_payload_and_keeps_routing_hash() {
+        let mut t = SideTagExec(1);
+        let mut out = Vec::new();
+        let mut hashes = Vec::new();
+        t.process_hashed(vec![keyed(3, 7)].into(), &mut out, &mut hashes);
+        assert_eq!(
+            out,
+            vec![Value::pair(
+                Value::I64(3),
+                Value::pair(Value::I64(1), Value::I64(7)),
+            )]
+        );
+        assert_eq!(hashes, vec![crate::channels::route_hash(&out[0])]);
+        assert_eq!(
+            hashes[0],
+            crate::channels::route_hash(&keyed(3, 7)),
+            "tagging must not change where the key routes"
+        );
+    }
+
+    fn tagged(k: i64, side: i64, t: i64) -> Value {
+        Value::pair(
+            Value::I64(k),
+            Value::pair(Value::I64(side), Value::I64(t)),
+        )
+    }
+
+    #[test]
+    fn interval_join_matches_within_bounds_exactly_once() {
+        let mut j = IntervalJoinExec::new(id_ts(), id_ts(), -5, 5);
+        let mut out = Vec::new();
+        j.process(vec![tagged(1, 0, 100)].into(), &mut out);
+        assert!(out.is_empty(), "no right side yet");
+        // rights at 104 (in [95, 105]) and 110 (outside)
+        j.process(vec![tagged(1, 1, 104), tagged(1, 1, 110)].into(), &mut out);
+        assert_eq!(
+            out,
+            vec![Value::pair(
+                Value::I64(1),
+                Value::pair(Value::I64(100), Value::I64(104)),
+            )]
+        );
+        out.clear();
+        // a second left at 108 matches both buffered rights ([103, 113]):
+        // each pair emitted exactly once, by the later arrival
+        j.process(vec![tagged(1, 0, 108)].into(), &mut out);
+        assert_eq!(
+            out,
+            vec![
+                Value::pair(
+                    Value::I64(1),
+                    Value::pair(Value::I64(108), Value::I64(104)),
+                ),
+                Value::pair(
+                    Value::I64(1),
+                    Value::pair(Value::I64(108), Value::I64(110)),
+                ),
+            ]
+        );
+        // different key never matches
+        out.clear();
+        j.process(vec![tagged(2, 1, 100)].into(), &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn interval_join_evicts_on_watermark_and_counts_late() {
+        let m = crate::metrics::MetricsRegistry::new();
+        let mut j = IntervalJoinExec::new(id_ts(), id_ts(), 0, 10).with_metrics(m.clone());
+        let mut out = Vec::new();
+        j.process(vec![tagged(1, 0, 100)].into(), &mut out);
+        // left at 100 matches rights in [100, 110]; watermark 111 proves
+        // no such right can still arrive — evicted
+        j.on_watermark(111, &mut out);
+        j.process(vec![tagged(1, 1, 105)].into(), &mut out);
+        assert!(out.is_empty(), "matching right arrived after eviction");
+        assert_eq!(
+            m.late_records.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "the dead-on-arrival right is counted, not silently lost"
+        );
+    }
+
+    #[test]
+    fn interval_join_snapshot_restore_keeps_buffers_and_clock() {
+        let mut j1 = IntervalJoinExec::new(id_ts(), id_ts(), -5, 5);
+        let mut out = Vec::new();
+        j1.process(vec![tagged(1, 0, 100)].into(), &mut out);
+        j1.on_watermark(90, &mut out);
+        let snap = j1.snapshot().expect("buffered left held");
+        let mut j2 = IntervalJoinExec::new(id_ts(), id_ts(), -5, 5);
+        j2.restore(snap);
+        assert_eq!(j2.wm, 90, "clock restored");
+        j2.process(vec![tagged(1, 1, 103)].into(), &mut out);
+        assert_eq!(
+            out,
+            vec![Value::pair(
+                Value::I64(1),
+                Value::pair(Value::I64(100), Value::I64(103)),
+            )]
+        );
+    }
+
+    #[test]
+    fn advance_chain_watermark_feeds_fired_panes_downstream() {
+        // event window -> map: panes fired by the watermark must pass
+        // through the map before the chain forwards the watermark
+        let mut ops = chain_of(vec![
+            Box::new(EventWindowExec::new(
+                id_ts(),
+                WindowAssigner::Tumbling { size_ms: 10 },
+                WindowAgg::Count,
+                0,
+            )),
+            Box::new(MapExec(Arc::new(|v: Value| {
+                let (_, c) = v.into_pair().unwrap();
+                c
+            }))),
+        ]);
+        let mut out = Vec::new();
+        ops[0].process(vec![keyed(0, 5)].into(), &mut out);
+        let fwd = advance_chain_watermark(&mut ops, 0, 10, &mut out);
+        assert_eq!(fwd, Some(10));
+        assert_eq!(out, vec![Value::I64(1)]);
+    }
+
+    #[test]
+    fn drain_generated_watermarks_cascades_from_assigner() {
+        // assigner (bound 0) -> event window: the assigner's post-batch
+        // watermark must fire the window's due pane in the same drain
+        let mut ops = chain_of(vec![
+            Box::new(AssignTsExec::new(
+                id_ts(),
+                WatermarkGen::BoundedOutOfOrderness { bound_ms: 0 },
+            )),
+            Box::new(EventWindowExec::new(
+                id_ts(),
+                WindowAssigner::Tumbling { size_ms: 10 },
+                WindowAgg::Count,
+                0,
+            )),
+        ]);
+        let mut bufs = ChainBuffers::new(None);
+        // unkeyed records: the window falls back to the Null key
+        let first = run_chain(
+            &mut ops,
+            vec![Value::I64(3), Value::I64(7)].into(),
+            &mut bufs,
+        );
+        assert!(first.is_empty(), "window buffers the pane");
+        let mut out = Vec::new();
+        assert_eq!(drain_generated_watermarks(&mut ops, &mut out), Some(7));
+        assert!(out.is_empty(), "watermark 7 does not close [0,10)");
+        run_chain(&mut ops, vec![Value::I64(12)].into(), &mut bufs);
+        assert_eq!(drain_generated_watermarks(&mut ops, &mut out), Some(12));
+        assert_eq!(out, vec![Value::pair(Value::Null, Value::I64(2))]);
     }
 
     #[test]

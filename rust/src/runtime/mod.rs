@@ -14,8 +14,8 @@ pub mod exec;
 pub mod xla_exec;
 
 pub use exec::{
-    flush_chain, run_chain, run_chain_data, ChainBuffers, ChainInput, ColumnFlow, Collector,
-    OpExec,
+    advance_chain_watermark, drain_generated_watermarks, flush_chain, run_chain, run_chain_data,
+    ChainBuffers, ChainInput, ColumnFlow, Collector, OpExec,
 };
 
 use crate::channels::{FanOut, Inbox, InboxEvent};
@@ -213,11 +213,27 @@ fn run_instance_inner(mut rt: InstanceRuntime) -> u64 {
                     batches += 1;
                     let out = run_chain(&mut rt.ops, batch, &mut bufs);
                     route(&mut rt.outputs, out);
+                    drain_watermarks(&mut rt.ops, &mut rt.outputs);
                 }
                 InboxEvent::Columns(cb) => {
                     batches += 1;
                     let out = run_chain_data(&mut rt.ops, cb.into(), &mut bufs);
                     route_data(&mut rt.outputs, out);
+                    drain_watermarks(&mut rt.ops, &mut rt.outputs);
+                }
+                InboxEvent::Watermark { ts, origin_ms } => {
+                    // the merged (min-of-inputs) upstream clock advanced:
+                    // cascade it through the chain — firing any due panes
+                    // as ordinary output — and forward it with its origin
+                    // stamp intact so the lag metric measures true
+                    // end-to-end propagation
+                    let mut fired = Vec::new();
+                    let fwd =
+                        exec::advance_chain_watermark(&mut rt.ops, 0, ts, &mut fired);
+                    route(&mut rt.outputs, fired.into());
+                    if let Some(w) = fwd {
+                        rt.outputs.watermark(w, origin_ms);
+                    }
                 }
                 InboxEvent::Eos => {
                     if inbox.disconnected() && rt.handoff.as_ref().is_some_and(|h| h.checkpoint) {
@@ -313,6 +329,7 @@ fn run_instance_inner(mut rt: InstanceRuntime) -> u64 {
                                 batches += 1;
                                 let out = run_chain(&mut rt.ops, b, &mut bufs);
                                 route(&mut rt.outputs, out);
+                                drain_watermarks(&mut rt.ops, &mut rt.outputs);
                             }
                             Err(_) => {
                                 MetricsRegistry::add(&rt.metrics.corrupt_records, 1);
@@ -379,6 +396,21 @@ fn route(outputs: &mut FanOut, batch: Batch) {
     outputs.send(batch);
 }
 
+/// Post-batch event-time bookkeeping: cascades any watermarks the chain's
+/// timestamp assigners minted while processing the last batch, routes the
+/// panes those watermarks fired, and forwards the surviving watermark
+/// downstream stamped with the current wall clock (the origin of the
+/// `watermark_lag_ms` metric). A chain without assigners returns
+/// immediately — the poll is a per-operator `None`.
+fn drain_watermarks(ops: &mut [Box<dyn OpExec>], outputs: &mut FanOut) {
+    let mut fired = Vec::new();
+    let fwd = exec::drain_generated_watermarks(ops, &mut fired);
+    route(outputs, fired.into());
+    if let Some(w) = fwd {
+        outputs.watermark(w, crate::time::now_ms());
+    }
+}
+
 fn route_data(outputs: &mut FanOut, data: BatchData) {
     if data.is_empty() {
         return;
@@ -417,6 +449,7 @@ fn run_source(
                 MetricsRegistry::add(&metrics.events_in, this_batch);
                 let out = run_chain(ops, batch.into(), bufs);
                 route(outputs, out);
+                drain_watermarks(ops, outputs);
                 if let Some(r) = rate {
                     // pace to `r` events/second for this instance
                     let target = Duration::from_secs_f64(emitted as f64 / r);
@@ -449,6 +482,7 @@ fn run_source(
                 MetricsRegistry::add(&metrics.events_in, this_batch);
                 let out = run_chain_data(ops, cb.into(), bufs);
                 route_data(outputs, out);
+                drain_watermarks(ops, outputs);
                 if let Some(r) = rate {
                     let target = Duration::from_secs_f64(emitted as f64 / r);
                     let elapsed = t0.elapsed();
@@ -469,12 +503,14 @@ fn run_source(
                     MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
                     let out = run_chain(ops, std::mem::take(&mut batch).into(), bufs);
                     route(outputs, out);
+                    drain_watermarks(ops, outputs);
                 }
             }
             if !batch.is_empty() {
                 MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
                 let out = run_chain(ops, batch.into(), bufs);
                 route(outputs, out);
+                drain_watermarks(ops, outputs);
             }
         }
         SourceKind::FileLines(path) => {
@@ -500,12 +536,14 @@ fn run_source(
                     MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
                     let out = run_chain(ops, std::mem::take(&mut batch).into(), bufs);
                     route(outputs, out);
+                    drain_watermarks(ops, outputs);
                 }
             }
             if !batch.is_empty() {
                 MetricsRegistry::add(&metrics.events_in, batch.len() as u64);
                 let out = run_chain(ops, batch.into(), bufs);
                 route(outputs, out);
+                drain_watermarks(ops, outputs);
             }
         }
     }
@@ -1040,6 +1078,65 @@ mod tests {
             &[Value::pair(Value::I64(0), Value::I64(42))],
             "pre-handoff accumulator merged with post-handoff input"
         );
+    }
+
+    #[test]
+    fn watermarks_flow_through_an_instance_and_fire_windows() {
+        // chain: assigner (bound 0) -> event-time tumbling window. The
+        // instance must route fired panes as data, forward its minted
+        // watermark as a control frame, and fire the rest at EOS.
+        let metrics = MetricsRegistry::new();
+        let (up_tx, up_rx) = sync_channel(8);
+        let (down_tx, down_rx) = sync_channel(64);
+        let port = OutPort::new(
+            vec![Target::local(down_tx)],
+            Routing::RoundRobin,
+            16,
+            None,
+        )
+        .with_sender(5);
+        up_tx
+            .send(Msg::Batch(vec![Value::I64(5), Value::I64(12)].into()))
+            .unwrap();
+        up_tx.send(Msg::Eos).unwrap();
+        let ts: crate::time::TsFn = Arc::new(|v: &Value| v.as_i64().unwrap_or(0));
+        let ops: Vec<Box<dyn OpExec>> = vec![
+            Box::new(exec::AssignTsExec::new(
+                ts.clone(),
+                crate::time::WatermarkGen::BoundedOutOfOrderness { bound_ms: 0 },
+            )),
+            Box::new(exec::EventWindowExec::new(
+                ts,
+                crate::time::WindowAssigner::Tumbling { size_ms: 10 },
+                crate::graph::WindowAgg::Count,
+                0,
+            )),
+        ];
+        run_instance(InstanceRuntime {
+            id: 0,
+            ops,
+            input: InputKind::Inbox(Inbox::new(up_rx, 1)),
+            outputs: FanOut::single(port),
+            metrics,
+            handoff: None,
+            restore: Vec::new(),
+        });
+        let mut inbox = Inbox::new(down_rx, 1);
+        // watermark 12 closes [0,10): its pane (record 5) fires as data
+        assert!(matches!(
+            inbox.next(),
+            InboxEvent::Batch(b) if b == vec![Value::pair(Value::Null, Value::I64(1))]
+        ));
+        assert!(
+            matches!(inbox.next(), InboxEvent::Watermark { ts: 12, .. }),
+            "the minted watermark travels as a control frame"
+        );
+        // EOS flushes the still-open [10,20) pane (record 12)
+        assert!(matches!(
+            inbox.next(),
+            InboxEvent::Batch(b) if b == vec![Value::pair(Value::Null, Value::I64(1))]
+        ));
+        assert!(matches!(inbox.next(), InboxEvent::Eos));
     }
 
     #[test]

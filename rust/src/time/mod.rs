@@ -1,0 +1,345 @@
+//! Event time: timestamp extraction, watermark generation, and window
+//! assignment.
+//!
+//! The engine's original windows are count-based — they close after a
+//! fixed number of records, so results depend on arrival order. In the
+//! edge-to-cloud continuum arrival order is exactly what the network does
+//! *not* preserve (uplinks with different latencies reorder records across
+//! paths), so aggregations over sensor time need a second clock: the
+//! *event timestamp* carried by each record, plus *watermarks* — control
+//! frames promising "no further record below time T" — that tell
+//! operators when a window keyed by event time is complete.
+//!
+//! This module holds the pure event-time vocabulary shared by every
+//! layer: timestamp extractors, the two watermark generator disciplines
+//! (bounded out-of-orderness and punctuated), and window assigners
+//! (tumbling / sliding / session). The plumbing lives elsewhere:
+//! [`Msg::Watermark`](crate::channels::Msg::Watermark) frames travel the
+//! channel layer and are merged min-of-inputs by each
+//! [`Inbox`](crate::channels::Inbox); the event-time operators in
+//! [`runtime`](crate::runtime) buffer panes and fire them as the merged
+//! watermark passes each window's end plus its allowed lateness.
+
+use crate::value::Value;
+use std::fmt;
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Extracts the event timestamp (milliseconds) from a record.
+pub type TsFn = Arc<dyn Fn(&Value) -> i64 + Send + Sync>;
+
+/// Punctuated-watermark marker predicate: `true` on records that carry an
+/// explicit watermark punctuation (e.g. a sensor's end-of-scan frame).
+pub type PunctFn = Arc<dyn Fn(&Value) -> bool + Send + Sync>;
+
+/// Wall-clock milliseconds since the Unix epoch (watermark lag metric).
+pub fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Watermark generation discipline of a timestamp assigner.
+#[derive(Clone)]
+pub enum WatermarkGen {
+    /// Heuristic generator: watermark trails the maximum observed
+    /// timestamp by a fixed bound, tolerating up to `bound_ms` of
+    /// disorder. Emitted once per processed batch.
+    BoundedOutOfOrderness {
+        /// Maximum tolerated out-of-orderness in milliseconds.
+        bound_ms: i64,
+    },
+    /// Explicit generator: records matching the predicate punctuate the
+    /// stream — the watermark advances to their timestamp immediately.
+    Punctuated(PunctFn),
+}
+
+impl WatermarkGen {
+    /// Bounded-out-of-orderness generator tolerating `bound_ms` of
+    /// disorder.
+    pub fn bounded(bound_ms: i64) -> Self {
+        WatermarkGen::BoundedOutOfOrderness { bound_ms }
+    }
+
+    /// Punctuated generator: records matching `p` advance the watermark
+    /// to their timestamp immediately.
+    pub fn punctuated(p: impl Fn(&Value) -> bool + Send + Sync + 'static) -> Self {
+        WatermarkGen::Punctuated(Arc::new(p))
+    }
+}
+
+impl fmt::Debug for WatermarkGen {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WatermarkGen::BoundedOutOfOrderness { bound_ms } => {
+                write!(f, "BoundedOutOfOrderness({bound_ms}ms)")
+            }
+            WatermarkGen::Punctuated(_) => write!(f, "Punctuated"),
+        }
+    }
+}
+
+/// Running state of a watermark generator: feeds on records via
+/// [`observe`](WatermarkState::observe), yields monotone watermarks via
+/// [`take`](WatermarkState::take). Snapshot/restore keep the promise
+/// monotone across checkpoints and hot swaps (a restarted assigner must
+/// never re-emit a lower watermark than its predecessor).
+pub struct WatermarkState {
+    gen: WatermarkGen,
+    /// Maximum event timestamp observed so far.
+    max_ts: i64,
+    /// Last watermark handed out (monotonicity floor).
+    emitted: i64,
+    /// A punctuation fired since the last `take`.
+    punct_pending: bool,
+}
+
+impl WatermarkState {
+    /// Fresh generator state.
+    pub fn new(gen: WatermarkGen) -> Self {
+        WatermarkState {
+            gen,
+            max_ts: i64::MIN,
+            emitted: i64::MIN,
+            punct_pending: false,
+        }
+    }
+
+    /// Feeds one record (with its extracted timestamp) to the generator.
+    pub fn observe(&mut self, v: &Value, ts: i64) {
+        self.max_ts = self.max_ts.max(ts);
+        if let WatermarkGen::Punctuated(p) = &self.gen {
+            if p(v) {
+                self.punct_pending = true;
+            }
+        }
+    }
+
+    /// Feeds a bare timestamp (columnar path: no row to test for
+    /// punctuation, so punctuated generators degrade to bounded-by-zero
+    /// per-batch emission).
+    pub fn observe_ts(&mut self, ts: i64) {
+        self.max_ts = self.max_ts.max(ts);
+        if matches!(self.gen, WatermarkGen::Punctuated(_)) {
+            self.punct_pending = true;
+        }
+    }
+
+    /// The next watermark to emit, if the promise advanced. Bounded
+    /// generators emit `max_ts - bound` (typically polled once per
+    /// batch); punctuated generators emit `max_ts` only after a
+    /// punctuation record passed.
+    pub fn take(&mut self) -> Option<i64> {
+        let candidate = match &self.gen {
+            WatermarkGen::BoundedOutOfOrderness { bound_ms } => {
+                if self.max_ts == i64::MIN {
+                    return None;
+                }
+                self.max_ts.saturating_sub(*bound_ms)
+            }
+            WatermarkGen::Punctuated(_) => {
+                if !self.punct_pending {
+                    return None;
+                }
+                self.punct_pending = false;
+                self.max_ts
+            }
+        };
+        if candidate > self.emitted {
+            self.emitted = candidate;
+            Some(candidate)
+        } else {
+            None
+        }
+    }
+
+    /// Serialises the generator state (checkpoint / handoff).
+    pub fn snapshot(&self) -> Value {
+        Value::List(vec![Value::I64(self.max_ts), Value::I64(self.emitted)])
+    }
+
+    /// Restores a snapshot, keeping the higher of the saved and current
+    /// promises (restore may merge multiple predecessor states).
+    pub fn restore(&mut self, v: &Value) {
+        if let Some(items) = v.as_list() {
+            if let (Some(max_ts), Some(emitted)) = (
+                items.first().and_then(Value::as_i64),
+                items.get(1).and_then(Value::as_i64),
+            ) {
+                self.max_ts = self.max_ts.max(max_ts);
+                self.emitted = self.emitted.max(emitted);
+            }
+        }
+    }
+}
+
+/// Assigns each record (by event timestamp) to one or more windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowAssigner {
+    /// Fixed, non-overlapping windows of `size_ms`.
+    Tumbling {
+        /// Window length in milliseconds.
+        size_ms: i64,
+    },
+    /// Overlapping windows of `size_ms` advancing every `slide_ms`.
+    Sliding {
+        /// Window length in milliseconds.
+        size_ms: i64,
+        /// Hop between window starts in milliseconds.
+        slide_ms: i64,
+    },
+    /// Activity sessions: a window extends while successive records are
+    /// within `gap_ms` of each other and closes after a silence of
+    /// `gap_ms`.
+    Session {
+        /// Inactivity gap that closes a session, in milliseconds.
+        gap_ms: i64,
+    },
+}
+
+impl WindowAssigner {
+    /// Fixed, non-overlapping windows of `size_ms`.
+    pub fn tumbling(size_ms: i64) -> Self {
+        WindowAssigner::Tumbling { size_ms }
+    }
+
+    /// Overlapping windows of `size_ms` advancing every `slide_ms`.
+    pub fn sliding(size_ms: i64, slide_ms: i64) -> Self {
+        WindowAssigner::Sliding { size_ms, slide_ms }
+    }
+
+    /// Activity sessions closed by a silence of `gap_ms`.
+    pub fn session(gap_ms: i64) -> Self {
+        WindowAssigner::Session { gap_ms }
+    }
+
+    /// Validates the assigner's parameters (builder-time check).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        match *self {
+            WindowAssigner::Tumbling { size_ms } if size_ms <= 0 => {
+                Err(format!("tumbling window size {size_ms}ms must be positive"))
+            }
+            WindowAssigner::Sliding { size_ms, slide_ms }
+                if size_ms <= 0 || slide_ms <= 0 || slide_ms > size_ms =>
+            {
+                Err(format!(
+                    "sliding window needs 0 < slide ({slide_ms}ms) <= size ({size_ms}ms)"
+                ))
+            }
+            WindowAssigner::Session { gap_ms } if gap_ms <= 0 => {
+                Err(format!("session gap {gap_ms}ms must be positive"))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// The `[start, end)` windows containing `ts`. Session windows are
+    /// data-driven (the executor merges per-key spans instead) and yield
+    /// nothing here.
+    pub fn assign(&self, ts: i64) -> Vec<(i64, i64)> {
+        match *self {
+            WindowAssigner::Tumbling { size_ms } => {
+                let start = ts - ts.rem_euclid(size_ms);
+                vec![(start, start + size_ms)]
+            }
+            WindowAssigner::Sliding { size_ms, slide_ms } => {
+                // last window starting at or before ts, then walk back
+                // while the window still covers ts
+                let mut start = ts - ts.rem_euclid(slide_ms);
+                let mut out = Vec::with_capacity((size_ms / slide_ms) as usize);
+                while start + size_ms > ts {
+                    out.push((start, start + size_ms));
+                    start -= slide_ms;
+                }
+                out.reverse();
+                out
+            }
+            WindowAssigner::Session { .. } => Vec::new(),
+        }
+    }
+
+    /// The session gap, for session assigners.
+    pub fn session_gap(&self) -> Option<i64> {
+        match *self {
+            WindowAssigner::Session { gap_ms } => Some(gap_ms),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tumbling_assignment_covers_negatives() {
+        let w = WindowAssigner::Tumbling { size_ms: 10 };
+        assert_eq!(w.assign(0), vec![(0, 10)]);
+        assert_eq!(w.assign(9), vec![(0, 10)]);
+        assert_eq!(w.assign(10), vec![(10, 20)]);
+        assert_eq!(w.assign(-1), vec![(-10, 0)]);
+    }
+
+    #[test]
+    fn sliding_assignment_yields_every_covering_window() {
+        let w = WindowAssigner::Sliding {
+            size_ms: 10,
+            slide_ms: 5,
+        };
+        assert_eq!(w.assign(12), vec![(5, 15), (10, 20)]);
+        assert_eq!(w.assign(10), vec![(5, 15), (10, 20)]);
+        assert_eq!(w.assign(4), vec![(-5, 5), (0, 10)]);
+    }
+
+    #[test]
+    fn assigner_validation_rejects_degenerate_shapes() {
+        assert!(WindowAssigner::Tumbling { size_ms: 0 }.validate().is_err());
+        assert!(WindowAssigner::Sliding {
+            size_ms: 5,
+            slide_ms: 10
+        }
+        .validate()
+        .is_err());
+        assert!(WindowAssigner::Session { gap_ms: -1 }.validate().is_err());
+        assert!(WindowAssigner::Tumbling { size_ms: 1000 }.validate().is_ok());
+    }
+
+    #[test]
+    fn bounded_generator_trails_max_by_bound() {
+        let mut g = WatermarkState::new(WatermarkGen::BoundedOutOfOrderness { bound_ms: 5 });
+        assert_eq!(g.take(), None, "no records, no promise");
+        g.observe(&Value::I64(0), 100);
+        assert_eq!(g.take(), Some(95));
+        g.observe(&Value::I64(0), 90); // disorder within bound: no regress
+        assert_eq!(g.take(), None);
+        g.observe(&Value::I64(0), 200);
+        assert_eq!(g.take(), Some(195));
+    }
+
+    #[test]
+    fn punctuated_generator_fires_on_markers_only() {
+        let mut g = WatermarkState::new(WatermarkGen::Punctuated(Arc::new(|v: &Value| {
+            v.as_i64() == Some(-1)
+        })));
+        g.observe(&Value::I64(7), 50);
+        assert_eq!(g.take(), None, "plain records never punctuate");
+        g.observe(&Value::I64(-1), 60);
+        assert_eq!(g.take(), Some(60));
+        assert_eq!(g.take(), None, "punctuation is consumed");
+    }
+
+    #[test]
+    fn watermark_state_snapshot_roundtrip_is_monotone() {
+        let mut g = WatermarkState::new(WatermarkGen::BoundedOutOfOrderness { bound_ms: 0 });
+        g.observe(&Value::I64(0), 500);
+        assert_eq!(g.take(), Some(500));
+        let snap = g.snapshot();
+        let mut g2 = WatermarkState::new(WatermarkGen::BoundedOutOfOrderness { bound_ms: 0 });
+        g2.restore(&snap);
+        g2.observe(&Value::I64(0), 400); // older data after restore
+        assert_eq!(g2.take(), None, "restored promise never regresses");
+        g2.observe(&Value::I64(0), 600);
+        assert_eq!(g2.take(), Some(600));
+    }
+}

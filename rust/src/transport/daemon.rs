@@ -714,7 +714,7 @@ fn handle_conn(shared: &Arc<Shared>, mut conn: Conn) {
         }
         match f.kind {
             wire::kind::HEARTBEAT => {}
-            wire::kind::DATA | wire::kind::EOS | wire::kind::EPOCH => {
+            wire::kind::DATA | wire::kind::EOS | wire::kind::EPOCH | wire::kind::WATERMARK => {
                 relay(shared, f.kind, &f.payload);
             }
             wire::kind::REPORT => {

@@ -363,6 +363,10 @@ impl Lane for PeerLane {
                 wire::kind::EPOCH,
                 &wire::data_payload(self.job, self.to, &e.to_le_bytes()),
             ),
+            Msg::Watermark(wm) => self.peer.send(
+                wire::kind::WATERMARK,
+                &wire::data_payload(self.job, self.to, &wire::watermark_body(&wm)),
+            ),
         }
     }
 }

@@ -32,6 +32,9 @@ pub mod kind {
     pub const EOS: u8 = 0x02;
     /// Drain-and-handoff marker: `[u32 job][u32 to_instance][u64 epoch]`.
     pub const EPOCH: u8 = 0x03;
+    /// Event-time watermark:
+    /// `[u32 job][u32 to_instance][u32 from][i64 ts][u64 origin_ms]`.
+    pub const WATERMARK: u8 = 0x04;
     /// Worker → coordinator hello (Value payload).
     pub const REGISTER: u8 = 0x10;
     /// Coordinator → worker registration accepted (Value payload).
@@ -212,6 +215,31 @@ impl<R: Read> FrameReader<R> {
     }
 }
 
+/// Encodes a watermark frame body (the bytes after the routing header):
+/// `[u32 from][i64 ts][u64 origin_ms]`.
+pub fn watermark_body(wm: &crate::channels::Watermark) -> Vec<u8> {
+    let mut b = Vec::with_capacity(20);
+    b.extend_from_slice(&wm.from.to_le_bytes());
+    b.extend_from_slice(&wm.ts.to_le_bytes());
+    b.extend_from_slice(&wm.origin_ms.to_le_bytes());
+    b
+}
+
+/// Decodes a watermark frame body.
+pub fn parse_watermark(rest: &[u8]) -> Result<crate::channels::Watermark> {
+    if rest.len() != 20 {
+        return Err(Error::Transport(format!(
+            "watermark body of {} bytes (expected 20)",
+            rest.len()
+        )));
+    }
+    Ok(crate::channels::Watermark {
+        from: u32::from_le_bytes(rest[0..4].try_into().unwrap()),
+        ts: i64::from_le_bytes(rest[4..12].try_into().unwrap()),
+        origin_ms: u64::from_le_bytes(rest[12..20].try_into().unwrap()),
+    })
+}
+
 /// Builds a data-plane payload: `[u32 job][u32 to][rest]`.
 pub fn data_payload(job: u64, to: usize, rest: &[u8]) -> Vec<u8> {
     let mut p = Vec::with_capacity(8 + rest.len());
@@ -285,6 +313,18 @@ mod tests {
         let f2 = r.next_frame().unwrap().unwrap();
         assert_eq!((f2.kind, f2.payload.as_slice()), (kind::EOS, &b""[..]));
         assert!(r.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn watermark_body_roundtrip() {
+        let wm = crate::channels::Watermark {
+            from: 9,
+            ts: -125,
+            origin_ms: 17,
+        };
+        let b = watermark_body(&wm);
+        assert_eq!(parse_watermark(&b).unwrap(), wm);
+        assert!(parse_watermark(&b[..10]).is_err(), "truncated body rejected");
     }
 
     #[test]

@@ -417,7 +417,7 @@ fn serve(
         };
         note_recv(metrics, f.payload.len());
         match f.kind {
-            wire::kind::DATA | wire::kind::EOS | wire::kind::EPOCH => {
+            wire::kind::DATA | wire::kind::EOS | wire::kind::EPOCH | wire::kind::WATERMARK => {
                 demux(active, f.kind, &f.payload, metrics);
             }
             wire::kind::DEPLOY => {
@@ -488,6 +488,13 @@ fn demux(active: &mut Option<ActiveJob>, kind: u8, payload: &[u8], metrics: &Met
                 return;
             };
             Msg::Epoch(u64::from_le_bytes(bytes))
+        }
+        wire::kind::WATERMARK => {
+            let Ok(wm) = wire::parse_watermark(rest) else {
+                MetricsRegistry::add(&metrics.transport_errors, 1);
+                return;
+            };
+            Msg::Watermark(wm)
         }
         _ => return,
     };

@@ -227,6 +227,65 @@ fn forced_checkpoint_is_invisible_in_output_and_observable_in_report() {
 }
 
 #[test]
+fn state_topic_stays_bounded_across_many_checkpoint_cycles() {
+    // every committed checkpoint supersedes the previous one's records in
+    // the unit's state topic; compaction must tombstone the superseded
+    // prefix so the topic's live payload stays bounded no matter how many
+    // cycles run. Durable queues let the test reopen the log afterwards
+    // and inspect what actually survived on disk.
+    let dir = std::env::temp_dir().join(format!("fu-ckpt-compact-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (total, keys) = (12_000u64, 8i64);
+    let mut config = recovery_config(Some(Duration::from_secs(3600))); // manual ticks only
+    config.queue_dir = Some(dir.clone());
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), config.clone());
+    let g = agg_graph(
+        total,
+        6_000.0,
+        keys,
+        &config,
+        Replication::PerCore,
+        None,
+        None,
+    );
+    let mut dep = coord.deploy(&g).unwrap();
+    for _ in 0..8 {
+        std::thread::sleep(Duration::from_millis(60));
+        dep.checkpoint().unwrap();
+    }
+    let report = dep.wait().unwrap();
+    assert!(
+        report.metrics.checkpoints_taken.load(Ordering::Relaxed) >= 6,
+        "repeated manual checkpoints committed"
+    );
+    assert!(
+        report.metrics.state_compactions.load(Ordering::Relaxed) > 0,
+        "superseded checkpoint records were compacted"
+    );
+    assert_eq!(
+        sorted_sums(&report),
+        expected_sums(total, keys),
+        "compaction is invisible in the output"
+    );
+    drop(report);
+    // reopen the durable log: all but the newest checkpoint's records must
+    // be zero-length tombstones — the live payload does not grow with the
+    // number of cycles
+    let broker = flowunits::queue::QueueBroker::durable(&dir, None).unwrap();
+    let topic = broker.topic("fu-state-u1", 1).unwrap();
+    let part = topic.partition(0);
+    let len = part.len();
+    assert!(len > 0, "the agg unit checkpointed state into its topic");
+    let (recs, _) = part.poll(0, len, Duration::ZERO).unwrap();
+    let live = recs.iter().filter(|r| !r.is_empty()).count();
+    assert!(
+        live * 3 <= len,
+        "most records should be tombstoned after 8 cycles (live={live} of {len})"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn autoscaler_scales_up_under_lag_then_back_down_without_losing_records() {
     // phase 1: one dragging instance falls behind a fast source — the
     // control loop must raise replication. phase 2: the drag is lifted,
