@@ -1,0 +1,184 @@
+//! `cargo bench --bench durability` — bounded-memory queues under
+//! sustained overload.
+//!
+//! Two scenarios over the keyed-reduce stress shape (`source@edge →
+//! filter ∥ "agg"@cloud: map(drag) → key_by → reduce → collect`, one
+//! deliberately dragging consumer instance behind an unpaced source, so
+//! the queue boundary accumulates a backlog that dwarfs the budget):
+//!
+//! * `unbounded_resident` — durable broker, no budget: the backlog sits
+//!   fully resident, and its peak measures the workload's natural
+//!   memory appetite;
+//! * `bounded_spill` — the same workload through a `DUR_BUDGET`-byte
+//!   broker: cold records are evicted to the segment files and re-read
+//!   as the consumer catches up. The in-binary claims are that the
+//!   resident high-water stays flat at the budget (≥ `DUR_RATIO`x under
+//!   the unbounded peak, default 4x) while output stays exact, and that
+//!   spilling actually engaged (`spill_reads > 0`).
+//!
+//! Results land in `BENCH_durability.json` (override with `DUR_OUT`).
+//! `DUR_EVENTS`, `DUR_BUDGET`, `DUR_DRAG_US`, and `DUR_REPS` scale the
+//! workload; CI runs a small smoke configuration gated by the floors in
+//! `BENCH_baseline.json`.
+
+use flowunits::api::raw::{JobConfig, PlannerKind, Replication, Source, StreamContext};
+use flowunits::config::eval_cluster;
+use flowunits::coordinator::Coordinator;
+use flowunits::value::Value;
+use std::io::Write;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+const KEYS: i64 = 16;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn config(dir: &std::path::Path, budget: Option<u64>) -> JobConfig {
+    JobConfig {
+        planner: PlannerKind::FlowUnits,
+        decouple_units: true,
+        batch_size: 128,
+        poll_timeout: Duration::from_millis(10),
+        queue_dir: Some(dir.to_path_buf()),
+        queue_budget: budget,
+        ..Default::default()
+    }
+}
+
+struct Outcome {
+    ev_s: f64,
+    peak_resident: u64,
+    spill_reads: u64,
+    records_shed: u64,
+}
+
+/// One measured job against a fresh durable queue dir.
+fn run(total: u64, budget: Option<u64>, drag: Duration, tag: &str) -> Outcome {
+    let dir = std::env::temp_dir().join(format!("fu-bench-dur-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = config(&dir, budget);
+    let mut ctx = StreamContext::new(eval_cluster(None, Duration::ZERO), cfg.clone());
+    ctx.stream(Source::synthetic_rated(total, 1_000_000.0, |_, i| {
+        Value::I64(i as i64)
+    }))
+    .to_layer("edge")
+    .filter(|v| v.as_i64().unwrap() >= 0)
+    .unit("agg")
+    .to_layer("cloud")
+    .replicate(Replication::Fixed(1))
+    .map(move |v| {
+        if !drag.is_zero() {
+            std::thread::sleep(drag);
+        }
+        v
+    })
+    .key_by(|v| Value::I64(v.as_i64().unwrap() % KEYS))
+    .reduce(|a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+    .collect_vec();
+    let g = ctx.into_graph().expect("bench graph");
+    let coord = Coordinator::new(eval_cluster(None, Duration::ZERO), cfg);
+    let dep = coord.deploy(&g).expect("deploy");
+    let report = dep.wait().expect("job completes");
+
+    // conservation: whatever spilled and rehydrated mid-run, the per-key
+    // sums must add up to sum(0..total)
+    let got: i64 = report
+        .collected
+        .iter()
+        .map(|v| v.as_pair().unwrap().1.as_i64().unwrap())
+        .sum();
+    let expect = (total as i64) * (total as i64 - 1) / 2;
+    assert_eq!(got, expect, "per-key sums diverged (loss or duplication)");
+    assert_eq!(report.events_in, total);
+    let _ = std::fs::remove_dir_all(&dir);
+    Outcome {
+        ev_s: report.events_in as f64 / report.wall_time.as_secs_f64(),
+        peak_resident: report.metrics.resident_bytes.load(Ordering::Relaxed),
+        spill_reads: report.metrics.spill_reads.load(Ordering::Relaxed),
+        records_shed: report.metrics.records_shed.load(Ordering::Relaxed),
+    }
+}
+
+/// Best-of-`reps` by throughput; peaks are taken from the same best run
+/// so the reported scenario is one coherent execution.
+fn best_of(reps: u64, mut f: impl FnMut() -> Outcome) -> Outcome {
+    let mut best = f();
+    for _ in 1..reps {
+        let o = f();
+        if o.ev_s > best.ev_s {
+            best = o;
+        }
+    }
+    best
+}
+
+fn main() {
+    let total = env_u64("DUR_EVENTS", 60_000);
+    let budget = env_u64("DUR_BUDGET", 48 * 1024);
+    let drag = Duration::from_micros(env_u64("DUR_DRAG_US", 20));
+    let reps = env_u64("DUR_REPS", 2).max(1);
+    let ratio_floor = env_u64("DUR_RATIO", 4) as f64;
+    println!(
+        "# FlowUnits durability bench ({total} events, {budget}-byte budget, \
+         {}µs consumer drag, best of {reps})",
+        drag.as_micros()
+    );
+
+    let unbounded = best_of(reps, || run(total, None, drag, "unbounded"));
+    println!(
+        "unbounded_resident : {:>12.0} ev/s   (peak resident {} bytes)",
+        unbounded.ev_s, unbounded.peak_resident
+    );
+    let bounded = best_of(reps, || run(total, Some(budget), drag, "bounded"));
+    println!(
+        "bounded_spill      : {:>12.0} ev/s   (peak resident {} bytes, {} spill reads)",
+        bounded.ev_s, bounded.peak_resident, bounded.spill_reads
+    );
+
+    assert!(
+        bounded.spill_reads > 0,
+        "the backlog never outgrew the budget — raise DUR_EVENTS or DUR_DRAG_US"
+    );
+    assert_eq!(
+        bounded.records_shed, 0,
+        "a durable bounded broker must spill, never shed"
+    );
+    assert!(
+        bounded.peak_resident <= budget + 16 * 1024,
+        "resident high-water {} blew past the {budget}-byte budget",
+        bounded.peak_resident
+    );
+    let ratio = unbounded.peak_resident as f64 / bounded.peak_resident.max(1) as f64;
+    println!("residency ratio    : {ratio:.1}x (floor {ratio_floor:.0}x)");
+    assert!(
+        ratio >= ratio_floor,
+        "bounding the broker only cut peak residency {ratio:.1}x \
+         (unbounded {} bytes, bounded {} bytes) — expected ≥ {ratio_floor:.0}x",
+        unbounded.peak_resident,
+        bounded.peak_resident
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"durability\",\n  \"events\": {total},\n  \
+         \"budget_bytes\": {budget},\n  \"residency_ratio\": {ratio:.2},\n  \
+         \"scenarios\": [\n    \
+         {{\"name\": \"unbounded_resident\", \"throughput_ev_s\": {:.1}, \
+         \"peak_resident_bytes\": {}}},\n    \
+         {{\"name\": \"bounded_spill\", \"throughput_ev_s\": {:.1}, \
+         \"peak_resident_bytes\": {}, \"spill_reads\": {}}}\n  ]\n}}\n",
+        unbounded.ev_s,
+        unbounded.peak_resident,
+        bounded.ev_s,
+        bounded.peak_resident,
+        bounded.spill_reads,
+    );
+    let path = std::env::var("DUR_OUT").unwrap_or_else(|_| "BENCH_durability.json".into());
+    let mut f = std::fs::File::create(&path).expect("create BENCH_durability.json");
+    f.write_all(json.as_bytes()).expect("write bench results");
+    println!("\nwrote {path}");
+}

@@ -33,7 +33,7 @@ use crate::transport::{InProcessLane, Lane, NetsimLane};
 use crate::value::{Batch, BatchData, Value};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Per-frame overhead in accounted bytes (length prefix + CRC + TCP/IP
 /// headers amortised per frame — matches a 1500-byte-MTU stream envelope).
@@ -694,12 +694,20 @@ pub struct Inbox {
     eos_seen: usize,
     epoch_seen: usize,
     epoch: u64,
-    /// Latest watermark per producer id (linear scan — fan-in degrees are
-    /// small). The merged watermark is the min over these once every
-    /// producer has reported at least once.
-    wm_in: Vec<(u32, i64)>,
+    /// Latest watermark (and when it was heard) per producer id (linear
+    /// scan — fan-in degrees are small). The merged watermark is the min
+    /// over these once every producer has reported at least once.
+    wm_in: Vec<(u32, i64, Instant)>,
     /// Last merged watermark emitted downstream (monotonicity guard).
     wm_out: i64,
+    /// Event-time idleness bound: a producer silent for this long is
+    /// excluded from the min-of-inputs merge (and one that never reported
+    /// stops gating it), so a stalled edge source cannot freeze event-time
+    /// for the whole fan-in. `None` = strict semantics, wait forever.
+    idle: Option<Duration>,
+    /// When this inbox was built — silent-from-birth producers gate the
+    /// merge until this is `idle` old.
+    started: Instant,
     /// Set when every sender dropped *without* a terminal signal from some
     /// producer — an upstream crash, not a quiesce or a normal EOS. The
     /// recovery supervisor uses this to tell "stream genuinely ended" from
@@ -719,9 +727,19 @@ impl Inbox {
             epoch: 0,
             wm_in: Vec::new(),
             wm_out: i64::MIN,
+            idle: None,
+            started: Instant::now(),
             disconnected: false,
             metrics: None,
         }
+    }
+
+    /// Sets the event-time idleness bound (see the `idle` field). With a
+    /// bound set, [`Inbox::next`] wakes at least that often even on a
+    /// silent channel, so an idle producer is noticed without new input.
+    pub fn with_idle_timeout(mut self, idle: Option<Duration>) -> Self {
+        self.idle = idle;
+        self
     }
 
     /// The current merged event-time watermark, if every producer has
@@ -735,21 +753,16 @@ impl Inbox {
     /// has not already ended its stream reported at least once and (b) the
     /// min over the latest per-producer promises moved forward.
     fn merge_watermark(&mut self, wm: Watermark) -> Option<i64> {
-        match self.wm_in.iter_mut().find(|(f, _)| *f == wm.from) {
-            Some((_, t)) => *t = (*t).max(wm.ts),
-            None => self.wm_in.push((wm.from, wm.ts)),
+        let now = Instant::now();
+        match self.wm_in.iter_mut().find(|(f, ..)| *f == wm.from) {
+            Some((_, t, heard)) => {
+                *t = (*t).max(wm.ts);
+                *heard = now;
+            }
+            None => self.wm_in.push((wm.from, wm.ts, now)),
         }
-        // A producer that already delivered EOS stopped advancing — treat
-        // it as +inf so a finished source cannot stall the merge forever.
-        // (EOS frames are anonymous, so this over-approximates when an
-        // EOS'd producer also sits in `wm_in`; the min over live entries
-        // is still a sound lower bound.)
-        if self.wm_in.len() + self.eos_seen < self.producers {
-            return None;
-        }
-        let min = self.wm_in.iter().map(|(_, t)| *t).min()?;
-        if min > self.wm_out {
-            self.wm_out = min;
+        let merged = self.remerge();
+        if merged.is_some() {
             if let Some(m) = &self.metrics {
                 let now = crate::time::now_ms();
                 MetricsRegistry::fetch_max(
@@ -757,6 +770,44 @@ impl Inbox {
                     now.saturating_sub(wm.origin_ms),
                 );
             }
+        }
+        merged
+    }
+
+    /// Re-evaluates the min-of-inputs merge against the current per-
+    /// producer promises, returning the merged watermark if it advanced.
+    fn remerge(&mut self) -> Option<i64> {
+        let now = Instant::now();
+        let mut min = i64::MAX;
+        let mut live = 0usize;
+        for &(_, ts, heard) in &self.wm_in {
+            if self.idle.is_some_and(|d| now.duration_since(heard) > d) {
+                // idle producer: its stale promise no longer holds the
+                // merged clock down (it re-enters when it next reports)
+                continue;
+            }
+            live += 1;
+            min = min.min(ts);
+        }
+        if live == 0 {
+            return None;
+        }
+        // A producer that already delivered EOS stopped advancing — treat
+        // it as +inf so a finished source cannot stall the merge forever.
+        // (EOS frames are anonymous, so this over-approximates when an
+        // EOS'd producer also sits in `wm_in`; the min over live entries
+        // is still a sound lower bound.) A producer that never reported
+        // gates the merge until the idleness bound waives it.
+        if self.wm_in.len() + self.eos_seen < self.producers {
+            let waived = self
+                .idle
+                .is_some_and(|d| now.duration_since(self.started) > d);
+            if !waived {
+                return None;
+            }
+        }
+        if min > self.wm_out {
+            self.wm_out = min;
             Some(min)
         } else {
             None
@@ -812,7 +863,30 @@ impl Inbox {
                 }
                 return ev;
             }
-            match self.rx.recv() {
+            // With an idleness bound the wait is chopped so a producer
+            // going silent is noticed (and the merge re-evaluated) even
+            // when no further message ever arrives.
+            let msg = match self.idle {
+                Some(d) => match self.rx.recv_timeout(d) {
+                    Ok(m) => Ok(m),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if !self.wm_in.is_empty() {
+                            if let Some(ts) = self.remerge() {
+                                return InboxEvent::Watermark {
+                                    ts,
+                                    origin_ms: crate::time::now_ms(),
+                                };
+                            }
+                        }
+                        continue;
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        Err(std::sync::mpsc::RecvError)
+                    }
+                },
+                None => self.rx.recv(),
+            };
+            match msg {
                 Ok(Msg::Batch(b)) => return InboxEvent::Batch(b),
                 Ok(Msg::Columns(c)) => return InboxEvent::Columns(c),
                 Ok(Msg::Frame(bytes)) => match Batch::from_wire(bytes) {
@@ -1433,6 +1507,94 @@ mod tests {
         assert!(matches!(inbox.next(), InboxEvent::Watermark { ts: 10, .. }));
         tx2.send(Msg::Eos).unwrap();
         assert!(matches!(inbox.next(), InboxEvent::Eos));
+    }
+
+    /// Spawns a thread that keeps refreshing producer `from`'s watermark
+    /// every 10 ms (starting at `ts0`, advancing by 10 per tick) until
+    /// the stop flag flips.
+    fn feed_watermarks(
+        tx: SyncSender<Msg>,
+        from: u32,
+        ts0: i64,
+        stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            use std::sync::atomic::Ordering;
+            let mut ts = ts0;
+            while !stop.load(Ordering::SeqCst) {
+                let wm = Msg::Watermark(Watermark {
+                    from,
+                    ts,
+                    origin_ms: 0,
+                });
+                if tx.try_send(wm).is_err() {
+                    break;
+                }
+                ts += 10;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        })
+    }
+
+    #[test]
+    fn idle_timeout_waives_a_never_reporting_producer() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let (tx, rx) = sync_channel(256);
+        let mut inbox =
+            Inbox::new(rx, 2).with_idle_timeout(Some(Duration::from_millis(40)));
+        // producer 0 keeps its promises fresh; producer 1 never reports —
+        // under strict semantics the merge would be gated forever
+        let stop = Arc::new(AtomicBool::new(false));
+        let feeder = feed_watermarks(tx.clone(), 0, 10, stop.clone());
+        drop(tx);
+        let got = loop {
+            match inbox.next() {
+                InboxEvent::Watermark { ts, .. } => break ts,
+                InboxEvent::Eos => panic!("eos before the idle waiver released a watermark"),
+                _ => {}
+            }
+        };
+        assert!(got > 0, "waived merge follows the live producer, got {got}");
+        stop.store(true, Ordering::SeqCst);
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn stale_producer_watermark_is_released_after_idle() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let (tx, rx) = sync_channel(256);
+        let mut inbox =
+            Inbox::new(rx, 2).with_idle_timeout(Some(Duration::from_millis(40)));
+        // producer 0 reports once and goes silent; producer 1 keeps
+        // advancing from 200
+        tx.send(Msg::Watermark(Watermark {
+            from: 0,
+            ts: 50,
+            origin_ms: 0,
+        }))
+        .unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let feeder = feed_watermarks(tx.clone(), 1, 200, stop.clone());
+        drop(tx);
+        let mut first = None;
+        let released = loop {
+            match inbox.next() {
+                InboxEvent::Watermark { ts, .. } => {
+                    first.get_or_insert(ts);
+                    if ts >= 200 {
+                        break ts;
+                    }
+                }
+                InboxEvent::Eos => panic!("eos before the stale promise was released"),
+                _ => {}
+            }
+        };
+        // while producer 0 counted as live its promise held the merge at
+        // 50; once it idled out, the merge jumped to producer 1's clock
+        assert_eq!(first, Some(50), "both promises merge min-first");
+        assert!(released >= 200, "idle producer released the merge, got {released}");
+        stop.store(true, Ordering::SeqCst);
+        feeder.join().unwrap();
     }
 
     #[test]

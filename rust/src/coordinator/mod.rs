@@ -12,7 +12,7 @@ use crate::graph::{LogicalGraph, OpKind, SourceKind};
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::netsim::Link;
 use crate::placement::{ancestor_at_layer, plan as make_plan, ExecPlan, PlannerKind};
-use crate::queue::{Broker, QueueBroker, Topic};
+use crate::queue::{watermark_record, Broker, OverloadPolicy, QueueBroker, Topic};
 use crate::runtime::{
     exec::{
         AssignTsExec, Collector, EventWindowExec, FilterExec, FilterMapExec, FlatMapExec,
@@ -70,6 +70,23 @@ pub struct JobConfig {
     pub checkpoint_interval: Option<Duration>,
     /// Lag-driven elastic rescaling policy (None ⇒ autoscaler off).
     pub autoscale: Option<AutoscaleConfig>,
+    /// Resident-byte budget for the queue broker (None ⇒ unbounded).
+    /// Durable brokers spill records beyond the hot tail to their segment
+    /// files and re-read them on demand; in-memory brokers apply the
+    /// overload policy below once the budget is hit.
+    pub queue_budget: Option<u64>,
+    /// What happens when a bounded broker cannot make room:
+    /// [`OverloadPolicy::Backpressure`] blocks producers (propagating
+    /// slowdown end-to-end through queue ingest),
+    /// [`OverloadPolicy::Shed`] drops the oldest or samples records —
+    /// always counted in `records_shed`, never silent. State topics pin
+    /// `Backpressure` regardless: checkpoints must never be shed.
+    pub overload_policy: OverloadPolicy,
+    /// Event-time idleness bound per input: a producer whose watermark
+    /// has not advanced for this long is excluded from the min-of-inputs
+    /// merge, so one silent edge source cannot stall windows for a whole
+    /// zone. `None` = strict semantics (wait forever).
+    pub idle_timeout: Option<Duration>,
 }
 
 /// Policy of the lag-driven autoscaler: how the control loop inside
@@ -127,6 +144,9 @@ impl Default for JobConfig {
             columnar: true,
             checkpoint_interval: None,
             autoscale: None,
+            queue_budget: None,
+            overload_policy: OverloadPolicy::default(),
+            idle_timeout: None,
         }
     }
 }
@@ -351,6 +371,11 @@ pub struct Deployment {
     /// them so an instance that already finished is not respawned into a
     /// second end-of-stream toward downstream topics.
     inst_done: HashMap<usize, Arc<AtomicBool>>,
+    /// Committed checkpoints found on disk by a relaunch after a
+    /// coordinator death (`(unit, zone, epoch)`), drained by the next
+    /// `spawn_set`: state is restored and covered offsets re-committed
+    /// *before* any instance starts consuming.
+    resume_pending: Vec<(usize, String, u64)>,
     started: Instant,
 }
 
@@ -363,10 +388,14 @@ impl Deployment {
     ) -> Result<Deployment> {
         let metrics = MetricsRegistry::new();
         let broker = if plan.edges.iter().any(|e| e.decoupled) {
-            Some(match &config.queue_dir {
-                Some(d) => QueueBroker::durable(d, Some(metrics.clone()))?,
-                None => QueueBroker::in_memory(Some(metrics.clone())),
-            })
+            let b = match (&config.queue_dir, config.queue_budget) {
+                (Some(d), Some(n)) => QueueBroker::durable_bounded(d, n, Some(metrics.clone()))?,
+                (Some(d), None) => QueueBroker::durable(d, Some(metrics.clone()))?,
+                (None, Some(n)) => QueueBroker::in_memory_bounded(n, Some(metrics.clone())),
+                (None, None) => QueueBroker::in_memory(Some(metrics.clone())),
+            };
+            b.set_default_policy(config.overload_policy);
+            Some(b)
         } else {
             None
         };
@@ -390,10 +419,77 @@ impl Deployment {
             update_epoch: Arc::new(AtomicU64::new(0)),
             checkpoints: HashMap::new(),
             inst_done: HashMap::new(),
+            resume_pending: Vec::new(),
             started: Instant::now(),
         };
+        // A durable broker that reopened existing segments may hold
+        // committed checkpoints from a previous coordinator incarnation
+        // (a crashed or killed process): adopt them so the relaunch
+        // resumes instead of recomputing from offset zero.
+        if dep.config.checkpoint_interval.is_some() && dep.config.queue_dir.is_some() {
+            dep.detect_committed_checkpoints()?;
+        }
         dep.wire_and_spawn()?;
         Ok(dep)
+    }
+
+    /// Scans every unit's durable state topic for checkpoint commit
+    /// markers (`stage = -1`, checkpoint-tagged epoch) left behind by a
+    /// previous coordinator process, adopting the newest one per
+    /// unit-zone. Fast-forwards the update epoch past everything found so
+    /// fresh epochs never alias resumed ones; the actual state restore
+    /// and offset re-commit happen in `spawn_set` (the entry topics must
+    /// exist first).
+    fn detect_committed_checkpoints(&mut self) -> Result<()> {
+        let Some(broker) = self.broker.as_ref() else {
+            return Ok(());
+        };
+        let mut newest: HashMap<(usize, String), u64> = HashMap::new();
+        let mut max_seq = 0u64;
+        for unit in 0..self.graph.units.len() {
+            let part = state_topic(broker, unit)?.partition(0);
+            let n = part.len();
+            if n == 0 {
+                continue;
+            }
+            let Some((records, _)) = part.poll(0, n, Duration::ZERO) else {
+                continue;
+            };
+            for rec in records {
+                if rec.is_empty() {
+                    continue; // compaction tombstone
+                }
+                let fields = match Value::decode_exact(&rec) {
+                    Ok(Value::List(f)) if f.len() == 5 => f,
+                    _ => continue,
+                };
+                let (Some(stage), Some(zone), Some(epoch)) =
+                    (fields[0].as_i64(), fields[1].as_str(), fields[2].as_i64())
+                else {
+                    continue;
+                };
+                let epoch = epoch as u64;
+                if stage != -1 || !crate::channels::is_checkpoint(epoch) {
+                    continue;
+                }
+                max_seq = max_seq.max(epoch_seq(epoch));
+                let e = newest.entry((unit, zone.to_string())).or_insert(epoch);
+                if epoch_seq(epoch) > epoch_seq(*e) {
+                    *e = epoch;
+                }
+            }
+        }
+        self.update_epoch.fetch_max(max_seq, Ordering::SeqCst);
+        MetricsRegistry::add(&self.metrics.recoveries, newest.len() as u64);
+        for ((unit, zone), epoch) in newest {
+            // scan_from 0: the resumed collect filters by zone + epoch, so
+            // scanning the whole (compacted) topic is correct, just not
+            // incremental — the next fresh checkpoint tightens it again
+            self.checkpoints
+                .insert((unit, zone.clone()), (epoch, 0));
+            self.resume_pending.push((unit, zone, epoch));
+        }
+        Ok(())
     }
 
     /// Returns (creating if needed) the shared uplink for the route
@@ -501,9 +597,10 @@ impl Deployment {
                     ingest.push(tx);
                     let topic2 = topic.clone();
                     let expected2 = expected.clone();
+                    let metrics2 = self.metrics.clone();
                     let h = std::thread::Builder::new()
                         .name(format!("ingest-{name}-{p}"))
-                        .spawn(move || ingest_loop(topic2, p, rx, expected2))
+                        .spawn(move || ingest_loop(topic2, p, rx, expected2, metrics2))
                         .expect("spawn ingest thread");
                     self.ingest_threads.push(h);
                 }
@@ -558,6 +655,25 @@ impl Deployment {
                     }
                 }
             }
+        }
+
+        // --- pass 3.5: coordinator-restart resume -------------------------
+        // Committed checkpoints adopted from disk: group offsets are not
+        // persisted in the segments, so the checkpoint records are the
+        // source of truth — re-commit the offsets they cover and seed the
+        // instances with the restored state, all before anything consumes.
+        let mut resumed: HashMap<usize, Vec<Value>> = HashMap::new();
+        for (unit, zone, epoch) in std::mem::take(&mut self.resume_pending) {
+            let zs = self.collect_zone_state(unit, &zone, epoch, 0)?;
+            for (&stage, parts) in &zs.offsets {
+                if let Some(tr) = self.topics.get(&(stage, zone.clone())) {
+                    let group = format!("unit{unit}-{zone}");
+                    for (&p, &off) in parts {
+                        tr.topic.partition(p).commit(&group, off);
+                    }
+                }
+            }
+            resumed.extend(zs.restores);
         }
 
         // --- pass 4: spawn instance threads -------------------------------
@@ -617,6 +733,8 @@ impl Deployment {
                     poll_max: self.config.poll_max_records.max(1),
                     stop: unit_stop,
                     commit_each_drain: self.config.checkpoint_interval.is_none(),
+                    producers: tr.expected_producers.clone(),
+                    idle_timeout: self.config.idle_timeout,
                 }
             } else {
                 let rx = inst_rx.remove(&inst.id).ok_or_else(|| {
@@ -624,7 +742,8 @@ impl Deployment {
                 })?;
                 InputKind::Inbox(
                     Inbox::new(rx, *producer_count.get(&inst.id).unwrap_or(&0))
-                        .with_metrics(self.metrics.clone()),
+                        .with_metrics(self.metrics.clone())
+                        .with_idle_timeout(self.config.idle_timeout),
                 )
             };
 
@@ -692,7 +811,7 @@ impl Deployment {
                     let done = Arc::new(AtomicBool::new(false));
                     self.inst_done.insert(inst.id, done.clone());
                     Some(Handoff {
-                        state_topic: broker.topic(&unit_state_topic(stage.unit_index), 1)?,
+                        state_topic: state_topic(broker, stage.unit_index)?,
                         stage: inst.stage,
                         zone: inst.zone.clone(),
                         epoch: self.update_epoch.clone(),
@@ -713,7 +832,11 @@ impl Deployment {
                 outputs,
                 metrics,
                 handoff,
-                restore: restores.get(&inst.id).cloned().unwrap_or_default(),
+                restore: restores
+                    .get(&inst.id)
+                    .or_else(|| resumed.get(&inst.id))
+                    .cloned()
+                    .unwrap_or_default(),
             };
             let h = std::thread::Builder::new()
                 .name(format!("inst-{}-s{}-{}", inst.id, inst.stage, inst.host))
@@ -912,7 +1035,7 @@ impl Deployment {
         // state topic — remember it so restore scans skip older epochs'
         // records instead of re-decoding the whole history every update
         let scan_from = match &self.broker {
-            Some(broker) => broker.topic(&unit_state_topic(unit), 1)?.partition(0).len(),
+            Some(broker) => state_topic(broker, unit)?.partition(0).len(),
             None => 0,
         };
         let t0 = Instant::now();
@@ -1216,7 +1339,7 @@ impl Deployment {
             .as_ref()
             .ok_or_else(|| Error::Runtime("checkpoint without queue substrate".into()))?;
         let marker = state_record(-1, zone, epoch, Vec::new(), &[]);
-        let topic = broker.topic(&unit_state_topic(unit), 1)?;
+        let topic = state_topic(broker, unit)?;
         if topic.partition(0).append(&marker.encode()).is_err() {
             MetricsRegistry::add(&self.metrics.state_append_failures, 1);
             return Err(Error::Runtime(
@@ -1341,7 +1464,7 @@ impl Deployment {
             }
             let epoch = self.bump_epoch();
             let scan_from = match &self.broker {
-                Some(broker) => broker.topic(&unit_state_topic(unit), 1)?.partition(0).len(),
+                Some(broker) => state_topic(broker, unit)?.partition(0).len(),
                 None => 0,
             };
             for zone in zones {
@@ -1445,7 +1568,7 @@ impl Deployment {
             .broker
             .as_ref()
             .ok_or_else(|| Error::Runtime("update without queue substrate".into()))?;
-        let topic = broker.topic(&unit_state_topic(unit), 1)?;
+        let topic = state_topic(broker, unit)?;
         let part = topic.partition(0);
         let mut out: HashMap<usize, Vec<Value>> = HashMap::new();
         let mut offsets: BTreeMap<usize, BTreeMap<usize, usize>> = BTreeMap::new();
@@ -1791,22 +1914,45 @@ impl Deployment {
 /// (already the producer's cached encoding) become the log record
 /// directly, and a same-host batch re-uses its cached wire encoding —
 /// one encode per batch across the whole boundary.
-fn ingest_loop(topic: Arc<Topic>, partition: usize, rx: Receiver<Msg>, expected: Arc<AtomicUsize>) {
+fn ingest_loop(
+    topic: Arc<Topic>,
+    partition: usize,
+    rx: Receiver<Msg>,
+    expected: Arc<AtomicUsize>,
+    metrics: Metrics,
+) {
     let part = topic.partition(partition);
     let mut eos = 0usize;
+    // A refused append (backpressure deadline expired, or a closed
+    // partition during teardown) drops the batch at the boundary. That is
+    // the load-shedding contract — but it must never be silent, so every
+    // refusal is counted.
+    let count_refused = |r: crate::error::Result<()>| {
+        if r.is_err() {
+            MetricsRegistry::add(&metrics.records_shed, 1);
+        }
+    };
     loop {
         match rx.recv() {
             Ok(Msg::Frame(bytes)) => {
-                let _ = part.append_shared(bytes);
+                count_refused(part.append_shared(bytes));
             }
             Ok(Msg::Batch(batch)) => {
-                let _ = part.append_batch(&batch);
+                count_refused(part.append_batch(&batch));
             }
             Ok(Msg::Columns(cb)) => {
                 // decoupled edges deliver frames (OutPort encodes before a
                 // framed target), so this is defensive — the columnar wire
                 // bytes are the same row-format frame either way
-                let _ = part.append_shared(cb.wire());
+                count_refused(part.append_shared(cb.wire()));
+            }
+            Ok(Msg::Watermark(wm)) => {
+                // event-time sentinel: logged in-line with the data so
+                // consumers replay watermarks in order (and recovery
+                // re-reads them with the records they cover). Refusal
+                // under backpressure is safe to swallow — watermarks are
+                // promises, the next one supersedes this one.
+                let _ = part.append_shared(watermark_record(&wm));
             }
             Ok(Msg::Epoch(_)) => {
                 // a producer quiesced for a dynamic update; its replacement
@@ -1834,6 +1980,14 @@ fn ingest_loop(topic: Arc<Topic>, partition: usize, rx: Receiver<Msg>, expected:
 /// exchanged through.
 fn unit_state_topic(unit: usize) -> String {
     format!("fu-state-u{unit}")
+}
+
+/// Opens (or creates) a unit's state topic. Pinned to the default
+/// [`OverloadPolicy::Backpressure`] no matter what overload policy the
+/// job runs its data topics under: checkpoint and handoff records must
+/// never be shed, only slowed down.
+fn state_topic(broker: &Broker, unit: usize) -> Result<Arc<Topic>> {
+    broker.topic_with_policy(&unit_state_topic(unit), 1, OverloadPolicy::default())
 }
 
 /// Builds the fused executor chain for a stage from a job graph. Shared

@@ -100,6 +100,7 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::graph::{LogicalGraph, UnitDef};
     pub use crate::netsim::LinkSpec;
+    pub use crate::queue::{OverloadPolicy, ShedMode};
     pub use crate::topology::{Capabilities, ConstraintExpr, LayerId, LocationId, ZoneId};
     pub use crate::columnar::ColumnBatch;
     pub use crate::value::{Batch, BatchData, Value};

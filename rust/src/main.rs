@@ -49,7 +49,7 @@ fn print_help() {
          flowunits run  --pipeline {names} [--planner ...] [--events N] [--bw 100Mbit] [--lat 10ms] [--show-collected]\n  \
          flowunits fig3 [--events N]\n  \
          flowunits coordinator --listen <addr> [--workers N] [--pipeline {names}] [--events N]\n                        \
-         [--heartbeat-ms MS] [--checkpoint-ms MS] [--timeout-s S] [--show-collected]\n  \
+         [--heartbeat-ms MS] [--checkpoint-ms MS] [--timeout-s S] [--data-dir DIR] [--show-collected]\n  \
          flowunits worker --connect <addr> --id <worker-id> [--zone Z] [--hosts h1,h2] [--state-dir DIR]\n\n\
          Addresses containing '/' are Unix domain socket paths; anything else is host:port TCP.\n",
         names = pipelines::NAMES.join("|"),
@@ -182,11 +182,11 @@ fn cmd_coordinator(args: &[String]) -> flowunits::error::Result<()> {
     let listen = flag(args, "--listen").ok_or_else(|| {
         flowunits::error::Error::Transport("coordinator requires --listen <addr>".into())
     })?;
-    let workers: usize = flag(args, "--workers")
+    let mut workers: usize = flag(args, "--workers")
         .and_then(|s| s.parse().ok())
         .unwrap_or(2);
-    let pipeline = flag(args, "--pipeline").unwrap_or("wordcount");
-    let events: u64 = flag(args, "--events")
+    let mut pipeline = flag(args, "--pipeline").unwrap_or("wordcount").to_string();
+    let mut events: u64 = flag(args, "--events")
         .and_then(|s| s.parse().ok())
         .unwrap_or(60_000);
     let heartbeat = Duration::from_millis(
@@ -199,15 +199,30 @@ fn cmd_coordinator(args: &[String]) -> flowunits::error::Result<()> {
             .and_then(|s| s.parse().ok())
             .unwrap_or(60),
     );
-    let checkpoint = flag(args, "--checkpoint-ms")
+    let mut checkpoint = flag(args, "--checkpoint-ms")
         .and_then(|s| s.parse().ok())
         .filter(|&ms: &u64| ms > 0)
         .map(Duration::from_millis);
     let mut daemon =
         CoordinatorDaemon::start(Addr::parse(listen), heartbeat, MetricsRegistry::new())?;
+    if let Some(dir) = flag(args, "--data-dir") {
+        daemon.set_data_dir(dir);
+        // a manifest here means a previous coordinator died mid-job:
+        // resume that job (its parameters win over the flags)
+        if let Some(m) = daemon.pending_job() {
+            println!(
+                "resuming interrupted job from {dir}: pipeline={} events={} workers={}",
+                m.pipeline, m.events, m.workers
+            );
+            pipeline = m.pipeline;
+            events = m.events;
+            workers = m.workers;
+            checkpoint = (m.checkpoint_ms > 0).then(|| Duration::from_millis(m.checkpoint_ms));
+        }
+    }
     daemon.set_checkpoint_interval(checkpoint);
     println!("coordinator listening on {} — waiting for {workers} worker(s)", daemon.addr());
-    let outcome = daemon.run_job(pipeline, events, workers, timeout);
+    let outcome = daemon.run_job(&pipeline, events, workers, timeout);
     daemon.shutdown_workers();
     // give GOODBYEs a moment to land before tearing the listener down
     std::thread::sleep(Duration::from_millis(200));

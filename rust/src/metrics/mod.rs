@@ -108,6 +108,19 @@ pub struct MetricsRegistry {
     /// counted (per satellite hardening) instead of panicking the
     /// delivering thread.
     pub transport_errors: AtomicU64,
+    /// Records dropped by a broker overload policy (`Shed(DropOldest)` /
+    /// `Shed(Sample)`) — never silent: every shed record is counted here.
+    pub records_shed: AtomicU64,
+    /// Records re-read from a segment file because their in-memory bytes
+    /// had been evicted under the broker memory budget (spill path).
+    pub spill_reads: AtomicU64,
+    /// High-water gauge of broker-resident queue bytes (record bodies
+    /// held in memory across all partitions of a budgeted broker).
+    pub resident_bytes: AtomicU64,
+    /// Partial/CRC-failed *final* frames truncated from segment files
+    /// during recovery (the normal kill -9 artifact; mid-log corruption
+    /// still errors).
+    pub torn_tails_truncated: AtomicU64,
     /// Labelled counters (per-link bytes, per-operator events, ...).
     labelled: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
 }
@@ -253,6 +266,25 @@ impl MetricsRegistry {
         let te = self.transport_errors.load(Ordering::Relaxed);
         if te > 0 {
             s.push_str(&format!("transport errors : {te} (counted, not fatal)\n"));
+        }
+        let rs = self.records_shed.load(Ordering::Relaxed);
+        if rs > 0 {
+            s.push_str(&format!("records shed     : {rs} (overload policy)\n"));
+        }
+        let sr = self.spill_reads.load(Ordering::Relaxed);
+        if sr > 0 {
+            s.push_str(&format!("spill reads      : {sr}\n"));
+        }
+        let rb = self.resident_bytes.load(Ordering::Relaxed);
+        if rb > 0 {
+            s.push_str(&format!(
+                "resident bytes   : {} (high-water)\n",
+                crate::util::fmt_bytes(rb)
+            ));
+        }
+        let tt = self.torn_tails_truncated.load(Ordering::Relaxed);
+        if tt > 0 {
+            s.push_str(&format!("torn tails       : {tt} (truncated)\n"));
         }
         let xc = self.xla_calls.load(Ordering::Relaxed);
         if xc > 0 {

@@ -18,36 +18,354 @@
 //! * producers register with a topic; when all registered producers have
 //!   called [`Topic::producer_done`], the partitions are *closed* and
 //!   drained consumers observe end-of-stream.
+//!
+//! # Bounded memory and overload
+//!
+//! A broker opened with a memory budget ([`QueueBroker::durable_bounded`] /
+//! [`QueueBroker::in_memory_bounded`]) keeps total resident record bytes
+//! under the budget. Durable partitions keep a resident tail window
+//! ([`QueueBroker::set_resident_tail`]) and evict older payloads to their
+//! segment files — the log keeps only the record's byte position, and a
+//! poll of an evicted record transparently re-reads it (`spill_reads`
+//! metric). In-memory partitions cannot spill; they reclaim prefixes every
+//! consumer group has committed, and beyond that the topic's
+//! [`OverloadPolicy`] decides:
+//!
+//! * [`OverloadPolicy::Backpressure`] — the producer's `append` blocks
+//!   until memory frees up, failing with a queue error after the deadline.
+//!   Nothing is ever dropped; the slowdown propagates upstream.
+//! * [`OverloadPolicy::Shed`] — the oldest resident records are replaced
+//!   with tombstones (offset-stably, so commits never shift), counted in
+//!   the `records_shed` metric — shedding is never silent.
+//!
+//! The `resident_bytes` metric records the high-water mark of charged
+//! bytes; [`QueueBroker::resident_bytes`] reads the live gauge.
+//!
+//! # Crash tolerance
+//!
+//! Segment recovery truncates a torn tail — a partial final frame or a
+//! final frame whose CRC fails (the normal `kill -9` artifact) — back to
+//! the last valid frame boundary (`torn_tails_truncated` metric) so later
+//! appends land on a clean log; corruption *before* the final frame is an
+//! error. The segment I/O runs behind the [`SegmentFs`] trait so tests can
+//! inject faults ([`fault::FaultFs`]): short writes, ENOSPC at a chosen
+//! byte, failing truncates.
+//!
+//! Watermarks cross queue-decoupled boundaries as in-band sentinel records
+//! ([`watermark_record`] / [`decode_watermark`]) so event-time progress
+//! survives the same replay path as data.
 
+pub mod fault;
+
+use crate::channels::Watermark;
 use crate::error::{Error, Result};
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::value::Batch;
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
-use std::io::{Read, Write};
-use std::path::PathBuf;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
 
 /// A shared broker handle.
 pub type Broker = Arc<QueueBroker>;
 
+/// What a bounded broker does when a topic's appends would exceed the
+/// memory budget and nothing is left to spill or reclaim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Block the producer's `append` until memory frees up; fail with a
+    /// queue error once `deadline` has elapsed. Zero loss — the slowdown
+    /// propagates through ingest to the upstream producer.
+    Backpressure {
+        /// How long an append may block before it is refused.
+        deadline: Duration,
+    },
+    /// Drop resident records (offset-stable tombstones) to stay under the
+    /// budget, counted in the `records_shed` metric.
+    Shed(ShedMode),
+}
+
+/// Which records a shedding topic sacrifices under overload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedMode {
+    /// Tombstone the oldest resident records first.
+    DropOldest,
+    /// Tombstone every other record among the oldest, retaining a thinned
+    /// sample of the history.
+    Sample,
+}
+
+impl Default for OverloadPolicy {
+    fn default() -> Self {
+        OverloadPolicy::Backpressure {
+            deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Append/read/truncate interface of one segment file. Implemented by the
+/// real filesystem and by the [`fault`] shim for crash-injection tests.
+pub trait SegmentIo: Send {
+    /// Appends `buf` at the end of the segment. A failed append may leave
+    /// a partial frame behind — recovery truncates it.
+    fn append(&mut self, buf: &[u8]) -> io::Result<()>;
+    /// Reads exactly `out.len()` bytes starting at byte `pos`.
+    fn read_at(&self, pos: u64, out: &mut [u8]) -> io::Result<()>;
+    /// Truncates the segment to `len` bytes.
+    fn truncate(&mut self, len: u64) -> io::Result<()>;
+}
+
+/// Factory for segment files, keyed by path. The broker routes all segment
+/// I/O through this trait so tests can substitute [`fault::FaultFs`].
+pub trait SegmentFs: Send + Sync {
+    /// Returns the full contents of the segment at `path`, or `None` if it
+    /// does not exist (used once, for recovery on open).
+    fn read(&self, path: &Path) -> io::Result<Option<Vec<u8>>>;
+    /// Opens (creating if missing) the segment at `path` for appending.
+    fn open(&self, path: &Path) -> io::Result<Box<dyn SegmentIo>>;
+}
+
+/// The real filesystem: one append-mode file handle per segment,
+/// positional reads via `pread`.
+struct RealFs;
+
+struct RealSegment(File);
+
+impl SegmentFs for RealFs {
+    fn read(&self, path: &Path) -> io::Result<Option<Vec<u8>>> {
+        match File::open(path) {
+            Ok(mut f) => {
+                let mut buf = Vec::new();
+                f.read_to_end(&mut buf)?;
+                Ok(Some(buf))
+            }
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn open(&self, path: &Path) -> io::Result<Box<dyn SegmentIo>> {
+        let f = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .append(true)
+            .open(path)?;
+        Ok(Box::new(RealSegment(f)))
+    }
+}
+
+impl SegmentIo for RealSegment {
+    fn append(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.0.write_all(buf)
+    }
+
+    fn read_at(&self, pos: u64, out: &mut [u8]) -> io::Result<()> {
+        std::os::unix::fs::FileExt::read_exact_at(&self.0, out, pos)
+    }
+
+    fn truncate(&mut self, len: u64) -> io::Result<()> {
+        self.0.set_len(len)
+    }
+}
+
+/// One open segment: the I/O handle plus the byte offset of its end (where
+/// the next frame lands). `broken` latches on the first I/O error — the
+/// partition stops writing and keeps records resident instead of trusting
+/// a segment whose tail state is unknown.
+struct SegmentFile {
+    io: Box<dyn SegmentIo>,
+    end: u64,
+    broken: bool,
+}
+
+/// Default resident tail window per durable partition (records kept in
+/// memory even when over budget, so the hot path rarely touches disk).
+const DEFAULT_RESIDENT_TAIL: usize = 64;
+
+/// Per-broker memory accounting: total resident record bytes charged
+/// against a fixed limit, plus the machinery to get back under it
+/// (spilling durable partitions, reclaiming committed prefixes, shedding)
+/// and to park backpressured producers.
+struct Budget {
+    limit: u64,
+    resident: AtomicU64,
+    /// Records kept resident at the tail of each durable partition.
+    tail: AtomicUsize,
+    /// Every topic of the broker, for [`Budget::sweep`].
+    topics: Mutex<Vec<Weak<Topic>>>,
+    /// Parked backpressured producers; uncharges skip the lock + notify
+    /// when none are waiting.
+    waiters: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+    metrics: Option<Metrics>,
+}
+
+impl Budget {
+    fn new(limit: u64, metrics: Option<Metrics>) -> Budget {
+        Budget {
+            limit,
+            resident: AtomicU64::new(0),
+            tail: AtomicUsize::new(DEFAULT_RESIDENT_TAIL),
+            topics: Mutex::new(Vec::new()),
+            waiters: AtomicUsize::new(0),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            metrics,
+        }
+    }
+
+    fn register(&self, topic: &Arc<Topic>) {
+        self.topics.lock().unwrap().push(Arc::downgrade(topic));
+    }
+
+    /// Unconditional charge (shed-policy appends, recovery, compaction
+    /// re-materialization) — the caller follows up with a sweep.
+    fn charge(&self, n: u64) {
+        let cur = self.resident.fetch_add(n, Ordering::SeqCst) + n;
+        self.high_water(cur);
+    }
+
+    /// Charges `n` bytes only if it fits the limit. An oversize record is
+    /// admitted when nothing else is resident (`cur == 0`) — refusing it
+    /// forever would deadlock the producer on a budget it can never meet.
+    fn try_charge(&self, n: u64) -> bool {
+        let mut cur = self.resident.load(Ordering::SeqCst);
+        loop {
+            if cur + n > self.limit && cur != 0 {
+                return false;
+            }
+            match self
+                .resident
+                .compare_exchange(cur, cur + n, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => {
+                    self.high_water(cur + n);
+                    return true;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn uncharge(&self, n: u64) {
+        self.resident.fetch_sub(n, Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) != 0 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    fn excess(&self) -> u64 {
+        self.resident.load(Ordering::SeqCst).saturating_sub(self.limit)
+    }
+
+    fn high_water(&self, v: u64) {
+        if let Some(m) = &self.metrics {
+            MetricsRegistry::fetch_max(&m.resident_bytes, v);
+        }
+    }
+
+    /// Parks a backpressured producer. The wait is capped short by the
+    /// caller because commits (which free memory on in-memory partitions)
+    /// do not notify this condvar — the periodic re-sweep is load-bearing.
+    fn park(&self, d: Duration) {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        {
+            let g = self.lock.lock().unwrap();
+            let _ = self.cv.wait_timeout(g, d).unwrap();
+        }
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Gets resident bytes back under the limit, cheapest sacrifice first:
+    /// (1) evict durable payloads beyond each partition's resident tail
+    /// (re-readable from the segment), (2) reclaim in-memory prefixes every
+    /// group has committed (never re-read: polls resume at the commit),
+    /// (3) shed on topics that opted into it, (4) evict the durable tails
+    /// too. Callers must hold no partition locks.
+    fn sweep(&self) {
+        if self.excess() == 0 {
+            return;
+        }
+        let topics: Vec<Arc<Topic>> = {
+            let mut reg = self.topics.lock().unwrap();
+            reg.retain(|w| w.strong_count() > 0);
+            reg.iter().filter_map(|w| w.upgrade()).collect()
+        };
+        let tail = self.tail.load(Ordering::Relaxed);
+        for t in &topics {
+            for p in &t.partitions {
+                if !p.durable {
+                    continue;
+                }
+                p.spill(tail, self);
+                if self.excess() == 0 {
+                    return;
+                }
+            }
+        }
+        for t in &topics {
+            for p in &t.partitions {
+                if p.durable {
+                    continue;
+                }
+                p.reclaim_committed(self);
+                if self.excess() == 0 {
+                    return;
+                }
+            }
+        }
+        for t in &topics {
+            for p in &t.partitions {
+                if p.durable {
+                    continue;
+                }
+                if let OverloadPolicy::Shed(mode) = p.policy {
+                    p.shed(mode, self);
+                    if self.excess() == 0 {
+                        return;
+                    }
+                }
+            }
+        }
+        for t in &topics {
+            for p in &t.partitions {
+                if !p.durable {
+                    continue;
+                }
+                p.spill(0, self);
+                if self.excess() == 0 {
+                    return;
+                }
+            }
+        }
+    }
+}
+
 /// In-process queue broker managing all topics of a deployment.
 pub struct QueueBroker {
     dir: Option<PathBuf>,
+    fs: Arc<dyn SegmentFs>,
     topics: Mutex<BTreeMap<String, Arc<Topic>>>,
+    budget: Option<Arc<Budget>>,
+    default_policy: Mutex<OverloadPolicy>,
     metrics: Option<Metrics>,
 }
 
 impl QueueBroker {
-    /// Creates an in-memory broker (no durability).
+    /// Creates an in-memory broker (no durability, no memory bound).
     pub fn in_memory(metrics: Option<Metrics>) -> Broker {
-        Arc::new(QueueBroker {
-            dir: None,
-            topics: Mutex::new(BTreeMap::new()),
-            metrics,
-        })
+        Self::build(None, Arc::new(RealFs), None, metrics)
+    }
+
+    /// Creates an in-memory broker with a resident-byte budget; topics
+    /// over budget apply their [`OverloadPolicy`].
+    pub fn in_memory_bounded(budget_bytes: u64, metrics: Option<Metrics>) -> Broker {
+        Self::build(None, Arc::new(RealFs), Some(budget_bytes), metrics)
     }
 
     /// Creates (or reopens) a durable broker rooted at `dir`; existing
@@ -55,16 +373,68 @@ impl QueueBroker {
     pub fn durable(dir: impl Into<PathBuf>, metrics: Option<Metrics>) -> Result<Broker> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)?;
-        Ok(Arc::new(QueueBroker {
-            dir: Some(dir),
-            topics: Mutex::new(BTreeMap::new()),
-            metrics,
-        }))
+        Ok(Self::build(Some(dir), Arc::new(RealFs), None, metrics))
     }
 
-    /// Returns the topic, creating it with `partitions` partitions if new.
-    /// Reopening an existing topic ignores the partition hint.
+    /// Creates (or reopens) a durable broker with a resident-byte budget:
+    /// partitions keep a resident tail window and evict older payloads to
+    /// their segment files, re-reading them transparently on poll.
+    pub fn durable_bounded(
+        dir: impl Into<PathBuf>,
+        budget_bytes: u64,
+        metrics: Option<Metrics>,
+    ) -> Result<Broker> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Self::build(Some(dir), Arc::new(RealFs), Some(budget_bytes), metrics))
+    }
+
+    /// Creates a durable broker whose segment I/O runs through `fs`
+    /// (test-only entry point for [`fault::FaultFs`] crash injection; no
+    /// real directory is created).
+    pub fn durable_with_fs(
+        dir: impl Into<PathBuf>,
+        fs: Arc<dyn SegmentFs>,
+        budget_bytes: Option<u64>,
+        metrics: Option<Metrics>,
+    ) -> Broker {
+        Self::build(Some(dir.into()), fs, budget_bytes, metrics)
+    }
+
+    fn build(
+        dir: Option<PathBuf>,
+        fs: Arc<dyn SegmentFs>,
+        budget_bytes: Option<u64>,
+        metrics: Option<Metrics>,
+    ) -> Broker {
+        let budget = budget_bytes.map(|limit| Arc::new(Budget::new(limit, metrics.clone())));
+        Arc::new(QueueBroker {
+            dir,
+            fs,
+            topics: Mutex::new(BTreeMap::new()),
+            budget,
+            default_policy: Mutex::new(OverloadPolicy::default()),
+            metrics,
+        })
+    }
+
+    /// Returns the topic, creating it with `partitions` partitions and the
+    /// broker's default [`OverloadPolicy`] if new. Reopening an existing
+    /// topic ignores the partition hint.
     pub fn topic(&self, name: &str, partitions: usize) -> Result<Arc<Topic>> {
+        let policy = *self.default_policy.lock().unwrap();
+        self.topic_with_policy(name, partitions, policy)
+    }
+
+    /// Like [`Self::topic`] with an explicit overload policy for the new
+    /// topic (state topics pin `Backpressure` so checkpoints are never
+    /// shed). An already-open topic keeps its original policy.
+    pub fn topic_with_policy(
+        &self,
+        name: &str,
+        partitions: usize,
+        policy: OverloadPolicy,
+    ) -> Result<Arc<Topic>> {
         let mut topics = self.topics.lock().unwrap();
         if let Some(t) = topics.get(name) {
             return Ok(t.clone());
@@ -73,9 +443,21 @@ impl QueueBroker {
             name,
             partitions.max(1),
             self.dir.as_deref(),
+            &self.fs,
+            self.budget.clone(),
+            policy,
             self.metrics.clone(),
         )?);
         topics.insert(name.to_string(), topic.clone());
+        if let Some(b) = &self.budget {
+            b.register(&topic);
+            drop(topics);
+            if b.excess() > 0 {
+                // recovery charged the recovered records; evict back under
+                // the budget before handing the topic out
+                b.sweep();
+            }
+        }
         Ok(topic)
     }
 
@@ -83,6 +465,68 @@ impl QueueBroker {
     pub fn topic_names(&self) -> Vec<String> {
         self.topics.lock().unwrap().keys().cloned().collect()
     }
+
+    /// Sets the [`OverloadPolicy`] applied to topics created afterwards.
+    pub fn set_default_policy(&self, policy: OverloadPolicy) {
+        *self.default_policy.lock().unwrap() = policy;
+    }
+
+    /// Sets how many records each durable partition keeps resident at its
+    /// tail when the broker is over budget (default 64).
+    pub fn set_resident_tail(&self, records: usize) {
+        if let Some(b) = &self.budget {
+            b.tail.store(records, Ordering::Relaxed);
+        }
+    }
+
+    /// The data directory of a durable broker.
+    pub fn data_dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Live gauge of resident record bytes (0 for unbounded brokers, which
+    /// do not account).
+    pub fn resident_bytes(&self) -> u64 {
+        self.budget
+            .as_ref()
+            .map(|b| b.resident.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+
+    /// The configured memory budget, if any.
+    pub fn memory_budget(&self) -> Option<u64> {
+        self.budget.as_ref().map(|b| b.limit)
+    }
+}
+
+/// Tag prefix of an in-band watermark sentinel record.
+const WM_TAG: [u8; 4] = *b"FUWM";
+
+/// Encodes a watermark as a 24-byte sentinel record for in-band transport
+/// through a queue topic: `"FUWM"` tag, producer id, event-time watermark,
+/// origin wall-clock. The tag cannot collide with batch wire (a batch
+/// starting with byte `0x46` would declare 70 values, which cannot encode
+/// in 24 bytes), and consumers check sentinels before batch decode anyway.
+pub fn watermark_record(wm: &Watermark) -> Arc<[u8]> {
+    let mut b = Vec::with_capacity(24);
+    b.extend_from_slice(&WM_TAG);
+    b.extend_from_slice(&wm.from.to_le_bytes());
+    b.extend_from_slice(&wm.ts.to_le_bytes());
+    b.extend_from_slice(&wm.origin_ms.to_le_bytes());
+    Arc::from(b.as_slice())
+}
+
+/// Decodes a record produced by [`watermark_record`]; `None` for anything
+/// else (data batches, tombstones).
+pub fn decode_watermark(rec: &[u8]) -> Option<Watermark> {
+    if rec.len() != 24 || rec[..4] != WM_TAG {
+        return None;
+    }
+    Some(Watermark {
+        from: u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+        ts: i64::from_le_bytes(rec[8..16].try_into().unwrap()),
+        origin_ms: u64::from_le_bytes(rec[16..24].try_into().unwrap()),
+    })
 }
 
 /// Topic-level wait-set: one `Condvar` every consumer of the topic parks
@@ -146,14 +590,25 @@ impl Topic {
     fn open(
         name: &str,
         partitions: usize,
-        dir: Option<&std::path::Path>,
+        dir: Option<&Path>,
+        fs: &Arc<dyn SegmentFs>,
+        budget: Option<Arc<Budget>>,
+        policy: OverloadPolicy,
         metrics: Option<Metrics>,
     ) -> Result<Topic> {
         let notify = Arc::new(WaitSet::default());
         let mut parts = Vec::with_capacity(partitions);
         for p in 0..partitions {
             let path = dir.map(|d| d.join(format!("{name}-{p}.log")));
-            parts.push(Partition::open(path, notify.clone(), metrics.clone())?);
+            parts.push(Partition::open(
+                path,
+                fs,
+                notify.clone(),
+                budget.clone(),
+                policy,
+                format!("{name}[{p}]"),
+                metrics.clone(),
+            )?);
         }
         Ok(Topic {
             name: name.to_string(),
@@ -222,7 +677,7 @@ impl Topic {
         // a zero cap would drain zero-record slices forever; one record
         // per partition per wakeup is the useful floor
         let max_per_partition = max_per_partition.max(1);
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = Instant::now() + timeout;
         let mut waited = false;
         loop {
             // the sequence read precedes the scan: an append that the scan
@@ -237,7 +692,7 @@ impl Topic {
                 let st = part.state.lock().unwrap();
                 if offsets[slot] < st.records.len() {
                     let end = (offsets[slot] + max_per_partition).min(st.records.len());
-                    let recs: Vec<Arc<[u8]>> = st.records[offsets[slot]..end].to_vec();
+                    let recs = part.fetch_range(&st, offsets[slot], end);
                     if let Some(m) = &self.metrics {
                         MetricsRegistry::add(&m.queue_reads, recs.len() as u64);
                     }
@@ -266,7 +721,7 @@ impl Topic {
                 // observe stop flags after any wakeup
                 return Some(Vec::new());
             }
-            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 if let Some(m) = &self.metrics {
                     MetricsRegistry::add(&m.queue_wait_timeouts, 1);
@@ -340,80 +795,194 @@ impl Topic {
     }
 }
 
+/// Sentinel "no segment position" for records not (yet) durably framed.
+const NO_POS: u64 = u64::MAX;
+
+/// One log slot. Resident records hold their payload; evicted records hold
+/// only the byte position of their frame in the segment file (`pos` points
+/// at the frame header; the body starts 8 bytes in). Tombstones are
+/// zero-length and always "resident" (the shared empty body).
+struct Rec {
+    data: Option<Arc<[u8]>>,
+    pos: u64,
+    len: u32,
+}
+
+impl Rec {
+    fn resident(data: Arc<[u8]>) -> Rec {
+        let len = data.len() as u32;
+        Rec {
+            data: Some(data),
+            pos: NO_POS,
+            len,
+        }
+    }
+
+    fn tomb() -> Rec {
+        Rec {
+            data: Some(empty_body()),
+            pos: NO_POS,
+            len: 0,
+        }
+    }
+
+    fn is_tombstone(&self) -> bool {
+        self.len == 0
+    }
+}
+
+fn empty_body() -> Arc<[u8]> {
+    static EMPTY: OnceLock<Arc<[u8]>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::from(&[][..])).clone()
+}
+
 struct PartState {
-    records: Vec<Arc<[u8]>>,
+    records: Vec<Rec>,
     committed: BTreeMap<String, usize>,
     closed: bool,
+    /// Sweep cursor: records below this index have been considered by
+    /// spill/shed and are skipped on later sweeps (amortizing sweeps to
+    /// O(1) per record over the partition's lifetime). Spill stalls it at
+    /// an in-flight durable write so nothing stays resident by accident;
+    /// compaction resets it (re-materialized survivors are resident again).
+    swept_to: usize,
+    /// Reclaim cursor: everything below is already tombstoned by
+    /// [`Partition::reclaim_committed`].
+    reclaimed_to: usize,
 }
 
 /// One append-only partition log.
 pub struct Partition {
     state: Mutex<PartState>,
     cv: Condvar,
-    file: Mutex<Option<File>>,
+    file: Mutex<Option<SegmentFile>>,
     /// Topic-level wait-set bumped on every append/close so
     /// [`Topic::poll_many`] consumers wake without per-partition polling.
     notify: Arc<WaitSet>,
+    budget: Option<Arc<Budget>>,
+    policy: OverloadPolicy,
+    durable: bool,
+    /// `topic[partition]`, for error messages.
+    label: String,
     metrics: Option<Metrics>,
 }
 
 impl Partition {
     fn open(
         path: Option<PathBuf>,
+        fs: &Arc<dyn SegmentFs>,
         notify: Arc<WaitSet>,
+        budget: Option<Arc<Budget>>,
+        policy: OverloadPolicy,
+        label: String,
         metrics: Option<Metrics>,
     ) -> Result<Partition> {
         let mut records = Vec::new();
+        let mut recovered_bytes = 0u64;
         let file = match path {
             None => None,
             Some(p) => {
-                if p.exists() {
-                    records = Self::recover(&p)?;
+                let existing = fs.read(&p)?;
+                let mut seg_io = fs.open(&p)?;
+                let mut end = 0u64;
+                if let Some(buf) = existing {
+                    let parsed = parse_segment(&buf).map_err(|pos| {
+                        Error::Queue(format!("corrupt record at byte {pos} of {}", p.display()))
+                    })?;
+                    if parsed.torn {
+                        // cut the partial final frame off *the file*, not
+                        // just the parse: later appends must land on a
+                        // valid frame boundary or the log becomes
+                        // unrecoverable mid-log corruption
+                        seg_io.truncate(parsed.valid_end)?;
+                        if let Some(m) = &metrics {
+                            MetricsRegistry::add(&m.torn_tails_truncated, 1);
+                        }
+                    }
+                    end = parsed.valid_end;
+                    for (body, pos) in parsed.frames {
+                        recovered_bytes += body.len() as u64;
+                        let len = body.len() as u32;
+                        records.push(Rec {
+                            data: Some(body),
+                            pos,
+                            len,
+                        });
+                    }
                 }
-                Some(OpenOptions::new().create(true).append(true).open(&p)?)
+                Some(SegmentFile {
+                    io: seg_io,
+                    end,
+                    broken: false,
+                })
             }
         };
+        if recovered_bytes > 0 {
+            if let Some(b) = &budget {
+                // charged unconditionally; the broker sweeps right after
+                // topic open to evict back under the limit
+                b.charge(recovered_bytes);
+            }
+        }
+        let durable = file.is_some();
         Ok(Partition {
             state: Mutex::new(PartState {
                 records,
                 committed: BTreeMap::new(),
                 closed: false,
+                swept_to: 0,
+                reclaimed_to: 0,
             }),
             cv: Condvar::new(),
             file: Mutex::new(file),
             notify,
+            budget,
+            policy,
+            durable,
+            label,
             metrics,
         })
     }
 
-    /// Replays a segment file, verifying length framing and CRC32. A
-    /// truncated tail (torn write) is tolerated and dropped; a corrupt CRC
-    /// mid-log is an error.
-    fn recover(path: &std::path::Path) -> Result<Vec<Arc<[u8]>>> {
-        let mut buf = Vec::new();
-        File::open(path)?.read_to_end(&mut buf)?;
-        let mut records = Vec::new();
-        let mut pos = 0usize;
-        while pos < buf.len() {
-            if pos + 8 > buf.len() {
-                break; // torn header
-            }
-            let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
-            let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
-            if pos + 8 + len > buf.len() {
-                break; // torn body
-            }
-            let body = &buf[pos + 8..pos + 8 + len];
-            if crc32(body) != crc {
-                return Err(Error::Queue(format!(
-                    "corrupt record at byte {pos} of {}",
-                    path.display()
-                )));
-            }
-            records.push(Arc::from(body));
-            pos += 8 + len;
+    /// Admits `n` bytes against the broker budget per the partition's
+    /// policy, before the record enters the log. Shed charges
+    /// unconditionally (the post-append sweep evicts); backpressure blocks
+    /// until the charge fits or the deadline passes.
+    fn admit(&self, n: u64) -> Result<()> {
+        let Some(b) = &self.budget else {
+            return Ok(());
+        };
+        if n == 0 {
+            return Ok(());
         }
-        Ok(records)
+        match self.policy {
+            OverloadPolicy::Shed(_) => {
+                b.charge(n);
+                Ok(())
+            }
+            OverloadPolicy::Backpressure { deadline } => {
+                if b.try_charge(n) {
+                    return Ok(());
+                }
+                let dl = Instant::now() + deadline;
+                loop {
+                    b.sweep();
+                    if b.try_charge(n) {
+                        return Ok(());
+                    }
+                    let remaining = dl.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        return Err(Error::Queue(format!(
+                            "backpressure: append of {n} bytes to {} refused after {:?} (budget {} bytes)",
+                            self.label, deadline, b.limit
+                        )));
+                    }
+                    // capped park: commits that free memory don't notify
+                    // the budget condvar, so re-sweep periodically
+                    b.park(remaining.min(Duration::from_millis(50)));
+                }
+            }
+        }
     }
 
     /// Appends one record (durable if the partition is file-backed).
@@ -445,38 +1014,235 @@ impl Partition {
     /// durable write itself happens *outside* the state lock, so pollers
     /// and committers never block behind disk I/O. The file guard is
     /// acquired before the state lock is released, keeping segment order
-    /// aligned with log order.
+    /// aligned with log order. On a bounded broker the record's bytes are
+    /// admitted against the budget first (see [`OverloadPolicy`]).
     pub fn append_shared(&self, record: Arc<[u8]>) -> Result<()> {
-        let mut file = {
+        let n = record.len() as u64;
+        self.admit(n)?;
+        let (idx, mut file) = {
             let mut st = self.state.lock().unwrap();
             if st.closed {
+                if let Some(b) = &self.budget {
+                    b.uncharge(n);
+                }
                 return Err(Error::Queue("append to closed partition".into()));
             }
             let file = self.file.lock().unwrap();
-            st.records.push(record.clone());
+            st.records.push(Rec::resident(record.clone()));
+            let idx = st.records.len() - 1;
             if let Some(m) = &self.metrics {
                 MetricsRegistry::add(&m.queue_appends, 1);
             }
             self.cv.notify_all();
-            file
+            (idx, file)
         };
         // wake topic-level wait-set consumers (outside the state lock;
         // before the durable write, matching the partition condvar's
         // visibility: the in-memory record is already readable)
         self.notify.bump();
-        if let Some(f) = file.as_mut() {
-            let mut framed = Vec::with_capacity(8 + record.len());
-            framed.extend_from_slice(&(record.len() as u32).to_le_bytes());
-            framed.extend_from_slice(&crc32(&record).to_le_bytes());
-            framed.extend_from_slice(&record);
-            f.write_all(&framed)?;
+        let mut wrote_at = NO_POS;
+        let mut write_err = None;
+        if let Some(seg) = file.as_mut() {
+            if !seg.broken {
+                let mut framed = Vec::with_capacity(8 + record.len());
+                framed.extend_from_slice(&(record.len() as u32).to_le_bytes());
+                framed.extend_from_slice(&crc32(&record).to_le_bytes());
+                framed.extend_from_slice(&record);
+                match seg.io.append(&framed) {
+                    Ok(()) => {
+                        wrote_at = seg.end;
+                        seg.end += framed.len() as u64;
+                    }
+                    Err(e) => {
+                        // the segment tail may hold a torn frame now; stop
+                        // trusting it — records stay resident-only and
+                        // recovery truncates whatever prefix reached disk
+                        seg.broken = true;
+                        write_err = Some(e);
+                    }
+                }
+            }
+        }
+        drop(file);
+        if let Some(e) = write_err {
+            return Err(Error::Queue(format!(
+                "segment append to {} failed: {e}",
+                self.label
+            )));
+        }
+        if wrote_at != NO_POS {
+            let mut st = self.state.lock().unwrap();
+            if let Some(r) = st.records.get_mut(idx) {
+                // a compaction racing between our write and this re-lock
+                // rewrote the segment and owns the position (or tombstoned
+                // the record); its coordinates win
+                if r.pos == NO_POS && !r.is_tombstone() {
+                    r.pos = wrote_at;
+                }
+            }
+        }
+        if let Some(b) = &self.budget {
+            if b.excess() > 0 {
+                b.sweep();
+            }
         }
         Ok(())
     }
 
+    /// Resolves `records[from..to]` to payload buffers under the caller's
+    /// state lock, re-reading evicted records from the segment file
+    /// (`spill_reads` metric). An unreadable evicted record degrades to an
+    /// empty body and counts in `corrupt_records` — the log stays
+    /// offset-stable either way.
+    fn fetch_range(&self, st: &PartState, from: usize, to: usize) -> Vec<Arc<[u8]>> {
+        let mut out = Vec::with_capacity(to.saturating_sub(from));
+        let mut file = None;
+        for rec in &st.records[from..to] {
+            if let Some(d) = &rec.data {
+                out.push(d.clone());
+                continue;
+            }
+            let guard = file.get_or_insert_with(|| self.file.lock().unwrap());
+            let body = match guard.as_ref() {
+                Some(seg) if rec.pos != NO_POS => {
+                    let mut buf = vec![0u8; rec.len as usize];
+                    match seg.io.read_at(rec.pos + 8, &mut buf) {
+                        Ok(()) => {
+                            if let Some(m) = &self.metrics {
+                                MetricsRegistry::add(&m.spill_reads, 1);
+                            }
+                            Arc::from(buf.as_slice())
+                        }
+                        Err(_) => {
+                            if let Some(m) = &self.metrics {
+                                MetricsRegistry::add(&m.corrupt_records, 1);
+                            }
+                            empty_body()
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(m) = &self.metrics {
+                        MetricsRegistry::add(&m.corrupt_records, 1);
+                    }
+                    empty_body()
+                }
+            };
+            out.push(body);
+        }
+        out
+    }
+
+    /// Evicts resident payloads to the segment file, keeping the newest
+    /// `keep_tail` records resident. Only durably-framed records (position
+    /// known) are evicted; an in-flight durable write stalls the sweep
+    /// cursor so the record is revisited once its position lands.
+    fn spill(&self, keep_tail: usize, budget: &Budget) {
+        let mut freed = 0u64;
+        {
+            let mut st = self.state.lock().unwrap();
+            let stop = st.records.len().saturating_sub(keep_tail);
+            let start = st.swept_to.min(stop);
+            let mut next = st.swept_to;
+            let mut blocked = false;
+            for (i, rec) in st.records.iter_mut().enumerate().take(stop).skip(start) {
+                let evictable = rec.data.is_some() && !rec.is_tombstone();
+                if evictable && rec.pos == NO_POS {
+                    blocked = true;
+                } else if evictable {
+                    rec.data = None;
+                    freed += rec.len as u64;
+                }
+                if !blocked {
+                    next = i + 1;
+                }
+            }
+            st.swept_to = st.swept_to.max(next);
+        }
+        if freed > 0 {
+            budget.uncharge(freed);
+        }
+    }
+
+    /// Tombstones the prefix every consumer group has committed (in-memory
+    /// partitions only — these records are never polled again: every
+    /// group's reads resume at or past its commit). Not counted as shed;
+    /// nothing observable is lost.
+    fn reclaim_committed(&self, budget: &Budget) {
+        let mut freed = 0u64;
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.committed.is_empty() {
+                return;
+            }
+            let min = st.committed.values().copied().min().unwrap_or(0);
+            let end = min.min(st.records.len());
+            let start = st.reclaimed_to.min(end);
+            for rec in st.records.iter_mut().take(end).skip(start) {
+                if !rec.is_tombstone() {
+                    if rec.data.is_some() {
+                        freed += rec.len as u64;
+                    }
+                    *rec = Rec::tomb();
+                }
+            }
+            st.reclaimed_to = st.reclaimed_to.max(end);
+        }
+        if freed > 0 {
+            budget.uncharge(freed);
+        }
+    }
+
+    /// Sheds resident records under overload per `mode`, oldest first,
+    /// until the broker is back under budget. Offset-stable: shed records
+    /// become tombstones, so commits and poll offsets never shift. Every
+    /// dropped record counts in `records_shed`.
+    fn shed(&self, mode: ShedMode, budget: &Budget) {
+        let target = budget.excess();
+        if target == 0 {
+            return;
+        }
+        let mut freed = 0u64;
+        let mut count = 0u64;
+        {
+            let mut st = self.state.lock().unwrap();
+            let start = st.swept_to;
+            let mut keep = false;
+            let mut next = start;
+            for (i, rec) in st.records.iter_mut().enumerate().skip(start) {
+                if freed >= target {
+                    break;
+                }
+                next = i + 1;
+                if rec.is_tombstone() || rec.data.is_none() {
+                    continue;
+                }
+                if matches!(mode, ShedMode::Sample) {
+                    keep = !keep;
+                    if keep {
+                        continue; // sampled in: retained for good
+                    }
+                }
+                freed += rec.len as u64;
+                count += 1;
+                *rec = Rec::tomb();
+            }
+            st.swept_to = st.swept_to.max(next);
+        }
+        if freed > 0 {
+            budget.uncharge(freed);
+        }
+        if count > 0 {
+            if let Some(m) = &self.metrics {
+                MetricsRegistry::add(&m.records_shed, count);
+            }
+        }
+    }
+
     /// Polls up to `max` records starting at `offset`, blocking up to
     /// `timeout` for new data. Returns the records and the next offset;
-    /// `None` means the partition is closed *and* fully consumed.
+    /// `None` means the partition is closed *and* fully consumed. Evicted
+    /// records are transparently re-read from the segment file.
     pub fn poll(
         &self,
         offset: usize,
@@ -484,11 +1250,11 @@ impl Partition {
         timeout: Duration,
     ) -> Option<(Vec<Arc<[u8]>>, usize)> {
         let mut st = self.state.lock().unwrap();
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = Instant::now() + timeout;
         loop {
             if offset < st.records.len() {
                 let end = (offset + max).min(st.records.len());
-                let recs: Vec<Arc<[u8]>> = st.records[offset..end].to_vec();
+                let recs = self.fetch_range(&st, offset, end);
                 if let Some(m) = &self.metrics {
                     MetricsRegistry::add(&m.queue_reads, recs.len() as u64);
                 }
@@ -497,7 +1263,7 @@ impl Partition {
             if st.closed {
                 return None;
             }
-            let now = std::time::Instant::now();
+            let now = Instant::now();
             // saturating: a condvar wake-up (or a zero timeout) can land
             // after the deadline, and `deadline - now` would panic on the
             // Duration underflow
@@ -518,21 +1284,27 @@ impl Partition {
     /// payloads must skip empty records. Returns how many records were
     /// tombstoned for the first time (repeat calls are idempotent).
     ///
-    /// File-backed partitions rewrite their segment under the file guard
-    /// (acquired before the state lock is released, like appends, so
-    /// segment order stays aligned with log order): tombstones persist as
-    /// zero-length frames and recovery reproduces them at the same
-    /// indices, so the reclaimed space is durable too.
+    /// File-backed partitions rewrite their segment under both guards
+    /// (state, then file — the same order as appends): evicted survivors
+    /// are re-materialized first so every body is resident before the old
+    /// segment bytes are discarded, then the segment is truncated and
+    /// every record re-framed at its new position. If the rewrite itself
+    /// fails, the segment is marked broken and every record stays resident
+    /// — nothing is lost, durability degrades to memory-only.
     pub fn compact_before(&self, before: usize) -> usize {
-        let tombstone: Arc<[u8]> = Arc::from(&[][..]);
         let mut st = self.state.lock().unwrap();
         let end = before.min(st.records.len());
         let mut n = 0usize;
+        let mut freed = 0u64;
         for r in &mut st.records[..end] {
-            if !r.is_empty() {
-                *r = tombstone.clone();
-                n += 1;
+            if r.is_tombstone() {
+                continue;
             }
+            if r.data.is_some() {
+                freed += r.len as u64;
+            }
+            *r = Rec::tomb();
+            n += 1;
         }
         if n == 0 {
             return 0;
@@ -540,17 +1312,67 @@ impl Partition {
         if let Some(m) = &self.metrics {
             MetricsRegistry::add(&m.state_compactions, n as u64);
         }
-        let mut file = self.file.lock().unwrap();
-        let snapshot = file.as_ref().map(|_| st.records.clone());
-        drop(st); // disk I/O happens outside the state lock, like appends
-        if let (Some(f), Some(records)) = (file.as_mut(), snapshot) {
-            let _ = f.set_len(0);
-            for r in &records {
-                let mut framed = Vec::with_capacity(8 + r.len());
-                framed.extend_from_slice(&(r.len() as u32).to_le_bytes());
-                framed.extend_from_slice(&crc32(r).to_le_bytes());
-                framed.extend_from_slice(r);
-                let _ = f.write_all(&framed);
+        let mut recharged = 0u64;
+        if self.durable {
+            let mut file = self.file.lock().unwrap();
+            if let Some(seg) = file.as_mut() {
+                for r in st.records.iter_mut() {
+                    if r.data.is_some() {
+                        continue;
+                    }
+                    let mut buf = vec![0u8; r.len as usize];
+                    match seg.io.read_at(r.pos + 8, &mut buf) {
+                        Ok(()) => {
+                            r.data = Some(Arc::from(buf.as_slice()));
+                            recharged += r.len as u64;
+                        }
+                        Err(_) => {
+                            // unreadable evicted record: degrade to a
+                            // tombstone, keeping the log offset-stable
+                            if let Some(m) = &self.metrics {
+                                MetricsRegistry::add(&m.corrupt_records, 1);
+                            }
+                            *r = Rec::tomb();
+                        }
+                    }
+                }
+                let mut ok = seg.io.truncate(0).is_ok();
+                seg.end = 0;
+                if ok {
+                    for r in st.records.iter_mut() {
+                        let body: &[u8] = r.data.as_deref().unwrap_or(&[]);
+                        let mut framed = Vec::with_capacity(8 + body.len());
+                        framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                        framed.extend_from_slice(&crc32(body).to_le_bytes());
+                        framed.extend_from_slice(body);
+                        if seg.io.append(&framed).is_err() {
+                            ok = false;
+                            break;
+                        }
+                        r.pos = seg.end;
+                        seg.end += framed.len() as u64;
+                    }
+                }
+                if !ok {
+                    seg.broken = true;
+                    for r in st.records.iter_mut() {
+                        r.pos = NO_POS;
+                    }
+                }
+                // survivors are resident again; let the next sweep re-evict
+                st.swept_to = 0;
+            }
+        }
+        drop(st);
+        if let Some(b) = &self.budget {
+            if freed > 0 {
+                b.uncharge(freed);
+            }
+            if recharged > 0 {
+                b.charge(recharged);
+            }
+            if b.excess() > 0 {
+                b.sweep();
             }
         }
         n
@@ -612,6 +1434,49 @@ impl Partition {
     }
 }
 
+/// A fully-parsed segment: frame bodies with their byte positions, the
+/// offset of the last valid frame boundary, and whether a torn tail
+/// (partial or CRC-failed final frame) was cut off at that boundary.
+struct ParsedSegment {
+    frames: Vec<(Arc<[u8]>, u64)>,
+    valid_end: u64,
+    torn: bool,
+}
+
+/// Parses segment bytes. A torn tail — truncated header, truncated body,
+/// or a CRC failure on the *final* frame (all normal kill-mid-write
+/// artifacts) — ends the parse at the last valid boundary with
+/// `torn = true`. A CRC failure before the final frame is real corruption:
+/// `Err(byte_offset)`.
+fn parse_segment(buf: &[u8]) -> std::result::Result<ParsedSegment, usize> {
+    let mut frames = Vec::new();
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        if pos + 8 > buf.len() {
+            break; // torn header
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        if pos + 8 + len > buf.len() {
+            break; // torn body
+        }
+        let body = &buf[pos + 8..pos + 8 + len];
+        if crc32(body) != crc {
+            if pos + 8 + len == buf.len() {
+                break; // torn final frame (partially-flushed bytes)
+            }
+            return Err(pos); // mid-log corruption
+        }
+        frames.push((Arc::from(body), pos as u64));
+        pos += 8 + len;
+    }
+    Ok(ParsedSegment {
+        frames,
+        valid_end: pos as u64,
+        torn: (pos as u64) < buf.len() as u64,
+    })
+}
+
 /// CRC32 (IEEE, bitwise; cold path only — recovery and appends are
 /// per-record, and records are batched).
 pub fn crc32(data: &[u8]) -> u32 {
@@ -627,415 +1492,4 @@ pub fn crc32(data: &[u8]) -> u32 {
 }
 
 #[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn crc32_known_vector() {
-        // IEEE CRC32 of "123456789" is 0xCBF43926.
-        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
-    }
-
-    #[test]
-    fn append_poll_roundtrip() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 2).unwrap();
-        t.register_producer();
-        for i in 0..10u64 {
-            t.append(i, &i.to_le_bytes()).unwrap();
-        }
-        t.producer_done();
-        let mut seen = Vec::new();
-        for p in 0..2 {
-            let mut off = 0;
-            while let Some((recs, next)) = t.partition(p).poll(off, 4, Duration::from_millis(10)) {
-                for r in &recs {
-                    seen.push(u64::from_le_bytes(r.as_ref().try_into().unwrap()));
-                }
-                off = next;
-                if recs.is_empty() {
-                    break;
-                }
-            }
-        }
-        seen.sort_unstable();
-        assert_eq!(seen, (0..10).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn append_batch_shares_the_encoded_buffer() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 1).unwrap();
-        t.register_producer();
-        let batch = Batch::new(vec![crate::value::Value::I64(42)]);
-        t.append_batch(0, &batch).unwrap();
-        t.producer_done();
-        let (recs, _) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
-        assert_eq!(recs.len(), 1);
-        let wire = batch.wire_cached().expect("append populated the cache");
-        assert!(
-            Arc::ptr_eq(&recs[0], &wire),
-            "the log holds the producer's buffer, not a copy"
-        );
-        assert_eq!(Batch::from_wire(recs[0].clone()).unwrap(), batch);
-    }
-
-    #[test]
-    fn key_hash_partitions_consistently() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 4).unwrap();
-        t.register_producer();
-        t.append(13, b"a").unwrap();
-        t.append(13, b"b").unwrap();
-        t.producer_done();
-        let p = (13 % 4) as usize;
-        assert_eq!(t.partition(p).len(), 2);
-    }
-
-    #[test]
-    fn poll_blocks_until_append() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 1).unwrap();
-        t.register_producer();
-        let t2 = t.clone();
-        let h = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(30));
-            t2.append(0, b"late").unwrap();
-        });
-        let (recs, next) = t
-            .partition(0)
-            .poll(0, 10, Duration::from_secs(2))
-            .expect("open partition");
-        assert_eq!(recs.len(), 1);
-        assert_eq!(next, 1);
-        h.join().unwrap();
-    }
-
-    #[test]
-    fn poll_with_zero_or_elapsed_timeout_never_panics() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 1).unwrap();
-        t.register_producer();
-        // zero timeout on an open, empty partition: immediate timed-out
-        // return (regression: the deadline math used to underflow)
-        let r = t.partition(0).poll(0, 10, Duration::ZERO);
-        assert!(matches!(r, Some((v, 0)) if v.is_empty()));
-        let r = t.partition(0).poll(0, 10, Duration::from_nanos(1));
-        assert!(matches!(r, Some((v, 0)) if v.is_empty()));
-        // with data present, a zero timeout still returns the records
-        t.append(0, b"x").unwrap();
-        let r = t.partition(0).poll(0, 10, Duration::ZERO).unwrap();
-        assert_eq!(r.0.len(), 1);
-    }
-
-    #[test]
-    fn poll_many_drains_ready_partitions_and_ends_when_all_closed() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 4).unwrap();
-        t.register_producer();
-        t.append(0, b"a").unwrap();
-        t.append(2, b"c").unwrap();
-        let parts: Vec<usize> = (0..4).collect();
-        let mut offsets = vec![0; 4];
-        let drained = t
-            .poll_many(&parts, &mut offsets, 16, Duration::from_millis(10))
-            .unwrap();
-        let slots: Vec<usize> = drained.iter().map(|(s, _)| *s).collect();
-        assert_eq!(slots, vec![0, 2], "one wakeup drains every ready partition");
-        assert_eq!(offsets, vec![1, 0, 1, 0]);
-        // timeout with every partition still open: empty drain, not EOS
-        let r = t
-            .poll_many(&parts, &mut offsets, 16, Duration::from_millis(5))
-            .unwrap();
-        assert!(r.is_empty());
-        t.producer_done(); // closes all partitions
-        assert!(t
-            .poll_many(&parts, &mut offsets, 16, Duration::from_millis(10))
-            .is_none());
-    }
-
-    #[test]
-    fn poll_many_wakes_on_single_append_across_many_partitions() {
-        let m = crate::metrics::MetricsRegistry::new();
-        let broker = QueueBroker::in_memory(Some(m.clone()));
-        let t = broker.topic("t", 16).unwrap();
-        t.register_producer();
-        let t2 = t.clone();
-        let h = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(150));
-            t2.append(11, b"late").unwrap();
-        });
-        let parts: Vec<usize> = (0..16).collect();
-        let mut offsets = vec![0; 16];
-        let t0 = std::time::Instant::now();
-        let drained = loop {
-            let d = t
-                .poll_many(&parts, &mut offsets, 16, Duration::from_secs(30))
-                .unwrap();
-            if !d.is_empty() {
-                break d;
-            }
-        };
-        h.join().unwrap();
-        assert!(
-            t0.elapsed() < Duration::from_secs(10),
-            "woken by the append, not the timeout"
-        );
-        assert_eq!(drained.len(), 1);
-        assert_eq!(drained[0].0, 11, "slot of the appended partition");
-        assert_eq!(drained[0].1[0].as_ref(), b"late");
-        assert_eq!(offsets[11], 1);
-        assert!(
-            m.queue_wakeups.load(std::sync::atomic::Ordering::Relaxed) >= 1,
-            "consumption was wakeup-driven"
-        );
-        assert_eq!(
-            m.queue_wait_timeouts
-                .load(std::sync::atomic::Ordering::Relaxed),
-            0,
-            "no timed-poll floor in the path"
-        );
-    }
-
-    #[test]
-    fn kick_wakes_a_parked_consumer_without_data() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 2).unwrap();
-        t.register_producer();
-        let t2 = t.clone();
-        let h = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(30));
-            t2.kick();
-        });
-        let mut offsets = vec![0, 0];
-        let t0 = std::time::Instant::now();
-        let r = t
-            .poll_many(&[0, 1], &mut offsets, 16, Duration::from_secs(30))
-            .unwrap();
-        h.join().unwrap();
-        assert!(r.is_empty(), "a kick hands back control, not data");
-        assert!(t0.elapsed() < Duration::from_secs(10));
-    }
-
-    #[test]
-    fn poll_many_with_no_partitions_is_end_of_stream() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 1).unwrap();
-        let mut offsets: Vec<usize> = Vec::new();
-        assert!(t
-            .poll_many(&[], &mut offsets, 16, Duration::from_millis(5))
-            .is_none());
-    }
-
-    #[test]
-    fn close_signals_end_of_stream_after_drain() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 1).unwrap();
-        t.register_producer();
-        t.append(0, b"x").unwrap();
-        t.producer_done();
-        let (recs, next) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
-        assert_eq!(recs.len(), 1);
-        assert!(t.partition(0).poll(next, 10, Duration::from_millis(10)).is_none());
-    }
-
-    #[test]
-    fn multi_producer_close_requires_all() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 1).unwrap();
-        t.register_producer();
-        t.register_producer();
-        t.producer_done();
-        // still open: one producer remains
-        let r = t.partition(0).poll(0, 10, Duration::from_millis(10));
-        assert!(matches!(r, Some((v, 0)) if v.is_empty()));
-        t.producer_done();
-        assert!(t.partition(0).poll(0, 10, Duration::from_millis(10)).is_none());
-    }
-
-    #[test]
-    fn commits_are_monotonic() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 1).unwrap();
-        let p = t.partition(0);
-        p.commit("g", 5);
-        p.commit("g", 3); // must not regress
-        assert_eq!(p.committed("g"), 5);
-        assert_eq!(p.committed("other"), 0);
-    }
-
-    #[test]
-    fn lag_tracks_appends_minus_commits() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 2).unwrap();
-        t.register_producer();
-        for i in 0..6u64 {
-            t.append(i, b"r").unwrap();
-        }
-        assert_eq!(t.lag("g"), 6, "nothing committed yet");
-        t.partition(0).commit("g", 2);
-        assert_eq!(t.lag("g"), 4);
-        assert_eq!(t.partition(0).lag("g"), 1);
-        // a foreign group's commits don't affect this group's lag
-        t.partition(1).commit("other", 3);
-        assert_eq!(t.lag("g"), 4);
-    }
-
-    #[test]
-    fn compact_before_tombstones_in_place_and_preserves_offsets() {
-        let m = crate::metrics::MetricsRegistry::new();
-        let broker = QueueBroker::in_memory(Some(m.clone()));
-        let t = broker.topic("state", 1).unwrap();
-        t.register_producer();
-        for i in 0..6u64 {
-            t.append(0, &i.to_le_bytes()).unwrap();
-        }
-        let p = t.partition(0);
-        assert_eq!(p.compact_before(4), 4);
-        // offsets are stable: the log is the same length, survivors sit at
-        // their original positions, the prefix reads back as empty records
-        assert_eq!(p.len(), 6);
-        let (recs, next) = p.poll(0, 10, Duration::from_millis(10)).unwrap();
-        assert_eq!(next, 6);
-        assert!(recs[..4].iter().all(|r| r.is_empty()));
-        assert_eq!(recs[4].as_ref(), &4u64.to_le_bytes());
-        assert_eq!(recs[5].as_ref(), &5u64.to_le_bytes());
-        // idempotent: a second pass finds nothing new to tombstone
-        assert_eq!(p.compact_before(4), 0);
-        assert_eq!(
-            m.state_compactions.load(std::sync::atomic::Ordering::Relaxed),
-            4
-        );
-        // appends continue past the compacted prefix
-        t.append(0, &6u64.to_le_bytes()).unwrap();
-        assert_eq!(p.len(), 7);
-    }
-
-    #[test]
-    fn durable_compaction_survives_recovery() {
-        let dir = std::env::temp_dir().join(format!("fuq-compact-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        {
-            let broker = QueueBroker::durable(&dir, None).unwrap();
-            let t = broker.topic("state", 1).unwrap();
-            t.register_producer();
-            for i in 0..5u32 {
-                t.append(0, format!("rec{i}").as_bytes()).unwrap();
-            }
-            assert_eq!(t.partition(0).compact_before(3), 3);
-        }
-        {
-            let broker = QueueBroker::durable(&dir, None).unwrap();
-            let t = broker.topic("state", 1).unwrap();
-            let p = t.partition(0);
-            assert_eq!(p.len(), 5, "tombstones recover at their indices");
-            let (recs, _) = p.poll(0, 10, Duration::from_millis(10)).unwrap();
-            assert!(recs[..3].iter().all(|r| r.is_empty()));
-            assert_eq!(recs[3].as_ref(), b"rec3");
-            assert_eq!(recs[4].as_ref(), b"rec4");
-        }
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-
-    #[test]
-    fn durable_topic_recovers_records_and_supports_resume() {
-        let dir = std::env::temp_dir().join(format!("fuq-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        {
-            let broker = QueueBroker::durable(&dir, None).unwrap();
-            let t = broker.topic("sensor", 1).unwrap();
-            t.register_producer();
-            for i in 0..5u32 {
-                t.append(0, format!("rec{i}").as_bytes()).unwrap();
-            }
-            // no producer_done: simulate crash
-        }
-        {
-            let broker = QueueBroker::durable(&dir, None).unwrap();
-            let t = broker.topic("sensor", 1).unwrap();
-            assert_eq!(t.partition(0).len(), 5);
-            let (recs, _) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
-            assert_eq!(recs[4].as_ref(), b"rec4");
-            // appends continue after recovery
-            t.register_producer();
-            t.append(0, b"rec5").unwrap();
-            assert_eq!(t.partition(0).len(), 6);
-        }
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-
-    #[test]
-    fn recovery_tolerates_torn_tail() {
-        let dir = std::env::temp_dir().join(format!("fuq-torn-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("t-0.log");
-        {
-            let mut f = File::create(&path).unwrap();
-            let body = b"good";
-            f.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
-            f.write_all(&crc32(body).to_le_bytes()).unwrap();
-            f.write_all(body).unwrap();
-            // torn record: header promises 100 bytes, body truncated
-            f.write_all(&100u32.to_le_bytes()).unwrap();
-            f.write_all(&0u32.to_le_bytes()).unwrap();
-            f.write_all(b"short").unwrap();
-        }
-        let broker = QueueBroker::durable(&dir, None).unwrap();
-        let t = broker.topic("t", 1).unwrap();
-        assert_eq!(t.partition(0).len(), 1);
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-
-    #[test]
-    fn recovery_rejects_corrupt_crc() {
-        let dir = std::env::temp_dir().join(format!("fuq-crc-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("t-0.log");
-        {
-            let mut f = File::create(&path).unwrap();
-            let body = b"evil";
-            f.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
-            f.write_all(&0xdeadbeefu32.to_le_bytes()).unwrap();
-            f.write_all(body).unwrap();
-        }
-        let broker = QueueBroker::durable(&dir, None).unwrap();
-        assert!(broker.topic("t", 1).is_err());
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-
-    #[test]
-    fn rejected_append_is_never_persisted() {
-        let dir = std::env::temp_dir().join(format!("fuq-closed-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        {
-            let broker = QueueBroker::durable(&dir, None).unwrap();
-            let t = broker.topic("t", 1).unwrap();
-            t.register_producer();
-            t.append(0, b"kept").unwrap();
-            t.producer_done(); // closes the partition
-            assert!(t.append(0, b"rejected").is_err());
-        }
-        let broker = QueueBroker::durable(&dir, None).unwrap();
-        let t = broker.topic("t", 1).unwrap();
-        assert_eq!(
-            t.partition(0).len(),
-            1,
-            "a rejected append must not reappear after recovery"
-        );
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-
-    #[test]
-    fn append_to_closed_partition_fails() {
-        let broker = QueueBroker::in_memory(None);
-        let t = broker.topic("t", 1).unwrap();
-        t.register_producer();
-        t.producer_done();
-        assert!(t.append(0, b"x").is_err());
-        t.reopen();
-        t.register_producer();
-        assert!(t.append(0, b"x").is_ok());
-    }
-}
+mod tests;

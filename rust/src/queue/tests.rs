@@ -1,0 +1,728 @@
+use super::*;
+
+#[test]
+fn crc32_known_vector() {
+    // IEEE CRC32 of "123456789" is 0xCBF43926.
+    assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+}
+
+#[test]
+fn append_poll_roundtrip() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 2).unwrap();
+    t.register_producer();
+    for i in 0..10u64 {
+        t.append(i, &i.to_le_bytes()).unwrap();
+    }
+    t.producer_done();
+    let mut seen = Vec::new();
+    for p in 0..2 {
+        let mut off = 0;
+        while let Some((recs, next)) = t.partition(p).poll(off, 4, Duration::from_millis(10)) {
+            for r in &recs {
+                seen.push(u64::from_le_bytes(r.as_ref().try_into().unwrap()));
+            }
+            off = next;
+            if recs.is_empty() {
+                break;
+            }
+        }
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, (0..10).collect::<Vec<_>>());
+}
+
+#[test]
+fn append_batch_shares_the_encoded_buffer() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    let batch = Batch::new(vec![crate::value::Value::I64(42)]);
+    t.append_batch(0, &batch).unwrap();
+    t.producer_done();
+    let (recs, _) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
+    assert_eq!(recs.len(), 1);
+    let wire = batch.wire_cached().expect("append populated the cache");
+    assert!(
+        Arc::ptr_eq(&recs[0], &wire),
+        "the log holds the producer's buffer, not a copy"
+    );
+    assert_eq!(Batch::from_wire(recs[0].clone()).unwrap(), batch);
+}
+
+#[test]
+fn key_hash_partitions_consistently() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 4).unwrap();
+    t.register_producer();
+    t.append(13, b"a").unwrap();
+    t.append(13, b"b").unwrap();
+    t.producer_done();
+    let p = (13 % 4) as usize;
+    assert_eq!(t.partition(p).len(), 2);
+}
+
+#[test]
+fn poll_blocks_until_append() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    let t2 = t.clone();
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(30));
+        t2.append(0, b"late").unwrap();
+    });
+    let (recs, next) = t
+        .partition(0)
+        .poll(0, 10, Duration::from_secs(2))
+        .expect("open partition");
+    assert_eq!(recs.len(), 1);
+    assert_eq!(next, 1);
+    h.join().unwrap();
+}
+
+#[test]
+fn poll_with_zero_or_elapsed_timeout_never_panics() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    // zero timeout on an open, empty partition: immediate timed-out
+    // return (regression: the deadline math used to underflow)
+    let r = t.partition(0).poll(0, 10, Duration::ZERO);
+    assert!(matches!(r, Some((v, 0)) if v.is_empty()));
+    let r = t.partition(0).poll(0, 10, Duration::from_nanos(1));
+    assert!(matches!(r, Some((v, 0)) if v.is_empty()));
+    // with data present, a zero timeout still returns the records
+    t.append(0, b"x").unwrap();
+    let r = t.partition(0).poll(0, 10, Duration::ZERO).unwrap();
+    assert_eq!(r.0.len(), 1);
+}
+
+#[test]
+fn poll_many_drains_ready_partitions_and_ends_when_all_closed() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 4).unwrap();
+    t.register_producer();
+    t.append(0, b"a").unwrap();
+    t.append(2, b"c").unwrap();
+    let parts: Vec<usize> = (0..4).collect();
+    let mut offsets = vec![0; 4];
+    let drained = t
+        .poll_many(&parts, &mut offsets, 16, Duration::from_millis(10))
+        .unwrap();
+    let slots: Vec<usize> = drained.iter().map(|(s, _)| *s).collect();
+    assert_eq!(slots, vec![0, 2], "one wakeup drains every ready partition");
+    assert_eq!(offsets, vec![1, 0, 1, 0]);
+    // timeout with every partition still open: empty drain, not EOS
+    let r = t
+        .poll_many(&parts, &mut offsets, 16, Duration::from_millis(5))
+        .unwrap();
+    assert!(r.is_empty());
+    t.producer_done(); // closes all partitions
+    assert!(t
+        .poll_many(&parts, &mut offsets, 16, Duration::from_millis(10))
+        .is_none());
+}
+
+#[test]
+fn poll_many_wakes_on_single_append_across_many_partitions() {
+    let m = crate::metrics::MetricsRegistry::new();
+    let broker = QueueBroker::in_memory(Some(m.clone()));
+    let t = broker.topic("t", 16).unwrap();
+    t.register_producer();
+    let t2 = t.clone();
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        t2.append(11, b"late").unwrap();
+    });
+    let parts: Vec<usize> = (0..16).collect();
+    let mut offsets = vec![0; 16];
+    let t0 = Instant::now();
+    let drained = loop {
+        let d = t
+            .poll_many(&parts, &mut offsets, 16, Duration::from_secs(30))
+            .unwrap();
+        if !d.is_empty() {
+            break d;
+        }
+    };
+    h.join().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "woken by the append, not the timeout"
+    );
+    assert_eq!(drained.len(), 1);
+    assert_eq!(drained[0].0, 11, "slot of the appended partition");
+    assert_eq!(drained[0].1[0].as_ref(), b"late");
+    assert_eq!(offsets[11], 1);
+    assert!(
+        m.queue_wakeups.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "consumption was wakeup-driven"
+    );
+    assert_eq!(
+        m.queue_wait_timeouts
+            .load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "no timed-poll floor in the path"
+    );
+}
+
+#[test]
+fn kick_wakes_a_parked_consumer_without_data() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 2).unwrap();
+    t.register_producer();
+    let t2 = t.clone();
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(30));
+        t2.kick();
+    });
+    let mut offsets = vec![0, 0];
+    let t0 = Instant::now();
+    let r = t
+        .poll_many(&[0, 1], &mut offsets, 16, Duration::from_secs(30))
+        .unwrap();
+    h.join().unwrap();
+    assert!(r.is_empty(), "a kick hands back control, not data");
+    assert!(t0.elapsed() < Duration::from_secs(10));
+}
+
+#[test]
+fn poll_many_with_no_partitions_is_end_of_stream() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 1).unwrap();
+    let mut offsets: Vec<usize> = Vec::new();
+    assert!(t
+        .poll_many(&[], &mut offsets, 16, Duration::from_millis(5))
+        .is_none());
+}
+
+#[test]
+fn close_signals_end_of_stream_after_drain() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    t.append(0, b"x").unwrap();
+    t.producer_done();
+    let (recs, next) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
+    assert_eq!(recs.len(), 1);
+    assert!(t.partition(0).poll(next, 10, Duration::from_millis(10)).is_none());
+}
+
+#[test]
+fn multi_producer_close_requires_all() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    t.register_producer();
+    t.producer_done();
+    // still open: one producer remains
+    let r = t.partition(0).poll(0, 10, Duration::from_millis(10));
+    assert!(matches!(r, Some((v, 0)) if v.is_empty()));
+    t.producer_done();
+    assert!(t.partition(0).poll(0, 10, Duration::from_millis(10)).is_none());
+}
+
+#[test]
+fn commits_are_monotonic() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 1).unwrap();
+    let p = t.partition(0);
+    p.commit("g", 5);
+    p.commit("g", 3); // must not regress
+    assert_eq!(p.committed("g"), 5);
+    assert_eq!(p.committed("other"), 0);
+}
+
+#[test]
+fn lag_tracks_appends_minus_commits() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 2).unwrap();
+    t.register_producer();
+    for i in 0..6u64 {
+        t.append(i, b"r").unwrap();
+    }
+    assert_eq!(t.lag("g"), 6, "nothing committed yet");
+    t.partition(0).commit("g", 2);
+    assert_eq!(t.lag("g"), 4);
+    assert_eq!(t.partition(0).lag("g"), 1);
+    // a foreign group's commits don't affect this group's lag
+    t.partition(1).commit("other", 3);
+    assert_eq!(t.lag("g"), 4);
+}
+
+#[test]
+fn compact_before_tombstones_in_place_and_preserves_offsets() {
+    let m = crate::metrics::MetricsRegistry::new();
+    let broker = QueueBroker::in_memory(Some(m.clone()));
+    let t = broker.topic("state", 1).unwrap();
+    t.register_producer();
+    for i in 0..6u64 {
+        t.append(0, &i.to_le_bytes()).unwrap();
+    }
+    let p = t.partition(0);
+    assert_eq!(p.compact_before(4), 4);
+    // offsets are stable: the log is the same length, survivors sit at
+    // their original positions, the prefix reads back as empty records
+    assert_eq!(p.len(), 6);
+    let (recs, next) = p.poll(0, 10, Duration::from_millis(10)).unwrap();
+    assert_eq!(next, 6);
+    assert!(recs[..4].iter().all(|r| r.is_empty()));
+    assert_eq!(recs[4].as_ref(), &4u64.to_le_bytes());
+    assert_eq!(recs[5].as_ref(), &5u64.to_le_bytes());
+    // idempotent: a second pass finds nothing new to tombstone
+    assert_eq!(p.compact_before(4), 0);
+    assert_eq!(
+        m.state_compactions.load(std::sync::atomic::Ordering::Relaxed),
+        4
+    );
+    // appends continue past the compacted prefix
+    t.append(0, &6u64.to_le_bytes()).unwrap();
+    assert_eq!(p.len(), 7);
+}
+
+#[test]
+fn durable_compaction_survives_recovery() {
+    let dir = std::env::temp_dir().join(format!("fuq-compact-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("state", 1).unwrap();
+        t.register_producer();
+        for i in 0..5u32 {
+            t.append(0, format!("rec{i}").as_bytes()).unwrap();
+        }
+        assert_eq!(t.partition(0).compact_before(3), 3);
+    }
+    {
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("state", 1).unwrap();
+        let p = t.partition(0);
+        assert_eq!(p.len(), 5, "tombstones recover at their indices");
+        let (recs, _) = p.poll(0, 10, Duration::from_millis(10)).unwrap();
+        assert!(recs[..3].iter().all(|r| r.is_empty()));
+        assert_eq!(recs[3].as_ref(), b"rec3");
+        assert_eq!(recs[4].as_ref(), b"rec4");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn durable_topic_recovers_records_and_supports_resume() {
+    let dir = std::env::temp_dir().join(format!("fuq-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("sensor", 1).unwrap();
+        t.register_producer();
+        for i in 0..5u32 {
+            t.append(0, format!("rec{i}").as_bytes()).unwrap();
+        }
+        // no producer_done: simulate crash
+    }
+    {
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("sensor", 1).unwrap();
+        assert_eq!(t.partition(0).len(), 5);
+        let (recs, _) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
+        assert_eq!(recs[4].as_ref(), b"rec4");
+        // appends continue after recovery
+        t.register_producer();
+        t.append(0, b"rec5").unwrap();
+        assert_eq!(t.partition(0).len(), 6);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn recovery_tolerates_torn_tail() {
+    let dir = std::env::temp_dir().join(format!("fuq-torn-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t-0.log");
+    {
+        let mut f = File::create(&path).unwrap();
+        let body = b"good";
+        f.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&crc32(body).to_le_bytes()).unwrap();
+        f.write_all(body).unwrap();
+        // torn record: header promises 100 bytes, body truncated
+        f.write_all(&100u32.to_le_bytes()).unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        f.write_all(b"short").unwrap();
+    }
+    let broker = QueueBroker::durable(&dir, None).unwrap();
+    let t = broker.topic("t", 1).unwrap();
+    assert_eq!(t.partition(0).len(), 1);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn torn_tail_is_truncated_and_appends_continue_cleanly() {
+    // regression: recovery used to leave the torn bytes in the file, so a
+    // post-recovery append landed after garbage and the *next* recovery
+    // failed mid-log
+    let dir = std::env::temp_dir().join(format!("fuq-torn2-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t-0.log");
+    {
+        let mut f = File::create(&path).unwrap();
+        let body = b"good";
+        f.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&crc32(body).to_le_bytes()).unwrap();
+        f.write_all(body).unwrap();
+        f.write_all(&100u32.to_le_bytes()).unwrap();
+        f.write_all(&7u32.to_le_bytes()).unwrap();
+        f.write_all(b"garbage").unwrap();
+    }
+    let m = crate::metrics::MetricsRegistry::new();
+    {
+        let broker = QueueBroker::durable(&dir, Some(m.clone())).unwrap();
+        let t = broker.topic("t", 1).unwrap();
+        assert_eq!(t.partition(0).len(), 1);
+        assert_eq!(
+            m.torn_tails_truncated
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        t.register_producer();
+        t.append(0, b"after-crash").unwrap();
+    }
+    {
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("t", 1).unwrap();
+        assert_eq!(t.partition(0).len(), 2, "the log recovered both records");
+        let (recs, _) = t.partition(0).poll(0, 10, Duration::from_millis(10)).unwrap();
+        assert_eq!(recs[0].as_ref(), b"good");
+        assert_eq!(recs[1].as_ref(), b"after-crash");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn crc_failed_final_frame_truncates_like_a_torn_tail() {
+    // a kill mid-write can flush the full frame length with stale bytes in
+    // the body; a CRC failure on the *final* frame is that artifact, not
+    // corruption
+    let dir = std::env::temp_dir().join(format!("fuq-tailcrc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t-0.log");
+    {
+        let mut f = File::create(&path).unwrap();
+        let body = b"good";
+        f.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&crc32(body).to_le_bytes()).unwrap();
+        f.write_all(body).unwrap();
+        let torn = b"torn";
+        f.write_all(&(torn.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&0xdeadbeefu32.to_le_bytes()).unwrap();
+        f.write_all(torn).unwrap();
+    }
+    let m = crate::metrics::MetricsRegistry::new();
+    let broker = QueueBroker::durable(&dir, Some(m.clone())).unwrap();
+    let t = broker.topic("t", 1).unwrap();
+    assert_eq!(t.partition(0).len(), 1, "only the valid prefix survives");
+    assert_eq!(
+        m.torn_tails_truncated
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn recovery_rejects_mid_log_corruption() {
+    let dir = std::env::temp_dir().join(format!("fuq-crc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t-0.log");
+    {
+        let mut f = File::create(&path).unwrap();
+        // corrupt frame *followed by a valid one*: this is not a torn
+        // tail, it is real corruption and must refuse to open
+        let body = b"evil";
+        f.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&0xdeadbeefu32.to_le_bytes()).unwrap();
+        f.write_all(body).unwrap();
+        let good = b"fine";
+        f.write_all(&(good.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&crc32(good).to_le_bytes()).unwrap();
+        f.write_all(good).unwrap();
+    }
+    let broker = QueueBroker::durable(&dir, None).unwrap();
+    assert!(broker.topic("t", 1).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn rejected_append_is_never_persisted() {
+    let dir = std::env::temp_dir().join(format!("fuq-closed-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("t", 1).unwrap();
+        t.register_producer();
+        t.append(0, b"kept").unwrap();
+        t.producer_done(); // closes the partition
+        assert!(t.append(0, b"rejected").is_err());
+    }
+    let broker = QueueBroker::durable(&dir, None).unwrap();
+    let t = broker.topic("t", 1).unwrap();
+    assert_eq!(
+        t.partition(0).len(),
+        1,
+        "a rejected append must not reappear after recovery"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn append_to_closed_partition_fails() {
+    let broker = QueueBroker::in_memory(None);
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    t.producer_done();
+    assert!(t.append(0, b"x").is_err());
+    t.reopen();
+    t.register_producer();
+    assert!(t.append(0, b"x").is_ok());
+}
+
+#[test]
+fn watermark_records_roundtrip_and_reject_other_payloads() {
+    let wm = Watermark {
+        from: 3,
+        ts: 123_456,
+        origin_ms: 99,
+    };
+    let rec = watermark_record(&wm);
+    assert_eq!(rec.len(), 24);
+    assert_eq!(decode_watermark(&rec), Some(wm));
+    assert_eq!(decode_watermark(b""), None, "tombstones are not watermarks");
+    let batch = Batch::new(vec![crate::value::Value::I64(7)]);
+    let wire = batch.wire_with(|| {});
+    assert_eq!(decode_watermark(&wire), None, "batch wire is not a watermark");
+}
+
+#[test]
+fn bounded_durable_broker_spills_and_rereads_beyond_budget() {
+    let dir = std::env::temp_dir().join(format!("fuq-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let m = crate::metrics::MetricsRegistry::new();
+    let broker = QueueBroker::durable_bounded(&dir, 4 * 1024, Some(m.clone())).unwrap();
+    broker.set_resident_tail(4);
+    let t = broker.topic("hot", 1).unwrap();
+    t.register_producer();
+    let body = [7u8; 256];
+    for _ in 0..200 {
+        // 200 × 256 B = 50 KiB ingested through a 4 KiB budget
+        t.append(0, &body).unwrap();
+    }
+    assert!(
+        broker.resident_bytes() <= 4 * 1024,
+        "resident bytes stay under budget, got {}",
+        broker.resident_bytes()
+    );
+    t.producer_done();
+    let p = t.partition(0);
+    let mut off = 0;
+    let mut seen = 0;
+    while let Some((recs, next)) = p.poll(off, 64, Duration::from_millis(10)) {
+        if recs.is_empty() {
+            break;
+        }
+        for r in &recs {
+            assert_eq!(r.as_ref(), &body[..]);
+            seen += 1;
+        }
+        off = next;
+    }
+    assert_eq!(seen, 200, "evicted records are transparently re-read");
+    assert!(m.spill_reads.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn bounded_durable_topic_survives_recovery_with_spills() {
+    let dir = std::env::temp_dir().join(format!("fuq-spillrec-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let broker = QueueBroker::durable_bounded(&dir, 512, None).unwrap();
+        broker.set_resident_tail(2);
+        let t = broker.topic("hot", 1).unwrap();
+        t.register_producer();
+        for i in 0..20u8 {
+            t.append(0, &[i; 64]).unwrap();
+        }
+    }
+    {
+        // recovery charges the recovered records then sweeps back under
+        // the budget; every record still reads back
+        let broker = QueueBroker::durable_bounded(&dir, 512, None).unwrap();
+        broker.set_resident_tail(2);
+        let t = broker.topic("hot", 1).unwrap();
+        assert!(broker.resident_bytes() <= 512);
+        let (recs, next) = t.partition(0).poll(0, 32, Duration::from_millis(10)).unwrap();
+        assert_eq!(next, 20);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.as_ref(), &[i as u8; 64]);
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn backpressure_blocks_producer_until_consumer_commits() {
+    let broker = QueueBroker::in_memory_bounded(1024, None);
+    broker.set_default_policy(OverloadPolicy::Backpressure {
+        deadline: Duration::from_secs(10),
+    });
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    let body = [1u8; 256];
+    for _ in 0..4 {
+        t.append(0, &body).unwrap(); // budget exactly full
+    }
+    let t2 = t.clone();
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(60));
+        let p = t2.partition(0);
+        let (recs, next) = p.poll(0, 16, Duration::from_millis(500)).unwrap();
+        assert_eq!(recs.len(), 4);
+        p.commit("g", next); // frees the committed prefix
+    });
+    let t0 = Instant::now();
+    t.append(0, &body).unwrap(); // blocks until the commit frees memory
+    assert!(
+        t0.elapsed() >= Duration::from_millis(30),
+        "the append waited for the consumer"
+    );
+    h.join().unwrap();
+    assert_eq!(t.partition(0).len(), 5, "zero loss under backpressure");
+}
+
+#[test]
+fn backpressure_deadline_refuses_instead_of_growing() {
+    let broker = QueueBroker::in_memory_bounded(512, None);
+    broker.set_default_policy(OverloadPolicy::Backpressure {
+        deadline: Duration::from_millis(50),
+    });
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    let body = [1u8; 256];
+    t.append(0, &body).unwrap();
+    t.append(0, &body).unwrap();
+    let err = t.append(0, &body).unwrap_err();
+    assert!(format!("{err}").contains("backpressure"));
+    assert_eq!(t.partition(0).len(), 2, "the refused record never enqueued");
+    assert!(broker.resident_bytes() <= 512);
+}
+
+#[test]
+fn oversize_record_is_admitted_when_memory_is_empty() {
+    let broker = QueueBroker::in_memory_bounded(64, None);
+    broker.set_default_policy(OverloadPolicy::Backpressure {
+        deadline: Duration::from_millis(50),
+    });
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    // larger than the whole budget: admitted alone rather than deadlocked
+    t.append(0, &[5u8; 256]).unwrap();
+    let err = t.append(0, b"next").unwrap_err();
+    assert!(format!("{err}").contains("backpressure"));
+}
+
+#[test]
+fn shed_drop_oldest_tombstones_with_exact_accounting() {
+    let m = crate::metrics::MetricsRegistry::new();
+    let broker = QueueBroker::in_memory_bounded(1024, Some(m.clone()));
+    broker.set_default_policy(OverloadPolicy::Shed(ShedMode::DropOldest));
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    let body = [9u8; 64];
+    for _ in 0..100 {
+        t.append(0, &body).unwrap();
+    }
+    t.producer_done();
+    let p = t.partition(0);
+    assert_eq!(p.len(), 100, "offsets stay stable; shed records tombstone");
+    let (recs, _) = p.poll(0, 200, Duration::from_millis(10)).unwrap();
+    let live = recs.iter().filter(|r| !r.is_empty()).count() as u64;
+    let shed = m.records_shed.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(shed > 0, "overload forced shedding");
+    assert_eq!(live + shed, 100, "every record delivered or accounted shed");
+    assert!(broker.resident_bytes() <= 1024);
+    assert!(!recs[99].is_empty(), "the newest record survives drop-oldest");
+}
+
+#[test]
+fn shed_sample_retains_a_thinned_history() {
+    let m = crate::metrics::MetricsRegistry::new();
+    let broker = QueueBroker::in_memory_bounded(1024, Some(m.clone()));
+    broker.set_default_policy(OverloadPolicy::Shed(ShedMode::Sample));
+    let t = broker.topic("t", 1).unwrap();
+    t.register_producer();
+    let body = [3u8; 64];
+    for _ in 0..100 {
+        t.append(0, &body).unwrap();
+    }
+    t.producer_done();
+    let (recs, _) = t
+        .partition(0)
+        .poll(0, 200, Duration::from_millis(10))
+        .unwrap();
+    let shed = m.records_shed.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(shed > 0);
+    // unlike drop-oldest, sampling keeps survivors inside the shed region
+    let oldest_quarter_live = recs[..25].iter().filter(|r| !r.is_empty()).count();
+    assert!(
+        oldest_quarter_live > 0,
+        "sampling retains part of the old history"
+    );
+}
+
+#[test]
+fn compaction_materializes_evicted_survivors() {
+    let dir = std::env::temp_dir().join(format!("fuq-cspill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let broker = QueueBroker::durable_bounded(&dir, 512, None).unwrap();
+        broker.set_resident_tail(0); // evict everything evictable
+        let t = broker.topic("state", 1).unwrap();
+        t.register_producer();
+        for i in 0..8u8 {
+            t.append(0, &[i; 128]).unwrap();
+        }
+        let p = t.partition(0);
+        assert_eq!(p.compact_before(5), 5);
+        let (recs, _) = p.poll(0, 16, Duration::from_millis(10)).unwrap();
+        assert!(recs[..5].iter().all(|r| r.is_empty()));
+        assert_eq!(recs[5].as_ref(), &[5u8; 128]);
+        assert_eq!(recs[7].as_ref(), &[7u8; 128]);
+    }
+    {
+        let broker = QueueBroker::durable(&dir, None).unwrap();
+        let t = broker.topic("state", 1).unwrap();
+        let p = t.partition(0);
+        assert_eq!(p.len(), 8, "the rewritten segment keeps every offset");
+        let (recs, _) = p.poll(0, 16, Duration::from_millis(10)).unwrap();
+        assert!(recs[..5].iter().all(|r| r.is_empty()));
+        assert_eq!(recs[6].as_ref(), &[6u8; 128]);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn unbounded_broker_reports_zero_resident_and_no_budget() {
+    let broker = QueueBroker::in_memory(None);
+    assert_eq!(broker.resident_bytes(), 0);
+    assert_eq!(broker.memory_budget(), None);
+    let bounded = QueueBroker::in_memory_bounded(2048, None);
+    assert_eq!(bounded.memory_budget(), Some(2048));
+    let t = bounded.topic("t", 1).unwrap();
+    t.register_producer();
+    t.append(0, &[0u8; 100]).unwrap();
+    assert_eq!(bounded.resident_bytes(), 100, "the gauge tracks live bytes");
+}

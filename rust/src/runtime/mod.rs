@@ -23,9 +23,9 @@ use crate::graph::SourceKind;
 use crate::metrics::{Metrics, MetricsRegistry};
 use crate::queue::Topic;
 use crate::value::{Batch, BatchData, Value};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Source generator state for a source-stage instance.
 pub struct SourceRuntime {
@@ -77,7 +77,111 @@ pub enum InputKind {
         /// from the last complete checkpoint instead of double-counting
         /// records an interior stage already folded into restored state.
         commit_each_drain: bool,
+        /// Producers currently registered on the topic (shared with the
+        /// ingest threads; `add_location` may grow it while the job runs).
+        /// Watermark sentinel records carry per-producer identities, and
+        /// the min-of-inputs merge refuses to advance until every expected
+        /// producer has promised at least once — unless the idleness
+        /// timeout below waives the silent ones.
+        producers: Arc<AtomicUsize>,
+        /// Event-time idleness bound: a producer that has not advanced its
+        /// watermark for this long is excluded from the min-of-inputs
+        /// merge (and a producer that never reported stops gating it), so
+        /// one silent edge source cannot stall event-time for the whole
+        /// zone. `None` = wait forever (strict semantics).
+        idle_timeout: Option<Duration>,
     },
+}
+
+/// Per-producer watermark merge state for a queue consumer — the queue
+/// equivalent of [`Inbox`]'s min-of-inputs merge, fed by watermark
+/// sentinel records ([`crate::queue::decode_watermark`]) interleaved with
+/// data in the partition logs. Producer promises are monotone per `from`,
+/// so folding records from several owned partitions into one per-producer
+/// max is sound.
+struct QueueWmMerge {
+    /// `(producer id, max promised ts, last heard)`.
+    entries: Vec<(u32, i64, Instant)>,
+    /// Last merged watermark emitted (monotonicity guard).
+    out: i64,
+    /// Idleness bound (see [`InputKind::Queue::idle_timeout`]).
+    idle: Option<Duration>,
+    /// When consumption started — silent-from-birth producers gate the
+    /// merge until this is `idle` old.
+    started: Instant,
+}
+
+impl QueueWmMerge {
+    fn new(idle: Option<Duration>) -> Self {
+        QueueWmMerge {
+            entries: Vec::new(),
+            out: i64::MIN,
+            idle,
+            started: Instant::now(),
+        }
+    }
+
+    /// Folds one decoded sentinel into the merge; returns the advanced
+    /// merged watermark, if the min over live producers moved forward.
+    fn observe(&mut self, wm: crate::channels::Watermark, expected: usize) -> Option<i64> {
+        let now = Instant::now();
+        match self.entries.iter_mut().find(|(f, ..)| *f == wm.from) {
+            Some((_, ts, heard)) => {
+                *ts = (*ts).max(wm.ts);
+                *heard = now;
+            }
+            None => self.entries.push((wm.from, wm.ts, now)),
+        }
+        self.merge(expected)
+    }
+
+    /// Re-evaluates the merge without new input (periodic idle check:
+    /// producers crossing the idleness bound may unblock the min).
+    fn idle_tick(&mut self, expected: usize) -> Option<i64> {
+        self.idle?;
+        if self.entries.is_empty() {
+            return None;
+        }
+        self.merge(expected)
+    }
+
+    fn merge(&mut self, expected: usize) -> Option<i64> {
+        let now = Instant::now();
+        let mut min = i64::MAX;
+        let mut live = 0usize;
+        for &(_, ts, heard) in &self.entries {
+            if self
+                .idle
+                .is_some_and(|d| now.duration_since(heard) > d)
+            {
+                // idle producer: its stale promise no longer holds the
+                // merged clock down (it re-enters when it next reports)
+                continue;
+            }
+            live += 1;
+            min = min.min(ts);
+        }
+        if live == 0 {
+            return None;
+        }
+        if self.entries.len() < expected {
+            // some producer has *never* reported; strict semantics wait
+            // forever, the idleness timeout waives them once consumption
+            // has been running long enough to have heard from them
+            let waived = self
+                .idle
+                .is_some_and(|d| now.duration_since(self.started) > d);
+            if !waived {
+                return None;
+            }
+        }
+        if min > self.out {
+            self.out = min;
+            Some(min)
+        } else {
+            None
+        }
+    }
 }
 
 /// Drain-and-handoff context of one instance: where to snapshot held state
@@ -264,11 +368,14 @@ fn run_instance_inner(mut rt: InstanceRuntime) -> u64 {
             poll_max,
             stop,
             commit_each_drain,
+            producers,
+            idle_timeout,
         } => {
             let mut offsets: Vec<usize> = partitions
                 .iter()
                 .map(|&p| topic.partition(p).committed(&group))
                 .collect();
+            let mut wmerge = QueueWmMerge::new(idle_timeout);
             loop {
                 // Acquire pairs with the coordinator's store: the update
                 // epoch is bumped before the stop flag is raised, and the
@@ -324,6 +431,29 @@ fn run_instance_inner(mut rt: InstanceRuntime) -> u64 {
                     // (re-appending downstream costs no encode). A corrupt
                     // record is skipped and reported, never fatal.
                     for r in recs {
+                        if r.is_empty() {
+                            // shed/compaction tombstone: the offset is
+                            // burned, the payload is gone by policy
+                            continue;
+                        }
+                        if let Some(wm) = crate::queue::decode_watermark(&r) {
+                            // event-time sentinel written by queue ingest:
+                            // fold into the per-producer merge, cascading
+                            // through the chain only when the min over
+                            // live producers advances
+                            let origin_ms = wm.origin_ms;
+                            if let Some(ts) =
+                                wmerge.observe(wm, producers.load(Ordering::SeqCst))
+                            {
+                                cascade_watermark(
+                                    &mut rt.ops,
+                                    &mut rt.outputs,
+                                    ts,
+                                    origin_ms,
+                                );
+                            }
+                            continue;
+                        }
                         match Batch::from_wire(r) {
                             Ok(b) => {
                                 batches += 1;
@@ -342,6 +472,17 @@ fn run_instance_inner(mut rt: InstanceRuntime) -> u64 {
                     if commit_each_drain {
                         topic.partition(partitions[slot]).commit(&group, offsets[slot]);
                     }
+                }
+                // idleness re-check once per wakeup: a producer crossing
+                // the idle bound can unblock the merged clock even with no
+                // new sentinel in the drain
+                if let Some(ts) = wmerge.idle_tick(producers.load(Ordering::SeqCst)) {
+                    cascade_watermark(
+                        &mut rt.ops,
+                        &mut rt.outputs,
+                        ts,
+                        crate::time::now_ms(),
+                    );
                 }
             }
         }
@@ -402,6 +543,18 @@ fn route(outputs: &mut FanOut, batch: Batch) {
 /// downstream stamped with the current wall clock (the origin of the
 /// `watermark_lag_ms` metric). A chain without assigners returns
 /// immediately — the poll is a per-operator `None`.
+/// Cascades an externally-merged watermark (queue sentinel merge) through
+/// the chain: fires due panes as ordinary output and forwards the
+/// surviving watermark with its origin stamp intact.
+fn cascade_watermark(ops: &mut [Box<dyn OpExec>], outputs: &mut FanOut, ts: i64, origin_ms: u64) {
+    let mut fired = Vec::new();
+    let fwd = exec::advance_chain_watermark(ops, 0, ts, &mut fired);
+    route(outputs, fired.into());
+    if let Some(w) = fwd {
+        outputs.watermark(w, origin_ms);
+    }
+}
+
 fn drain_watermarks(ops: &mut [Box<dyn OpExec>], outputs: &mut FanOut) {
     let mut fired = Vec::new();
     let fwd = exec::drain_generated_watermarks(ops, &mut fired);
@@ -695,6 +848,8 @@ mod tests {
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
                 commit_each_drain: true,
+                producers: Arc::new(AtomicUsize::new(1)),
+                idle_timeout: None,
             },
             outputs: FanOut::none(),
             metrics,
@@ -730,6 +885,8 @@ mod tests {
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
                 commit_each_drain: true,
+                producers: Arc::new(AtomicUsize::new(1)),
+                idle_timeout: None,
             },
             outputs: FanOut::none(),
             metrics,
@@ -772,6 +929,8 @@ mod tests {
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
                 commit_each_drain: true,
+                producers: Arc::new(AtomicUsize::new(1)),
+                idle_timeout: None,
             },
             outputs: FanOut::none(),
             metrics: metrics.clone(),
@@ -834,6 +993,8 @@ mod tests {
                         poll_max: 64,
                         stop: stop2,
                         commit_each_drain: true,
+                        producers: Arc::new(AtomicUsize::new(1)),
+                        idle_timeout: None,
                     },
                     outputs: FanOut::single(port),
                     metrics: MetricsRegistry::new(),
@@ -907,6 +1068,8 @@ mod tests {
                     poll_max: 64,
                     stop: stop2,
                     commit_each_drain: false,
+                    producers: Arc::new(AtomicUsize::new(1)),
+                    idle_timeout: None,
                 },
                 outputs: FanOut::none(),
                 metrics: MetricsRegistry::new(),
@@ -993,6 +1156,8 @@ mod tests {
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
                 commit_each_drain: true,
+                producers: Arc::new(AtomicUsize::new(1)),
+                idle_timeout: None,
             },
             outputs: FanOut::none(),
             metrics,
@@ -1026,6 +1191,8 @@ mod tests {
                 poll_max: 64,
                 stop: Arc::new(AtomicBool::new(false)),
                 commit_each_drain: true,
+                producers: Arc::new(AtomicUsize::new(1)),
+                idle_timeout: None,
             },
             outputs: FanOut::none(),
             metrics,

@@ -17,6 +17,17 @@
 //! surviving workers (fresh job id, dead worker's hosts reassigned)
 //! instead of surfacing the failure, as long as the deadline and attempt
 //! budget allow.
+//!
+//! Coordinator death: with a data dir configured
+//! ([`CoordinatorDaemon::set_data_dir`]), every dispatch persists a
+//! [`JobManifest`] next to the durable queue segments and removes it when
+//! the job completes. A coordinator that is killed mid-job leaves the
+//! manifest behind; on restart, [`JobManifest::load`] recovers the
+//! interrupted job's parameters, the workers reconnect with backoff and
+//! re-REGISTER (the dead-id re-adoption path), and the job is re-run —
+//! pipelines are deterministic, so the rerun's output is identical, and
+//! queue-backed units resume from their last committed checkpoint via the
+//! durable broker (see [`crate::coordinator`]).
 
 use super::socket::{Addr, Conn, ConnHandle, Listener, PeerSender};
 use super::wire::{self, kv, kv_get};
@@ -27,6 +38,7 @@ use crate::metrics::{Metrics, MetricsRegistry};
 use crate::placement::{plan as make_plan, PlannerKind};
 use crate::value::Value;
 use std::collections::{BTreeSet, HashMap};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -195,10 +207,104 @@ impl DistReport {
     }
 }
 
+/// On-disk record of a dispatched-but-unfinished job, written into the
+/// coordinator's data dir (next to any durable queue segments) at every
+/// dispatch and removed when the job completes. A restarted coordinator
+/// finds the file, re-adopts the reconnecting workers, and re-runs the
+/// interrupted job with these parameters.
+///
+/// The format is deliberately plain — one `key=value` per line — so an
+/// operator can read it with `cat` while deciding whether to resume.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobManifest {
+    /// Named pipeline being run (see [`crate::pipelines::NAMES`]).
+    pub pipeline: String,
+    /// Source event budget.
+    pub events: u64,
+    /// Checkpoint interval shipped to workers in DEPLOY (0 = off).
+    pub checkpoint_ms: u64,
+    /// Number of workers the job was dispatched over.
+    pub workers: usize,
+    /// host→worker assignment at dispatch time (informational: a resumed
+    /// run recomputes the assignment over whichever workers re-register).
+    pub assign: Vec<(String, String)>,
+}
+
+impl JobManifest {
+    /// The manifest file inside `dir`.
+    pub fn path(dir: &Path) -> PathBuf {
+        dir.join("job.manifest")
+    }
+
+    /// Loads the manifest from `dir`, if one exists and parses.
+    pub fn load(dir: &Path) -> Option<JobManifest> {
+        let s = std::fs::read_to_string(Self::path(dir)).ok()?;
+        let mut m = JobManifest {
+            pipeline: String::new(),
+            events: 0,
+            checkpoint_ms: 0,
+            workers: 0,
+            assign: Vec::new(),
+        };
+        for line in s.lines() {
+            let Some((k, v)) = line.split_once('=') else { continue };
+            match k {
+                "pipeline" => m.pipeline = v.to_string(),
+                "events" => m.events = v.parse().ok()?,
+                "checkpoint_ms" => m.checkpoint_ms = v.parse().ok()?,
+                "workers" => m.workers = v.parse().ok()?,
+                "assign" => {
+                    for pair in v.split(',').filter(|p| !p.is_empty()) {
+                        let (h, w) = pair.split_once(':')?;
+                        m.assign.push((h.to_string(), w.to_string()));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if m.pipeline.is_empty() || m.workers == 0 {
+            return None;
+        }
+        Some(m)
+    }
+
+    /// Writes the manifest into `dir` (creating it). Write-then-rename,
+    /// so a crash mid-save leaves either the old manifest or the new one,
+    /// never a torn file.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::Transport(format!("create data dir {}: {e}", dir.display())))?;
+        let body = format!(
+            "pipeline={}\nevents={}\ncheckpoint_ms={}\nworkers={}\nassign={}\n",
+            self.pipeline,
+            self.events,
+            self.checkpoint_ms,
+            self.workers,
+            self.assign
+                .iter()
+                .map(|(h, w)| format!("{h}:{w}"))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        let tmp = dir.join("job.manifest.tmp");
+        std::fs::write(&tmp, body)
+            .map_err(|e| Error::Transport(format!("write {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, Self::path(dir))
+            .map_err(|e| Error::Transport(format!("publish job manifest: {e}")))
+    }
+
+    /// Removes the manifest (the job completed). Missing files are fine.
+    pub fn remove(dir: &Path) {
+        let _ = std::fs::remove_file(Self::path(dir));
+    }
+}
+
 /// The coordinator daemon. See the module docs for the protocol.
 pub struct CoordinatorDaemon {
     addr: Addr,
     shared: Arc<Shared>,
+    /// When set, dispatches persist a [`JobManifest`] here.
+    data_dir: Option<PathBuf>,
     accept: Option<JoinHandle<()>>,
     tick: Option<JoinHandle<()>>,
 }
@@ -207,6 +313,18 @@ impl CoordinatorDaemon {
     /// Binds `addr` and starts the accept and liveness-tick threads.
     pub fn start(addr: Addr, heartbeat: Duration, metrics: Metrics) -> Result<CoordinatorDaemon> {
         let listener = Listener::bind(&addr)?;
+        // Job ids are seeded from the wall clock so they never collide
+        // across coordinator incarnations: after a restart, a worker's
+        // stale in-flight frames (tagged with the dead predecessor's job
+        // id) must not demux into the successor's deterministically
+        // identical instance ids. Masked to 31 bits because data-plane
+        // frames carry the id as a u32 (leaving 2^31 increments of
+        // headroom before any truncation mismatch with DEPLOY's u64).
+        let job_seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u32 & 0x7fff_ffff)
+            .unwrap_or(1)
+            .max(1) as u64;
         let shared = Arc::new(Shared {
             metrics,
             heartbeat,
@@ -216,7 +334,7 @@ impl CoordinatorDaemon {
             reg_cv: Condvar::new(),
             job: Mutex::new(None),
             job_cv: Condvar::new(),
-            next_job: AtomicU64::new(1),
+            next_job: AtomicU64::new(job_seed),
             readers: Mutex::new(Vec::new()),
             handles: Mutex::new(Vec::new()),
         });
@@ -233,9 +351,24 @@ impl CoordinatorDaemon {
         Ok(CoordinatorDaemon {
             addr,
             shared,
+            data_dir: None,
             accept: Some(accept),
             tick: Some(tick),
         })
+    }
+
+    /// Sets the directory where dispatches persist a [`JobManifest`]
+    /// (and where a prior incarnation may have left one behind). Takes
+    /// effect for jobs dispatched after the call.
+    pub fn set_data_dir(&mut self, dir: impl Into<PathBuf>) {
+        self.data_dir = Some(dir.into());
+    }
+
+    /// The interrupted job a dead predecessor left behind in the data
+    /// dir, if any. Re-run it with [`CoordinatorDaemon::run_job`] to
+    /// resume; completion removes the manifest.
+    pub fn pending_job(&self) -> Option<JobManifest> {
+        JobManifest::load(self.data_dir.as_deref()?)
     }
 
     /// The address the daemon listens on.
@@ -315,7 +448,12 @@ impl CoordinatorDaemon {
         loop {
             attempt += 1;
             let err = match self.run_job_attempt(pipeline, events, deadline) {
-                Ok(report) => return Ok(report),
+                Ok(report) => {
+                    if let Some(dir) = &self.data_dir {
+                        JobManifest::remove(dir);
+                    }
+                    return Ok(report);
+                }
                 Err(e) => e,
             };
             let msg = err.to_string();
@@ -398,6 +536,19 @@ impl CoordinatorDaemon {
                 .collect();
             (assign, owner_of, expected, deploy_to)
         };
+
+        // persist the dispatch before any worker sees it: if we die after
+        // this point, our successor finds the manifest and re-runs the job
+        if let Some(dir) = &self.data_dir {
+            JobManifest {
+                pipeline: pipeline.to_string(),
+                events,
+                checkpoint_ms: self.shared.checkpoint_ms.load(Ordering::SeqCst),
+                workers: expected.len(),
+                assign: assign.clone(),
+            }
+            .save(dir)?;
+        }
 
         let job = self.shared.next_job.fetch_add(1, Ordering::SeqCst);
         *self.shared.lock_job() = Some(JobState {
@@ -857,6 +1008,43 @@ mod tests {
         assert_eq!(f.kind, wire::kind::WELCOME, "dead id is re-adopted");
         assert_eq!(metrics.transport_reconnects.load(Ordering::Relaxed), 1);
         daemon.shutdown();
+    }
+
+    #[test]
+    fn job_manifest_roundtrips_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("fu-manifest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let m = JobManifest {
+            pipeline: "wordcount".into(),
+            events: 60_000,
+            checkpoint_ms: 250,
+            workers: 2,
+            assign: vec![
+                ("h1".into(), "w1".into()),
+                ("h2".into(), "w2".into()),
+            ],
+        };
+        m.save(&dir).unwrap();
+        assert_eq!(JobManifest::load(&dir), Some(m.clone()));
+
+        // an empty assignment still roundtrips
+        let bare = JobManifest {
+            assign: Vec::new(),
+            ..m.clone()
+        };
+        bare.save(&dir).unwrap();
+        assert_eq!(JobManifest::load(&dir), Some(bare));
+
+        // garbage or incomplete manifests read as "no pending job"
+        std::fs::write(JobManifest::path(&dir), "not a manifest at all\n").unwrap();
+        assert_eq!(JobManifest::load(&dir), None);
+        std::fs::write(JobManifest::path(&dir), "pipeline=wc\nevents=nope\n").unwrap();
+        assert_eq!(JobManifest::load(&dir), None);
+
+        m.save(&dir).unwrap();
+        JobManifest::remove(&dir);
+        assert_eq!(JobManifest::load(&dir), None, "removed manifest stays gone");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[cfg(unix)]

@@ -9,8 +9,22 @@
 use flowunits::config::eval_cluster;
 use flowunits::prelude::*;
 use flowunits::proptest::forall;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Event-time over the queue substrate: unit boundaries decoupled, so
+/// watermarks travel as sentinel records through the topic logs.
+fn queued_config(idle: Option<Duration>, checkpoint: Option<Duration>) -> JobConfig {
+    JobConfig {
+        decouple_units: true,
+        batch_size: 16,
+        poll_timeout: Duration::from_millis(10),
+        idle_timeout: idle,
+        checkpoint_interval: checkpoint,
+        ..Default::default()
+    }
+}
 
 /// Runs `(key, ts)` events (delivered in vector order) through
 /// `assign_timestamps(bounded(bound_ms))` → `key_by` → tumbling 100 ms
@@ -121,4 +135,146 @@ fn late_beyond_lateness_is_counted_and_captured_not_lost() {
         "no record was silently dropped"
     );
     assert_eq!(paned, on_time, "on-time records all fired in panes");
+}
+
+#[test]
+fn idle_timeout_waives_a_silent_source_instance_for_event_time() {
+    // Two source instances feed one queued event-time merge. Instance 0
+    // paces 1000 fresh-timestamped events over ~500 ms; instance 1 stays
+    // silent for 800 ms, then bursts 1000 records stamped deep in
+    // instance 0's past. With an idleness timeout, the min-of-inputs
+    // merge waives the silent instance: event time advances on instance
+    // 0's promises alone, the early panes fire, and instance 1's
+    // eventual records are counted *and captured* late — never silently
+    // dropped. Without the timeout the strict merge holds event time
+    // down until instance 1 speaks, so the very same schedule is fully
+    // on time.
+    let half = 1_000u64;
+    let run = |idle: Option<Duration>| -> (i64, u64, u64) {
+        let mut ctx = StreamContext::new(
+            eval_cluster(None, Duration::ZERO),
+            queued_config(idle, None),
+        );
+        let (wins, late) = ctx
+            .stream(Source::synthetic_rated(half * 2, 2_000.0, move |inst, i| {
+                if inst == 0 {
+                    ((i % 4) as i64, i as i64 * 5)
+                } else {
+                    if i == half {
+                        std::thread::sleep(Duration::from_millis(800));
+                    }
+                    ((i % 4) as i64, (i % 50) as i64)
+                }
+            }))
+            .unit("ingest")
+            .to_layer("cloud")
+            .replicate(Replication::Fixed(2))
+            .assign_timestamps(|e: &(i64, i64)| e.1, WatermarkGen::bounded(20))
+            .unit("agg")
+            .to_layer("cloud")
+            .replicate(Replication::Fixed(1))
+            .key_by(|e: &(i64, i64)| e.0)
+            .event_window_with_late::<i64>(
+                |e| e.1,
+                WindowAssigner::tumbling(100),
+                WindowAgg::Count,
+                0,
+            );
+        let wins = wins.collect();
+        let mut report = ctx.execute().unwrap();
+        let got: Vec<(i64, i64)> = report.take(wins).unwrap();
+        let lates: Vec<(i64, (i64, i64))> = report.take(late).unwrap();
+        let metric = report.metrics.late_records.load(Ordering::Relaxed);
+        let paned: i64 = got.iter().map(|&(_, c)| c).sum();
+        (paned, lates.len() as u64, metric)
+    };
+
+    let (paned, captured, metric) = run(Some(Duration::from_millis(200)));
+    assert!(
+        metric > 0,
+        "the waived merge advanced event time past the silent instance"
+    );
+    assert_eq!(captured, metric, "every late record is captured, not dropped");
+    assert_eq!(
+        paned + metric as i64,
+        (half * 2) as i64,
+        "conservation: paned + late accounts for every record"
+    );
+
+    let (paned, captured, metric) = run(None);
+    assert_eq!(
+        (captured, metric),
+        (0, 0),
+        "strict semantics: the merge waited for the silent instance"
+    );
+    assert_eq!(paned, (half * 2) as i64);
+}
+
+#[test]
+fn recovery_replay_does_not_regress_watermarks_or_refire_panes() {
+    // Checkpointed queued event-time job with a mid-run instance kill:
+    // recovery restores the window state (including its clock) and
+    // replays the entry-log suffix — the stale watermark sentinels
+    // interleaved in that replay must not wind the merged clock
+    // backwards, and restored panes must not re-fire. Pane counts must
+    // equal the no-fault run exactly.
+    let n = 20_000u64;
+    let keys = 4i64;
+    let run = |bomb: Option<Arc<AtomicI64>>| -> (Vec<(i64, i64)>, u64, JobReport) {
+        let mut ctx = StreamContext::new(
+            eval_cluster(None, Duration::ZERO),
+            queued_config(None, Some(Duration::from_millis(50))),
+        );
+        let b = bomb.clone();
+        let (wins, late) = ctx
+            .stream(Source::synthetic_rated(n, 30_000.0, move |_, i| {
+                (i as i64 % keys, i as i64 * 5)
+            }))
+            .unit("ingest")
+            .to_layer("edge")
+            .assign_timestamps(|e: &(i64, i64)| e.1, WatermarkGen::bounded(25))
+            .unit("agg")
+            .to_layer("cloud")
+            .replicate(Replication::Fixed(1))
+            .map(move |e: (i64, i64)| {
+                if let Some(b) = &b {
+                    if b.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        panic!("injected fault: test kills this instance");
+                    }
+                }
+                e
+            })
+            .key_by(|e: &(i64, i64)| e.0)
+            .event_window_with_late::<i64>(
+                |e| e.1,
+                WindowAssigner::tumbling(100),
+                WindowAgg::Count,
+                0,
+            );
+        let wins = wins.collect();
+        let mut report = ctx.execute().unwrap();
+        let mut got: Vec<(i64, i64)> = report.take(wins).unwrap();
+        got.sort_unstable();
+        let lates: Vec<(i64, (i64, i64))> = report.take(late).unwrap();
+        (got, lates.len() as u64, report)
+    };
+
+    let (base, base_late, base_report) = run(None);
+    let total: i64 = base.iter().map(|&(_, c)| c).sum();
+    assert_eq!(total, n as i64, "reference run paned every record");
+    assert_eq!(base_late, 0, "an ordered source is never late");
+    assert_eq!(base_report.metrics.late_records.load(Ordering::Relaxed), 0);
+
+    let bomb = Arc::new(AtomicI64::new(7_000));
+    let (got, got_late, report) = run(Some(bomb.clone()));
+    assert!(bomb.load(Ordering::SeqCst) <= 0, "the injected fault fired");
+    assert!(
+        report.metrics.recoveries.load(Ordering::Relaxed) >= 1,
+        "the supervisor recovered the dead unit-zone"
+    );
+    assert_eq!(got_late, 0, "replayed sentinels made nothing spuriously late");
+    assert_eq!(
+        got, base,
+        "pane counts survive recovery replay exactly — no regressed clock, no re-fired pane"
+    );
 }

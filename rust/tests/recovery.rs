@@ -286,6 +286,47 @@ fn state_topic_stays_bounded_across_many_checkpoint_cycles() {
 }
 
 #[test]
+fn reopened_queue_dir_resumes_from_committed_checkpoints_without_new_input() {
+    // Simulated coordinator restart, in-library. Phase A: a checkpointed
+    // durable run leaves committed checkpoints (reduce state + covered
+    // offsets) and the full event log in its queue dir. Phase B stands up
+    // a *fresh* coordinator over the same dir with an identical graph
+    // whose sources emit ZERO new events: it must adopt the newest
+    // committed checkpoint per unit-zone, restore the reduce state,
+    // re-commit the covered offsets, replay only the on-disk suffix past
+    // them, and reproduce the exact full sums without any source rerun.
+    let dir = std::env::temp_dir().join(format!("fu-coord-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (total, keys) = (16_000u64, 8i64);
+    let mut config = recovery_config(Some(Duration::from_millis(60)));
+    config.queue_dir = Some(dir.clone());
+    let report_a = run_agg(total, 6_000.0, keys, config, None, None);
+    assert!(
+        report_a.metrics.checkpoints_taken.load(Ordering::Relaxed) >= 1,
+        "phase A committed at least one checkpoint"
+    );
+    assert_eq!(sorted_sums(&report_a), expected_sums(total, keys));
+    drop(report_a);
+
+    // hour-long interval: detection runs, but no new periodic checkpoint
+    // muddies what phase B is being asked to prove
+    let mut config_b = recovery_config(Some(Duration::from_secs(3600)));
+    config_b.queue_dir = Some(dir.clone());
+    let report_b = run_agg(0, 6_000.0, keys, config_b, None, None);
+    assert!(
+        report_b.metrics.recoveries.load(Ordering::Relaxed) >= 1,
+        "the restarted coordinator adopted the committed checkpoints"
+    );
+    assert_eq!(report_b.events_in, 0, "no source re-read any input");
+    assert_eq!(
+        sorted_sums(&report_b),
+        expected_sums(total, keys),
+        "restored state + on-disk suffix replay reproduce the full sums"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn autoscaler_scales_up_under_lag_then_back_down_without_losing_records() {
     // phase 1: one dragging instance falls behind a fast source — the
     // control loop must raise replication. phase 2: the drag is lifted,

@@ -1,15 +1,23 @@
 #!/usr/bin/env bash
-# Chaos smoke test: one coordinator + two worker processes run the paced
-# wordcount over Unix domain sockets, and one worker is SIGKILLed while
-# the job is in flight. The daemon must declare the worker dead (socket
-# EOF), redispatch the job over the survivor, and finish; the collected
-# output must still be byte-identical to the in-process engine's run.
+# Chaos smoke tests: one coordinator + two worker processes run the paced
+# wordcount over Unix domain sockets while a process is SIGKILLed mid-job.
+#
+# Scenario 1 — worker death: one worker is killed while the job is in
+# flight. The daemon must declare it dead (socket EOF), redispatch the
+# job over the survivor, and finish; the collected output must still be
+# byte-identical to the in-process engine's run.
+#
+# Scenario 2 — coordinator death: the coordinator itself is SIGKILLed
+# mid-job. The dispatch left a job manifest in --data-dir; a restarted
+# coordinator on the same socket must find it, re-adopt the reconnecting
+# workers, re-run the interrupted job, and produce identical output.
+#
 # Run from the repo root after `cargo build --release`.
 #
 #   FLOWUNITS_BIN     path to the flowunits binary (default target/release/flowunits)
 #   SMOKE_EVENTS      events to stream (default 600000 — paced at 20k ev/s
-#                     per source, so the job outlives the kill below)
-#   SMOKE_KILL_AFTER  seconds to wait before the SIGKILL (default 1)
+#                     per source, so the job outlives the kills below)
+#   SMOKE_KILL_AFTER  seconds to wait before each SIGKILL (default 1)
 set -euo pipefail
 
 BIN="${FLOWUNITS_BIN:-target/release/flowunits}"
@@ -21,12 +29,18 @@ if [ ! -x "$BIN" ]; then
 fi
 DIR="$(mktemp -d)"
 trap 'kill $(jobs -p) 2>/dev/null || true; rm -rf "$DIR"' EXIT
-SOCK="$DIR/coordinator.sock"
 
+# the one in-process reference run both scenarios diff against
+"$BIN" run --pipeline wordcount_paced --events "$EVENTS" --show-collected >"$DIR/local.out"
+grep '^collected: ' "$DIR/local.out" | sort >"$DIR/local.collected"
+
+# --- scenario 1: SIGKILL a worker mid-job ---------------------------------
+SOCK="$DIR/coordinator.sock"
 "$BIN" coordinator --listen "$SOCK" --workers 2 --pipeline wordcount_paced \
   --events "$EVENTS" --timeout-s 120 --show-collected >"$DIR/dist.out" 2>&1 &
 COORD=$!
 "$BIN" worker --connect "$SOCK" --id w1 --state-dir "$DIR/w1" >"$DIR/w1.log" 2>&1 &
+W1=$!
 "$BIN" worker --connect "$SOCK" --id w2 --state-dir "$DIR/w2" >"$DIR/w2.log" 2>&1 &
 VICTIM=$!
 
@@ -49,12 +63,74 @@ if ! grep -q '^distributed job: 1 worker(s)' "$DIR/dist.out"; then
 fi
 grep '^collected: ' "$DIR/dist.out" | sort >"$DIR/dist.collected"
 
-"$BIN" run --pipeline wordcount_paced --events "$EVENTS" --show-collected >"$DIR/local.out"
-grep '^collected: ' "$DIR/local.out" | sort >"$DIR/local.collected"
-
 if ! diff -u "$DIR/local.collected" "$DIR/dist.collected"; then
   echo "smoke: FAIL — post-recovery output differs from the in-process run" >&2
   exit 1
 fi
+kill "$W1" 2>/dev/null || true
+wait "$W1" 2>/dev/null || true
 echo "smoke: OK — worker killed mid-job, coordinator redispatched, output matches in-process" \
      "($(wc -l <"$DIR/dist.collected") collected lines)"
+
+# --- scenario 2: SIGKILL the coordinator mid-job --------------------------
+SOCK2="$DIR/coordinator2.sock"
+DATA="$DIR/coord-data"
+"$BIN" coordinator --listen "$SOCK2" --workers 2 --pipeline wordcount_paced \
+  --events "$EVENTS" --timeout-s 120 --data-dir "$DATA" \
+  --show-collected >"$DIR/coord1.out" 2>&1 &
+COORD1=$!
+"$BIN" worker --connect "$SOCK2" --id v1 --state-dir "$DIR/v1" >"$DIR/v1.log" 2>&1 &
+V1=$!
+"$BIN" worker --connect "$SOCK2" --id v2 --state-dir "$DIR/v2" >"$DIR/v2.log" 2>&1 &
+V2=$!
+
+# wait until the job is actually dispatched (the manifest appears), then
+# give it a moment in flight before the kill
+DEADLINE=$((SECONDS + 30))
+while [ ! -f "$DATA/job.manifest" ]; do
+  if [ "$SECONDS" -ge "$DEADLINE" ]; then
+    echo "smoke: FAIL — coordinator never persisted a job manifest —" >&2
+    cat "$DIR/coord1.out" >&2
+    exit 1
+  fi
+  sleep 0.1
+done
+sleep "$KILL_AFTER"
+if ! kill -9 "$COORD1" 2>/dev/null; then
+  echo "smoke: FAIL — coordinator finished before the injected kill" >&2
+  exit 1
+fi
+wait "$COORD1" 2>/dev/null || true
+
+if [ ! -f "$DATA/job.manifest" ]; then
+  echo "smoke: FAIL — killed coordinator left no job manifest behind" >&2
+  exit 1
+fi
+
+# successor on the same socket + data dir: resumes the manifested job over
+# the re-registering workers
+if ! "$BIN" coordinator --listen "$SOCK2" --workers 2 --pipeline wordcount_paced \
+    --events "$EVENTS" --timeout-s 120 --data-dir "$DATA" \
+    --show-collected >"$DIR/coord2.out" 2>&1; then
+  echo "smoke: FAIL — restarted coordinator did not finish the job —" >&2
+  cat "$DIR/coord2.out" >&2
+  exit 1
+fi
+if ! grep -q '^resuming interrupted job' "$DIR/coord2.out"; then
+  echo "smoke: FAIL — restarted coordinator did not announce the resume —" >&2
+  cat "$DIR/coord2.out" >&2
+  exit 1
+fi
+if [ -f "$DATA/job.manifest" ]; then
+  echo "smoke: FAIL — completed resume left the job manifest behind" >&2
+  exit 1
+fi
+grep '^collected: ' "$DIR/coord2.out" | sort >"$DIR/resume.collected"
+if ! diff -u "$DIR/local.collected" "$DIR/resume.collected"; then
+  echo "smoke: FAIL — post-restart output differs from the in-process run" >&2
+  exit 1
+fi
+kill "$V1" "$V2" 2>/dev/null || true
+wait "$V1" "$V2" 2>/dev/null || true
+echo "smoke: OK — coordinator killed mid-job, successor resumed from the manifest, output matches" \
+     "($(wc -l <"$DIR/resume.collected") collected lines)"
